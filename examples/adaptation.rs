@@ -1,0 +1,66 @@
+//! Run-time adaptation live demo (paper §IV-C, Fig 7 + Fig 8): the full
+//! Application with real PJRT numerics while the simulated device degrades.
+//!
+//! Phase 1 (device load): external load ramps on the active engine; the
+//! Runtime Manager migrates engines to sustain latency.
+//! Phase 2 (thermal): a continuous max-rate stream overheats the active
+//! engine; throttling is detected and execution migrates again.
+//!
+//! Run: `cargo run --release --example adaptation [frames_per_phase]`
+
+use oodin::app::{AppConfig, Application, ScenarioEvent};
+use oodin::experiments::fig8;
+use oodin::load_registry;
+use oodin::manager::Policy;
+use oodin::optimizer::{Objective, SearchSpace};
+use oodin::util::stats::Percentile;
+
+fn main() -> anyhow::Result<()> {
+    let frames: u64 = std::env::args().nth(1).map_or(Ok(240), |s| s.parse())?;
+    let registry = load_registry()?;
+
+    // ---- Phase 1: load-driven adaptation (Fig 7 conditions) -------------
+    println!("PHASE 1 — device load (mobilenet_v2_140 on samsung_a71)");
+    let mut cfg = AppConfig::new(
+        "samsung_a71",
+        Objective::MinLatency { stat: Percentile::P90, epsilon: 0.0 },
+        SearchSpace::family("mobilenet_v2_140"),
+    );
+    cfg.real_exec = true;
+    cfg.live_ui = true;
+    cfg.lut_runs = 80;
+    cfg.policy = Policy { check_interval_ms: 100.0, cooldown_ms: 400.0,
+                          ..Policy::default() };
+    let mut app = Application::build(cfg, registry.clone())?;
+    let e0 = app.current_design().hw.engine;
+    println!("initial engine: {}", e0.name());
+
+    let scenario = vec![
+        ScenarioEvent::SetLoad { at_frame: frames / 4, engine: e0, load: 1.0 },
+        ScenarioEvent::SetLoad { at_frame: frames / 2, engine: e0, load: 2.0 },
+    ];
+    let recs = app.run(frames, &scenario)?;
+    let switches: Vec<_> = recs.iter().filter(|r| r.switch.is_some()).collect();
+    println!("processed {} frames, {} engine migrations", recs.len(),
+             switches.len());
+    let early: f64 = recs.iter().take(20).map(|r| r.latency_ms).sum::<f64>() / 20.0;
+    let late: f64 = recs.iter().rev().take(20).map(|r| r.latency_ms).sum::<f64>() / 20.0;
+    println!("avg latency: first 20 frames {early:.4} ms, last 20 {late:.4} ms");
+    let acc = recs.iter().filter_map(|r| r.correct).filter(|&c| c).count() as f64
+        / recs.iter().filter(|r| r.correct.is_some()).count().max(1) as f64;
+    println!("online top-1 through all migrations: {:.1}%", acc * 100.0);
+    app.shutdown();
+
+    // ---- Phase 2: thermal-driven adaptation (Fig 8 conditions) ----------
+    println!("\nPHASE 2 — thermal throttling (inception_v3 on samsung_a71)");
+    let r = fig8::run(&registry, frames.max(600))?;
+    println!("initial engine: {}", r.initial_engine.name());
+    if let Some(t) = r.first_throttle_at {
+        println!("first throttling at inference {t}");
+    }
+    for (i, sw) in &r.switches {
+        println!("  migration at inference {i}: {} -> {} ({:?})",
+                 sw.from.hw.engine.name(), sw.to.hw.engine.name(), sw.reason);
+    }
+    Ok(())
+}

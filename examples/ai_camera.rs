@@ -1,0 +1,116 @@
+//! AI Camera — the paper's flagship use-case (Eq. 3, MaxFPS) and this
+//! repo's END-TO-END VALIDATION driver.
+//!
+//! Full stack on a real workload: synthetic Camera2 stream → SIL → DLACL
+//! input pipeline → real PJRT execution of the AOT artifact (real numerics,
+//! measured online accuracy) → gallery persistence → middleware-c stats →
+//! Runtime Manager.  For the OODIn-selected design *and* the three oSQ
+//! baselines it reports throughput, latency (simulated-device and host
+//! wall-clock) and online top-1 accuracy — demonstrating the headline
+//! claim's shape end-to-end.  Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example ai_camera [device] [frames]`
+
+use oodin::app::{AppConfig, Application};
+use oodin::device::EngineKind;
+use oodin::load_registry;
+use oodin::optimizer::{Objective, SearchSpace};
+use oodin::util::stats::LatencyStats;
+
+const FAMILY: &str = "mobilenet_v2_100";
+
+struct RunSummary {
+    label: String,
+    fps: f64,
+    sim_latency: LatencyStats,
+    host_latency: Option<LatencyStats>,
+    online_acc: f64,
+    engine: String,
+}
+
+fn run_space(device: &str, frames: u64, label: &str, space: SearchSpace)
+             -> anyhow::Result<Option<RunSummary>> {
+    let registry = load_registry()?;
+    let mut cfg = AppConfig::new(device, Objective::MaxFps { epsilon: 0.015 }, space);
+    cfg.real_exec = true;
+    cfg.lut_runs = 100;
+    let mut app = match Application::build(cfg, registry) {
+        Ok(a) => a,
+        Err(_) => return Ok(None), // space infeasible on this device
+    };
+    let t0 = app.sim.clock.now_ms();
+    let recs = app.run(frames, &[])?;
+    let elapsed_s = (app.sim.clock.now_ms() - t0) / 1e3;
+
+    let sim: Vec<f64> = recs.iter().map(|r| r.latency_ms).collect();
+    let host: Vec<f64> = recs.iter().filter_map(|r| r.host_ms).collect();
+    let (mut ok, mut tot) = (0, 0);
+    for r in &recs {
+        if let Some(c) = r.correct {
+            tot += 1;
+            if c {
+                ok += 1;
+            }
+        }
+    }
+    let summary = RunSummary {
+        label: label.to_string(),
+        fps: recs.len() as f64 / elapsed_s,
+        sim_latency: LatencyStats::from_samples(&sim),
+        host_latency: if host.is_empty() {
+            None
+        } else {
+            Some(LatencyStats::from_samples(&host))
+        },
+        online_acc: ok as f64 / tot.max(1) as f64,
+        engine: app.current_design().hw.engine.name().to_string(),
+    };
+    println!("  gallery entries: {}", app.gallery.len());
+    app.shutdown();
+    Ok(Some(summary))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let device = args.first().map(String::as_str).unwrap_or("samsung_a71");
+    let frames: u64 = args.get(1).map_or(Ok(300), |s| s.parse())?;
+
+    println!("AI CAMERA end-to-end on {device} ({frames} frames, {FAMILY})");
+    println!("================================================================");
+
+    let mut rows = Vec::new();
+    let spaces: Vec<(&str, SearchSpace)> = vec![
+        ("OODIn", SearchSpace::family(FAMILY)),
+        ("oSQ-CPU", SearchSpace::family(FAMILY).with_engines(&[EngineKind::Cpu])),
+        ("oSQ-GPU", SearchSpace::family(FAMILY).with_engines(&[EngineKind::Gpu])),
+        ("oSQ-NNAPI", SearchSpace::family(FAMILY).with_engines(&[EngineKind::Npu])),
+    ];
+    for (label, space) in spaces {
+        println!("[{label}]");
+        if let Some(s) = run_space(device, frames, label, space)? {
+            rows.push(s);
+        } else {
+            println!("  not available on this device");
+        }
+    }
+
+    println!("\n{:<10} {:<7} {:>8} {:>12} {:>12} {:>12} {:>8}",
+             "design", "engine", "fps", "sim avg ms", "sim p90 ms",
+             "host avg ms", "top-1");
+    for r in &rows {
+        println!(
+            "{:<10} {:<7} {:>8.1} {:>12.4} {:>12.4} {:>12} {:>7.1}%",
+            r.label, r.engine, r.fps, r.sim_latency.avg, r.sim_latency.p90,
+            r.host_latency.as_ref().map_or("n/a".into(),
+                                           |h| format!("{:9.3}", h.avg)),
+            r.online_acc * 100.0,
+        );
+    }
+    if let Some(oodin) = rows.first() {
+        for b in rows.iter().skip(1) {
+            println!("OODIn speedup over {}: {:.2}x (sim avg)",
+                     b.label, b.sim_latency.avg / oodin.sim_latency.avg);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Quickstart: the OODIn pipeline in ~40 effective lines.
+//!
+//! Loads the AOT model zoo, detects a device, runs Device Measurements,
+//! solves a MaxFPS use-case (paper Eq. 3), and pushes a few real frames
+//! through the selected design's artifact on the PJRT runtime.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use oodin::dlacl::decode_top1;
+use oodin::measurements::Measurer;
+use oodin::optimizer::{Objective, Optimizer, SearchSpace};
+use oodin::runtime::RuntimeHandle;
+use oodin::sil::SyntheticCamera;
+use oodin::{load_registry, mdcl};
+
+fn main() -> anyhow::Result<()> {
+    // 1. The model space M (built by `make artifacts`).
+    let registry = load_registry()?;
+    println!("loaded {} model variants across {} families",
+             registry.variants().len(), registry.families().len());
+
+    // 2. MDCL resource detection: populate R for the target device.
+    let device = mdcl::detect("samsung_a71")?;
+    println!("R = {}", mdcl::format_resource_model(&device));
+
+    // 3. Device Measurements: sweep <ce, threads, governor> per variant.
+    let lut = Measurer::new(&device, &registry).with_runs(60, 6).measure_all()?;
+    println!("measured {} configurations", lut.len());
+
+    // 4. System Optimisation: MaxFPS with <=1.5% accuracy drop (Eq. 3).
+    let opt = Optimizer::new(&device, &registry, &lut).with_camera_fps(30.0);
+    let best = opt.optimize(
+        Objective::MaxFps { epsilon: 0.015 },
+        &SearchSpace::family("mobilenet_v2_100"),
+    )?;
+    println!(
+        "σ = <{}, {}, threads={}, governor={}, r={}>  →  {:.1} fps @ {:.3} ms, acc {:.1}%",
+        best.design.variant,
+        best.design.hw.engine.name(),
+        best.design.hw.threads,
+        best.design.hw.governor.name(),
+        best.design.hw.recognition_rate,
+        best.fps,
+        best.latency_ms,
+        best.accuracy * 100.0,
+    );
+
+    // 5. Real inference through the AOT artifact (python never runs here).
+    let rt = RuntimeHandle::cpu()?;
+    let variant = registry.get(&best.design.variant).unwrap();
+    rt.load(&variant.name, registry.hlo_path(variant))?;
+    let mut camera = SyntheticCamera::new(variant.resolution, 30.0, 1);
+    let mut correct = 0;
+    let n = 20;
+    for i in 0..n {
+        let frame = camera.capture(i as f64 * 33.3);
+        let out = rt.execute(&variant.name, frame.data, &variant.input_shape)?;
+        let (cls, conf) = decode_top1(&out.values, 10);
+        if cls == frame.label {
+            correct += 1;
+        }
+        if i < 3 {
+            println!("frame {i}: predicted {cls} (label {}, logit {conf:.2}, host {:.2} ms)",
+                     frame.label, out.host_ms);
+        }
+    }
+    println!("online accuracy: {correct}/{n}");
+    rt.shutdown();
+    Ok(())
+}

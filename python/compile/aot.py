@@ -1,0 +1,145 @@
+"""AOT compile path: train -> transform -> lower every variant to HLO text.
+
+Emits, per (family, transformation, batch):
+  artifacts/<family>__<precision>__b<batch>.hlo.txt
+
+plus ``artifacts/manifest.json`` describing every variant with the fields the
+Rust Layer-3 consumes as the model tuple  m = <task, w, s_m, s_in, a, p>
+(paper §III-B1): measured accuracy, computed FLOPs, parameter count and
+serialized size, numerical precision, resolution and I/O shapes.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Weights are baked into the HLO as constants, so the Rust request path feeds
+only the input image literal — python never runs at serving time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import evaluate
+from .layers import Ctx
+from .models import FAMILIES, PRECISIONS, Family
+from .train import get_trained_params
+from .transform import apply_transform, precision_bits
+
+# Batch sizes compiled per family. The flagship mobile model additionally
+# gets batched executables for the Layer-3 dynamic-batching serving bench.
+EXTRA_BATCHES = {"mobilenet_v2_100": (4, 8)}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is ESSENTIAL: the default printer elides
+    # big literals as `constant({...})`, which the 0.5.1 HLO parser silently
+    # turns into zero tensors -- the artifact would "run" with zero weights.
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def lower_variant(fam: Family, params, batch: int) -> str:
+    """Lower the pallas-kernel forward pass for one variant to HLO text."""
+    ctx = Ctx(impl="pallas")
+    spec = jax.ShapeDtypeStruct((batch, fam.resolution, fam.resolution, 3),
+                                jnp.float32)
+
+    def fwd(x):
+        return (fam.apply(params, x, ctx),)
+
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def model_costs(fam: Family, params) -> tuple[int, int, int]:
+    """(flops at batch=1, param count, serialized weight bytes)."""
+    costs: list = []
+    ctx = Ctx(impl="ref", costs=costs)
+    spec = jax.ShapeDtypeStruct((1, fam.resolution, fam.resolution, 3),
+                                jnp.float32)
+    jax.eval_shape(lambda x: fam.apply(params, x, ctx), spec)
+    flops = sum(f for _, f, _ in costs)
+    leaves = jax.tree.leaves(params)
+    n_params = sum(l.size for l in leaves)
+    size = sum(l.size * l.dtype.itemsize for l in leaves)
+    return flops, n_params, size
+
+
+def output_shape(fam: Family, params, batch: int) -> list[int]:
+    ctx = Ctx(impl="ref")
+    spec = jax.ShapeDtypeStruct((batch, fam.resolution, fam.resolution, 3),
+                                jnp.float32)
+    out = jax.eval_shape(lambda x: fam.apply(params, x, ctx), spec)
+    return list(out.shape)
+
+
+def build_family(fam: Family, out_dir: str, *, skip_existing: bool) -> list[dict]:
+    params_ref = get_trained_params(fam)
+    entries = []
+    _, n_params, _ = model_costs(fam, params_ref)
+    for prec in PRECISIONS:
+        params_t = apply_transform(prec, params_ref)
+        flops, _, size = model_costs(fam, params_t)
+        acc = evaluate.evaluate(fam, params_t)
+        batches = (1,) + EXTRA_BATCHES.get(fam.name, ())
+        for batch in batches:
+            fname = f"{fam.name}__{prec}__b{batch}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            if not (skip_existing and os.path.exists(path)):
+                print(f"lowering {fname} ...", flush=True)
+                text = lower_variant(fam, params_t, batch)
+                with open(path, "w") as f:
+                    f.write(text)
+            entries.append({
+                "name": f"{fam.name}__{prec}__b{batch}",
+                "family": fam.name,
+                "paper_name": fam.paper_name,
+                "task": fam.task,
+                "precision": prec,
+                "bits": precision_bits(prec),
+                "resolution": fam.resolution,
+                "batch": batch,
+                "input_shape": [batch, fam.resolution, fam.resolution, 3],
+                "output_shape": output_shape(fam, params_t, batch),
+                "params": int(n_params),
+                "size_bytes": int(size),
+                "flops": int(flops),
+                "accuracy": float(acc),
+                "accuracy_metric": "top1" if fam.task == "cls" else "miou",
+                "hlo": fname,
+            })
+        print(f"  {fam.name} {prec}: acc={acc:.4f} flops={flops/1e6:.1f}M "
+              f"size={size/1e6:.2f}MB", flush=True)
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--families", nargs="*", default=list(FAMILIES))
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the HLO file exists")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name in args.families:
+        manifest.extend(build_family(FAMILIES[name], args.out_dir,
+                                     skip_existing=not args.force))
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "models": manifest}, f, indent=1)
+    print(f"wrote {len(manifest)} variants to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

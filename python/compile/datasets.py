@@ -1,0 +1,90 @@
+"""Synthetic datasets standing in for ImageNet / PASCAL VOC (see DESIGN.md
+§Substitutions).
+
+Classification ("imagenet stand-in"): 10 classes.  Class ``k`` places a
+Gaussian blob at angle 2πk/10 on a ring, with a class-dependent dominant
+colour channel, plus distractor blobs and heavy additive noise — hard enough
+that model capacity and weight precision measurably move top-1 accuracy.
+
+Segmentation ("VOC stand-in"): 5 classes (background + 4 shape types:
+square / disk / horizontal bar / vertical bar).  1–3 shapes per image; the
+mask labels each shape's pixels with its class.
+
+Both are generated deterministically from a seed so every build measures the
+same accuracy numbers.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NUM_CLASSES = 10
+NUM_SEG_CLASSES = 5
+
+
+def _blob(h: int, w: int, cy: float, cx: float, sigma: float) -> np.ndarray:
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float32)
+    return np.exp(-(((yy - cy) ** 2 + (xx - cx) ** 2) / (2.0 * sigma**2)))
+
+
+def make_classification(n: int, res: int, *, seed: int = 0,
+                        noise: float = 0.95) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (x [n,res,res,3] f32, y [n] int32)."""
+    rng = np.random.default_rng(seed)
+    x = np.zeros((n, res, res, 3), np.float32)
+    y = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    c0, r0 = res / 2.0, res * 0.30
+    for i in range(n):
+        k = int(y[i])
+        ang = 2.0 * np.pi * k / NUM_CLASSES
+        cy = c0 + r0 * np.sin(ang) + rng.normal(0, res * 0.03)
+        cx = c0 + r0 * np.cos(ang) + rng.normal(0, res * 0.03)
+        blob = _blob(res, res, cy, cx, res * 0.10)
+        img = np.zeros((res, res, 3), np.float32)
+        dom = k % 3
+        img[:, :, dom] += 1.5 * blob
+        img[:, :, (dom + 1) % 3] += 0.5 * blob
+        # Distractor blobs at random positions with random colours — force
+        # the model to use geometry (ring angle), not just colour energy.
+        for _ in range(2):
+            dy, dx = rng.uniform(0, res, size=2)
+            col = rng.uniform(0.4, 1.2, size=3).astype(np.float32)
+            img += _blob(res, res, dy, dx, res * 0.09)[:, :, None] * col
+        img += rng.normal(0, noise, size=img.shape).astype(np.float32)
+        x[i] = img
+    return x, y
+
+
+def make_segmentation(n: int, res: int, *, seed: int = 0,
+                      noise: float = 0.35) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (x [n,res,res,3] f32, mask [n,res,res] int32 in [0,5))."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, noise, size=(n, res, res, 3)).astype(np.float32)
+    masks = np.zeros((n, res, res), np.int32)
+    yy, xx = np.mgrid[0:res, 0:res]
+    for i in range(n):
+        for _ in range(int(rng.integers(1, 4))):
+            cls = int(rng.integers(1, NUM_SEG_CLASSES))
+            cy, cx = rng.uniform(res * 0.2, res * 0.8, size=2)
+            s = rng.uniform(res * 0.10, res * 0.22)
+            if cls == 1:      # square
+                region = (np.abs(yy - cy) < s) & (np.abs(xx - cx) < s)
+            elif cls == 2:    # disk
+                region = (yy - cy) ** 2 + (xx - cx) ** 2 < s**2
+            elif cls == 3:    # horizontal bar
+                region = (np.abs(yy - cy) < s * 0.35) & (np.abs(xx - cx) < s * 1.6)
+            else:             # vertical bar
+                region = (np.abs(xx - cx) < s * 0.35) & (np.abs(yy - cy) < s * 1.6)
+            masks[i][region] = cls
+            x[i][region] += np.array(
+                [1.0 + 0.3 * cls, 2.0 - 0.3 * cls, 0.8], np.float32)
+    return x, masks
+
+
+def splits(task: str, res: int, *, n_train: int = 3000, n_test: int = 1000,
+           seed: int = 7):
+    """(x_train, y_train, x_test, y_test) for a task at a resolution."""
+    gen = make_classification if task == "cls" else make_segmentation
+    xtr, ytr = gen(n_train, res, seed=seed)
+    xte, yte = gen(n_test, res, seed=seed + 1)
+    return xtr, ytr, xte, yte

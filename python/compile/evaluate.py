@@ -1,0 +1,55 @@
+"""Accuracy Evaluation (paper Fig 1, offline component).
+
+Measures top-1 accuracy (classification) or mean IoU (segmentation) of every
+(family, transformation) variant on the held-out synthetic validation split.
+Runs on the ``ref`` implementation path for speed; ref == pallas is enforced
+by pytest, so these numbers are the accuracy of the shipped artifacts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets
+from .layers import Ctx
+from .models import Family
+
+EVAL_BATCH = 100
+
+
+def top1(fam: Family, params, x: np.ndarray, y: np.ndarray) -> float:
+    ctx = Ctx(impl="ref")
+    apply = jax.jit(lambda p, xb: jnp.argmax(fam.apply(p, xb, ctx), axis=-1))
+    correct = 0
+    for i in range(0, len(x), EVAL_BATCH):
+        xb = jnp.asarray(x[i:i + EVAL_BATCH])
+        pred = np.asarray(apply(params, xb))
+        correct += int((pred == y[i:i + EVAL_BATCH]).sum())
+    return correct / len(x)
+
+
+def miou(fam: Family, params, x: np.ndarray, y: np.ndarray,
+         n_classes: int = datasets.NUM_SEG_CLASSES) -> float:
+    ctx = Ctx(impl="ref")
+    apply = jax.jit(lambda p, xb: jnp.argmax(fam.apply(p, xb, ctx), axis=-1))
+    inter = np.zeros(n_classes)
+    union = np.zeros(n_classes)
+    for i in range(0, len(x), EVAL_BATCH):
+        xb = jnp.asarray(x[i:i + EVAL_BATCH])
+        pred = np.asarray(apply(params, xb))
+        gt = y[i:i + EVAL_BATCH]
+        for c in range(n_classes):
+            inter[c] += np.logical_and(pred == c, gt == c).sum()
+            union[c] += np.logical_or(pred == c, gt == c).sum()
+    ious = inter[union > 0] / union[union > 0]
+    return float(ious.mean())
+
+
+def evaluate(fam: Family, params) -> float:
+    """Task-appropriate accuracy metric on the held-out split."""
+    _, _, xte, yte = datasets.splits(fam.task, fam.resolution)
+    if fam.task == "cls":
+        return top1(fam, params, xte, yte)
+    return miou(fam, params, xte, yte)

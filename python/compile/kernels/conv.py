@@ -1,0 +1,130 @@
+"""Layer-1 convolution kernels: im2col lowering + Pallas depthwise conv.
+
+Standard convolutions (dense, pointwise and atrous/dilated) are lowered to
+im2col followed by the tiled Pallas GEMM of ``matmul.py`` / ``quantized.py``
+— the MXU-shaped restatement of TFLite's NEON/OpenCL conv kernels (see
+DESIGN.md §Hardware-Adaptation).
+
+Depthwise convolution (the workhorse of MobileNetV2 / EfficientNet-Lite) has
+no GEMM reuse, so it gets a dedicated VPU-shaped Pallas kernel: an unrolled
+(kh x kw) shifted multiply-accumulate over the whole channel vector, which is
+exactly the memory-bound elementwise-MAC structure it has on phones.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import INTERPRET
+
+
+def out_size(size: int, k: int, stride: int, dilation: int, pad: int) -> int:
+    eff = (k - 1) * dilation + 1
+    return (size + 2 * pad - eff) // stride + 1
+
+
+def same_pad(k: int, dilation: int = 1) -> int:
+    """Padding that keeps spatial size at stride 1 ('SAME' for odd kernels)."""
+    return ((k - 1) * dilation) // 2
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1,
+           dilation: int = 1, pad: int = 0) -> jnp.ndarray:
+    """Extract conv patches: [N, H, W, C] -> [N, Ho, Wo, kh*kw*C].
+
+    Patch channel order is (dy, dx, c) — matching an HWIO weight reshaped to
+    [kh*kw*C, Cout], so ``im2col(x) @ w.reshape(-1, cout)`` == conv(x, w).
+    """
+    n, h, w, c = x.shape
+    ho = out_size(h, kh, stride, dilation, pad)
+    wo = out_size(w, kw, stride, dilation, pad)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            y0, x0 = dy * dilation, dx * dilation
+            cols.append(x[:, y0:y0 + (ho - 1) * stride + 1:stride,
+                          x0:x0 + (wo - 1) * stride + 1:stride, :])
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _dw_kernel(kh: int, kw: int, stride: int, ho: int, wo: int,
+               x_ref, w_ref, o_ref):
+    """Depthwise conv over one image: unrolled shifted MAC (VPU-shaped)."""
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            window = x_ref[dy:dy + (ho - 1) * stride + 1:stride,
+                           dx:dx + (wo - 1) * stride + 1:stride, :]
+            acc += window * w_ref[dy, dx, :].astype(jnp.float32)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad"))
+def depthwise(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
+              pad: int | None = None) -> jnp.ndarray:
+    """Depthwise conv, [N, H, W, C] * [kh, kw, C] -> [N, Ho, Wo, C].
+
+    ``w`` may be f32 or f16 (converted at the MAC input).
+    """
+    n, h, width, c = x.shape
+    kh, kw, c2 = w.shape
+    assert c == c2
+    if pad is None:
+        pad = same_pad(kh)
+    ho = out_size(h, kh, stride, 1, pad)
+    wo = out_size(width, kw, stride, 1, pad)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+
+    call = pl.pallas_call(
+        functools.partial(_dw_kernel, kh, kw, stride, ho, wo),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, c), jnp.float32),
+        interpret=INTERPRET,
+    )
+    return jax.vmap(call, in_axes=(0, None))(xp, w)
+
+
+def _qdw_kernel(kh: int, kw: int, stride: int, ho: int, wo: int,
+                x_ref, w_ref, s_ref, o_ref):
+    """INT8 depthwise: int8 taps dequantised per channel at the MAC input."""
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            window = x_ref[dy:dy + (ho - 1) * stride + 1:stride,
+                           dx:dx + (wo - 1) * stride + 1:stride, :]
+            acc += window * w_ref[dy, dx, :].astype(jnp.float32)
+    o_ref[...] = acc * s_ref[...][None, None, :]
+
+
+def quantize_dw_weights(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-channel symmetric int8 for a depthwise [kh, kw, C] weight."""
+    amax = jnp.max(jnp.abs(w), axis=(0, 1))  # [C]
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    w_q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return w_q, scale
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad"))
+def qdepthwise(x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray, *,
+               stride: int = 1, pad: int | None = None) -> jnp.ndarray:
+    """INT8 depthwise conv (per-channel dequant in kernel)."""
+    n, h, width, c = x.shape
+    kh, kw, c2 = w_q.shape
+    assert c == c2 and scale.shape == (c,)
+    if pad is None:
+        pad = same_pad(kh)
+    ho = out_size(h, kh, stride, 1, pad)
+    wo = out_size(width, kw, stride, 1, pad)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+
+    call = pl.pallas_call(
+        functools.partial(_qdw_kernel, kh, kw, stride, ho, wo),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, c), jnp.float32),
+        interpret=INTERPRET,
+    )
+    return jax.vmap(call, in_axes=(0, None, None))(xp, w_q, scale)

@@ -1,0 +1,104 @@
+"""Layer-1 Pallas tiled GEMM kernels (FP32 and FP16-weight variants).
+
+These are the inference hot-spot of every model in the zoo: all convolutions
+are lowered to im2col + GEMM (see ``conv.py``), and the classifier head is a
+GEMM.  The kernels are written TPU-style — a 3-D grid over (M, N, K) tiles
+with the K dimension innermost so each (i, j) output tile is accumulated in
+place across K steps — and BlockSpecs that express the HBM->VMEM staging
+schedule.  On this testbed they are lowered with ``interpret=True`` so the
+resulting HLO runs on the CPU PJRT client (see DESIGN.md §Hardware-Adaptation).
+
+Block-size policy (``pick_blocks``): MXU-friendly tiles capped at 128 lanes /
+64 sublanes, shrunk to the actual (padded) problem so tiny layers do not pay
+for padding.  VMEM footprint per step is bm*bk + bk*bn + bm*bn floats, kept
+well under the ~16 MB VMEM budget of a real TPU core.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Interpret mode is mandatory on this image: real-TPU lowering emits a Mosaic
+# custom-call that the CPU PJRT plugin cannot execute.
+INTERPRET = True
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pick_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Choose (bm, bk, bn) tile sizes for an (M, K) x (K, N) GEMM.
+
+    Tiles are MXU-shaped (sublane multiples of 8, lane multiples of 128) but
+    sized GENEROUSLY: each interpret-mode grid step lowers to an XLA
+    while-loop iteration (dynamic-slice + dot + update), so small tiles
+    turn one GEMM into hundreds of loop iterations on the CPU path.
+    (512, 576, 256) keeps the per-step VMEM footprint at ~2.3 MB — well
+    under a TPU core's ~16 MB — while collapsing the zoo's conv GEMMs to
+    single-digit grid sizes (EXPERIMENTS.md §Perf iteration 1).
+    """
+    bm = min(512, _ceil_to(m, 8))
+    bk = min(576, _ceil_to(k, 8))
+    bn = min(256, _ceil_to(n, 8))
+    return bm, bk, bn
+
+
+def _pad2(x: jnp.ndarray, r: int, c: int) -> jnp.ndarray:
+    pr, pc = r - x.shape[0], c - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """Grid (i, j, k); K innermost. Zero-init on k==0, accumulate after."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # FP16 weights are converted at the MXU input; accumulation stays f32.
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "block_n"))
+def matmul(x: jnp.ndarray, w: jnp.ndarray, *, block_m: int | None = None,
+           block_k: int | None = None, block_n: int | None = None) -> jnp.ndarray:
+    """``x @ w`` with f32 accumulation. ``w`` may be f32 or f16.
+
+    Shapes: x [M, K], w [K, N] -> [M, N] (f32).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bk, bn = pick_blocks(m, k, n)
+    bm, bk, bn = block_m or bm, block_k or bk, block_n or bn
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = _pad2(x.astype(jnp.float32), mp, kp)
+    wp = _pad2(w, kp, np_)
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=INTERPRET,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int, bk: int, bn: int, w_bytes: int = 4) -> int:
+    """Per-grid-step VMEM footprint estimate for the GEMM kernel."""
+    return bm * bk * 4 + bk * bn * w_bytes + bm * bn * 4

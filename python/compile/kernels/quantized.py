@@ -1,0 +1,100 @@
+"""Layer-1 Pallas INT8 dynamic-range-quantised GEMM.
+
+This is OODIn's INT8 transformation (paper §III-B1, T = {FP32, FP16, INT8})
+executed TFLite-dynamic-range style: weights are stored as per-output-channel
+symmetric int8, activations stay float, and dequantisation happens inside the
+kernel at the MXU input.  The int8 weight tile halves (vs f16) or quarters
+(vs f32) the VMEM traffic of the weight operand — the same reason the paper's
+INT8 variants win on memory-bound mobile engines.
+
+Quantisation helpers (``quantize_weights``) live here too so python tests can
+round-trip: ``qmatmul(x, *quantize_weights(w))  ≈  x @ w``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import INTERPRET, _ceil_to, _pad2, pick_blocks
+
+
+def quantize_weights(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8 quantisation of a [K, N] GEMM weight
+    (classic TFLite dynamic-range).  The kernel interface is per-channel
+    (scale [N]), so the per-tensor scale is broadcast — per-channel
+    quantisation (``quantize_weights_per_channel``) drops in unchanged.
+
+    Returns (w_q int8 [K, N], scale f32 [N]) with w ≈ w_q * scale.
+    """
+    amax = jnp.max(jnp.abs(w))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    w_q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return w_q, jnp.full((w.shape[1],), scale, jnp.float32)
+
+
+def quantize_weights_per_channel(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-output-channel symmetric int8 (the higher-accuracy variant)."""
+    amax = jnp.max(jnp.abs(w), axis=0)  # [N]
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    w_q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return w_q, scale
+
+
+def _qmatmul_kernel(nk: int, x_ref, w_ref, s_ref, o_ref):
+    """Accumulate raw (float x) @ (dequantised int8 w); scale on last K step.
+
+    The scale is folded once per output tile rather than per K step: the
+    accumulator holds x @ w_q (in f32) and is multiplied by the per-channel
+    scale only when the final K tile has been folded in.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _scale():
+        o_ref[...] = o_ref[...] * s_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "block_n"))
+def qmatmul(x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray, *,
+            block_m: int | None = None, block_k: int | None = None,
+            block_n: int | None = None) -> jnp.ndarray:
+    """``x @ (w_q * scale)`` without materialising the dequantised weight.
+
+    Shapes: x [M, K] f32, w_q [K, N] int8, scale [N] f32 -> [M, N] f32.
+    """
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2 and scale.shape == (n,)
+    bm, bk, bn = pick_blocks(m, k, n)
+    bm, bk, bn = block_m or bm, block_k or bk, block_n or bn
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = _pad2(x.astype(jnp.float32), mp, kp)
+    wp = _pad2(w_q, kp, np_)
+    sp = jnp.pad(scale, (0, np_ - n))
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_qmatmul_kernel, nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=INTERPRET,
+    )(xp, wp, sp)
+    return out[:m, :n]

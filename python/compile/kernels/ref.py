@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel — the CORE correctness signal.
+
+The inference path has two interchangeable implementations selected by
+``layers.Ctx.impl``: ``"pallas"`` (the L1 kernels, used for AOT lowering) and
+``"ref"`` (these oracles, used for training/eval speed).  pytest +
+hypothesis assert they agree to float tolerance across shape/dtype sweeps,
+which is what licenses training and accuracy evaluation to run on the ref
+path while the shipped artifacts run the kernel path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x [M,K] @ w [K,N] (w possibly f16), f32 accumulate."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def qmatmul_ref(x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Dequantise-then-matmul oracle for the INT8 GEMM."""
+    return jnp.dot(x.astype(jnp.float32), w_q.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale[None, :]
+
+
+def depthwise_ref(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
+                  pad: int | None = None) -> jnp.ndarray:
+    """Depthwise conv oracle via lax.conv with feature_group_count=C."""
+    kh, kw, c = w.shape
+    if pad is None:
+        pad = (kh - 1) // 2
+    # HWIO with I=1 per group.
+    w4 = w.astype(jnp.float32).reshape(kh, kw, 1, c)
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w4,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def qdepthwise_ref(x: jnp.ndarray, w_q: jnp.ndarray, scale: jnp.ndarray, *,
+                   stride: int = 1, pad: int | None = None) -> jnp.ndarray:
+    return depthwise_ref(x, w_q.astype(jnp.float32) * scale[None, None, :],
+                         stride=stride, pad=pad)
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, *, kh: int, kw: int,
+               stride: int = 1, dilation: int = 1, pad: int = 0) -> jnp.ndarray:
+    """Dense conv oracle. ``w`` is in GEMM layout [kh*kw*cin, cout]."""
+    cin = x.shape[-1]
+    cout = w.shape[-1]
+    w4 = w.astype(jnp.float32).reshape(kh, kw, cin, cout)
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w4,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        rhs_dilation=(dilation, dilation),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

@@ -1,0 +1,212 @@
+"""Layer-2 building blocks: conv / depthwise / dense / pooling on top of the
+Layer-1 kernels, with a per-layer implementation switch and cost accounting.
+
+Every weighted layer dispatches on two axes:
+
+* ``Ctx.impl`` — ``"pallas"`` (L1 kernels; the path that is AOT-lowered into
+  the shipped HLO artifacts) or ``"ref"`` (pure-jnp oracles; used for training
+  and accuracy evaluation speed).  pytest asserts the two agree.
+* parameter *kind* — the OODIn transformation ``t`` applied to the weights:
+  ``{"w": f32}`` (FP32), ``{"w": f16}`` (FP16) or ``{"w_q": int8, "s": f32}``
+  (INT8 dynamic-range).  Dispatch is on key presence / dtype, so it is static
+  at trace time and each variant lowers to its own specialised HLO module.
+
+``Ctx.costs`` accumulates (name, flops, weight_bytes) per layer; this is how
+the Table II columns (FLOPs, size) are *computed* rather than asserted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as kconv
+from .kernels import matmul as kmm
+from .kernels import quantized as kq
+from .kernels import ref as kref
+
+Params = dict[str, Any]
+
+
+class Meta(dict):
+    """Static layer metadata (kernel size, channels, stride).
+
+    Registered as a childless pytree node so its integer values stay python
+    ints (usable in trace-time control flow) instead of becoming jit tracers.
+    """
+
+
+jax.tree_util.register_pytree_node(
+    Meta,
+    lambda m: ((), tuple(sorted(m.items()))),
+    lambda aux, _: Meta(aux),
+)
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Forward-pass context: implementation choice + cost accumulator."""
+
+    impl: str = "ref"  # "ref" | "pallas"
+    costs: list | None = None  # [(name, flops, weight_bytes)]
+
+    def add(self, name: str, flops: int, wbytes: int) -> None:
+        if self.costs is not None:
+            self.costs.append((name, int(flops), int(wbytes)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation (GEMM weight layout: [K, N] = [kh*kw*cin, cout])
+# ---------------------------------------------------------------------------
+
+def init_conv(rng, kh: int, kw: int, cin: int, cout: int) -> Params:
+    fan_in = kh * kw * cin
+    w = jax.random.normal(rng, (fan_in, cout), jnp.float32)
+    w = w * jnp.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((cout,), jnp.float32),
+            "meta": Meta(kh=kh, kw=kw, cin=cin, cout=cout)}
+
+
+def init_dw(rng, k: int, c: int) -> Params:
+    w = jax.random.normal(rng, (k, k, c), jnp.float32) * jnp.sqrt(2.0 / (k * k))
+    return {"w": w, "b": jnp.zeros((c,), jnp.float32),
+            "meta": Meta(k=k, c=c)}
+
+
+def init_dense(rng, din: int, dout: int) -> Params:
+    w = jax.random.normal(rng, (din, dout), jnp.float32) * jnp.sqrt(1.0 / din)
+    return {"w": w, "b": jnp.zeros((dout,), jnp.float32),
+            "meta": Meta(kh=1, kw=1, cin=din, cout=dout)}
+
+
+# ---------------------------------------------------------------------------
+# Weight-kind helpers
+# ---------------------------------------------------------------------------
+
+def weight_bytes(p: Params) -> int:
+    """Bytes of the weight tensor under its current transformation."""
+    if "w_q" in p:
+        return p["w_q"].size * 1 + p["s"].size * 4
+    return p["w"].size * p["w"].dtype.itemsize
+
+
+def _gemm(ctx: Ctx, p: Params, x2d: jnp.ndarray) -> jnp.ndarray:
+    """Dispatch a [M,K]@[K,N] GEMM on (impl, weight kind)."""
+    if "w_q" in p:
+        if ctx.impl == "pallas":
+            return kq.qmatmul(x2d, p["w_q"], p["s"])
+        return kref.qmatmul_ref(x2d, p["w_q"], p["s"])
+    if ctx.impl == "pallas":
+        return kmm.matmul(x2d, p["w"])
+    return kref.matmul_ref(x2d, p["w"])
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+def conv2d(ctx: Ctx, p: Params, x: jnp.ndarray, *, stride: int = 1,
+           dilation: int = 1, pad: int | None = None) -> jnp.ndarray:
+    """Dense conv (im2col + L1 GEMM). x [N,H,W,Cin] -> [N,Ho,Wo,Cout]."""
+    m = p["meta"]
+    kh, kw, cin, cout = m["kh"], m["kw"], m["cin"], m["cout"]
+    if pad is None:
+        pad = kconv.same_pad(kh, dilation)
+    n, h, w_, _ = x.shape
+    ho = kconv.out_size(h, kh, stride, dilation, pad)
+    wo = kconv.out_size(w_, kw, stride, dilation, pad)
+    ctx.add(f"conv{kh}x{kw}", 2 * n * ho * wo * kh * kw * cin * cout,
+            weight_bytes(p))
+
+    if kh == kw == 1 and stride == 1 and pad == 0:
+        cols = x.reshape(n * h * w_, cin)
+    else:
+        cols = kconv.im2col(x, kh, kw, stride, dilation, pad)
+        cols = cols.reshape(n * ho * wo, kh * kw * cin)
+    y = _gemm(ctx, p, cols).reshape(n, ho, wo, cout)
+    return y + p["b"]
+
+
+def depthwise(ctx: Ctx, p: Params, x: jnp.ndarray, *, stride: int = 1) -> jnp.ndarray:
+    """Depthwise conv (L1 VPU-shaped kernel). x [N,H,W,C] -> [N,Ho,Wo,C]."""
+    m = p["meta"]
+    k, c = m["k"], m["c"]
+    n, h, w_, _ = x.shape
+    pad = kconv.same_pad(k)
+    ho = kconv.out_size(h, k, stride, 1, pad)
+    wo = kconv.out_size(w_, k, stride, 1, pad)
+    ctx.add(f"dw{k}x{k}", 2 * n * ho * wo * k * k * c, weight_bytes(p))
+
+    if "w_q" in p:
+        if ctx.impl == "pallas":
+            y = kconv.qdepthwise(x, p["w_q"], p["s"], stride=stride)
+        else:
+            y = kref.qdepthwise_ref(x, p["w_q"], p["s"], stride=stride)
+    elif ctx.impl == "pallas":
+        y = kconv.depthwise(x, p["w"], stride=stride)
+    else:
+        y = kref.depthwise_ref(x, p["w"], stride=stride)
+    return y + p["b"]
+
+
+def dense(ctx: Ctx, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Fully-connected head. x [N, Din] -> [N, Dout]."""
+    m = p["meta"]
+    ctx.add("dense", 2 * x.shape[0] * m["cin"] * m["cout"], weight_bytes(p))
+    return _gemm(ctx, p, x) + p["b"]
+
+
+def relu6(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def global_avg_pool(x: jnp.ndarray) -> jnp.ndarray:
+    """[N,H,W,C] -> [N,C]."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def avg_pool_3x3(x: jnp.ndarray) -> jnp.ndarray:
+    """3x3 stride-1 SAME average pool (Inception pool branch)."""
+    s = jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, 3, 3, 1), (1, 1, 1, 1),
+                              "SAME")
+    cnt = jax.lax.reduce_window(jnp.ones_like(x), 0.0, jax.lax.add,
+                                (1, 3, 3, 1), (1, 1, 1, 1), "SAME")
+    return s / cnt
+
+
+def resize_bilinear(x: jnp.ndarray, h: int, w: int) -> jnp.ndarray:
+    """[N,h0,w0,C] -> [N,h,w,C] (DeepLab upsampling head)."""
+    n, _, _, c = x.shape
+    return jax.image.resize(x, (n, h, w, c), method="bilinear")
+
+
+# ---------------------------------------------------------------------------
+# Composite blocks
+# ---------------------------------------------------------------------------
+
+def init_inverted_residual(rng, cin: int, cout: int, *, expand: int,
+                           stride: int) -> Params:
+    """MobileNetV2 inverted-residual block parameters."""
+    r1, r2, r3 = jax.random.split(rng, 3)
+    mid = cin * expand
+    return {
+        "expand": init_conv(r1, 1, 1, cin, mid) if expand != 1 else None,
+        "dw": init_dw(r2, 3, mid),
+        "project": init_conv(r3, 1, 1, mid, cout),
+        "meta": Meta(cin=cin, cout=cout, stride=stride, expand=expand),
+    }
+
+
+def inverted_residual(ctx: Ctx, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    m = p["meta"]
+    y = x
+    if p["expand"] is not None:
+        y = relu6(conv2d(ctx, p["expand"], y, pad=0))
+    y = relu6(depthwise(ctx, p["dw"], y, stride=m["stride"]))
+    y = conv2d(ctx, p["project"], y, pad=0)
+    if m["stride"] == 1 and m["cin"] == m["cout"]:
+        y = y + x
+    return y

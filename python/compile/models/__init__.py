@@ -1,0 +1,56 @@
+"""Model-zoo registry mirroring the paper's Table II.
+
+Each family entry carries the paper model it stands in for, the task, the
+testbed input resolution, and ``init``/``apply`` closures.  Resolutions scale
+down the paper's 224/299/300/513 px inputs while preserving their ordering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+from . import deeplab, efficientnet_lite, inception, mobilenet_v2, resnet
+
+
+@dataclasses.dataclass(frozen=True)
+class Family:
+    name: str
+    paper_name: str
+    task: str               # "cls" | "seg"
+    resolution: int
+    init: Callable
+    apply: Callable
+    train_steps: int = 350
+    lr: float = 2e-3
+
+
+FAMILIES: dict[str, Family] = {
+    f.name: f for f in [
+        Family("mobilenet_v2_100", "MobileNetV2 1.0", "cls", 24,
+               functools.partial(mobilenet_v2.init, width=1.0),
+               mobilenet_v2.apply),
+        Family("mobilenet_v2_140", "MobileNetV2 1.4", "cls", 24,
+               functools.partial(mobilenet_v2.init, width=1.4),
+               mobilenet_v2.apply),
+        Family("efficientnet_lite0", "EfficientNetLite0", "cls", 24,
+               functools.partial(efficientnet_lite.init, width=1.0, depth=1.0),
+               efficientnet_lite.apply),
+        # depth capped at 1.2: deeper stacks do not train without
+        # normalisation layers (which the zoo omits for quantisation
+        # simplicity); width carries the rest of the Lite0->Lite4 scaling.
+        Family("efficientnet_lite4", "EfficientNetLite4", "cls", 32,
+               functools.partial(efficientnet_lite.init, width=1.4, depth=1.2),
+               efficientnet_lite.apply, train_steps=450),
+        Family("inception_v3", "InceptionV3", "cls", 32,
+               inception.init, inception.apply),
+        # Fixup-style init still needs a gentler LR than the shallow nets.
+        Family("resnet_v2", "ResNetV2 101", "cls", 32,
+               resnet.init, resnet.apply, train_steps=300, lr=5e-4),
+        Family("deeplab_v3", "DeepLabV3", "seg", 48,
+               deeplab.init, deeplab.apply, train_steps=250),
+    ]
+}
+
+PRECISIONS = ("fp32", "fp16", "int8")

@@ -1,0 +1,52 @@
+"""DeepLabV3 analogue (Chen et al.) — MobileNetV2 backbone + atrous conv head.
+
+Keeps the family signature the paper uses: a mobile-friendly MobileNetV2
+backbone (depth multiplier 0.5 in the paper; narrow IR blocks here), an
+ASPP-lite head of parallel atrous (dilated) 3x3 convolutions at rates
+{1, 2, 4} plus a 1x1 branch, channel concat, 1x1 classifier to the 5
+segmentation classes, and bilinear upsampling back to input resolution.
+Output is per-pixel logits [N, H, W, 5]; the reported metric is mIoU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+from ..datasets import NUM_SEG_CLASSES
+
+_ASPP_RATES = (1, 2, 4)
+_ASPP_C = 32
+
+
+def init(rng):
+    k = jax.random.split(rng, 9)
+    params = {"stem": L.init_conv(k[0], 3, 3, 3, 16)}
+    params["blocks"] = [
+        L.init_inverted_residual(k[1], 16, 16, expand=1, stride=1),
+        L.init_inverted_residual(k[2], 16, 24, expand=4, stride=2),
+        L.init_inverted_residual(k[3], 24, 32, expand=4, stride=1),
+    ]
+    params["aspp"] = [
+        L.init_conv(k[4 + i], 3, 3, 32, _ASPP_C) for i in range(len(_ASPP_RATES))
+    ]
+    params["aspp1x1"] = L.init_conv(k[7], 1, 1, 32, _ASPP_C)
+    cat = _ASPP_C * (len(_ASPP_RATES) + 1)
+    params["classifier"] = L.init_conv(k[8], 1, 1, cat, NUM_SEG_CLASSES)
+    return params
+
+
+def apply(params, x: jnp.ndarray, ctx: L.Ctx) -> jnp.ndarray:
+    n, h, w, _ = x.shape
+    y = L.relu6(L.conv2d(ctx, params["stem"], x, stride=2))
+    for blk in params["blocks"]:
+        y = L.inverted_residual(ctx, blk, y)
+    branches = [
+        L.relu6(L.conv2d(ctx, p, y, dilation=r))
+        for p, r in zip(params["aspp"], _ASPP_RATES)
+    ]
+    branches.append(L.relu6(L.conv2d(ctx, params["aspp1x1"], y, pad=0)))
+    y = jnp.concatenate(branches, axis=-1)
+    y = L.conv2d(ctx, params["classifier"], y, pad=0)
+    return L.resize_bilinear(y, h, w)

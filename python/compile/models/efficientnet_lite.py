@@ -1,0 +1,61 @@
+"""EfficientNet-Lite analogue (Tan & Le, ICML'19) — scaled for this testbed.
+
+Keeps the family signature: compound scaling of width/depth/resolution over
+an MBConv (inverted-residual) backbone.  Lite0 is the small config; Lite4
+scales width x1.4 and depth x1.8 and runs at a larger input resolution —
+matching the paper's two evaluated variants (Table II).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+from ..datasets import NUM_CLASSES
+
+# Base stage config: (cout, expand, stride, repeats).
+_STAGES = [
+    (16, 1, 1, 1),
+    (24, 4, 2, 2),
+    (40, 4, 2, 2),
+    (80, 4, 1, 1),
+]
+_STEM = 16
+_HEAD = 128
+
+
+def _scale_c(c: int, width: float) -> int:
+    return max(8, int(round(c * width / 8)) * 8)
+
+
+def _scale_d(r: int, depth: float) -> int:
+    return max(1, int(round(r * depth)))
+
+
+def init(rng, *, width: float = 1.0, depth: float = 1.0):
+    n_blocks = sum(_scale_d(r, depth) for _, _, _, r in _STAGES)
+    ks = jax.random.split(rng, n_blocks + 3)
+    stem_c = _scale_c(_STEM, width)
+    params = {"stem": L.init_conv(ks[0], 3, 3, 3, stem_c), "blocks": []}
+    cin, ki = stem_c, 1
+    for cout, t, s, reps in _STAGES:
+        cout = _scale_c(cout, width)
+        for r in range(_scale_d(reps, depth)):
+            stride = s if r == 0 else 1
+            params["blocks"].append(L.init_inverted_residual(
+                ks[ki], cin, cout, expand=t, stride=stride))
+            cin, ki = cout, ki + 1
+    head_c = _scale_c(_HEAD, width)
+    params["head"] = L.init_conv(ks[-2], 1, 1, cin, head_c)
+    params["fc"] = L.init_dense(ks[-1], head_c, NUM_CLASSES)
+    return params
+
+
+def apply(params, x: jnp.ndarray, ctx: L.Ctx) -> jnp.ndarray:
+    y = L.relu6(L.conv2d(ctx, params["stem"], x, stride=2))
+    for blk in params["blocks"]:
+        y = L.inverted_residual(ctx, blk, y)
+    y = L.relu6(L.conv2d(ctx, params["head"], y, pad=0))
+    y = L.global_avg_pool(y)
+    return L.dense(ctx, params["fc"], y)

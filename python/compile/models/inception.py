@@ -1,0 +1,65 @@
+"""InceptionV3 analogue (Szegedy et al.) — scaled for this testbed.
+
+Keeps the family signature: multi-branch inception modules (1x1 / 1x1->3x3 /
+factorised 5x5 as two 3x3s / pool->1x1 projection, channel-concatenated),
+with a stride-2 grid reduction between module groups.  Deliberately the
+second-heaviest model in the zoo, mirroring Table II where InceptionV3 costs
+an order of magnitude more FLOPs than the mobile-first families.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+from ..datasets import NUM_CLASSES
+
+
+def _init_module(rng, cin: int, b1: int, b3r: int, b3: int, b5r: int,
+                 b5: int, bp: int):
+    k = jax.random.split(rng, 7)
+    return {
+        "b1": L.init_conv(k[0], 1, 1, cin, b1),
+        "b3_reduce": L.init_conv(k[1], 1, 1, cin, b3r),
+        "b3": L.init_conv(k[2], 3, 3, b3r, b3),
+        "b5_reduce": L.init_conv(k[3], 1, 1, cin, b5r),
+        "b5a": L.init_conv(k[4], 3, 3, b5r, b5),
+        "b5b": L.init_conv(k[5], 3, 3, b5, b5),
+        "bpool": L.init_conv(k[6], 1, 1, cin, bp),
+        "meta": L.Meta(cout=b1 + b3 + b5 + bp),
+    }
+
+
+def _module(ctx: L.Ctx, p, x: jnp.ndarray) -> jnp.ndarray:
+    y1 = L.relu6(L.conv2d(ctx, p["b1"], x, pad=0))
+    y3 = L.relu6(L.conv2d(ctx, p["b3_reduce"], x, pad=0))
+    y3 = L.relu6(L.conv2d(ctx, p["b3"], y3))
+    y5 = L.relu6(L.conv2d(ctx, p["b5_reduce"], x, pad=0))
+    y5 = L.relu6(L.conv2d(ctx, p["b5a"], y5))
+    y5 = L.relu6(L.conv2d(ctx, p["b5b"], y5))
+    yp = L.relu6(L.conv2d(ctx, p["bpool"], L.avg_pool_3x3(x), pad=0))
+    return jnp.concatenate([y1, y3, y5, yp], axis=-1)
+
+
+def init(rng):
+    k = jax.random.split(rng, 7)
+    params = {"stem": L.init_conv(k[0], 3, 3, 3, 32)}
+    params["m1"] = _init_module(k[1], 32, 24, 32, 48, 16, 24, 24)     # -> 120
+    params["m2"] = _init_module(k[2], 120, 32, 48, 64, 16, 32, 32)    # -> 160
+    params["reduce"] = L.init_conv(k[3], 3, 3, 160, 160)
+    params["m3"] = _init_module(k[4], 160, 48, 64, 96, 24, 48, 48)    # -> 240
+    params["head"] = L.init_conv(k[5], 1, 1, 240, 192)
+    params["fc"] = L.init_dense(k[6], 192, NUM_CLASSES)
+    return params
+
+
+def apply(params, x: jnp.ndarray, ctx: L.Ctx) -> jnp.ndarray:
+    y = L.relu6(L.conv2d(ctx, params["stem"], x, stride=2))
+    y = _module(ctx, params["m1"], y)
+    y = _module(ctx, params["m2"], y)
+    y = L.relu6(L.conv2d(ctx, params["reduce"], y, stride=2))
+    y = _module(ctx, params["m3"], y)
+    y = L.relu6(L.conv2d(ctx, params["head"], y, pad=0))
+    y = L.global_avg_pool(y)
+    return L.dense(ctx, params["fc"], y)

@@ -1,0 +1,56 @@
+"""MobileNetV2 analogue (Sandler et al., CVPR'18) — scaled for this testbed.
+
+Preserves the architecture family's signature: a conv stem followed by
+inverted-residual bottleneck blocks (1x1 expand -> 3x3 depthwise -> 1x1
+project, residual when stride 1 and cin==cout), relu6, GAP + linear head.
+The paper evaluates width multipliers 1.0 and 1.4; we do the same, with
+channels rounded to multiples of 8 as in the original.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+from ..datasets import NUM_CLASSES
+
+# (cin, cout, expand, stride) before width scaling.
+_BLOCKS = [
+    (16, 16, 1, 1),
+    (16, 24, 4, 2),
+    (24, 24, 4, 1),
+    (24, 48, 4, 2),
+    (48, 48, 4, 1),
+]
+_STEM = 16
+_HEAD = 96
+
+
+def _scale(c: int, width: float) -> int:
+    return max(8, int(round(c * width / 8)) * 8)
+
+
+def init(rng, *, width: float = 1.0):
+    ks = jax.random.split(rng, len(_BLOCKS) + 3)
+    stem_c = _scale(_STEM, width)
+    head_c = _scale(_HEAD, width)
+    params = {"stem": L.init_conv(ks[0], 3, 3, 3, stem_c), "blocks": []}
+    cin = stem_c
+    for i, (bc_in, bc_out, t, s) in enumerate(_BLOCKS):
+        cout = _scale(bc_out, width)
+        params["blocks"].append(
+            L.init_inverted_residual(ks[i + 1], cin, cout, expand=t, stride=s))
+        cin = cout
+    params["head"] = L.init_conv(ks[-2], 1, 1, cin, head_c)
+    params["fc"] = L.init_dense(ks[-1], head_c, NUM_CLASSES)
+    return params
+
+
+def apply(params, x: jnp.ndarray, ctx: L.Ctx) -> jnp.ndarray:
+    y = L.relu6(L.conv2d(ctx, params["stem"], x, stride=2))
+    for blk in params["blocks"]:
+        y = L.inverted_residual(ctx, blk, y)
+    y = L.relu6(L.conv2d(ctx, params["head"], y, pad=0))
+    y = L.global_avg_pool(y)
+    return L.dense(ctx, params["fc"], y)

@@ -1,0 +1,71 @@
+"""ResNetV2 analogue (He et al., CVPR'16 / pre-activation variant) — scaled.
+
+Keeps the family signature: pre-activation residual blocks of two dense 3x3
+convolutions, stride-2 stage transitions with projection shortcuts.  This is
+the heaviest model in the zoo (dense convs at high channel counts), mirroring
+Table II where ResNetV2-101 has the largest parameter count and FLOPs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+from ..datasets import NUM_CLASSES
+
+# (channels, blocks, stride of first block).
+_STAGES = [(32, 2, 1), (64, 2, 2), (128, 2, 2)]
+
+
+def _init_block(rng, cin: int, cout: int, stride: int):
+    k = jax.random.split(rng, 3)
+    # Fixup-style residual-branch downscale: without normalisation layers
+    # the residual sum doubles activation variance per block, saturating
+    # relu6 and killing gradients; scaling the closing conv keeps each
+    # block near-identity at init.
+    c2 = L.init_conv(k[1], 3, 3, cout, cout)
+    c2["w"] = c2["w"] * 0.1
+    p = {
+        "c1": L.init_conv(k[0], 3, 3, cin, cout),
+        "c2": c2,
+        "proj": None,
+        "meta": L.Meta(stride=stride, cin=cin, cout=cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = L.init_conv(k[2], 1, 1, cin, cout)
+    return p
+
+
+def _block(ctx: L.Ctx, p, x: jnp.ndarray) -> jnp.ndarray:
+    m = p["meta"]
+    y = L.relu6(x)  # pre-activation
+    shortcut = x
+    if p["proj"] is not None:
+        shortcut = L.conv2d(ctx, p["proj"], y, stride=m["stride"], pad=0)
+    y = L.relu6(L.conv2d(ctx, p["c1"], y, stride=m["stride"]))
+    y = L.conv2d(ctx, p["c2"], y)
+    return shortcut + y
+
+
+def init(rng):
+    n_blocks = sum(b for _, b, _ in _STAGES)
+    ks = jax.random.split(rng, n_blocks + 2)
+    params = {"stem": L.init_conv(ks[0], 3, 3, 3, _STAGES[0][0]), "blocks": []}
+    cin, ki = _STAGES[0][0], 1
+    for cout, blocks, stride in _STAGES:
+        for b in range(blocks):
+            params["blocks"].append(
+                _init_block(ks[ki], cin, cout, stride if b == 0 else 1))
+            cin, ki = cout, ki + 1
+    params["fc"] = L.init_dense(ks[-1], cin, NUM_CLASSES)
+    return params
+
+
+def apply(params, x: jnp.ndarray, ctx: L.Ctx) -> jnp.ndarray:
+    y = L.conv2d(ctx, params["stem"], x)
+    for blk in params["blocks"]:
+        y = _block(ctx, blk, y)
+    y = L.relu6(y)
+    y = L.global_avg_pool(y)
+    return L.dense(ctx, params["fc"], y)

@@ -1,0 +1,131 @@
+"""Short *real* training of every model family on the synthetic datasets.
+
+The paper measures accuracy of each transformed variant on a validation set;
+for that to be a measurement rather than an assertion, the FP32 reference
+models must actually fit their task.  Each family is trained with hand-rolled
+Adam (no optax on this image) on the ``ref`` implementation path (fast XLA)
+— pytest separately proves ref == pallas, so the trained weights are valid
+for the kernel path that gets AOT-lowered.
+
+Trained parameters are cached to ``artifacts/params/<family>.npz`` keyed by
+flattened-leaf order, so ``make artifacts`` is a no-op when nothing changed.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets
+from .layers import Ctx
+from .models import FAMILIES, Family
+
+BATCH = 64
+LR = 2e-3
+
+
+def _loss_cls(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def _loss_seg(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)  # [N,H,W,C]
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+
+
+def _adam_init(params):
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    return {"m": zeros(params), "v": zeros(params), "t": jnp.zeros((), jnp.int32)}
+
+
+def _adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree.map(lambda m_: m_ / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda v_: v_ / (1 - b2**t), v)
+    new = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+                       params, mhat, vhat)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train_family(fam: Family, *, seed: int = 0, verbose: bool = True):
+    """Train one family; returns (params, final_loss)."""
+    rng = jax.random.PRNGKey(seed)
+    params = fam.init(rng)
+    xtr, ytr, _, _ = datasets.splits(fam.task, fam.resolution)
+    xtr, ytr = jnp.asarray(xtr), jnp.asarray(ytr)
+    loss_fn = _loss_cls if fam.task == "cls" else _loss_seg
+    ctx = Ctx(impl="ref")
+
+    @jax.jit
+    def step(params, opt, x, y):
+        def obj(p):
+            return loss_fn(fam.apply(p, x, ctx), y)
+
+        loss, grads = jax.value_and_grad(obj)(params)
+        params, opt = _adam_update(params, grads, opt, fam.lr)
+        return params, opt, loss
+
+    opt = _adam_init(params)
+    n = xtr.shape[0]
+    perm_rng = np.random.default_rng(seed)
+    loss = jnp.inf
+    for i in range(fam.train_steps):
+        idx = perm_rng.integers(0, n, size=BATCH)
+        params, opt, loss = step(params, opt, xtr[idx], ytr[idx])
+        if verbose and (i % 50 == 0 or i == fam.train_steps - 1):
+            print(f"  [{fam.name}] step {i:4d} loss {float(loss):.4f}", flush=True)
+    return params, float(loss)
+
+
+# ---------------------------------------------------------------------------
+# Parameter cache (npz of array leaves, in deterministic flatten order)
+# ---------------------------------------------------------------------------
+
+def save_params(path: str, params) -> None:
+    leaves = [np.asarray(l) for l in jax.tree.leaves(params)]
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    np.savez_compressed(path, *leaves)
+
+
+def load_params(path: str, fam: Family):
+    """Rebuild the param pytree from cache using init's structure."""
+    if not os.path.exists(path):
+        return None
+    loaded = np.load(path)
+    arrays = [jnp.asarray(loaded[k]) for k in loaded.files]
+    template = fam.init(jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree.flatten(template)
+    if len(leaves) != len(arrays):
+        return None  # stale cache (architecture changed)
+    for a, b in zip(leaves, arrays):
+        if a.shape != b.shape:
+            return None
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def get_trained_params(fam: Family, cache_dir: str = "../artifacts/params",
+                       *, seed: int = 0):
+    path = os.path.join(cache_dir, f"{fam.name}.npz")
+    cached = load_params(path, fam)
+    if cached is not None:
+        return cached
+    print(f"training {fam.name} ({fam.train_steps} steps)...", flush=True)
+    params, _ = train_family(fam, seed=seed)
+    save_params(path, params)
+    return params
+
+
+def main():
+    for fam in FAMILIES.values():
+        get_trained_params(fam)
+
+
+if __name__ == "__main__":
+    main()

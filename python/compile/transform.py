@@ -1,0 +1,85 @@
+"""OODIn model Transformations (paper §III-B1): T = {FP32, FP16, INT8}.
+
+A transformation maps the reference FP32 parameter pytree to a variant
+pytree: ``m <-t- m_ref``.  FP16 casts weight tensors to float16 (biases stay
+f32, activations stay f32 — TFLite float16 post-training quantisation).
+INT8 replaces each weight with per-output-channel symmetric int8 + scale
+(TFLite dynamic-range quantisation); dequantisation happens inside the L1
+kernels.  The set is extensible (the paper calls out pruning / channel
+skipping) — see ``register``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from .kernels.conv import quantize_dw_weights
+from .kernels.quantized import quantize_weights
+from .layers import Meta
+
+
+def _is_layer(node: Any) -> bool:
+    return isinstance(node, dict) and "w" in node and "meta" in node
+
+
+def _map_layers(params: Any, fn: Callable[[dict], dict]) -> Any:
+    """Recursively rewrite every weighted-layer dict in the pytree."""
+    if _is_layer(params):
+        return fn(params)
+    if isinstance(params, Meta):
+        return params
+    if isinstance(params, dict):
+        return {k: _map_layers(v, fn) for k, v in params.items()}
+    if isinstance(params, list):
+        return [_map_layers(v, fn) for v in params]
+    if isinstance(params, tuple):
+        return tuple(_map_layers(v, fn) for v in params)
+    return params
+
+
+def fp32(params: Any) -> Any:
+    """Identity transformation (the reference model)."""
+    return params
+
+
+def fp16(params: Any) -> Any:
+    def cast(layer: dict) -> dict:
+        out = dict(layer)
+        out["w"] = layer["w"].astype(jnp.float16)
+        return out
+
+    return _map_layers(params, cast)
+
+
+def int8(params: Any) -> Any:
+    def quant(layer: dict) -> dict:
+        out = {k: v for k, v in layer.items() if k != "w"}
+        if layer["w"].ndim == 3:  # depthwise [k, k, C]
+            out["w_q"], out["s"] = quantize_dw_weights(layer["w"])
+        else:  # GEMM [K, N]
+            out["w_q"], out["s"] = quantize_weights(layer["w"])
+        return out
+
+    return _map_layers(params, quant)
+
+
+TRANSFORMS: dict[str, Callable[[Any], Any]] = {
+    "fp32": fp32,
+    "fp16": fp16,
+    "int8": int8,
+}
+
+
+def register(name: str, fn: Callable[[Any], Any]) -> None:
+    """Extend T with a new accuracy/complexity transformation."""
+    TRANSFORMS[name] = fn
+
+
+def apply_transform(name: str, params: Any) -> Any:
+    return TRANSFORMS[name](params)
+
+
+def precision_bits(name: str) -> int:
+    return {"fp32": 32, "fp16": 16, "int8": 8}[name]

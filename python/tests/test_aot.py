@@ -1,0 +1,108 @@
+"""AOT path: HLO-text emission, manifest metadata, cost model."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.models import FAMILIES
+from compile.train import save_params
+from compile.transform import apply_transform
+
+
+def test_to_hlo_text_tiny_fn():
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4]" in text
+
+
+def test_to_hlo_text_contains_tuple_root():
+    """Rust unwraps with to_tuple1 — the root must be a 1-tuple."""
+    def fn(x):
+        return (x + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "tuple" in text.lower()
+
+
+def test_lower_variant_mobilenet_int8():
+    """Full lowering of the smallest variant must produce parseable HLO with
+    the pallas kernels inlined (no custom-calls — CPU-runnable)."""
+    fam = FAMILIES["mobilenet_v2_100"]
+    params = apply_transform("int8", fam.init(jax.random.PRNGKey(0)))
+    text = aot.lower_variant(fam, params, batch=1)
+    assert "HloModule" in text
+    assert "custom-call" not in text  # interpret=True ⇒ plain HLO only
+    assert f"f32[1,{fam.resolution},{fam.resolution},3]" in text
+    assert "s8[" in text  # int8 weights baked as s8 constants
+
+
+def test_model_costs_positive_and_consistent():
+    fam = FAMILIES["mobilenet_v2_100"]
+    params = fam.init(jax.random.PRNGKey(0))
+    flops, n_params, size = aot.model_costs(fam, params)
+    assert flops > 0 and n_params > 0
+    assert size == pytest.approx(n_params * 4, rel=0.01)  # all-f32 reference
+
+
+def test_model_costs_int8_size_ratio():
+    fam = FAMILIES["mobilenet_v2_100"]
+    p32 = fam.init(jax.random.PRNGKey(0))
+    _, _, s32 = aot.model_costs(fam, p32)
+    _, _, s8 = aot.model_costs(fam, apply_transform("int8", p32))
+    assert s8 < s32 / 2.5  # close to 4x smaller, biases/scales stay f32
+
+
+def test_build_family_manifest_schema(tmp_path, monkeypatch):
+    """build_family emits one entry per (precision, batch) with all fields
+    the Rust model registry requires."""
+    fam = FAMILIES["mobilenet_v2_100"]
+    # pre-seed the param cache so build_family doesn't train
+    params = fam.init(jax.random.PRNGKey(0))
+    cache = tmp_path / "params"
+    save_params(str(cache / f"{fam.name}.npz"), params)
+    monkeypatch.setattr(aot, "get_trained_params",
+                        lambda f: params)
+    monkeypatch.setattr(aot.evaluate, "evaluate", lambda f, p: 0.5)
+    monkeypatch.setattr(aot, "lower_variant", lambda f, p, b: "HloModule fake")
+
+    entries = aot.build_family(fam, str(tmp_path), skip_existing=False)
+    assert len(entries) == 3 * 3  # 3 precisions x batches (1,4,8)
+    required = {"name", "family", "paper_name", "task", "precision", "bits",
+                "resolution", "batch", "input_shape", "output_shape",
+                "params", "size_bytes", "flops", "accuracy",
+                "accuracy_metric", "hlo"}
+    for e in entries:
+        assert required <= set(e)
+        assert os.path.exists(tmp_path / e["hlo"])
+    # int8 entries must be smaller than fp32 ones
+    by_prec = {e["precision"]: e for e in entries if e["batch"] == 1}
+    assert by_prec["int8"]["size_bytes"] < by_prec["fp32"]["size_bytes"]
+    assert by_prec["fp16"]["bits"] == 16
+
+
+def test_hlo_text_bakes_large_constants():
+    """Regression: the default HLO printer elides big literals as
+    `constant({...})`, which the Rust-side parser silently zero-fills —
+    weights must be printed in full."""
+    import numpy as np
+
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 32)).astype(np.float32))
+
+    def fn(x):
+        return (x @ w,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2, 64), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "{...}" not in text
+    # the 2048-element weight is present: expect thousands of commas
+    assert text.count(",") > 2000

@@ -1,0 +1,67 @@
+"""Synthetic dataset generators: determinism, shapes, label semantics."""
+
+import numpy as np
+
+from compile import datasets as D
+
+
+def test_classification_shapes_and_ranges():
+    x, y = D.make_classification(50, 24, seed=0)
+    assert x.shape == (50, 24, 24, 3) and x.dtype == np.float32
+    assert y.shape == (50,) and y.dtype == np.int32
+    assert y.min() >= 0 and y.max() < D.NUM_CLASSES
+
+
+def test_classification_deterministic():
+    x1, y1 = D.make_classification(20, 24, seed=5)
+    x2, y2 = D.make_classification(20, 24, seed=5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_classification_seed_changes_data():
+    x1, _ = D.make_classification(20, 24, seed=1)
+    x2, _ = D.make_classification(20, 24, seed=2)
+    assert not np.array_equal(x1, x2)
+
+
+def test_classification_signal_at_class_position():
+    """The class blob must be brighter at its ring position than opposite."""
+    x, y = D.make_classification(200, 24, seed=3, noise=0.0)
+    hits = 0
+    for i in range(200):
+        k = int(y[i])
+        ang = 2 * np.pi * k / D.NUM_CLASSES
+        cy = int(round(12 + 24 * 0.3 * np.sin(ang)))
+        cx = int(round(12 + 24 * 0.3 * np.cos(ang)))
+        oy, ox = 24 - 1 - cy, 24 - 1 - cx
+        if x[i, cy, cx].sum() > x[i, oy, ox].sum():
+            hits += 1
+    assert hits > 150  # distractors may occasionally mask the signal
+
+
+def test_segmentation_shapes_and_classes():
+    x, m = D.make_segmentation(30, 48, seed=0)
+    assert x.shape == (30, 48, 48, 3)
+    assert m.shape == (30, 48, 48)
+    assert m.min() >= 0 and m.max() < D.NUM_SEG_CLASSES
+    # every image has at least one non-background region
+    assert all((m[i] > 0).any() for i in range(30))
+
+
+def test_segmentation_foreground_is_brighter():
+    x, m = D.make_segmentation(20, 48, seed=1, noise=0.0)
+    fg = x[m > 0].mean()
+    bg = x[m == 0].mean()
+    assert fg > bg + 0.5
+
+
+def test_splits_disjoint_seeds():
+    xtr, _, xte, _ = D.splits("cls", 24, n_train=30, n_test=30)
+    assert xtr.shape[0] == 30 and xte.shape[0] == 30
+    assert not np.array_equal(xtr[:10], xte[:10])
+
+
+def test_splits_segmentation_task():
+    xtr, ytr, xte, yte = D.splits("seg", 48, n_train=10, n_test=5)
+    assert ytr.shape == (10, 48, 48) and yte.shape == (5, 48, 48)

@@ -1,0 +1,194 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-tile-multiple and degenerate sizes)
+and dtypes; assert_allclose against ref.py is the core correctness signal
+licensing the ref path for training/eval and the pallas path for AOT.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as kc
+from compile.kernels import matmul as kmm
+from compile.kernels import quantized as kq
+from compile.kernels import ref as kref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 70), k=st.integers(1, 90), n=st.integers(1, 140),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    np.testing.assert_allclose(kmm.matmul(x, w), kref.matmul_ref(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 40), k=st.integers(1, 64), n=st.integers(1, 64),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_fp16_weights(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, m, k)
+    w = _rand(rng, k, n).astype(jnp.float16)
+    np.testing.assert_allclose(kmm.matmul(x, w), kref.matmul_ref(x, w),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_explicit_blocks():
+    rng = np.random.default_rng(0)
+    x, w = _rand(rng, 33, 47), _rand(rng, 47, 65)
+    out = kmm.matmul(x, w, block_m=8, block_k=16, block_n=8)
+    np.testing.assert_allclose(out, kref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_single_element():
+    x, w = jnp.ones((1, 1)), jnp.full((1, 1), 3.0)
+    np.testing.assert_allclose(kmm.matmul(x, w), [[3.0]])
+
+
+def test_matmul_rejects_mismatched_inner():
+    with pytest.raises(AssertionError):
+        kmm.matmul(jnp.ones((2, 3)), jnp.ones((4, 2)))
+
+
+def test_pick_blocks_bounds():
+    for m, k, n in [(1, 1, 1), (7, 13, 200), (4096, 4096, 4096)]:
+        bm, bk, bn = kmm.pick_blocks(m, k, n)
+        assert bm <= 512 and bk <= 576 and bn <= 256
+        assert bm % 8 == 0 or bm >= m
+        # VMEM budget: a real TPU core has ~16 MB; our largest tile set
+        # must fit with double-buffering headroom.
+        assert kmm.vmem_bytes(bm, bk, bn) < 8 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# quantized matmul
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 50), k=st.integers(1, 70), n=st.integers(1, 130),
+       seed=st.integers(0, 2**31 - 1))
+def test_qmatmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    w_q, s = kq.quantize_weights(w)
+    np.testing.assert_allclose(kq.qmatmul(x, w_q, s), kref.qmatmul_ref(x, w_q, s),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(k=st.integers(1, 50), n=st.integers(1, 50), seed=st.integers(0, 2**31 - 1))
+def test_quantize_weights_error_bound(k, n, seed):
+    """|w - w_q*s| <= scale/2 elementwise (symmetric rounding quantiser)."""
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, k, n)
+    w_q, s = kq.quantize_weights(w)
+    err = np.abs(np.asarray(w) - np.asarray(w_q, np.float32) * np.asarray(s))
+    assert (err <= np.asarray(s) / 2 + 1e-7).all()
+
+
+def test_quantize_weights_per_channel_tighter():
+    rng = np.random.default_rng(3)
+    w = _rand(rng, 32, 16) * jnp.linspace(0.01, 10.0, 16)  # scale-skewed cols
+    _, s_pt = kq.quantize_weights(w)
+    wq_pc, s_pc = kq.quantize_weights_per_channel(w)
+    err_pc = np.abs(np.asarray(w) - np.asarray(wq_pc, np.float32) * np.asarray(s_pc))
+    # per-channel error bound honours each column's own scale
+    assert (err_pc <= np.asarray(s_pc)[None, :] / 2 + 1e-7).all()
+    assert np.asarray(s_pc).max() <= np.asarray(s_pt)[0] + 1e-7
+
+
+def test_quantize_zero_weight():
+    w_q, s = kq.quantize_weights(jnp.zeros((4, 4)))
+    assert (np.asarray(w_q) == 0).all() and (np.asarray(s) == 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# depthwise
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 3), hw=st.integers(3, 17), c=st.integers(1, 24),
+       stride=st.sampled_from([1, 2]), seed=st.integers(0, 2**31 - 1))
+def test_depthwise_matches_ref(n, hw, c, stride, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, n, hw, hw, c), _rand(rng, 3, 3, c)
+    np.testing.assert_allclose(
+        kc.depthwise(x, w, stride=stride),
+        kref.depthwise_ref(x, w, stride=stride), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(hw=st.integers(3, 14), c=st.integers(1, 16),
+       stride=st.sampled_from([1, 2]), seed=st.integers(0, 2**31 - 1))
+def test_qdepthwise_matches_ref(hw, c, stride, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, 2, hw, hw, c), _rand(rng, 3, 3, c)
+    w_q, s = kc.quantize_dw_weights(w)
+    np.testing.assert_allclose(
+        kc.qdepthwise(x, w_q, s, stride=stride),
+        kref.qdepthwise_ref(x, w_q, s, stride=stride), rtol=1e-4, atol=1e-4)
+
+
+def test_depthwise_5x5_kernel():
+    rng = np.random.default_rng(1)
+    x, w = _rand(rng, 1, 11, 11, 4), _rand(rng, 5, 5, 4)
+    np.testing.assert_allclose(kc.depthwise(x, w), kref.depthwise_ref(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_depthwise_fp16_weights():
+    rng = np.random.default_rng(2)
+    x = _rand(rng, 1, 8, 8, 6)
+    w = _rand(rng, 3, 3, 6).astype(jnp.float16)
+    np.testing.assert_allclose(kc.depthwise(x, w), kref.depthwise_ref(x, w),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# im2col convolution path
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(hw=st.integers(5, 15), cin=st.integers(1, 8), cout=st.integers(1, 12),
+       stride=st.sampled_from([1, 2]), dilation=st.sampled_from([1, 2]),
+       seed=st.integers(0, 2**31 - 1))
+def test_im2col_conv_matches_lax(hw, cin, cout, stride, dilation, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 2, hw, hw, cin)
+    w = _rand(rng, 3 * 3 * cin, cout)
+    pad = kc.same_pad(3, dilation)
+    ho = kc.out_size(hw, 3, stride, dilation, pad)
+    cols = kc.im2col(x, 3, 3, stride, dilation, pad).reshape(-1, 3 * 3 * cin)
+    got = kmm.matmul(cols, w).reshape(2, ho, ho, cout)
+    want = kref.conv2d_ref(x, w, kh=3, kw=3, stride=stride,
+                           dilation=dilation, pad=pad)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_out_size_formula():
+    assert kc.out_size(24, 3, 2, 1, 1) == 12
+    assert kc.out_size(24, 3, 1, 1, 1) == 24
+    assert kc.out_size(12, 3, 1, 2, 2) == 12  # dilated SAME
+    assert kc.out_size(5, 1, 1, 1, 0) == 5
+
+
+def test_same_pad():
+    assert kc.same_pad(3) == 1
+    assert kc.same_pad(5) == 2
+    assert kc.same_pad(3, dilation=2) == 2
+    assert kc.same_pad(1) == 0

@@ -1,0 +1,141 @@
+"""L2 layer library: pallas impl vs ref impl, cost accounting, Meta statics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layers as L
+from compile.transform import apply_transform
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def _x(rng, n, hw, c):
+    return jnp.asarray(rng.normal(size=(n, hw, hw, c)).astype(np.float32))
+
+
+def _both(p, x, fn):
+    ref = fn(L.Ctx(impl="ref"), p, x)
+    pal = fn(L.Ctx(impl="pallas"), p, x)
+    np.testing.assert_allclose(ref, pal, rtol=1e-3, atol=1e-3)
+    return ref
+
+
+@settings(**SETTINGS)
+@given(hw=st.integers(4, 12), cin=st.integers(1, 8), cout=st.integers(1, 12),
+       stride=st.sampled_from([1, 2]), seed=st.integers(0, 1000))
+def test_conv2d_impls_agree(hw, cin, cout, stride, seed):
+    rng = np.random.default_rng(seed)
+    p = L.init_conv(jax.random.PRNGKey(seed), 3, 3, cin, cout)
+    _both(p, _x(rng, 2, hw, cin),
+          lambda c, p_, x_: L.conv2d(c, p_, x_, stride=stride))
+
+
+@settings(**SETTINGS)
+@given(hw=st.integers(4, 12), c=st.integers(1, 12),
+       stride=st.sampled_from([1, 2]), seed=st.integers(0, 1000))
+def test_depthwise_impls_agree(hw, c, stride, seed):
+    rng = np.random.default_rng(seed)
+    p = L.init_dw(jax.random.PRNGKey(seed), 3, c)
+    _both(p, _x(rng, 2, hw, c),
+          lambda ctx, p_, x_: L.depthwise(ctx, p_, x_, stride=stride))
+
+
+@pytest.mark.parametrize("prec", ["fp32", "fp16", "int8"])
+def test_conv2d_impls_agree_all_precisions(prec):
+    rng = np.random.default_rng(11)
+    p = apply_transform(prec, L.init_conv(jax.random.PRNGKey(1), 3, 3, 6, 10))
+    tol = 1e-3
+    _both(p, _x(rng, 2, 9, 6), lambda c, p_, x_: L.conv2d(c, p_, x_))
+
+
+@pytest.mark.parametrize("prec", ["fp32", "fp16", "int8"])
+def test_inverted_residual_all_precisions(prec):
+    rng = np.random.default_rng(4)
+    p0 = L.init_inverted_residual(jax.random.PRNGKey(2), 8, 8, expand=4, stride=1)
+    p = apply_transform(prec, p0)
+    _both(p, _x(rng, 1, 8, 8), L.inverted_residual)
+
+
+def test_inverted_residual_has_skip_connection():
+    """stride=1, cin==cout must add the residual: zero weights -> identity-ish."""
+    p = L.init_inverted_residual(jax.random.PRNGKey(0), 8, 8, expand=4, stride=1)
+    p = jax.tree.map(jnp.zeros_like, p)
+    x = jnp.ones((1, 6, 6, 8))
+    y = L.inverted_residual(L.Ctx(impl="ref"), p, x)
+    np.testing.assert_allclose(y, x)
+
+
+def test_inverted_residual_stride2_no_skip():
+    p = L.init_inverted_residual(jax.random.PRNGKey(0), 8, 16, expand=4, stride=2)
+    x = jnp.ones((1, 8, 8, 8))
+    y = L.inverted_residual(L.Ctx(impl="ref"), p, x)
+    assert y.shape == (1, 4, 4, 16)
+
+
+def test_dense_impls_agree():
+    rng = np.random.default_rng(5)
+    p = L.init_dense(jax.random.PRNGKey(3), 24, 10)
+    x = jnp.asarray(rng.normal(size=(4, 24)).astype(np.float32))
+    _both(p, x, L.dense)
+
+
+def test_meta_is_static_under_jit():
+    """Meta ints must survive jit tracing as python ints (control flow)."""
+    p = L.init_conv(jax.random.PRNGKey(0), 3, 3, 4, 8)
+
+    @jax.jit
+    def fwd(p_, x):
+        return L.conv2d(L.Ctx(impl="ref"), p_, x)
+
+    out = fwd(p, jnp.ones((1, 6, 6, 4)))
+    assert out.shape == (1, 6, 6, 8)
+
+
+def test_meta_roundtrips_as_pytree():
+    m = L.Meta(kh=3, kw=3, cin=4, cout=8)
+    leaves, treedef = jax.tree.flatten(m)
+    assert leaves == []  # static: no traced children
+    m2 = jax.tree.unflatten(treedef, [])
+    assert dict(m2) == dict(m)
+
+
+def test_cost_accounting_conv_flops():
+    """conv FLOPs = 2*N*Ho*Wo*kh*kw*cin*cout exactly."""
+    p = L.init_conv(jax.random.PRNGKey(0), 3, 3, 4, 8)
+    costs = []
+    L.conv2d(L.Ctx(impl="ref", costs=costs), p, jnp.ones((2, 6, 6, 4)))
+    (name, flops, wbytes) = costs[0]
+    assert name == "conv3x3"
+    assert flops == 2 * 2 * 6 * 6 * 3 * 3 * 4 * 8
+    assert wbytes == 3 * 3 * 4 * 8 * 4
+
+
+def test_cost_accounting_int8_weight_bytes():
+    p = apply_transform("int8", L.init_conv(jax.random.PRNGKey(0), 1, 1, 16, 32))
+    costs = []
+    L.conv2d(L.Ctx(impl="ref", costs=costs), p, jnp.ones((1, 4, 4, 16)), pad=0)
+    _, _, wbytes = costs[0]
+    assert wbytes == 16 * 32 * 1 + 32 * 4  # int8 weights + f32 scales
+
+
+def test_global_avg_pool_and_relu6():
+    x = jnp.full((2, 3, 3, 5), 9.0)
+    assert L.relu6(x).max() == 6.0
+    assert L.relu6(-x).min() == 0.0
+    np.testing.assert_allclose(L.global_avg_pool(x), np.full((2, 5), 9.0))
+
+
+def test_avg_pool_3x3_same_shape_and_constant():
+    x = jnp.full((1, 5, 5, 2), 4.0)
+    y = L.avg_pool_3x3(x)
+    assert y.shape == x.shape
+    np.testing.assert_allclose(y, 4.0, rtol=1e-6)  # count-corrected at edges
+
+
+def test_resize_bilinear_shape():
+    y = L.resize_bilinear(jnp.ones((2, 6, 6, 5)), 12, 12)
+    assert y.shape == (2, 12, 12, 5)
+    np.testing.assert_allclose(y, 1.0, rtol=1e-6)

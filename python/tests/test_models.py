@@ -1,0 +1,93 @@
+"""Model-zoo shape/cost/precision checks and pallas-vs-ref agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import model_costs, output_shape
+from compile.datasets import NUM_CLASSES, NUM_SEG_CLASSES
+from compile.layers import Ctx
+from compile.models import FAMILIES, PRECISIONS
+from compile.transform import apply_transform
+
+ALL = list(FAMILIES.values())
+SMALL = [FAMILIES["mobilenet_v2_100"], FAMILIES["deeplab_v3"]]
+
+
+@pytest.mark.parametrize("fam", ALL, ids=lambda f: f.name)
+def test_output_shape(fam):
+    params = fam.init(jax.random.PRNGKey(0))
+    x = jnp.zeros((2, fam.resolution, fam.resolution, 3))
+    out = fam.apply(params, x, Ctx(impl="ref"))
+    if fam.task == "cls":
+        assert out.shape == (2, NUM_CLASSES)
+    else:
+        assert out.shape == (2, fam.resolution, fam.resolution, NUM_SEG_CLASSES)
+
+
+@pytest.mark.parametrize("fam", ALL, ids=lambda f: f.name)
+def test_init_deterministic(fam):
+    p1 = fam.init(jax.random.PRNGKey(0))
+    p2 = fam.init(jax.random.PRNGKey(0))
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("fam", SMALL, ids=lambda f: f.name)
+@pytest.mark.parametrize("prec", PRECISIONS)
+def test_pallas_matches_ref(fam, prec):
+    """The AOT (pallas) path computes the same function as the eval path."""
+    params = apply_transform(prec, fam.init(jax.random.PRNGKey(1)))
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(1, fam.resolution, fam.resolution, 3)).astype(np.float32))
+    y_ref = fam.apply(params, x, Ctx(impl="ref"))
+    y_pal = fam.apply(params, x, Ctx(impl="pallas"))
+    np.testing.assert_allclose(y_ref, y_pal, rtol=2e-3, atol=2e-3)
+
+
+def test_flops_ordering_mirrors_table2():
+    """Relative compute cost ordering must match the paper's Table II."""
+    flops = {}
+    for fam in ALL:
+        params = fam.init(jax.random.PRNGKey(0))
+        flops[fam.name], _, _ = model_costs(fam, params)
+    assert flops["mobilenet_v2_100"] < flops["mobilenet_v2_140"]
+    assert flops["efficientnet_lite0"] < flops["efficientnet_lite4"]
+    assert flops["mobilenet_v2_100"] < flops["inception_v3"]
+    assert flops["efficientnet_lite4"] < flops["inception_v3"]
+    assert flops["inception_v3"] < flops["resnet_v2"]  # ResNetV2 heaviest
+
+
+def test_param_count_ordering():
+    params_of = {}
+    for fam in ALL:
+        p = fam.init(jax.random.PRNGKey(0))
+        _, n, _ = model_costs(fam, p)
+        params_of[fam.name] = n
+    assert params_of["mobilenet_v2_100"] < params_of["mobilenet_v2_140"]
+    assert params_of["resnet_v2"] == max(params_of.values())
+
+
+@pytest.mark.parametrize("fam", ALL, ids=lambda f: f.name)
+def test_transform_size_shrinks(fam):
+    """size(int8) < size(fp16) < size(fp32) for every family."""
+    p = fam.init(jax.random.PRNGKey(0))
+    sizes = {}
+    for prec in PRECISIONS:
+        _, _, sizes[prec] = model_costs(fam, apply_transform(prec, p))
+    assert sizes["int8"] < sizes["fp16"] < sizes["fp32"]
+
+
+def test_output_shape_helper_agrees():
+    fam = FAMILIES["mobilenet_v2_100"]
+    p = fam.init(jax.random.PRNGKey(0))
+    assert output_shape(fam, p, 4) == [4, NUM_CLASSES]
+
+
+def test_width_multiplier_rounds_to_8():
+    from compile.models.mobilenet_v2 import _scale
+    assert _scale(16, 1.0) == 16
+    assert _scale(16, 1.4) == 24
+    assert _scale(3, 1.0) == 8  # floor at 8
+    assert all(_scale(c, 1.4) % 8 == 0 for c in (16, 24, 48, 96))

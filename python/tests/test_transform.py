@@ -1,0 +1,82 @@
+"""OODIn transformation set T: structure preservation and numeric bounds."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+from compile.transform import (TRANSFORMS, apply_transform, precision_bits,
+                               register)
+
+
+def _toy_params():
+    k = jax.random.split(jax.random.PRNGKey(0), 3)
+    return {
+        "stem": L.init_conv(k[0], 3, 3, 3, 8),
+        "blocks": [L.init_inverted_residual(k[1], 8, 8, expand=4, stride=1)],
+        "fc": L.init_dense(k[2], 8, 10),
+    }
+
+
+def test_fp32_is_identity():
+    p = _toy_params()
+    assert apply_transform("fp32", p) is p
+
+
+def test_fp16_casts_weights_only():
+    p = apply_transform("fp16", _toy_params())
+    assert p["stem"]["w"].dtype == jnp.float16
+    assert p["stem"]["b"].dtype == jnp.float32  # biases stay f32
+    assert p["fc"]["w"].dtype == jnp.float16
+
+
+def test_int8_replaces_weights_with_quant_pairs():
+    p = apply_transform("int8", _toy_params())
+    assert "w" not in p["stem"] and "w_q" in p["stem"] and "s" in p["stem"]
+    assert p["stem"]["w_q"].dtype == jnp.int8
+    # depthwise weights inside the IR block are quantised too (3-D path)
+    dw = p["blocks"][0]["dw"]
+    assert dw["w_q"].dtype == jnp.int8 and dw["w_q"].ndim == 3
+    assert dw["s"].shape == (dw["w_q"].shape[2],)
+
+
+def test_transform_preserves_structure():
+    """None subtrees (no-expand blocks) and Meta nodes survive untouched."""
+    p0 = {"blk": L.init_inverted_residual(jax.random.PRNGKey(1), 8, 8,
+                                          expand=1, stride=1)}
+    assert p0["blk"]["expand"] is None
+    p = apply_transform("int8", p0)
+    assert p["blk"]["expand"] is None
+    assert isinstance(p["blk"]["meta"], L.Meta)
+    assert dict(p["blk"]["meta"]) == dict(p0["blk"]["meta"])
+
+
+def test_int8_dequant_close_to_original():
+    p0 = _toy_params()
+    p = apply_transform("int8", p0)
+    w0 = np.asarray(p0["fc"]["w"])
+    wq = np.asarray(p["fc"]["w_q"], np.float32) * np.asarray(p["fc"]["s"])
+    assert np.abs(w0 - wq).max() <= np.asarray(p["fc"]["s"]).max() / 2 + 1e-7
+
+
+def test_precision_bits():
+    assert precision_bits("fp32") == 32
+    assert precision_bits("fp16") == 16
+    assert precision_bits("int8") == 8
+
+
+def test_register_extends_T():
+    def prune_identity(params):
+        return params
+
+    register("prune_test", prune_identity)
+    try:
+        assert apply_transform("prune_test", {"a": 1}) == {"a": 1}
+    finally:
+        TRANSFORMS.pop("prune_test")
+
+
+def test_unknown_transform_raises():
+    with pytest.raises(KeyError):
+        apply_transform("int4", {})

@@ -1,0 +1,175 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Search strategy** — OODIn's complete enumerative LUT search vs a
+//!    random configuration pick vs a greedy engine-first heuristic:
+//!    solution quality (latency of the chosen design) and search time.
+//! 2. **Adaptation hysteresis** — sweep the Runtime Manager's
+//!    `min_improvement` threshold and report switch counts + average
+//!    latency under the Fig 7 load ramp (too low = flapping, too high =
+//!    stuck on a degraded engine).
+//! 3. **Recognition rate r** — effective fps/latency trade-off per r.
+
+
+use oodin::app::{AppConfig, Application};
+use oodin::device::profiles::samsung_a71;
+use oodin::experiments::{build_lut, EVAL_EPSILON};
+use oodin::load_registry;
+use oodin::manager::Policy;
+use oodin::measurements::LutKey;
+use oodin::model::Registry;
+use oodin::optimizer::{Objective, Optimizer, SearchSpace};
+use oodin::util::bench::{bench, black_box};
+use oodin::util::rng::Rng;
+use oodin::util::stats::Percentile;
+
+const OBJ: Objective = Objective::MinLatency {
+    stat: Percentile::Avg,
+    epsilon: EVAL_EPSILON,
+};
+
+fn main() {
+    let registry = load_registry().expect("run `make artifacts` first");
+    search_quality(&registry);
+    hysteresis_sweep(&registry);
+    recognition_rate_sweep(&registry);
+}
+
+fn search_quality(registry: &Registry) {
+    println!("== ablation 1: search strategy (samsung_a71, all families) ==");
+    let device = samsung_a71();
+    let lut = build_lut(&device, registry).unwrap();
+    let opt = Optimizer::new(&device, registry, &lut);
+
+    println!("{:<22} {:>14} {:>12}", "strategy", "geo latency", "vs OODIn");
+    let mut oodin_geo = 1.0f64;
+    for strategy in ["oodin-enumerative", "greedy-engine-first", "random-pick"] {
+        let mut lats = Vec::new();
+        for family in registry.families() {
+            let lat = match strategy {
+                "oodin-enumerative" => opt
+                    .optimize(OBJ, &SearchSpace::family(family))
+                    .ok()
+                    .map(|e| e.latency_ms),
+                "greedy-engine-first" => greedy(&opt, registry, family),
+                _ => random_pick(&opt, registry, &lut.entries, family),
+            };
+            if let Some(l) = lat {
+                lats.push(l);
+            }
+        }
+        let geo = oodin::util::stats::geomean(&lats);
+        if strategy == "oodin-enumerative" {
+            oodin_geo = geo;
+        }
+        println!("{:<22} {:>11.4} ms {:>11.2}x", strategy, geo, geo / oodin_geo);
+    }
+
+    bench("search/oodin_enumerative", 5, 100, || {
+        black_box(opt.optimize(OBJ, &SearchSpace::family("inception_v3")).unwrap());
+    });
+}
+
+/// Greedy: pick the engine with the best single default config, then tune
+/// threads/governor only on that engine (what a hand-tuned port does).
+fn greedy(opt: &Optimizer, registry: &Registry, family: &str) -> Option<f64> {
+    use oodin::device::EngineKind;
+    let mut best_engine = None;
+    for e in EngineKind::ALL {
+        let space = SearchSpace::family(family)
+            .with_engines(&[e])
+            .with_precisions(&[oodin::model::Precision::Fp32]);
+        if let Ok(r) = opt.optimize(OBJ, &space) {
+            if best_engine
+                .as_ref()
+                .map_or(true, |(_, l)| r.latency_ms < *l)
+            {
+                best_engine = Some((e, r.latency_ms));
+            }
+        }
+    }
+    let (engine, _) = best_engine?;
+    let _ = registry;
+    opt.optimize(OBJ, &SearchSpace::family(family).with_engines(&[engine]))
+        .ok()
+        .map(|e| e.latency_ms)
+}
+
+/// Random feasible configuration (averaged over 20 draws).
+fn random_pick(opt: &Optimizer, registry: &Registry,
+               entries: &std::collections::BTreeMap<LutKey, oodin::measurements::LutEntry>,
+               family: &str) -> Option<f64> {
+    let keys: Vec<&LutKey> = entries
+        .keys()
+        .filter(|k| registry.get(&k.variant).map_or(false, |v| v.family == family))
+        .collect();
+    if keys.is_empty() {
+        return None;
+    }
+    let mut rng = Rng::new(7);
+    let mut acc = Vec::new();
+    for _ in 0..20 {
+        let k = keys[rng.below(keys.len())];
+        let d = oodin::optimizer::Design {
+            variant: k.variant.clone(),
+            hw: oodin::optimizer::HwConfig {
+                engine: k.engine,
+                threads: k.threads,
+                governor: k.governor,
+                recognition_rate: 1.0,
+            },
+        };
+        if let Ok(e) = opt.evaluate(&d, Percentile::Avg) {
+            acc.push(e.latency_ms);
+        }
+    }
+    Some(acc.iter().sum::<f64>() / acc.len() as f64)
+}
+
+fn hysteresis_sweep(registry: &Registry) {
+    println!("\n== ablation 2: adaptation hysteresis (Fig 7 conditions) ==");
+    println!("{:>12} {:>10} {:>14}", "threshold", "switches", "avg latency");
+    for min_improvement in [1.0, 1.05, 1.10, 1.25, 1.5, 2.0, 4.0] {
+        let mut cfg = AppConfig::new(
+            "samsung_a71",
+            Objective::MinLatency { stat: Percentile::P90, epsilon: 0.0 },
+            SearchSpace::family("mobilenet_v2_140"),
+        );
+        cfg.real_exec = false;
+        cfg.lut_runs = 40;
+        cfg.policy = Policy {
+            min_improvement,
+            check_interval_ms: 100.0,
+            cooldown_ms: 200.0,
+            ..Policy::default()
+        };
+        let Ok(mut app) = Application::build(cfg, registry.clone()) else {
+            continue;
+        };
+        let e0 = app.current_design().hw.engine;
+        let mut recs = Vec::new();
+        for load in [0.0, 1.0, 2.0] {
+            app.sim.set_load(e0, load);
+            recs.extend(app.run(60, &[]).unwrap());
+        }
+        let switches = recs.iter().filter(|r| r.switch.is_some()).count();
+        let avg = recs.iter().map(|r| r.latency_ms).sum::<f64>() / recs.len() as f64;
+        println!("{:>12.2} {:>10} {:>11.4} ms", min_improvement, switches, avg);
+    }
+}
+
+fn recognition_rate_sweep(registry: &Registry) {
+    println!("\n== ablation 3: recognition rate r (Eq. system params) ==");
+    let device = samsung_a71();
+    let lut = build_lut(&device, registry).unwrap();
+    let opt = Optimizer::new(&device, registry, &lut)
+        .with_camera_fps(30.0);
+    println!("{:>6} {:>10} {:>14}", "r", "eff fps", "per-frame ms");
+    for r in [1.0, 0.5, 0.25] {
+        let mut space = SearchSpace::family("inception_v3");
+        space.recognition_rate = Some(r);
+        if let Ok(best) = opt.optimize(Objective::MaxFps { epsilon: EVAL_EPSILON },
+                                       &space) {
+            println!("{:>6.2} {:>10.2} {:>11.4} ms", r, best.fps, best.avg_latency_ms);
+        }
+    }
+}

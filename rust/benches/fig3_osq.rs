@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig 3 (OODIn vs oSQ-CPU/-GPU/-NNAPI across the three
+//! devices and all model families) and time its components.
+
+use oodin::device::profiles::samsung_a71;
+use oodin::experiments::{build_lut, fig3, EVAL_EPSILON};
+use oodin::load_registry;
+use oodin::optimizer::{Objective, Optimizer, SearchSpace};
+use oodin::util::bench::{bench, black_box, time_once};
+use oodin::util::stats::Percentile;
+
+fn main() {
+    let registry = load_registry().expect("run `make artifacts` first");
+
+    println!("== FIG 3 reproduction ==");
+    let (_, ms) = time_once("fig3/full_experiment", || {
+        fig3::print(&registry).unwrap();
+    });
+    println!("(fig3 end-to-end: {ms:.0} ms)");
+
+    println!("\n== component timings ==");
+    let device = samsung_a71();
+    let lut = build_lut(&device, &registry).unwrap();
+    bench("measurements/full_sweep_200runs", 1, 5, || {
+        black_box(build_lut(&device, &registry).unwrap());
+    });
+    let opt = Optimizer::new(&device, &registry, &lut);
+    let obj = Objective::MinLatency { stat: Percentile::Avg, epsilon: EVAL_EPSILON };
+    bench("optimizer/enumerative_search_one_family", 5, 200, || {
+        black_box(opt.optimize(obj, &SearchSpace::family("mobilenet_v2_100")).unwrap());
+    });
+    bench("optimizer/enumerative_search_full_space", 5, 100, || {
+        black_box(opt.optimize(obj, &SearchSpace::default()).unwrap());
+    });
+}

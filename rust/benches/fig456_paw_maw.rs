@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig 4/5/6 (OODIn vs PAW-D / MAW-D per device).
+
+use oodin::experiments::fig456;
+use oodin::load_registry;
+use oodin::util::bench::time_once;
+
+fn main() {
+    let registry = load_registry().expect("run `make artifacts` first");
+    let (_, ms) = time_once("fig456/full_experiment", || {
+        fig456::print(&registry, None).unwrap();
+    });
+    println!("(fig4/5/6 end-to-end: {ms:.0} ms)");
+}

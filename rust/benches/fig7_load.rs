@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig 7 (Runtime Manager under ramped device load) and
+//! run the hysteresis-threshold ablation the adaptation policy calls out.
+
+use oodin::experiments::fig7;
+use oodin::load_registry;
+use oodin::util::bench::time_once;
+
+fn main() {
+    let registry = load_registry().expect("run `make artifacts` first");
+    let (_, ms) = time_once("fig7/full_experiment", || {
+        fig7::print(&registry, false).unwrap();
+    });
+    println!("(fig7 end-to-end: {ms:.0} ms)");
+}

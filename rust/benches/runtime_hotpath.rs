@@ -1,0 +1,96 @@
+//! Hot-path benchmark: real PJRT execution of the AOT artifacts — the
+//! anchor for the §Perf optimisation pass (EXPERIMENTS.md).
+//!
+//! Measures per-variant host latency, batch-amortisation on the batched
+//! mobilenet executables, executor-thread round-trip overhead, and the
+//! serving front-end's end-to-end throughput.
+
+use oodin::load_registry;
+use oodin::model::Precision;
+use oodin::runtime::{write_tiny_hlo, RuntimeHandle};
+use oodin::serving::{Server, ServerConfig};
+use oodin::util::bench::{bench, black_box};
+
+fn main() {
+    let registry = load_registry().expect("run `make artifacts` first");
+    let rt = RuntimeHandle::cpu().expect("pjrt cpu client");
+
+    // Executor round-trip floor (channel + literal + trivial HLO).
+    let tiny = write_tiny_hlo();
+    rt.load("tiny", &tiny).unwrap();
+    bench("runtime/roundtrip_floor_tiny_hlo", 50, 500, || {
+        black_box(rt.execute("tiny", vec![1.0; 4], &[4]).unwrap());
+    });
+
+    // Per-variant real inference latency (batch-1, all families, fp32+int8).
+    println!("\n== per-variant host latency (real AOT artifacts) ==");
+    for v in registry.variants() {
+        if v.batch != 1 || v.precision == Precision::Fp16 {
+            continue;
+        }
+        if rt.load(&v.name, registry.hlo_path(v)).is_err() {
+            println!("{:<40} load failed", v.name);
+            continue;
+        }
+        let input = vec![0.1f32; v.input_elems()];
+        let shape = v.input_shape.clone();
+        let name = v.name.clone();
+        bench(&format!("exec/{name}"), 5, 60, || {
+            black_box(rt.execute(&name, input.clone(), &shape).unwrap());
+        });
+        rt.evict(&name).unwrap();
+    }
+
+    // Batch amortisation on the flagship model.
+    println!("\n== batching (mobilenet_v2_100 fp32) ==");
+    for b in [1usize, 4, 8] {
+        let Some(v) = registry.find("mobilenet_v2_100", Precision::Fp32, b) else {
+            continue;
+        };
+        rt.load(&v.name, registry.hlo_path(v)).unwrap();
+        let input = vec![0.1f32; v.input_elems()];
+        let shape = v.input_shape.clone();
+        let name = v.name.clone();
+        let r = bench(&format!("exec/batch{b}"), 5, 60, || {
+            black_box(rt.execute(&name, input.clone(), &shape).unwrap());
+        });
+        println!("{:<44} {:>10.4} ms/sample", format!("  -> per-sample (b={b})"),
+                 r.stats.avg / b as f64);
+    }
+
+    // Serving front-end throughput.
+    println!("\n== serving front-end (dynamic batcher) ==");
+    for delay_ms in [0.0, 2.0] {
+        let mut cfg =
+            ServerConfig::for_family(&registry, "mobilenet_v2_100", Precision::Fp32)
+                .unwrap();
+        cfg.max_batch_delay_ms = delay_ms;
+        let srv = Server::start(rt.clone(), &registry, cfg).unwrap();
+        let res = registry
+            .find("mobilenet_v2_100", Precision::Fp32, 1)
+            .unwrap()
+            .resolution;
+        let frame = vec![0.1f32; res * res * 3];
+        let n = 256;
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..n)
+            .map(|_| srv.submit(frame.clone(), res, res).unwrap())
+            .collect();
+        let mut ok = 0;
+        for rx in rxs {
+            if rx.recv().unwrap().is_ok() {
+                ok += 1;
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "serve/delay={delay_ms}ms: {ok}/{n} ok, {:>8.1} req/s  (batches: {})",
+            n as f64 / secs,
+            oodin::util::json::to_string(
+                &srv.telemetry.snapshot().get("counters").unwrap().clone()
+            ),
+        );
+        srv.stop();
+    }
+    rt.shutdown();
+}

@@ -1,0 +1,390 @@
+//! The OODIn mobile Application (paper §III-B2, online component).
+//!
+//! Wires the layered architecture end-to-end: SIL blocks (camera, gallery,
+//! UI) on top, DLACL in the middle (input pipeline, buffers, model swaps),
+//! MDCL at the bottom (resource detection, middlewares a/b/c), with the
+//! Runtime Manager observing middleware-c statistics and issuing
+//! reconfigurations.
+//!
+//! Numerics are *real*: each processed frame can be pushed through the AOT
+//! artifact on the host PJRT client (`real_exec`), while device latency,
+//! thermal state and contention evolve on the simulated device timeline
+//! (DESIGN.md §Substitutions).  Scenario events inject the Fig 7/8
+//! conditions (engine load ramps; thermal stress emerges by itself from
+//! sustained work).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::device::{DeviceProfile, EngineKind};
+use crate::devicesim::DeviceSim;
+use crate::dlacl::{decode_top1, ModelSlot};
+use crate::manager::{Policy, RuntimeManager, Switch};
+use crate::mdcl;
+use crate::measurements::{Lut, Measurer};
+use crate::model::{Registry, Task};
+use crate::optimizer::{Design, Objective, Optimizer, SearchSpace};
+use crate::runtime::RuntimeHandle;
+use crate::sil::{Gallery, SyntheticCamera, UiStub};
+use crate::util::clock::Clock;
+
+/// Application configuration (what the developer ships + OODIn's chosen σ).
+#[derive(Clone)]
+pub struct AppConfig {
+    pub device: String,
+    pub objective: Objective,
+    pub space: SearchSpace,
+    pub camera_fps: f64,
+    /// Execute real PJRT numerics per processed frame.
+    pub real_exec: bool,
+    /// Echo UI events to stdout.
+    pub live_ui: bool,
+    /// Measurement runs when building the LUT (paper default 200).
+    pub lut_runs: usize,
+    pub policy: Policy,
+    pub camera_seed: u64,
+}
+
+impl AppConfig {
+    pub fn new(device: &str, objective: Objective, space: SearchSpace) -> Self {
+        AppConfig {
+            device: device.to_string(),
+            objective,
+            space,
+            camera_fps: 30.0,
+            real_exec: true,
+            live_ui: false,
+            lut_runs: 60,
+            policy: Policy::default(),
+            camera_seed: 42,
+        }
+    }
+}
+
+/// A scheduled condition change (Fig 7's load ramp).
+#[derive(Debug, Clone)]
+pub enum ScenarioEvent {
+    SetLoad { at_frame: u64, engine: EngineKind, load: f64 },
+}
+
+/// Per-frame record emitted by the application loop.
+#[derive(Debug, Clone)]
+pub struct FrameRecord {
+    pub seq: u64,
+    pub ts_ms: f64,
+    /// Simulated device latency of this inference (ms).
+    pub latency_ms: f64,
+    /// Real host PJRT latency, when real_exec is on.
+    pub host_ms: Option<f64>,
+    pub engine: EngineKind,
+    pub variant: String,
+    pub predicted: Option<usize>,
+    pub label: usize,
+    pub correct: Option<bool>,
+    /// A reconfiguration decided right after this frame.
+    pub switch: Option<Switch>,
+    pub temp_c: f64,
+}
+
+/// The assembled application.
+pub struct Application {
+    pub cfg: AppConfig,
+    pub profile: Arc<DeviceProfile>,
+    pub registry: Arc<Registry>,
+    pub lut: Arc<Lut>,
+    pub sim: DeviceSim,
+    pub manager: RuntimeManager,
+    pub camera: SyntheticCamera,
+    pub gallery: Gallery,
+    pub ui: UiStub,
+    runtime: Option<RuntimeHandle>,
+    slot: Option<ModelSlot>,
+    frames_seen: u64,
+    frames_processed: u64,
+}
+
+impl Application {
+    /// Build the app: detect resources (MDCL), run Device Measurements,
+    /// System Optimisation, then initialise SIL + DLACL around the selected
+    /// design σ.
+    pub fn build(cfg: AppConfig, registry: Registry) -> Result<Self> {
+        let profile = Arc::new(mdcl::detect(&cfg.device)?);
+        let registry = Arc::new(registry);
+
+        // Offline component: measurements + optimisation.
+        let lut = Arc::new(
+            Measurer::new(&profile, &registry)
+                .with_runs(cfg.lut_runs, (cfg.lut_runs / 10).max(1))
+                .measure_all()?,
+        );
+        let opt = Optimizer::new(&profile, &registry, &lut)
+            .with_camera_fps(cfg.camera_fps);
+        let initial = opt.optimize(cfg.objective, &cfg.space)?.design;
+
+        // Online component.
+        let hw_info = mdcl::middleware_a(&profile);
+        let variant = registry.get(&initial.variant).unwrap();
+        let mut camera = SyntheticCamera::new(
+            variant.resolution.max(16),
+            cfg.camera_fps.min(hw_info.camera.max_fps),
+            cfg.camera_seed,
+        );
+        camera.fps = cfg.camera_fps.min(hw_info.camera.max_fps);
+
+        let (runtime, slot) = if cfg.real_exec {
+            let rt = RuntimeHandle::cpu()?;
+            let mut slot = ModelSlot::new(rt.clone(), profile.mem_budget_bytes);
+            slot.swap_to(&registry, &initial.variant)
+                .context("loading initial model")?;
+            (Some(rt), Some(slot))
+        } else {
+            (None, None)
+        };
+
+        let manager = RuntimeManager::new(
+            Arc::clone(&profile),
+            Arc::clone(&registry),
+            Arc::clone(&lut),
+            cfg.objective,
+            cfg.space.clone(),
+            initial.clone(),
+        )
+        .with_policy(cfg.policy.clone());
+
+        let mut ui = UiStub::new(cfg.live_ui);
+        ui.set_banner(format!(
+            "{} | {} | {} thr={} gov={} r={}",
+            profile.name,
+            initial.variant,
+            initial.hw.engine.name(),
+            initial.hw.threads,
+            initial.hw.governor.name(),
+            initial.hw.recognition_rate,
+        ));
+
+        Ok(Application {
+            gallery: Gallery::temp(&format!("app_{}", cfg.device))?,
+            sim: DeviceSim::new((*profile).clone(), Clock::sim()),
+            cfg,
+            profile,
+            registry,
+            lut,
+            manager,
+            camera,
+            ui,
+            runtime,
+            slot,
+            frames_seen: 0,
+            frames_processed: 0,
+        })
+    }
+
+    pub fn current_design(&self) -> &Design {
+        self.manager.current()
+    }
+
+    /// Apply a reconfiguration: DLACL swaps the model if it changed.
+    fn apply_switch(&mut self, sw: &Switch) -> Result<()> {
+        if sw.from.variant != sw.to.variant {
+            if let Some(slot) = self.slot.as_mut() {
+                slot.swap_to(&self.registry, &sw.to.variant)?;
+            }
+        }
+        self.ui.set_banner(format!(
+            "{} | {} | {} thr={} gov={} ({:?}, detected in {:.0} ms)",
+            self.profile.name,
+            sw.to.variant,
+            sw.to.hw.engine.name(),
+            sw.to.hw.threads,
+            sw.to.hw.governor.name(),
+            sw.reason,
+            sw.detection_ms,
+        ));
+        Ok(())
+    }
+
+    /// Process `n_frames` camera frames, applying scenario events.  Returns
+    /// one record per *processed* frame (recognition rate subsamples).
+    pub fn run(&mut self, n_frames: u64, scenario: &[ScenarioEvent])
+               -> Result<Vec<FrameRecord>> {
+        let mut records = Vec::new();
+        let interval = self.camera.frame_interval_ms();
+
+        for i in 0..n_frames {
+            // Scenario injections scheduled for this frame index.
+            for ev in scenario {
+                match ev {
+                    ScenarioEvent::SetLoad { at_frame, engine, load }
+                        if *at_frame == i =>
+                    {
+                        self.sim.set_load(*engine, *load);
+                        self.ui.event(format!(
+                            "scenario: load({})={:.2} at frame {}",
+                            engine.name(), load, i
+                        ));
+                    }
+                    _ => {}
+                }
+            }
+
+            let ts = self.sim.clock.now_ms();
+            let frame = self.camera.capture(ts);
+            self.frames_seen += 1;
+
+            // Recognition rate r: process every (1/r)-th frame.
+            let design = self.manager.current().clone();
+            let stride = (1.0 / design.hw.recognition_rate).round().max(1.0) as u64;
+            if (self.frames_seen - 1) % stride != 0 {
+                self.sim.idle(interval);
+                continue;
+            }
+
+            let v = self
+                .registry
+                .get(&design.variant)
+                .context("current design variant not in registry")?
+                .clone();
+            let exec = self.sim.run_inference(
+                &v,
+                design.hw.engine,
+                design.hw.threads,
+                design.hw.governor,
+            )?;
+            self.frames_processed += 1;
+
+            // Real numerics through the AOT artifact.
+            let (host_ms, predicted, correct) = if let Some(slot) = self.slot.as_mut() {
+                let out = slot.infer(&frame.data, frame.height, frame.width)?;
+                let (cls, conf) = match v.task {
+                    Task::Classification => decode_top1(&out.values, 10),
+                    Task::Segmentation => (0, 0.0),
+                };
+                if v.task == Task::Classification {
+                    self.gallery.add(&crate::sil::GalleryEntry {
+                        ts_ms: ts,
+                        seq: frame.seq,
+                        predicted_class: cls,
+                        confidence: conf as f64,
+                        model: v.name.clone(),
+                        engine: design.hw.engine.name().to_string(),
+                    })?;
+                    // Middleware b: DNN-output-driven feature tuning.
+                    if let Some(adj) = mdcl::middleware_b(cls, conf) {
+                        self.camera.exposure = adj.camera_exposure;
+                    }
+                    (Some(out.host_ms), Some(cls), Some(cls == frame.label))
+                } else {
+                    (Some(out.host_ms), None, None)
+                }
+            } else {
+                (None, None, None)
+            };
+
+            // Middleware c -> Runtime Manager.
+            let report = mdcl::middleware_c(
+                &self.sim,
+                self.slot.as_ref().map_or(0, |s| s.resident_bytes()),
+            );
+            self.manager.record_latency(exec.latency_ms);
+            let sw = self.manager.observe(report.at_ms, &report.conditions);
+            if let Some(sw) = &sw {
+                self.apply_switch(sw)?;
+                self.ui.event(format!(
+                    "switch @{:.0}ms: {} -> {} ({:?})",
+                    sw.at_ms,
+                    sw.from.hw.engine.name(),
+                    sw.to.hw.engine.name(),
+                    sw.reason
+                ));
+            }
+
+            records.push(FrameRecord {
+                seq: frame.seq,
+                ts_ms: ts,
+                latency_ms: exec.latency_ms,
+                host_ms,
+                engine: design.hw.engine,
+                variant: design.variant.clone(),
+                predicted,
+                label: frame.label,
+                correct,
+                switch: sw,
+                temp_c: exec.temp_c,
+            });
+
+            // Idle out the rest of the frame slot, if any.
+            let spare = interval - exec.latency_ms;
+            if spare > 0.0 {
+                self.sim.idle(spare);
+            }
+        }
+        Ok(records)
+    }
+
+    pub fn shutdown(self) {
+        if let Some(rt) = self.runtime {
+            rt.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_fixtures::fake_registry;
+    use crate::util::stats::Percentile;
+
+    fn cfg(device: &str) -> AppConfig {
+        let mut c = AppConfig::new(
+            device,
+            Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 },
+            SearchSpace::family("mobilenet_v2_100"),
+        );
+        c.real_exec = false; // fake registry has no artifacts
+        c.lut_runs = 20;
+        c
+    }
+
+    #[test]
+    fn build_selects_a_design_and_runs() {
+        let mut app = Application::build(cfg("samsung_a71"), fake_registry()).unwrap();
+        let recs = app.run(30, &[]).unwrap();
+        assert_eq!(recs.len(), 30); // r=1 on a fast pair
+        assert!(recs.iter().all(|r| r.latency_ms > 0.0));
+        assert!(app.frames_processed > 0);
+    }
+
+    #[test]
+    fn load_scenario_triggers_engine_migration() {
+        let mut app = Application::build(cfg("samsung_a71"), fake_registry()).unwrap();
+        let e0 = app.current_design().hw.engine;
+        let scenario = vec![ScenarioEvent::SetLoad {
+            at_frame: 10,
+            engine: e0,
+            load: 3.0,
+        }];
+        let recs = app.run(200, &scenario).unwrap();
+        let switched: Vec<_> = recs.iter().filter(|r| r.switch.is_some()).collect();
+        assert!(!switched.is_empty(), "no switch under 8x load");
+        assert_ne!(app.current_design().hw.engine, e0);
+    }
+
+    #[test]
+    fn recognition_rate_subsamples_frames() {
+        let mut c = cfg("sony_c5");
+        // Force r < 1 by fixing it in the search space.
+        c.space.recognition_rate = Some(0.5);
+        let mut app = Application::build(c, fake_registry()).unwrap();
+        let recs = app.run(40, &[]).unwrap();
+        assert_eq!(recs.len(), 20);
+    }
+
+    #[test]
+    fn sim_clock_advances_through_run() {
+        let mut app = Application::build(cfg("samsung_s20_fe"), fake_registry()).unwrap();
+        app.run(15, &[]).unwrap();
+        // >= 15 frame intervals at 30 fps
+        assert!(app.sim.clock.now_ms() >= 14.0 * 33.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Use-case configuration: the user-facing spec of performance objectives
+//! (paper §III-D, `o_i = <P, max/min/val(stat)>`), parsed from JSON files or
+//! CLI shorthands into the optimizer's `Objective` + `SearchSpace`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::device::EngineKind;
+use crate::model::Precision;
+use crate::optimizer::{Objective, SearchSpace};
+use crate::util::json::{self, Value};
+use crate::util::stats::Percentile;
+
+/// A fully-specified use case.
+#[derive(Debug, Clone)]
+pub struct UseCase {
+    pub name: String,
+    pub device: String,
+    pub objective: Objective,
+    pub space: SearchSpace,
+    pub camera_fps: f64,
+}
+
+impl UseCase {
+    /// Parse from JSON, e.g.
+    /// `{"name":"ai_camera","device":"samsung_a71",
+    ///   "objective":{"kind":"max_fps","epsilon":0.015},
+    ///   "family":"mobilenet_v2_100","camera_fps":30}`
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let objective = parse_objective(v.req("objective")?)?;
+        let mut space = SearchSpace::default();
+        if let Some(f) = v.get("family") {
+            space.family = Some(f.as_str()?.to_string());
+        }
+        if let Some(es) = v.get("engines") {
+            let mut engines = Vec::new();
+            for e in es.as_arr()? {
+                engines.push(EngineKind::parse(e.as_str()?)?);
+            }
+            space.engines = Some(engines);
+        }
+        if let Some(ps) = v.get("precisions") {
+            let mut precisions = Vec::new();
+            for p in ps.as_arr()? {
+                precisions.push(Precision::parse(p.as_str()?)?);
+            }
+            space.precisions = Some(precisions);
+        }
+        if let Some(r) = v.get("recognition_rate") {
+            space.recognition_rate = Some(r.as_f64()?);
+        }
+        Ok(UseCase {
+            name: v.get("name").and_then(|x| x.as_str().ok().map(String::from))
+                .unwrap_or_else(|| "unnamed".into()),
+            device: v.req("device")?.as_str()?.to_string(),
+            objective,
+            space,
+            camera_fps: v.get("camera_fps").map_or(Ok(30.0), |x| x.as_f64())?,
+        })
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        Self::from_json(&json::parse(text).context("parsing use-case JSON")?)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        Self::from_json_str(&text)
+    }
+}
+
+fn parse_objective(v: &Value) -> Result<Objective> {
+    let kind = v.req("kind")?.as_str()?;
+    let stat = match v.get("stat") {
+        Some(s) => Percentile::parse(s.as_str()?)?,
+        None => Percentile::Avg,
+    };
+    Ok(match kind {
+        // Eq. 3
+        "max_fps" => Objective::MaxFps {
+            epsilon: v.get("epsilon").map_or(Ok(0.015), |x| x.as_f64())?,
+        },
+        // Eq. 4
+        "target_latency" => Objective::TargetLatency {
+            t_target_ms: v.req("t_target_ms")?.as_f64()?,
+            stat,
+        },
+        // Eq. 5
+        "max_acc_max_fps" => Objective::MaxAccMaxFps {
+            w_fps: v.get("w_fps").map_or(Ok(1.0), |x| x.as_f64())?,
+        },
+        // Fig 3-6 evaluation objective
+        "min_latency" => Objective::MinLatency {
+            stat,
+            epsilon: v.get("epsilon").map_or(Ok(0.015), |x| x.as_f64())?,
+        },
+        other => bail!("unknown objective kind `{other}`"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_max_fps_use_case() {
+        let uc = UseCase::from_json_str(
+            r#"{"name":"cam","device":"samsung_a71",
+                "objective":{"kind":"max_fps","epsilon":0.02},
+                "family":"mobilenet_v2_100","camera_fps":24}"#,
+        ).unwrap();
+        assert_eq!(uc.name, "cam");
+        assert_eq!(uc.camera_fps, 24.0);
+        assert!(matches!(uc.objective, Objective::MaxFps { epsilon } if epsilon == 0.02));
+        assert_eq!(uc.space.family.as_deref(), Some("mobilenet_v2_100"));
+    }
+
+    #[test]
+    fn parses_target_latency_with_stat() {
+        let uc = UseCase::from_json_str(
+            r#"{"device":"sony_c5",
+                "objective":{"kind":"target_latency","t_target_ms":5,"stat":"p90"}}"#,
+        ).unwrap();
+        assert!(matches!(
+            uc.objective,
+            Objective::TargetLatency { t_target_ms, stat: Percentile::P90 }
+                if t_target_ms == 5.0
+        ));
+        assert_eq!(uc.name, "unnamed");
+    }
+
+    #[test]
+    fn parses_engine_and_precision_restrictions() {
+        let uc = UseCase::from_json_str(
+            r#"{"device":"samsung_s20_fe",
+                "objective":{"kind":"min_latency"},
+                "engines":["cpu","gpu"],"precisions":["int8"],
+                "recognition_rate":0.5}"#,
+        ).unwrap();
+        assert_eq!(uc.space.engines.as_ref().unwrap().len(), 2);
+        assert_eq!(uc.space.precisions.as_ref().unwrap(),
+                   &[Precision::Int8]);
+        assert_eq!(uc.space.recognition_rate, Some(0.5));
+    }
+
+    #[test]
+    fn rejects_unknown_objective() {
+        let r = UseCase::from_json_str(
+            r#"{"device":"x","objective":{"kind":"max_energy"}}"#);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_target_latency_value_errors() {
+        let r = UseCase::from_json_str(
+            r#"{"device":"x","objective":{"kind":"target_latency"}}"#);
+        assert!(r.is_err());
+    }
+}

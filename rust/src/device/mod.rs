@@ -1,0 +1,202 @@
+//! Device resource model (paper §III-B1, Eq. 2):
+//! `R = <CE, N_cores, C, DVFS, b, v_os, v_camera>`
+//! plus the per-engine calibration constants that drive the performance
+//! model (see `perf/`).  The three profiles in `profiles()` encode Table I
+//! verbatim on the resource side; the engine throughput/overhead constants
+//! are calibration values chosen so the *relative* engine behaviour of each
+//! device class matches the phenomena the paper reports (see DESIGN.md
+//! §Substitutions — dispatch overheads are scaled with the scaled-down
+//! model workloads).
+
+pub mod profiles;
+
+
+/// A compute engine kind: CE = {CPU, GPU, NPU} (NPU ≡ the NNAPI target).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum EngineKind {
+    Cpu,
+    Gpu,
+    Npu,
+}
+
+impl EngineKind {
+    pub const ALL: [EngineKind; 3] = [EngineKind::Cpu, EngineKind::Gpu, EngineKind::Npu];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Cpu => "cpu",
+            EngineKind::Gpu => "gpu",
+            EngineKind::Npu => "nnapi",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "cpu" => EngineKind::Cpu,
+            "gpu" => EngineKind::Gpu,
+            "npu" | "nnapi" => EngineKind::Npu,
+            other => anyhow::bail!("unknown engine `{other}`"),
+        })
+    }
+}
+
+/// Calibration constants of one compute engine on one device.
+#[derive(Debug, Clone)]
+pub struct EngineSpec {
+    pub kind: EngineKind,
+    /// Effective FP32 throughput with all resources engaged (GFLOP/s).
+    pub peak_gflops_fp32: f64,
+    /// Multiplier on peak when running FP16 / INT8 models.
+    pub fp16_mult: f64,
+    pub int8_mult: f64,
+    /// Memory bandwidth seen by this engine (GB/s).
+    pub mem_bw_gbps: f64,
+    /// Fixed per-dispatch overhead (ms): driver, queue, DMA setup.
+    pub dispatch_ms: f64,
+    /// Amdahl parallel fraction (CPU only; 0 for offload engines).
+    pub parallel_frac: f64,
+    /// Thermal behaviour of this engine.
+    pub thermal: ThermalSpec,
+}
+
+/// First-order thermal RC constants (see `dvfs::ThermalModel`).
+#[derive(Debug, Clone)]
+pub struct ThermalSpec {
+    /// Degrees added per ms of full-utilisation compute.
+    pub heat_per_ms: f64,
+    /// Fractional leak towards ambient per ms.
+    pub cool_rate: f64,
+    /// Throttling onset temperature (deg C).
+    pub throttle_temp: f64,
+    /// Frequency floor once fully throttled (fraction of nominal).
+    pub min_freq_scale: f64,
+}
+
+/// Camera capabilities (v_camera in Eq. 2).
+#[derive(Debug, Clone)]
+pub struct CameraSpec {
+    pub api_level: &'static str, // LEGACY | LIMITED | FULL | LEVEL_3
+    pub max_fps: f64,
+    pub resolution: (u32, u32),
+}
+
+/// The full per-device resource representation R.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub chipset: &'static str,
+    pub year: u32,
+    /// CE: available compute engines.
+    pub engines: Vec<EngineSpec>,
+    /// N_cores.
+    pub n_cores: usize,
+    /// C: memory capacity (bytes, scaled units — see DESIGN.md).
+    pub mem_budget_bytes: u64,
+    pub ram_gb: f64,
+    /// DVFS: available governors.
+    pub governors: Vec<crate::dvfs::Governor>,
+    /// b: battery capacity (mAh).
+    pub battery_mah: u32,
+    /// v_os: Android version / API level.
+    pub os_version: u32,
+    pub api_level: u32,
+    pub camera: CameraSpec,
+    /// A deployment is rejected when even the best sustained latency
+    /// exceeds this (the paper drops DNNs causing >=5 s lag on Sony C5).
+    pub max_deployable_latency_ms: f64,
+}
+
+impl DeviceProfile {
+    pub fn engine(&self, kind: EngineKind) -> Option<&EngineSpec> {
+        self.engines.iter().find(|e| e.kind == kind)
+    }
+
+    pub fn has_engine(&self, kind: EngineKind) -> bool {
+        self.engine(kind).is_some()
+    }
+
+    /// Valid thread counts to sweep: 1..=N_cores, powers of two + N_cores.
+    pub fn thread_candidates(&self) -> Vec<usize> {
+        let mut t = vec![1usize];
+        let mut v = 2;
+        while v < self.n_cores {
+            t.push(v);
+            v *= 2;
+        }
+        if self.n_cores > 1 {
+            t.push(self.n_cores);
+        }
+        t.dedup();
+        t
+    }
+
+    /// NNAPI op-support penalty for a model family on this device: >1 means
+    /// partial acceleration with CPU fallbacks (the paper's "NNAPI remains
+    /// in its infancy" effect).  1.0 for non-NPU engines.
+    pub fn npu_family_penalty(&self, family: &str) -> f64 {
+        profiles::npu_family_penalty(self.name, family)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::profiles::*;
+    use super::*;
+
+    #[test]
+    fn three_devices_match_table1() {
+        let all = profiles();
+        assert_eq!(all.len(), 3);
+        let sony = &all[0];
+        assert_eq!(sony.name, "sony_c5");
+        assert_eq!(sony.n_cores, 8);
+        assert!(!sony.has_engine(EngineKind::Npu)); // Table I: NPU = x
+        assert_eq!(sony.api_level, 23);
+        assert_eq!(sony.battery_mah, 2930);
+
+        let a71 = &all[1];
+        assert!(a71.has_engine(EngineKind::Npu));
+        assert_eq!(a71.n_cores, 8);
+        assert_eq!(a71.api_level, 29);
+
+        let s20 = &all[2];
+        assert!(s20.has_engine(EngineKind::Npu));
+        assert_eq!(s20.battery_mah, 4500);
+        assert_eq!(s20.os_version, 11);
+    }
+
+    #[test]
+    fn performance_ordering_low_to_high_end() {
+        let all = profiles();
+        let cpu = |d: &DeviceProfile| d.engine(EngineKind::Cpu).unwrap().peak_gflops_fp32;
+        assert!(cpu(&all[0]) < cpu(&all[1]));
+        assert!(cpu(&all[1]) < cpu(&all[2]));
+    }
+
+    #[test]
+    fn thread_candidates_cover_cores() {
+        let d = by_name("samsung_a71").unwrap();
+        let t = d.thread_candidates();
+        assert_eq!(t, vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("samsung_s20_fe").is_some());
+        assert!(by_name("pixel_9").is_none());
+    }
+
+    #[test]
+    fn npu_penalty_only_meaningful_families() {
+        let _ = by_name("samsung_s20_fe").unwrap();
+        assert!(npu_family_penalty("samsung_s20_fe", "deeplab_v3") > 5.0);
+        assert_eq!(npu_family_penalty("samsung_s20_fe", "mobilenet_v2_100"), 1.0);
+    }
+
+    #[test]
+    fn camera_api_levels() {
+        let all = profiles();
+        assert_eq!(all[0].camera.api_level, "LEGACY");
+        assert_eq!(all[2].camera.api_level, "FULL");
+    }
+}

@@ -1,0 +1,212 @@
+//! The three target platforms of Table I, as resource models + calibration
+//! constants.
+//!
+//! Resource-side fields (cores, clocks, RAM, battery, OS/API level, camera
+//! API, engine availability, governor sets) are Table I verbatim.  Engine
+//! throughput/overhead/thermal constants are *calibration values*: they are
+//! not measured from the physical phones (unavailable on this testbed) but
+//! are chosen so each device class exhibits the qualitative behaviour the
+//! paper reports and attributes to real hardware:
+//!
+//! * Sony Xperia C5 (2015 low-end): weak CPU (8x A53), old GPU driver with
+//!   large dispatch overheads, no NPU, tight memory, aggressive thermal
+//!   envelope -> some large FP32 models are simply not deployable (Fig 4).
+//! * Samsung A71 (mid-tier): NNAPI NPU is excellent on quantised
+//!   convnets (OODIn picks NNAPI for MobileNetV2 INT8 -> 3.5x over the
+//!   CPU choice that an S20-optimised MAW design makes, §IV-B).
+//! * Samsung S20 FE (flagship): very fast CPU with tiny dispatch cost --
+//!   "on S20 the CPU is often the highest performing engine" (§IV-B) --
+//!   while its NNAPI path is catastrophic on unsupported ops
+//!   (up to ~93x, Fig 3).
+//!
+//! Dispatch overheads are scaled down ~100x together with the model
+//! workloads (DESIGN.md §Substitutions), keeping overhead:compute ratios in
+//! the regime that produces the paper's engine-selection landscape.
+//! Thermal heat rates are scaled *up* by the same reasoning: sustained
+//! streams of scaled-down inferences must reach throttling after a
+//! comparable number of processed images (Fig 8's ~85), so degrees-per-
+//! busy-ms is ~30x a physical SoC's.
+
+use super::{CameraSpec, DeviceProfile, EngineKind, EngineSpec, ThermalSpec};
+use crate::dvfs::Governor;
+
+fn thermal(heat_per_ms: f64, cool_rate: f64, throttle_temp: f64,
+           min_freq_scale: f64) -> ThermalSpec {
+    ThermalSpec { heat_per_ms, cool_rate, throttle_temp, min_freq_scale }
+}
+
+/// Sony Xperia C5 Ultra — MediaTek MT6752, 8x Cortex-A53 @ 1.69 GHz,
+/// Mali-T760 MP2, no NPU, 2 GB RAM, Android 6 (API 23), LEGACY camera.
+pub fn sony_c5() -> DeviceProfile {
+    DeviceProfile {
+        name: "sony_c5",
+        chipset: "MediaTek MT6752",
+        year: 2015,
+        engines: vec![
+            EngineSpec {
+                kind: EngineKind::Cpu,
+                peak_gflops_fp32: 6.0,
+                fp16_mult: 0.85, // no native fp16 pipe on A53: emulation cost
+                int8_mult: 1.8,
+                mem_bw_gbps: 2.5,
+                dispatch_ms: 0.004,
+                parallel_frac: 0.80,
+                thermal: thermal(1.05, 0.002, 55.0, 0.45),
+            },
+            EngineSpec {
+                kind: EngineKind::Gpu,
+                peak_gflops_fp32: 9.0,
+                fp16_mult: 1.7,
+                int8_mult: 0.9, // old driver dequantises on the fly
+                mem_bw_gbps: 3.5,
+                dispatch_ms: 0.080, // 2015-era GL driver: heavy dispatch
+                parallel_frac: 0.0,
+                thermal: thermal(0.90, 0.002, 52.0, 0.40),
+            },
+        ],
+        n_cores: 8,
+        mem_budget_bytes: 4 * 1024 * 1024, // scaled from 2 GB (see DESIGN.md)
+        ram_gb: 2.0,
+        governors: vec![Governor::Performance, Governor::Schedutil],
+        battery_mah: 2930,
+        os_version: 6,
+        api_level: 23,
+        camera: CameraSpec { api_level: "LEGACY", max_fps: 30.0, resolution: (1080, 1920) },
+        max_deployable_latency_ms: 8.0, // scaled "5 s AI-camera lag" bound
+    }
+}
+
+/// Samsung A71 — Snapdragon 730 (2x Kryo 470 Gold @2.2 + 6x Silver @1.8),
+/// Adreno 618, NPU, 6 GB RAM, Android 10 (API 29), LEVEL_3 camera.
+pub fn samsung_a71() -> DeviceProfile {
+    DeviceProfile {
+        name: "samsung_a71",
+        chipset: "Snapdragon 730",
+        year: 2020,
+        engines: vec![
+            EngineSpec {
+                kind: EngineKind::Cpu,
+                peak_gflops_fp32: 14.0,
+                fp16_mult: 0.95,
+                int8_mult: 2.2, // XNNPACK dot-product kernels
+                mem_bw_gbps: 8.0,
+                dispatch_ms: 0.002,
+                parallel_frac: 0.85,
+                thermal: thermal(0.08, 0.003, 62.0, 0.55),
+            },
+            EngineSpec {
+                kind: EngineKind::Gpu,
+                peak_gflops_fp32: 22.0,
+                fp16_mult: 1.9,
+                int8_mult: 1.3,
+                mem_bw_gbps: 11.0,
+                dispatch_ms: 0.012,
+                parallel_frac: 0.0,
+                thermal: thermal(0.25, 0.001, 60.0, 0.50),
+            },
+            EngineSpec {
+                kind: EngineKind::Npu,
+                // NNAPI executes fp32 graphs in relaxed-fp16 on the DSP:
+                // decent, but behind the GPU's native fp32 pipe.
+                peak_gflops_fp32: 16.0,
+                fp16_mult: 1.4,
+                int8_mult: 4.0625, // 65 GFLOP/s effective on int8 convnets
+                mem_bw_gbps: 9.0,
+                dispatch_ms: 0.018,
+                parallel_frac: 0.0,
+                thermal: thermal(0.30, 0.0003, 58.0, 0.35),
+            },
+        ],
+        n_cores: 8,
+        mem_budget_bytes: 12 * 1024 * 1024, // scaled from 6 GB
+        ram_gb: 6.0,
+        governors: vec![Governor::EnergyStep, Governor::Performance, Governor::Schedutil],
+        battery_mah: 4500,
+        os_version: 10,
+        api_level: 29,
+        camera: CameraSpec { api_level: "LEVEL_3", max_fps: 30.0, resolution: (1080, 2400) },
+        max_deployable_latency_ms: 25.0,
+    }
+}
+
+/// Samsung S20 FE — Exynos 990 (2x M5 @2.73 + 2x A76 @2.5 + 4x A55 @2.0),
+/// Mali-G77 MP11, NPU, 6 GB RAM, Android 11 (API 30), FULL camera.
+pub fn samsung_s20_fe() -> DeviceProfile {
+    DeviceProfile {
+        name: "samsung_s20_fe",
+        chipset: "Exynos 990",
+        year: 2020,
+        engines: vec![
+            EngineSpec {
+                kind: EngineKind::Cpu,
+                peak_gflops_fp32: 30.0,
+                fp16_mult: 1.0,
+                int8_mult: 2.5,
+                mem_bw_gbps: 16.0,
+                dispatch_ms: 0.0015,
+                parallel_frac: 0.85,
+                thermal: thermal(0.48, 0.0035, 65.0, 0.55),
+            },
+            EngineSpec {
+                kind: EngineKind::Gpu,
+                peak_gflops_fp32: 60.0,
+                fp16_mult: 1.9,
+                int8_mult: 1.4,
+                mem_bw_gbps: 22.0,
+                dispatch_ms: 0.018,
+                parallel_frac: 0.0,
+                thermal: thermal(0.42, 0.0035, 63.0, 0.50),
+            },
+            EngineSpec {
+                kind: EngineKind::Npu,
+                // Relaxed-fp16 execution of fp32 graphs, as on the A71.
+                peak_gflops_fp32: 20.0,
+                fp16_mult: 1.6,
+                int8_mult: 7.5, // 150 GFLOP/s on supported int8 graphs
+                mem_bw_gbps: 14.0,
+                dispatch_ms: 0.030, // Exynos NNAPI HAL: heavy session setup
+                parallel_frac: 0.0,
+                thermal: thermal(0.66, 0.003, 60.0, 0.35),
+            },
+        ],
+        n_cores: 8,
+        mem_budget_bytes: 12 * 1024 * 1024,
+        ram_gb: 6.0,
+        governors: vec![Governor::EnergyStep, Governor::Performance, Governor::Schedutil],
+        battery_mah: 4500,
+        os_version: 11,
+        api_level: 30,
+        camera: CameraSpec { api_level: "FULL", max_fps: 60.0, resolution: (1080, 2400) },
+        max_deployable_latency_ms: 25.0,
+    }
+}
+
+/// All Table I devices, low- to high-end.
+pub fn profiles() -> Vec<DeviceProfile> {
+    vec![sony_c5(), samsung_a71(), samsung_s20_fe()]
+}
+
+pub fn by_name(name: &str) -> Option<DeviceProfile> {
+    profiles().into_iter().find(|d| d.name == name)
+}
+
+/// NNAPI op-support penalty (multiplier >= 1 on NPU latency) per
+/// (device, model family).  Families with ops outside the NNAPI-delegate
+/// fast path (bilinear resize + atrous conv in DeepLab, the branchy
+/// inception concat pattern, large dense ResNet convs on some HALs) incur
+/// partial CPU fallback.  These produce Fig 3's "NNAPI is up to 93x worse"
+/// tail and the A71-vs-S20 engine flips in §IV-B.
+pub fn npu_family_penalty(device: &str, family: &str) -> f64 {
+    match (device, family) {
+        // Snapdragon 730 NNAPI: good on convnets, weak on seg heads.
+        ("samsung_a71", "efficientnet_lite4") => 3.0,
+        ("samsung_a71", "deeplab_v3") => 12.0,
+        ("samsung_a71", "resnet_v2") => 1.8,
+        // Exynos 990 NNAPI HAL: catastrophic on unsupported graphs.
+        ("samsung_s20_fe", "efficientnet_lite4") => 1.5,
+        ("samsung_s20_fe", "deeplab_v3") => 110.0,
+        ("samsung_s20_fe", "inception_v3") => 4.0,
+        ("samsung_s20_fe", "resnet_v2") => 3.0,
+        _ => 1.0,
+    }
+}

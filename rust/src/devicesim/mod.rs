@@ -1,0 +1,211 @@
+//! The virtual device: per-engine thermal state + injectable external load
+//! on the shared timeline.
+//!
+//! This is the substrate that stands in for the physical phones (DESIGN.md
+//! §Substitutions).  Every inference the Application runs is accounted here:
+//! the perf model produces the device latency under the *current* governor /
+//! thermal / load conditions, the engine's thermal model integrates the
+//! work, and the resulting conditions are what MDCL middleware c reports to
+//! the Runtime Manager.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::device::{DeviceProfile, EngineKind};
+use crate::dvfs::{Governor, ThermalModel};
+use crate::manager::Conditions;
+use crate::model::ModelVariant;
+use crate::perf::{self, ExecConditions};
+use crate::util::clock::Clock;
+use crate::util::rng::Rng;
+
+/// One simulated inference's outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct SimExec {
+    /// Device latency under current conditions (ms).
+    pub latency_ms: f64,
+    /// Engine temperature after the run (deg C).
+    pub temp_c: f64,
+    /// Thermal frequency scale in effect during the run.
+    pub thermal_scale: f64,
+}
+
+/// The simulated device.
+pub struct DeviceSim {
+    pub profile: DeviceProfile,
+    pub clock: Clock,
+    thermal: BTreeMap<EngineKind, ThermalModel>,
+    loads: BTreeMap<EngineKind, f64>,
+    noise: Rng,
+    noise_sigma: f64,
+}
+
+impl DeviceSim {
+    pub fn new(profile: DeviceProfile, clock: Clock) -> Self {
+        let thermal = profile
+            .engines
+            .iter()
+            .map(|e| (e.kind, ThermalModel::new(e.thermal.clone())))
+            .collect();
+        DeviceSim {
+            profile,
+            clock,
+            thermal,
+            loads: BTreeMap::new(),
+            noise: Rng::new(0x0D1),
+            noise_sigma: 0.03,
+        }
+    }
+
+    /// Inject external load (co-running apps) on one engine.  Fig 7 ramps
+    /// this; latency scales by 2^load, per the paper's own load model.
+    pub fn set_load(&mut self, engine: EngineKind, load: f64) {
+        self.loads.insert(engine, load.max(0.0));
+    }
+
+    pub fn load(&self, engine: EngineKind) -> f64 {
+        self.loads.get(&engine).copied().unwrap_or(0.0)
+    }
+
+    pub fn temp_c(&self, engine: EngineKind) -> Option<f64> {
+        self.thermal.get(&engine).map(|t| t.temp_c())
+    }
+
+    /// Current conditions snapshot (what middleware c transmits).
+    pub fn conditions(&self) -> Conditions {
+        let mut c = Conditions::idle();
+        for (k, l) in &self.loads {
+            c.loads.insert(*k, *l);
+        }
+        for (k, t) in &self.thermal {
+            c.thermal.insert(*k, t.freq_scale());
+        }
+        c
+    }
+
+    /// Execute one inference of `variant` on `engine` under `governor` with
+    /// `threads`: computes the conditioned latency, integrates heat, and
+    /// advances a simulated clock by the latency.
+    pub fn run_inference(&mut self, variant: &ModelVariant, engine: EngineKind,
+                         threads: usize, governor: Governor) -> Result<SimExec> {
+        let now = self.clock.now_ms();
+        // Let the engine cool across any idle gap first.
+        let tm = self
+            .thermal
+            .get_mut(&engine)
+            .ok_or_else(|| anyhow!("{} has no {}", self.profile.name, engine.name()))?;
+        tm.idle_until(now);
+        let thermal_scale = tm.freq_scale();
+
+        let cond = ExecConditions {
+            governor,
+            threads,
+            load_factor: self.loads.get(&engine).copied().unwrap_or(0.0),
+            thermal_freq_scale: thermal_scale,
+        };
+        let base = perf::latency_ms(&self.profile, engine, variant, &cond)
+            .ok_or_else(|| anyhow!("no perf model for {}", engine.name()))?;
+        let latency_ms = base * self.noise.lognormal(self.noise_sigma);
+
+        // Busy time heats the engine; dispatch is host-side.
+        let busy = perf::busy_ms(&self.profile, engine, variant, &cond).unwrap();
+        if self.clock.is_sim() {
+            self.clock.advance_ms(latency_ms);
+        }
+        tm.record_work(self.clock.now_ms(), busy, governor);
+
+        Ok(SimExec { latency_ms, temp_c: tm.temp_c(), thermal_scale })
+    }
+
+    /// Advance idle time (no inference running) — cools all engines.
+    pub fn idle(&mut self, ms: f64) {
+        if self.clock.is_sim() {
+            self.clock.advance_ms(ms);
+        }
+        let now = self.clock.now_ms();
+        for t in self.thermal.values_mut() {
+            t.idle_until(now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles::samsung_a71;
+    use crate::model::test_fixtures::fake_registry;
+
+    fn variant(name: &str) -> ModelVariant {
+        fake_registry().get(name).unwrap().clone()
+    }
+
+    #[test]
+    fn inference_advances_sim_clock() {
+        let mut sim = DeviceSim::new(samsung_a71(), Clock::sim());
+        let v = variant("inception_v3__fp32__b1");
+        let r = sim.run_inference(&v, EngineKind::Gpu, 1, Governor::Performance).unwrap();
+        assert!(r.latency_ms > 0.0);
+        assert!((sim.clock.now_ms() - r.latency_ms).abs() < 1e-3); // µs rounding
+    }
+
+    #[test]
+    fn sustained_npu_work_heats_and_throttles() {
+        let mut sim = DeviceSim::new(samsung_a71(), Clock::sim());
+        let v = variant("inception_v3__fp32__b1"); // heavy + npu penalty-free? fp32 on NPU is slow -> long busy
+        let mut first = None;
+        let mut throttled = false;
+        for _ in 0..900 {
+            let r = sim.run_inference(&v, EngineKind::Npu, 1, Governor::Performance).unwrap();
+            first.get_or_insert(r.latency_ms);
+            if r.thermal_scale < 0.85 {
+                // Deep in the throttle ramp the latency must have risen.
+                throttled = true;
+                assert!(r.latency_ms > first.unwrap() * 1.1,
+                        "throttled latency {} vs first {}", r.latency_ms,
+                        first.unwrap());
+                break;
+            }
+        }
+        assert!(throttled, "NPU never throttled; temp {:?}", sim.temp_c(EngineKind::Npu));
+    }
+
+    #[test]
+    fn load_scales_latency_exponentially() {
+        let mut sim = DeviceSim::new(samsung_a71(), Clock::sim());
+        let v = variant("mobilenet_v2_100__fp32__b1");
+        let base = sim.run_inference(&v, EngineKind::Cpu, 8, Governor::Performance).unwrap();
+        sim.set_load(EngineKind::Cpu, 2.0);
+        let loaded = sim.run_inference(&v, EngineKind::Cpu, 8, Governor::Performance).unwrap();
+        let ratio = loaded.latency_ms / base.latency_ms;
+        assert!((3.2..5.0).contains(&ratio), "ratio {ratio}"); // ~4x ± noise
+    }
+
+    #[test]
+    fn idle_cools_engines() {
+        let mut sim = DeviceSim::new(samsung_a71(), Clock::sim());
+        let v = variant("inception_v3__fp32__b1");
+        for _ in 0..200 {
+            sim.run_inference(&v, EngineKind::Npu, 1, Governor::Performance).unwrap();
+        }
+        let hot = sim.temp_c(EngineKind::Npu).unwrap();
+        sim.idle(60_000.0);
+        assert!(sim.temp_c(EngineKind::Npu).unwrap() < hot - 5.0);
+    }
+
+    #[test]
+    fn conditions_reflect_state() {
+        let mut sim = DeviceSim::new(samsung_a71(), Clock::sim());
+        sim.set_load(EngineKind::Gpu, 1.5);
+        let c = sim.conditions();
+        assert_eq!(c.load(EngineKind::Gpu), 1.5);
+        assert_eq!(c.thermal_scale(EngineKind::Cpu), 1.0);
+    }
+
+    #[test]
+    fn missing_engine_errors() {
+        let mut sim = DeviceSim::new(crate::device::profiles::sony_c5(), Clock::sim());
+        let v = variant("mobilenet_v2_100__fp32__b1");
+        assert!(sim.run_inference(&v, EngineKind::Npu, 1, Governor::Performance).is_err());
+    }
+}

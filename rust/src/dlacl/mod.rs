@@ -1,0 +1,227 @@
+//! DLACL — Deep Learning Architecture Convergence Layer (paper §III-C2).
+//!
+//! The DNN-aware sublayer: it owns every model-dependent buffer (input
+//! samples, the model itself, intermediate results), sized statically from
+//! the variant tuple fields `s_in`, `s_m`, `p` known a priori — so a model
+//! swap allocates exactly what the incoming variant needs and releases the
+//! outgoing variant's buffers without starving memory.  It also implements
+//! the input pipeline (resolution adaptation from the camera stream) and
+//! executes the online model selection orders issued by the Runtime
+//! Manager.
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{ModelVariant, Registry};
+use crate::runtime::{ExecOutput, RuntimeHandle};
+
+/// Model-dependent buffer set for one resident variant.
+#[derive(Debug)]
+pub struct BufferSet {
+    /// Flat f32 input staging buffer (reused across frames — the request
+    /// path does not allocate).
+    pub input: Vec<f32>,
+    pub input_shape: Vec<usize>,
+    /// Bytes attributed to this variant: weights + input + intermediates.
+    pub total_bytes: u64,
+}
+
+impl BufferSet {
+    pub fn for_variant(v: &ModelVariant) -> Self {
+        BufferSet {
+            input: vec![0.0; v.input_elems()],
+            input_shape: v.input_shape.clone(),
+            total_bytes: v.mem_bytes(),
+        }
+    }
+}
+
+/// The DLACL model slot: at most one resident variant per slot, swapped on
+/// Runtime Manager orders.
+pub struct ModelSlot {
+    runtime: RuntimeHandle,
+    resident: Option<(ModelVariant, BufferSet)>,
+    /// Device memory budget DLACL may use (from the MDCL resource model).
+    budget_bytes: u64,
+    /// Swap count (telemetry).
+    pub swaps: u64,
+}
+
+impl ModelSlot {
+    pub fn new(runtime: RuntimeHandle, budget_bytes: u64) -> Self {
+        ModelSlot { runtime, resident: None, budget_bytes, swaps: 0 }
+    }
+
+    pub fn resident(&self) -> Option<&ModelVariant> {
+        self.resident.as_ref().map(|(v, _)| v)
+    }
+
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident.as_ref().map_or(0, |(_, b)| b.total_bytes)
+    }
+
+    /// Swap in `variant`: budget check, compile+cache via the runtime,
+    /// allocate the statically-sized buffers, release the old set.
+    pub fn swap_to(&mut self, registry: &Registry, variant: &str) -> Result<()> {
+        if self.resident().map(|v| v.name.as_str()) == Some(variant) {
+            return Ok(()); // already resident
+        }
+        let v = registry
+            .get(variant)
+            .with_context(|| format!("unknown variant `{variant}`"))?
+            .clone();
+        if v.mem_bytes() > self.budget_bytes {
+            bail!(
+                "variant `{}` needs {} B, budget is {} B",
+                v.name, v.mem_bytes(), self.budget_bytes
+            );
+        }
+        let path = registry.hlo_path(&v);
+        self.runtime
+            .load(&v.name, &path)
+            .with_context(|| format!("loading artifact for `{}`", v.name))?;
+        // Old buffers drop here; the executable cache entry is evicted so
+        // compiled code does not accumulate across many swaps.
+        if let Some((old, _)) = self.resident.take() {
+            let _ = self.runtime.evict(&old.name);
+        }
+        let bufs = BufferSet::for_variant(&v);
+        self.resident = Some((v, bufs));
+        self.swaps += 1;
+        Ok(())
+    }
+
+    /// Stage a frame into the input buffer (nearest-neighbour resample from
+    /// the camera resolution) and execute.  Returns the raw output plus the
+    /// host wall-clock.
+    pub fn infer(&mut self, frame: &[f32], frame_h: usize, frame_w: usize)
+                 -> Result<ExecOutput> {
+        let Some((v, bufs)) = self.resident.as_mut() else {
+            bail!("no model resident in DLACL slot");
+        };
+        stage_input(frame, frame_h, frame_w, &mut bufs.input, v.resolution);
+        self.runtime
+            .execute(&v.name, bufs.input.clone(), &bufs.input_shape)
+    }
+}
+
+/// Nearest-neighbour RGB resample from (h, w) to (res, res) into `dst`
+/// (layout NHWC with N=1..batch; the frame is replicated across batch).
+pub fn stage_input(frame: &[f32], h: usize, w: usize, dst: &mut [f32], res: usize) {
+    assert_eq!(frame.len(), h * w * 3, "frame buffer size");
+    let per_image = res * res * 3;
+    assert!(dst.len() % per_image == 0, "dst not a whole batch");
+    for oy in 0..res {
+        let sy = oy * h / res;
+        for ox in 0..res {
+            let sx = ox * w / res;
+            let s = (sy * w + sx) * 3;
+            let d = (oy * res + ox) * 3;
+            dst[d..d + 3].copy_from_slice(&frame[s..s + 3]);
+        }
+    }
+    // Replicate to remaining batch entries.
+    let (first, rest) = dst.split_at_mut(per_image);
+    for chunk in rest.chunks_mut(per_image) {
+        chunk.copy_from_slice(first);
+    }
+}
+
+/// Classification head decode: arg-max + score over the logits of sample 0.
+pub fn decode_top1(output: &[f32], n_classes: usize) -> (usize, f32) {
+    let logits = &output[..n_classes];
+    let mut best = 0;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    (best, logits[best])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_fixtures::fake_registry;
+    use crate::runtime::write_tiny_hlo;
+
+    #[test]
+    fn stage_input_identity_when_same_size() {
+        let frame: Vec<f32> = (0..4 * 4 * 3).map(|i| i as f32).collect();
+        let mut dst = vec![0.0; 4 * 4 * 3];
+        stage_input(&frame, 4, 4, &mut dst, 4);
+        assert_eq!(dst, frame);
+    }
+
+    #[test]
+    fn stage_input_downsamples() {
+        // 4x4 -> 2x2 nearest: picks pixels (0,0),(0,2),(2,0),(2,2)
+        let mut frame = vec![0.0; 4 * 4 * 3];
+        for y in 0..4 {
+            for x in 0..4 {
+                frame[(y * 4 + x) * 3] = (y * 10 + x) as f32;
+            }
+        }
+        let mut dst = vec![0.0; 2 * 2 * 3];
+        stage_input(&frame, 4, 4, &mut dst, 2);
+        assert_eq!([dst[0], dst[3], dst[6], dst[9]], [0.0, 2.0, 20.0, 22.0]);
+    }
+
+    #[test]
+    fn stage_input_replicates_batch() {
+        let frame = vec![1.5f32; 2 * 2 * 3];
+        let mut dst = vec![0.0; 3 * (2 * 2 * 3)]; // batch of 3
+        stage_input(&frame, 2, 2, &mut dst, 2);
+        assert!(dst.iter().all(|&x| x == 1.5));
+    }
+
+    #[test]
+    fn decode_top1_picks_argmax() {
+        let out = [0.1, 3.0, -1.0, 2.0];
+        assert_eq!(decode_top1(&out, 4), (1, 3.0));
+    }
+
+    #[test]
+    fn swap_rejects_over_budget() {
+        let rt = crate::runtime::RuntimeHandle::cpu().unwrap();
+        let reg = fake_registry();
+        let mut slot = ModelSlot::new(rt.clone(), 10); // 10-byte budget
+        let err = slot.swap_to(&reg, "mobilenet_v2_100__fp32__b1").unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
+        rt.shutdown();
+    }
+
+    #[test]
+    fn swap_unknown_variant_fails() {
+        let rt = crate::runtime::RuntimeHandle::cpu().unwrap();
+        let reg = fake_registry();
+        let mut slot = ModelSlot::new(rt.clone(), u64::MAX);
+        assert!(slot.swap_to(&reg, "ghost__fp32__b1").is_err());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn infer_without_model_fails() {
+        let rt = crate::runtime::RuntimeHandle::cpu().unwrap();
+        let mut slot = ModelSlot::new(rt.clone(), u64::MAX);
+        assert!(slot.infer(&[0.0; 12], 2, 2).is_err());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn swap_is_idempotent_and_counts() {
+        // Use the tiny HLO under a fake-registry name by pointing the
+        // registry's artifacts dir at the temp dir with a matching filename.
+        let rt = crate::runtime::RuntimeHandle::cpu().unwrap();
+        let tiny = write_tiny_hlo();
+        let dir = tiny.parent().unwrap().to_path_buf();
+        let manifest = crate::model::test_fixtures::fake_manifest()
+            .replace("mobilenet_v2_100__fp32__b1.hlo.txt", "tiny.hlo.txt");
+        let reg = crate::model::Registry::from_manifest_json(&manifest, dir).unwrap();
+        let mut slot = ModelSlot::new(rt.clone(), u64::MAX);
+        slot.swap_to(&reg, "mobilenet_v2_100__fp32__b1").unwrap();
+        slot.swap_to(&reg, "mobilenet_v2_100__fp32__b1").unwrap();
+        assert_eq!(slot.swaps, 1);
+        assert!(slot.resident_bytes() > 0);
+        rt.shutdown();
+    }
+}

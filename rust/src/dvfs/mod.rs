@@ -1,0 +1,215 @@
+//! DVFS governors and the first-order thermal model.
+//!
+//! The paper's system parameter `g ∈ DVFS` selects the frequency-scaling
+//! policy; its run-time experiments (Fig 8) hinge on thermal throttling:
+//! sustained inference heats the active engine, the governor cuts the
+//! clock, latency rises, and the Runtime Manager migrates engines.  We model
+//! each engine's temperature with a leaky integrator ("thermal RC"):
+//!
+//! `T += heat_per_ms * busy_ms * freq^2 * gov_heat  -  cool_rate * (T - ambient) * dt`
+//!
+//! and map temperature to a frequency scale with a linear ramp below
+//! `min_freq_scale`-floored saturation — the classic step-down governor
+//! shape.
+
+use crate::device::ThermalSpec;
+
+pub const AMBIENT_C: f64 = 25.0;
+
+/// DVFS governor policies available on the target devices (Table I: S20 FE
+/// exposes energy_step / performance / schedutil).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Governor {
+    /// Pin to maximum frequency; fastest, heats fastest.
+    Performance,
+    /// Utilisation-driven; slight average clock loss, cooler.
+    Schedutil,
+    /// Step-wise energy saver; large clock loss, coolest.
+    EnergyStep,
+}
+
+impl Governor {
+    pub const ALL: [Governor; 3] =
+        [Governor::Performance, Governor::Schedutil, Governor::EnergyStep];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Governor::Performance => "performance",
+            Governor::Schedutil => "schedutil",
+            Governor::EnergyStep => "energy_step",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "performance" => Governor::Performance,
+            "schedutil" => Governor::Schedutil,
+            "energy_step" => Governor::EnergyStep,
+            other => anyhow::bail!("unknown governor `{other}`"),
+        })
+    }
+
+    /// Nominal frequency scale this governor sustains under inference load.
+    pub fn freq_scale(&self) -> f64 {
+        match self {
+            Governor::Performance => 1.0,
+            Governor::Schedutil => 0.94,
+            Governor::EnergyStep => 0.78,
+        }
+    }
+
+    /// Multiplier on heat generation (lower clocks burn less).
+    pub fn heat_factor(&self) -> f64 {
+        match self {
+            Governor::Performance => 1.0,
+            Governor::Schedutil => 0.85,
+            Governor::EnergyStep => 0.58,
+        }
+    }
+}
+
+/// Per-engine thermal state evolved on the shared (sim or real) timeline.
+#[derive(Debug, Clone)]
+pub struct ThermalModel {
+    spec: ThermalSpec,
+    temp_c: f64,
+    last_update_ms: f64,
+}
+
+impl ThermalModel {
+    pub fn new(spec: ThermalSpec) -> Self {
+        ThermalModel { spec, temp_c: AMBIENT_C, last_update_ms: 0.0 }
+    }
+
+    pub fn temp_c(&self) -> f64 {
+        self.temp_c
+    }
+
+    /// Account `busy_ms` of compute ending at `now_ms` under `gov`.
+    /// Cooling applies across the whole elapsed wall since the last call.
+    pub fn record_work(&mut self, now_ms: f64, busy_ms: f64, gov: Governor) {
+        let dt = (now_ms - self.last_update_ms).max(0.0);
+        self.last_update_ms = now_ms;
+        let f = gov.freq_scale();
+        self.temp_c += self.spec.heat_per_ms * busy_ms * f * f * gov.heat_factor();
+        self.cool(dt);
+    }
+
+    /// Pure cooling over `dt_ms` of idleness.
+    pub fn idle_until(&mut self, now_ms: f64) {
+        let dt = (now_ms - self.last_update_ms).max(0.0);
+        self.last_update_ms = now_ms;
+        self.cool(dt);
+    }
+
+    fn cool(&mut self, dt_ms: f64) {
+        // Exponential decay towards ambient (exact integration, so large
+        // simulated steps remain stable).
+        let k = (-self.spec.cool_rate * dt_ms).exp();
+        self.temp_c = AMBIENT_C + (self.temp_c - AMBIENT_C) * k;
+    }
+
+    /// Current frequency scale from throttling: 1.0 below the throttle
+    /// temperature, then a linear ramp down to `min_freq_scale` over 12 C.
+    pub fn freq_scale(&self) -> f64 {
+        let over = self.temp_c - self.spec.throttle_temp;
+        if over <= 0.0 {
+            1.0
+        } else {
+            let ramp = 1.0 - over / 12.0 * (1.0 - self.spec.min_freq_scale);
+            ramp.max(self.spec.min_freq_scale)
+        }
+    }
+
+    pub fn is_throttling(&self) -> bool {
+        self.temp_c > self.spec.throttle_temp
+    }
+
+    #[cfg(test)]
+    pub fn set_temp_for_test(&mut self, t: f64) {
+        self.temp_c = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ThermalSpec {
+        // equilibrium dT = heat/cool = 45 C over ambient -> crosses 55 C
+        ThermalSpec { heat_per_ms: 0.09, cool_rate: 0.002, throttle_temp: 55.0,
+                      min_freq_scale: 0.4 }
+    }
+
+    #[test]
+    fn starts_at_ambient_unthrottled() {
+        let m = ThermalModel::new(spec());
+        assert_eq!(m.temp_c(), AMBIENT_C);
+        assert_eq!(m.freq_scale(), 1.0);
+        assert!(!m.is_throttling());
+    }
+
+    #[test]
+    fn sustained_work_throttles() {
+        let mut m = ThermalModel::new(spec());
+        let mut t = 0.0;
+        for _ in 0..2000 {
+            t += 1.0;
+            m.record_work(t, 1.0, Governor::Performance);
+        }
+        assert!(m.is_throttling(), "temp {}", m.temp_c());
+        assert!(m.freq_scale() < 1.0);
+        assert!(m.freq_scale() >= 0.4);
+    }
+
+    #[test]
+    fn idle_cools_back_down() {
+        let mut m = ThermalModel::new(spec());
+        let mut t = 0.0;
+        for _ in 0..2000 {
+            t += 1.0;
+            m.record_work(t, 1.0, Governor::Performance);
+        }
+        let hot = m.temp_c();
+        m.idle_until(t + 5000.0);
+        assert!(m.temp_c() < hot);
+        m.idle_until(t + 100_000.0);
+        assert!((m.temp_c() - AMBIENT_C).abs() < 0.5);
+    }
+
+    #[test]
+    fn energy_step_heats_less() {
+        let mut perf = ThermalModel::new(spec());
+        let mut eco = ThermalModel::new(spec());
+        let mut t = 0.0;
+        for _ in 0..500 {
+            t += 1.0;
+            perf.record_work(t, 1.0, Governor::Performance);
+            eco.record_work(t, 1.0, Governor::EnergyStep);
+        }
+        assert!(eco.temp_c() < perf.temp_c());
+    }
+
+    #[test]
+    fn freq_scale_floors_at_min() {
+        let mut m = ThermalModel::new(spec());
+        m.set_temp_for_test(200.0);
+        assert_eq!(m.freq_scale(), 0.4);
+    }
+
+    #[test]
+    fn governor_names_roundtrip() {
+        for g in Governor::ALL {
+            assert_eq!(Governor::parse(g.name()).unwrap(), g);
+        }
+        assert!(Governor::parse("ondemand").is_err());
+    }
+
+    #[test]
+    fn governor_scale_ordering() {
+        assert!(Governor::Performance.freq_scale()
+                > Governor::Schedutil.freq_scale());
+        assert!(Governor::Schedutil.freq_scale()
+                > Governor::EnergyStep.freq_scale());
+    }
+}

@@ -1,0 +1,204 @@
+//! Fig 3: OODIn vs optimised status-quo (oSQ-CPU / -GPU / -NNAPI) across
+//! devices and models.
+//!
+//! Objective (paper §IV-B): minimise *average* latency with no accuracy
+//! drop allowed (ε per `EVAL_EPSILON`).  Baseline spaces:
+//!
+//! * oSQ-CPU — CPU only, XNNPACK-style INT8 allowed, threads tuned
+//!   (equivalent to the SOTA CPU design of [9], which is quantised).
+//! * oSQ-GPU — GPU only, fastest of FP16/INT8 (paper's definition).
+//! * oSQ-NNAPI — the vendor NPU, any precision.
+//!
+//! Reported: per-(device, model) speedup of OODIn over each baseline, plus
+//! per-device geometric means and maxima — the numbers the paper summarises
+//! as up to 4.14x / 4.29x / 93.46x (geo 1.73 / 1.74 / 5.9).
+
+use anyhow::Result;
+
+use crate::device::{profiles::profiles, EngineKind};
+use crate::experiments::{build_lut, EVAL_EPSILON};
+use crate::model::{Precision, Registry};
+use crate::optimizer::{Objective, Optimizer, SearchSpace};
+use crate::util::stats::{geomean, Percentile};
+
+/// One (device, family) comparison row.
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub device: String,
+    pub family: String,
+    pub oodin_ms: f64,
+    pub oodin_engine: EngineKind,
+    /// Baseline latency per engine; None = not deployable on that engine.
+    pub osq_cpu_ms: Option<f64>,
+    pub osq_gpu_ms: Option<f64>,
+    pub osq_nnapi_ms: Option<f64>,
+}
+
+impl Fig3Row {
+    pub fn speedup(&self, baseline: Option<f64>) -> Option<f64> {
+        baseline.map(|b| b / self.oodin_ms)
+    }
+}
+
+/// Aggregates per device.
+#[derive(Debug, Clone)]
+pub struct Fig3Summary {
+    pub device: String,
+    /// (geo-mean, max) speedup over each baseline.
+    pub vs_cpu: (f64, f64),
+    pub vs_gpu: (f64, f64),
+    pub vs_nnapi: Option<(f64, f64)>,
+}
+
+pub fn run(registry: &Registry) -> Result<(Vec<Fig3Row>, Vec<Fig3Summary>)> {
+    let objective = Objective::MinLatency {
+        stat: Percentile::Avg,
+        epsilon: EVAL_EPSILON,
+    };
+    let mut rows = Vec::new();
+    let mut summaries = Vec::new();
+
+    for device in profiles() {
+        let lut = build_lut(&device, registry)?;
+        let opt = Optimizer::new(&device, registry, &lut);
+
+        let mut dev_rows = Vec::new();
+        for family in registry.families() {
+            let free = SearchSpace::family(family);
+            let Ok(oodin) = opt.optimize(objective, &free) else {
+                continue; // family not deployable on this device at all
+            };
+
+            let base = |engines: &[EngineKind], precs: Option<&[Precision]>| {
+                let mut space = SearchSpace::family(family).with_engines(engines);
+                if let Some(p) = precs {
+                    space = space.with_precisions(p);
+                }
+                opt.optimize(objective, &space).ok().map(|e| e.latency_ms)
+            };
+
+            dev_rows.push(Fig3Row {
+                device: device.name.to_string(),
+                family: family.to_string(),
+                oodin_ms: oodin.latency_ms,
+                oodin_engine: oodin.design.hw.engine,
+                osq_cpu_ms: base(&[EngineKind::Cpu], None),
+                osq_gpu_ms: base(&[EngineKind::Gpu],
+                                 Some(&[Precision::Fp16, Precision::Int8])),
+                osq_nnapi_ms: base(&[EngineKind::Npu], None),
+            });
+        }
+
+        let agg = |pick: fn(&Fig3Row) -> Option<f64>| -> Option<(f64, f64)> {
+            let sp: Vec<f64> = dev_rows
+                .iter()
+                .filter_map(|r| r.speedup(pick(r)))
+                .collect();
+            if sp.is_empty() {
+                None
+            } else {
+                Some((geomean(&sp), sp.iter().copied().fold(f64::MIN, f64::max)))
+            }
+        };
+        summaries.push(Fig3Summary {
+            device: device.name.to_string(),
+            vs_cpu: agg(|r| r.osq_cpu_ms).unwrap_or((1.0, 1.0)),
+            vs_gpu: agg(|r| r.osq_gpu_ms).unwrap_or((1.0, 1.0)),
+            vs_nnapi: agg(|r| r.osq_nnapi_ms),
+        });
+        rows.extend(dev_rows);
+    }
+    Ok((rows, summaries))
+}
+
+pub fn print(registry: &Registry) -> Result<()> {
+    let (rows, summaries) = run(registry)?;
+    println!("FIG 3 — OODIn vs optimised status-quo designs");
+    println!("{:<14} {:<20} {:>9} {:<6} {:>9} {:>9} {:>9}",
+             "device", "model", "OODIn ms", "eng", "xCPU", "xGPU", "xNNAPI");
+    let fmt = |s: Option<f64>| s.map_or("   n/a".to_string(), |x| format!("{x:8.2}x"));
+    for r in &rows {
+        println!(
+            "{:<14} {:<20} {:>9.4} {:<6} {} {} {}",
+            r.device,
+            r.family,
+            r.oodin_ms,
+            r.oodin_engine.name(),
+            fmt(r.speedup(r.osq_cpu_ms)),
+            fmt(r.speedup(r.osq_gpu_ms)),
+            fmt(r.speedup(r.osq_nnapi_ms)),
+        );
+    }
+    println!("{}", crate::experiments::rule(80));
+    for s in &summaries {
+        println!(
+            "{:<14} geo/max over oSQ-CPU {:.2}x/{:.2}x  oSQ-GPU {:.2}x/{:.2}x  oSQ-NNAPI {}",
+            s.device,
+            s.vs_cpu.0, s.vs_cpu.1,
+            s.vs_gpu.0, s.vs_gpu.1,
+            s.vs_nnapi.map_or("n/a".into(),
+                              |(g, m)| format!("{g:.2}x/{m:.2}x")),
+        );
+    }
+    println!("(paper: up to 4.14x / 4.29x / 93.46x; geo 1.73 / 1.74 / 5.9)");
+    Ok(())
+}
+
+/// The "best engine varies per (model, device)" matrix (§IV-B).
+pub fn engine_matrix(registry: &Registry) -> Result<Vec<(String, String, EngineKind)>> {
+    let (rows, _) = run(registry)?;
+    Ok(rows
+        .into_iter()
+        .map(|r| (r.device, r.family, r.oodin_engine))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_fixtures::fake_registry;
+
+    #[test]
+    fn oodin_never_loses_to_a_baseline() {
+        let reg = fake_registry();
+        let (rows, _) = run(&reg).unwrap();
+        assert!(!rows.is_empty());
+        for r in &rows {
+            for b in [r.osq_cpu_ms, r.osq_gpu_ms, r.osq_nnapi_ms].into_iter().flatten() {
+                assert!(r.oodin_ms <= b + 1e-9,
+                        "{}/{}: oodin {} > baseline {}", r.device, r.family,
+                        r.oodin_ms, b);
+            }
+        }
+    }
+
+    #[test]
+    fn sony_has_no_nnapi_baseline() {
+        let reg = fake_registry();
+        let (rows, summaries) = run(&reg).unwrap();
+        assert!(rows.iter().filter(|r| r.device == "sony_c5")
+                .all(|r| r.osq_nnapi_ms.is_none()));
+        let sony = summaries.iter().find(|s| s.device == "sony_c5").unwrap();
+        assert!(sony.vs_nnapi.is_none());
+    }
+
+    #[test]
+    fn best_engine_varies_across_pairs() {
+        // §IV-B's core observation: no single engine wins everywhere.
+        let reg = fake_registry();
+        let m = engine_matrix(&reg).unwrap();
+        let engines: std::collections::BTreeSet<_> =
+            m.iter().map(|(_, _, e)| *e).collect();
+        assert!(engines.len() >= 2, "engine choice should vary: {m:?}");
+    }
+
+    #[test]
+    fn geomeans_at_least_one() {
+        let reg = fake_registry();
+        let (_, summaries) = run(&reg).unwrap();
+        for s in summaries {
+            assert!(s.vs_cpu.0 >= 1.0 - 1e-9);
+            assert!(s.vs_gpu.0 >= 1.0 - 1e-9);
+        }
+    }
+}

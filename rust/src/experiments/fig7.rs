@@ -1,0 +1,239 @@
+//! Fig 7: Runtime Manager behaviour under device load.
+//!
+//! MobileNetV2 1.4 on the Samsung A71, minimising p90 latency with ε = 0
+//! (the FP32 reference model — which places the initial design on the GPU,
+//! as in the paper).  External load on the active engine is ramped
+//! exponentially (the paper's own load model) and the Runtime Manager is
+//! expected to migrate engines to sustain latency; the figure compares the
+//! adaptive run against the statically-selected initial design.
+
+use anyhow::Result;
+
+use crate::app::{AppConfig, Application};
+use crate::device::EngineKind;
+use crate::manager::Policy;
+use crate::model::Registry;
+use crate::optimizer::{Objective, SearchSpace};
+use crate::perf;
+use crate::util::stats::{geomean, Percentile};
+
+pub const DEVICE: &str = "samsung_a71";
+pub const FAMILY: &str = "mobilenet_v2_140";
+
+/// A point on the Fig 7 curve.
+#[derive(Debug, Clone)]
+pub struct LoadPoint {
+    pub frame: u64,
+    pub load_step: f64,
+    pub adaptive_ms: f64,
+    pub static_ms: f64,
+    pub engine: EngineKind,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig7Result {
+    pub points: Vec<LoadPoint>,
+    pub switches: Vec<(u64, EngineKind, EngineKind)>,
+    /// Max and geo-mean latency reduction vs the static design after the
+    /// first load step (paper: up to 2.7x, geo 1.55x).
+    pub max_reduction: f64,
+    pub geo_reduction: f64,
+    pub initial_engine: EngineKind,
+}
+
+/// Load ramp: 0.5 steps on the initially-chosen engine, then on the engine
+/// the manager migrates to (generated adaptively below).
+fn policy() -> Policy {
+    Policy {
+        check_interval_ms: 100.0,
+        cooldown_ms: 400.0,
+        ..Policy::default()
+    }
+}
+
+pub fn run(registry: &Registry, real_exec: bool) -> Result<Fig7Result> {
+    let objective = Objective::MinLatency { stat: Percentile::P90, epsilon: 0.0 };
+    let mut cfg = AppConfig::new(DEVICE, objective, SearchSpace::family(FAMILY));
+    cfg.real_exec = real_exec;
+    cfg.lut_runs = 100;
+    cfg.policy = policy();
+    let mut app = Application::build(cfg, registry.clone())?;
+    let initial = app.current_design().clone();
+    let initial_engine = initial.hw.engine;
+
+    // The static design's latency is computed analytically under the same
+    // load trajectory (it never migrates).
+    let static_variant = registry.get(&initial.variant).unwrap().clone();
+
+    let mut points = Vec::new();
+    let mut switches = Vec::new();
+    let frames_per_step = 40u64;
+    let ramp = [0.0, 0.5, 1.0, 1.5, 2.0, 2.0, 2.0];
+    let mut load_on_initial;
+    let mut second_engine: Option<EngineKind> = None;
+    let mut load_on_second = 0.0;
+
+    for (step, &load) in ramp.iter().enumerate() {
+        // Apply this step's loads.
+        load_on_initial = load;
+        app.sim.set_load(initial_engine, load_on_initial);
+        if step >= 5 {
+            // Late phase: also load the engine the manager migrated to,
+            // forcing the second switch (paper: GPU -> NNAPI -> CPU).
+            if let Some(e2) = second_engine {
+                load_on_second += 1.0;
+                app.sim.set_load(e2, load_on_second);
+            }
+        }
+
+        let recs = app.run(frames_per_step, &[])?;
+        for r in &recs {
+            if let Some(sw) = &r.switch {
+                switches.push((r.seq, sw.from.hw.engine, sw.to.hw.engine));
+                if sw.from.hw.engine == initial_engine && second_engine.is_none() {
+                    second_engine = Some(sw.to.hw.engine);
+                }
+            }
+            // Static design under the same conditions.
+            let cond = perf::ExecConditions {
+                governor: initial.hw.governor,
+                threads: initial.hw.threads,
+                load_factor: load_on_initial,
+                thermal_freq_scale: 1.0,
+            };
+            let static_ms =
+                perf::latency_ms(&app.profile, initial_engine, &static_variant, &cond)
+                    .unwrap();
+            points.push(LoadPoint {
+                frame: r.seq,
+                load_step: load_on_initial,
+                adaptive_ms: r.latency_ms,
+                static_ms,
+                engine: r.engine,
+            });
+        }
+    }
+
+    let reductions: Vec<f64> = points
+        .iter()
+        .filter(|p| p.load_step > 0.0)
+        .map(|p| p.static_ms / p.adaptive_ms)
+        .collect();
+    Ok(Fig7Result {
+        max_reduction: reductions.iter().copied().fold(f64::MIN, f64::max),
+        geo_reduction: geomean(&reductions),
+        points,
+        switches,
+        initial_engine,
+    })
+}
+
+pub fn print(registry: &Registry, real_exec: bool) -> Result<()> {
+    let r = run(registry, real_exec)?;
+    println!("FIG 7 — Runtime Manager under device load ({FAMILY} on {DEVICE})");
+    println!("initial engine: {}", r.initial_engine.name());
+    // Down-sampled curve.
+    println!("{:>6} {:>6} {:>12} {:>12} {:<6}",
+             "frame", "load", "adaptive ms", "static ms", "engine");
+    for p in r.points.iter().step_by(10) {
+        println!("{:>6} {:>6.1} {:>12.4} {:>12.4} {:<6}",
+                 p.frame, p.load_step, p.adaptive_ms, p.static_ms,
+                 p.engine.name());
+    }
+    for (f, from, to) in &r.switches {
+        println!("  switch at frame {f}: {} -> {}", from.name(), to.name());
+    }
+    println!(
+        "latency reduction vs static design: up to {:.2}x ({:.2}x geo-mean)",
+        r.max_reduction, r.geo_reduction
+    );
+    println!("(paper: up to 2.7x, 1.55x geo-mean; GPU -> NNAPI -> CPU migrations)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_fixtures::fake_registry;
+
+    #[test]
+    fn adaptation_beats_static_under_load() {
+        // Uses the fake registry's mobilenet instead of the real one.
+        let reg = fake_registry();
+        // fake registry has no mobilenet_v2_140: run with 100.
+        let r = run_with_family(&reg, "mobilenet_v2_100").unwrap();
+        assert!(!r.switches.is_empty(), "no migrations under ramped load");
+        assert!(r.max_reduction > 1.3, "max reduction {}", r.max_reduction);
+        assert!(r.geo_reduction > 1.0, "geo {}", r.geo_reduction);
+    }
+
+    #[test]
+    fn engines_migrate_in_sequence() {
+        let reg = fake_registry();
+        let r = run_with_family(&reg, "mobilenet_v2_100").unwrap();
+        // Each switch leaves the currently-loaded engine.
+        for (i, (_, from, to)) in r.switches.iter().enumerate() {
+            assert_ne!(from, to);
+            if i == 0 {
+                assert_eq!(*from, r.initial_engine);
+            }
+        }
+    }
+
+    /// Test-only variant of `run` with a configurable family.
+    fn run_with_family(reg: &Registry, family: &str) -> Result<Fig7Result> {
+        let objective = Objective::MinLatency {
+            stat: Percentile::P90,
+            epsilon: 0.02,
+        };
+        let mut cfg = AppConfig::new(DEVICE, objective, SearchSpace::family(family));
+        cfg.real_exec = false;
+        cfg.lut_runs = 30;
+        cfg.policy = policy();
+        let mut app = Application::build(cfg, reg.clone())?;
+        let initial = app.current_design().clone();
+        let initial_engine = initial.hw.engine;
+        let static_variant = reg.get(&initial.variant).unwrap().clone();
+        let mut points = Vec::new();
+        let mut switches = Vec::new();
+        let mut second: Option<EngineKind> = None;
+        let mut l2 = 0.0;
+        for (step, &load) in [0.0, 1.0, 2.0, 2.5, 2.5].iter().enumerate() {
+            app.sim.set_load(initial_engine, load);
+            if step >= 4 {
+                if let Some(e2) = second {
+                    l2 += 1.5;
+                    app.sim.set_load(e2, l2);
+                }
+            }
+            let recs = app.run(40, &[])?;
+            for r in &recs {
+                if let Some(sw) = &r.switch {
+                    switches.push((r.seq, sw.from.hw.engine, sw.to.hw.engine));
+                    if sw.from.hw.engine == initial_engine && second.is_none() {
+                        second = Some(sw.to.hw.engine);
+                    }
+                }
+                let cond = perf::ExecConditions {
+                    governor: initial.hw.governor,
+                    threads: initial.hw.threads,
+                    load_factor: load,
+                    thermal_freq_scale: 1.0,
+                };
+                let static_ms = perf::latency_ms(
+                    &app.profile, initial_engine, &static_variant, &cond).unwrap();
+                points.push(LoadPoint {
+                    frame: r.seq, load_step: load,
+                    adaptive_ms: r.latency_ms, static_ms, engine: r.engine,
+                });
+            }
+        }
+        let reductions: Vec<f64> = points.iter().filter(|p| p.load_step > 0.0)
+            .map(|p| p.static_ms / p.adaptive_ms).collect();
+        Ok(Fig7Result {
+            max_reduction: reductions.iter().copied().fold(f64::MIN, f64::max),
+            geo_reduction: geomean(&reductions),
+            points, switches, initial_engine,
+        })
+    }
+}

@@ -1,0 +1,116 @@
+//! Table I (target platforms) and Table II (evaluated DNNs) reproductions.
+//!
+//! Table I is rendered from the device profiles (resource side is the
+//! paper's data verbatim).  Table II is *regenerated from measurements*:
+//! accuracy comes from the held-out evaluation the compile path ran, and
+//! params / size / FLOPs from the cost model — nothing is copied from the
+//! paper.
+
+use crate::device::profiles::profiles;
+use crate::mdcl;
+use crate::model::{Precision, Registry};
+
+/// One Table II row.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub paper_name: String,
+    pub family: String,
+    pub precision: Precision,
+    pub resolution: usize,
+    pub accuracy: f64,
+    pub accuracy_metric: String,
+    pub params: u64,
+    pub size_bytes: u64,
+    pub flops: u64,
+}
+
+/// Regenerate Table II (FP32 + INT8 rows, like the paper; FP16 accuracy is
+/// within noise of FP32's and is omitted from the table, as the paper does).
+pub fn table2(registry: &Registry) -> Vec<Table2Row> {
+    let mut rows: Vec<Table2Row> = registry
+        .variants()
+        .iter()
+        .filter(|v| v.batch == 1 && v.precision != Precision::Fp16)
+        .map(|v| Table2Row {
+            paper_name: v.paper_name.clone(),
+            family: v.family.clone(),
+            precision: v.precision,
+            resolution: v.resolution,
+            accuracy: v.accuracy,
+            accuracy_metric: v.accuracy_metric.clone(),
+            params: v.params,
+            size_bytes: v.size_bytes,
+            flops: v.flops,
+        })
+        .collect();
+    // Paper orders Table II by ascending accuracy.
+    rows.sort_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap());
+    rows
+}
+
+pub fn print_table2(registry: &Registry) {
+    println!("TABLE II — EVALUATED DEEP NEURAL NETWORKS (regenerated)");
+    println!("{:<20} {:<5} {:>5} {:>12} {:>9} {:>9} {:>8}",
+             "DNN", "Prec", "Res", "Top-1/mIoU", "Params", "Size", "FLOPs");
+    for r in table2(registry) {
+        println!(
+            "{:<20} {:<5} {:>5} {:>11.1}% {:>8.2}K {:>7.2}KB {:>7.1}M",
+            r.paper_name,
+            r.precision.name(),
+            format!("{0}x{0}", r.resolution),
+            r.accuracy * 100.0,
+            r.params as f64 / 1e3,
+            r.size_bytes as f64 / 1e3,
+            r.flops as f64 / 1e6,
+        );
+    }
+    println!("(scaled-down zoo: see DESIGN.md §Substitutions; orderings mirror the paper)");
+}
+
+/// Render Table I from the device profiles.
+pub fn print_table1() {
+    println!("TABLE I — TARGET PLATFORMS");
+    let devs = profiles();
+    println!("{:<12} {:<18} {:>5} {:>6} {:>4} {:>8} {:>9} {:>8}",
+             "Device", "Chipset", "Year", "Cores", "NPU", "RAM", "Android", "Battery");
+    for d in &devs {
+        println!(
+            "{:<12} {:<18} {:>5} {:>6} {:>4} {:>6}GB {:>4} (API{:>2}) {:>5}mAh",
+            d.name,
+            d.chipset,
+            d.year,
+            d.n_cores,
+            if d.has_engine(crate::device::EngineKind::Npu) { "yes" } else { "no" },
+            d.ram_gb,
+            d.os_version,
+            d.api_level,
+            d.battery_mah,
+        );
+    }
+    for d in &devs {
+        println!("  R({}) = {}", d.name, mdcl::format_resource_model(d));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_fixtures::fake_registry;
+
+    #[test]
+    fn table2_has_fp32_and_int8_rows_only() {
+        let reg = fake_registry();
+        let rows = table2(&reg);
+        assert_eq!(rows.len(), 8); // 4 families x 2 precisions
+        assert!(rows.iter().all(|r| r.precision != Precision::Fp16));
+    }
+
+    #[test]
+    fn table2_sorted_by_accuracy() {
+        let reg = fake_registry();
+        let rows = table2(&reg);
+        for w in rows.windows(2) {
+            assert!(w[0].accuracy <= w[1].accuracy);
+        }
+    }
+}

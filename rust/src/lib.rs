@@ -1,0 +1,62 @@
+//! # OODIn — Optimised On-Device Inference for Heterogeneous Mobile Devices
+//!
+//! A Rust + JAX + Pallas reproduction of *OODIn* (Venieris, Panopoulos,
+//! Venieris, 2021).  Python authors and AOT-compiles the model zoo once
+//! (`make artifacts`); this crate is the entire online system:
+//!
+//! * [`model`] — the model tuple `m = <task, w, s_m, s_in, a, p>` and the
+//!   variant registry loaded from `artifacts/manifest.json`.
+//! * [`device`] — the resource model `R = <CE, N_cores, C, DVFS, b, v_os,
+//!   v_camera>` with the three Table I phone profiles.
+//! * [`perf`] / [`dvfs`] / [`devicesim`] — the heterogeneous-hardware
+//!   substrate: roofline engine model, governors, thermal RC, contention.
+//! * [`runtime`] — the PJRT executor (HLO-text artifacts, CPU client).
+//! * [`measurements`] — Device Measurements sweeps -> look-up tables.
+//! * [`optimizer`] — System Optimisation: the MOO formulations of Eq. 3-5
+//!   and the enumerative LUT search.
+//! * [`manager`] — the Runtime Manager's adaptation state machine.
+//! * [`sil`] / [`dlacl`] / [`mdcl`] — the multi-layer mobile software
+//!   architecture (Fig 2).
+//! * [`app`] — the assembled Application; [`serving`] — the batched
+//!   request front-end; [`experiments`] — drivers regenerating every
+//!   table/figure of the paper's evaluation.
+
+pub mod app;
+pub mod config;
+pub mod device;
+pub mod devicesim;
+pub mod dlacl;
+pub mod dvfs;
+pub mod experiments;
+pub mod manager;
+pub mod mdcl;
+pub mod measurements;
+pub mod model;
+pub mod optimizer;
+pub mod perf;
+pub mod runtime;
+pub mod serving;
+pub mod sil;
+pub mod telemetry;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Load the model registry from the conventional artifacts location,
+/// walking up from the current directory so examples/benches work from any
+/// workspace subdirectory.
+pub fn load_registry() -> anyhow::Result<model::Registry> {
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let candidate = dir.join(ARTIFACTS_DIR).join("manifest.json");
+        if candidate.exists() {
+            return model::Registry::load(dir.join(ARTIFACTS_DIR));
+        }
+        if !dir.pop() {
+            anyhow::bail!(
+                "artifacts/manifest.json not found; run `make artifacts` first"
+            );
+        }
+    }
+}

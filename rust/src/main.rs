@@ -1,0 +1,224 @@
+//! OODIn command-line launcher.
+//!
+//! Subcommands (hand-rolled parser — no clap on this offline image):
+//!
+//! ```text
+//! oodin report  --table1 | --table2          Regenerate the paper's tables
+//! oodin exp     fig3|fig4|fig5|fig6|fig7|fig8 [--real]   Regenerate a figure
+//! oodin measure --device <name> [--out lut.json] [--host-calibrated]
+//! oodin optimize --use-case <file.json>      Run System Optimisation
+//! oodin resources                            Print the detected R per device
+//! oodin serve   --family <f> [--precision p] [--requests n]
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use oodin::config::UseCase;
+use oodin::experiments::{fig3, fig456, fig7, fig8, tables};
+use oodin::measurements::Measurer;
+use oodin::model::Precision;
+use oodin::optimizer::Optimizer;
+use oodin::runtime::RuntimeHandle;
+use oodin::serving::{Server, ServerConfig};
+use oodin::{load_registry, mdcl};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` and bare `--switch` flags.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let takes_value = i + 1 < argv.len() && !argv[i + 1].starts_with("--");
+                if takes_value {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".into());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "report" => cmd_report(&args),
+        "exp" => cmd_exp(&args),
+        "measure" => cmd_measure(&args),
+        "optimize" => cmd_optimize(&args),
+        "resources" => cmd_resources(),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `oodin help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "OODIn — optimised on-device inference (paper reproduction)\n\
+         \n\
+         usage: oodin <command> [flags]\n\
+         \n\
+         commands:\n\
+         \x20 report   --table1 | --table2       regenerate the paper's tables\n\
+         \x20 exp      fig3|fig4|fig5|fig6|fig7|fig8 [--real]  regenerate a figure\n\
+         \x20 measure  --device <name> [--out f] [--host-calibrated]  device sweep\n\
+         \x20 optimize --use-case <file.json>    run System Optimisation\n\
+         \x20 resources                           print resource model R per device\n\
+         \x20 serve    --family <f> [--precision p] [--requests n]  serving demo"
+    );
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    if args.has("table1") {
+        tables::print_table1();
+    }
+    if args.has("table2") || !args.has("table1") {
+        let registry = load_registry()?;
+        tables::print_table2(&registry);
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .context("exp needs a figure id (fig3..fig8)")?;
+    let registry = load_registry()?;
+    match which.as_str() {
+        "fig3" => fig3::print(&registry)?,
+        "fig4" => fig456::print(&registry, Some("sony_c5"))?,
+        "fig5" => fig456::print(&registry, Some("samsung_a71"))?,
+        "fig6" => fig456::print(&registry, Some("samsung_s20_fe"))?,
+        "fig456" | "all456" => fig456::print(&registry, None)?,
+        "fig7" => fig7::print(&registry, args.has("real"))?,
+        "fig8" => {
+            let n = args.flag("inferences").map_or(Ok(1200), |s| s.parse())?;
+            fig8::print(&registry, n)?
+        }
+        other => bail!("unknown experiment `{other}`"),
+    }
+    Ok(())
+}
+
+fn cmd_measure(args: &Args) -> Result<()> {
+    let device = mdcl::detect(args.flag("device").context("--device required")?)?;
+    let registry = load_registry()?;
+    let rt;
+    let mut measurer = Measurer::new(&device, &registry);
+    if args.has("host-calibrated") {
+        rt = RuntimeHandle::cpu()?;
+        measurer = measurer.host_calibrated(&rt);
+    }
+    let lut = measurer.measure_all()?;
+    println!("measured {} configurations on {}", lut.len(), device.name);
+    if let Some(out) = args.flag("out") {
+        lut.save(out)?;
+        println!("LUT written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let uc = UseCase::from_file(args.flag("use-case").context("--use-case required")?)?;
+    let device = mdcl::detect(&uc.device)?;
+    let registry = load_registry()?;
+    let lut = Measurer::new(&device, &registry).measure_all()?;
+    let opt = Optimizer::new(&device, &registry, &lut).with_camera_fps(uc.camera_fps);
+    let best = opt.optimize(uc.objective, &uc.space)?;
+    println!("use-case `{}` on {}:", uc.name, device.name);
+    println!("  σ = <{}, engine={}, threads={}, governor={}, r={}>",
+             best.design.variant,
+             best.design.hw.engine.name(),
+             best.design.hw.threads,
+             best.design.hw.governor.name(),
+             best.design.hw.recognition_rate);
+    println!("  T={:.4} ms  fps={:.1}  mem={:.2} MB  accuracy={:.2}%",
+             best.latency_ms, best.fps,
+             best.mem_bytes as f64 / 1e6, best.accuracy * 100.0);
+    Ok(())
+}
+
+fn cmd_resources() -> Result<()> {
+    for d in oodin::device::profiles::profiles() {
+        println!("{}", mdcl::format_resource_model(&d));
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let family = args.flag("family").unwrap_or("mobilenet_v2_100");
+    let precision = Precision::parse(args.flag("precision").unwrap_or("fp32"))?;
+    let n: usize = args.flag("requests").map_or(Ok(64), |s| s.parse())?;
+    let registry = load_registry()?;
+    let rt = RuntimeHandle::cpu()?;
+    let cfg = ServerConfig::for_family(&registry, family, precision)?;
+    println!("serving {family} ({}) with batch sizes {:?}",
+             precision.name(),
+             cfg.variants.iter().map(|(b, _)| *b).collect::<Vec<_>>());
+    let srv = Server::start(rt.clone(), &registry, cfg)?;
+
+    let res = registry
+        .find(family, precision, 1)
+        .context("variant missing")?
+        .resolution;
+    let mut cam = oodin::sil::SyntheticCamera::new(res, 30.0, 7);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let f = cam.capture(i as f64);
+            srv.submit(f.data, f.height, f.width).unwrap()
+        })
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{ok}/{n} ok in {secs:.3}s  ({:.1} req/s)", n as f64 / secs);
+    println!("telemetry: {}",
+             oodin::util::json::to_string(&srv.telemetry.snapshot()));
+    srv.stop();
+    rt.shutdown();
+    Ok(())
+}

@@ -1,0 +1,478 @@
+//! Runtime Manager (paper §III-B2 / §IV-C): run-time adaptation.
+//!
+//! The online component periodically transmits system statistics (per-engine
+//! load, temperatures/frequency scales, recent inference latency) to the
+//! Runtime Manager.  On a significant resource-availability change (the
+//! paper's example: 10% difference in GPU load) or a detected performance
+//! degradation, the manager re-searches the *device-resident look-up tables*
+//! — it stores nothing else (§III-D) — under latencies adjusted for current
+//! conditions, and issues a reconfiguration when an alternative design wins
+//! by more than a hysteresis margin.
+//!
+//! Detection timing (Fig 8: ~800 ms / ~1150 ms) falls out of the check
+//! interval × consecutive-confirmation policy rather than being hard-coded.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::device::{DeviceProfile, EngineKind};
+use crate::measurements::Lut;
+use crate::model::Registry;
+use crate::optimizer::{Design, Objective, Optimizer, SearchSpace};
+use crate::perf;
+use crate::util::stats::RollingWindow;
+
+/// Instantaneous per-engine conditions, as reported by MDCL middleware c.
+#[derive(Debug, Clone, Default)]
+pub struct Conditions {
+    /// External load factor per engine (latency multiplier 2^l).
+    pub loads: BTreeMap<EngineKind, f64>,
+    /// Thermal frequency scale per engine (1.0 = cool, <1 = throttling).
+    pub thermal: BTreeMap<EngineKind, f64>,
+}
+
+impl Conditions {
+    pub fn idle() -> Self {
+        Conditions::default()
+    }
+
+    pub fn load(&self, e: EngineKind) -> f64 {
+        self.loads.get(&e).copied().unwrap_or(0.0)
+    }
+
+    pub fn thermal_scale(&self, e: EngineKind) -> f64 {
+        self.thermal.get(&e).copied().unwrap_or(1.0)
+    }
+}
+
+/// Why the manager reconfigured.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reason {
+    /// Per-engine load shifted by more than the re-evaluation threshold.
+    LoadChange,
+    /// Sustained measured-latency degradation (thermal throttling path).
+    Degradation,
+}
+
+/// A reconfiguration decision.
+#[derive(Debug, Clone)]
+pub struct Switch {
+    pub from: Design,
+    pub to: Design,
+    /// Device-timeline instant of the decision (ms).
+    pub at_ms: f64,
+    /// Time from degradation onset to the decision (ms); 0 for pure
+    /// load-triggered switches evaluated on the same tick.
+    pub detection_ms: f64,
+    pub reason: Reason,
+}
+
+/// Tunable adaptation policy.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    /// Re-evaluate when any engine load moves by this much (paper: 0.1).
+    pub load_delta: f64,
+    /// Minimum predicted improvement ratio required to switch (hysteresis).
+    pub min_improvement: f64,
+    /// Milliseconds between condition checks.
+    pub check_interval_ms: f64,
+    /// Consecutive degraded checks before declaring Degradation.
+    pub confirmations: usize,
+    /// Measured/expected latency ratio counting as degraded.
+    pub violation_ratio: f64,
+    /// Quiet period after a switch (avoid flapping).
+    pub cooldown_ms: f64,
+}
+
+impl Default for Policy {
+    fn default() -> Self {
+        Policy {
+            load_delta: 0.1,
+            min_improvement: 1.10,
+            check_interval_ms: 250.0,
+            confirmations: 3,
+            violation_ratio: 1.25,
+            cooldown_ms: 1000.0,
+        }
+    }
+}
+
+/// The Runtime Manager.
+pub struct RuntimeManager {
+    device: Arc<DeviceProfile>,
+    registry: Arc<Registry>,
+    lut: Arc<Lut>,
+    objective: Objective,
+    space: SearchSpace,
+    policy: Policy,
+    current: Design,
+    // -- adaptation state --
+    last_loads: BTreeMap<EngineKind, f64>,
+    last_check_ms: f64,
+    last_switch_ms: f64,
+    violations: usize,
+    degradation_start_ms: Option<f64>,
+    window: RollingWindow,
+    /// History of all switches (experiment reporting).
+    pub switches: Vec<Switch>,
+}
+
+impl RuntimeManager {
+    pub fn new(device: Arc<DeviceProfile>, registry: Arc<Registry>, lut: Arc<Lut>,
+               objective: Objective, space: SearchSpace, initial: Design) -> Self {
+        RuntimeManager {
+            device,
+            registry,
+            lut,
+            objective,
+            space,
+            policy: Policy::default(),
+            current: initial,
+            last_loads: BTreeMap::new(),
+            last_check_ms: f64::NEG_INFINITY,
+            last_switch_ms: f64::NEG_INFINITY,
+            violations: 0,
+            degradation_start_ms: None,
+            window: RollingWindow::new(8),
+            switches: Vec::new(),
+        }
+    }
+
+    pub fn with_policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn current(&self) -> &Design {
+        &self.current
+    }
+
+    pub fn policy(&self) -> &Policy {
+        &self.policy
+    }
+
+    /// LUT latency of a design adjusted for current conditions:
+    /// `lut · 2^load / thermal_scale` on the design's engine.
+    pub fn adjusted_latency(&self, design: &Design, conds: &Conditions)
+                            -> Option<f64> {
+        let e = self.lut.get(&design.lut_key())?;
+        let k = design.hw.engine;
+        let adj = e.latency.metric(self.objective.stat())
+            * perf::contention(conds.load(k))
+            / conds.thermal_scale(k).max(1e-3);
+        Some(adj)
+    }
+
+    /// Best design under adjusted conditions (same enumerative search as the
+    /// offline optimiser, but over condition-scaled latencies).
+    pub fn best_under(&self, conds: &Conditions) -> Result<Design> {
+        let opt = Optimizer::new(&self.device, &self.registry, &self.lut);
+        let ranked = opt.search(self.objective, &self.space)?;
+        // Re-rank by adjusted latency; for accuracy-first objectives the
+        // offline ranking already encodes accuracy, so stable-sort by the
+        // adjusted latency penalty only within equal accuracy.
+        let mut best: Option<(f64, Design)> = None;
+        for cand in &ranked {
+            let Some(adj) = self.adjusted_latency(&cand.design, conds) else {
+                continue;
+            };
+            let key = match self.objective {
+                Objective::TargetLatency { t_target_ms, .. } => {
+                    if adj > t_target_ms {
+                        continue;
+                    }
+                    // maximise accuracy, tie-break on adjusted latency
+                    (-(cand.accuracy), adj)
+                }
+                Objective::MaxAccMaxFps { w_fps } => {
+                    let fps = 1000.0 / adj;
+                    (-(cand.accuracy + w_fps * fps / 1000.0), adj)
+                }
+                _ => (0.0, adj),
+            };
+            let metric = key.0 * 1e6 + key.1; // lexicographic-ish
+            if best.as_ref().map_or(true, |(m, _)| metric < *m) {
+                best = Some((metric, cand.design.clone()));
+            }
+        }
+        best.map(|(_, d)| d)
+            .ok_or_else(|| anyhow::anyhow!("no feasible design under conditions"))
+    }
+
+    /// Record one measured inference latency (ms) on the current design.
+    pub fn record_latency(&mut self, ms: f64) {
+        self.window.push(ms);
+    }
+
+    /// Periodic observation tick.  Returns a reconfiguration if one was
+    /// decided at this tick.
+    pub fn observe(&mut self, now_ms: f64, conds: &Conditions) -> Option<Switch> {
+        if now_ms - self.last_check_ms < self.policy.check_interval_ms {
+            return None;
+        }
+        self.last_check_ms = now_ms;
+        if now_ms - self.last_switch_ms < self.policy.cooldown_ms {
+            return None;
+        }
+
+        // Trigger 1: significant load change on any engine.
+        let load_changed = EngineKind::ALL.iter().any(|&k| {
+            let prev = self.last_loads.get(&k).copied().unwrap_or(0.0);
+            (conds.load(k) - prev).abs() >= self.policy.load_delta
+        });
+
+        // Trigger 2: sustained measured degradation vs LUT expectation
+        // (covers throttling even when temperature telemetry is missing).
+        let expected = self
+            .lut
+            .get(&self.current.lut_key())
+            .map(|e| e.latency.avg)
+            .unwrap_or(f64::INFINITY)
+            * perf::contention(conds.load(self.current.hw.engine));
+        let degraded_now = self
+            .window
+            .mean()
+            .map_or(false, |m| m > expected * self.policy.violation_ratio)
+            || conds.thermal_scale(self.current.hw.engine) < 0.95;
+        if degraded_now {
+            if self.degradation_start_ms.is_none() {
+                self.degradation_start_ms = Some(now_ms);
+            }
+            self.violations += 1;
+        } else {
+            self.violations = 0;
+            self.degradation_start_ms = None;
+        }
+        let degradation_confirmed = self.violations >= self.policy.confirmations;
+
+        if !load_changed && !degradation_confirmed {
+            return None;
+        }
+        if load_changed {
+            for k in EngineKind::ALL {
+                self.last_loads.insert(k, conds.load(k));
+            }
+        }
+
+        // When degradation was confirmed from measurements alone, infer the
+        // current engine's effective slowdown so the re-search sees it even
+        // without thermal telemetry (the paper's middleware-c warnings may
+        // lag the latency signal).
+        let mut eff = conds.clone();
+        if degradation_confirmed {
+            if let Some(mean) = self.window.mean() {
+                let lut_avg = self
+                    .lut
+                    .get(&self.current.lut_key())
+                    .map(|e| e.latency.avg)
+                    .unwrap_or(mean);
+                let inferred = (lut_avg / mean).clamp(1e-3, 1.0);
+                let k = self.current.hw.engine;
+                let cur = eff.thermal.get(&k).copied().unwrap_or(1.0);
+                eff.thermal.insert(k, cur.min(inferred));
+            }
+        }
+        let conds = &eff;
+        let best = self.best_under(conds).ok()?;
+        if best == self.current {
+            return None;
+        }
+        let cur_adj = self.adjusted_latency(&self.current, conds)?;
+        let best_adj = self.adjusted_latency(&best, conds)?;
+        if cur_adj / best_adj < self.policy.min_improvement {
+            return None;
+        }
+
+        let reason = if degradation_confirmed {
+            Reason::Degradation
+        } else {
+            Reason::LoadChange
+        };
+        let detection_ms = self
+            .degradation_start_ms
+            .map(|t0| now_ms - t0)
+            .unwrap_or(0.0);
+        let sw = Switch {
+            from: self.current.clone(),
+            to: best.clone(),
+            at_ms: now_ms,
+            detection_ms,
+            reason,
+        };
+        self.current = best;
+        self.last_switch_ms = now_ms;
+        self.violations = 0;
+        self.degradation_start_ms = None;
+        self.window.clear();
+        self.switches.push(sw.clone());
+        Some(sw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles::samsung_a71;
+    use crate::measurements::Measurer;
+    use crate::model::test_fixtures::fake_registry;
+    use crate::optimizer::Objective;
+    use crate::util::stats::Percentile;
+
+    fn mk_manager(dev: &DeviceProfile, reg: &Registry, lut: &Lut)
+                  -> RuntimeManager {
+        let obj = Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 };
+        let space = SearchSpace::family("mobilenet_v2_100");
+        let opt = Optimizer::new(dev, reg, lut);
+        let init = opt.optimize(obj, &space).unwrap().design;
+        RuntimeManager::new(Arc::new(dev.clone()), Arc::new(reg.clone()),
+                            Arc::new(lut.clone()), obj, space, init)
+    }
+
+    use crate::model::Registry;
+    use crate::device::DeviceProfile;
+
+    #[test]
+    fn no_switch_when_idle() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(30, 2).measure_all().unwrap();
+        let mut mgr = mk_manager(&dev, &reg, &lut);
+        let conds = Conditions::idle();
+        for t in 0..40 {
+            assert!(mgr.observe(t as f64 * 250.0, &conds).is_none());
+        }
+    }
+
+    #[test]
+    fn load_on_current_engine_triggers_switch() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(30, 2).measure_all().unwrap();
+        let mut mgr = mk_manager(&dev, &reg, &lut);
+        let initial_engine = mgr.current().hw.engine;
+
+        let mut conds = Conditions::idle();
+        conds.loads.insert(initial_engine, 3.0); // 8x slower
+        let mut switched = None;
+        for t in 0..20 {
+            if let Some(sw) = mgr.observe(2000.0 + t as f64 * 250.0, &conds) {
+                switched = Some(sw);
+                break;
+            }
+        }
+        let sw = switched.expect("manager should migrate off the loaded engine");
+        assert_eq!(sw.reason, Reason::LoadChange);
+        assert_ne!(sw.to.hw.engine, initial_engine);
+    }
+
+    #[test]
+    fn small_load_change_is_ignored() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(30, 2).measure_all().unwrap();
+        let mut mgr = mk_manager(&dev, &reg, &lut);
+        let e = mgr.current().hw.engine;
+        let mut conds = Conditions::idle();
+        conds.loads.insert(e, 0.05); // below the 0.1 threshold
+        for t in 0..20 {
+            assert!(mgr.observe(2000.0 + t as f64 * 250.0, &conds).is_none());
+        }
+    }
+
+    #[test]
+    fn thermal_throttle_triggers_degradation_switch_with_detection_time() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(30, 2).measure_all().unwrap();
+        let mut mgr = mk_manager(&dev, &reg, &lut);
+        let e = mgr.current().hw.engine;
+
+        // Cool for a while...
+        let idle = Conditions::idle();
+        for t in 0..8 {
+            assert!(mgr.observe(t as f64 * 250.0, &idle).is_none());
+        }
+        // ...then the engine throttles hard.
+        let mut hot = Conditions::idle();
+        hot.thermal.insert(e, 0.4);
+        let t_onset = 8.0 * 250.0;
+        let mut sw = None;
+        for i in 0..30 {
+            if let Some(s) = mgr.observe(t_onset + i as f64 * 250.0, &hot) {
+                sw = Some(s);
+                break;
+            }
+        }
+        let sw = sw.expect("throttling must trigger a migration");
+        assert_eq!(sw.reason, Reason::Degradation);
+        assert_ne!(sw.to.hw.engine, e);
+        // detection = confirmations x check interval (approx. the paper's
+        // sub-second detection)
+        assert!(sw.detection_ms >= 250.0 && sw.detection_ms <= 1500.0,
+                "detection {}", sw.detection_ms);
+    }
+
+    #[test]
+    fn cooldown_prevents_flapping() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(30, 2).measure_all().unwrap();
+        let mut mgr = mk_manager(&dev, &reg, &lut);
+        let e0 = mgr.current().hw.engine;
+        let mut conds = Conditions::idle();
+        conds.loads.insert(e0, 3.0);
+        let mut t = 1000.0;
+        let mut first = None;
+        for _ in 0..30 {
+            if let Some(s) = mgr.observe(t, &conds) {
+                first = Some((s, t));
+                break;
+            }
+            t += 250.0;
+        }
+        let (first, t_sw) = first.unwrap();
+        // Immediately load the new engine too: within the cooldown the
+        // manager must hold position.
+        conds.loads.insert(first.to.hw.engine, 3.0);
+        let within = mgr.observe(t_sw + 100.0, &conds);
+        assert!(within.is_none());
+    }
+
+    #[test]
+    fn degradation_via_measured_latency_only() {
+        // No thermal telemetry: repeated slow measurements alone must
+        // eventually trigger a Degradation switch.
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(30, 2).measure_all().unwrap();
+        let mut mgr = mk_manager(&dev, &reg, &lut);
+        let expected = mgr
+            .adjusted_latency(&mgr.current().clone(), &Conditions::idle())
+            .unwrap();
+        let conds = Conditions::idle();
+        let mut sw = None;
+        for i in 0..30 {
+            for _ in 0..4 {
+                mgr.record_latency(expected * 3.0);
+            }
+            if let Some(s) = mgr.observe(1000.0 + i as f64 * 250.0, &conds) {
+                sw = Some(s);
+                break;
+            }
+        }
+        let sw = sw.expect("measured degradation must trigger migration");
+        assert_eq!(sw.reason, Reason::Degradation);
+    }
+
+    #[test]
+    fn best_under_idle_equals_offline_choice() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(30, 2).measure_all().unwrap();
+        let mgr = mk_manager(&dev, &reg, &lut);
+        let best = mgr.best_under(&Conditions::idle()).unwrap();
+        assert_eq!(&best, mgr.current());
+    }
+}

@@ -1,0 +1,191 @@
+//! MDCL — Mobile Device Convergence Layer (paper §III-C2).
+//!
+//! The device-aware sublayer.  It identifies the resources of the target
+//! platform (populating the resource model R of Eq. 2) and hosts the three
+//! middlewares:
+//!
+//! * **Middleware a** — hardware information for SIL (camera capabilities,
+//!   screen, engine inventory) used to configure the app's basic blocks.
+//! * **Middleware b** — optional DNN-output-driven feature optimisation
+//!   (e.g. adapting camera parameters based on the last scene class).
+//! * **Middleware c** — system-statistics collection and transfer to the
+//!   Runtime Manager, including throttling warnings.
+
+use crate::device::{profiles, CameraSpec, DeviceProfile, EngineKind};
+use crate::devicesim::DeviceSim;
+use crate::manager::Conditions;
+
+/// Resource detection: populate R for a known target platform.  On a real
+/// build this would probe /proc, the NNAPI device list and the Camera2 API;
+/// here it resolves the Table I profile (DESIGN.md §Substitutions).
+pub fn detect(device_name: &str) -> anyhow::Result<DeviceProfile> {
+    profiles::by_name(device_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown device `{device_name}` (have: {})",
+            profiles::profiles().iter().map(|d| d.name).collect::<Vec<_>>().join(", ")
+        )
+    })
+}
+
+/// Render the populated resource model R like the paper's S20 FE example:
+/// `CE={CPU,GPU,NPU}, N_cores=8, C=6GB, DVFS={...}, b=4500mAh, v_os=11, ...`.
+pub fn format_resource_model(d: &DeviceProfile) -> String {
+    let ce: Vec<&str> = d.engines.iter().map(|e| match e.kind {
+        EngineKind::Cpu => "CPU",
+        EngineKind::Gpu => "GPU",
+        EngineKind::Npu => "NPU",
+    }).collect();
+    let govs: Vec<&str> = d.governors.iter().map(|g| g.name()).collect();
+    format!(
+        "CE={{{}}}, N_cores={}, C={}GB, DVFS={{{}}}, b={}mAh, v_os={}, v_camera={{{},{}x{}}}",
+        ce.join(","), d.n_cores, d.ram_gb, govs.join(","), d.battery_mah,
+        d.os_version, d.camera.api_level, d.camera.resolution.0,
+        d.camera.resolution.1
+    )
+}
+
+/// Middleware a: hardware info handed to SIL for app configuration.
+#[derive(Debug, Clone)]
+pub struct HardwareInfo {
+    pub camera: CameraSpec,
+    pub screen: (u32, u32),
+    pub engines: Vec<EngineKind>,
+}
+
+pub fn middleware_a(d: &DeviceProfile) -> HardwareInfo {
+    HardwareInfo {
+        camera: d.camera.clone(),
+        screen: d.camera.resolution,
+        engines: d.engines.iter().map(|e| e.kind).collect(),
+    }
+}
+
+/// Middleware b: DNN-output-driven feature tuning.  The hook receives the
+/// last inference's (class, confidence) and may emit feature adjustments —
+/// the paper's example is an AI Camera adapting brightness to the detected
+/// scene.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureAdjustment {
+    pub camera_exposure: f64,
+}
+
+pub fn middleware_b(last_class: usize, confidence: f32) -> Option<FeatureAdjustment> {
+    // Low-confidence scenes get a small exposure bump; "night-ish" classes
+    // (by convention the upper half of the label space) a larger one.
+    if confidence < 0.2 {
+        Some(FeatureAdjustment { camera_exposure: 1.2 })
+    } else if last_class >= 5 {
+        Some(FeatureAdjustment { camera_exposure: 1.1 })
+    } else {
+        None
+    }
+}
+
+/// A warning raised by middleware c alongside periodic statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Warning {
+    Throttling { engine: EngineKind, temp_c: f64 },
+    MemoryPressure { used: u64, budget: u64 },
+}
+
+/// One statistics report transmitted to the Runtime Manager.
+#[derive(Debug, Clone)]
+pub struct StatsReport {
+    pub at_ms: f64,
+    pub conditions: Conditions,
+    pub warnings: Vec<Warning>,
+}
+
+/// Middleware c: collect per-engine load/thermal statistics from the device
+/// and raise throttling warnings.
+pub fn middleware_c(sim: &DeviceSim, resident_bytes: u64) -> StatsReport {
+    let conditions = sim.conditions();
+    let mut warnings = Vec::new();
+    for e in &sim.profile.engines {
+        if conditions.thermal_scale(e.kind) < 1.0 {
+            warnings.push(Warning::Throttling {
+                engine: e.kind,
+                temp_c: sim.temp_c(e.kind).unwrap_or(f64::NAN),
+            });
+        }
+    }
+    if resident_bytes > sim.profile.mem_budget_bytes {
+        warnings.push(Warning::MemoryPressure {
+            used: resident_bytes,
+            budget: sim.profile.mem_budget_bytes,
+        });
+    }
+    StatsReport { at_ms: sim.clock.now_ms(), conditions, warnings }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles::samsung_s20_fe;
+    use crate::dvfs::Governor;
+    use crate::model::test_fixtures::fake_registry;
+    use crate::util::clock::Clock;
+
+    #[test]
+    fn detect_known_devices() {
+        assert!(detect("sony_c5").is_ok());
+        assert!(detect("samsung_a71").is_ok());
+        let err = detect("iphone_12").unwrap_err().to_string();
+        assert!(err.contains("samsung_s20_fe"), "{err}");
+    }
+
+    #[test]
+    fn resource_model_matches_paper_example() {
+        // Paper §III-C2: S20 FE -> CE={CPU,GPU,NPU}, N_cores=8, C=6GB,
+        // DVFS={energy_step,performance,schedutil}, b=4500mAh, v_os=11, FULL.
+        let s = format_resource_model(&samsung_s20_fe());
+        assert!(s.contains("CE={CPU,GPU,NPU}"), "{s}");
+        assert!(s.contains("N_cores=8"), "{s}");
+        assert!(s.contains("C=6GB"), "{s}");
+        assert!(s.contains("energy_step"), "{s}");
+        assert!(s.contains("b=4500mAh"), "{s}");
+        assert!(s.contains("v_os=11"), "{s}");
+        assert!(s.contains("FULL"), "{s}");
+    }
+
+    #[test]
+    fn middleware_a_exposes_engine_inventory() {
+        let info = middleware_a(&samsung_s20_fe());
+        assert_eq!(info.engines.len(), 3);
+        assert_eq!(info.camera.api_level, "FULL");
+    }
+
+    #[test]
+    fn middleware_b_rules() {
+        assert!(middleware_b(1, 0.9).is_none());
+        assert_eq!(middleware_b(7, 0.9),
+                   Some(FeatureAdjustment { camera_exposure: 1.1 }));
+        assert_eq!(middleware_b(1, 0.1),
+                   Some(FeatureAdjustment { camera_exposure: 1.2 }));
+    }
+
+    #[test]
+    fn middleware_c_raises_throttle_warning() {
+        let mut sim = DeviceSim::new(crate::device::profiles::samsung_a71(),
+                                     Clock::sim());
+        let reg = fake_registry();
+        let v = reg.get("inception_v3__fp32__b1").unwrap().clone();
+        // Cold: no warnings.
+        let cold = middleware_c(&sim, 0);
+        assert!(cold.warnings.is_empty());
+        // Hammer the NPU until it throttles.
+        for _ in 0..600 {
+            sim.run_inference(&v, EngineKind::Npu, 1, Governor::Performance).unwrap();
+        }
+        let hot = middleware_c(&sim, 0);
+        assert!(hot.warnings.iter().any(|w| matches!(
+            w, Warning::Throttling { engine: EngineKind::Npu, .. })));
+    }
+
+    #[test]
+    fn middleware_c_memory_pressure() {
+        let sim = DeviceSim::new(crate::device::profiles::sony_c5(), Clock::sim());
+        let r = middleware_c(&sim, u64::MAX);
+        assert!(r.warnings.iter().any(|w| matches!(w, Warning::MemoryPressure { .. })));
+    }
+}

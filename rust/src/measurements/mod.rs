@@ -1,0 +1,408 @@
+//! Device Measurements (paper Fig 1 / §III-D, offline component).
+//!
+//! Sweeps every valid system configuration `<ce, N_threads, g>` for every
+//! model variant on a target device, collects latency statistics (min / max
+//! / avg / median / n-th percentile) and peak memory, and organises the
+//! results into look-up tables (LUTs).  The System Optimisation module then
+//! performs a complete enumerative search over these LUTs, and the Runtime
+//! Manager keeps them resident for run-time re-tuning — exactly the paper's
+//! two consumers.
+//!
+//! Sampling: each configuration is "run" `runs` times (default 200 with 15
+//! warm-ups, matching §IV-A) by drawing from the perf model with
+//! deterministic log-normal noise.  With `MeasureMode::HostCalibrated`, the
+//! CPU-engine base latency is replaced by real PJRT host wall-clock
+//! measurements of the actual artifact, keeping the LUT anchored to real
+//! executions where the testbed has real hardware (the host CPU).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::device::{DeviceProfile, EngineKind};
+use crate::dvfs::Governor;
+use crate::model::Registry;
+use crate::perf::{self, ExecConditions};
+use crate::runtime::RuntimeHandle;
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+use crate::util::stats::LatencyStats;
+
+/// Default measurement protocol (paper §IV-A: 200 runs, 15 warm-ups).
+pub const DEFAULT_RUNS: usize = 200;
+pub const DEFAULT_WARMUP: usize = 15;
+
+/// How device measurements are produced.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MeasureMode {
+    /// Pure performance-model sampling (deterministic; default).
+    Model,
+    /// CPU-engine entries calibrated by really executing the artifact on
+    /// the host PJRT client; other engines remain model-driven.
+    HostCalibrated,
+}
+
+/// One measured system configuration of a variant on a device.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LutKey {
+    pub variant: String,
+    pub engine: EngineKind,
+    pub threads: usize,
+    pub governor: Governor,
+}
+
+impl LutKey {
+    pub fn id(&self) -> String {
+        format!("{}|{}|{}|{}", self.variant, self.engine.name(), self.threads,
+                self.governor.name())
+    }
+
+    pub fn parse(id: &str) -> Result<Self> {
+        let parts: Vec<&str> = id.split('|').collect();
+        if parts.len() != 4 {
+            anyhow::bail!("bad LUT key `{id}`");
+        }
+        Ok(LutKey {
+            variant: parts[0].to_string(),
+            engine: EngineKind::parse(parts[1])?,
+            threads: parts[2].parse().context("threads")?,
+            governor: Governor::parse(parts[3])?,
+        })
+    }
+}
+
+/// Measured statistics for one configuration.
+#[derive(Debug, Clone)]
+pub struct LutEntry {
+    pub latency: LatencyStats,
+    /// Peak working-set bytes (weights + DLACL buffers).
+    pub mem_bytes: u64,
+    /// Accuracy of the variant (copied from the manifest for locality:
+    /// the Runtime Manager keeps only the LUT at run time, §III-D).
+    pub accuracy: f64,
+}
+
+/// The device-specific look-up table.
+#[derive(Debug, Clone)]
+pub struct Lut {
+    pub device: String,
+    pub entries: BTreeMap<LutKey, LutEntry>,
+}
+
+impl Lut {
+    pub fn get(&self, key: &LutKey) -> Option<&LutEntry> {
+        self.entries.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All keys for a given variant (the optimizer's system dimension).
+    pub fn keys_for_variant<'a>(&'a self, variant: &'a str)
+                                -> impl Iterator<Item = &'a LutKey> {
+        self.entries.keys().filter(move |k| k.variant == variant)
+    }
+
+    // -- serialization ----------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        let entries: Vec<Value> = self
+            .entries
+            .iter()
+            .map(|(k, e)| {
+                json::obj(vec![
+                    ("key", json::s(&k.id())),
+                    ("latency", e.latency.to_json()),
+                    ("mem_bytes", json::num(e.mem_bytes as f64)),
+                    ("accuracy", json::num(e.accuracy)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("device", json::s(&self.device)),
+            ("entries", Value::Arr(entries)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for e in v.req("entries")?.as_arr()? {
+            let key = LutKey::parse(e.req("key")?.as_str()?)?;
+            entries.insert(key, LutEntry {
+                latency: LatencyStats::from_json(e.req("latency")?)?,
+                mem_bytes: e.req("mem_bytes")?.as_u64()?,
+                accuracy: e.req("accuracy")?.as_f64()?,
+            });
+        }
+        Ok(Lut { device: v.req("device")?.as_str()?.to_string(), entries })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), json::to_string(&self.to_json()))
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+}
+
+/// The Device Measurements module.
+pub struct Measurer<'a> {
+    pub device: &'a DeviceProfile,
+    pub registry: &'a Registry,
+    pub runs: usize,
+    pub warmup: usize,
+    /// Log-normal sigma of run-to-run jitter.
+    pub noise_sigma: f64,
+    pub mode: MeasureMode,
+    /// Required for `HostCalibrated`.
+    pub runtime: Option<&'a RuntimeHandle>,
+}
+
+impl<'a> Measurer<'a> {
+    pub fn new(device: &'a DeviceProfile, registry: &'a Registry) -> Self {
+        Measurer {
+            device,
+            registry,
+            runs: DEFAULT_RUNS,
+            warmup: DEFAULT_WARMUP,
+            noise_sigma: 0.04,
+            mode: MeasureMode::Model,
+            runtime: None,
+        }
+    }
+
+    pub fn with_runs(mut self, runs: usize, warmup: usize) -> Self {
+        self.runs = runs;
+        self.warmup = warmup;
+        self
+    }
+
+    pub fn host_calibrated(mut self, rt: &'a RuntimeHandle) -> Self {
+        self.mode = MeasureMode::HostCalibrated;
+        self.runtime = Some(rt);
+        self
+    }
+
+    /// Thread counts valid for an engine (offload engines take one entry).
+    fn threads_for(&self, kind: EngineKind) -> Vec<usize> {
+        match kind {
+            EngineKind::Cpu => self.device.thread_candidates(),
+            _ => vec![1],
+        }
+    }
+
+    /// Sweep every valid configuration of every batch-1 variant.
+    pub fn measure_all(&self) -> Result<Lut> {
+        let mut entries = BTreeMap::new();
+        for v in self.registry.variants().iter().filter(|v| v.batch == 1) {
+            for spec in &self.device.engines {
+                for &threads in &self.threads_for(spec.kind) {
+                    for &governor in &self.device.governors {
+                        let key = LutKey {
+                            variant: v.name.clone(),
+                            engine: spec.kind,
+                            threads,
+                            governor,
+                        };
+                        let entry = self.measure_one(&key)?;
+                        entries.insert(key, entry);
+                    }
+                }
+            }
+        }
+        Ok(Lut { device: self.device.name.to_string(), entries })
+    }
+
+    /// Measure a single configuration: warm-ups discarded, `runs` samples
+    /// summarised (the paper's 200-run protocol).
+    pub fn measure_one(&self, key: &LutKey) -> Result<LutEntry> {
+        let v = self
+            .registry
+            .get(&key.variant)
+            .ok_or_else(|| anyhow!("unknown variant `{}`", key.variant))?;
+        let cond = ExecConditions {
+            governor: key.governor,
+            threads: key.threads,
+            load_factor: 0.0,
+            thermal_freq_scale: 1.0,
+        };
+        let base = perf::latency_ms(self.device, key.engine, v, &cond)
+            .ok_or_else(|| anyhow!("device {} has no engine {}",
+                                   self.device.name, key.engine.name()))?;
+
+        let base = match (self.mode, key.engine) {
+            (MeasureMode::HostCalibrated, EngineKind::Cpu) => {
+                self.host_latency_ms(v)?.unwrap_or(base)
+            }
+            _ => base,
+        };
+
+        // Deterministic per-key noise stream.
+        let mut rng = Rng::new(seed_for(self.device.name, &key.id()));
+        let mut samples = Vec::with_capacity(self.runs);
+        for i in 0..(self.warmup + self.runs) {
+            // Warm-up runs are slower (cold caches / lazy driver init).
+            let cold = if i < self.warmup { 1.5 } else { 1.0 };
+            let s = base * cold * rng.lognormal(self.noise_sigma);
+            if i >= self.warmup {
+                samples.push(s);
+            }
+        }
+        Ok(LutEntry {
+            latency: LatencyStats::from_samples(&samples),
+            mem_bytes: v.mem_bytes(),
+            accuracy: v.accuracy,
+        })
+    }
+
+    /// Median real host latency of the artifact (few runs; used as the CPU
+    /// calibration anchor).
+    fn host_latency_ms(&self, v: &crate::model::ModelVariant)
+                       -> Result<Option<f64>> {
+        let Some(rt) = self.runtime else { return Ok(None) };
+        let path = self.registry.hlo_path(v);
+        if !path.exists() {
+            return Ok(None);
+        }
+        rt.load(&v.name, &path)?;
+        let input = vec![0.1f32; v.input_elems()];
+        let mut times = Vec::new();
+        for _ in 0..5 {
+            let out = rt.execute(&v.name, input.clone(), &v.input_shape)?;
+            times.push(out.host_ms);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(Some(times[times.len() / 2]))
+    }
+}
+
+fn seed_for(device: &str, key_id: &str) -> u64 {
+    // FNV-1a over device + key for stable per-configuration seeds.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in device.bytes().chain(key_id.bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles::{samsung_a71, sony_c5};
+    use crate::model::test_fixtures::fake_registry;
+
+    #[test]
+    fn sweep_covers_full_config_space() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(20, 2).measure_all().unwrap();
+        // 12 variants x (cpu:4 threads + gpu:1 + npu:1 = 6 engine-thread
+        // combos) x 3 governors
+        assert_eq!(lut.len(), 12 * 6 * 3);
+    }
+
+    #[test]
+    fn sony_has_no_npu_entries() {
+        let dev = sony_c5();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(10, 1).measure_all().unwrap();
+        assert!(lut.entries.keys().all(|k| k.engine != EngineKind::Npu));
+        // cpu:4 thread counts + gpu:1, 2 governors
+        assert_eq!(lut.len(), 12 * 5 * 2);
+    }
+
+    #[test]
+    fn measurements_are_deterministic() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let m = Measurer::new(&dev, &reg).with_runs(30, 3);
+        let key = LutKey {
+            variant: "mobilenet_v2_100__int8__b1".into(),
+            engine: EngineKind::Npu,
+            threads: 1,
+            governor: Governor::Performance,
+        };
+        let a = m.measure_one(&key).unwrap();
+        let b = m.measure_one(&key).unwrap();
+        assert_eq!(a.latency, b.latency);
+    }
+
+    #[test]
+    fn stats_are_ordered() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let m = Measurer::new(&dev, &reg).with_runs(100, 5);
+        let key = LutKey {
+            variant: "inception_v3__fp32__b1".into(),
+            engine: EngineKind::Gpu,
+            threads: 1,
+            governor: Governor::Schedutil,
+        };
+        let e = m.measure_one(&key).unwrap();
+        let l = &e.latency;
+        assert!(l.min <= l.median && l.median <= l.p90);
+        assert!(l.p90 <= l.p99 && l.p99 <= l.max);
+        assert_eq!(l.n, 100);
+    }
+
+    #[test]
+    fn lut_key_id_roundtrip() {
+        let key = LutKey {
+            variant: "deeplab_v3__fp16__b1".into(),
+            engine: EngineKind::Npu,
+            threads: 4,
+            governor: Governor::EnergyStep,
+        };
+        assert_eq!(LutKey::parse(&key.id()).unwrap(), key);
+        assert!(LutKey::parse("a|b").is_err());
+    }
+
+    #[test]
+    fn lut_json_roundtrip() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(10, 1).measure_all().unwrap();
+        let back = Lut::from_json(&lut.to_json()).unwrap();
+        assert_eq!(back.device, lut.device);
+        assert_eq!(back.len(), lut.len());
+        for (k, e) in &lut.entries {
+            let b = back.get(k).unwrap();
+            assert_eq!(b.latency, e.latency);
+            assert_eq!(b.mem_bytes, e.mem_bytes);
+        }
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let m = Measurer::new(&dev, &reg);
+        let key = LutKey {
+            variant: "ghost__fp32__b1".into(),
+            engine: EngineKind::Cpu,
+            threads: 1,
+            governor: Governor::Performance,
+        };
+        assert!(m.measure_one(&key).is_err());
+    }
+
+    #[test]
+    fn keys_for_variant_filters() {
+        let dev = sony_c5();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(5, 0).measure_all().unwrap();
+        let n = lut.keys_for_variant("mobilenet_v2_100__fp32__b1").count();
+        assert_eq!(n, 5 * 2); // 5 engine-thread combos x 2 governors
+    }
+}

@@ -1,0 +1,340 @@
+//! Model representation and registry (paper §III-B1).
+//!
+//! OODIn represents a model as the tuple `m = <task, w, s_m, s_in, a, p>` —
+//! task, workload in FLOPs, model size, input resolution, accuracy and
+//! numerical precision.  `ModelVariant` is that tuple plus the artifact
+//! bookkeeping (HLO path, I/O shapes, batch) the runtime needs.  The
+//! registry is loaded from `artifacts/manifest.json`, which the Python
+//! compile path emits with *measured* accuracy and *computed* FLOPs/size.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// The inference task of a model (classification / segmentation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    Classification,
+    Segmentation,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "cls" => Task::Classification,
+            "seg" => Task::Segmentation,
+            other => bail!("unknown task `{other}`"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Classification => "cls",
+            Task::Segmentation => "seg",
+        }
+    }
+}
+
+/// The transformation t ∈ T = {FP32, FP16, INT8} applied to the reference
+/// model (paper Eq. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    Fp32,
+    Fp16,
+    Int8,
+}
+
+impl Precision {
+    pub const ALL: [Precision; 3] = [Precision::Fp32, Precision::Fp16, Precision::Int8];
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fp32" => Precision::Fp32,
+            "fp16" => Precision::Fp16,
+            "int8" => Precision::Int8,
+            other => bail!("unknown precision `{other}`"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Fp16 => "fp16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        match self {
+            Precision::Fp32 => 32,
+            Precision::Fp16 => 16,
+            Precision::Int8 => 8,
+        }
+    }
+}
+
+/// One deployable model variant: the paper's tuple `m` + artifact metadata.
+#[derive(Debug, Clone)]
+pub struct ModelVariant {
+    /// `<family>__<precision>__b<batch>` — unique within a manifest.
+    pub name: String,
+    /// Architecture family (`mobilenet_v2_100`, ...).
+    pub family: String,
+    /// The Table II model this family stands in for.
+    pub paper_name: String,
+    pub task: Task,
+    /// t: the transformation that produced this variant.
+    pub precision: Precision,
+    /// s_in: input resolution (square).
+    pub resolution: usize,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    /// Number of trained parameters.
+    pub params: u64,
+    /// s_m: serialized weight bytes under this transformation.
+    pub size_bytes: u64,
+    /// w: FLOPs per batch-1 inference.
+    pub flops: u64,
+    /// a: measured accuracy (top-1 or mIoU) on the held-out split.
+    pub accuracy: f64,
+    pub accuracy_metric: String,
+    /// HLO text artifact, relative to the artifacts dir.
+    pub hlo: String,
+}
+
+impl ModelVariant {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let shape = |key: &str| -> Result<Vec<usize>> {
+            v.req(key)?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect()
+        };
+        Ok(ModelVariant {
+            name: v.req("name")?.as_str()?.to_string(),
+            family: v.req("family")?.as_str()?.to_string(),
+            paper_name: v.req("paper_name")?.as_str()?.to_string(),
+            task: Task::parse(v.req("task")?.as_str()?)?,
+            precision: Precision::parse(v.req("precision")?.as_str()?)?,
+            resolution: v.req("resolution")?.as_usize()?,
+            batch: v.req("batch")?.as_usize()?,
+            input_shape: shape("input_shape")?,
+            output_shape: shape("output_shape")?,
+            params: v.req("params")?.as_u64()?,
+            size_bytes: v.req("size_bytes")?.as_u64()?,
+            flops: v.req("flops")?.as_u64()?,
+            accuracy: v.req("accuracy")?.as_f64()?,
+            accuracy_metric: v.req("accuracy_metric")?.as_str()?.to_string(),
+            hlo: v.req("hlo")?.as_str()?.to_string(),
+        })
+    }
+
+    /// Input elements per inference (batch * H * W * C).
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_elems(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+
+    /// Estimated peak working-set bytes: weights + input + output + the
+    /// DLACL intermediate-buffer allowance (2x the larger of in/out, f32).
+    pub fn mem_bytes(&self) -> u64 {
+        let io = (self.input_elems().max(self.output_elems()) * 4) as u64;
+        self.size_bytes + (self.input_elems() * 4) as u64 + io * 2
+    }
+}
+
+/// The model space M: every variant generated from the reference models.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub artifacts_dir: PathBuf,
+    variants: Vec<ModelVariant>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Registry {
+    /// Load `<artifacts_dir>/manifest.json`.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_manifest_json(&text, dir)
+    }
+
+    pub fn from_manifest_json(text: &str, artifacts_dir: PathBuf) -> Result<Self> {
+        let root = json::parse(text).context("parsing manifest.json")?;
+        let models = root.req("models")?.as_arr()?;
+        let mut variants = Vec::with_capacity(models.len());
+        for m in models {
+            variants.push(ModelVariant::from_json(m)?);
+        }
+        let mut by_name = BTreeMap::new();
+        for (i, v) in variants.iter().enumerate() {
+            if by_name.insert(v.name.clone(), i).is_some() {
+                bail!("duplicate variant `{}` in manifest", v.name);
+            }
+        }
+        Ok(Registry { artifacts_dir, variants, by_name })
+    }
+
+    pub fn variants(&self) -> &[ModelVariant] {
+        &self.variants
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelVariant> {
+        self.by_name.get(name).map(|&i| &self.variants[i])
+    }
+
+    /// All batch-1 variants of a family (the optimizer's model dimension).
+    pub fn family_variants(&self, family: &str) -> Vec<&ModelVariant> {
+        self.variants
+            .iter()
+            .filter(|v| v.family == family && v.batch == 1)
+            .collect()
+    }
+
+    /// Distinct family names, in manifest order.
+    pub fn families(&self) -> Vec<&str> {
+        let mut seen = Vec::new();
+        for v in &self.variants {
+            if !seen.contains(&v.family.as_str()) {
+                seen.push(v.family.as_str());
+            }
+        }
+        seen
+    }
+
+    /// Absolute path of a variant's HLO artifact.
+    pub fn hlo_path(&self, v: &ModelVariant) -> PathBuf {
+        self.artifacts_dir.join(&v.hlo)
+    }
+
+    /// Look up a specific (family, precision, batch) variant.
+    pub fn find(&self, family: &str, precision: Precision, batch: usize)
+                -> Option<&ModelVariant> {
+        self.get(&format!("{family}__{}__b{batch}", precision.name()))
+    }
+}
+
+/// Synthetic-manifest fixtures shared by unit tests, integration tests and
+/// benches (compiled unconditionally: it has no test-only deps).
+pub mod test_fixtures {
+    use super::*;
+
+    /// A synthetic manifest used across the Rust test suite (no artifacts
+    /// needed).  Mirrors the real manifest's schema exactly.
+    pub fn fake_manifest() -> String {
+        let mut models = Vec::new();
+        let fams: [(&str, &str, &str, usize, u64); 4] = [
+            ("mobilenet_v2_100", "MobileNetV2 1.0", "cls", 24, 4_000_000),
+            ("efficientnet_lite4", "EfficientNetLite4", "cls", 32, 40_000_000),
+            ("inception_v3", "InceptionV3", "cls", 32, 90_000_000),
+            ("deeplab_v3", "DeepLabV3", "seg", 48, 50_000_000),
+        ];
+        for (fam, paper, task, res, flops) in fams {
+            for (prec, bits, acc) in
+                [("fp32", 32, 0.90), ("fp16", 16, 0.899), ("int8", 8, 0.885)]
+            {
+                let out = if task == "cls" {
+                    format!("[1,10]")
+                } else {
+                    format!("[1,{res},{res},5]")
+                };
+                models.push(format!(
+                    r#"{{"name":"{fam}__{prec}__b1","family":"{fam}","paper_name":"{paper}","task":"{task}","precision":"{prec}","bits":{bits},"resolution":{res},"batch":1,"input_shape":[1,{res},{res},3],"output_shape":{out},"params":100000,"size_bytes":{size},"flops":{flops},"accuracy":{acc},"accuracy_metric":"top1","hlo":"{fam}__{prec}__b1.hlo.txt"}}"#,
+                    size = 400_000 * bits as u64 / 32,
+                ));
+            }
+        }
+        format!(r#"{{"version":1,"models":[{}]}}"#, models.join(","))
+    }
+
+    pub fn fake_registry() -> Registry {
+        Registry::from_manifest_json(&fake_manifest(), PathBuf::from("/tmp/fake"))
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_fixtures::*;
+    use super::*;
+
+    #[test]
+    fn loads_fake_manifest() {
+        let r = fake_registry();
+        assert_eq!(r.variants().len(), 12);
+        assert_eq!(r.families().len(), 4);
+    }
+
+    #[test]
+    fn lookup_by_name_and_find() {
+        let r = fake_registry();
+        let v = r.get("mobilenet_v2_100__int8__b1").unwrap();
+        assert_eq!(v.precision, Precision::Int8);
+        assert_eq!(v.task, Task::Classification);
+        let same = r.find("mobilenet_v2_100", Precision::Int8, 1).unwrap();
+        assert_eq!(same.name, v.name);
+    }
+
+    #[test]
+    fn family_variants_are_batch1_only() {
+        let r = fake_registry();
+        let vs = r.family_variants("inception_v3");
+        assert_eq!(vs.len(), 3);
+        assert!(vs.iter().all(|v| v.batch == 1));
+    }
+
+    #[test]
+    fn precision_ordering_by_size() {
+        let r = fake_registry();
+        let f32v = r.find("deeplab_v3", Precision::Fp32, 1).unwrap();
+        let i8v = r.find("deeplab_v3", Precision::Int8, 1).unwrap();
+        assert!(i8v.size_bytes < f32v.size_bytes);
+        assert!(i8v.accuracy <= f32v.accuracy);
+    }
+
+    #[test]
+    fn mem_bytes_exceeds_weights() {
+        let r = fake_registry();
+        for v in r.variants() {
+            assert!(v.mem_bytes() > v.size_bytes);
+        }
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let m = fake_manifest();
+        let dup = m.replace(
+            r#""models":["#,
+            &format!(
+                r#""models":[{},"#,
+                json::parse(&m).unwrap().req("models").unwrap().as_arr().unwrap()[0]
+                    .clone_to_string()
+            ),
+        );
+        // helper: rebuild string of first model
+        assert!(Registry::from_manifest_json(&dup, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_task() {
+        assert!(Task::parse("detection").is_err());
+        assert!(Precision::parse("int4").is_err());
+    }
+
+    impl Value {
+        fn clone_to_string(&self) -> String {
+            json::to_string(self)
+        }
+    }
+    use crate::util::json::Value;
+}

@@ -1,0 +1,498 @@
+//! System Optimisation (paper §III-D): multi-objective selection of the
+//! design σ = <m_ref, t, hw> by complete enumerative search over the
+//! measured look-up tables.
+//!
+//! Performance metrics P = {T, fps, mem, a}.  The three representative
+//! use-cases of Eq. (3)–(5) are implemented exactly:
+//!
+//! * `MaxFps` — ε-constraint: max fps s.t. accuracy drop ≤ ε.
+//! * `TargetLatency` — ε-constraint: max accuracy s.t. T ≤ T_target.
+//! * `MaxAccMaxFps` — weighted sum of accuracy and fps, both normalised by
+//!   the max observed over the candidate space (non-dimensional objective).
+//!
+//! plus `MinLatency` (min T s.t. accuracy drop ≤ ε), the objective the
+//! paper's Fig 3–6 evaluations use.  `SearchSpace` restrictions express the
+//! baselines (oSQ-CPU/-GPU/-NNAPI restrict the engine set; PAW-D / MAW-D
+//! transplant configurations — see `experiments/`).
+
+use anyhow::{anyhow, Result};
+
+use crate::device::{DeviceProfile, EngineKind};
+use crate::dvfs::Governor;
+use crate::measurements::{Lut, LutKey};
+use crate::model::{Precision, Registry};
+use crate::perf;
+use crate::util::stats::Percentile;
+
+/// Recognition-rate candidates r (inference invocation frequency, §III-B1).
+pub const RECOGNITION_RATES: [f64; 3] = [1.0, 0.5, 0.25];
+
+/// The tunable system-level parameters hw = <ce, N_threads, g, r>.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwConfig {
+    pub engine: EngineKind,
+    pub threads: usize,
+    pub governor: Governor,
+    pub recognition_rate: f64,
+}
+
+/// A candidate design σ = <m_ref, t, hw>: the variant name encodes
+/// (m_ref, t) as `<family>__<precision>__b1`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Design {
+    pub variant: String,
+    pub hw: HwConfig,
+}
+
+impl Design {
+    pub fn lut_key(&self) -> LutKey {
+        LutKey {
+            variant: self.variant.clone(),
+            engine: self.hw.engine,
+            threads: self.hw.threads,
+            governor: self.hw.governor,
+        }
+    }
+}
+
+/// Metrics of a design evaluated against a LUT (the paper's P).
+#[derive(Debug, Clone)]
+pub struct Evaluated {
+    pub design: Design,
+    /// T: latency statistic targeted by the objective (ms).
+    pub latency_ms: f64,
+    /// Average latency (used for fps regardless of the targeted statistic).
+    pub avg_latency_ms: f64,
+    /// fps: effective processed frames/s at recognition rate r.
+    pub fps: f64,
+    /// mem: working-set bytes.
+    pub mem_bytes: u64,
+    /// a: accuracy of the variant.
+    pub accuracy: f64,
+    /// Objective score (higher is better, across all objectives).
+    pub score: f64,
+}
+
+/// The user-specified optimisation objective o_i = <P, max/min/val(stat)>.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Eq. (3): max fps s.t. a_ref − a ≤ ε.
+    MaxFps { epsilon: f64 },
+    /// Eq. (4): max accuracy s.t. T(stat) ≤ t_target_ms.
+    TargetLatency { t_target_ms: f64, stat: Percentile },
+    /// Eq. (5): max a/a_max + w_fps · fps/fps_max.
+    MaxAccMaxFps { w_fps: f64 },
+    /// Fig 3–6: min T(stat) s.t. a_ref − a ≤ ε.
+    MinLatency { stat: Percentile, epsilon: f64 },
+}
+
+impl Objective {
+    /// The latency statistic this objective reads from the LUT.
+    pub fn stat(&self) -> Percentile {
+        match self {
+            Objective::TargetLatency { stat, .. } => *stat,
+            Objective::MinLatency { stat, .. } => *stat,
+            _ => Percentile::Avg,
+        }
+    }
+}
+
+/// Restrictions on the candidate space (used for baselines and by the
+/// Runtime Manager to pin the model family the app was built around).
+#[derive(Debug, Clone, Default)]
+pub struct SearchSpace {
+    /// Restrict to one model family (the "user-supplied DNN" case).
+    pub family: Option<String>,
+    /// Restrict engines (oSQ-D baselines).
+    pub engines: Option<Vec<EngineKind>>,
+    /// Restrict transformations.
+    pub precisions: Option<Vec<Precision>>,
+    /// Fix the recognition rate.
+    pub recognition_rate: Option<f64>,
+}
+
+impl SearchSpace {
+    pub fn family(name: &str) -> Self {
+        SearchSpace { family: Some(name.to_string()), ..Default::default() }
+    }
+
+    pub fn with_engines(mut self, engines: &[EngineKind]) -> Self {
+        self.engines = Some(engines.to_vec());
+        self
+    }
+
+    pub fn with_precisions(mut self, precisions: &[Precision]) -> Self {
+        self.precisions = Some(precisions.to_vec());
+        self
+    }
+
+    fn admits(&self, reg: &Registry, key: &LutKey) -> bool {
+        let Some(v) = reg.get(&key.variant) else { return false };
+        if let Some(f) = &self.family {
+            if &v.family != f {
+                return false;
+            }
+        }
+        if let Some(es) = &self.engines {
+            if !es.contains(&key.engine) {
+                return false;
+            }
+        }
+        if let Some(ps) = &self.precisions {
+            if !ps.contains(&v.precision) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// The System Optimisation module.
+pub struct Optimizer<'a> {
+    pub device: &'a DeviceProfile,
+    pub registry: &'a Registry,
+    pub lut: &'a Lut,
+    /// Camera/source frame rate bounding effective fps.
+    pub camera_fps: f64,
+}
+
+impl<'a> Optimizer<'a> {
+    pub fn new(device: &'a DeviceProfile, registry: &'a Registry, lut: &'a Lut)
+               -> Self {
+        Optimizer { device, registry, lut, camera_fps: 30.0 }
+    }
+
+    pub fn with_camera_fps(mut self, fps: f64) -> Self {
+        self.camera_fps = fps;
+        self
+    }
+
+    /// Reference accuracy a_ref for a family: its FP32 (identity-
+    /// transformation) variant.
+    pub fn reference_accuracy(&self, family: &str) -> Option<f64> {
+        self.registry
+            .find(family, Precision::Fp32, 1)
+            .map(|v| v.accuracy)
+    }
+
+    /// Enumerate, filter (deployability + ε-constraints) and score every
+    /// candidate; returns them best-first.  This is the paper's "complete
+    /// enumerative search over the populated look-up tables".
+    pub fn search(&self, objective: Objective, space: &SearchSpace)
+                  -> Result<Vec<Evaluated>> {
+        let stat = objective.stat();
+        let rates: &[f64] = match space.recognition_rate {
+            Some(_) => &[0.0], // placeholder, replaced below
+            None => &RECOGNITION_RATES,
+        };
+
+        // Pass 1: collect feasible candidates with raw metrics.
+        let mut cands: Vec<Evaluated> = Vec::new();
+        for (key, entry) in &self.lut.entries {
+            if !space.admits(self.registry, key) {
+                continue;
+            }
+            let v = self.registry.get(&key.variant).unwrap();
+            // Deployability (paper Fig 4: overheating / >=5 s lag models
+            // are not deployable): memory budget + sustained-latency bound.
+            if !perf::fits_memory(self.device, v) {
+                continue;
+            }
+            if entry.latency.avg > self.device.max_deployable_latency_ms {
+                continue;
+            }
+            // ε-constraint on accuracy where the objective carries one.
+            let a_ref = self.reference_accuracy(&v.family).unwrap_or(v.accuracy);
+            let eps = match objective {
+                Objective::MaxFps { epsilon } => Some(epsilon),
+                Objective::MinLatency { epsilon, .. } => Some(epsilon),
+                _ => None,
+            };
+            if let Some(eps) = eps {
+                if a_ref - entry.accuracy > eps + 1e-12 {
+                    continue;
+                }
+            }
+            let latency = entry.latency.metric(stat);
+            for &r in rates {
+                let r = space.recognition_rate.unwrap_or(r);
+                let fps = (self.camera_fps * r).min(1000.0 / entry.latency.avg);
+                cands.push(Evaluated {
+                    design: Design {
+                        variant: key.variant.clone(),
+                        hw: HwConfig {
+                            engine: key.engine,
+                            threads: key.threads,
+                            governor: key.governor,
+                            recognition_rate: r,
+                        },
+                    },
+                    latency_ms: latency,
+                    avg_latency_ms: entry.latency.avg,
+                    fps,
+                    mem_bytes: entry.mem_bytes,
+                    accuracy: entry.accuracy,
+                    score: 0.0,
+                });
+            }
+        }
+        if cands.is_empty() {
+            return Err(anyhow!(
+                "no deployable design for objective {objective:?} on {}",
+                self.device.name
+            ));
+        }
+
+        // Pass 2: objective-specific constraint + normalised scoring.
+        let fps_max = cands.iter().map(|c| c.fps).fold(f64::MIN, f64::max);
+        let a_max = cands.iter().map(|c| c.accuracy).fold(f64::MIN, f64::max);
+        let mut scored: Vec<Evaluated> = cands
+            .into_iter()
+            .filter_map(|mut c| {
+                match objective {
+                    Objective::MaxFps { .. } => {
+                        // fps saturates at the camera rate; break ties
+                        // toward the lowest-latency (headroom) design.
+                        c.score = c.fps - 1e-6 * c.avg_latency_ms;
+                    }
+                    Objective::TargetLatency { t_target_ms, .. } => {
+                        if c.latency_ms > t_target_ms {
+                            return None;
+                        }
+                        // Accuracy first; fps breaks ties.
+                        c.score = c.accuracy + 1e-6 * c.fps;
+                    }
+                    Objective::MaxAccMaxFps { w_fps } => {
+                        c.score = c.accuracy / a_max + w_fps * c.fps / fps_max;
+                    }
+                    Objective::MinLatency { .. } => {
+                        c.score = -c.latency_ms;
+                    }
+                }
+                Some(c)
+            })
+            .collect();
+        if scored.is_empty() {
+            return Err(anyhow!("no design satisfies {objective:?}"));
+        }
+        scored.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        Ok(scored)
+    }
+
+    /// The single highest-performing design (paper: "yields the design σ
+    /// that optimises the given use-case").
+    pub fn optimize(&self, objective: Objective, space: &SearchSpace)
+                    -> Result<Evaluated> {
+        Ok(self.search(objective, space)?.remove(0))
+    }
+
+    /// Evaluate one *fixed* design under this device's LUT (used to score
+    /// transplanted PAW-D / MAW-D configurations and the Runtime Manager's
+    /// current design).
+    pub fn evaluate(&self, design: &Design, stat: Percentile) -> Result<Evaluated> {
+        let entry = self
+            .lut
+            .get(&design.lut_key())
+            .ok_or_else(|| anyhow!("design {:?} not in LUT (engine absent?)", design))?;
+        let r = design.hw.recognition_rate;
+        Ok(Evaluated {
+            design: design.clone(),
+            latency_ms: entry.latency.metric(stat),
+            avg_latency_ms: entry.latency.avg,
+            fps: (self.camera_fps * r).min(1000.0 / entry.latency.avg),
+            mem_bytes: entry.mem_bytes,
+            accuracy: entry.accuracy,
+            score: 0.0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles::{samsung_a71, samsung_s20_fe, sony_c5};
+    use crate::measurements::Measurer;
+    use crate::model::test_fixtures::fake_registry;
+    use crate::model::Registry;
+
+    fn setup(dev: &DeviceProfile, reg: &Registry) -> Lut {
+        Measurer::new(dev, reg).with_runs(40, 2).measure_all().unwrap()
+    }
+
+    #[test]
+    fn min_latency_beats_every_single_engine() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = setup(&dev, &reg);
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        let obj = Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.02 };
+        let space = SearchSpace::family("mobilenet_v2_100");
+        let best = opt.optimize(obj, &space).unwrap();
+        for kind in EngineKind::ALL {
+            if !dev.has_engine(kind) {
+                continue;
+            }
+            let restricted = space.clone().with_engines(&[kind]);
+            let b = opt.optimize(obj, &restricted).unwrap();
+            assert!(best.latency_ms <= b.latency_ms + 1e-9,
+                    "free search worse than {kind:?}-only");
+        }
+    }
+
+    #[test]
+    fn epsilon_zero_forbids_lossy_variants() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = setup(&dev, &reg);
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        // fake manifest: int8 accuracy 0.885 < fp32 0.90
+        let strict = Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.0 };
+        let best = opt.optimize(strict, &SearchSpace::family("mobilenet_v2_100")).unwrap();
+        let v = reg.get(&best.design.variant).unwrap();
+        assert_eq!(v.precision, Precision::Fp32);
+
+        let loose = Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 };
+        let best = opt.optimize(loose, &SearchSpace::family("mobilenet_v2_100")).unwrap();
+        let v = reg.get(&best.design.variant).unwrap();
+        assert_eq!(v.precision, Precision::Int8, "int8 is fastest when allowed");
+    }
+
+    #[test]
+    fn target_latency_maximises_accuracy_within_budget() {
+        let dev = samsung_s20_fe();
+        let reg = fake_registry();
+        let lut = setup(&dev, &reg);
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        let space = SearchSpace::default();
+        // Generous budget: must pick the most accurate deployable variant.
+        let relaxed = opt
+            .optimize(Objective::TargetLatency {
+                t_target_ms: 1e9,
+                stat: Percentile::Avg,
+            }, &space)
+            .unwrap();
+        let max_acc = relaxed.accuracy;
+        // Tight budget: accuracy can only drop.
+        let tight = opt
+            .optimize(Objective::TargetLatency {
+                t_target_ms: relaxed.latency_ms.max(0.05),
+                stat: Percentile::Avg,
+            }, &space);
+        if let Ok(t) = tight {
+            assert!(t.accuracy <= max_acc + 1e-12);
+            assert!(t.latency_ms <= relaxed.latency_ms.max(0.05) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn target_latency_infeasible_errors() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = setup(&dev, &reg);
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        let r = opt.optimize(Objective::TargetLatency {
+            t_target_ms: 1e-7,
+            stat: Percentile::Avg,
+        }, &SearchSpace::default());
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn max_fps_bounded_by_camera_and_rate() {
+        let dev = samsung_s20_fe();
+        let reg = fake_registry();
+        let lut = setup(&dev, &reg);
+        let opt = Optimizer::new(&dev, &reg, &lut).with_camera_fps(30.0);
+        let best = opt
+            .optimize(Objective::MaxFps { epsilon: 0.05 }, &SearchSpace::default())
+            .unwrap();
+        assert!(best.fps <= 30.0 + 1e-9);
+        assert_eq!(best.design.hw.recognition_rate, 1.0,
+                   "fast device: full-rate recognition is optimal");
+    }
+
+    #[test]
+    fn weighted_sum_tradeoff_monotone_in_weight() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = setup(&dev, &reg);
+        let opt = Optimizer::new(&dev, &reg, &lut).with_camera_fps(1000.0);
+        let acc_heavy = opt
+            .optimize(Objective::MaxAccMaxFps { w_fps: 0.05 }, &SearchSpace::default())
+            .unwrap();
+        let fps_heavy = opt
+            .optimize(Objective::MaxAccMaxFps { w_fps: 20.0 }, &SearchSpace::default())
+            .unwrap();
+        assert!(fps_heavy.fps >= acc_heavy.fps - 1e-9);
+        assert!(acc_heavy.accuracy >= fps_heavy.accuracy - 1e-9);
+    }
+
+    #[test]
+    fn sony_rejects_oversized_models() {
+        // Make one family exceed Sony's scaled memory budget.
+        let dev = sony_c5();
+        let manifest = crate::model::test_fixtures::fake_manifest()
+            .replace(r#""size_bytes":400000,"flops":90000000"#,
+                     r#""size_bytes":9000000,"flops":90000000"#);
+        let reg = Registry::from_manifest_json(&manifest, "/tmp/fake".into()).unwrap();
+        let lut = setup(&dev, &reg);
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        let r = opt.optimize(
+            Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.1 },
+            &SearchSpace::family("inception_v3"),
+        );
+        // fp32 inception no longer fits; int8/fp16 still deployable.
+        if let Ok(best) = r {
+            let v = reg.get(&best.design.variant).unwrap();
+            assert_ne!(v.precision, Precision::Fp32);
+        }
+    }
+
+    #[test]
+    fn evaluate_fixed_design_matches_lut() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = setup(&dev, &reg);
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        let best = opt
+            .optimize(Objective::MinLatency { stat: Percentile::P90, epsilon: 0.05 },
+                      &SearchSpace::family("deeplab_v3"))
+            .unwrap();
+        let re = opt.evaluate(&best.design, Percentile::P90).unwrap();
+        assert!((re.latency_ms - best.latency_ms).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evaluate_missing_engine_errors() {
+        let dev = sony_c5();
+        let reg = fake_registry();
+        let lut = setup(&dev, &reg);
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        let d = Design {
+            variant: "mobilenet_v2_100__fp32__b1".into(),
+            hw: HwConfig {
+                engine: EngineKind::Npu, // Sony has no NPU
+                threads: 1,
+                governor: Governor::Performance,
+                recognition_rate: 1.0,
+            },
+        };
+        assert!(opt.evaluate(&d, Percentile::Avg).is_err());
+    }
+
+    #[test]
+    fn search_returns_ranked_list() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = setup(&dev, &reg);
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        let all = opt
+            .search(Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 },
+                    &SearchSpace::family("mobilenet_v2_100"))
+            .unwrap();
+        assert!(all.len() > 10);
+        for w in all.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Engine performance model: roofline latency + Amdahl thread scaling +
+//! DVFS/thermal frequency scaling + external-load contention.
+//!
+//! `latency_ms` is the single source of truth for *simulated device*
+//! latency.  The CPU path of the real system also executes the artifact on
+//! the host PJRT client (for numerics and host wall-clock), but every LUT,
+//! objective and adaptation decision is driven by this model so the three
+//! Table I device classes can coexist on one testbed (DESIGN.md
+//! §Substitutions).
+//!
+//!   latency = dispatch + max(compute, memory) · contention(load)
+//!   compute = flops·batch / (peak·prec_mult·threads(Amdahl)·freq)
+//!   memory  = (weights + activations) / bandwidth
+//!
+//! `freq = governor_scale · thermal_scale`; `contention = 2^load` — the
+//! paper's own Fig 7 load model ("exponentially scaling the inference
+//! latency by a load factor").
+
+use crate::device::{DeviceProfile, EngineKind, EngineSpec};
+use crate::dvfs::Governor;
+use crate::model::{ModelVariant, Precision};
+
+/// Instantaneous execution conditions seen by one engine.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecConditions {
+    pub governor: Governor,
+    /// CPU threads (ignored by offload engines).
+    pub threads: usize,
+    /// External contention l: latency multiplier 2^l (0 = idle).
+    pub load_factor: f64,
+    /// Thermal throttling scale from `dvfs::ThermalModel` (1.0 = cool).
+    pub thermal_freq_scale: f64,
+}
+
+impl ExecConditions {
+    /// Idle, cool, performance governor — the offline-measurement baseline.
+    pub fn nominal(threads: usize) -> Self {
+        ExecConditions {
+            governor: Governor::Performance,
+            threads,
+            load_factor: 0.0,
+            thermal_freq_scale: 1.0,
+        }
+    }
+}
+
+/// Amdahl's-law thread speedup for the CPU engine.
+pub fn thread_speedup(spec: &EngineSpec, threads: usize) -> f64 {
+    if spec.kind != EngineKind::Cpu || threads <= 1 {
+        return 1.0;
+    }
+    let p = spec.parallel_frac;
+    1.0 / ((1.0 - p) + p / threads as f64)
+}
+
+/// Precision multiplier on engine peak throughput.
+pub fn precision_mult(spec: &EngineSpec, p: Precision) -> f64 {
+    match p {
+        Precision::Fp32 => 1.0,
+        Precision::Fp16 => spec.fp16_mult,
+        Precision::Int8 => spec.int8_mult,
+    }
+}
+
+/// Effective GFLOP/s under the given conditions (before contention).
+pub fn effective_gflops(dev: &DeviceProfile, spec: &EngineSpec,
+                        v: &ModelVariant, cond: &ExecConditions) -> f64 {
+    let threads = cond.threads.min(dev.n_cores).max(1);
+    // A CPU engine's stated peak assumes all cores: scale to 1 thread first.
+    let base = if spec.kind == EngineKind::Cpu {
+        let all = thread_speedup(spec, dev.n_cores);
+        spec.peak_gflops_fp32 / all * thread_speedup(spec, threads)
+    } else {
+        spec.peak_gflops_fp32
+    };
+    let penalty = if spec.kind == EngineKind::Npu {
+        dev.npu_family_penalty(&v.family)
+    } else {
+        1.0
+    };
+    base * precision_mult(spec, v.precision)
+        * cond.governor.freq_scale()
+        * cond.thermal_freq_scale
+        / penalty
+}
+
+/// Compute-bound time (ms) for one execution (whole batch).
+pub fn compute_ms(dev: &DeviceProfile, spec: &EngineSpec, v: &ModelVariant,
+                  cond: &ExecConditions) -> f64 {
+    let gflops = effective_gflops(dev, spec, v, cond);
+    (v.flops as f64 * v.batch as f64) / (gflops * 1e6)
+}
+
+/// Memory-bound time (ms): weights streamed once + activations per batch.
+pub fn memory_ms(spec: &EngineSpec, v: &ModelVariant) -> f64 {
+    let act = (v.input_elems() + v.output_elems()) * 4;
+    let bytes = v.size_bytes as f64 + act as f64;
+    bytes / (spec.mem_bw_gbps * 1e6)
+}
+
+/// Contention multiplier for an external load factor l (paper Fig 7).
+pub fn contention(load_factor: f64) -> f64 {
+    2f64.powf(load_factor.max(0.0))
+}
+
+/// Roofline latency (ms) of one inference execution.
+pub fn latency_ms(dev: &DeviceProfile, kind: EngineKind, v: &ModelVariant,
+                  cond: &ExecConditions) -> Option<f64> {
+    let spec = dev.engine(kind)?;
+    let roof = compute_ms(dev, spec, v, cond).max(memory_ms(spec, v));
+    Some((spec.dispatch_ms + roof) * contention(cond.load_factor))
+}
+
+/// Throughput (frames/s) of back-to-back executions at this latency.
+pub fn fps_from_latency(latency_ms: f64, batch: usize) -> f64 {
+    batch as f64 * 1000.0 / latency_ms
+}
+
+/// True when the variant fits the device memory budget (DLACL buffers
+/// included) — the paper's undeployable-model filter, part 1.
+pub fn fits_memory(dev: &DeviceProfile, v: &ModelVariant) -> bool {
+    v.mem_bytes() <= dev.mem_budget_bytes
+}
+
+/// Busy time the engine accrues for thermal accounting (compute only:
+/// dispatch is host-side).
+pub fn busy_ms(dev: &DeviceProfile, kind: EngineKind, v: &ModelVariant,
+               cond: &ExecConditions) -> Option<f64> {
+    let spec = dev.engine(kind)?;
+    Some(compute_ms(dev, spec, v, cond).max(memory_ms(spec, v)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles::{by_name, samsung_a71, samsung_s20_fe, sony_c5};
+    use crate::model::test_fixtures::fake_registry;
+
+    fn mk(name: &str) -> ModelVariant {
+        fake_registry().get(name).unwrap().clone()
+    }
+
+    #[test]
+    fn amdahl_monotone_and_bounded() {
+        let d = samsung_a71();
+        let cpu = d.engine(EngineKind::Cpu).unwrap();
+        let mut prev = 0.0;
+        for t in [1, 2, 4, 8] {
+            let s = thread_speedup(cpu, t);
+            assert!(s > prev);
+            prev = s;
+        }
+        assert!(prev < 8.0); // sub-linear
+        let gpu = d.engine(EngineKind::Gpu).unwrap();
+        assert_eq!(thread_speedup(gpu, 8), 1.0); // offload engines ignore threads
+    }
+
+    #[test]
+    fn more_threads_lower_cpu_latency() {
+        let d = sony_c5();
+        let v = mk("inception_v3__fp32__b1");
+        let l1 = latency_ms(&d, EngineKind::Cpu, &v, &ExecConditions::nominal(1)).unwrap();
+        let l8 = latency_ms(&d, EngineKind::Cpu, &v, &ExecConditions::nominal(8)).unwrap();
+        assert!(l8 < l1);
+    }
+
+    #[test]
+    fn int8_faster_than_fp32_on_cpu() {
+        let d = samsung_a71();
+        let f = mk("mobilenet_v2_100__fp32__b1");
+        let q = mk("mobilenet_v2_100__int8__b1");
+        let c = ExecConditions::nominal(4);
+        assert!(latency_ms(&d, EngineKind::Cpu, &q, &c).unwrap()
+                < latency_ms(&d, EngineKind::Cpu, &f, &c).unwrap());
+    }
+
+    #[test]
+    fn missing_engine_returns_none() {
+        let d = sony_c5();
+        let v = mk("mobilenet_v2_100__fp32__b1");
+        assert!(latency_ms(&d, EngineKind::Npu, &v, &ExecConditions::nominal(1)).is_none());
+    }
+
+    #[test]
+    fn paper_phenomenon_a71_npu_wins_mobilenet_int8() {
+        // §IV-B: OODIn selects NNAPI for MobileNetV2 1.0 INT8 on A71.
+        let d = samsung_a71();
+        let v = mk("mobilenet_v2_100__int8__b1");
+        let c = ExecConditions::nominal(d.n_cores);
+        let npu = latency_ms(&d, EngineKind::Npu, &v, &c).unwrap();
+        let cpu = latency_ms(&d, EngineKind::Cpu, &v, &c).unwrap();
+        let gpu = latency_ms(&d, EngineKind::Gpu, &v, &c).unwrap();
+        assert!(npu < cpu && npu < gpu, "npu {npu} cpu {cpu} gpu {gpu}");
+    }
+
+    #[test]
+    fn paper_phenomenon_s20_cpu_wins_small_int8() {
+        // §IV-B: "On S20, the CPU is often the highest performing engine."
+        let d = samsung_s20_fe();
+        let v = mk("mobilenet_v2_100__int8__b1");
+        let c = ExecConditions::nominal(d.n_cores);
+        let cpu = latency_ms(&d, EngineKind::Cpu, &v, &c).unwrap();
+        let npu = latency_ms(&d, EngineKind::Npu, &v, &c).unwrap();
+        assert!(cpu < npu, "cpu {cpu} npu {npu}");
+    }
+
+    #[test]
+    fn paper_phenomenon_nnapi_catastrophic_on_deeplab_s20() {
+        // Fig 3: up to ~93x speedup over oSQ-NNAPI on a pathological pair.
+        let d = samsung_s20_fe();
+        let v = mk("deeplab_v3__fp32__b1");
+        let c = ExecConditions::nominal(d.n_cores);
+        let npu = latency_ms(&d, EngineKind::Npu, &v, &c).unwrap();
+        let best = EngineKind::ALL
+            .iter()
+            .filter_map(|&k| latency_ms(&d, k, &v, &c))
+            .fold(f64::INFINITY, f64::min);
+        assert!(npu / best > 20.0, "ratio {}", npu / best);
+    }
+
+    #[test]
+    fn gpu_wins_big_fp32_models() {
+        let d = samsung_s20_fe();
+        let v = mk("inception_v3__fp32__b1");
+        let c = ExecConditions::nominal(d.n_cores);
+        let gpu = latency_ms(&d, EngineKind::Gpu, &v, &c).unwrap();
+        let cpu = latency_ms(&d, EngineKind::Cpu, &v, &c).unwrap();
+        assert!(gpu < cpu, "gpu {gpu} cpu {cpu}");
+    }
+
+    #[test]
+    fn contention_doubles_per_unit_load() {
+        assert_eq!(contention(0.0), 1.0);
+        assert_eq!(contention(1.0), 2.0);
+        assert_eq!(contention(2.0), 4.0);
+        assert_eq!(contention(-3.0), 1.0); // clamped
+    }
+
+    #[test]
+    fn governor_slows_execution() {
+        let d = samsung_a71();
+        let v = mk("inception_v3__fp32__b1");
+        let mut c = ExecConditions::nominal(8);
+        let perf = latency_ms(&d, EngineKind::Cpu, &v, &c).unwrap();
+        c.governor = Governor::EnergyStep;
+        let eco = latency_ms(&d, EngineKind::Cpu, &v, &c).unwrap();
+        assert!(eco > perf * 1.2);
+    }
+
+    #[test]
+    fn thermal_scale_slows_execution() {
+        let d = samsung_a71();
+        let v = mk("inception_v3__fp32__b1");
+        let mut c = ExecConditions::nominal(8);
+        let cool = latency_ms(&d, EngineKind::Npu, &v, &c).unwrap();
+        c.thermal_freq_scale = 0.5;
+        let hot = latency_ms(&d, EngineKind::Npu, &v, &c).unwrap();
+        assert!(hot > cool * 1.5);
+    }
+
+    #[test]
+    fn memory_budget_filter() {
+        let sony = by_name("sony_c5").unwrap();
+        let small = mk("mobilenet_v2_100__int8__b1");
+        assert!(fits_memory(&sony, &small));
+        let mut big = mk("inception_v3__fp32__b1");
+        big.size_bytes = 100 * 1024 * 1024;
+        assert!(!fits_memory(&sony, &big));
+    }
+
+    #[test]
+    fn fps_inverse_of_latency() {
+        assert_eq!(fps_from_latency(10.0, 1), 100.0);
+        assert_eq!(fps_from_latency(10.0, 8), 800.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Camera interface (SIL block).  On Android this wraps Camera2; here it is
+//! a synthetic source producing the same class-conditional ring-blob scenes
+//! as the Python validation dataset (`compile/datasets.py`), with known
+//! ground-truth labels — so the end-to-end examples can measure real on-line
+//! accuracy through the full stack.
+
+use crate::util::rng::Rng;
+
+pub const NUM_CLASSES: usize = 10;
+
+/// One captured RGB frame (HWC, f32).
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub data: Vec<f32>,
+    pub height: usize,
+    pub width: usize,
+    /// Ground-truth class of the synthetic scene.
+    pub label: usize,
+    /// Capture timestamp on the device timeline (ms).
+    pub ts_ms: f64,
+    pub seq: u64,
+}
+
+/// Synthetic Camera2 stand-in: frames at a fixed rate and resolution.
+pub struct SyntheticCamera {
+    pub fps: f64,
+    pub resolution: usize,
+    pub exposure: f64,
+    noise: f64,
+    rng: Rng,
+    seq: u64,
+}
+
+impl SyntheticCamera {
+    pub fn new(resolution: usize, fps: f64, seed: u64) -> Self {
+        SyntheticCamera { fps, resolution, exposure: 1.0, noise: 0.95,
+                          rng: Rng::new(seed), seq: 0 }
+    }
+
+    /// Frame interval on the device timeline.
+    pub fn frame_interval_ms(&self) -> f64 {
+        1000.0 / self.fps
+    }
+
+    /// Capture the next frame at device-time `ts_ms` (mirrors
+    /// `datasets.make_classification`: class blob on a ring + distractors +
+    /// noise).
+    pub fn capture(&mut self, ts_ms: f64) -> Frame {
+        let res = self.resolution;
+        let label = self.rng.below(NUM_CLASSES);
+        let mut data = vec![0.0f32; res * res * 3];
+        let c0 = res as f64 / 2.0;
+        let r0 = res as f64 * 0.30;
+        let ang = 2.0 * std::f64::consts::PI * label as f64 / NUM_CLASSES as f64;
+        let cy = c0 + r0 * ang.sin() + self.rng.normal() * res as f64 * 0.03;
+        let cx = c0 + r0 * ang.cos() + self.rng.normal() * res as f64 * 0.03;
+        let dom = label % 3;
+        self.add_blob(&mut data, cy, cx, res as f64 * 0.10, dom, 1.5);
+
+        // Two distractor blobs with random colours.
+        for _ in 0..2 {
+            let dy = self.rng.range(0.0, res as f64);
+            let dx = self.rng.range(0.0, res as f64);
+            let col = [self.rng.range(0.4, 1.2), self.rng.range(0.4, 1.2),
+                       self.rng.range(0.4, 1.2)];
+            self.add_coloured_blob(&mut data, dy, dx, res as f64 * 0.09, col);
+        }
+        // Sensor noise scaled by exposure.
+        for v in data.iter_mut() {
+            *v = (*v + self.rng.normal() as f32 * self.noise as f32)
+                * self.exposure as f32;
+        }
+        self.seq += 1;
+        Frame { data, height: res, width: res, label, ts_ms, seq: self.seq }
+    }
+
+    fn add_blob(&mut self, data: &mut [f32], cy: f64, cx: f64, sigma: f64,
+                dom: usize, amp: f32) {
+        let res = self.resolution;
+        for y in 0..res {
+            for x in 0..res {
+                let d2 = (y as f64 - cy).powi(2) + (x as f64 - cx).powi(2);
+                let g = (-d2 / (2.0 * sigma * sigma)).exp() as f32;
+                let i = (y * res + x) * 3;
+                data[i + dom] += amp * g;
+                data[i + (dom + 1) % 3] += 0.5 * g;
+            }
+        }
+    }
+
+    fn add_coloured_blob(&mut self, data: &mut [f32], cy: f64, cx: f64,
+                         sigma: f64, col: [f64; 3]) {
+        let res = self.resolution;
+        for y in 0..res {
+            for x in 0..res {
+                let d2 = (y as f64 - cy).powi(2) + (x as f64 - cx).powi(2);
+                let g = (-d2 / (2.0 * sigma * sigma)).exp();
+                let i = (y * res + x) * 3;
+                for c in 0..3 {
+                    data[i + c] += (g * col[c]) as f32;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_have_right_shape_and_labels() {
+        let mut cam = SyntheticCamera::new(24, 30.0, 7);
+        for t in 0..20 {
+            let f = cam.capture(t as f64 * 33.3);
+            assert_eq!(f.data.len(), 24 * 24 * 3);
+            assert!(f.label < NUM_CLASSES);
+            assert_eq!(f.seq, t + 1);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = SyntheticCamera::new(16, 30.0, 3);
+        let mut b = SyntheticCamera::new(16, 30.0, 3);
+        let fa = a.capture(0.0);
+        let fb = b.capture(0.0);
+        assert_eq!(fa.data, fb.data);
+        assert_eq!(fa.label, fb.label);
+    }
+
+    #[test]
+    fn signal_is_at_class_ring_position() {
+        // With noise suppressed, the class blob beats the opposite point.
+        let mut cam = SyntheticCamera::new(24, 30.0, 11);
+        cam.noise = 0.0;
+        let mut hits = 0;
+        let n = 100;
+        for _ in 0..n {
+            let f = cam.capture(0.0);
+            let res = 24usize;
+            let ang = 2.0 * std::f64::consts::PI * f.label as f64 / 10.0;
+            let cy = (12.0 + 7.2 * ang.sin()).round() as usize;
+            let cx = (12.0 + 7.2 * ang.cos()).round() as usize;
+            let sum = |y: usize, x: usize| -> f32 {
+                let i = (y.min(23) * res + x.min(23)) * 3;
+                f.data[i] + f.data[i + 1] + f.data[i + 2]
+            };
+            if sum(cy, cx) > sum(23 - cy, 23 - cx) {
+                hits += 1;
+            }
+        }
+        assert!(hits > 75, "{hits}/{n}");
+    }
+
+    #[test]
+    fn exposure_scales_frame() {
+        let mut cam = SyntheticCamera::new(8, 30.0, 5);
+        cam.noise = 0.0;
+        cam.exposure = 2.0;
+        let f2 = cam.capture(0.0);
+        let mut cam1 = SyntheticCamera::new(8, 30.0, 5);
+        cam1.noise = 0.0;
+        let f1 = cam1.capture(0.0);
+        assert_eq!(f1.label, f2.label);
+        for (a, b) in f1.data.iter().zip(&f2.data) {
+            assert!((a * 2.0 - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn frame_interval() {
+        let cam = SyntheticCamera::new(8, 25.0, 0);
+        assert!((cam.frame_interval_ms() - 40.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,152 @@
+//! Local gallery database (SIL block).  On Android this is the Room
+//! library; here an append-only JSON-lines store with the same role:
+//! persisting the app's labelled photos (paper's smart-Gallery example).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One stored record: a processed frame's label and metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GalleryEntry {
+    pub ts_ms: f64,
+    pub seq: u64,
+    pub predicted_class: usize,
+    pub confidence: f64,
+    pub model: String,
+    pub engine: String,
+}
+
+impl GalleryEntry {
+    fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("ts_ms", json::num(self.ts_ms)),
+            ("seq", json::num(self.seq as f64)),
+            ("class", json::num(self.predicted_class as f64)),
+            ("confidence", json::num(self.confidence)),
+            ("model", json::s(&self.model)),
+            ("engine", json::s(&self.engine)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(GalleryEntry {
+            ts_ms: v.req("ts_ms")?.as_f64()?,
+            seq: v.req("seq")?.as_u64()?,
+            predicted_class: v.req("class")?.as_usize()?,
+            confidence: v.req("confidence")?.as_f64()?,
+            model: v.req("model")?.as_str()?.to_string(),
+            engine: v.req("engine")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Append-only gallery store.
+pub struct Gallery {
+    path: PathBuf,
+    file: std::fs::File,
+    count: u64,
+}
+
+impl Gallery {
+    /// Open (or create) the gallery at `path`.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let count = if path.exists() {
+            std::fs::read_to_string(&path)?.lines().count() as u64
+        } else {
+            0
+        };
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening gallery {}", path.display()))?;
+        Ok(Gallery { path, file, count })
+    }
+
+    /// In-memory-ish gallery for tests/benches (unique temp file).
+    pub fn temp(tag: &str) -> Result<Self> {
+        let path = std::env::temp_dir()
+            .join("oodin_gallery")
+            .join(format!("{tag}_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        Self::open(path)
+    }
+
+    pub fn add(&mut self, entry: &GalleryEntry) -> Result<()> {
+        let mut line = json::to_string(&entry.to_json());
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        self.count += 1;
+        Ok(())
+    }
+
+    pub fn len(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Read back all entries (oldest first).
+    pub fn load_all(&mut self) -> Result<Vec<GalleryEntry>> {
+        self.file.flush()?;
+        let text = std::fs::read_to_string(&self.path)?;
+        text.lines()
+            .map(|l| GalleryEntry::from_json(&json::parse(l)?))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(seq: u64, class: usize) -> GalleryEntry {
+        GalleryEntry {
+            ts_ms: seq as f64 * 33.3,
+            seq,
+            predicted_class: class,
+            confidence: 0.75,
+            model: "mobilenet_v2_100__int8__b1".into(),
+            engine: "nnapi".into(),
+        }
+    }
+
+    #[test]
+    fn add_and_load_roundtrip() {
+        let mut g = Gallery::temp("roundtrip").unwrap();
+        assert!(g.is_empty());
+        for i in 0..5 {
+            g.add(&entry(i, i as usize % 3)).unwrap();
+        }
+        assert_eq!(g.len(), 5);
+        let back = g.load_all().unwrap();
+        assert_eq!(back.len(), 5);
+        assert_eq!(back[3], entry(3, 0));
+    }
+
+    #[test]
+    fn reopen_preserves_count() {
+        let path = std::env::temp_dir()
+            .join("oodin_gallery")
+            .join(format!("reopen_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut g = Gallery::open(&path).unwrap();
+            g.add(&entry(1, 1)).unwrap();
+            g.add(&entry(2, 2)).unwrap();
+        }
+        let g2 = Gallery::open(&path).unwrap();
+        assert_eq!(g2.len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,15 @@
+//! SIL — Service-Independent Layer (paper §III-C1).
+//!
+//! App-level building blocks, agnostic of both the DNN and the device: a
+//! camera interface for real-time visual apps, a local gallery database for
+//! processed results, and UI components.  Packaged under one API so smart
+//! applications compose them (paper: camera + local DB + UI under a unified
+//! API).
+
+pub mod camera;
+pub mod gallery;
+pub mod ui;
+
+pub use camera::{Frame, SyntheticCamera};
+pub use gallery::{Gallery, GalleryEntry};
+pub use ui::UiStub;

@@ -1,0 +1,56 @@
+//! UI components (SIL block).  A terminal-backed stand-in for the app's
+//! view layer: status lines, a live config banner and an event log that the
+//! examples render.  Kept behind the same narrow interface an Android view
+//! model would implement.
+
+/// Collected UI state.
+#[derive(Debug, Default)]
+pub struct UiStub {
+    pub banner: String,
+    pub events: Vec<String>,
+    /// When true, events are echoed to stdout as they arrive.
+    pub live: bool,
+}
+
+impl UiStub {
+    pub fn new(live: bool) -> Self {
+        UiStub { live, ..Default::default() }
+    }
+
+    /// Show the active configuration (model + engine + params).
+    pub fn set_banner(&mut self, text: impl Into<String>) {
+        self.banner = text.into();
+        if self.live {
+            println!("[ui] {}", self.banner);
+        }
+    }
+
+    /// Append an event line (switch notifications, warnings, results).
+    pub fn event(&mut self, text: impl Into<String>) {
+        let text = text.into();
+        if self.live {
+            println!("[ui] {text}");
+        }
+        self.events.push(text);
+    }
+
+    pub fn last_event(&self) -> Option<&str> {
+        self.events.last().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_events_and_banner() {
+        let mut ui = UiStub::new(false);
+        ui.set_banner("mobilenet @ nnapi");
+        ui.event("switched to gpu");
+        ui.event("frame 10 done");
+        assert_eq!(ui.banner, "mobilenet @ nnapi");
+        assert_eq!(ui.events.len(), 2);
+        assert_eq!(ui.last_event(), Some("frame 10 done"));
+    }
+}

@@ -1,0 +1,127 @@
+//! Lightweight metrics registry: counters + latency samples, thread-safe,
+//! serialisable to JSON for the experiment reports.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::{self, Value};
+use crate::util::stats::LatencyStats;
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    samples: BTreeMap<String, Vec<f64>>,
+}
+
+/// Shared metrics sink.
+#[derive(Default)]
+pub struct Telemetry {
+    inner: Mutex<Inner>,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Telemetry::default()
+    }
+
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Record one latency sample (ms) under `name`.
+    pub fn record(&self, name: &str, ms: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.samples.entry(name.to_string()).or_default().push(ms);
+    }
+
+    pub fn stats(&self, name: &str) -> Option<LatencyStats> {
+        let g = self.inner.lock().unwrap();
+        g.samples.get(name).filter(|s| !s.is_empty())
+            .map(|s| LatencyStats::from_samples(s))
+    }
+
+    pub fn snapshot(&self) -> Value {
+        let g = self.inner.lock().unwrap();
+        let counters: Vec<(String, Value)> = g
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), json::num(*v as f64)))
+            .collect();
+        let stats: Vec<(String, Value)> = g
+            .samples
+            .iter()
+            .filter(|(_, s)| !s.is_empty())
+            .map(|(k, s)| (k.clone(), LatencyStats::from_samples(s).to_json()))
+            .collect();
+        Value::Obj(vec![
+            ("counters".to_string(), Value::Obj(counters)),
+            ("latency".to_string(), Value::Obj(stats)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let t = Telemetry::new();
+        t.incr("req");
+        t.add("req", 4);
+        assert_eq!(t.counter("req"), 5);
+        assert_eq!(t.counter("missing"), 0);
+    }
+
+    #[test]
+    fn samples_summarise() {
+        let t = Telemetry::new();
+        for x in [1.0, 2.0, 3.0] {
+            t.record("lat", x);
+        }
+        let s = t.stats("lat").unwrap();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.avg, 2.0);
+        assert!(t.stats("none").is_none());
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let t = std::sync::Arc::new(Telemetry::new());
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        t.incr("n");
+                        t.record("x", 1.0);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(t.counter("n"), 800);
+        assert_eq!(t.stats("x").unwrap().n, 800);
+    }
+
+    #[test]
+    fn snapshot_is_json() {
+        let t = Telemetry::new();
+        t.incr("a");
+        t.record("l", 5.0);
+        let v = t.snapshot();
+        assert!(v.get("counters").unwrap().get("a").is_some());
+        assert!(v.get("latency").unwrap().get("l").is_some());
+    }
+}

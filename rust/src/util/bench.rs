@@ -1,0 +1,86 @@
+//! Minimal benchmark harness (no criterion on this offline image).
+//!
+//! Measures wall-clock over warm-up + measured iterations and prints
+//! criterion-style summary lines; used by every `rust/benches/*.rs` target
+//! (declared with `harness = false`).
+
+use std::time::Instant;
+
+use crate::util::stats::LatencyStats;
+
+/// Prevent the optimiser from deleting a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub stats: LatencyStats,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10.4} ms/iter  (median {:.4}, p90 {:.4}, min {:.4}, n={})",
+            self.name, self.stats.avg, self.stats.median, self.stats.p90,
+            self.stats.min, self.iters
+        );
+    }
+}
+
+/// Run `f` `iters` times after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F)
+                         -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        stats: LatencyStats::from_samples(&samples),
+        iters,
+    };
+    r.print();
+    r
+}
+
+/// Time a single long-running operation.
+pub fn time_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!("{name:<44} {ms:>10.1} ms (single run)");
+    (out, ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut n = 0u64;
+        let r = bench("noop", 2, 10, || {
+            n += 1;
+            black_box(n);
+        });
+        assert_eq!(r.iters, 10);
+        assert_eq!(n, 12); // warmup + iters
+        assert!(r.stats.min >= 0.0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, ms) = time_once("compute", || 21 * 2);
+        assert_eq!(v, 42);
+        assert!(ms >= 0.0);
+    }
+}

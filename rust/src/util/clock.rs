@@ -1,0 +1,89 @@
+//! Simulated/real time abstraction.
+//!
+//! The adaptation experiments (Fig 7/8) reason about *device* time —
+//! "throttling detected within ~800 ms" — while numerics run as real PJRT
+//! executions on the host.  `Clock` lets the Application, Runtime Manager
+//! and thermal model share one monotonically advancing timeline that is
+//! either wall-clock (`Real`) or advanced explicitly by simulated latencies
+//! (`Sim`), so experiments are deterministic and fast.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+#[derive(Clone)]
+pub enum Clock {
+    Real(Instant),
+    /// Microsecond counter advanced by `advance`.
+    Sim(Arc<AtomicU64>),
+}
+
+impl Clock {
+    pub fn real() -> Self {
+        Clock::Real(Instant::now())
+    }
+
+    pub fn sim() -> Self {
+        Clock::Sim(Arc::new(AtomicU64::new(0)))
+    }
+
+    /// Milliseconds since the clock's origin.
+    pub fn now_ms(&self) -> f64 {
+        match self {
+            Clock::Real(t0) => t0.elapsed().as_secs_f64() * 1e3,
+            Clock::Sim(us) => us.load(Ordering::SeqCst) as f64 / 1e3,
+        }
+    }
+
+    /// Advance a simulated clock; no-op (with a debug assert) on real clocks.
+    pub fn advance_ms(&self, ms: f64) {
+        match self {
+            Clock::Real(_) => debug_assert!(false, "advance_ms on real clock"),
+            Clock::Sim(us) => {
+                us.fetch_add((ms * 1e3).round() as u64, Ordering::SeqCst);
+            }
+        }
+    }
+
+    pub fn is_sim(&self) -> bool {
+        matches!(self, Clock::Sim(_))
+    }
+}
+
+impl std::fmt::Debug for Clock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Clock::Real(_) => write!(f, "Clock::Real"),
+            Clock::Sim(_) => write!(f, "Clock::Sim({:.3} ms)", self.now_ms()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances() {
+        let c = Clock::sim();
+        assert_eq!(c.now_ms(), 0.0);
+        c.advance_ms(12.5);
+        assert!((c.now_ms() - 12.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sim_clock_shared_between_clones() {
+        let c = Clock::sim();
+        let c2 = c.clone();
+        c.advance_ms(5.0);
+        assert!((c2.now_ms() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn real_clock_monotone() {
+        let c = Clock::real();
+        let a = c.now_ms();
+        let b = c.now_ms();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,8 @@
+//! In-tree utility substrate (this offline image has no serde / rand /
+//! tokio; see Cargo.toml).
+
+pub mod bench;
+pub mod clock;
+pub mod json;
+pub mod rng;
+pub mod stats;

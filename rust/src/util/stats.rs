@@ -1,0 +1,258 @@
+//! Latency statistics: the paper's Device Measurements collect min, max,
+//! average, median and n-th percentile of latency/throughput plus peak
+//! memory (§III-D). `LatencyStats` is that summary; `Summary` keeps the raw
+//! samples for percentile queries at arbitrary n.
+
+use crate::util::json::{self, Value};
+
+/// Summary statistics over a set of latency samples (milliseconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyStats {
+    pub min: f64,
+    pub max: f64,
+    pub avg: f64,
+    pub median: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub n: usize,
+}
+
+impl LatencyStats {
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "no samples");
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        LatencyStats {
+            min: s[0],
+            max: *s.last().unwrap(),
+            avg: s.iter().sum::<f64>() / s.len() as f64,
+            median: percentile_sorted(&s, 50.0),
+            p90: percentile_sorted(&s, 90.0),
+            p99: percentile_sorted(&s, 99.0),
+            n: s.len(),
+        }
+    }
+
+    /// Pick the statistic named by the objective (`avg`, `median`, `p90`...).
+    pub fn metric(&self, which: Percentile) -> f64 {
+        match which {
+            Percentile::Min => self.min,
+            Percentile::Max => self.max,
+            Percentile::Avg => self.avg,
+            Percentile::Median => self.median,
+            Percentile::P90 => self.p90,
+            Percentile::P99 => self.p99,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("min", json::num(self.min)),
+            ("max", json::num(self.max)),
+            ("avg", json::num(self.avg)),
+            ("median", json::num(self.median)),
+            ("p90", json::num(self.p90)),
+            ("p99", json::num(self.p99)),
+            ("n", json::num(self.n as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        Ok(LatencyStats {
+            min: v.req("min")?.as_f64()?,
+            max: v.req("max")?.as_f64()?,
+            avg: v.req("avg")?.as_f64()?,
+            median: v.req("median")?.as_f64()?,
+            p90: v.req("p90")?.as_f64()?,
+            p99: v.req("p99")?.as_f64()?,
+            n: v.req("n")?.as_usize()?,
+        })
+    }
+}
+
+/// Which summary statistic an objective targets (paper: avg / median / n-th
+/// percentile).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Percentile {
+    Min,
+    Max,
+    Avg,
+    Median,
+    P90,
+    P99,
+}
+
+impl Percentile {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "min" => Percentile::Min,
+            "max" => Percentile::Max,
+            "avg" | "average" | "mean" => Percentile::Avg,
+            "median" | "p50" => Percentile::Median,
+            "p90" => Percentile::P90,
+            "p99" => Percentile::P99,
+            other => anyhow::bail!("unknown statistic `{other}`"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Percentile::Min => "min",
+            Percentile::Max => "max",
+            Percentile::Avg => "avg",
+            Percentile::Median => "median",
+            Percentile::P90 => "p90",
+            Percentile::P99 => "p99",
+        }
+    }
+}
+
+/// Linear-interpolated percentile over a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Geometric mean — the paper reports geo-mean speedups across models.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// A rolling window of recent latency samples (Runtime Manager's view).
+#[derive(Debug, Clone)]
+pub struct RollingWindow {
+    cap: usize,
+    buf: Vec<f64>,
+    next: usize,
+    full: bool,
+}
+
+impl RollingWindow {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        RollingWindow { cap, buf: Vec::with_capacity(cap), next: 0, full: false }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+            if self.buf.len() == self.cap {
+                self.full = true;
+            }
+        } else {
+            self.buf[self.next] = x;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.full
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.buf.is_empty() {
+            None
+        } else {
+            Some(self.buf.iter().sum::<f64>() / self.buf.len() as f64)
+        }
+    }
+
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let mut s = self.buf.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(percentile_sorted(&s, p))
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.next = 0;
+        self.full = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = LatencyStats::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.avg, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile_sorted(&s, 0.0), 10.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 40.0);
+        assert!((percentile_sorted(&s, 50.0) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p90_on_uniform() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = LatencyStats::from_samples(&xs);
+        assert!((s.p90 - 90.1).abs() < 0.2, "{}", s.p90);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = LatencyStats::from_samples(&[3.0, 1.0, 2.0]);
+        let back = LatencyStats::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn geomean_matches_paper_style() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_parse_names() {
+        assert_eq!(Percentile::parse("p90").unwrap(), Percentile::P90);
+        assert_eq!(Percentile::parse("avg").unwrap(), Percentile::Avg);
+        assert!(Percentile::parse("p42").is_err());
+    }
+
+    #[test]
+    fn rolling_window_wraps() {
+        let mut w = RollingWindow::new(3);
+        assert!(w.mean().is_none());
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        // window now holds {4, 2, 3}
+        assert!(w.is_full());
+        assert!((w.mean().unwrap() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn stats_empty_panics() {
+        LatencyStats::from_samples(&[]);
+    }
+}

@@ -1,0 +1,214 @@
+//! Integration tests over the REAL AOT artifacts: runtime + DLACL + app +
+//! experiments composing end-to-end.  Skipped (with a message) when
+//! `make artifacts` has not been run.
+
+use oodin::app::{AppConfig, Application};
+use oodin::device::EngineKind;
+use oodin::dlacl::{decode_top1, ModelSlot};
+use oodin::model::{Precision, Registry, Task};
+use oodin::optimizer::{Objective, SearchSpace};
+use oodin::runtime::RuntimeHandle;
+use oodin::sil::SyntheticCamera;
+use oodin::util::stats::Percentile;
+
+fn real_registry() -> Option<Registry> {
+    match oodin::load_registry() {
+        Ok(r) => Some(r),
+        Err(_) => {
+            eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn every_artifact_loads_and_executes() {
+    let Some(reg) = real_registry() else { return };
+    let rt = RuntimeHandle::cpu().unwrap();
+    for v in reg.variants() {
+        rt.load(&v.name, reg.hlo_path(v))
+            .unwrap_or_else(|e| panic!("loading {}: {e}", v.name));
+        let input = vec![0.1f32; v.input_elems()];
+        let out = rt.execute(&v.name, input, &v.input_shape)
+            .unwrap_or_else(|e| panic!("executing {}: {e}", v.name));
+        assert_eq!(out.values.len(), v.output_elems(), "{}", v.name);
+        assert!(out.values.iter().all(|x| x.is_finite()),
+                "{} produced non-finite output", v.name);
+        rt.evict(&v.name).unwrap();
+    }
+    rt.shutdown();
+}
+
+#[test]
+fn precisions_agree_on_predictions() {
+    // The three transformations of one family must mostly agree on real
+    // frames (the accuracy gap in the manifest is small).
+    let Some(reg) = real_registry() else { return };
+    let rt = RuntimeHandle::cpu().unwrap();
+    for family in ["mobilenet_v2_100", "efficientnet_lite0"] {
+        let variants: Vec<_> = Precision::ALL
+            .iter()
+            .filter_map(|&p| reg.find(family, p, 1))
+            .collect();
+        assert_eq!(variants.len(), 3, "{family} missing precisions");
+        for v in &variants {
+            rt.load(&v.name, reg.hlo_path(v)).unwrap();
+        }
+        let mut cam = SyntheticCamera::new(variants[0].resolution, 30.0, 17);
+        let mut agree = 0;
+        let n = 12;
+        for i in 0..n {
+            let f = cam.capture(i as f64);
+            let preds: Vec<usize> = variants
+                .iter()
+                .map(|v| {
+                    let out = rt
+                        .execute(&v.name, f.data.clone(), &v.input_shape)
+                        .unwrap();
+                    decode_top1(&out.values, 10).0
+                })
+                .collect();
+            if preds.iter().all(|&p| p == preds[0]) {
+                agree += 1;
+            }
+        }
+        assert!(agree * 10 >= n * 7,
+                "{family}: precisions agree on only {agree}/{n} frames");
+        for v in &variants {
+            rt.evict(&v.name).unwrap();
+        }
+    }
+    rt.shutdown();
+}
+
+#[test]
+fn online_accuracy_matches_offline_manifest() {
+    // Camera frames come from the same generator family as the python
+    // validation set: online top-1 through the full stack should be within
+    // a loose band of the manifest accuracy.
+    let Some(reg) = real_registry() else { return };
+    let rt = RuntimeHandle::cpu().unwrap();
+    let v = reg.find("mobilenet_v2_140", Precision::Fp32, 1).unwrap();
+    rt.load(&v.name, reg.hlo_path(v)).unwrap();
+    let mut cam = SyntheticCamera::new(v.resolution, 30.0, 23);
+    let n = 150;
+    let mut ok = 0;
+    for i in 0..n {
+        let f = cam.capture(i as f64);
+        let out = rt.execute(&v.name, f.data, &v.input_shape).unwrap();
+        if decode_top1(&out.values, 10).0 == f.label {
+            ok += 1;
+        }
+    }
+    let online = ok as f64 / n as f64;
+    assert!((online - v.accuracy).abs() < 0.15,
+            "online {online:.3} vs manifest {:.3}", v.accuracy);
+    rt.shutdown();
+}
+
+#[test]
+fn dlacl_swap_cycles_through_variants() {
+    let Some(reg) = real_registry() else { return };
+    let rt = RuntimeHandle::cpu().unwrap();
+    let mut slot = ModelSlot::new(rt.clone(), u64::MAX);
+    let names: Vec<String> = Precision::ALL
+        .iter()
+        .map(|&p| reg.find("mobilenet_v2_100", p, 1).unwrap().name.clone())
+        .collect();
+    let res = reg.get(&names[0]).unwrap().resolution;
+    let frame = vec![0.2f32; res * res * 3];
+    for round in 0..2 {
+        for name in &names {
+            slot.swap_to(&reg, name).unwrap();
+            let out = slot.infer(&frame, res, res).unwrap();
+            assert!(out.values.iter().all(|x| x.is_finite()), "round {round}");
+            // Exactly one executable resident at a time.
+            assert_eq!(rt.loaded().unwrap().len(), 1);
+        }
+    }
+    assert_eq!(slot.swaps, 6);
+    rt.shutdown();
+}
+
+#[test]
+fn full_app_runs_real_exec_with_adaptation() {
+    let Some(reg) = real_registry() else { return };
+    let mut cfg = AppConfig::new(
+        "samsung_a71",
+        Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.015 },
+        SearchSpace::family("mobilenet_v2_100"),
+    );
+    cfg.real_exec = true;
+    cfg.lut_runs = 30;
+    let mut app = Application::build(cfg, reg).unwrap();
+    let e0 = app.current_design().hw.engine;
+    let recs = app
+        .run(120, &[oodin::app::ScenarioEvent::SetLoad {
+            at_frame: 30,
+            engine: e0,
+            load: 3.0,
+        }])
+        .unwrap();
+    assert_eq!(recs.len() as u64, 120 / (1.0 / app.current_design().hw.recognition_rate) as u64);
+    assert!(recs.iter().any(|r| r.switch.is_some()),
+            "no adaptation under 8x load");
+    assert!(recs.iter().all(|r| r.host_ms.is_some()), "real exec missing");
+    let acc = recs.iter().filter_map(|r| r.correct).filter(|&c| c).count() as f64
+        / recs.iter().filter(|r| r.correct.is_some()).count() as f64;
+    assert!(acc > 0.5, "online accuracy collapsed: {acc}");
+    assert!(app.gallery.len() > 0);
+    app.shutdown();
+}
+
+#[test]
+fn segmentation_task_end_to_end() {
+    let Some(reg) = real_registry() else { return };
+    let rt = RuntimeHandle::cpu().unwrap();
+    let v = reg.find("deeplab_v3", Precision::Int8, 1).unwrap();
+    assert_eq!(v.task, Task::Segmentation);
+    rt.load(&v.name, reg.hlo_path(v)).unwrap();
+    let input = vec![0.3f32; v.input_elems()];
+    let out = rt.execute(&v.name, input, &v.input_shape).unwrap();
+    assert_eq!(out.values.len(),
+               v.resolution * v.resolution * 5, "per-pixel logits");
+    rt.shutdown();
+}
+
+#[test]
+fn experiments_compose_on_real_registry() {
+    let Some(reg) = real_registry() else { return };
+    // Fig 3 invariant on real data: OODIn >= every baseline.
+    let (rows, summaries) = oodin::experiments::fig3::run(&reg).unwrap();
+    assert!(rows.len() >= 15, "rows: {}", rows.len());
+    for r in &rows {
+        for b in [r.osq_cpu_ms, r.osq_gpu_ms, r.osq_nnapi_ms].into_iter().flatten() {
+            assert!(r.oodin_ms <= b + 1e-9, "{r:?}");
+        }
+    }
+    // Geo-mean speedups in a plausible band (paper: 1.73 / 1.74 / 5.9).
+    for s in &summaries {
+        assert!(s.vs_cpu.0 >= 1.0 && s.vs_cpu.0 < 50.0);
+        if let Some((geo, max)) = s.vs_nnapi {
+            assert!(geo >= 1.0);
+            assert!(max < 1000.0);
+        }
+    }
+    // NNAPI tail (S20 + deeplab) is catastrophic, as in the paper.
+    let s20_deeplab = rows.iter()
+        .find(|r| r.device == "samsung_s20_fe" && r.family == "deeplab_v3");
+    if let Some(r) = s20_deeplab {
+        if let Some(sp) = r.speedup(r.osq_nnapi_ms) {
+            assert!(sp > 10.0, "expected catastrophic NNAPI tail, got {sp}");
+        }
+    }
+}
+
+#[test]
+fn engine_choice_varies_on_real_zoo() {
+    let Some(reg) = real_registry() else { return };
+    let m = oodin::experiments::fig3::engine_matrix(&reg).unwrap();
+    let engines: std::collections::BTreeSet<EngineKind> =
+        m.iter().map(|(_, _, e)| *e).collect();
+    assert!(engines.len() >= 2,
+            "best engine should vary across (model, device): {m:?}");
+}

@@ -1,0 +1,307 @@
+//! Property-based tests on coordinator invariants (hand-rolled: the
+//! offline image has no proptest; `oodin::util::rng::Rng` drives seeded
+//! random-case generation with the same spirit — every case prints its
+//! seed on failure).
+
+use std::collections::BTreeMap;
+
+use oodin::device::profiles::{profiles, samsung_a71};
+use oodin::device::EngineKind;
+use oodin::dvfs::Governor;
+use oodin::measurements::{Lut, LutEntry, LutKey, Measurer};
+use oodin::model::test_fixtures::fake_registry;
+use oodin::model::Precision;
+use oodin::optimizer::{Design, HwConfig, Objective, Optimizer, SearchSpace};
+use oodin::util::json;
+use oodin::util::rng::Rng;
+use oodin::util::stats::{LatencyStats, Percentile};
+
+const CASES: usize = 60;
+
+/// Generate a random-but-valid LUT for a device from random base latencies.
+fn random_lut(rng: &mut Rng, device: &str) -> (Lut, Vec<String>) {
+    let reg = fake_registry();
+    let dev = profiles().into_iter().find(|d| d.name == device).unwrap();
+    let mut entries = BTreeMap::new();
+    let mut variants = Vec::new();
+    for v in reg.variants() {
+        variants.push(v.name.clone());
+        for spec in &dev.engines {
+            let threads: Vec<usize> = if spec.kind == EngineKind::Cpu {
+                dev.thread_candidates()
+            } else {
+                vec![1]
+            };
+            for t in threads {
+                for g in &dev.governors {
+                    let base = rng.range(0.01, 5.0);
+                    let samples: Vec<f64> =
+                        (0..30).map(|_| base * rng.lognormal(0.05)).collect();
+                    entries.insert(
+                        LutKey { variant: v.name.clone(), engine: spec.kind,
+                                 threads: t, governor: *g },
+                        LutEntry {
+                            latency: LatencyStats::from_samples(&samples),
+                            mem_bytes: v.mem_bytes(),
+                            accuracy: v.accuracy,
+                        },
+                    );
+                }
+            }
+        }
+    }
+    (Lut { device: device.to_string(), entries }, variants)
+}
+
+#[test]
+fn prop_optimizer_result_is_global_minimum() {
+    // For MinLatency the returned design must be the argmin over every
+    // feasible LUT entry — on *randomised* LUTs, not just the perf model's.
+    for case in 0..CASES {
+        let mut rng = Rng::new(1000 + case as u64);
+        let (lut, _) = random_lut(&mut rng, "samsung_a71");
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        let obj = Objective::MinLatency { stat: Percentile::Avg, epsilon: 1.0 };
+        let Ok(best) = opt.optimize(obj, &SearchSpace::default()) else {
+            continue;
+        };
+        for (k, e) in &lut.entries {
+            let v = reg.get(&k.variant).unwrap();
+            if !oodin::perf::fits_memory(&dev, v)
+                || e.latency.avg > dev.max_deployable_latency_ms
+            {
+                continue;
+            }
+            assert!(
+                best.latency_ms <= e.latency.avg + 1e-9,
+                "seed {case}: {k:?} beats the returned optimum"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_epsilon_constraint_always_respected() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(2000 + case as u64);
+        let (lut, _) = random_lut(&mut rng, "samsung_a71");
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        let eps = rng.range(0.0, 0.03);
+        let obj = Objective::MinLatency { stat: Percentile::Avg, epsilon: eps };
+        if let Ok(all) = opt.search(obj, &SearchSpace::default()) {
+            for cand in all {
+                let v = reg.get(&cand.design.variant).unwrap();
+                let a_ref = opt.reference_accuracy(&v.family).unwrap();
+                assert!(
+                    a_ref - cand.accuracy <= eps + 1e-9,
+                    "seed {case}: ε violated ({} vs ref {a_ref})", cand.accuracy
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_target_latency_never_exceeds_budget() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(3000 + case as u64);
+        let (lut, _) = random_lut(&mut rng, "samsung_s20_fe");
+        let dev = profiles().into_iter().find(|d| d.name == "samsung_s20_fe").unwrap();
+        let reg = fake_registry();
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        let budget = rng.range(0.05, 3.0);
+        let obj = Objective::TargetLatency { t_target_ms: budget, stat: Percentile::P90 };
+        if let Ok(best) = opt.optimize(obj, &SearchSpace::default()) {
+            assert!(best.latency_ms <= budget + 1e-9,
+                    "seed {case}: budget {budget} exceeded: {}", best.latency_ms);
+        }
+    }
+}
+
+#[test]
+fn prop_search_space_restrictions_are_honoured() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(4000 + case as u64);
+        let (lut, _) = random_lut(&mut rng, "samsung_a71");
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        let engine = *rng.choose(&[EngineKind::Cpu, EngineKind::Gpu, EngineKind::Npu]);
+        let prec = *rng.choose(&[Precision::Fp32, Precision::Fp16, Precision::Int8]);
+        let space = SearchSpace::default()
+            .with_engines(&[engine])
+            .with_precisions(&[prec]);
+        let obj = Objective::MaxFps { epsilon: 1.0 };
+        if let Ok(all) = opt.search(obj, &space) {
+            for cand in all {
+                assert_eq!(cand.design.hw.engine, engine, "seed {case}");
+                let v = reg.get(&cand.design.variant).unwrap();
+                assert_eq!(v.precision, prec, "seed {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lut_json_roundtrip_random() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(5000 + case as u64);
+        let (lut, _) = random_lut(&mut rng, "sony_c5");
+        let back = Lut::from_json(&lut.to_json()).unwrap();
+        assert_eq!(back.len(), lut.len(), "seed {case}");
+        for (k, e) in &lut.entries {
+            let b = back.get(k).expect("key survives");
+            assert_eq!(b.latency, e.latency, "seed {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_json_number_roundtrip() {
+    let mut rng = Rng::new(99);
+    for case in 0..500 {
+        let x = (rng.f64() - 0.5) * 10f64.powi((rng.below(12) as i32) - 3);
+        let text = json::to_string(&json::Value::Num(x));
+        let back = json::parse(&text).unwrap();
+        let y = back.as_f64().unwrap();
+        assert!((x - y).abs() <= x.abs() * 1e-12 + 1e-15, "case {case}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn prop_json_string_roundtrip() {
+    let mut rng = Rng::new(7);
+    let alphabet: Vec<char> =
+        "abc\"\\\n\t é😀{}[]:,0".chars().collect();
+    for case in 0..300 {
+        let len = rng.below(20);
+        let s: String = (0..len).map(|_| *rng.choose(&alphabet)).collect();
+        let text = json::to_string(&json::Value::Str(s.clone()));
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back.as_str().unwrap(), s, "case {case}");
+    }
+}
+
+#[test]
+fn prop_measurer_deterministic_across_runs() {
+    // Same (device, key) always reproduces identical stats — the LUTs the
+    // Runtime Manager holds must match what the optimiser saw.
+    let reg = fake_registry();
+    for case in 0..10 {
+        let dev = samsung_a71();
+        let m1 = Measurer::new(&dev, &reg).with_runs(25, 2);
+        let m2 = Measurer::new(&dev, &reg).with_runs(25, 2);
+        let mut rng = Rng::new(6000 + case);
+        let v = reg.variants()[rng.below(reg.variants().len())].name.clone();
+        let key = LutKey {
+            variant: v,
+            engine: EngineKind::Cpu,
+            threads: *rng.choose(&[1usize, 2, 4, 8]),
+            governor: *rng.choose(&Governor::ALL),
+        };
+        assert_eq!(m1.measure_one(&key).unwrap().latency,
+                   m2.measure_one(&key).unwrap().latency, "case {case}");
+    }
+}
+
+#[test]
+fn prop_manager_switches_only_improve_adjusted_latency() {
+    use oodin::manager::{Conditions, RuntimeManager};
+    use std::sync::Arc;
+    for case in 0..25 {
+        let mut rng = Rng::new(7000 + case as u64);
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(20, 2).measure_all().unwrap();
+        let obj = Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 };
+        let space = SearchSpace::family("mobilenet_v2_100");
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        let init = opt.optimize(obj, &space).unwrap().design;
+        let mut mgr = RuntimeManager::new(
+            Arc::new(dev.clone()), Arc::new(reg.clone()), Arc::new(lut),
+            obj, space, init,
+        );
+        // Random load trajectory; every emitted switch must strictly improve
+        // the adjusted latency at its decision point.
+        let mut conds = Conditions::idle();
+        let mut t = 0.0;
+        for _ in 0..60 {
+            t += 260.0;
+            let e = *rng.choose(&EngineKind::ALL);
+            conds.loads.insert(e, rng.range(0.0, 3.0));
+            let before = mgr.current().clone();
+            if let Some(sw) = mgr.observe(t, &conds) {
+                let cur = mgr.adjusted_latency(&before, &conds).unwrap();
+                let new = mgr.adjusted_latency(&sw.to, &conds).unwrap();
+                assert!(new < cur, "case {case}: switch worsened latency");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_stage_input_preserves_range() {
+    use oodin::dlacl::stage_input;
+    let mut rng = Rng::new(11);
+    for case in 0..60 {
+        let h = 2 + rng.below(30);
+        let w = 2 + rng.below(30);
+        let res = 2 + rng.below(30);
+        let frame: Vec<f32> =
+            (0..h * w * 3).map(|_| rng.range(-2.0, 2.0) as f32).collect();
+        let mut dst = vec![0.0f32; res * res * 3];
+        stage_input(&frame, h, w, &mut dst, res);
+        let (fmin, fmax) = frame.iter().fold((f32::MAX, f32::MIN),
+                                             |(a, b), &x| (a.min(x), b.max(x)));
+        for &d in &dst {
+            assert!(d >= fmin && d <= fmax,
+                    "case {case}: nearest-neighbour invented value {d}");
+        }
+    }
+}
+
+#[test]
+fn prop_evaluate_matches_search_entry() {
+    // evaluate(design) must agree with what search() reported for the same
+    // design (no double-counting of conditions).
+    for case in 0..20 {
+        let mut rng = Rng::new(8000 + case as u64);
+        let (lut, _) = random_lut(&mut rng, "samsung_a71");
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        let obj = Objective::MinLatency { stat: Percentile::P90, epsilon: 1.0 };
+        if let Ok(all) = opt.search(obj, &SearchSpace::default()) {
+            for cand in all.iter().take(5) {
+                let re = opt.evaluate(&cand.design, Percentile::P90).unwrap();
+                assert!((re.latency_ms - cand.latency_ms).abs() < 1e-12,
+                        "case {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_design_lut_key_roundtrip() {
+    let mut rng = Rng::new(13);
+    let reg = fake_registry();
+    for _ in 0..100 {
+        let v = &reg.variants()[rng.below(reg.variants().len())];
+        let d = Design {
+            variant: v.name.clone(),
+            hw: HwConfig {
+                engine: *rng.choose(&EngineKind::ALL),
+                threads: 1 + rng.below(8),
+                governor: *rng.choose(&Governor::ALL),
+                recognition_rate: *rng.choose(&[1.0, 0.5, 0.25]),
+            },
+        };
+        let key = d.lut_key();
+        let parsed = LutKey::parse(&key.id()).unwrap();
+        assert_eq!(parsed, key);
+    }
+}

@@ -10,21 +10,21 @@
 
 use oodin::app::{AppConfig, Application, ScenarioEvent};
 use oodin::experiments::fig8;
-use oodin::load_registry;
 use oodin::manager::Policy;
 use oodin::optimizer::{Objective, SearchSpace};
 use oodin::util::stats::Percentile;
 
 fn main() -> anyhow::Result<()> {
     let frames: u64 = std::env::args().nth(1).map_or(Ok(240), |s| s.parse())?;
-    let registry = load_registry()?;
+    let registry = oodin::load_registry_or_synthetic()?;
+    let family = registry.family_or("mobilenet_v2_140", "mobilenet_v2_100");
 
     // ---- Phase 1: load-driven adaptation (Fig 7 conditions) -------------
-    println!("PHASE 1 — device load (mobilenet_v2_140 on samsung_a71)");
+    println!("PHASE 1 — device load ({family} on samsung_a71)");
     let mut cfg = AppConfig::new(
         "samsung_a71",
         Objective::MinLatency { stat: Percentile::P90, epsilon: 0.0 },
-        SearchSpace::family("mobilenet_v2_140"),
+        SearchSpace::family(family),
     );
     cfg.real_exec = true;
     cfg.live_ui = true;

@@ -13,7 +13,6 @@
 
 use oodin::app::{AppConfig, Application};
 use oodin::device::EngineKind;
-use oodin::load_registry;
 use oodin::optimizer::{Objective, SearchSpace};
 use oodin::util::stats::LatencyStats;
 
@@ -30,7 +29,7 @@ struct RunSummary {
 
 fn run_space(device: &str, frames: u64, label: &str, space: SearchSpace)
              -> anyhow::Result<Option<RunSummary>> {
-    let registry = load_registry()?;
+    let registry = oodin::load_registry_or_synthetic()?;
     let mut cfg = AppConfig::new(device, Objective::MaxFps { epsilon: 0.015 }, space);
     cfg.real_exec = true;
     cfg.lut_runs = 100;

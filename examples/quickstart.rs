@@ -1,21 +1,22 @@
 //! Quickstart: the OODIn pipeline in ~40 effective lines.
 //!
-//! Loads the AOT model zoo, detects a device, runs Device Measurements,
-//! solves a MaxFPS use-case (paper Eq. 3), and pushes a few real frames
-//! through the selected design's artifact on the PJRT runtime.
+//! Loads the model zoo (AOT artifacts, or the synthetic registry when
+//! they are absent), detects a device, runs Device Measurements, solves a
+//! MaxFPS use-case (paper Eq. 3), and pushes a few frames through the
+//! selected design on the default execution backend (PJRT or SimBackend).
 //!
 //! Run with: `cargo run --release --example quickstart`
 
 use oodin::dlacl::decode_top1;
 use oodin::measurements::Measurer;
 use oodin::optimizer::{Objective, Optimizer, SearchSpace};
-use oodin::runtime::RuntimeHandle;
+use oodin::runtime::{default_backend, Backend};
 use oodin::sil::SyntheticCamera;
-use oodin::{load_registry, mdcl};
+use oodin::mdcl;
 
 fn main() -> anyhow::Result<()> {
-    // 1. The model space M (built by `make artifacts`).
-    let registry = load_registry()?;
+    // 1. The model space M (built by `make artifacts`, or synthetic).
+    let registry = oodin::load_registry_or_synthetic()?;
     println!("loaded {} model variants across {} families",
              registry.variants().len(), registry.families().len());
 
@@ -45,10 +46,10 @@ fn main() -> anyhow::Result<()> {
         best.accuracy * 100.0,
     );
 
-    // 5. Real inference through the AOT artifact (python never runs here).
-    let rt = RuntimeHandle::cpu()?;
+    // 5. Inference through the execution backend (python never runs here).
+    let rt = default_backend(&device, &registry)?;
     let variant = registry.get(&best.design.variant).unwrap();
-    rt.load(&variant.name, registry.hlo_path(variant))?;
+    rt.load(&variant.name, &registry.hlo_path(variant))?;
     let mut camera = SyntheticCamera::new(variant.resolution, 30.0, 1);
     let mut correct = 0;
     let n = 20;

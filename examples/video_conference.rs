@@ -10,15 +10,15 @@
 
 use oodin::measurements::Measurer;
 use oodin::optimizer::{Objective, Optimizer, SearchSpace};
-use oodin::runtime::RuntimeHandle;
+use oodin::runtime::{default_backend, Backend};
 use oodin::util::stats::Percentile;
-use oodin::{load_registry, mdcl};
+use oodin::mdcl;
 
 const FAMILY: &str = "deeplab_v3";
 
 fn main() -> anyhow::Result<()> {
     let device_name = std::env::args().nth(1).unwrap_or("samsung_s20_fe".into());
-    let registry = load_registry()?;
+    let registry = oodin::load_registry_or_synthetic()?;
     let device = mdcl::detect(&device_name)?;
     let lut = Measurer::new(&device, &registry).with_runs(100, 10).measure_all()?;
     let opt = Optimizer::new(&device, &registry, &lut).with_camera_fps(30.0);
@@ -53,8 +53,8 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     };
     let v = registry.get(&best.design.variant).unwrap();
-    let rt = RuntimeHandle::cpu()?;
-    rt.load(&v.name, registry.hlo_path(v))?;
+    let rt = default_backend(&device, &registry)?;
+    rt.load(&v.name, &registry.hlo_path(v))?;
     let mut cam = oodin::sil::SyntheticCamera::new(v.resolution, 30.0, 3);
     println!("\nreal segmentation through {} ({} -> {:?}):",
              v.name, v.resolution, v.output_shape);

@@ -13,7 +13,6 @@
 use oodin::app::{AppConfig, Application};
 use oodin::device::profiles::samsung_a71;
 use oodin::experiments::{build_lut, EVAL_EPSILON};
-use oodin::load_registry;
 use oodin::manager::Policy;
 use oodin::measurements::LutKey;
 use oodin::model::Registry;
@@ -28,7 +27,7 @@ const OBJ: Objective = Objective::MinLatency {
 };
 
 fn main() {
-    let registry = load_registry().expect("run `make artifacts` first");
+    let registry = oodin::load_registry_or_synthetic().unwrap();
     search_quality(&registry);
     hysteresis_sweep(&registry);
     recognition_rate_sweep(&registry);
@@ -128,11 +127,12 @@ fn random_pick(opt: &Optimizer, registry: &Registry,
 fn hysteresis_sweep(registry: &Registry) {
     println!("\n== ablation 2: adaptation hysteresis (Fig 7 conditions) ==");
     println!("{:>12} {:>10} {:>14}", "threshold", "switches", "avg latency");
+    let family = registry.family_or("mobilenet_v2_140", "mobilenet_v2_100");
     for min_improvement in [1.0, 1.05, 1.10, 1.25, 1.5, 2.0, 4.0] {
         let mut cfg = AppConfig::new(
             "samsung_a71",
             Objective::MinLatency { stat: Percentile::P90, epsilon: 0.0 },
-            SearchSpace::family("mobilenet_v2_140"),
+            SearchSpace::family(family),
         );
         cfg.real_exec = false;
         cfg.lut_runs = 40;

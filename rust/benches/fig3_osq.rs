@@ -3,13 +3,12 @@
 
 use oodin::device::profiles::samsung_a71;
 use oodin::experiments::{build_lut, fig3, EVAL_EPSILON};
-use oodin::load_registry;
 use oodin::optimizer::{Objective, Optimizer, SearchSpace};
 use oodin::util::bench::{bench, black_box, time_once};
 use oodin::util::stats::Percentile;
 
 fn main() {
-    let registry = load_registry().expect("run `make artifacts` first");
+    let registry = oodin::load_registry_or_synthetic().unwrap();
 
     println!("== FIG 3 reproduction ==");
     let (_, ms) = time_once("fig3/full_experiment", || {

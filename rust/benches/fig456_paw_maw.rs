@@ -1,11 +1,10 @@
 //! Bench: regenerate Fig 4/5/6 (OODIn vs PAW-D / MAW-D per device).
 
 use oodin::experiments::fig456;
-use oodin::load_registry;
 use oodin::util::bench::time_once;
 
 fn main() {
-    let registry = load_registry().expect("run `make artifacts` first");
+    let registry = oodin::load_registry_or_synthetic().unwrap();
     let (_, ms) = time_once("fig456/full_experiment", || {
         fig456::print(&registry, None).unwrap();
     });

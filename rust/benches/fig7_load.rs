@@ -2,11 +2,10 @@
 //! run the hysteresis-threshold ablation the adaptation policy calls out.
 
 use oodin::experiments::fig7;
-use oodin::load_registry;
 use oodin::util::bench::time_once;
 
 fn main() {
-    let registry = load_registry().expect("run `make artifacts` first");
+    let registry = oodin::load_registry_or_synthetic().unwrap();
     let (_, ms) = time_once("fig7/full_experiment", || {
         fig7::print(&registry, false).unwrap();
     });

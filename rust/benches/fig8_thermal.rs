@@ -1,11 +1,10 @@
 //! Bench: regenerate Fig 8 (Runtime Manager under thermal throttling).
 
 use oodin::experiments::fig8;
-use oodin::load_registry;
 use oodin::util::bench::time_once;
 
 fn main() {
-    let registry = load_registry().expect("run `make artifacts` first");
+    let registry = oodin::load_registry_or_synthetic().unwrap();
     let (_, ms) = time_once("fig8/full_experiment", || {
         fig8::print(&registry, 1200).unwrap();
     });

@@ -1,34 +1,52 @@
-//! Hot-path benchmark: real PJRT execution of the AOT artifacts — the
+//! Hot-path benchmark: execution through the configured backend — the
 //! anchor for the §Perf optimisation pass (EXPERIMENTS.md).
 //!
-//! Measures per-variant host latency, batch-amortisation on the batched
-//! mobilenet executables, executor-thread round-trip overhead, and the
+//! Runs against the real PJRT artifacts when `make artifacts` + the `pjrt`
+//! feature are available, and against the hermetic SimBackend otherwise
+//! (useful for measuring the coordinator/batching overhead in isolation).
+//!
+//! Measures per-variant latency, batch-amortisation on the batched
+//! executables when the zoo has them, backend round-trip overhead, and the
 //! serving front-end's end-to-end throughput.
 
-use oodin::load_registry;
+use std::sync::Arc;
+
+use oodin::device::profiles::samsung_a71;
 use oodin::model::Precision;
-use oodin::runtime::{write_tiny_hlo, RuntimeHandle};
+use oodin::runtime::{default_backend, Backend};
 use oodin::serving::{Server, ServerConfig};
 use oodin::util::bench::{bench, black_box};
 
 fn main() {
-    let registry = load_registry().expect("run `make artifacts` first");
-    let rt = RuntimeHandle::cpu().expect("pjrt cpu client");
+    let registry = oodin::load_registry_or_synthetic().unwrap();
+    let rt = default_backend(&samsung_a71(), &registry).unwrap();
+    println!("backend: {}", rt.kind());
 
-    // Executor round-trip floor (channel + literal + trivial HLO).
-    let tiny = write_tiny_hlo();
-    rt.load("tiny", &tiny).unwrap();
-    bench("runtime/roundtrip_floor_tiny_hlo", 50, 500, || {
-        black_box(rt.execute("tiny", vec![1.0; 4], &[4]).unwrap());
+    // Backend round-trip floor: the cheapest variant in the zoo.
+    let smallest = registry
+        .variants()
+        .iter()
+        .filter(|v| v.batch == 1)
+        .min_by_key(|v| v.flops)
+        .expect("empty registry")
+        .clone();
+    rt.load(&smallest.name, &registry.hlo_path(&smallest)).unwrap();
+    let tiny_input = vec![0.1f32; smallest.input_elems()];
+    bench("runtime/roundtrip_floor", 20, 200, || {
+        black_box(
+            rt.execute(&smallest.name, tiny_input.clone(), &smallest.input_shape)
+                .unwrap(),
+        );
     });
+    rt.evict(&smallest.name).unwrap();
 
-    // Per-variant real inference latency (batch-1, all families, fp32+int8).
-    println!("\n== per-variant host latency (real AOT artifacts) ==");
+    // Per-variant latency (batch-1, all families, fp32+int8).
+    println!("\n== per-variant latency through the backend ==");
     for v in registry.variants() {
         if v.batch != 1 || v.precision == Precision::Fp16 {
             continue;
         }
-        if rt.load(&v.name, registry.hlo_path(v)).is_err() {
+        if rt.load(&v.name, &registry.hlo_path(v)).is_err() {
             println!("{:<40} load failed", v.name);
             continue;
         }
@@ -41,13 +59,15 @@ fn main() {
         rt.evict(&name).unwrap();
     }
 
-    // Batch amortisation on the flagship model.
+    // Batch amortisation on the flagship model (real zoo only — the
+    // synthetic registry carries batch-1 variants).
     println!("\n== batching (mobilenet_v2_100 fp32) ==");
     for b in [1usize, 4, 8] {
         let Some(v) = registry.find("mobilenet_v2_100", Precision::Fp32, b) else {
+            println!("  (no b={b} variant in this registry)");
             continue;
         };
-        rt.load(&v.name, registry.hlo_path(v)).unwrap();
+        rt.load(&v.name, &registry.hlo_path(v)).unwrap();
         let input = vec![0.1f32; v.input_elems()];
         let shape = v.input_shape.clone();
         let name = v.name.clone();
@@ -65,7 +85,7 @@ fn main() {
             ServerConfig::for_family(&registry, "mobilenet_v2_100", Precision::Fp32)
                 .unwrap();
         cfg.max_batch_delay_ms = delay_ms;
-        let srv = Server::start(rt.clone(), &registry, cfg).unwrap();
+        let srv = Server::start(Arc::clone(&rt), &registry, cfg).unwrap();
         let res = registry
             .find("mobilenet_v2_100", Precision::Fp32, 1)
             .unwrap()

@@ -1,11 +1,10 @@
 //! Bench: regenerate Table II and time the registry/report machinery.
 
 use oodin::experiments::tables;
-use oodin::load_registry;
 use oodin::util::bench::{bench, black_box};
 
 fn main() {
-    let registry = load_registry().expect("run `make artifacts` first");
+    let registry = oodin::load_registry_or_synthetic().unwrap();
     println!("== TABLE II reproduction ==");
     tables::print_table1();
     println!();
@@ -13,7 +12,7 @@ fn main() {
 
     println!("\n== harness timings ==");
     bench("registry/load_manifest", 3, 30, || {
-        black_box(load_registry().unwrap());
+        black_box(oodin::load_registry_or_synthetic().unwrap());
     });
     bench("table2/regenerate", 3, 100, || {
         black_box(tables::table2(&registry));

@@ -6,12 +6,12 @@
 //! Runtime Manager observing middleware-c statistics and issuing
 //! reconfigurations.
 //!
-//! Numerics are *real*: each processed frame can be pushed through the AOT
-//! artifact on the host PJRT client (`real_exec`), while device latency,
-//! thermal state and contention evolve on the simulated device timeline
-//! (DESIGN.md §Substitutions).  Scenario events inject the Fig 7/8
-//! conditions (engine load ramps; thermal stress emerges by itself from
-//! sustained work).
+//! Numerics flow through the configured execution [`Backend`]
+//! (`real_exec`): the PJRT artifacts when available, the deterministic
+//! `SimBackend` otherwise — while device latency, thermal state and
+//! contention evolve on the simulated device timeline (DESIGN.md
+//! §Substitutions).  Scenario events inject the Fig 7/8 conditions (engine
+//! load ramps; thermal stress emerges by itself from sustained work).
 
 use std::sync::Arc;
 
@@ -25,7 +25,7 @@ use crate::mdcl;
 use crate::measurements::{Lut, Measurer};
 use crate::model::{Registry, Task};
 use crate::optimizer::{Design, Objective, Optimizer, SearchSpace};
-use crate::runtime::RuntimeHandle;
+use crate::runtime::{self, Backend};
 use crate::sil::{Gallery, SyntheticCamera, UiStub};
 use crate::util::clock::Clock;
 
@@ -36,7 +36,8 @@ pub struct AppConfig {
     pub objective: Objective,
     pub space: SearchSpace,
     pub camera_fps: f64,
-    /// Execute real PJRT numerics per processed frame.
+    /// Execute backend numerics per processed frame (PJRT when artifacts
+    /// exist, SimBackend otherwise).
     pub real_exec: bool,
     /// Echo UI events to stdout.
     pub live_ui: bool,
@@ -98,7 +99,7 @@ pub struct Application {
     pub camera: SyntheticCamera,
     pub gallery: Gallery,
     pub ui: UiStub,
-    runtime: Option<RuntimeHandle>,
+    backend: Option<Arc<dyn Backend>>,
     slot: Option<ModelSlot>,
     frames_seen: u64,
     frames_processed: u64,
@@ -132,12 +133,12 @@ impl Application {
         );
         camera.fps = cfg.camera_fps.min(hw_info.camera.max_fps);
 
-        let (runtime, slot) = if cfg.real_exec {
-            let rt = RuntimeHandle::cpu()?;
-            let mut slot = ModelSlot::new(rt.clone(), profile.mem_budget_bytes);
+        let (backend, slot) = if cfg.real_exec {
+            let be = runtime::default_backend(&profile, &registry)?;
+            let mut slot = ModelSlot::new(Arc::clone(&be), profile.mem_budget_bytes);
             slot.swap_to(&registry, &initial.variant)
                 .context("loading initial model")?;
-            (Some(rt), Some(slot))
+            (Some(be), Some(slot))
         } else {
             (None, None)
         };
@@ -173,7 +174,7 @@ impl Application {
             manager,
             camera,
             ui,
-            runtime,
+            backend,
             slot,
             frames_seen: 0,
             frames_processed: 0,
@@ -323,8 +324,8 @@ impl Application {
     }
 
     pub fn shutdown(self) {
-        if let Some(rt) = self.runtime {
-            rt.shutdown();
+        if let Some(be) = self.backend {
+            be.shutdown();
         }
     }
 }
@@ -341,7 +342,7 @@ mod tests {
             Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 },
             SearchSpace::family("mobilenet_v2_100"),
         );
-        c.real_exec = false; // fake registry has no artifacts
+        c.real_exec = false; // latency-only runs keep these tests fast
         c.lut_runs = 20;
         c
     }
@@ -386,5 +387,23 @@ mod tests {
         app.run(15, &[]).unwrap();
         // >= 15 frame intervals at 30 fps
         assert!(app.sim.clock.now_ms() >= 14.0 * 33.0);
+    }
+
+    #[test]
+    fn hermetic_real_exec_runs_backend_numerics() {
+        // real_exec with no artifacts: the app must wire in SimBackend and
+        // produce per-frame numerics with plausible online accuracy.
+        let mut c = cfg("samsung_a71");
+        c.real_exec = true;
+        let mut app = Application::build(c, fake_registry()).unwrap();
+        let recs = app.run(60, &[]).unwrap();
+        assert!(!recs.is_empty());
+        assert!(recs.iter().all(|r| r.host_ms.is_some()), "backend numerics missing");
+        let scored: Vec<bool> = recs.iter().filter_map(|r| r.correct).collect();
+        assert!(!scored.is_empty());
+        let acc = scored.iter().filter(|&&c| c).count() as f64 / scored.len() as f64;
+        assert!(acc > 0.5, "online accuracy collapsed: {acc}");
+        assert!(app.gallery.len() > 0);
+        app.shutdown();
     }
 }

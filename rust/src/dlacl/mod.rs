@@ -8,11 +8,16 @@
 //! the input pipeline (resolution adaptation from the camera stream) and
 //! executes the online model selection orders issued by the Runtime
 //! Manager.
+//!
+//! DLACL is execution-engine-agnostic: it drives whichever [`Backend`] the
+//! application wired in (PJRT artifacts or the hermetic simulator).
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::model::{ModelVariant, Registry};
-use crate::runtime::{ExecOutput, RuntimeHandle};
+use crate::runtime::{Backend, ExecOutput};
 
 /// Model-dependent buffer set for one resident variant.
 #[derive(Debug)]
@@ -38,7 +43,7 @@ impl BufferSet {
 /// The DLACL model slot: at most one resident variant per slot, swapped on
 /// Runtime Manager orders.
 pub struct ModelSlot {
-    runtime: RuntimeHandle,
+    runtime: Arc<dyn Backend>,
     resident: Option<(ModelVariant, BufferSet)>,
     /// Device memory budget DLACL may use (from the MDCL resource model).
     budget_bytes: u64,
@@ -47,7 +52,7 @@ pub struct ModelSlot {
 }
 
 impl ModelSlot {
-    pub fn new(runtime: RuntimeHandle, budget_bytes: u64) -> Self {
+    pub fn new(runtime: Arc<dyn Backend>, budget_bytes: u64) -> Self {
         ModelSlot { runtime, resident: None, budget_bytes, swaps: 0 }
     }
 
@@ -59,7 +64,7 @@ impl ModelSlot {
         self.resident.as_ref().map_or(0, |(_, b)| b.total_bytes)
     }
 
-    /// Swap in `variant`: budget check, compile+cache via the runtime,
+    /// Swap in `variant`: budget check, compile+cache via the backend,
     /// allocate the statically-sized buffers, release the old set.
     pub fn swap_to(&mut self, registry: &Registry, variant: &str) -> Result<()> {
         if self.resident().map(|v| v.name.as_str()) == Some(variant) {
@@ -141,8 +146,14 @@ pub fn decode_top1(output: &[f32], n_classes: usize) -> (usize, f32) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::profiles::samsung_a71;
     use crate::model::test_fixtures::fake_registry;
-    use crate::runtime::write_tiny_hlo;
+    use crate::runtime::SimBackend;
+    use crate::sil::camera::class_frame;
+
+    fn backend() -> Arc<dyn Backend> {
+        Arc::new(SimBackend::new(samsung_a71(), fake_registry()))
+    }
 
     #[test]
     fn stage_input_identity_when_same_size() {
@@ -182,46 +193,57 @@ mod tests {
 
     #[test]
     fn swap_rejects_over_budget() {
-        let rt = crate::runtime::RuntimeHandle::cpu().unwrap();
         let reg = fake_registry();
-        let mut slot = ModelSlot::new(rt.clone(), 10); // 10-byte budget
+        let mut slot = ModelSlot::new(backend(), 10); // 10-byte budget
         let err = slot.swap_to(&reg, "mobilenet_v2_100__fp32__b1").unwrap_err();
         assert!(err.to_string().contains("budget"), "{err}");
-        rt.shutdown();
     }
 
     #[test]
     fn swap_unknown_variant_fails() {
-        let rt = crate::runtime::RuntimeHandle::cpu().unwrap();
         let reg = fake_registry();
-        let mut slot = ModelSlot::new(rt.clone(), u64::MAX);
+        let mut slot = ModelSlot::new(backend(), u64::MAX);
         assert!(slot.swap_to(&reg, "ghost__fp32__b1").is_err());
-        rt.shutdown();
     }
 
     #[test]
     fn infer_without_model_fails() {
-        let rt = crate::runtime::RuntimeHandle::cpu().unwrap();
-        let mut slot = ModelSlot::new(rt.clone(), u64::MAX);
+        let mut slot = ModelSlot::new(backend(), u64::MAX);
         assert!(slot.infer(&[0.0; 12], 2, 2).is_err());
-        rt.shutdown();
     }
 
     #[test]
     fn swap_is_idempotent_and_counts() {
-        // Use the tiny HLO under a fake-registry name by pointing the
-        // registry's artifacts dir at the temp dir with a matching filename.
-        let rt = crate::runtime::RuntimeHandle::cpu().unwrap();
-        let tiny = write_tiny_hlo();
-        let dir = tiny.parent().unwrap().to_path_buf();
-        let manifest = crate::model::test_fixtures::fake_manifest()
-            .replace("mobilenet_v2_100__fp32__b1.hlo.txt", "tiny.hlo.txt");
-        let reg = crate::model::Registry::from_manifest_json(&manifest, dir).unwrap();
-        let mut slot = ModelSlot::new(rt.clone(), u64::MAX);
+        let reg = fake_registry();
+        let mut slot = ModelSlot::new(backend(), u64::MAX);
         slot.swap_to(&reg, "mobilenet_v2_100__fp32__b1").unwrap();
         slot.swap_to(&reg, "mobilenet_v2_100__fp32__b1").unwrap();
         assert_eq!(slot.swaps, 1);
         assert!(slot.resident_bytes() > 0);
-        rt.shutdown();
+    }
+
+    #[test]
+    fn swap_evicts_outgoing_variant() {
+        let be = backend();
+        let reg = fake_registry();
+        let mut slot = ModelSlot::new(Arc::clone(&be), u64::MAX);
+        slot.swap_to(&reg, "mobilenet_v2_100__fp32__b1").unwrap();
+        slot.swap_to(&reg, "mobilenet_v2_100__int8__b1").unwrap();
+        assert_eq!(be.loaded().unwrap(),
+                   vec!["mobilenet_v2_100__int8__b1".to_string()]);
+        assert_eq!(slot.swaps, 2);
+    }
+
+    #[test]
+    fn infer_stages_and_decodes_through_backend() {
+        let reg = fake_registry();
+        let v = reg.get("mobilenet_v2_100__fp32__b1").unwrap().clone();
+        let mut slot = ModelSlot::new(backend(), u64::MAX);
+        slot.swap_to(&reg, &v.name).unwrap();
+        let frame = class_frame(v.resolution, 3);
+        let out = slot.infer(&frame, v.resolution, v.resolution).unwrap();
+        assert_eq!(out.values.len(), v.output_elems());
+        assert_eq!(decode_top1(&out.values, 10).0, 3);
+        assert!(out.host_ms > 0.0);
     }
 }

@@ -20,6 +20,12 @@ use crate::util::stats::{geomean, Percentile};
 pub const DEVICE: &str = "samsung_a71";
 pub const FAMILY: &str = "mobilenet_v2_140";
 
+/// The paper's Fig 7 family when the real zoo is loaded; the synthetic
+/// registry's MobileNet analogue in hermetic mode.
+fn pick_family(registry: &Registry) -> &'static str {
+    registry.family_or(FAMILY, "mobilenet_v2_100")
+}
+
 /// A point on the Fig 7 curve.
 #[derive(Debug, Clone)]
 pub struct LoadPoint {
@@ -53,7 +59,8 @@ fn policy() -> Policy {
 
 pub fn run(registry: &Registry, real_exec: bool) -> Result<Fig7Result> {
     let objective = Objective::MinLatency { stat: Percentile::P90, epsilon: 0.0 };
-    let mut cfg = AppConfig::new(DEVICE, objective, SearchSpace::family(FAMILY));
+    let mut cfg = AppConfig::new(DEVICE, objective,
+                                 SearchSpace::family(pick_family(registry)));
     cfg.real_exec = real_exec;
     cfg.lut_runs = 100;
     cfg.policy = policy();
@@ -129,8 +136,9 @@ pub fn run(registry: &Registry, real_exec: bool) -> Result<Fig7Result> {
 }
 
 pub fn print(registry: &Registry, real_exec: bool) -> Result<()> {
+    let family = pick_family(registry);
     let r = run(registry, real_exec)?;
-    println!("FIG 7 — Runtime Manager under device load ({FAMILY} on {DEVICE})");
+    println!("FIG 7 — Runtime Manager under device load ({family} on {DEVICE})");
     println!("initial engine: {}", r.initial_engine.name());
     // Down-sampled curve.
     println!("{:>6} {:>6} {:>12} {:>12} {:<6}",

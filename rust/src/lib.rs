@@ -2,15 +2,35 @@
 //!
 //! A Rust + JAX + Pallas reproduction of *OODIn* (Venieris, Panopoulos,
 //! Venieris, 2021).  Python authors and AOT-compiles the model zoo once
-//! (`make artifacts`); this crate is the entire online system:
+//! (`make artifacts`); this crate is the entire online system.
+//!
+//! ## Execution backends
+//!
+//! Every layer above [`runtime`] talks to the execution engine through the
+//! [`runtime::Backend`] trait — the swappable-engine seam the paper's
+//! multi-layer architecture is built around:
+//!
+//! * **`SimBackend`** (default): deterministic and hermetic.  Outputs are
+//!   synthesised from the synthetic scene model at manifest-accurate top-1
+//!   rates; latencies come from the `perf` roofline + `devicesim`
+//!   contention/thermal + `dvfs` governor state.  `cargo test` passes with
+//!   no Python, no XLA and no `artifacts/` directory.
+//! * **PJRT** (`--features pjrt`): the real executor thread compiling and
+//!   running the AOT HLO-text artifacts on the host CPU client.
+//!
+//! See `rust/README.md` for the hermetic vs. artifact-backed test matrix.
+//!
+//! ## Layers
 //!
 //! * [`model`] — the model tuple `m = <task, w, s_m, s_in, a, p>` and the
-//!   variant registry loaded from `artifacts/manifest.json`.
+//!   variant registry loaded from `artifacts/manifest.json` (or the
+//!   synthetic fixture registry in hermetic mode).
 //! * [`device`] — the resource model `R = <CE, N_cores, C, DVFS, b, v_os,
 //!   v_camera>` with the three Table I phone profiles.
 //! * [`perf`] / [`dvfs`] / [`devicesim`] — the heterogeneous-hardware
 //!   substrate: roofline engine model, governors, thermal RC, contention.
-//! * [`runtime`] — the PJRT executor (HLO-text artifacts, CPU client).
+//! * [`runtime`] — the [`runtime::Backend`] trait + its PJRT and simulator
+//!   implementations.
 //! * [`measurements`] — Device Measurements sweeps -> look-up tables.
 //! * [`optimizer`] — System Optimisation: the MOO formulations of Eq. 3-5
 //!   and the enumerative LUT search.
@@ -43,20 +63,47 @@ pub mod util;
 /// Default artifacts directory (relative to the repo root).
 pub const ARTIFACTS_DIR: &str = "artifacts";
 
-/// Load the model registry from the conventional artifacts location,
-/// walking up from the current directory so examples/benches work from any
-/// workspace subdirectory.
-pub fn load_registry() -> anyhow::Result<model::Registry> {
-    let mut dir = std::env::current_dir()?;
+/// Locate the artifacts directory by walking up from the current directory
+/// (so examples/benches work from any workspace subdirectory); `None` when
+/// no `artifacts/manifest.json` exists anywhere up the tree.
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
     loop {
-        let candidate = dir.join(ARTIFACTS_DIR).join("manifest.json");
-        if candidate.exists() {
-            return model::Registry::load(dir.join(ARTIFACTS_DIR));
+        let candidate = dir.join(ARTIFACTS_DIR);
+        if candidate.join("manifest.json").exists() {
+            return Some(candidate);
         }
         if !dir.pop() {
-            anyhow::bail!(
-                "artifacts/manifest.json not found; run `make artifacts` first"
+            return None;
+        }
+    }
+}
+
+/// Load the model registry from the conventional artifacts location.
+pub fn load_registry() -> anyhow::Result<model::Registry> {
+    match find_artifacts_dir() {
+        Some(dir) => model::Registry::load(dir),
+        None => anyhow::bail!(
+            "artifacts/manifest.json not found; run `make artifacts` first"
+        ),
+    }
+}
+
+/// Load the real registry when `make artifacts` has been run, the synthetic
+/// fixture registry otherwise — the entry point the CLI, benches and
+/// integration tests use so the whole stack runs hermetically on
+/// `SimBackend` when no artifacts exist.  A manifest that exists but fails
+/// to load is a real error, not a reason to silently switch to the
+/// synthetic zoo.
+pub fn load_registry_or_synthetic() -> anyhow::Result<model::Registry> {
+    match find_artifacts_dir() {
+        Some(dir) => model::Registry::load(dir),
+        None => {
+            eprintln!(
+                "note: artifacts/manifest.json not found — running hermetically \
+                 on the synthetic registry + SimBackend"
             );
+            Ok(model::test_fixtures::fake_registry())
         }
     }
 }

@@ -8,8 +8,11 @@
 //! oodin measure --device <name> [--out lut.json] [--host-calibrated]
 //! oodin optimize --use-case <file.json>      Run System Optimisation
 //! oodin resources                            Print the detected R per device
-//! oodin serve   --family <f> [--precision p] [--requests n]
+//! oodin serve   --family <f> [--precision p] [--requests n] [--device d]
 //! ```
+//!
+//! Every command runs hermetically when `artifacts/` is absent: the
+//! synthetic registry + SimBackend stand in for the AOT zoo + PJRT.
 
 use anyhow::{bail, Context, Result};
 
@@ -18,9 +21,9 @@ use oodin::experiments::{fig3, fig456, fig7, fig8, tables};
 use oodin::measurements::Measurer;
 use oodin::model::Precision;
 use oodin::optimizer::Optimizer;
-use oodin::runtime::RuntimeHandle;
+use oodin::runtime::{default_backend, Backend};
 use oodin::serving::{Server, ServerConfig};
-use oodin::{load_registry, mdcl};
+use oodin::{load_registry_or_synthetic, mdcl};
 
 fn main() {
     if let Err(e) = run() {
@@ -102,7 +105,9 @@ fn print_usage() {
          \x20 measure  --device <name> [--out f] [--host-calibrated]  device sweep\n\
          \x20 optimize --use-case <file.json>    run System Optimisation\n\
          \x20 resources                           print resource model R per device\n\
-         \x20 serve    --family <f> [--precision p] [--requests n]  serving demo"
+         \x20 serve    --family <f> [--precision p] [--requests n] [--device d]  serving demo\n\
+         \n\
+         (no artifacts/?  everything runs on the hermetic SimBackend)"
     );
 }
 
@@ -111,7 +116,7 @@ fn cmd_report(args: &Args) -> Result<()> {
         tables::print_table1();
     }
     if args.has("table2") || !args.has("table1") {
-        let registry = load_registry()?;
+        let registry = load_registry_or_synthetic()?;
         tables::print_table2(&registry);
     }
     Ok(())
@@ -122,7 +127,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         .positional
         .first()
         .context("exp needs a figure id (fig3..fig8)")?;
-    let registry = load_registry()?;
+    let registry = load_registry_or_synthetic()?;
     match which.as_str() {
         "fig3" => fig3::print(&registry)?,
         "fig4" => fig456::print(&registry, Some("sony_c5"))?,
@@ -141,12 +146,12 @@ fn cmd_exp(args: &Args) -> Result<()> {
 
 fn cmd_measure(args: &Args) -> Result<()> {
     let device = mdcl::detect(args.flag("device").context("--device required")?)?;
-    let registry = load_registry()?;
-    let rt;
+    let registry = load_registry_or_synthetic()?;
+    let backend;
     let mut measurer = Measurer::new(&device, &registry);
     if args.has("host-calibrated") {
-        rt = RuntimeHandle::cpu()?;
-        measurer = measurer.host_calibrated(&rt);
+        backend = default_backend(&device, &registry)?;
+        measurer = measurer.host_calibrated(backend.as_ref());
     }
     let lut = measurer.measure_all()?;
     println!("measured {} configurations on {}", lut.len(), device.name);
@@ -160,7 +165,7 @@ fn cmd_measure(args: &Args) -> Result<()> {
 fn cmd_optimize(args: &Args) -> Result<()> {
     let uc = UseCase::from_file(args.flag("use-case").context("--use-case required")?)?;
     let device = mdcl::detect(&uc.device)?;
-    let registry = load_registry()?;
+    let registry = load_registry_or_synthetic()?;
     let lut = Measurer::new(&device, &registry).measure_all()?;
     let opt = Optimizer::new(&device, &registry, &lut).with_camera_fps(uc.camera_fps);
     let best = opt.optimize(uc.objective, &uc.space)?;
@@ -188,13 +193,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let family = args.flag("family").unwrap_or("mobilenet_v2_100");
     let precision = Precision::parse(args.flag("precision").unwrap_or("fp32"))?;
     let n: usize = args.flag("requests").map_or(Ok(64), |s| s.parse())?;
-    let registry = load_registry()?;
-    let rt = RuntimeHandle::cpu()?;
+    let device = mdcl::detect(args.flag("device").unwrap_or("samsung_a71"))?;
+    let registry = load_registry_or_synthetic()?;
+    let rt = default_backend(&device, &registry)?;
     let cfg = ServerConfig::for_family(&registry, family, precision)?;
-    println!("serving {family} ({}) with batch sizes {:?}",
+    println!("serving {family} ({}) on the {} backend with batch sizes {:?}",
              precision.name(),
+             rt.kind(),
              cfg.variants.iter().map(|(b, _)| *b).collect::<Vec<_>>());
-    let srv = Server::start(rt.clone(), &registry, cfg)?;
+    let srv = Server::start(std::sync::Arc::clone(&rt), &registry, cfg)?;
 
     let res = registry
         .find(family, precision, 1)

@@ -24,7 +24,7 @@ use crate::device::{DeviceProfile, EngineKind};
 use crate::dvfs::Governor;
 use crate::model::Registry;
 use crate::perf::{self, ExecConditions};
-use crate::runtime::RuntimeHandle;
+use crate::runtime::Backend;
 use crate::util::json::{self, Value};
 use crate::util::rng::Rng;
 use crate::util::stats::LatencyStats;
@@ -164,8 +164,8 @@ pub struct Measurer<'a> {
     /// Log-normal sigma of run-to-run jitter.
     pub noise_sigma: f64,
     pub mode: MeasureMode,
-    /// Required for `HostCalibrated`.
-    pub runtime: Option<&'a RuntimeHandle>,
+    /// Required for `HostCalibrated`: any execution backend (PJRT or sim).
+    pub runtime: Option<&'a dyn Backend>,
 }
 
 impl<'a> Measurer<'a> {
@@ -187,7 +187,7 @@ impl<'a> Measurer<'a> {
         self
     }
 
-    pub fn host_calibrated(mut self, rt: &'a RuntimeHandle) -> Self {
+    pub fn host_calibrated(mut self, rt: &'a dyn Backend) -> Self {
         self.mode = MeasureMode::HostCalibrated;
         self.runtime = Some(rt);
         self
@@ -265,16 +265,23 @@ impl<'a> Measurer<'a> {
         })
     }
 
-    /// Median real host latency of the artifact (few runs; used as the CPU
-    /// calibration anchor).
+    /// Median real host latency through the backend (few runs; used as the
+    /// CPU calibration anchor).  `None` when the backend has no artifact
+    /// for this variant (PJRT before `make artifacts`) — the model
+    /// prediction then stands in.  A load failure on an artifact that
+    /// exists (corrupt HLO) is a real error and propagates.
     fn host_latency_ms(&self, v: &crate::model::ModelVariant)
                        -> Result<Option<f64>> {
         let Some(rt) = self.runtime else { return Ok(None) };
         let path = self.registry.hlo_path(v);
-        if !path.exists() {
+        if let Err(e) = rt.load(&v.name, &path) {
+            if path.exists() {
+                return Err(e.context(format!(
+                    "host calibration: loading artifact for `{}`", v.name
+                )));
+            }
             return Ok(None);
         }
-        rt.load(&v.name, &path)?;
         let input = vec![0.1f32; v.input_elems()];
         let mut times = Vec::new();
         for _ in 0..5 {
@@ -381,6 +388,22 @@ mod tests {
             assert_eq!(b.latency, e.latency);
             assert_eq!(b.mem_bytes, e.mem_bytes);
         }
+    }
+
+    #[test]
+    fn host_calibrated_against_sim_backend() {
+        // Hermetic calibration: the CPU anchor comes from SimBackend
+        // executions instead of real PJRT runs.
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let be = crate::runtime::SimBackend::new(dev.clone(), reg.clone());
+        let lut = Measurer::new(&dev, &reg)
+            .with_runs(10, 1)
+            .host_calibrated(&be)
+            .measure_all()
+            .unwrap();
+        assert_eq!(lut.len(), 12 * 6 * 3);
+        assert!(lut.entries.values().all(|e| e.latency.avg > 0.0));
     }
 
     #[test]

@@ -222,6 +222,17 @@ impl Registry {
                 -> Option<&ModelVariant> {
         self.get(&format!("{family}__{}__b{batch}", precision.name()))
     }
+
+    /// `preferred` when its FP32 batch-1 variant exists here, `fallback`
+    /// otherwise — experiment drivers target the real zoo's flagship but
+    /// must run hermetically on the synthetic registry.
+    pub fn family_or<'s>(&self, preferred: &'s str, fallback: &'s str) -> &'s str {
+        if self.find(preferred, Precision::Fp32, 1).is_some() {
+            preferred
+        } else {
+            fallback
+        }
+    }
 }
 
 /// Synthetic-manifest fixtures shared by unit tests, integration tests and
@@ -244,7 +255,7 @@ pub mod test_fixtures {
                 [("fp32", 32, 0.90), ("fp16", 16, 0.899), ("int8", 8, 0.885)]
             {
                 let out = if task == "cls" {
-                    format!("[1,10]")
+                    "[1,10]".to_string()
                 } else {
                     format!("[1,{res},{res},5]")
                 };
@@ -259,6 +270,21 @@ pub mod test_fixtures {
 
     pub fn fake_registry() -> Registry {
         Registry::from_manifest_json(&fake_manifest(), PathBuf::from("/tmp/fake"))
+            .unwrap()
+    }
+
+    /// A tiny serving-oriented manifest: one classification family compiled
+    /// at batch sizes 1 and 4 (the dynamic batcher's inputs), accuracy 1.0
+    /// so the SimBackend never corrupts predictions.
+    pub fn serving_registry(res: usize) -> Registry {
+        let mut models = Vec::new();
+        for b in [1usize, 4] {
+            models.push(format!(
+                r#"{{"name":"cls__fp32__b{b}","family":"cls","paper_name":"Tiny","task":"cls","precision":"fp32","bits":32,"resolution":{res},"batch":{b},"input_shape":[{b},{res},{res},3],"output_shape":[{b},10],"params":1000,"size_bytes":4000,"flops":100000,"accuracy":1.0,"accuracy_metric":"top1","hlo":"cls_b{b}.hlo.txt"}}"#
+            ));
+        }
+        let manifest = format!(r#"{{"version":1,"models":[{}]}}"#, models.join(","));
+        Registry::from_manifest_json(&manifest, PathBuf::from("/tmp/oodin_sim_srv"))
             .unwrap()
     }
 }

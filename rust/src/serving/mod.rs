@@ -1,5 +1,5 @@
-//! Async serving front-end: bounded request queue + dynamic batcher over the
-//! PJRT executor.
+//! Async serving front-end: bounded request queue + dynamic batcher over
+//! any execution [`Backend`].
 //!
 //! The AOT path compiles batched executables for the flagship model
 //! (b=1/4/8); the batcher drains the queue, picks the largest compiled batch
@@ -22,7 +22,7 @@ use anyhow::{anyhow, Result};
 
 use crate::dlacl::{decode_top1, stage_input};
 use crate::model::{ModelVariant, Registry};
-use crate::runtime::RuntimeHandle;
+use crate::runtime::Backend;
 use crate::telemetry::Telemetry;
 
 /// One classification request (a camera frame).
@@ -91,9 +91,9 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the server: loads every batched executable, then spawns the
-    /// batcher thread.
-    pub fn start(runtime: RuntimeHandle, registry: &Registry, cfg: ServerConfig)
+    /// Start the server: loads every batched executable on the backend,
+    /// then spawns the batcher thread.
+    pub fn start(runtime: Arc<dyn Backend>, registry: &Registry, cfg: ServerConfig)
                  -> Result<Self> {
         let mut loaded: Vec<(usize, ModelVariant)> = Vec::new();
         for (b, name) in &cfg.variants {
@@ -101,7 +101,7 @@ impl Server {
                 .get(name)
                 .ok_or_else(|| anyhow!("variant `{name}` not in registry"))?
                 .clone();
-            runtime.load(name, registry.hlo_path(&v))?;
+            runtime.load(name, &registry.hlo_path(&v))?;
             loaded.push((*b, v));
         }
         let telemetry = Arc::new(Telemetry::new());
@@ -158,7 +158,7 @@ impl Drop for Server {
     }
 }
 
-fn batcher_main(rx: Receiver<Request>, runtime: RuntimeHandle,
+fn batcher_main(rx: Receiver<Request>, runtime: Arc<dyn Backend>,
                 variants: Vec<(usize, ModelVariant)>, cfg: ServerConfig,
                 telemetry: Arc<Telemetry>, stop: Arc<AtomicBool>) {
     let max_batch = variants.last().map(|(b, _)| *b).unwrap_or(1);
@@ -187,7 +187,7 @@ fn batcher_main(rx: Receiver<Request>, runtime: RuntimeHandle,
                 Err(_) => break,
             }
         }
-        serve_batch(&runtime, &variants, &cfg, batch, &telemetry);
+        serve_batch(&*runtime, &variants, &cfg, batch, &telemetry);
     }
 }
 
@@ -201,7 +201,7 @@ fn pick_variant<'v>(variants: &'v [(usize, ModelVariant)], len: usize)
         .unwrap_or(&variants[0])
 }
 
-fn serve_batch(runtime: &RuntimeHandle, variants: &[(usize, ModelVariant)],
+fn serve_batch(runtime: &dyn Backend, variants: &[(usize, ModelVariant)],
                cfg: &ServerConfig, batch: Vec<Request>, telemetry: &Telemetry) {
     let mut remaining = batch;
     while !remaining.is_empty() {
@@ -258,101 +258,69 @@ fn serve_batch(runtime: &RuntimeHandle, variants: &[(usize, ModelVariant)],
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::profiles::samsung_a71;
+    use crate::model::test_fixtures::serving_registry;
+    use crate::runtime::SimBackend;
+    use crate::sil::camera::class_frame;
 
-    /// Tiny classifier HLO: logits = broadcast of mean(x) * [0,1,2,...,9]
-    /// over batch B — class 9 always wins for positive input.  Shapes match
-    /// a 4x4x3 "camera" model with 10 classes.
-    fn tiny_classifier(b: usize) -> String {
-        format!(
-            r#"HloModule clsb{b}, entry_computation_layout={{(f32[{b},4,4,3]{{3,2,1,0}})->(f32[{b},10]{{1,0}})}}
+    const RES: usize = 16;
 
-add_f32 {{
-  a = f32[] parameter(0)
-  b = f32[] parameter(1)
-  ROOT r = f32[] add(a, b)
-}}
-
-ENTRY main {{
-  x = f32[{b},4,4,3]{{3,2,1,0}} parameter(0)
-  zero = f32[] constant(0)
-  sum = f32[{b}]{{0}} reduce(x, zero), dimensions={{1,2,3}}, to_apply=add_f32
-  ramp = f32[10]{{0}} constant({{0,1,2,3,4,5,6,7,8,9}})
-  sb = f32[{b},10]{{1,0}} broadcast(sum), dimensions={{0}}
-  rb = f32[{b},10]{{1,0}} broadcast(ramp), dimensions={{1}}
-  prod = f32[{b},10]{{1,0}} multiply(sb, rb)
-  ROOT out = (f32[{b},10]{{1,0}}) tuple(prod)
-}}
-"#
-        )
+    fn backend(reg: &Registry) -> Arc<dyn Backend> {
+        Arc::new(SimBackend::new(samsung_a71(), reg.clone()))
     }
 
-    fn test_registry() -> (Registry, std::path::PathBuf) {
-        let dir = std::env::temp_dir().join(format!("oodin_srv_{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        let mut models = Vec::new();
-        for b in [1usize, 4] {
-            std::fs::write(dir.join(format!("cls_b{b}.hlo.txt")), tiny_classifier(b))
-                .unwrap();
-            models.push(format!(
-                r#"{{"name":"cls__fp32__b{b}","family":"cls","paper_name":"Tiny","task":"cls","precision":"fp32","bits":32,"resolution":4,"batch":{b},"input_shape":[{b},4,4,3],"output_shape":[{b},10],"params":0,"size_bytes":10,"flops":100,"accuracy":1.0,"accuracy_metric":"top1","hlo":"cls_b{b}.hlo.txt"}}"#
-            ));
-        }
-        let manifest = format!(r#"{{"version":1,"models":[{}]}}"#, models.join(","));
-        (Registry::from_manifest_json(&manifest, dir.clone()).unwrap(), dir)
+    fn config(reg: &Registry) -> ServerConfig {
+        ServerConfig::for_family(reg, "cls", crate::model::Precision::Fp32).unwrap()
     }
 
     #[test]
     fn serves_single_request() {
-        let (reg, _dir) = test_registry();
-        let rt = RuntimeHandle::cpu().unwrap();
-        let cfg = ServerConfig::for_family(&reg, "cls", crate::model::Precision::Fp32)
-            .unwrap();
-        let srv = Server::start(rt.clone(), &reg, cfg).unwrap();
-        let rx = srv.submit(vec![1.0; 4 * 4 * 3], 4, 4).unwrap();
+        let reg = serving_registry(RES);
+        let srv = Server::start(backend(&reg), &reg, config(&reg)).unwrap();
+        let rx = srv.submit(class_frame(RES, 9), RES, RES).unwrap();
         let resp = rx.recv().unwrap().unwrap();
-        assert_eq!(resp.class, 9); // positive input -> max ramp class
+        assert_eq!(resp.class, 9);
         assert!(resp.total_ms >= 0.0);
         srv.stop();
-        rt.shutdown();
     }
 
     #[test]
     fn batches_concurrent_requests() {
-        let (reg, _dir) = test_registry();
-        let rt = RuntimeHandle::cpu().unwrap();
-        let mut cfg = ServerConfig::for_family(&reg, "cls",
-                                               crate::model::Precision::Fp32).unwrap();
+        let reg = serving_registry(RES);
+        let mut cfg = config(&reg);
         cfg.max_batch_delay_ms = 20.0;
-        let srv = Server::start(rt.clone(), &reg, cfg).unwrap();
+        let srv = Server::start(backend(&reg), &reg, cfg).unwrap();
         let rxs: Vec<_> = (0..8)
-            .map(|_| srv.submit(vec![1.0; 48], 4, 4).unwrap())
+            .map(|c| srv.submit(class_frame(RES, c), RES, RES).unwrap())
             .collect();
         let resps: Vec<Response> = rxs
             .into_iter()
             .map(|rx| rx.recv().unwrap().unwrap())
             .collect();
-        assert!(resps.iter().all(|r| r.class == 9));
+        // Each response carries its own request's class — no cross-wiring.
+        for (c, r) in resps.iter().enumerate() {
+            assert_eq!(r.class, c, "response {c} mapped to wrong request");
+        }
         // At least one multi-sample batch must have formed.
         assert!(srv.telemetry.counter("batch_size_4") >= 1,
                 "batches: {:?}", srv.telemetry.snapshot());
         srv.stop();
-        rt.shutdown();
     }
 
     #[test]
     fn try_submit_backpressure() {
-        let (reg, _dir) = test_registry();
-        let rt = RuntimeHandle::cpu().unwrap();
-        let mut cfg = ServerConfig::for_family(&reg, "cls",
-                                               crate::model::Precision::Fp32).unwrap();
+        let reg = serving_registry(RES);
+        let be: Arc<dyn Backend> =
+            Arc::new(SimBackend::new(samsung_a71(), reg.clone()).with_wall_delay_ms(5.0));
+        let mut cfg = config(&reg);
         cfg.queue_cap = 1;
-        cfg.max_batch_delay_ms = 50.0;
-        let srv = Server::start(rt.clone(), &reg, cfg).unwrap();
+        cfg.max_batch_delay_ms = 1.0;
+        let srv = Server::start(be, &reg, cfg).unwrap();
         // Saturate: with a 1-deep queue some try_submits must be refused.
         let mut refused = 0;
         let mut rxs = Vec::new();
         for _ in 0..64 {
-            match srv.try_submit(vec![1.0; 48], 4, 4).unwrap() {
+            match srv.try_submit(class_frame(RES, 1), RES, RES).unwrap() {
                 Some(rx) => rxs.push(rx),
                 None => refused += 1,
             }
@@ -362,12 +330,11 @@ ENTRY main {{
         }
         assert!(refused > 0, "expected backpressure refusals");
         srv.stop();
-        rt.shutdown();
     }
 
     #[test]
     fn pick_variant_prefers_largest_fitting() {
-        let (reg, _dir) = test_registry();
+        let reg = serving_registry(RES);
         let v1 = reg.get("cls__fp32__b1").unwrap().clone();
         let v4 = reg.get("cls__fp32__b4").unwrap().clone();
         let vars = vec![(1, v1), (4, v4)];

@@ -8,6 +8,21 @@ use crate::util::rng::Rng;
 
 pub const NUM_CLASSES: usize = 10;
 
+/// Class-blob channel weights (dominant / secondary) — shared with the
+/// SimBackend matched filter so generator and decoder stay in lockstep.
+pub const BLOB_AMP: f32 = 1.5;
+pub const BLOB_SECONDARY: f32 = 0.5;
+
+/// Scene-template geometry shared by the frame generator and the
+/// SimBackend matched filter (`runtime::sim::decode_scene`): the class
+/// blob's ring-position centre `(cy, cx)` and gaussian `sigma`.
+pub fn class_template(res: usize, label: usize) -> (f64, f64, f64) {
+    let c0 = res as f64 / 2.0;
+    let r0 = res as f64 * 0.30;
+    let ang = 2.0 * std::f64::consts::PI * label as f64 / NUM_CLASSES as f64;
+    (c0 + r0 * ang.sin(), c0 + r0 * ang.cos(), res as f64 * 0.10)
+}
+
 /// One captured RGB frame (HWC, f32).
 #[derive(Debug, Clone)]
 pub struct Frame {
@@ -49,13 +64,11 @@ impl SyntheticCamera {
         let res = self.resolution;
         let label = self.rng.below(NUM_CLASSES);
         let mut data = vec![0.0f32; res * res * 3];
-        let c0 = res as f64 / 2.0;
-        let r0 = res as f64 * 0.30;
-        let ang = 2.0 * std::f64::consts::PI * label as f64 / NUM_CLASSES as f64;
-        let cy = c0 + r0 * ang.sin() + self.rng.normal() * res as f64 * 0.03;
-        let cx = c0 + r0 * ang.cos() + self.rng.normal() * res as f64 * 0.03;
+        let (tcy, tcx, sigma) = class_template(res, label);
+        let cy = tcy + self.rng.normal() * res as f64 * 0.03;
+        let cx = tcx + self.rng.normal() * res as f64 * 0.03;
         let dom = label % 3;
-        self.add_blob(&mut data, cy, cx, res as f64 * 0.10, dom, 1.5);
+        self.add_blob(&mut data, cy, cx, sigma, dom, BLOB_AMP);
 
         // Two distractor blobs with random colours.
         for _ in 0..2 {
@@ -83,7 +96,7 @@ impl SyntheticCamera {
                 let g = (-d2 / (2.0 * sigma * sigma)).exp() as f32;
                 let i = (y * res + x) * 3;
                 data[i + dom] += amp * g;
-                data[i + (dom + 1) % 3] += 0.5 * g;
+                data[i + (dom + 1) % 3] += BLOB_SECONDARY * g;
             }
         }
     }
@@ -102,6 +115,26 @@ impl SyntheticCamera {
             }
         }
     }
+}
+
+/// A clean class-conditional frame (no noise, no distractors): just the
+/// class blob at its ring position with the dominant-channel pattern.
+/// Deterministic — used by backend/serving tests that need frames whose
+/// decoded class is exact.
+pub fn class_frame(res: usize, label: usize) -> Vec<f32> {
+    let mut data = vec![0.0f32; res * res * 3];
+    let (cy, cx, sigma) = class_template(res, label);
+    let dom = label % 3;
+    for y in 0..res {
+        for x in 0..res {
+            let d2 = (y as f64 - cy).powi(2) + (x as f64 - cx).powi(2);
+            let g = (-d2 / (2.0 * sigma * sigma)).exp() as f32;
+            let i = (y * res + x) * 3;
+            data[i + dom] += BLOB_AMP * g;
+            data[i + (dom + 1) % 3] += BLOB_SECONDARY * g;
+        }
+    }
+    data
 }
 
 #[cfg(test)]

@@ -1,0 +1,119 @@
+//! Golden test for the System Optimisation module: a fixed, hand-written
+//! LUT must make the complete enumerative search return a byte-stable
+//! `Design` (and metrics) for each `Objective`.  The expected output is
+//! pinned in `tests/golden/optimizer_designs.txt`; regenerate it after an
+//! intentional behaviour change with
+//!
+//!     UPDATE_GOLDEN=1 cargo test --test golden_optimizer
+//!
+//! The LUT entries are single-sample (all latency statistics collapse to
+//! the written value), so the expected winners are hand-derivable:
+//!
+//! * min-latency winners follow the raw minima (int8/NNAPI at 1.0 ms, or
+//!   FP32/GPU at 3.0 ms once ε = 0 excludes lossy precisions);
+//! * target-latency maximises accuracy inside the 3 ms budget (FP32/GPU);
+//! * the weighted accuracy+fps sum saturates fps at the camera rate, so
+//!   every FP32 r=1 design ties at score 2.0 and the stable sort keeps the
+//!   first LUT entry (CPU, 1 thread, performance).
+
+use std::collections::BTreeMap;
+
+use oodin::device::profiles::samsung_a71;
+use oodin::device::EngineKind;
+use oodin::dvfs::Governor;
+use oodin::measurements::{Lut, LutEntry, LutKey};
+use oodin::model::test_fixtures::fake_registry;
+use oodin::model::Registry;
+use oodin::optimizer::{Objective, Optimizer, SearchSpace};
+use oodin::util::stats::{LatencyStats, Percentile};
+
+fn fixed_lut(reg: &Registry) -> Lut {
+    let mut entries = BTreeMap::new();
+    let mut put = |variant: &str, engine, threads, governor, ms: f64| {
+        let v = reg.get(variant).expect(variant);
+        entries.insert(
+            LutKey { variant: variant.to_string(), engine, threads, governor },
+            LutEntry {
+                latency: LatencyStats::from_samples(&[ms]),
+                mem_bytes: v.mem_bytes(),
+                accuracy: v.accuracy,
+            },
+        );
+    };
+
+    use EngineKind::{Cpu, Gpu, Npu};
+    use Governor::{Performance as P, Schedutil as S};
+    let fp32 = "mobilenet_v2_100__fp32__b1";
+    let fp16 = "mobilenet_v2_100__fp16__b1";
+    let int8 = "mobilenet_v2_100__int8__b1";
+
+    put(fp32, Cpu, 1, P, 8.0);
+    put(fp32, Cpu, 4, P, 4.0);
+    put(fp32, Gpu, 1, P, 3.0);
+    put(fp32, Npu, 1, P, 6.0);
+    put(fp32, Cpu, 1, S, 10.0);
+    put(fp32, Cpu, 4, S, 5.0);
+    put(fp32, Gpu, 1, S, 3.75);
+    put(fp32, Npu, 1, S, 7.5);
+
+    put(fp16, Cpu, 4, P, 3.5);
+    put(fp16, Gpu, 1, P, 2.0);
+    put(fp16, Npu, 1, P, 4.0);
+    put(fp16, Cpu, 4, S, 4.375);
+    put(fp16, Gpu, 1, S, 2.5);
+    put(fp16, Npu, 1, S, 5.0);
+
+    put(int8, Cpu, 4, P, 2.5);
+    put(int8, Gpu, 1, P, 2.2);
+    put(int8, Npu, 1, P, 1.0);
+    put(int8, Cpu, 4, S, 3.125);
+    put(int8, Gpu, 1, S, 2.75);
+    put(int8, Npu, 1, S, 1.25);
+
+    Lut { device: "samsung_a71".to_string(), entries }
+}
+
+#[test]
+fn search_is_byte_stable_per_objective() {
+    let reg = fake_registry();
+    let lut = fixed_lut(&reg);
+    let dev = samsung_a71();
+    let opt = Optimizer::new(&dev, &reg, &lut).with_camera_fps(30.0);
+
+    let objectives: Vec<(&str, Objective)> = vec![
+        ("min_latency_avg_eps02",
+         Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.02 }),
+        ("min_latency_avg_eps0",
+         Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.0 }),
+        ("max_fps_eps02", Objective::MaxFps { epsilon: 0.02 }),
+        ("target_latency_3ms",
+         Objective::TargetLatency { t_target_ms: 3.0, stat: Percentile::Avg }),
+        ("max_acc_max_fps_w1", Objective::MaxAccMaxFps { w_fps: 1.0 }),
+    ];
+
+    let mut lines = Vec::new();
+    for (tag, obj) in objectives {
+        let best = opt.optimize(obj, &SearchSpace::default()).unwrap();
+        lines.push(format!(
+            "{tag}: {}|{}|{}|{}|r={}|T={:.4}ms|acc={:.4}",
+            best.design.variant,
+            best.design.hw.engine.name(),
+            best.design.hw.threads,
+            best.design.hw.governor.name(),
+            best.design.hw.recognition_rate,
+            best.latency_ms,
+            best.accuracy,
+        ));
+    }
+    let got = lines.join("\n") + "\n";
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/optimizer_designs.txt");
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(path, &got).unwrap();
+    }
+    let want = std::fs::read_to_string(path)
+        .expect("golden snapshot missing — run with UPDATE_GOLDEN=1");
+    assert_eq!(got, want,
+               "optimizer designs drifted from the golden snapshot \
+                (UPDATE_GOLDEN=1 to accept)");
+}

@@ -1,0 +1,129 @@
+//! Property-based tests for the serving front-end's batching coordinator,
+//! driven through the deterministic `SimBackend` (no artifacts needed).
+//! Hand-rolled in the `rust/tests/properties.rs` style: `util::rng::Rng`
+//! generates seeded random cases and every assertion prints its case id.
+//!
+//! Invariants:
+//! * no accepted request is ever dropped — every reply channel resolves;
+//! * responses map to their own requests (no cross-wiring inside a batch,
+//!   across chunked batches, or under queue pressure);
+//! * `try_submit` backpressure triggers at the configured queue bound and
+//!   accepted requests still complete.
+
+use std::sync::Arc;
+
+use oodin::device::profiles::samsung_a71;
+use oodin::model::test_fixtures::serving_registry;
+use oodin::model::{Precision, Registry};
+use oodin::runtime::{Backend, SimBackend};
+use oodin::serving::{Server, ServerConfig};
+use oodin::sil::camera::class_frame;
+use oodin::util::rng::Rng;
+
+const RES: usize = 16;
+
+fn backend(reg: &Registry, wall_delay_ms: f64) -> Arc<dyn Backend> {
+    Arc::new(
+        SimBackend::new(samsung_a71(), reg.clone()).with_wall_delay_ms(wall_delay_ms),
+    )
+}
+
+fn config(reg: &Registry) -> ServerConfig {
+    ServerConfig::for_family(reg, "cls", Precision::Fp32).unwrap()
+}
+
+#[test]
+fn prop_no_request_dropped_and_responses_map_to_requests() {
+    for case in 0..6u64 {
+        let mut rng = Rng::new(9000 + case);
+        let reg = serving_registry(RES);
+        let mut cfg = config(&reg);
+        cfg.max_batch_delay_ms = rng.range(0.0, 3.0);
+        cfg.queue_cap = 8 + rng.below(56);
+        let srv = Server::start(backend(&reg, 0.0), &reg, cfg).unwrap();
+
+        let n = 20 + rng.below(60);
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(10)).collect();
+        let rxs: Vec<_> = labels
+            .iter()
+            .map(|&c| srv.submit(class_frame(RES, c), RES, RES).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx
+                .recv()
+                .unwrap_or_else(|_| panic!("case {case}: request {i} dropped"))
+                .unwrap_or_else(|e| panic!("case {case}: request {i} failed: {e}"));
+            assert_eq!(resp.class, labels[i],
+                       "case {case}: response {i} mapped to wrong request");
+            assert!(resp.batch >= 1 && resp.queue_ms >= 0.0, "case {case}");
+        }
+        // Accounting: every accepted request rode exactly one batch.
+        assert_eq!(srv.telemetry.counter("batched_requests"), n as u64,
+                   "case {case}");
+        srv.stop();
+    }
+}
+
+#[test]
+fn prop_try_submit_backpressure_at_queue_bound() {
+    for case in 0..4u64 {
+        let mut rng = Rng::new(11_000 + case);
+        let reg = serving_registry(RES);
+        let mut cfg = config(&reg);
+        cfg.queue_cap = 1 + rng.below(3);
+        cfg.max_batch_delay_ms = 1.0;
+        // A real per-execution delay makes the queue fill deterministically.
+        let srv = Server::start(backend(&reg, 4.0), &reg, cfg).unwrap();
+
+        let mut accepted = Vec::new();
+        let mut refused = 0usize;
+        for i in 0..64usize {
+            let label = i % 10;
+            match srv.try_submit(class_frame(RES, label), RES, RES).unwrap() {
+                Some(rx) => accepted.push((label, rx)),
+                None => refused += 1,
+            }
+        }
+        assert!(refused > 0,
+                "case {case}: 64 instant submits against a <=4-deep queue \
+                 must hit backpressure");
+        // Everything accepted still completes, correctly mapped.
+        for (label, rx) in accepted {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.class, label, "case {case}");
+        }
+        srv.stop();
+    }
+}
+
+#[test]
+fn prop_mixed_submit_try_submit_consistent() {
+    // Interleave blocking and non-blocking submission under load; every
+    // delivered reply must still carry its own request's class.
+    for case in 0..4u64 {
+        let mut rng = Rng::new(13_000 + case);
+        let reg = serving_registry(RES);
+        let mut cfg = config(&reg);
+        cfg.queue_cap = 4;
+        cfg.max_batch_delay_ms = rng.range(0.5, 2.0);
+        let srv = Server::start(backend(&reg, 1.0), &reg, cfg).unwrap();
+
+        let mut pending = Vec::new();
+        for i in 0..40usize {
+            let label = rng.below(10);
+            if i % 2 == 0 {
+                pending.push((label, srv.submit(class_frame(RES, label), RES, RES).unwrap()));
+            } else if let Some(rx) =
+                srv.try_submit(class_frame(RES, label), RES, RES).unwrap()
+            {
+                pending.push((label, rx));
+            }
+        }
+        assert!(!pending.is_empty(), "case {case}");
+        for (label, rx) in pending {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.class, label, "case {case}");
+        }
+        srv.stop();
+    }
+}

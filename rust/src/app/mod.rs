@@ -69,6 +69,47 @@ pub enum ScenarioEvent {
     SetLoad { at_frame: u64, engine: EngineKind, load: f64 },
 }
 
+/// The canonical multi-app workload mix (the `multi` CLI scenario): up to
+/// four co-resident apps drawn from the paper's use-cases — an AI camera
+/// (latency-critical), a video conference (throughput), a gallery tagger
+/// and a scene segmenter.  Each app's SLO latency bound is set relative to
+/// its *solo-optimal* latency on this (device, LUT): `slo_factor` × solo —
+/// tight enough that naive co-location violates it under engine
+/// contention.  Families that are not in the registry or not deployable on
+/// the device are skipped, so the mix degrades gracefully on low-end
+/// profiles.
+pub fn multi_scenario(n: usize, device: &DeviceProfile, registry: &Registry,
+                      lut: &Lut, slo_factor: f64)
+                      -> Vec<crate::scheduler::WorkloadDescriptor> {
+    use crate::util::stats::Percentile;
+    let mix: [(&str, &str, f64, Objective); 4] = [
+        ("ai_camera", "mobilenet_v2_100", 60.0,
+         Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 }),
+        ("video_conference", "efficientnet_lite4", 30.0,
+         Objective::MaxFps { epsilon: 0.05 }),
+        ("gallery_tagger", "inception_v3", 15.0,
+         Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 }),
+        ("scene_segmenter", "deeplab_v3", 10.0,
+         Objective::MinLatency { stat: Percentile::P90, epsilon: 0.05 }),
+    ];
+    let opt = Optimizer::new(device, registry, lut);
+    let mut out = Vec::new();
+    for (app_id, family, arrival_fps, objective) in mix.into_iter().take(n) {
+        let Ok(solo) = opt.optimize(objective, &SearchSpace::family(family))
+        else {
+            continue; // family absent or undeployable on this device
+        };
+        out.push(crate::scheduler::WorkloadDescriptor {
+            app_id: app_id.to_string(),
+            family: family.to_string(),
+            arrival_fps,
+            objective,
+            slo_latency_ms: solo.latency_ms * slo_factor,
+        });
+    }
+    out
+}
+
 /// Per-frame record emitted by the application loop.
 #[derive(Debug, Clone)]
 pub struct FrameRecord {
@@ -387,6 +428,29 @@ mod tests {
         app.run(15, &[]).unwrap();
         // >= 15 frame intervals at 30 fps
         assert!(app.sim.clock.now_ms() >= 14.0 * 33.0);
+    }
+
+    #[test]
+    fn multi_scenario_sets_slos_from_solo_latency() {
+        let reg = fake_registry();
+        let dev = crate::device::profiles::samsung_a71();
+        let lut = crate::measurements::Measurer::new(&dev, &reg)
+            .with_runs(20, 2)
+            .measure_all()
+            .unwrap();
+        let descs = multi_scenario(4, &dev, &reg, &lut, 2.0);
+        assert_eq!(descs.len(), 4);
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        for d in &descs {
+            let solo = opt
+                .optimize(d.objective, &SearchSpace::family(&d.family))
+                .unwrap();
+            assert!((d.slo_latency_ms - 2.0 * solo.latency_ms).abs() < 1e-9,
+                    "{}", d.app_id);
+            assert!(d.arrival_fps > 0.0);
+        }
+        // Requesting fewer apps trims the mix from the front.
+        assert_eq!(multi_scenario(2, &dev, &reg, &lut, 2.0).len(), 2);
     }
 
     #[test]

@@ -7,6 +7,7 @@ pub mod fig3;
 pub mod fig456;
 pub mod fig7;
 pub mod fig8;
+pub mod multiapp;
 pub mod tables;
 
 use std::sync::Arc;

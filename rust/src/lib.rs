@@ -35,11 +35,16 @@
 //! * [`optimizer`] — System Optimisation: the MOO formulations of Eq. 3-5
 //!   and the enumerative LUT search.
 //! * [`manager`] — the Runtime Manager's adaptation state machine.
+//! * [`scheduler`] — the multi-app layer: N concurrent DL apps with
+//!   per-app SLOs, joint (σ₁…σ_N) optimisation under global resource
+//!   constraints, time-sliced engine arbitration with admission control,
+//!   and coordinated joint re-adaptation.
 //! * [`sil`] / [`dlacl`] / [`mdcl`] — the multi-layer mobile software
 //!   architecture (Fig 2).
 //! * [`app`] — the assembled Application; [`serving`] — the batched
-//!   request front-end; [`experiments`] — drivers regenerating every
-//!   table/figure of the paper's evaluation.
+//!   request front-end (single- and multi-app); [`experiments`] — drivers
+//!   regenerating every table/figure of the paper's evaluation plus the
+//!   multi-app contention table.
 
 pub mod app;
 pub mod config;
@@ -55,6 +60,7 @@ pub mod model;
 pub mod optimizer;
 pub mod perf;
 pub mod runtime;
+pub mod scheduler;
 pub mod serving;
 pub mod sil;
 pub mod telemetry;

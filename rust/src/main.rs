@@ -17,7 +17,7 @@
 use anyhow::{bail, Context, Result};
 
 use oodin::config::UseCase;
-use oodin::experiments::{fig3, fig456, fig7, fig8, tables};
+use oodin::experiments::{fig3, fig456, fig7, fig8, multiapp, tables};
 use oodin::measurements::Measurer;
 use oodin::model::Precision;
 use oodin::optimizer::Optimizer;
@@ -85,6 +85,7 @@ fn run() -> Result<()> {
         "optimize" => cmd_optimize(&args),
         "resources" => cmd_resources(),
         "serve" => cmd_serve(&args),
+        "multi" => cmd_multi(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -106,6 +107,7 @@ fn print_usage() {
          \x20 optimize --use-case <file.json>    run System Optimisation\n\
          \x20 resources                           print resource model R per device\n\
          \x20 serve    --family <f> [--precision p] [--requests n] [--device d]  serving demo\n\
+         \x20 multi    [--smoke] [--device d] [--apps n] [--windows w] [--json f]  multi-app contention table\n\
          \n\
          (no artifacts/?  everything runs on the hermetic SimBackend)"
     );
@@ -187,6 +189,25 @@ fn cmd_resources() -> Result<()> {
         println!("{}", mdcl::format_resource_model(&d));
     }
     Ok(())
+}
+
+fn cmd_multi(args: &Args) -> Result<()> {
+    let registry = load_registry_or_synthetic()?;
+    let mut cfg = if args.has("smoke") {
+        multiapp::MultiAppConfig::smoke()
+    } else {
+        multiapp::MultiAppConfig::full()
+    };
+    if let Some(d) = args.flag("device") {
+        cfg.devices = vec![d.to_string()];
+    }
+    if let Some(n) = args.flag("apps") {
+        cfg.app_counts = vec![n.parse().context("--apps")?];
+    }
+    if let Some(w) = args.flag("windows") {
+        cfg.windows = w.parse().context("--windows")?;
+    }
+    multiapp::print(&registry, &cfg, args.flag("json"))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

@@ -22,7 +22,20 @@ use crate::measurements::Lut;
 use crate::model::Registry;
 use crate::optimizer::{Design, Objective, Optimizer, SearchSpace};
 use crate::perf;
-use crate::util::stats::RollingWindow;
+use crate::util::stats::{Percentile, RollingWindow};
+
+/// Condition-adjusted LUT latency of a design: `lut(stat) · 2^load /
+/// thermal_scale` on the design's engine.  This is the Runtime Manager's
+/// re-ranking score, exposed as a free function so the multi-app
+/// `scheduler` can reuse it in joint re-optimisation.
+pub fn adjusted_latency(lut: &Lut, design: &Design, stat: Percentile,
+                        conds: &Conditions) -> Option<f64> {
+    let e = lut.get(&design.lut_key())?;
+    let k = design.hw.engine;
+    Some(e.latency.metric(stat)
+         * perf::contention(conds.load(k))
+         / conds.thermal_scale(k).max(1e-3))
+}
 
 /// Instantaneous per-engine conditions, as reported by MDCL middleware c.
 #[derive(Debug, Clone, Default)]
@@ -56,6 +69,34 @@ pub enum Reason {
     Degradation,
 }
 
+/// Why an observation tick did *not* produce a reconfiguration — the
+/// debuggability signal joint re-adaptation (the `scheduler` layer) needs to
+/// distinguish "holding by policy" from "nothing to react to".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HoldReason {
+    /// The check interval has not elapsed since the last evaluation.
+    NotDue,
+    /// Inside the post-switch quiet period; `remaining_ms` until it lifts.
+    Cooldown { remaining_ms: f64 },
+    /// Conditions are stable: no load shift, no confirmed degradation.
+    NoTrigger,
+    /// A trigger fired but the re-search found no feasible alternative.
+    NoAlternative,
+    /// The re-search picked the already-running design.
+    CurrentStillBest,
+    /// An alternative won, but by less than the hysteresis margin;
+    /// `predicted_gain` is its cur/best adjusted-latency ratio.
+    BelowHysteresis { predicted_gain: f64 },
+}
+
+/// Outcome of one observation tick: either a reconfiguration or the reason
+/// the manager held position.
+#[derive(Debug, Clone)]
+pub enum Decision {
+    Switch(Switch),
+    Hold(HoldReason),
+}
+
 /// A reconfiguration decision.
 #[derive(Debug, Clone)]
 pub struct Switch {
@@ -84,6 +125,11 @@ pub struct Policy {
     pub violation_ratio: f64,
     /// Quiet period after a switch (avoid flapping).
     pub cooldown_ms: f64,
+    /// Thermal frequency scale below which the engine counts as degraded
+    /// even when measured latency looks fine (middleware-c warning level).
+    pub thermal_alert_scale: f64,
+    /// Measured-latency samples kept in the rolling degradation window.
+    pub latency_window: usize,
 }
 
 impl Default for Policy {
@@ -95,6 +141,8 @@ impl Default for Policy {
             confirmations: 3,
             violation_ratio: 1.25,
             cooldown_ms: 1000.0,
+            thermal_alert_scale: 0.95,
+            latency_window: 8,
         }
     }
 }
@@ -122,25 +170,27 @@ pub struct RuntimeManager {
 impl RuntimeManager {
     pub fn new(device: Arc<DeviceProfile>, registry: Arc<Registry>, lut: Arc<Lut>,
                objective: Objective, space: SearchSpace, initial: Design) -> Self {
+        let policy = Policy::default();
         RuntimeManager {
             device,
             registry,
             lut,
             objective,
             space,
-            policy: Policy::default(),
             current: initial,
             last_loads: BTreeMap::new(),
             last_check_ms: f64::NEG_INFINITY,
             last_switch_ms: f64::NEG_INFINITY,
             violations: 0,
             degradation_start_ms: None,
-            window: RollingWindow::new(8),
+            window: RollingWindow::new(policy.latency_window.max(1)),
+            policy,
             switches: Vec::new(),
         }
     }
 
     pub fn with_policy(mut self, policy: Policy) -> Self {
+        self.window = RollingWindow::new(policy.latency_window.max(1));
         self.policy = policy;
         self
     }
@@ -157,12 +207,7 @@ impl RuntimeManager {
     /// `lut · 2^load / thermal_scale` on the design's engine.
     pub fn adjusted_latency(&self, design: &Design, conds: &Conditions)
                             -> Option<f64> {
-        let e = self.lut.get(&design.lut_key())?;
-        let k = design.hw.engine;
-        let adj = e.latency.metric(self.objective.stat())
-            * perf::contention(conds.load(k))
-            / conds.thermal_scale(k).max(1e-3);
-        Some(adj)
+        adjusted_latency(&self.lut, design, self.objective.stat(), conds)
     }
 
     /// Best design under adjusted conditions (same enumerative search as the
@@ -209,12 +254,24 @@ impl RuntimeManager {
     /// Periodic observation tick.  Returns a reconfiguration if one was
     /// decided at this tick.
     pub fn observe(&mut self, now_ms: f64, conds: &Conditions) -> Option<Switch> {
+        match self.decide(now_ms, conds) {
+            Decision::Switch(sw) => Some(sw),
+            Decision::Hold(_) => None,
+        }
+    }
+
+    /// Periodic observation tick with the declination reason made explicit:
+    /// either a reconfiguration, or *why* the manager held position (e.g.
+    /// `Cooldown`) — the signal joint re-adaptation consumes.
+    pub fn decide(&mut self, now_ms: f64, conds: &Conditions) -> Decision {
         if now_ms - self.last_check_ms < self.policy.check_interval_ms {
-            return None;
+            return Decision::Hold(HoldReason::NotDue);
         }
         self.last_check_ms = now_ms;
         if now_ms - self.last_switch_ms < self.policy.cooldown_ms {
-            return None;
+            return Decision::Hold(HoldReason::Cooldown {
+                remaining_ms: self.policy.cooldown_ms - (now_ms - self.last_switch_ms),
+            });
         }
 
         // Trigger 1: significant load change on any engine.
@@ -235,7 +292,8 @@ impl RuntimeManager {
             .window
             .mean()
             .map_or(false, |m| m > expected * self.policy.violation_ratio)
-            || conds.thermal_scale(self.current.hw.engine) < 0.95;
+            || conds.thermal_scale(self.current.hw.engine)
+                < self.policy.thermal_alert_scale;
         if degraded_now {
             if self.degradation_start_ms.is_none() {
                 self.degradation_start_ms = Some(now_ms);
@@ -248,7 +306,7 @@ impl RuntimeManager {
         let degradation_confirmed = self.violations >= self.policy.confirmations;
 
         if !load_changed && !degradation_confirmed {
-            return None;
+            return Decision::Hold(HoldReason::NoTrigger);
         }
         if load_changed {
             for k in EngineKind::ALL {
@@ -275,14 +333,22 @@ impl RuntimeManager {
             }
         }
         let conds = &eff;
-        let best = self.best_under(conds).ok()?;
+        let Ok(best) = self.best_under(conds) else {
+            return Decision::Hold(HoldReason::NoAlternative);
+        };
         if best == self.current {
-            return None;
+            return Decision::Hold(HoldReason::CurrentStillBest);
         }
-        let cur_adj = self.adjusted_latency(&self.current, conds)?;
-        let best_adj = self.adjusted_latency(&best, conds)?;
+        let (Some(cur_adj), Some(best_adj)) = (
+            self.adjusted_latency(&self.current, conds),
+            self.adjusted_latency(&best, conds),
+        ) else {
+            return Decision::Hold(HoldReason::NoAlternative);
+        };
         if cur_adj / best_adj < self.policy.min_improvement {
-            return None;
+            return Decision::Hold(HoldReason::BelowHysteresis {
+                predicted_gain: cur_adj / best_adj,
+            });
         }
 
         let reason = if degradation_confirmed {
@@ -307,7 +373,7 @@ impl RuntimeManager {
         self.degradation_start_ms = None;
         self.window.clear();
         self.switches.push(sw.clone());
-        Some(sw)
+        Decision::Switch(sw)
     }
 }
 
@@ -434,10 +500,28 @@ mod tests {
         }
         let (first, t_sw) = first.unwrap();
         // Immediately load the new engine too: within the cooldown the
-        // manager must hold position.
+        // manager must hold position — and say that cooldown is why.
         conds.loads.insert(first.to.hw.engine, 3.0);
-        let within = mgr.observe(t_sw + 100.0, &conds);
-        assert!(within.is_none());
+        match mgr.decide(t_sw + 300.0, &conds) {
+            Decision::Hold(HoldReason::Cooldown { remaining_ms }) => {
+                assert!(remaining_ms > 0.0 && remaining_ms < 1000.0,
+                        "remaining {remaining_ms}");
+            }
+            other => panic!("expected a cooldown hold, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn idle_hold_reports_no_trigger() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(30, 2).measure_all().unwrap();
+        let mut mgr = mk_manager(&dev, &reg, &lut);
+        let conds = Conditions::idle();
+        assert!(matches!(mgr.decide(0.0, &conds),
+                         Decision::Hold(HoldReason::NoTrigger)));
+        assert!(matches!(mgr.decide(10.0, &conds),
+                         Decision::Hold(HoldReason::NotDue)));
     }
 
     #[test]

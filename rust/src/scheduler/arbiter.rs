@@ -1,0 +1,207 @@
+//! Engine arbitration: time-sliced execution windows over the admitted
+//! apps.
+//!
+//! The joint search gives every app a design (and therefore an engine);
+//! the arbiter turns that assignment into a *window plan*: a fixed number
+//! of slices, each granting engines to apps such that
+//!
+//! * within one slice an engine is granted to at most one app (the
+//!   engine-exclusivity invariant — contended engines are shared across
+//!   slices by round-robin, never inside one), and
+//! * every app receives at least one grant per window (no admitted app
+//!   starves), with extra grants proportional to its demanded rate.
+
+use std::collections::BTreeMap;
+
+use crate::device::EngineKind;
+
+/// One engine grant: `app_id` owns `engine` for the slice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grant {
+    pub app_id: String,
+    pub engine: EngineKind,
+}
+
+/// One time slice: concurrently granted, pairwise-distinct engines.
+#[derive(Debug, Clone, Default)]
+pub struct Slice {
+    pub grants: Vec<Grant>,
+}
+
+/// A planned arbitration window.
+#[derive(Debug, Clone)]
+pub struct Window {
+    pub slices: Vec<Slice>,
+}
+
+impl Window {
+    /// Grants issued to one app across the window.
+    pub fn grants_for(&self, app_id: &str) -> usize {
+        self.slices
+            .iter()
+            .flat_map(|s| &s.grants)
+            .filter(|g| g.app_id == app_id)
+            .count()
+    }
+
+    pub fn total_grants(&self) -> usize {
+        self.slices.iter().map(|s| s.grants.len()).sum()
+    }
+}
+
+/// The engine arbiter.
+#[derive(Debug, Clone)]
+pub struct Arbiter {
+    /// Slices per window (raised to the app count when more apps than
+    /// slices are hosted, so no app can starve).
+    pub slices_per_window: usize,
+    /// Wall span one window covers (ms) — also the re-adaptation tick.
+    pub window_ms: f64,
+}
+
+impl Default for Arbiter {
+    fn default() -> Self {
+        Arbiter { slices_per_window: 8, window_ms: 250.0 }
+    }
+}
+
+impl Arbiter {
+    /// Plan one window for `apps` = (app_id, engine, demand weight).
+    /// Each app gets `max(1, ⌊slices · weight / Σweights-on-engine⌋)`
+    /// credits, trimmed so one engine's credits fit the window, then the
+    /// engine is granted round-robin across slices.
+    pub fn plan(&self, apps: &[(String, EngineKind, f64)]) -> Window {
+        let s = self.slices_per_window.max(apps.len()).max(1);
+        let mut slices = vec![Slice::default(); s];
+
+        // Group apps by engine, credits per app (registration order kept).
+        let mut by_engine: BTreeMap<EngineKind, Vec<(usize, usize)>> =
+            BTreeMap::new();
+        for (i, (_, engine, _)) in apps.iter().enumerate() {
+            by_engine.entry(*engine).or_default().push((i, 0));
+        }
+        for members in by_engine.values_mut() {
+            let total: f64 = members
+                .iter()
+                .map(|&(i, _)| apps[i].2.max(0.0))
+                .sum();
+            for (i, credits) in members.iter_mut() {
+                let w = apps[*i].2.max(0.0);
+                let share = if total > 0.0 {
+                    (s as f64 * w / total).floor() as usize
+                } else {
+                    1
+                };
+                *credits = share.max(1);
+            }
+            // Trim the largest credit until the engine's total fits the
+            // window (every member keeps >= 1; s >= members.len()).
+            loop {
+                let sum: usize = members.iter().map(|&(_, c)| c).sum();
+                if sum <= s {
+                    break;
+                }
+                let (_, c) = members
+                    .iter_mut()
+                    .max_by_key(|(_, c)| *c)
+                    .expect("engine group is non-empty");
+                debug_assert!(*c > 1);
+                *c -= 1;
+            }
+        }
+
+        // Round-robin each engine across the slices: one grant per engine
+        // per slice, cycling its apps until credits run out.
+        for (engine, members) in by_engine.iter_mut() {
+            let n = members.len();
+            let mut rr = 0usize;
+            for slice in slices.iter_mut() {
+                let mut granted = false;
+                for k in 0..n {
+                    let idx = (rr + k) % n;
+                    if members[idx].1 > 0 {
+                        members[idx].1 -= 1;
+                        slice.grants.push(Grant {
+                            app_id: apps[members[idx].0].0.clone(),
+                            engine: *engine,
+                        });
+                        rr = (idx + 1) % n;
+                        granted = true;
+                        break;
+                    }
+                }
+                if !granted {
+                    break; // this engine's credits are exhausted
+                }
+            }
+        }
+        Window { slices }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn apps(v: &[(&str, EngineKind, f64)]) -> Vec<(String, EngineKind, f64)> {
+        v.iter().map(|(id, e, w)| (id.to_string(), *e, *w)).collect()
+    }
+
+    #[test]
+    fn every_app_gets_a_grant() {
+        let arb = Arbiter::default();
+        let w = arb.plan(&apps(&[
+            ("a", EngineKind::Npu, 60.0),
+            ("b", EngineKind::Npu, 1.0),
+            ("c", EngineKind::Cpu, 30.0),
+        ]));
+        for id in ["a", "b", "c"] {
+            assert!(w.grants_for(id) >= 1, "{id} starved: {w:?}");
+        }
+        // Demand-proportional: the heavy NPU app gets more slices.
+        assert!(w.grants_for("a") > w.grants_for("b"));
+    }
+
+    #[test]
+    fn engine_exclusive_within_slice() {
+        let arb = Arbiter::default();
+        let w = arb.plan(&apps(&[
+            ("a", EngineKind::Gpu, 10.0),
+            ("b", EngineKind::Gpu, 10.0),
+            ("c", EngineKind::Cpu, 10.0),
+            ("d", EngineKind::Npu, 10.0),
+        ]));
+        for slice in &w.slices {
+            let mut seen = Vec::new();
+            for g in &slice.grants {
+                assert!(!seen.contains(&g.engine),
+                        "engine {:?} granted twice in one slice", g.engine);
+                seen.push(g.engine);
+            }
+        }
+    }
+
+    #[test]
+    fn more_apps_than_slices_widens_window() {
+        let arb = Arbiter { slices_per_window: 2, window_ms: 100.0 };
+        let many: Vec<(String, EngineKind, f64)> = (0..5)
+            .map(|i| (format!("app{i}"), EngineKind::Cpu, 1.0))
+            .collect();
+        let w = arb.plan(&many);
+        assert_eq!(w.slices.len(), 5);
+        for i in 0..5 {
+            assert_eq!(w.grants_for(&format!("app{i}")), 1);
+        }
+    }
+
+    #[test]
+    fn zero_weight_still_served() {
+        let arb = Arbiter::default();
+        let w = arb.plan(&apps(&[
+            ("a", EngineKind::Cpu, 0.0),
+            ("b", EngineKind::Cpu, 100.0),
+        ]));
+        assert!(w.grants_for("a") >= 1);
+        assert!(w.grants_for("b") >= w.grants_for("a"));
+    }
+}

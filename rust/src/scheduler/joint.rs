@@ -1,0 +1,290 @@
+//! Joint optimisation: extend the single-app enumerative LUT search to a
+//! design *vector* (σ₁…σ_N) over all co-resident apps, under global
+//! resource constraints:
+//!
+//! * **engine exclusivity** — the GPU and the NNAPI accelerator are owned
+//!   by at most one app each (contended offload engines are shared across
+//!   arbitration slices, never inside one);
+//! * **shared CPU-core budget** — Σ threads of CPU-resident apps stays
+//!   within the device's cores;
+//! * **total model-memory cap** — Σ working-set bytes of the admitted
+//!   designs stays within the device budget;
+//! * **per-engine time budget** — Σ latency·rate on an engine stays below
+//!   `util_cap` of wall time (dropping the recognition rate r is how an
+//!   app degrades itself into fitting).
+//!
+//! Per-app candidates come from the app's own [`Optimizer::search`]
+//! ranking (pruned per engine/thread group), re-scored under current
+//! conditions with the Runtime Manager's [`manager::adjusted_latency`].
+//! The joint objective is lexicographic: fewest predicted SLO violations,
+//! then minimal total SLO pressure Σ latency/SLO.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::device::{DeviceProfile, EngineKind};
+use crate::manager::{self, Conditions};
+use crate::measurements::Lut;
+use crate::model::Registry;
+use crate::optimizer::{Design, Optimizer, SearchSpace};
+
+use super::WorkloadDescriptor;
+
+/// Global resource constraints shared by every co-resident app.
+#[derive(Debug, Clone)]
+pub struct GlobalBudget {
+    /// Shared CPU-core budget: Σ threads of CPU-resident apps.
+    pub cpu_threads: usize,
+    /// Total model working-set cap (bytes) across admitted designs.
+    pub mem_bytes: u64,
+    /// Per-engine time budget: Σ latency·rate must stay below this
+    /// fraction of wall time on every engine.
+    pub util_cap: f64,
+}
+
+impl GlobalBudget {
+    /// The device's own limits (all cores, full memory budget, 100% time).
+    pub fn of(device: &DeviceProfile) -> Self {
+        GlobalBudget {
+            cpu_threads: device.n_cores,
+            mem_bytes: device.mem_budget_bytes,
+            util_cap: 1.0,
+        }
+    }
+}
+
+/// One app's slice of a joint assignment, with its predicted metrics.
+#[derive(Debug, Clone)]
+pub struct PredictedApp {
+    pub app_id: String,
+    pub design: Design,
+    /// Condition-adjusted LUT latency (ms).
+    pub latency_ms: f64,
+    pub accuracy: f64,
+    pub mem_bytes: u64,
+    /// Predicted to meet its latency SLO.
+    pub slo_ok: bool,
+    /// The joint constraints forced this app below its solo-optimal
+    /// accuracy or recognition rate (the admission-control "degrade" path).
+    pub degraded: bool,
+}
+
+/// A feasible design vector for all apps.
+#[derive(Debug, Clone)]
+pub struct JointAssignment {
+    /// One entry per descriptor, in input order.
+    pub apps: Vec<PredictedApp>,
+    /// Number of apps predicted to miss their latency SLO.
+    pub violations: usize,
+    /// Σ latency/SLO across apps (lower is better; the tie-break score).
+    pub pressure: f64,
+}
+
+/// One pruned, condition-adjusted candidate for one app.
+#[derive(Debug, Clone)]
+struct Cand {
+    design: Design,
+    latency_ms: f64,
+    accuracy: f64,
+    mem_bytes: u64,
+}
+
+/// Mutable resource state threaded through the assignment search.
+struct DfsState {
+    cpu_threads: usize,
+    mem_bytes: u64,
+    util: BTreeMap<EngineKind, f64>,
+    offload_owned: Vec<EngineKind>,
+    choice: Vec<usize>,
+}
+
+/// The joint-optimisation search.
+pub struct JointSearch<'a> {
+    pub device: &'a DeviceProfile,
+    pub registry: &'a Registry,
+    pub lut: &'a Lut,
+    pub budget: GlobalBudget,
+    /// Ranked candidates kept per (engine, threads) group — the pruning
+    /// knob bounding the assignment enumeration.
+    pub keep_per_group: usize,
+}
+
+impl<'a> JointSearch<'a> {
+    pub fn new(device: &'a DeviceProfile, registry: &'a Registry, lut: &'a Lut,
+               budget: GlobalBudget) -> Self {
+        JointSearch { device, registry, lut, budget, keep_per_group: 3 }
+    }
+
+    /// One app's candidate list: its own enumerative ranking, pruned to the
+    /// best `keep_per_group` per (engine, threads) group, with latencies
+    /// re-scored under `conds`.  Rank order is preserved, so index 0 is the
+    /// app's solo-optimal choice (the `degraded` reference point).
+    fn candidates(&self, desc: &WorkloadDescriptor, conds: &Conditions)
+                  -> Result<Vec<Cand>> {
+        let opt = Optimizer::new(self.device, self.registry, self.lut);
+        let ranked = opt.search(desc.objective, &SearchSpace::family(&desc.family))?;
+        let mut counts: BTreeMap<(EngineKind, usize), usize> = BTreeMap::new();
+        let mut kept = Vec::new();
+        for c in &ranked {
+            let group = (c.design.hw.engine, c.design.hw.threads);
+            let n = counts.entry(group).or_insert(0);
+            if *n >= self.keep_per_group {
+                continue;
+            }
+            let Some(adj) = manager::adjusted_latency(
+                self.lut, &c.design, desc.objective.stat(), conds)
+            else {
+                continue;
+            };
+            *n += 1;
+            kept.push(Cand {
+                design: c.design.clone(),
+                latency_ms: adj,
+                accuracy: c.accuracy,
+                mem_bytes: c.mem_bytes,
+            });
+        }
+        if kept.is_empty() {
+            bail!("app `{}`: no deployable candidate for family `{}`",
+                  desc.app_id, desc.family);
+        }
+        Ok(kept)
+    }
+
+    /// Find the best feasible design vector for `descs` under `conds`.
+    /// Errors when no assignment fits the global budget (admission control
+    /// rejects the newcomer on that signal).
+    pub fn search(&self, descs: &[WorkloadDescriptor], conds: &Conditions)
+                  -> Result<JointAssignment> {
+        if descs.is_empty() {
+            bail!("joint search over zero apps");
+        }
+        let cands: Vec<Vec<Cand>> = descs
+            .iter()
+            .map(|d| self.candidates(d, conds))
+            .collect::<Result<_>>()?;
+
+        let mut state = DfsState {
+            cpu_threads: 0,
+            mem_bytes: 0,
+            util: BTreeMap::new(),
+            offload_owned: Vec::new(),
+            choice: Vec::new(),
+        };
+        let mut best: Option<(usize, f64, Vec<usize>)> = None;
+        self.assign(descs, &cands, 0, 0, 0.0, &mut state, &mut best);
+        let Some((violations, pressure, choice)) = best else {
+            bail!(
+                "no joint assignment of {} apps fits the global budget \
+                 ({} CPU threads, {} MB, {:.0}% engine time)",
+                descs.len(),
+                self.budget.cpu_threads,
+                self.budget.mem_bytes / (1024 * 1024),
+                self.budget.util_cap * 100.0
+            );
+        };
+
+        let apps = descs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let c = &cands[i][choice[i]];
+                let solo = &cands[i][0];
+                PredictedApp {
+                    app_id: d.app_id.clone(),
+                    design: c.design.clone(),
+                    latency_ms: c.latency_ms,
+                    accuracy: c.accuracy,
+                    mem_bytes: c.mem_bytes,
+                    slo_ok: c.latency_ms <= d.slo_latency_ms,
+                    degraded: c.accuracy < solo.accuracy - 1e-12
+                        || c.design.hw.recognition_rate
+                            < solo.design.hw.recognition_rate,
+                }
+            })
+            .collect();
+        Ok(JointAssignment { apps, violations, pressure })
+    }
+
+    /// Depth-first assignment with constraint pruning.  `violations` and
+    /// `pressure` are passed by value (exact backtracking); the resource
+    /// state is mutated and restored.
+    #[allow(clippy::too_many_arguments)]
+    fn assign(&self, descs: &[WorkloadDescriptor], cands: &[Vec<Cand>],
+              i: usize, violations: usize, pressure: f64,
+              state: &mut DfsState, best: &mut Option<(usize, f64, Vec<usize>)>) {
+        if let Some((bv, bp, _)) = best {
+            // Pressure only grows with depth: prune dominated prefixes.
+            if violations > *bv || (violations == *bv && pressure >= *bp) {
+                return;
+            }
+        }
+        if i == descs.len() {
+            *best = Some((violations, pressure, state.choice.clone()));
+            return;
+        }
+        let desc = &descs[i];
+        for (ci, c) in cands[i].iter().enumerate() {
+            let e = c.design.hw.engine;
+            let threads = if e == EngineKind::Cpu { c.design.hw.threads } else { 0 };
+            if e != EngineKind::Cpu && state.offload_owned.contains(&e) {
+                continue; // exclusive GPU/NNAPI ownership
+            }
+            if state.cpu_threads + threads > self.budget.cpu_threads {
+                continue; // shared CPU-core budget
+            }
+            if state.mem_bytes + c.mem_bytes > self.budget.mem_bytes {
+                continue; // total model-memory cap
+            }
+            let util = c.latency_ms
+                * (desc.arrival_fps * c.design.hw.recognition_rate).max(0.0)
+                / 1000.0;
+            let engine_util = state.util.get(&e).copied().unwrap_or(0.0);
+            if engine_util + util > self.budget.util_cap {
+                continue; // per-engine time budget
+            }
+
+            state.cpu_threads += threads;
+            state.mem_bytes += c.mem_bytes;
+            state.util.insert(e, engine_util + util);
+            if e != EngineKind::Cpu {
+                state.offload_owned.push(e);
+            }
+            state.choice.push(ci);
+            let v = violations
+                + usize::from(c.latency_ms > desc.slo_latency_ms);
+            let p = pressure + c.latency_ms / desc.slo_latency_ms.max(1e-9);
+            self.assign(descs, cands, i + 1, v, p, state, best);
+            state.choice.pop();
+            if e != EngineKind::Cpu {
+                state.offload_owned.pop();
+            }
+            state.util.insert(e, engine_util);
+            state.mem_bytes -= c.mem_bytes;
+            state.cpu_threads -= threads;
+        }
+    }
+
+    /// Predicted metrics of a *fixed* design vector under `conds` (used by
+    /// the scheduler's re-adaptation hysteresis to score the incumbent).
+    pub fn evaluate(&self, descs: &[WorkloadDescriptor],
+                    designs: &[Design], conds: &Conditions)
+                    -> Result<(usize, f64)> {
+        if descs.len() != designs.len() {
+            bail!("evaluate: {} descriptors vs {} designs",
+                  descs.len(), designs.len());
+        }
+        let mut violations = 0;
+        let mut pressure = 0.0;
+        for (d, design) in descs.iter().zip(designs) {
+            let adj = manager::adjusted_latency(
+                self.lut, design, d.objective.stat(), conds)
+                .ok_or_else(|| anyhow!("design of `{}` missing from LUT",
+                                       d.app_id))?;
+            violations += usize::from(adj > d.slo_latency_ms);
+            pressure += adj / d.slo_latency_ms.max(1e-9);
+        }
+        Ok((violations, pressure))
+    }
+}

@@ -1,0 +1,511 @@
+//! Multi-app scheduler: N concurrent DL apps with per-app SLOs on one
+//! device.
+//!
+//! OODIn optimises a *single* app's design σ = <m_ref, t, hw>; this layer
+//! hosts several at once — the multi-DNN reality the paper's motivation
+//! (and its follow-up CARIn) describes, where processor contention is the
+//! dominant source of latency variability.  Three mechanisms:
+//!
+//! 1. **Joint optimisation** ([`joint`]) — the enumerative LUT search
+//!    extended to a design vector (σ₁…σ_N) under global constraints
+//!    (exclusive GPU/NNAPI ownership, shared CPU-core budget, total
+//!    model-memory cap, per-engine time budget).
+//! 2. **Engine arbitration + admission control** ([`arbiter`] +
+//!    [`Scheduler::register`]) — time-sliced windows in which no two apps
+//!    hold a contended offload engine in the same slice and no admitted
+//!    app starves; apps that cannot fit are degraded (lower precision /
+//!    recognition rate, via the joint search's candidate ladder) or
+//!    rejected.
+//! 3. **Joint re-adaptation** ([`Scheduler::observe`]) — on a significant
+//!    condition shift the joint search re-runs under adjusted latencies
+//!    (reusing the Runtime Manager's [`manager::adjusted_latency`]
+//!    scoring) and issues *coordinated* switches, instead of N
+//!    independent, oscillating managers.
+
+pub mod arbiter;
+pub mod joint;
+
+pub use arbiter::{Arbiter, Grant, Slice, Window};
+pub use joint::{GlobalBudget, JointAssignment, JointSearch, PredictedApp};
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::device::{DeviceProfile, EngineKind};
+use crate::devicesim::DeviceSim;
+use crate::manager::{Conditions, Policy, Reason, Switch};
+use crate::measurements::Lut;
+use crate::model::Registry;
+use crate::optimizer::{Design, Objective};
+
+/// What one app asks of the device: its model family, arrival pattern and
+/// service-level objective.  This is the workload-descriptor format the
+/// `multi` CLI scenario and the multi-app experiment driver feed in.
+#[derive(Debug, Clone)]
+pub struct WorkloadDescriptor {
+    pub app_id: String,
+    /// Model family the app was built around (the user-supplied DNN).
+    pub family: String,
+    /// Arrival pattern: frames/s offered to the app.
+    pub arrival_fps: f64,
+    /// The app's own optimisation objective (one of the optimizer's).
+    pub objective: Objective,
+    /// SLO: per-inference latency bound (ms).
+    pub slo_latency_ms: f64,
+}
+
+/// Admission-control outcome for a registering app.
+#[derive(Debug, Clone)]
+pub enum Admission {
+    /// Hosted with this design; `degraded` when the joint search had to go
+    /// below the app's solo-optimal accuracy or recognition rate to fit.
+    Admitted { design: Design, degraded: bool },
+    /// No design vector fits the global budget with this app included.
+    Rejected { reason: String },
+}
+
+/// Per-app window statistics from one arbitration window.
+#[derive(Debug, Clone)]
+pub struct AppWindowStats {
+    pub app_id: String,
+    pub inferences: u64,
+    pub violations: u64,
+    pub mean_latency_ms: f64,
+}
+
+/// The report one [`Scheduler::run_window`] call produces.
+#[derive(Debug, Clone)]
+pub struct WindowReport {
+    /// Device-timeline instant at the start of the window (ms).
+    pub at_ms: f64,
+    pub apps: Vec<AppWindowStats>,
+}
+
+struct AppState {
+    desc: WorkloadDescriptor,
+    design: Design,
+    degraded: bool,
+    inferences: u64,
+    violations: u64,
+}
+
+/// The multi-app scheduler.
+pub struct Scheduler {
+    device: Arc<DeviceProfile>,
+    registry: Arc<Registry>,
+    lut: Arc<Lut>,
+    budget: GlobalBudget,
+    policy: Policy,
+    pub arbiter: Arbiter,
+    apps: Vec<AppState>,
+    last_loads: BTreeMap<EngineKind, f64>,
+    last_adapt_ms: f64,
+    /// Coordinated reconfigurations issued so far: (app_id, switch).
+    pub switches: Vec<(String, Switch)>,
+}
+
+impl Scheduler {
+    pub fn new(device: Arc<DeviceProfile>, registry: Arc<Registry>,
+               lut: Arc<Lut>) -> Self {
+        let budget = GlobalBudget::of(&device);
+        Scheduler {
+            device,
+            registry,
+            lut,
+            budget,
+            policy: Policy::default(),
+            arbiter: Arbiter::default(),
+            apps: Vec::new(),
+            last_loads: BTreeMap::new(),
+            last_adapt_ms: f64::NEG_INFINITY,
+            switches: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, budget: GlobalBudget) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    fn joint(&self) -> JointSearch<'_> {
+        JointSearch::new(&self.device, &self.registry, &self.lut,
+                         self.budget.clone())
+    }
+
+    pub fn len(&self) -> usize {
+        self.apps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.apps.is_empty()
+    }
+
+    pub fn descriptors(&self) -> Vec<WorkloadDescriptor> {
+        self.apps.iter().map(|a| a.desc.clone()).collect()
+    }
+
+    /// Current (app_id, design) pairs, in registration order.
+    pub fn designs(&self) -> Vec<(String, Design)> {
+        self.apps
+            .iter()
+            .map(|a| (a.desc.app_id.clone(), a.design.clone()))
+            .collect()
+    }
+
+    pub fn design_of(&self, app_id: &str) -> Option<&Design> {
+        self.apps
+            .iter()
+            .find(|a| a.desc.app_id == app_id)
+            .map(|a| &a.design)
+    }
+
+    /// Apps currently running below their solo-optimal accuracy or
+    /// recognition rate to fit the joint budget.
+    pub fn degraded_ids(&self) -> Vec<String> {
+        self.apps
+            .iter()
+            .filter(|a| a.degraded)
+            .map(|a| a.desc.app_id.clone())
+            .collect()
+    }
+
+    /// Cumulative (inferences, SLO violations) of one app.
+    pub fn totals_of(&self, app_id: &str) -> Option<(u64, u64)> {
+        self.apps
+            .iter()
+            .find(|a| a.desc.app_id == app_id)
+            .map(|a| (a.inferences, a.violations))
+    }
+
+    /// Admission control: joint-search the current tenants plus the
+    /// newcomer.  On success the whole design vector is (re)applied —
+    /// existing tenants may be coordinately reconfigured to make room; on
+    /// failure the newcomer is rejected and the incumbents are untouched.
+    pub fn register(&mut self, desc: WorkloadDescriptor, now_ms: f64,
+                    conds: &Conditions) -> Result<Admission> {
+        if self.apps.iter().any(|a| a.desc.app_id == desc.app_id) {
+            bail!("app `{}` already registered", desc.app_id);
+        }
+        let mut descs = self.descriptors();
+        descs.push(desc.clone());
+        let assignment = match self.joint().search(&descs, conds) {
+            Ok(a) => a,
+            Err(e) => {
+                return Ok(Admission::Rejected { reason: format!("{e:#}") })
+            }
+        };
+        self.apply(&assignment, now_ms, Reason::LoadChange);
+        // Admission is itself a coordinated reconfiguration: start the
+        // shared cooldown so observe() cannot re-shuffle the incumbents
+        // again one tick later.
+        for k in EngineKind::ALL {
+            self.last_loads.insert(k, conds.load(k));
+        }
+        self.last_adapt_ms = now_ms;
+        let newcomer = assignment
+            .apps
+            .iter()
+            .find(|p| p.app_id == desc.app_id)
+            .expect("joint assignment covers every descriptor");
+        self.apps.push(AppState {
+            desc,
+            design: newcomer.design.clone(),
+            degraded: newcomer.degraded,
+            inferences: 0,
+            violations: 0,
+        });
+        Ok(Admission::Admitted {
+            design: newcomer.design.clone(),
+            degraded: newcomer.degraded,
+        })
+    }
+
+    /// Apply a joint assignment to the hosted apps, recording a coordinated
+    /// [`Switch`] for every design that changed.  Returns the issued
+    /// switches.  (Descriptors not yet hosted — a registering newcomer —
+    /// are skipped; the caller installs them.)
+    fn apply(&mut self, assignment: &JointAssignment, now_ms: f64,
+             reason: Reason) -> Vec<(String, Switch)> {
+        let mut issued = Vec::new();
+        for p in &assignment.apps {
+            let Some(app) = self.apps.iter_mut()
+                .find(|a| a.desc.app_id == p.app_id)
+            else {
+                continue;
+            };
+            app.degraded = p.degraded;
+            if app.design != p.design {
+                let sw = Switch {
+                    from: app.design.clone(),
+                    to: p.design.clone(),
+                    at_ms: now_ms,
+                    detection_ms: 0.0,
+                    reason,
+                };
+                app.design = p.design.clone();
+                self.switches.push((p.app_id.clone(), sw.clone()));
+                issued.push((p.app_id.clone(), sw));
+            }
+        }
+        issued
+    }
+
+    /// Execute one arbitration window on the simulated device: the arbiter
+    /// plans the slices, every grant runs one inference, and per-app SLO
+    /// violations are accounted.
+    pub fn run_window(&mut self, sim: &mut DeviceSim) -> Result<WindowReport> {
+        if self.apps.is_empty() {
+            bail!("run_window with no registered apps");
+        }
+        let plan_input: Vec<(String, EngineKind, f64)> = self
+            .apps
+            .iter()
+            .map(|a| {
+                (a.desc.app_id.clone(),
+                 a.design.hw.engine,
+                 a.desc.arrival_fps * a.design.hw.recognition_rate)
+            })
+            .collect();
+        let window = self.arbiter.plan(&plan_input);
+
+        let at_ms = sim.clock.now_ms();
+        let mut stats: BTreeMap<String, (u64, u64, f64)> = BTreeMap::new();
+        for slice in &window.slices {
+            for grant in &slice.grants {
+                let app = self
+                    .apps
+                    .iter_mut()
+                    .find(|a| a.desc.app_id == grant.app_id)
+                    .expect("grant for an unhosted app");
+                let v = self
+                    .registry
+                    .get(&app.design.variant)
+                    .context("scheduled variant not in registry")?
+                    .clone();
+                let exec = sim.run_inference(
+                    &v,
+                    app.design.hw.engine,
+                    app.design.hw.threads,
+                    app.design.hw.governor,
+                )?;
+                let violated = exec.latency_ms > app.desc.slo_latency_ms;
+                app.inferences += 1;
+                if violated {
+                    app.violations += 1;
+                }
+                let e = stats.entry(grant.app_id.clone()).or_insert((0, 0, 0.0));
+                e.0 += 1;
+                if violated {
+                    e.1 += 1;
+                }
+                e.2 += exec.latency_ms;
+            }
+        }
+        // Idle out the remainder of the window span, if any.
+        let span = sim.clock.now_ms() - at_ms;
+        if span < self.arbiter.window_ms {
+            sim.idle(self.arbiter.window_ms - span);
+        }
+
+        Ok(WindowReport {
+            at_ms,
+            apps: stats
+                .into_iter()
+                .map(|(app_id, (inferences, violations, sum_ms))| {
+                    AppWindowStats {
+                        app_id,
+                        inferences,
+                        violations,
+                        mean_latency_ms: sum_ms / inferences.max(1) as f64,
+                    }
+                })
+                .collect(),
+        })
+    }
+
+    /// Joint re-adaptation: when per-engine conditions shift by more than
+    /// the policy's re-evaluation threshold (or a hosted engine throttles),
+    /// re-run the joint search under adjusted latencies and issue
+    /// coordinated switches — one decision for all tenants.  Hysteresis and
+    /// a shared cooldown guard against the oscillation N independent
+    /// managers would exhibit.
+    pub fn observe(&mut self, now_ms: f64, conds: &Conditions)
+                   -> Vec<(String, Switch)> {
+        if self.apps.is_empty()
+            || now_ms - self.last_adapt_ms < self.policy.cooldown_ms
+        {
+            return Vec::new();
+        }
+        let load_changed = EngineKind::ALL.iter().any(|&k| {
+            let prev = self.last_loads.get(&k).copied().unwrap_or(0.0);
+            (conds.load(k) - prev).abs() >= self.policy.load_delta
+        });
+        let throttling = self.apps.iter().any(|a| {
+            conds.thermal_scale(a.design.hw.engine)
+                < self.policy.thermal_alert_scale
+        });
+        if !load_changed && !throttling {
+            return Vec::new();
+        }
+        for k in EngineKind::ALL {
+            self.last_loads.insert(k, conds.load(k));
+        }
+        self.last_adapt_ms = now_ms;
+
+        let descs = self.descriptors();
+        let designs: Vec<Design> =
+            self.apps.iter().map(|a| a.design.clone()).collect();
+        let joint = self.joint();
+        let Ok(candidate) = joint.search(&descs, conds) else {
+            return Vec::new();
+        };
+        let Ok((cur_viol, cur_pressure)) =
+            joint.evaluate(&descs, &designs, conds)
+        else {
+            return Vec::new();
+        };
+        // Coordinated hysteresis: switch only for strictly fewer predicted
+        // violations, or for a pressure win above the improvement margin.
+        let improves = candidate.violations < cur_viol
+            || (candidate.violations == cur_viol
+                && cur_pressure / candidate.pressure.max(1e-9)
+                    >= self.policy.min_improvement);
+        if !improves {
+            return Vec::new();
+        }
+        let reason = if throttling && !load_changed {
+            Reason::Degradation
+        } else {
+            Reason::LoadChange
+        };
+        self.apply(&candidate, now_ms, reason)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles::samsung_a71;
+    use crate::measurements::Measurer;
+    use crate::model::test_fixtures::fake_registry;
+    use crate::util::clock::Clock;
+    use crate::util::stats::Percentile;
+
+    fn desc(id: &str, family: &str, fps: f64, slo_ms: f64) -> WorkloadDescriptor {
+        WorkloadDescriptor {
+            app_id: id.to_string(),
+            family: family.to_string(),
+            arrival_fps: fps,
+            objective: Objective::MinLatency {
+                stat: Percentile::Avg,
+                epsilon: 0.05,
+            },
+            slo_latency_ms: slo_ms,
+        }
+    }
+
+    fn setup() -> (Arc<DeviceProfile>, Arc<Registry>, Arc<Lut>) {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(30, 2).measure_all().unwrap();
+        (Arc::new(dev), Arc::new(reg), Arc::new(lut))
+    }
+
+    #[test]
+    fn register_admits_and_duplicate_errors() {
+        let (dev, reg, lut) = setup();
+        let mut sched = Scheduler::new(dev, reg, lut);
+        let idle = Conditions::idle();
+        let adm = sched
+            .register(desc("cam", "mobilenet_v2_100", 30.0, 50.0), 0.0, &idle)
+            .unwrap();
+        assert!(matches!(adm, Admission::Admitted { .. }));
+        assert_eq!(sched.len(), 1);
+        assert!(sched
+            .register(desc("cam", "inception_v3", 30.0, 50.0), 0.0, &idle)
+            .is_err());
+    }
+
+    #[test]
+    fn unknown_family_rejected_not_admitted() {
+        let (dev, reg, lut) = setup();
+        let mut sched = Scheduler::new(dev, reg, lut);
+        let adm = sched
+            .register(desc("ghost", "no_such_family", 30.0, 50.0), 0.0,
+                      &Conditions::idle())
+            .unwrap();
+        assert!(matches!(adm, Admission::Rejected { .. }));
+        assert!(sched.is_empty());
+    }
+
+    #[test]
+    fn offload_engines_exclusively_owned() {
+        let (dev, reg, lut) = setup();
+        let mut sched = Scheduler::new(dev, reg, lut);
+        let idle = Conditions::idle();
+        for (id, fam) in [("a", "mobilenet_v2_100"), ("b", "inception_v3"),
+                          ("c", "efficientnet_lite4")] {
+            let adm = sched
+                .register(desc(id, fam, 30.0, 1e6), 0.0, &idle)
+                .unwrap();
+            assert!(matches!(adm, Admission::Admitted { .. }), "{id}");
+        }
+        let mut gpu = 0;
+        let mut npu = 0;
+        for (_, d) in sched.designs() {
+            match d.hw.engine {
+                EngineKind::Gpu => gpu += 1,
+                EngineKind::Npu => npu += 1,
+                EngineKind::Cpu => {}
+            }
+        }
+        assert!(gpu <= 1 && npu <= 1, "offload engines shared: {:?}",
+                sched.designs());
+    }
+
+    #[test]
+    fn run_window_serves_every_app() {
+        let (dev, reg, lut) = setup();
+        let mut sched = Scheduler::new(Arc::clone(&dev), reg, lut);
+        let idle = Conditions::idle();
+        sched.register(desc("a", "mobilenet_v2_100", 60.0, 1e6), 0.0, &idle)
+            .unwrap();
+        sched.register(desc("b", "inception_v3", 10.0, 1e6), 0.0, &idle)
+            .unwrap();
+        let mut sim = DeviceSim::new((*dev).clone(), Clock::sim());
+        let rep = sched.run_window(&mut sim).unwrap();
+        assert_eq!(rep.apps.len(), 2);
+        for a in &rep.apps {
+            assert!(a.inferences >= 1, "{} starved", a.app_id);
+            assert!(a.mean_latency_ms > 0.0);
+        }
+        assert!(sim.clock.now_ms() >= sched.arbiter.window_ms - 1e-9);
+    }
+
+    #[test]
+    fn load_shift_triggers_coordinated_reoptimisation() {
+        let (dev, reg, lut) = setup();
+        let mut sched = Scheduler::new(dev, reg, lut);
+        let idle = Conditions::idle();
+        sched.register(desc("a", "mobilenet_v2_100", 60.0, 1e6), 0.0, &idle)
+            .unwrap();
+        let e0 = sched.design_of("a").unwrap().hw.engine;
+        // Heavy external load on the app's engine: the joint re-adaptation
+        // must migrate it off, in one coordinated decision.
+        let mut conds = Conditions::idle();
+        conds.loads.insert(e0, 3.0);
+        let issued = sched.observe(5000.0, &conds);
+        assert_eq!(issued.len(), 1, "expected one coordinated switch");
+        assert_ne!(sched.design_of("a").unwrap().hw.engine, e0);
+        // Within the cooldown no further joint switches are issued.
+        let again = sched.observe(5100.0, &conds);
+        assert!(again.is_empty());
+    }
+}

@@ -13,6 +13,7 @@
 //! queue provides backpressure: `submit` blocks when the queue is full,
 //! `try_submit` refuses.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -45,6 +46,9 @@ pub struct Response {
     pub total_ms: f64,
     /// Size of the batch this request rode in.
     pub batch: usize,
+    /// Name of the model variant that served this request — multi-app
+    /// traces attribute latency to a model with it.
+    pub variant: String,
 }
 
 /// Server configuration.
@@ -57,6 +61,10 @@ pub struct ServerConfig {
     /// Bounded queue capacity (backpressure).
     pub queue_cap: usize,
     pub n_classes: usize,
+    /// A flushed tail may round *up* to the next compiled batch size (one
+    /// big execution instead of several small ones) when the padded-slot
+    /// fraction `(b - len) / b` stays within this bound.
+    pub max_pad_ratio: f64,
 }
 
 impl ServerConfig {
@@ -78,6 +86,7 @@ impl ServerConfig {
             max_batch_delay_ms: 2.0,
             queue_cap: 64,
             n_classes: 10,
+            max_pad_ratio: 0.25,
         })
     }
 }
@@ -140,6 +149,17 @@ impl Server {
         }
     }
 
+    /// Fraction of executed batch slots that carried replicated padding
+    /// rather than a real request: `padded / (padded + real)`.  0.0 before
+    /// any batch has run.
+    pub fn wasted_compute_ratio(&self) -> f64 {
+        let executed = self.telemetry.counter("executed_slots");
+        if executed == 0 {
+            return 0.0;
+        }
+        self.telemetry.counter("padded_slots") as f64 / executed as f64
+    }
+
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         drop(self.tx.clone()); // original tx dropped in Drop
@@ -154,6 +174,61 @@ impl Drop for Server {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(w) = self.worker.take() {
             let _ = w.join();
+        }
+    }
+}
+
+/// Multi-app serving front-end: one [`Server`] (queue + batcher + telemetry)
+/// per registered app, all multiplexed over a *single* shared execution
+/// backend — the serving seam of the `scheduler` layer.  Each app keeps its
+/// own batch-size ladder and backpressure bound; the backend arbitrates the
+/// actual executions.
+pub struct MultiServer {
+    backend: Arc<dyn Backend>,
+    apps: BTreeMap<String, Server>,
+}
+
+impl MultiServer {
+    pub fn new(backend: Arc<dyn Backend>) -> Self {
+        MultiServer { backend, apps: BTreeMap::new() }
+    }
+
+    pub fn backend(&self) -> Arc<dyn Backend> {
+        Arc::clone(&self.backend)
+    }
+
+    /// Register an app: starts its dedicated `Server` on the shared backend.
+    pub fn register(&mut self, app_id: &str, registry: &Registry,
+                    cfg: ServerConfig) -> Result<()> {
+        if self.apps.contains_key(app_id) {
+            return Err(anyhow!("app `{app_id}` already registered"));
+        }
+        let srv = Server::start(Arc::clone(&self.backend), registry, cfg)?;
+        self.apps.insert(app_id.to_string(), srv);
+        Ok(())
+    }
+
+    /// The per-app serving handle.
+    pub fn app(&self, app_id: &str) -> Option<&Server> {
+        self.apps.get(app_id)
+    }
+
+    pub fn app_ids(&self) -> impl Iterator<Item = &str> {
+        self.apps.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.apps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.apps.is_empty()
+    }
+
+    /// Stop every app's batcher; the shared backend outlives the front-end.
+    pub fn stop(self) {
+        for (_, srv) in self.apps {
+            srv.stop();
         }
     }
 }
@@ -191,13 +266,26 @@ fn batcher_main(rx: Receiver<Request>, runtime: Arc<dyn Backend>,
     }
 }
 
-/// Pick the largest compiled batch size <= len (or batch 1 repeated).
-fn pick_variant<'v>(variants: &'v [(usize, ModelVariant)], len: usize)
-                    -> &'v (usize, ModelVariant) {
+/// Pick the compiled batch size for `len` waiting requests: an exact fit
+/// wins; otherwise the smallest size above `len` whose padded-slot fraction
+/// stays within `max_pad_ratio` (one amortised execution beats several
+/// small ones); otherwise the largest size <= len (batch 1 repeated).
+fn pick_variant<'v>(variants: &'v [(usize, ModelVariant)], len: usize,
+                    max_pad_ratio: f64) -> &'v (usize, ModelVariant) {
+    let len = len.max(1);
+    if let Some(exact) = variants.iter().find(|(b, _)| *b == len) {
+        return exact;
+    }
+    if let Some(padded) = variants
+        .iter()
+        .find(|(b, _)| *b > len && (*b - len) as f64 / *b as f64 <= max_pad_ratio)
+    {
+        return padded;
+    }
     variants
         .iter()
         .rev()
-        .find(|(b, _)| *b <= len.max(1))
+        .find(|(b, _)| *b <= len)
         .unwrap_or(&variants[0])
 }
 
@@ -205,7 +293,7 @@ fn serve_batch(runtime: &dyn Backend, variants: &[(usize, ModelVariant)],
                cfg: &ServerConfig, batch: Vec<Request>, telemetry: &Telemetry) {
     let mut remaining = batch;
     while !remaining.is_empty() {
-        let (bsz, v) = pick_variant(variants, remaining.len());
+        let (bsz, v) = pick_variant(variants, remaining.len(), cfg.max_pad_ratio);
         let take = (*bsz).min(remaining.len());
         let chunk: Vec<Request> = remaining.drain(..take).collect();
 
@@ -227,6 +315,8 @@ fn serve_batch(runtime: &dyn Backend, variants: &[(usize, ModelVariant)],
         let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
         telemetry.record("batch_exec_ms", exec_ms);
         telemetry.add("batched_requests", chunk.len() as u64);
+        telemetry.add("executed_slots", *bsz as u64);
+        telemetry.add("padded_slots", (*bsz - chunk.len()) as u64);
         telemetry.incr(&format!("batch_size_{bsz}"));
 
         match result {
@@ -243,6 +333,7 @@ fn serve_batch(runtime: &dyn Backend, variants: &[(usize, ModelVariant)],
                         queue_ms,
                         total_ms: r.enqueued.elapsed().as_secs_f64() * 1e3,
                         batch: *bsz,
+                        variant: v.name.clone(),
                     }));
                 }
             }
@@ -333,14 +424,49 @@ mod tests {
     }
 
     #[test]
-    fn pick_variant_prefers_largest_fitting() {
+    fn pick_variant_exact_pad_up_and_fallback() {
         let reg = serving_registry(RES);
         let v1 = reg.get("cls__fp32__b1").unwrap().clone();
         let v4 = reg.get("cls__fp32__b4").unwrap().clone();
         let vars = vec![(1, v1), (4, v4)];
-        assert_eq!(pick_variant(&vars, 1).0, 1);
-        assert_eq!(pick_variant(&vars, 3).0, 1);
-        assert_eq!(pick_variant(&vars, 4).0, 4);
-        assert_eq!(pick_variant(&vars, 9).0, 4);
+        assert_eq!(pick_variant(&vars, 1, 0.25).0, 1); // exact
+        assert_eq!(pick_variant(&vars, 3, 0.25).0, 4); // pad 1/4 slots
+        assert_eq!(pick_variant(&vars, 2, 0.25).0, 1); // 2/4 waste: too much
+        assert_eq!(pick_variant(&vars, 4, 0.25).0, 4); // exact
+        assert_eq!(pick_variant(&vars, 9, 0.25).0, 4); // largest fitting
+        // Pad-up disabled: the old largest-fitting policy throughout.
+        assert_eq!(pick_variant(&vars, 3, 0.0).0, 1);
+    }
+
+    #[test]
+    fn responses_carry_serving_variant() {
+        let reg = serving_registry(RES);
+        let srv = Server::start(backend(&reg), &reg, config(&reg)).unwrap();
+        let rx = srv.submit(class_frame(RES, 3), RES, RES).unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.variant, "cls__fp32__b1");
+        srv.stop();
+    }
+
+    #[test]
+    fn multi_server_isolated_apps_shared_backend() {
+        let reg = serving_registry(RES);
+        let mut multi = MultiServer::new(backend(&reg));
+        multi.register("camera", &reg, config(&reg)).unwrap();
+        multi.register("ocr", &reg, config(&reg)).unwrap();
+        assert!(multi.register("camera", &reg, config(&reg)).is_err());
+        assert_eq!(multi.len(), 2);
+
+        let rx_a = multi.app("camera").unwrap()
+            .submit(class_frame(RES, 2), RES, RES).unwrap();
+        let rx_b = multi.app("ocr").unwrap()
+            .submit(class_frame(RES, 7), RES, RES).unwrap();
+        assert_eq!(rx_a.recv().unwrap().unwrap().class, 2);
+        assert_eq!(rx_b.recv().unwrap().unwrap().class, 7);
+        // Per-app telemetry stays isolated.
+        assert_eq!(multi.app("camera").unwrap().telemetry.counter("batched_requests"), 1);
+        assert_eq!(multi.app("ocr").unwrap().telemetry.counter("batched_requests"), 1);
+        assert!(multi.app("missing").is_none());
+        multi.stop();
     }
 }

@@ -1,0 +1,242 @@
+//! Property tests for the multi-app `scheduler` subsystem, in the
+//! `tests/properties.rs` style: `util::rng::Rng` generates seeded random
+//! workloads and every assertion prints its case id.
+//!
+//! Invariants:
+//! * joint search respects the global budget — Σ CPU threads, Σ model
+//!   memory, and exclusive GPU/NNAPI ownership;
+//! * arbitration windows never grant one engine to two apps in the same
+//!   slice, and no admitted app starves (every app gets >= 1 inference per
+//!   window);
+//! * one pinned joint-search result stays byte-stable (golden snapshot).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use oodin::device::profiles::samsung_a71;
+use oodin::device::EngineKind;
+use oodin::devicesim::DeviceSim;
+use oodin::dvfs::Governor;
+use oodin::manager::Conditions;
+use oodin::measurements::{Lut, LutEntry, LutKey, Measurer};
+use oodin::model::test_fixtures::fake_registry;
+use oodin::model::Registry;
+use oodin::optimizer::Objective;
+use oodin::scheduler::{Admission, GlobalBudget, JointSearch, Scheduler,
+                       WorkloadDescriptor};
+use oodin::util::clock::Clock;
+use oodin::util::rng::Rng;
+use oodin::util::stats::{LatencyStats, Percentile};
+
+const FAMILIES: [&str; 4] = ["mobilenet_v2_100", "efficientnet_lite4",
+                             "inception_v3", "deeplab_v3"];
+
+fn desc(id: &str, family: &str, fps: f64, slo_ms: f64) -> WorkloadDescriptor {
+    WorkloadDescriptor {
+        app_id: id.to_string(),
+        family: family.to_string(),
+        arrival_fps: fps,
+        objective: Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 },
+        slo_latency_ms: slo_ms,
+    }
+}
+
+fn random_descs(rng: &mut Rng) -> Vec<WorkloadDescriptor> {
+    let n = 1 + rng.below(4);
+    (0..n)
+        .map(|i| {
+            desc(&format!("app{i}"), FAMILIES[rng.below(FAMILIES.len())],
+                 5.0 + rng.range(0.0, 115.0), rng.range(0.05, 10.0))
+        })
+        .collect()
+}
+
+#[test]
+fn prop_joint_search_respects_global_budget() {
+    let dev = samsung_a71();
+    let reg = fake_registry();
+    let lut = Measurer::new(&dev, &reg).with_runs(20, 2).measure_all().unwrap();
+    for case in 0..12u64 {
+        let mut rng = Rng::new(21_000 + case);
+        let descs = random_descs(&mut rng);
+        let budget = GlobalBudget {
+            cpu_threads: 1 + rng.below(8),
+            mem_bytes: 150_000 + rng.below(2_000_000) as u64,
+            util_cap: 1.0,
+        };
+        let search = JointSearch::new(&dev, &reg, &lut, budget.clone());
+        let Ok(assignment) = search.search(&descs, &Conditions::idle()) else {
+            continue; // infeasible under this budget: admission rejects
+        };
+        let mut cpu_threads = 0usize;
+        let mut mem = 0u64;
+        let mut owners: BTreeMap<EngineKind, usize> = BTreeMap::new();
+        for p in &assignment.apps {
+            let e = p.design.hw.engine;
+            *owners.entry(e).or_insert(0) += 1;
+            if e == EngineKind::Cpu {
+                cpu_threads += p.design.hw.threads;
+            }
+            mem += p.mem_bytes;
+        }
+        assert!(cpu_threads <= budget.cpu_threads,
+                "case {case}: CPU budget exceeded ({cpu_threads})");
+        assert!(mem <= budget.mem_bytes,
+                "case {case}: memory cap exceeded ({mem})");
+        assert!(owners.get(&EngineKind::Gpu).copied().unwrap_or(0) <= 1,
+                "case {case}: GPU shared");
+        assert!(owners.get(&EngineKind::Npu).copied().unwrap_or(0) <= 1,
+                "case {case}: NNAPI shared");
+        // Violation accounting is consistent with the predictions.
+        let predicted = assignment.apps.iter().filter(|p| !p.slo_ok).count();
+        assert_eq!(predicted, assignment.violations, "case {case}");
+    }
+}
+
+#[test]
+fn prop_no_admitted_app_starves_and_engines_exclusive() {
+    let dev = samsung_a71();
+    let reg = fake_registry();
+    let lut = Arc::new(
+        Measurer::new(&dev, &reg).with_runs(20, 2).measure_all().unwrap(),
+    );
+    for case in 0..6u64 {
+        let mut rng = Rng::new(23_000 + case);
+        let descs = random_descs(&mut rng);
+        let mut sched = Scheduler::new(Arc::new(dev.clone()),
+                                       Arc::new(reg.clone()),
+                                       Arc::clone(&lut));
+        let mut sim = DeviceSim::new(dev.clone(), Clock::sim());
+        let mut admitted = Vec::new();
+        for d in &descs {
+            match sched
+                .register(d.clone(), sim.clock.now_ms(), &sim.conditions())
+                .unwrap()
+            {
+                Admission::Admitted { .. } => admitted.push(d.app_id.clone()),
+                Admission::Rejected { .. } => {}
+            }
+        }
+        if admitted.is_empty() {
+            continue;
+        }
+        // The planned window grants each engine at most once per slice —
+        // in particular GPU/NNAPI are never held by two apps in one slice.
+        let plan_input: Vec<(String, EngineKind, f64)> = sched
+            .designs()
+            .into_iter()
+            .map(|(id, d)| (id, d.hw.engine, 1.0))
+            .collect();
+        let window = sched.arbiter.plan(&plan_input);
+        for (si, slice) in window.slices.iter().enumerate() {
+            let mut seen = Vec::new();
+            for g in &slice.grants {
+                assert!(!seen.contains(&g.engine),
+                        "case {case}: slice {si} grants {:?} twice", g.engine);
+                seen.push(g.engine);
+            }
+        }
+        // Every admitted app is actually served in every window.
+        for w in 0..2 {
+            let report = sched.run_window(&mut sim).unwrap();
+            for id in &admitted {
+                let served = report
+                    .apps
+                    .iter()
+                    .find(|a| &a.app_id == id)
+                    .map_or(0, |a| a.inferences);
+                assert!(served >= 1,
+                        "case {case}: app {id} starved in window {w}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden snapshot: one pinned multi-app joint-search result over a fixed,
+// hand-written LUT (regenerate with UPDATE_GOLDEN=1).
+// ---------------------------------------------------------------------------
+
+fn fixed_lut(reg: &Registry) -> Lut {
+    let mut entries = BTreeMap::new();
+    let mut put = |variant: &str, engine, threads, ms: f64| {
+        let v = reg.get(variant).expect(variant);
+        entries.insert(
+            LutKey {
+                variant: variant.to_string(),
+                engine,
+                threads,
+                governor: Governor::Performance,
+            },
+            LutEntry {
+                latency: LatencyStats::from_samples(&[ms]),
+                mem_bytes: v.mem_bytes(),
+                accuracy: v.accuracy,
+            },
+        );
+    };
+
+    use EngineKind::{Cpu, Gpu, Npu};
+    put("mobilenet_v2_100__int8__b1", Npu, 1, 1.0);
+    put("mobilenet_v2_100__int8__b1", Gpu, 1, 2.2);
+    put("mobilenet_v2_100__int8__b1", Cpu, 4, 2.5);
+    put("mobilenet_v2_100__fp32__b1", Gpu, 1, 3.0);
+    put("mobilenet_v2_100__fp32__b1", Cpu, 4, 4.0);
+    put("mobilenet_v2_100__fp32__b1", Npu, 1, 6.0);
+    put("mobilenet_v2_100__fp32__b1", Cpu, 1, 8.0);
+
+    put("inception_v3__int8__b1", Npu, 1, 2.0);
+    put("inception_v3__int8__b1", Cpu, 4, 6.0);
+    put("inception_v3__int8__b1", Gpu, 1, 6.5);
+    put("inception_v3__fp32__b1", Gpu, 1, 9.0);
+    put("inception_v3__fp32__b1", Cpu, 4, 12.0);
+    put("inception_v3__fp32__b1", Npu, 1, 20.0);
+
+    Lut { device: "samsung_a71".to_string(), entries }
+}
+
+#[test]
+fn golden_joint_search_is_byte_stable() {
+    let reg = fake_registry();
+    let lut = fixed_lut(&reg);
+    let dev = samsung_a71();
+    let descs = vec![
+        desc("ai_camera", "mobilenet_v2_100", 60.0, 2.5),
+        desc("gallery_tagger", "inception_v3", 15.0, 4.5),
+    ];
+    let search = JointSearch::new(&dev, &reg, &lut, GlobalBudget::of(&dev));
+    let assignment = search.search(&descs, &Conditions::idle()).unwrap();
+
+    let mut lines: Vec<String> = assignment
+        .apps
+        .iter()
+        .map(|p| {
+            format!(
+                "{}: {}|{}|{}|{}|r={}|T={:.4}ms|slo_ok={}|degraded={}",
+                p.app_id,
+                p.design.variant,
+                p.design.hw.engine.name(),
+                p.design.hw.threads,
+                p.design.hw.governor.name(),
+                p.design.hw.recognition_rate,
+                p.latency_ms,
+                p.slo_ok,
+                p.degraded,
+            )
+        })
+        .collect();
+    lines.push(format!("violations={} pressure={:.4}",
+                       assignment.violations, assignment.pressure));
+    let got = lines.join("\n") + "\n";
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"),
+                       "/tests/golden/multiapp_designs.txt");
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(path, &got).unwrap();
+    }
+    let want = std::fs::read_to_string(path)
+        .expect("golden snapshot missing — run with UPDATE_GOLDEN=1");
+    assert_eq!(got, want,
+               "joint-search assignment drifted from the golden snapshot \
+                (UPDATE_GOLDEN=1 to accept)");
+}

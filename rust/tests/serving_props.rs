@@ -57,11 +57,43 @@ fn prop_no_request_dropped_and_responses_map_to_requests() {
                        "case {case}: response {i} mapped to wrong request");
             assert!(resp.batch >= 1 && resp.queue_ms >= 0.0, "case {case}");
         }
-        // Accounting: every accepted request rode exactly one batch.
+        // Accounting: every accepted request rode exactly one batch, and
+        // every executed slot is either a real request or counted padding.
         assert_eq!(srv.telemetry.counter("batched_requests"), n as u64,
                    "case {case}");
+        let executed = srv.telemetry.counter("executed_slots");
+        let padded = srv.telemetry.counter("padded_slots");
+        assert_eq!(executed, n as u64 + padded, "case {case}");
+        // Pad-up never wastes more than the configured per-batch bound.
+        assert!(srv.wasted_compute_ratio() <= 0.25 + 1e-12,
+                "case {case}: wasted {}", srv.wasted_compute_ratio());
         srv.stop();
     }
+}
+
+#[test]
+fn prop_padded_tail_is_counted_not_invisible() {
+    // Three requests against a {1,4} batch ladder: the flushed tail rounds
+    // up to b4 with exactly one replicated slot, and that slot must show up
+    // in telemetry as wasted compute.
+    let reg = serving_registry(RES);
+    let mut cfg = config(&reg);
+    cfg.max_batch_delay_ms = 60.0;
+    let srv = Server::start(backend(&reg, 0.0), &reg, cfg).unwrap();
+    let rxs: Vec<_> = (0..3)
+        .map(|c| srv.submit(class_frame(RES, c), RES, RES).unwrap())
+        .collect();
+    for (c, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.class, c, "padding corrupted a real response");
+        assert_eq!(resp.batch, 4);
+        assert_eq!(resp.variant, "cls__fp32__b4");
+    }
+    assert_eq!(srv.telemetry.counter("padded_slots"), 1);
+    assert_eq!(srv.telemetry.counter("executed_slots"), 4);
+    assert!((srv.wasted_compute_ratio() - 0.25).abs() < 1e-12,
+            "wasted {}", srv.wasted_compute_ratio());
+    srv.stop();
 }
 
 #[test]

@@ -1,0 +1,510 @@
+#!/usr/bin/env python3
+"""Independent oracle for `oodin serve-bench --smoke`.
+
+Re-implements, in plain Python, every deterministic component on the
+serve-bench smoke path — the SplitMix64 trace RNG, the roofline latency
+model (Samsung A71 CPU, zero noise, cool thermal state), the bounded
+deadline queue with degrade watermarks, the deadline-aware batch policy,
+and the integer-microsecond event loop — and emits the exact JSON line the
+Rust binary prints, regenerating `rust/tests/golden/serve_bench.json`.
+
+Why this exists: the golden snapshot must be producible *without* running
+the Rust binary (the authoring container has no Rust toolchain), and it
+doubles as an N-version check — Rust and Python implementations of the
+same spec must agree byte-for-byte.
+
+Exactness argument: every quantity that reaches the snapshot is either
+integer arithmetic (the µs event timeline), IEEE-754 double +,*,/,max
+(the roofline latencies — exactly specified, identical in both
+languages), or `log` used only to draw arrival gaps that are immediately
+quantised to whole microseconds (a last-ulp `log` difference flips a
+rounding only with probability ~1e-13 per draw).  The thermal model is
+simulated only to *assert* the engine stays >2 degC below its throttle
+point, where its frequency scale is exactly 1.0 and drops out.
+
+Usage:  python3 python/golden_serve_bench.py [--check]
+  default: writes rust/tests/golden/serve_bench.json
+  --check: compares against the existing file, exit 1 on drift
+"""
+
+import heapq
+import math
+import os
+import sys
+
+# --------------------------------------------------------------------------
+# util::rng::Rng (SplitMix64)
+# --------------------------------------------------------------------------
+
+M64 = (1 << 64) - 1
+GOLDEN_GAMMA = 0x9E3779B97F4A7C15
+
+
+class Rng:
+    def __init__(self, seed):
+        self.state = (seed + GOLDEN_GAMMA) & M64
+
+    def next_u64(self):
+        self.state = (self.state + GOLDEN_GAMMA) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return z ^ (z >> 31)
+
+    def f64(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def below(self, n):
+        return self.next_u64() % n
+
+
+def rust_round(x):
+    """f64::round: half away from zero (positive inputs only here)."""
+    f = math.floor(x)
+    return int(f) if x - f < 0.5 else int(f) + 1
+
+
+# --------------------------------------------------------------------------
+# Roofline latency (perf::latency_ms) for the bench fixture on the
+# Samsung A71 CPU engine (SimBackend default: threads=8, performance
+# governor, zero noise, no external load, thermal scale 1.0 while cool).
+# --------------------------------------------------------------------------
+
+A71_CPU = dict(peak=14.0, int8_mult=2.2, bw=8.0, dispatch=0.002,
+               parallel=0.85, n_cores=8,
+               heat_per_ms=0.08, cool_rate=0.003, throttle=62.0)
+RES = 16
+NUM_CLASSES = 10
+# (precision, batch) -> (flops per sample, weight bytes)
+FIXTURE = {
+    ("fp32", 1): (28_000_000, 400_000),
+    ("fp32", 4): (21_000_000, 400_000),
+    ("fp32", 8): (17_500_000, 400_000),
+    ("int8", 1): (28_000_000, 100_000),
+    ("int8", 4): (21_000_000, 100_000),
+    ("int8", 8): (17_500_000, 100_000),
+}
+
+
+def thread_speedup(parallel, threads):
+    if threads <= 1:
+        return 1.0
+    return 1.0 / ((1.0 - parallel) + parallel / threads)
+
+
+def latency_busy_ms(prec, batch):
+    """(latency_ms, busy_ms) — exact mirror of perf::latency_ms order."""
+    spec = A71_CPU
+    flops, size = FIXTURE[(prec, batch)]
+    all_cores = thread_speedup(spec["parallel"], spec["n_cores"])
+    base = spec["peak"] / all_cores * thread_speedup(spec["parallel"],
+                                                    spec["n_cores"])
+    pm = 1.0 if prec == "fp32" else spec["int8_mult"]
+    # base * precision_mult * governor(1.0) * thermal(1.0) / penalty(1.0)
+    gflops = base * pm * 1.0 * 1.0 / 1.0
+    compute = (float(flops) * float(batch)) / (gflops * 1e6)
+    in_elems = batch * RES * RES * 3
+    out_elems = batch * NUM_CLASSES
+    act = (in_elems + out_elems) * 4
+    memory = (float(size) + float(act)) / (spec["bw"] * 1e6)
+    roof = max(compute, memory)
+    # contention(0.0) = 2^0 = 1.0 exactly
+    return (spec["dispatch"] + roof) * 1.0, roof
+
+
+SERVICE_MS = {k: latency_busy_ms(*k)[0] for k in FIXTURE}
+BUSY_MS = {k: latency_busy_ms(*k)[1] for k in FIXTURE}
+
+
+class Backend:
+    """DeviceSim stand-in: constant latencies + a thermal guard asserting
+    the CPU never comes within 2 degC of throttling (where the closed-form
+    latencies would stop being exact)."""
+
+    def __init__(self):
+        self.clock_us = 0
+        self.temp = 25.0
+        self.last_ms = 0.0
+
+    def _cool(self, dt_ms):
+        self.temp = 25.0 + (self.temp - 25.0) * math.exp(
+            -A71_CPU["cool_rate"] * dt_ms)
+
+    def execute(self, prec, batch):
+        now_ms = self.clock_us / 1e3
+        # idle_until(now)
+        dt = max(now_ms - self.last_ms, 0.0)
+        self.last_ms = now_ms
+        self._cool(dt)
+        assert self.temp < A71_CPU["throttle"] - 2.0, (
+            f"thermal margin lost: {self.temp:.2f} degC — golden latencies "
+            "would no longer be closed-form")
+        lat_ms = SERVICE_MS[(prec, batch)]
+        self.clock_us += rust_round(lat_ms * 1e3)
+        # record_work(now2, busy)
+        now2 = self.clock_us / 1e3
+        dt = max(now2 - self.last_ms, 0.0)
+        self.last_ms = now2
+        self.temp += A71_CPU["heat_per_ms"] * BUSY_MS[(prec, batch)]
+        self._cool(dt)
+        return max(rust_round(lat_ms * 1e3), 1)  # service µs
+
+
+# --------------------------------------------------------------------------
+# serving::queue::DeadlineQueue
+# --------------------------------------------------------------------------
+
+class DeadlineQueue:
+    def __init__(self, cap, high, low):
+        self.cap, self.high, self.low = cap, high, low
+        self.entries = []  # (class, arrival_us, deadline_us)
+        self.degraded = False
+        self.sheds = 0
+        self.max_depth = 0
+
+    def admit(self, item, arrival, deadline):
+        if len(self.entries) >= self.cap:
+            self.sheds += 1
+            return False
+        self.entries.append((item, arrival, deadline))
+        self.max_depth = max(self.max_depth, len(self.entries))
+        if not self.degraded and len(self.entries) >= self.high:
+            self.degraded = True
+        return True
+
+    def pop_chunk(self, n):
+        take = min(n, len(self.entries))
+        chunk = self.entries[:take]
+        del self.entries[:take]
+        if self.degraded and len(self.entries) <= self.low:
+            self.degraded = False
+        return chunk
+
+
+# --------------------------------------------------------------------------
+# serving::batch — pick_variant + decide
+# --------------------------------------------------------------------------
+
+LADDER = [1, 4, 8]
+U64MAX = M64
+
+
+def pick_variant(ladder, n, max_pad_ratio):
+    n = max(n, 1)
+    for b in ladder:
+        if b == n:
+            return b
+    for b in ladder:
+        if b > n and (b - n) / float(b) <= max_pad_ratio:
+            return b
+    for b in reversed(ladder):
+        if b <= n:
+            return b
+    return ladder[0]
+
+
+def decide(now, qlen, max_batch, oldest_arr, oldest_dl, est, max_wait, slack):
+    """Returns ('full'|'maxwait'|'deadline', None) or (None, wake_us)."""
+    if qlen >= max_batch:
+        return "full", None
+    wait_trigger = min(oldest_arr + max_wait, U64MAX)
+    if now >= wait_trigger:
+        return "maxwait", None
+    if oldest_dl != U64MAX:
+        margin = est + slack
+        if min(now + margin, U64MAX) >= oldest_dl:
+            return "deadline", None
+        return None, max(min(wait_trigger, oldest_dl - margin), now + 1)
+    return None, max(wait_trigger, now + 1)
+
+
+# --------------------------------------------------------------------------
+# serving::pipeline::EventPipeline (virtual event loop)
+# --------------------------------------------------------------------------
+
+class Report:
+    def __init__(self):
+        self.offered = 0
+        self.shed = 0
+        self.completions = []  # (class, arrival, done, deadline, batch, deg)
+        self.degraded_served = 0
+        self.executed_slots = 0
+        self.padded_slots = 0
+        self.max_depth = 0
+        self.launches = {"full": 0, "maxwait": 0, "deadline": 0}
+        self.makespan_us = 0
+
+
+def run_events(pending, spawner, cfg):
+    """pending: list of (at_us, seq, class); spawner: None or
+    (duration_us, Rng, next_seq)."""
+    backend = Backend()
+    est = {}
+    # calibrate(): primary then degraded ladder, sizes ascending
+    for deg in (False, True):
+        if deg and not cfg["degrade"]:
+            continue
+        prec = "int8" if deg else "fp32"
+        for b in LADDER:
+            est[(deg, b)] = backend.execute(prec, b)
+
+    heapq.heapify(pending)
+    queue = DeadlineQueue(cfg["queue_cap"], cfg["high"], cfg["low"])
+    lanes = [0]
+    rep = Report()
+    now = 0
+    max_wait = rust_round(cfg["max_wait_ms"] * 1e3)
+    slack = rust_round(cfg["slack_ms"] * 1e3)
+    dl_rel = (rust_round(cfg["deadline_ms"] * 1e3)
+              if math.isfinite(cfg["deadline_ms"]) else U64MAX)
+    while True:
+        while pending and pending[0][0] <= now:
+            at, _, cls = heapq.heappop(pending)
+            rep.offered += 1
+            queue.admit(cls, at, min(at + dl_rel, U64MAX))
+        wake = None
+        while queue.entries:
+            lane, free_at = min(enumerate(lanes), key=lambda p: (p[1], p[0]))
+            if free_at > now:
+                break
+            use_deg = queue.degraded and cfg["degrade"]
+            prec = "int8" if use_deg else "fp32"
+            bsz = pick_variant(LADDER, len(queue.entries),
+                               cfg["max_pad_ratio"])
+            e = est.get((use_deg, bsz), 0)
+            earliest_dl = min(ent[2] for ent in queue.entries)
+            reason, wake_at = decide(now, len(queue.entries), LADDER[-1],
+                                     queue.entries[0][1], earliest_dl,
+                                     e, max_wait, slack)
+            if reason is None:
+                wake = wake_at
+                break
+            rep.launches[reason] += 1
+            chunk = queue.pop_chunk(min(bsz, len(queue.entries)))
+            svc = backend.execute(prec, bsz)
+            est[(use_deg, bsz)] = svc
+            lanes[lane] = now + svc
+            rep.executed_slots += bsz
+            rep.padded_slots += bsz - len(chunk)
+            if use_deg:
+                rep.degraded_served += len(chunk)
+            done = now + svc
+            rep.makespan_us = max(rep.makespan_us, done)
+            for cls, arr, dl in chunk:
+                rep.completions.append((cls, arr, done, dl, bsz, use_deg))
+                if spawner is not None and done < spawner[0]:
+                    heapq.heappush(pending,
+                                   (done, spawner[2], spawner[1].below(
+                                       NUM_CLASSES)))
+                    spawner[2] += 1
+        nxt = U64MAX
+        if pending:
+            nxt = min(nxt, pending[0][0])
+        if queue.entries:
+            min_free = min(lanes)
+            if min_free > now:
+                nxt = min(nxt, min_free)
+            else:
+                assert wake is not None
+                nxt = min(nxt, wake)
+        if nxt == U64MAX:
+            break
+        now = nxt
+    rep.max_depth = queue.max_depth
+    rep.shed = queue.sheds
+    return rep
+
+
+# --------------------------------------------------------------------------
+# experiments::loadgen — traces + smoke config + JSON emission
+# --------------------------------------------------------------------------
+
+def poisson_trace(rate_rps, duration_ms, seed):
+    rng = Rng(seed)
+    dur = rust_round(duration_ms * 1e3)
+    t = 0
+    out = []
+    while True:
+        gap_ms = -math.log(1.0 - rng.f64()) * 1000.0 / rate_rps
+        t += max(rust_round(gap_ms * 1e3), 1)
+        if t >= dur:
+            break
+        out.append((t, len(out), rng.below(NUM_CLASSES)))
+    return out
+
+
+def burst_trace(base, burst, period_ms, duty, duration_ms, seed):
+    rng = Rng(seed)
+    dur = rust_round(duration_ms * 1e3)
+    period = rust_round(period_ms * 1e3)
+    burst_span = rust_round(period_ms * duty * 1e3)
+    t = 0
+    out = []
+    while True:
+        rate = burst if t % period < burst_span else base
+        gap_ms = -math.log(1.0 - rng.f64()) * 1000.0 / rate
+        t += max(rust_round(gap_ms * 1e3), 1)
+        if t >= dur:
+            break
+        out.append((t, len(out), rng.below(NUM_CLASSES)))
+    return out
+
+
+SMOKE = dict(device="samsung_a71", seed=42, duration_ms=2000.0,
+             open_rates=[200.0, 500.0, 900.0],
+             burst=dict(base=100.0, burst=3000.0, period_ms=500.0, duty=0.3),
+             tight=dict(rate=400.0, deadline_ms=7.0),
+             closed=[4, 32],
+             queue_cap=64, max_wait_ms=5.0, deadline_ms=50.0, degrade=True)
+
+
+def scen_cfg(deadline_ms):
+    return dict(queue_cap=SMOKE["queue_cap"],
+                high=SMOKE["queue_cap"] // 2,
+                low=SMOKE["queue_cap"] // 8,
+                max_wait_ms=SMOKE["max_wait_ms"],
+                slack_ms=0.5,
+                deadline_ms=deadline_ms,
+                max_pad_ratio=0.25,
+                degrade=SMOKE["degrade"])
+
+
+def percentile(sorted_vals, p):
+    n = len(sorted_vals)
+    if n == 1:
+        return sorted_vals[0]
+    rank = p / 100.0 * float(n - 1)
+    lo = int(math.floor(rank))
+    hi = int(math.ceil(rank))
+    frac = rank - float(lo)
+    return sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac
+
+
+def r3(x):
+    return rust_round(x * 1000.0) / 1000.0
+
+
+def jnum(n):
+    f = float(n)
+    if f == int(f) and abs(f) < 9e15:
+        return str(int(f))
+    return repr(f)
+
+
+def report_fields(rep):
+    comps = rep.completions
+    lat = sorted((done - arr) / 1000.0 for _, arr, done, _, _, _ in comps)
+    misses = sum(1 for _, _, done, dl, _, _ in comps if done > dl)
+    correct = len(comps)  # accuracy-1.0 fixture: predictions are exact
+    lateness = max((max(done - dl, 0) for _, _, done, dl, _, _ in comps),
+                   default=0)
+    thr = (float(len(comps)) * 1e6 / float(rep.makespan_us)
+           if rep.makespan_us else 0.0)
+    p = lambda q: percentile(lat, q) if lat else 0.0  # noqa: E731
+    return [
+        ("offered", jnum(rep.offered)),
+        ("completed", jnum(len(comps))),
+        ("shed", jnum(rep.shed)),
+        ("deadline_miss", jnum(misses)),
+        ("degraded_served", jnum(rep.degraded_served)),
+        ("correct", jnum(correct)),
+        ("executed_slots", jnum(rep.executed_slots)),
+        ("padded_slots", jnum(rep.padded_slots)),
+        ("queue_depth_max", jnum(rep.max_depth)),
+        ("launch_full", jnum(rep.launches["full"])),
+        ("launch_maxwait", jnum(rep.launches["maxwait"])),
+        ("launch_deadline", jnum(rep.launches["deadline"])),
+        ("throughput_rps", jnum(r3(thr))),
+        ("p50_ms", jnum(r3(p(50.0)))),
+        ("p95_ms", jnum(r3(p(95.0)))),
+        ("p99_ms", jnum(r3(p(99.0)))),
+        ("max_lateness_ms", jnum(r3(lateness / 1000.0))),
+        ("makespan_ms", jnum(r3(rep.makespan_us / 1000.0))),
+    ]
+
+
+def obj(fields):
+    return "{" + ",".join(f'"{k}":{v}' for k, v in fields) + "}"
+
+
+def main():
+    scenarios = []
+    diag = []
+    for rate in SMOKE["open_rates"]:
+        rep = run_events(poisson_trace(rate, SMOKE["duration_ms"],
+                                       SMOKE["seed"]),
+                         None, scen_cfg(SMOKE["deadline_ms"]))
+        scenarios.append(([("trace", '"poisson"'), ("rate_rps", jnum(rate))],
+                          rep))
+    b = SMOKE["burst"]
+    rep = run_events(burst_trace(b["base"], b["burst"], b["period_ms"],
+                                 b["duty"], SMOKE["duration_ms"],
+                                 SMOKE["seed"]),
+                     None, scen_cfg(SMOKE["deadline_ms"]))
+    scenarios.append(([("trace", '"burst"'), ("base_rps", jnum(b["base"])),
+                       ("burst_rps", jnum(b["burst"])),
+                       ("period_ms", jnum(b["period_ms"])),
+                       ("duty", jnum(b["duty"]))], rep))
+    t = SMOKE["tight"]
+    rep = run_events(poisson_trace(t["rate"], SMOKE["duration_ms"],
+                                   SMOKE["seed"]),
+                     None, scen_cfg(t["deadline_ms"]))
+    scenarios.append(([("trace", '"poisson_tight"'),
+                       ("rate_rps", jnum(t["rate"])),
+                       ("deadline_ms", jnum(t["deadline_ms"]))], rep))
+    for c in SMOKE["closed"]:
+        dur = rust_round(SMOKE["duration_ms"] * 1e3)
+        rng = Rng(SMOKE["seed"])
+        pending = [(0, seq, rng.below(NUM_CLASSES)) for seq in range(c)]
+        rep = run_events(pending, [dur, rng, c], scen_cfg(SMOKE["deadline_ms"]))
+        scenarios.append(([("trace", '"closed"'), ("concurrency", jnum(c))],
+                          rep))
+
+    rows = []
+    for head, rep in scenarios:
+        rows.append(obj(head + report_fields(rep)))
+        comps = rep.completions
+        lateness = max((max(done - dl, 0)
+                        for _, _, done, dl, _, _ in comps), default=0)
+        diag.append(f"{dict(head)['trace']:>16} {dict(head).get('rate_rps', dict(head).get('concurrency', '-')):>6} "
+                    f"offered={rep.offered:<5} done={len(comps):<5} "
+                    f"shed={rep.shed:<4} deg={rep.degraded_served:<5} "
+                    f"miss={sum(1 for _, _, d, dl, _, _ in comps if d > dl):<4} "
+                    f"lateness_us={lateness:<6} qmax={rep.max_depth:<3} "
+                    f"launches={rep.launches}")
+    inner = obj([
+        ("device", '"samsung_a71"'),
+        ("family", '"srv"'),
+        ("seed", jnum(SMOKE["seed"])),
+        ("duration_ms", jnum(SMOKE["duration_ms"])),
+        ("queue_cap", jnum(SMOKE["queue_cap"])),
+        ("max_wait_ms", jnum(SMOKE["max_wait_ms"])),
+        ("deadline_ms", jnum(SMOKE["deadline_ms"])),
+        ("degrade", "true"),
+        ("scenarios", "[" + ",".join(rows) + "]"),
+    ])
+    line = obj([("serve_bench", inner)])
+
+    print("\n".join(diag), file=sys.stderr)
+    for k, v in sorted(SERVICE_MS.items()):
+        print(f"service {k} = {v!r} ms", file=sys.stderr)
+
+    out_path = os.path.join(os.path.dirname(__file__), "..", "rust", "tests",
+                            "golden", "serve_bench.json")
+    out_path = os.path.normpath(out_path)
+    if "--check" in sys.argv:
+        want = open(out_path).read()
+        if want != line + "\n":
+            print("DRIFT: golden snapshot does not match oracle",
+                  file=sys.stderr)
+            return 1
+        print("golden snapshot matches oracle", file=sys.stderr)
+        return 0
+    with open(out_path, "w") as f:
+        f.write(line + "\n")
+    print(f"wrote {out_path} ({len(line)} bytes)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

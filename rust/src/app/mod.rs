@@ -32,9 +32,13 @@ use crate::util::clock::Clock;
 /// Application configuration (what the developer ships + OODIn's chosen σ).
 #[derive(Clone)]
 pub struct AppConfig {
+    /// Target device profile name.
     pub device: String,
+    /// The app's performance objective.
     pub objective: Objective,
+    /// Candidate-space restrictions (usually the app's model family).
     pub space: SearchSpace,
+    /// Camera capture rate (frames/s).
     pub camera_fps: f64,
     /// Execute backend numerics per processed frame (PJRT when artifacts
     /// exist, SimBackend otherwise).
@@ -43,11 +47,14 @@ pub struct AppConfig {
     pub live_ui: bool,
     /// Measurement runs when building the LUT (paper default 200).
     pub lut_runs: usize,
+    /// Runtime Manager adaptation policy.
     pub policy: Policy,
+    /// Synthetic camera RNG seed.
     pub camera_seed: u64,
 }
 
 impl AppConfig {
+    /// Defaults: 30 fps camera, real execution, 60-run LUT, seed 42.
     pub fn new(device: &str, objective: Objective, space: SearchSpace) -> Self {
         AppConfig {
             device: device.to_string(),
@@ -66,7 +73,15 @@ impl AppConfig {
 /// A scheduled condition change (Fig 7's load ramp).
 #[derive(Debug, Clone)]
 pub enum ScenarioEvent {
-    SetLoad { at_frame: u64, engine: EngineKind, load: f64 },
+    /// Inject external engine load before a given frame.
+    SetLoad {
+        /// Frame index the load appears at.
+        at_frame: u64,
+        /// Loaded engine.
+        engine: EngineKind,
+        /// Load factor (latency multiplier 2^load).
+        load: f64,
+    },
 }
 
 /// The canonical multi-app workload mix (the `multi` CLI scenario): up to
@@ -113,32 +128,49 @@ pub fn multi_scenario(n: usize, device: &DeviceProfile, registry: &Registry,
 /// Per-frame record emitted by the application loop.
 #[derive(Debug, Clone)]
 pub struct FrameRecord {
+    /// Camera sequence number.
     pub seq: u64,
+    /// Capture timestamp on the device timeline (ms).
     pub ts_ms: f64,
     /// Simulated device latency of this inference (ms).
     pub latency_ms: f64,
     /// Real host PJRT latency, when real_exec is on.
     pub host_ms: Option<f64>,
+    /// Engine the inference ran on.
     pub engine: EngineKind,
+    /// Variant that served the frame.
     pub variant: String,
+    /// Decoded top-1 class (None without real execution).
     pub predicted: Option<usize>,
+    /// Ground-truth class of the synthetic frame.
     pub label: usize,
+    /// Whether predicted == label (None without real execution).
     pub correct: Option<bool>,
     /// A reconfiguration decided right after this frame.
     pub switch: Option<Switch>,
+    /// Active-engine temperature after the frame (deg C).
     pub temp_c: f64,
 }
 
 /// The assembled application.
 pub struct Application {
+    /// The configuration the app was built from.
     pub cfg: AppConfig,
+    /// Detected resource model R.
     pub profile: Arc<DeviceProfile>,
+    /// The model space M.
     pub registry: Arc<Registry>,
+    /// Device Measurements output.
     pub lut: Arc<Lut>,
+    /// The simulated device timeline.
     pub sim: DeviceSim,
+    /// The adaptation state machine.
     pub manager: RuntimeManager,
+    /// SIL camera block.
     pub camera: SyntheticCamera,
+    /// SIL gallery block.
     pub gallery: Gallery,
+    /// SIL UI block.
     pub ui: UiStub,
     backend: Option<Arc<dyn Backend>>,
     slot: Option<ModelSlot>,
@@ -222,6 +254,7 @@ impl Application {
         })
     }
 
+    /// The design currently resident in DLACL.
     pub fn current_design(&self) -> &Design {
         self.manager.current()
     }
@@ -364,6 +397,7 @@ impl Application {
         Ok(records)
     }
 
+    /// Release the execution backend.
     pub fn shutdown(self) {
         if let Some(be) = self.backend {
             be.shutdown();

@@ -13,10 +13,15 @@ use crate::util::stats::Percentile;
 /// A fully-specified use case.
 #[derive(Debug, Clone)]
 pub struct UseCase {
+    /// Human-readable use-case name.
     pub name: String,
+    /// Target device profile name.
     pub device: String,
+    /// The performance objective o_i.
     pub objective: Objective,
+    /// Candidate-space restrictions.
     pub space: SearchSpace,
+    /// Camera/source frame rate (frames/s).
     pub camera_fps: f64,
 }
 
@@ -58,10 +63,12 @@ impl UseCase {
         })
     }
 
+    /// Parse a use-case from JSON text.
     pub fn from_json_str(text: &str) -> Result<Self> {
         Self::from_json(&json::parse(text).context("parsing use-case JSON")?)
     }
 
+    /// Parse a use-case from a JSON file.
     pub fn from_file(path: &str) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {path}"))?;

@@ -14,14 +14,19 @@ pub mod profiles;
 /// A compute engine kind: CE = {CPU, GPU, NPU} (NPU ≡ the NNAPI target).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum EngineKind {
+    /// The multi-core CPU (threaded, XNNPACK-style execution).
     Cpu,
+    /// The GPU delegate.
     Gpu,
+    /// The NPU, reached through the NNAPI delegate.
     Npu,
 }
 
 impl EngineKind {
+    /// Every engine kind, in declaration order.
     pub const ALL: [EngineKind; 3] = [EngineKind::Cpu, EngineKind::Gpu, EngineKind::Npu];
 
+    /// Canonical identifier (`nnapi` for the NPU), as used in LUT keys.
     pub fn name(&self) -> &'static str {
         match self {
             EngineKind::Cpu => "cpu",
@@ -30,6 +35,7 @@ impl EngineKind {
         }
     }
 
+    /// Parse an identifier (`npu` and `nnapi` both name the NPU).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         Ok(match s {
             "cpu" => EngineKind::Cpu,
@@ -43,11 +49,13 @@ impl EngineKind {
 /// Calibration constants of one compute engine on one device.
 #[derive(Debug, Clone)]
 pub struct EngineSpec {
+    /// Which engine these constants describe.
     pub kind: EngineKind,
     /// Effective FP32 throughput with all resources engaged (GFLOP/s).
     pub peak_gflops_fp32: f64,
-    /// Multiplier on peak when running FP16 / INT8 models.
+    /// Multiplier on peak when running FP16 models.
     pub fp16_mult: f64,
+    /// Multiplier on peak when running INT8 models.
     pub int8_mult: f64,
     /// Memory bandwidth seen by this engine (GB/s).
     pub mem_bw_gbps: f64,
@@ -75,16 +83,22 @@ pub struct ThermalSpec {
 /// Camera capabilities (v_camera in Eq. 2).
 #[derive(Debug, Clone)]
 pub struct CameraSpec {
-    pub api_level: &'static str, // LEGACY | LIMITED | FULL | LEVEL_3
+    /// Camera2 hardware level: LEGACY | LIMITED | FULL | LEVEL_3.
+    pub api_level: &'static str,
+    /// Maximum capture rate (frames/s).
     pub max_fps: f64,
+    /// Sensor resolution (width, height).
     pub resolution: (u32, u32),
 }
 
 /// The full per-device resource representation R.
 #[derive(Debug, Clone)]
 pub struct DeviceProfile {
+    /// Profile identifier (`sony_c5`, `samsung_a71`, `samsung_s20_fe`).
     pub name: &'static str,
+    /// SoC marketing name.
     pub chipset: &'static str,
+    /// Device release year.
     pub year: u32,
     /// CE: available compute engines.
     pub engines: Vec<EngineSpec>,
@@ -92,6 +106,7 @@ pub struct DeviceProfile {
     pub n_cores: usize,
     /// C: memory capacity (bytes, scaled units — see DESIGN.md).
     pub mem_budget_bytes: u64,
+    /// Physical RAM (GB, Table I).
     pub ram_gb: f64,
     /// DVFS: available governors.
     pub governors: Vec<crate::dvfs::Governor>,
@@ -99,7 +114,9 @@ pub struct DeviceProfile {
     pub battery_mah: u32,
     /// v_os: Android version / API level.
     pub os_version: u32,
+    /// Android API level.
     pub api_level: u32,
+    /// v_camera: camera capabilities.
     pub camera: CameraSpec,
     /// A deployment is rejected when even the best sustained latency
     /// exceeds this (the paper drops DNNs causing >=5 s lag on Sony C5).
@@ -107,10 +124,12 @@ pub struct DeviceProfile {
 }
 
 impl DeviceProfile {
+    /// The spec of one engine kind, when the device has it.
     pub fn engine(&self, kind: EngineKind) -> Option<&EngineSpec> {
         self.engines.iter().find(|e| e.kind == kind)
     }
 
+    /// True when the device exposes this engine.
     pub fn has_engine(&self, kind: EngineKind) -> bool {
         self.engine(kind).is_some()
     }

@@ -186,6 +186,7 @@ pub fn profiles() -> Vec<DeviceProfile> {
     vec![sony_c5(), samsung_a71(), samsung_s20_fe()]
 }
 
+/// Look up a Table I profile by its `name` field.
 pub fn by_name(name: &str) -> Option<DeviceProfile> {
     profiles().into_iter().find(|d| d.name == name)
 }

@@ -33,7 +33,9 @@ pub struct SimExec {
 
 /// The simulated device.
 pub struct DeviceSim {
+    /// The resource model being simulated.
     pub profile: DeviceProfile,
+    /// The shared (sim or real) timeline.
     pub clock: Clock,
     thermal: BTreeMap<EngineKind, ThermalModel>,
     loads: BTreeMap<EngineKind, f64>,
@@ -42,6 +44,7 @@ pub struct DeviceSim {
 }
 
 impl DeviceSim {
+    /// A cool, idle device on the given timeline.
     pub fn new(profile: DeviceProfile, clock: Clock) -> Self {
         let thermal = profile
             .engines
@@ -64,10 +67,19 @@ impl DeviceSim {
         self.loads.insert(engine, load.max(0.0));
     }
 
+    /// Override the log-normal latency-jitter sigma (default 0.03).  Zero
+    /// makes every simulated latency exactly the closed-form roofline value
+    /// — the serve-bench harness relies on this for golden snapshots.
+    pub fn set_noise_sigma(&mut self, sigma: f64) {
+        self.noise_sigma = sigma.max(0.0);
+    }
+
+    /// Current external load factor on one engine.
     pub fn load(&self, engine: EngineKind) -> f64 {
         self.loads.get(&engine).copied().unwrap_or(0.0)
     }
 
+    /// Current temperature of one engine (deg C), when present.
     pub fn temp_c(&self, engine: EngineKind) -> Option<f64> {
         self.thermal.get(&engine).map(|t| t.temp_c())
     }

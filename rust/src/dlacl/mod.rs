@@ -25,12 +25,14 @@ pub struct BufferSet {
     /// Flat f32 input staging buffer (reused across frames — the request
     /// path does not allocate).
     pub input: Vec<f32>,
+    /// Logical input shape of the resident variant.
     pub input_shape: Vec<usize>,
     /// Bytes attributed to this variant: weights + input + intermediates.
     pub total_bytes: u64,
 }
 
 impl BufferSet {
+    /// Allocate the statically-sized buffers for one variant.
     pub fn for_variant(v: &ModelVariant) -> Self {
         BufferSet {
             input: vec![0.0; v.input_elems()],
@@ -52,14 +54,17 @@ pub struct ModelSlot {
 }
 
 impl ModelSlot {
+    /// An empty slot over `runtime` with a memory budget.
     pub fn new(runtime: Arc<dyn Backend>, budget_bytes: u64) -> Self {
         ModelSlot { runtime, resident: None, budget_bytes, swaps: 0 }
     }
 
+    /// The currently resident variant, if any.
     pub fn resident(&self) -> Option<&ModelVariant> {
         self.resident.as_ref().map(|(v, _)| v)
     }
 
+    /// Bytes attributed to the resident variant (0 when empty).
     pub fn resident_bytes(&self) -> u64 {
         self.resident.as_ref().map_or(0, |(_, b)| b.total_bytes)
     }

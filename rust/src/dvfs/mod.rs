@@ -14,6 +14,7 @@
 
 use crate::device::ThermalSpec;
 
+/// Ambient temperature every engine cools towards (deg C).
 pub const AMBIENT_C: f64 = 25.0;
 
 /// DVFS governor policies available on the target devices (Table I: S20 FE
@@ -29,9 +30,11 @@ pub enum Governor {
 }
 
 impl Governor {
+    /// Every governor, in declaration order.
     pub const ALL: [Governor; 3] =
         [Governor::Performance, Governor::Schedutil, Governor::EnergyStep];
 
+    /// Canonical identifier, as used in LUT keys.
     pub fn name(&self) -> &'static str {
         match self {
             Governor::Performance => "performance",
@@ -40,6 +43,7 @@ impl Governor {
         }
     }
 
+    /// Parse a [`Governor::name`] identifier.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         Ok(match s {
             "performance" => Governor::Performance,
@@ -77,10 +81,12 @@ pub struct ThermalModel {
 }
 
 impl ThermalModel {
+    /// A cool engine (ambient temperature) with the given constants.
     pub fn new(spec: ThermalSpec) -> Self {
         ThermalModel { spec, temp_c: AMBIENT_C, last_update_ms: 0.0 }
     }
 
+    /// Current engine temperature (deg C).
     pub fn temp_c(&self) -> f64 {
         self.temp_c
     }
@@ -121,6 +127,7 @@ impl ThermalModel {
         }
     }
 
+    /// True above the throttle-onset temperature.
     pub fn is_throttling(&self) -> bool {
         self.temp_c > self.spec.throttle_temp
     }

@@ -24,17 +24,24 @@ use crate::util::stats::{geomean, Percentile};
 /// One (device, family) comparison row.
 #[derive(Debug, Clone)]
 pub struct Fig3Row {
+    /// Device profile name.
     pub device: String,
+    /// Model family compared.
     pub family: String,
+    /// OODIn's optimised latency (ms).
     pub oodin_ms: f64,
+    /// Engine OODIn selected.
     pub oodin_engine: EngineKind,
     /// Baseline latency per engine; None = not deployable on that engine.
     pub osq_cpu_ms: Option<f64>,
+    /// oSQ-GPU baseline latency (ms).
     pub osq_gpu_ms: Option<f64>,
+    /// oSQ-NNAPI baseline latency (ms).
     pub osq_nnapi_ms: Option<f64>,
 }
 
 impl Fig3Row {
+    /// OODIn's speedup over one baseline latency.
     pub fn speedup(&self, baseline: Option<f64>) -> Option<f64> {
         baseline.map(|b| b / self.oodin_ms)
     }
@@ -43,13 +50,17 @@ impl Fig3Row {
 /// Aggregates per device.
 #[derive(Debug, Clone)]
 pub struct Fig3Summary {
+    /// Device profile name.
     pub device: String,
-    /// (geo-mean, max) speedup over each baseline.
+    /// (geo-mean, max) speedup over the oSQ-CPU baseline.
     pub vs_cpu: (f64, f64),
+    /// (geo-mean, max) speedup over the oSQ-GPU baseline.
     pub vs_gpu: (f64, f64),
+    /// (geo-mean, max) speedup over oSQ-NNAPI (None without an NPU).
     pub vs_nnapi: Option<(f64, f64)>,
 }
 
+/// Compute every (device, family) row and the per-device summaries.
 pub fn run(registry: &Registry) -> Result<(Vec<Fig3Row>, Vec<Fig3Summary>)> {
     let objective = Objective::MinLatency {
         stat: Percentile::Avg,
@@ -111,6 +122,7 @@ pub fn run(registry: &Registry) -> Result<(Vec<Fig3Row>, Vec<Fig3Summary>)> {
     Ok((rows, summaries))
 }
 
+/// Print the Fig 3 comparison table.
 pub fn print(registry: &Registry) -> Result<()> {
     let (rows, summaries) = run(registry)?;
     println!("FIG 3 — OODIn vs optimised status-quo designs");

@@ -25,7 +25,9 @@ use crate::model::Registry;
 use crate::optimizer::{Design, HwConfig, Objective, Optimizer, SearchSpace};
 use crate::util::stats::{geomean, Percentile};
 
+/// Family standing in for the paper's EfficientNet PAW/MAW study.
 pub const PROXY_FAMILY: &str = "efficientnet_lite4";
+/// Device the MAW baseline was "tuned on".
 pub const FLAGSHIP: &str = "samsung_s20_fe";
 
 const OBJ: Objective = Objective::MinLatency {
@@ -33,21 +35,31 @@ const OBJ: Objective = Objective::MinLatency {
     epsilon: EVAL_EPSILON,
 };
 
+/// One (device, family) comparison row of the Fig 4/5/6 study.
 #[derive(Debug, Clone)]
 pub struct Fig456Row {
+    /// Device profile name.
     pub device: String,
+    /// Model family compared.
     pub family: String,
     /// None = not deployable under that design.
     pub oodin_ms: Option<f64>,
+    /// Platform-aware baseline latency (ms); None = undeployable.
     pub paw_ms: Option<f64>,
+    /// Model-aware (flagship-tuned) baseline latency (ms).
     pub maw_ms: Option<f64>,
 }
 
+/// Per-device aggregates over the Fig 4/5/6 rows.
 #[derive(Debug, Clone)]
 pub struct Fig456Summary {
+    /// Device profile name.
     pub device: String,
+    /// (geo-mean, max) speedup over PAW-D.
     pub vs_paw: Option<(f64, f64)>,
+    /// (geo-mean, max) speedup over MAW-D.
     pub vs_maw: Option<(f64, f64)>,
+    /// Families no baseline could deploy on this device.
     pub undeployable: Vec<String>,
 }
 
@@ -94,6 +106,7 @@ fn paw_design(opt: &Optimizer, reg: &Registry, family: &str) -> Option<Design> {
     Some(Design { variant: target.name.clone(), hw: proxy.design.hw })
 }
 
+/// Compute every (device, family) row and the per-device summaries.
 pub fn run(registry: &Registry) -> Result<(Vec<Fig456Row>, Vec<Fig456Summary>)> {
     // MAW-D source: per-family optimum on the flagship.
     let s20 = profiles::by_name(FLAGSHIP).unwrap();
@@ -167,6 +180,7 @@ pub fn run(registry: &Registry) -> Result<(Vec<Fig456Row>, Vec<Fig456Summary>)> 
     Ok((rows, summaries))
 }
 
+/// Print the Fig 4/5/6 rows (optionally one device only).
 pub fn print(registry: &Registry, device_filter: Option<&str>) -> Result<()> {
     let (rows, summaries) = run(registry)?;
     println!("FIG 4/5/6 — OODIn vs PAW-D / MAW-D (p90 latency, ε={EVAL_EPSILON})");

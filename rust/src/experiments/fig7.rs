@@ -17,7 +17,9 @@ use crate::optimizer::{Objective, SearchSpace};
 use crate::perf;
 use crate::util::stats::{geomean, Percentile};
 
+/// Device the load-adaptation experiment runs on.
 pub const DEVICE: &str = "samsung_a71";
+/// Family the experiment serves (falls back on the synthetic registry).
 pub const FAMILY: &str = "mobilenet_v2_140";
 
 /// The paper's Fig 7 family when the real zoo is loaded; the synthetic
@@ -29,21 +31,31 @@ fn pick_family(registry: &Registry) -> &'static str {
 /// A point on the Fig 7 curve.
 #[derive(Debug, Clone)]
 pub struct LoadPoint {
+    /// Frame index of the sample.
     pub frame: u64,
+    /// Injected GPU load at this frame.
     pub load_step: f64,
+    /// Latency with the Runtime Manager adapting (ms).
     pub adaptive_ms: f64,
+    /// Latency with the initial design pinned (ms).
     pub static_ms: f64,
+    /// Engine the adaptive run used at this frame.
     pub engine: EngineKind,
 }
 
+/// The full Fig 7 trace: adaptive vs static under the load ramp.
 #[derive(Debug, Clone)]
 pub struct Fig7Result {
+    /// Per-frame latency samples.
     pub points: Vec<LoadPoint>,
+    /// (frame, from, to) engine migrations the manager issued.
     pub switches: Vec<(u64, EngineKind, EngineKind)>,
     /// Max and geo-mean latency reduction vs the static design after the
     /// first load step (paper: up to 2.7x, geo 1.55x).
     pub max_reduction: f64,
+    /// Geo-mean latency reduction vs the static run.
     pub geo_reduction: f64,
+    /// Engine of the initial optimised design.
     pub initial_engine: EngineKind,
 }
 
@@ -57,6 +69,7 @@ fn policy() -> Policy {
     }
 }
 
+/// Run the load-ramp experiment (adaptive vs static).
 pub fn run(registry: &Registry, real_exec: bool) -> Result<Fig7Result> {
     let objective = Objective::MinLatency { stat: Percentile::P90, epsilon: 0.0 };
     let mut cfg = AppConfig::new(DEVICE, objective,
@@ -135,6 +148,7 @@ pub fn run(registry: &Registry, real_exec: bool) -> Result<Fig7Result> {
     })
 }
 
+/// Print the Fig 7 trace and summary.
 pub fn print(registry: &Registry, real_exec: bool) -> Result<()> {
     let family = pick_family(registry);
     let r = run(registry, real_exec)?;

@@ -23,27 +23,40 @@ use crate::optimizer::{Objective, Optimizer, SearchSpace};
 use crate::util::clock::Clock;
 use crate::util::stats::Percentile;
 
+/// Device the thermal experiment runs on.
 pub const DEVICE: &str = "samsung_a71";
+/// Family heavy enough to reach throttling (Fig 8's ~85 images).
 pub const FAMILY: &str = "inception_v3";
 
+/// One sample of the sustained-inference thermal trace.
 #[derive(Debug, Clone)]
 pub struct ThermalPoint {
+    /// Inference index of the sample.
     pub inference: u64,
+    /// Simulated latency (ms).
     pub latency_ms: f64,
+    /// Engine in use.
     pub engine: EngineKind,
+    /// Active-engine temperature (deg C).
     pub temp_c: f64,
+    /// Thermal frequency scale in effect.
     pub thermal_scale: f64,
 }
 
+/// The full Fig 8 trace with the manager's thermal migrations.
 #[derive(Debug, Clone)]
 pub struct Fig8Result {
+    /// Per-inference samples.
     pub points: Vec<ThermalPoint>,
+    /// (inference, switch) reconfigurations the manager issued.
     pub switches: Vec<(u64, Switch)>,
+    /// Engine of the initial optimised design.
     pub initial_engine: EngineKind,
     /// Inference index at which the first engine started throttling.
     pub first_throttle_at: Option<u64>,
 }
 
+/// Run the sustained-inference thermal experiment.
 pub fn run(registry: &Registry, n_inferences: u64) -> Result<Fig8Result> {
     let device = crate::mdcl::detect(DEVICE)?;
     let lut = std::sync::Arc::new(
@@ -113,6 +126,7 @@ fn thermal_scale(sim: &DeviceSim, kind: EngineKind) -> f64 {
     sim.conditions().thermal_scale(kind)
 }
 
+/// Print the Fig 8 trace and summary.
 pub fn print(registry: &Registry, n: u64) -> Result<()> {
     let r = run(registry, n)?;
     println!("FIG 8 — Runtime Manager under thermal throttling ({FAMILY} on {DEVICE})");

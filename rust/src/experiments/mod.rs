@@ -7,6 +7,7 @@ pub mod fig3;
 pub mod fig456;
 pub mod fig7;
 pub mod fig8;
+pub mod loadgen;
 pub mod multiapp;
 pub mod tables;
 
@@ -26,6 +27,7 @@ pub const EVAL_EPSILON: f64 = 0.015;
 
 /// Measurement depth for experiment LUTs (paper protocol: 200 runs).
 pub const EVAL_RUNS: usize = 200;
+/// Warm-up runs discarded before the measured runs.
 pub const EVAL_WARMUP: usize = 15;
 
 /// Build the device LUT used by an experiment.

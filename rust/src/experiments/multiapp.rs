@@ -38,7 +38,9 @@ use crate::util::json::{self, Value};
 /// Experiment dimensions and depth.
 #[derive(Debug, Clone)]
 pub struct MultiAppConfig {
+    /// Device profiles to sweep.
     pub devices: Vec<String>,
+    /// Concurrency levels to sweep (apps per cell).
     pub app_counts: Vec<usize>,
     /// Arbitration windows simulated per hosting.
     pub windows: usize,
@@ -80,20 +82,30 @@ impl MultiAppConfig {
 /// One (device, app-count) cell of the contention table.
 #[derive(Debug, Clone)]
 pub struct Cell {
+    /// Device profile name.
     pub device: String,
     /// Requested concurrency (apps actually available on the device may be
     /// fewer: admitted + rejected).
     pub n_apps: usize,
+    /// Apps the joint scheduler admitted.
     pub admitted: usize,
+    /// Apps admission control rejected.
     pub rejected: usize,
+    /// Admitted apps running degraded to fit the budget.
     pub degraded: usize,
     /// Mean solo-optimal latency across the hosted apps (ms).
     pub isolation_ms: f64,
+    /// Mean latency under the joint scheduler (ms).
     pub joint_ms: f64,
+    /// Mean latency under naive-independent hosting (ms).
     pub naive_ms: f64,
+    /// SLO-violation share under the joint scheduler.
     pub joint_viol_rate: f64,
+    /// SLO-violation share under naive-independent hosting.
     pub naive_viol_rate: f64,
+    /// Reconfigurations the joint scheduler issued.
     pub joint_switches: usize,
+    /// Reconfigurations the naive managers issued.
     pub naive_switches: usize,
 }
 
@@ -276,6 +288,7 @@ pub fn run_cell(registry: &Registry, device: &DeviceProfile, lut: &Arc<Lut>,
     }))
 }
 
+/// Run every (device, app-count) cell of the contention table.
 pub fn run(registry: &Registry, cfg: &MultiAppConfig) -> Result<Vec<Cell>> {
     let mut cells = Vec::new();
     for device_name in &cfg.devices {

@@ -13,19 +13,29 @@ use crate::model::{Precision, Registry};
 /// One Table II row.
 #[derive(Debug, Clone)]
 pub struct Table2Row {
+    /// Table II model name.
     pub paper_name: String,
+    /// In-repo family standing in for it.
     pub family: String,
+    /// Transformation of this row.
     pub precision: Precision,
+    /// Input resolution.
     pub resolution: usize,
+    /// Measured accuracy.
     pub accuracy: f64,
+    /// Metric `accuracy` reports.
     pub accuracy_metric: String,
+    /// Trained parameters.
     pub params: u64,
+    /// Serialized weight bytes.
     pub size_bytes: u64,
+    /// FLOPs per inference.
     pub flops: u64,
 }
 
 /// Regenerate Table II (FP32 + INT8 rows, like the paper; FP16 accuracy is
 /// within noise of FP32's and is omitted from the table, as the paper does).
+/// Build the Table II rows from the loaded registry.
 pub fn table2(registry: &Registry) -> Vec<Table2Row> {
     let mut rows: Vec<Table2Row> = registry
         .variants()
@@ -48,6 +58,7 @@ pub fn table2(registry: &Registry) -> Vec<Table2Row> {
     rows
 }
 
+/// Print Table II (the model zoo under each transformation).
 pub fn print_table2(registry: &Registry) {
     println!("TABLE II — EVALUATED DEEP NEURAL NETWORKS (regenerated)");
     println!("{:<20} {:<5} {:>5} {:>12} {:>9} {:>9} {:>8}",
@@ -68,6 +79,7 @@ pub fn print_table2(registry: &Registry) {
 }
 
 /// Render Table I from the device profiles.
+/// Print Table I (the three device profiles).
 pub fn print_table1() {
     println!("TABLE I — TARGET PLATFORMS");
     let devs = profiles();

@@ -41,10 +41,18 @@
 //!   and coordinated joint re-adaptation.
 //! * [`sil`] / [`dlacl`] / [`mdcl`] — the multi-layer mobile software
 //!   architecture (Fig 2).
-//! * [`app`] — the assembled Application; [`serving`] — the batched
-//!   request front-end (single- and multi-app); [`experiments`] — drivers
+//! * [`app`] — the assembled Application; [`serving`] — the async serving
+//!   pipeline (bounded deadline queue → dynamic batcher → per-engine
+//!   worker lanes, single- and multi-app, with load shedding and a
+//!   degraded-ladder brownout mode); [`experiments`] — drivers
 //!   regenerating every table/figure of the paper's evaluation plus the
-//!   multi-app contention table.
+//!   multi-app contention table and the serve-bench latency/throughput
+//!   curves.
+//!
+//! `docs/ARCHITECTURE.md` has the full layer diagram and the paper-to-code
+//! mapping table.
+
+#![warn(missing_docs)]
 
 pub mod app;
 pub mod config;

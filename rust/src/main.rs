@@ -9,6 +9,8 @@
 //! oodin optimize --use-case <file.json>      Run System Optimisation
 //! oodin resources                            Print the detected R per device
 //! oodin serve   --family <f> [--precision p] [--requests n] [--device d]
+//! oodin serve-bench [--smoke] [--device d] [--rate r] [--duration ms] [--json f]
+//! oodin multi   [--smoke] [--device d] [--apps n] [--windows w] [--json f]
 //! ```
 //!
 //! Every command runs hermetically when `artifacts/` is absent: the
@@ -17,7 +19,7 @@
 use anyhow::{bail, Context, Result};
 
 use oodin::config::UseCase;
-use oodin::experiments::{fig3, fig456, fig7, fig8, multiapp, tables};
+use oodin::experiments::{fig3, fig456, fig7, fig8, loadgen, multiapp, tables};
 use oodin::measurements::Measurer;
 use oodin::model::Precision;
 use oodin::optimizer::Optimizer;
@@ -85,6 +87,7 @@ fn run() -> Result<()> {
         "optimize" => cmd_optimize(&args),
         "resources" => cmd_resources(),
         "serve" => cmd_serve(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "multi" => cmd_multi(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -107,6 +110,7 @@ fn print_usage() {
          \x20 optimize --use-case <file.json>    run System Optimisation\n\
          \x20 resources                           print resource model R per device\n\
          \x20 serve    --family <f> [--precision p] [--requests n] [--device d]  serving demo\n\
+         \x20 serve-bench [--smoke] [--device d] [--rate r] [--duration ms] [--json f]  pipeline load bench\n\
          \x20 multi    [--smoke] [--device d] [--apps n] [--windows w] [--json f]  multi-app contention table\n\
          \n\
          (no artifacts/?  everything runs on the hermetic SimBackend)"
@@ -208,6 +212,30 @@ fn cmd_multi(args: &Args) -> Result<()> {
         cfg.windows = w.parse().context("--windows")?;
     }
     multiapp::print(&registry, &cfg, args.flag("json"))
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let mut cfg = if args.has("smoke") {
+        loadgen::LoadgenConfig::smoke()
+    } else {
+        loadgen::LoadgenConfig::full()
+    };
+    if let Some(d) = args.flag("device") {
+        cfg.device = d.to_string();
+    }
+    if let Some(r) = args.flag("rate") {
+        cfg.open_rates_rps = vec![r.parse().context("--rate")?];
+        cfg.burst = None;
+        cfg.tight = None;
+        cfg.closed_concurrency.clear();
+    }
+    if let Some(ms) = args.flag("duration") {
+        cfg.duration_ms = ms.parse().context("--duration")?;
+    }
+    if let Some(s) = args.flag("seed") {
+        cfg.seed = s.parse().context("--seed")?;
+    }
+    loadgen::print(&cfg, args.flag("json"))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

@@ -47,14 +47,17 @@ pub struct Conditions {
 }
 
 impl Conditions {
+    /// Idle, cool conditions on every engine.
     pub fn idle() -> Self {
         Conditions::default()
     }
 
+    /// External load factor on `e` (0.0 when unreported).
     pub fn load(&self, e: EngineKind) -> f64 {
         self.loads.get(&e).copied().unwrap_or(0.0)
     }
 
+    /// Thermal frequency scale on `e` (1.0 when unreported).
     pub fn thermal_scale(&self, e: EngineKind) -> f64 {
         self.thermal.get(&e).copied().unwrap_or(1.0)
     }
@@ -93,20 +96,25 @@ pub enum HoldReason {
 /// the manager held position.
 #[derive(Debug, Clone)]
 pub enum Decision {
+    /// Reconfigure to a new design.
     Switch(Switch),
+    /// Keep the current design, for the stated reason.
     Hold(HoldReason),
 }
 
 /// A reconfiguration decision.
 #[derive(Debug, Clone)]
 pub struct Switch {
+    /// Design being replaced.
     pub from: Design,
+    /// Design taking over.
     pub to: Design,
     /// Device-timeline instant of the decision (ms).
     pub at_ms: f64,
     /// Time from degradation onset to the decision (ms); 0 for pure
     /// load-triggered switches evaluated on the same tick.
     pub detection_ms: f64,
+    /// What triggered the reconfiguration.
     pub reason: Reason,
 }
 
@@ -168,6 +176,7 @@ pub struct RuntimeManager {
 }
 
 impl RuntimeManager {
+    /// A manager owning `initial` as the running design, default policy.
     pub fn new(device: Arc<DeviceProfile>, registry: Arc<Registry>, lut: Arc<Lut>,
                objective: Objective, space: SearchSpace, initial: Design) -> Self {
         let policy = Policy::default();
@@ -189,16 +198,19 @@ impl RuntimeManager {
         }
     }
 
+    /// Replace the adaptation policy (resets the latency window).
     pub fn with_policy(mut self, policy: Policy) -> Self {
         self.window = RollingWindow::new(policy.latency_window.max(1));
         self.policy = policy;
         self
     }
 
+    /// The currently running design.
     pub fn current(&self) -> &Design {
         &self.current
     }
 
+    /// The active adaptation policy.
     pub fn policy(&self) -> &Policy {
         &self.policy
     }

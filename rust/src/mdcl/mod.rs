@@ -47,11 +47,15 @@ pub fn format_resource_model(d: &DeviceProfile) -> String {
 /// Middleware a: hardware info handed to SIL for app configuration.
 #[derive(Debug, Clone)]
 pub struct HardwareInfo {
+    /// Camera capabilities (v_camera).
     pub camera: CameraSpec,
+    /// Screen resolution.
     pub screen: (u32, u32),
+    /// Available compute engines (CE).
     pub engines: Vec<EngineKind>,
 }
 
+/// Middleware a: collect the hardware info SIL configures itself from.
 pub fn middleware_a(d: &DeviceProfile) -> HardwareInfo {
     HardwareInfo {
         camera: d.camera.clone(),
@@ -66,9 +70,11 @@ pub fn middleware_a(d: &DeviceProfile) -> HardwareInfo {
 /// scene.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FeatureAdjustment {
+    /// New camera exposure multiplier.
     pub camera_exposure: f64,
 }
 
+/// Middleware b: map the last (class, confidence) to feature adjustments.
 pub fn middleware_b(last_class: usize, confidence: f32) -> Option<FeatureAdjustment> {
     // Low-confidence scenes get a small exposure bump; "night-ish" classes
     // (by convention the upper half of the label space) a larger one.
@@ -84,15 +90,30 @@ pub fn middleware_b(last_class: usize, confidence: f32) -> Option<FeatureAdjustm
 /// A warning raised by middleware c alongside periodic statistics.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Warning {
-    Throttling { engine: EngineKind, temp_c: f64 },
-    MemoryPressure { used: u64, budget: u64 },
+    /// An engine is thermally throttling.
+    Throttling {
+        /// The throttling engine.
+        engine: EngineKind,
+        /// Its temperature (deg C).
+        temp_c: f64,
+    },
+    /// Resident model memory exceeds the device budget.
+    MemoryPressure {
+        /// Bytes currently resident.
+        used: u64,
+        /// Device budget (bytes).
+        budget: u64,
+    },
 }
 
 /// One statistics report transmitted to the Runtime Manager.
 #[derive(Debug, Clone)]
 pub struct StatsReport {
+    /// Device-timeline instant of the report (ms).
     pub at_ms: f64,
+    /// Per-engine load/thermal conditions.
     pub conditions: Conditions,
+    /// Raised warnings, if any.
     pub warnings: Vec<Warning>,
 }
 

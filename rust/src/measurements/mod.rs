@@ -29,8 +29,9 @@ use crate::util::json::{self, Value};
 use crate::util::rng::Rng;
 use crate::util::stats::LatencyStats;
 
-/// Default measurement protocol (paper §IV-A: 200 runs, 15 warm-ups).
+/// Default measured runs per configuration (paper §IV-A: 200 runs).
 pub const DEFAULT_RUNS: usize = 200;
+/// Default discarded warm-up runs per configuration (paper §IV-A: 15).
 pub const DEFAULT_WARMUP: usize = 15;
 
 /// How device measurements are produced.
@@ -46,18 +47,24 @@ pub enum MeasureMode {
 /// One measured system configuration of a variant on a device.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct LutKey {
+    /// Variant name (`<family>__<precision>__b1`).
     pub variant: String,
+    /// Engine the configuration runs on.
     pub engine: EngineKind,
+    /// CPU threads (1 for offload engines).
     pub threads: usize,
+    /// DVFS governor in effect.
     pub governor: Governor,
 }
 
 impl LutKey {
+    /// `variant|engine|threads|governor` — the saved-LUT key format.
     pub fn id(&self) -> String {
         format!("{}|{}|{}|{}", self.variant, self.engine.name(), self.threads,
                 self.governor.name())
     }
 
+    /// Parse a [`LutKey::id`] string.
     pub fn parse(id: &str) -> Result<Self> {
         let parts: Vec<&str> = id.split('|').collect();
         if parts.len() != 4 {
@@ -75,6 +82,7 @@ impl LutKey {
 /// Measured statistics for one configuration.
 #[derive(Debug, Clone)]
 pub struct LutEntry {
+    /// Latency summary over the measured runs (ms).
     pub latency: LatencyStats,
     /// Peak working-set bytes (weights + DLACL buffers).
     pub mem_bytes: u64,
@@ -86,19 +94,24 @@ pub struct LutEntry {
 /// The device-specific look-up table.
 #[derive(Debug, Clone)]
 pub struct Lut {
+    /// Device the measurements were taken on.
     pub device: String,
+    /// Measured configurations.
     pub entries: BTreeMap<LutKey, LutEntry>,
 }
 
 impl Lut {
+    /// The entry for one configuration, if measured.
     pub fn get(&self, key: &LutKey) -> Option<&LutEntry> {
         self.entries.get(key)
     }
 
+    /// Number of measured configurations.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when nothing was measured.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -111,6 +124,7 @@ impl Lut {
 
     // -- serialization ----------------------------------------------------
 
+    /// Serialise for `--out lut.json`.
     pub fn to_json(&self) -> Value {
         let entries: Vec<Value> = self
             .entries
@@ -130,6 +144,7 @@ impl Lut {
         ])
     }
 
+    /// Parse the [`Lut::to_json`] representation.
     pub fn from_json(v: &Value) -> Result<Self> {
         let mut entries = BTreeMap::new();
         for e in v.req("entries")?.as_arr()? {
@@ -143,11 +158,13 @@ impl Lut {
         Ok(Lut { device: v.req("device")?.as_str()?.to_string(), entries })
     }
 
+    /// Write the JSON representation to `path`.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         std::fs::write(path.as_ref(), json::to_string(&self.to_json()))
             .with_context(|| format!("writing {}", path.as_ref().display()))
     }
 
+    /// Read a LUT previously written by [`Lut::save`].
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading {}", path.as_ref().display()))?;
@@ -157,18 +174,24 @@ impl Lut {
 
 /// The Device Measurements module.
 pub struct Measurer<'a> {
+    /// Device being measured.
     pub device: &'a DeviceProfile,
+    /// Model space to sweep.
     pub registry: &'a Registry,
+    /// Measured runs per configuration.
     pub runs: usize,
+    /// Discarded warm-up runs per configuration.
     pub warmup: usize,
     /// Log-normal sigma of run-to-run jitter.
     pub noise_sigma: f64,
+    /// Model-driven or host-calibrated measurement.
     pub mode: MeasureMode,
     /// Required for `HostCalibrated`: any execution backend (PJRT or sim).
     pub runtime: Option<&'a dyn Backend>,
 }
 
 impl<'a> Measurer<'a> {
+    /// A measurer with the paper's default protocol.
     pub fn new(device: &'a DeviceProfile, registry: &'a Registry) -> Self {
         Measurer {
             device,
@@ -181,12 +204,14 @@ impl<'a> Measurer<'a> {
         }
     }
 
+    /// Override the measurement depth (tests/smoke use shallow sweeps).
     pub fn with_runs(mut self, runs: usize, warmup: usize) -> Self {
         self.runs = runs;
         self.warmup = warmup;
         self
     }
 
+    /// Calibrate CPU entries against real executions on `rt`.
     pub fn host_calibrated(mut self, rt: &'a dyn Backend) -> Self {
         self.mode = MeasureMode::HostCalibrated;
         self.runtime = Some(rt);

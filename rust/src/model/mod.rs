@@ -17,11 +17,14 @@ use crate::util::json::{self, Value};
 /// The inference task of a model (classification / segmentation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Task {
+    /// Image classification (top-1 decoded logits).
     Classification,
+    /// Semantic segmentation (per-pixel logit map).
     Segmentation,
 }
 
 impl Task {
+    /// Parse a manifest task id (`cls` / `seg`).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "cls" => Task::Classification,
@@ -30,6 +33,7 @@ impl Task {
         })
     }
 
+    /// Canonical manifest id.
     pub fn name(&self) -> &'static str {
         match self {
             Task::Classification => "cls",
@@ -42,14 +46,19 @@ impl Task {
 /// model (paper Eq. 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Precision {
+    /// The untransformed reference model.
     Fp32,
+    /// Half-precision weights/activations.
     Fp16,
+    /// Post-training 8-bit quantisation.
     Int8,
 }
 
 impl Precision {
+    /// Every transformation, in decreasing precision order.
     pub const ALL: [Precision; 3] = [Precision::Fp32, Precision::Fp16, Precision::Int8];
 
+    /// Parse a manifest precision id (`fp32` / `fp16` / `int8`).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "fp32" => Precision::Fp32,
@@ -59,6 +68,7 @@ impl Precision {
         })
     }
 
+    /// Canonical manifest id.
     pub fn name(&self) -> &'static str {
         match self {
             Precision::Fp32 => "fp32",
@@ -67,6 +77,7 @@ impl Precision {
         }
     }
 
+    /// Storage bits per weight.
     pub fn bits(&self) -> u32 {
         match self {
             Precision::Fp32 => 32,
@@ -85,13 +96,17 @@ pub struct ModelVariant {
     pub family: String,
     /// The Table II model this family stands in for.
     pub paper_name: String,
+    /// The inference task this variant serves.
     pub task: Task,
     /// t: the transformation that produced this variant.
     pub precision: Precision,
     /// s_in: input resolution (square).
     pub resolution: usize,
+    /// Compiled batch size.
     pub batch: usize,
+    /// Logical input tensor shape `[batch, res, res, 3]`.
     pub input_shape: Vec<usize>,
+    /// Logical output tensor shape.
     pub output_shape: Vec<usize>,
     /// Number of trained parameters.
     pub params: u64,
@@ -101,12 +116,14 @@ pub struct ModelVariant {
     pub flops: u64,
     /// a: measured accuracy (top-1 or mIoU) on the held-out split.
     pub accuracy: f64,
+    /// Which metric `accuracy` reports (`top1` / `miou`).
     pub accuracy_metric: String,
     /// HLO text artifact, relative to the artifacts dir.
     pub hlo: String,
 }
 
 impl ModelVariant {
+    /// Parse one manifest `models[]` entry.
     pub fn from_json(v: &Value) -> Result<Self> {
         let shape = |key: &str| -> Result<Vec<usize>> {
             v.req(key)?
@@ -139,6 +156,7 @@ impl ModelVariant {
         self.input_shape.iter().product()
     }
 
+    /// Output elements per inference.
     pub fn output_elems(&self) -> usize {
         self.output_shape.iter().product()
     }
@@ -154,6 +172,7 @@ impl ModelVariant {
 /// The model space M: every variant generated from the reference models.
 #[derive(Debug, Clone)]
 pub struct Registry {
+    /// Directory the manifest's relative artifact paths resolve against.
     pub artifacts_dir: PathBuf,
     variants: Vec<ModelVariant>,
     by_name: BTreeMap<String, usize>,
@@ -169,6 +188,7 @@ impl Registry {
         Self::from_manifest_json(&text, dir)
     }
 
+    /// Parse a manifest document (rejects duplicate variant names).
     pub fn from_manifest_json(text: &str, artifacts_dir: PathBuf) -> Result<Self> {
         let root = json::parse(text).context("parsing manifest.json")?;
         let models = root.req("models")?.as_arr()?;
@@ -185,10 +205,12 @@ impl Registry {
         Ok(Registry { artifacts_dir, variants, by_name })
     }
 
+    /// Every variant, in manifest order.
     pub fn variants(&self) -> &[ModelVariant] {
         &self.variants
     }
 
+    /// Look up a variant by its unique name.
     pub fn get(&self, name: &str) -> Option<&ModelVariant> {
         self.by_name.get(name).map(|&i| &self.variants[i])
     }
@@ -268,8 +290,39 @@ pub mod test_fixtures {
         format!(r#"{{"version":1,"models":[{}]}}"#, models.join(","))
     }
 
+    /// [`fake_manifest`] parsed into a registry.
     pub fn fake_registry() -> Registry {
         Registry::from_manifest_json(&fake_manifest(), PathBuf::from("/tmp/fake"))
+            .unwrap()
+    }
+
+    /// The serve-bench registry: one classification family (`srv`) with a
+    /// full batch ladder (b = 1/4/8) in FP32 plus an INT8 sibling ladder
+    /// (the pipeline's degraded mode under queue pressure).
+    ///
+    /// Calibrated for *hand-derivable* golden latencies on the Samsung A71
+    /// CPU path (peak 14 GFLOP/s, INT8 ×2.2): per-sample FLOPs shrink with
+    /// batch (28M/21M/17.5M — batched kernels are more efficient per
+    /// sample), so on the zero-noise simulator the FP32 ladder costs
+    /// exactly 2/6/10 ms of roofline compute per execution and batching has
+    /// a real throughput payoff.  Accuracy is 1.0 on both ladders so
+    /// predictions are never hash-corrupted — the oracle
+    /// (`python/golden_serve_bench.py`) reproduces every serve-bench number
+    /// without replicating frame synthesis.
+    pub fn bench_registry(res: usize) -> Registry {
+        let mut models = Vec::new();
+        let batches: [(usize, u64); 3] =
+            [(1, 28_000_000), (4, 21_000_000), (8, 17_500_000)];
+        for (prec, bits, size) in [("fp32", 32u64, 400_000u64),
+                                   ("int8", 8, 100_000)] {
+            for (b, flops) in batches {
+                models.push(format!(
+                    r#"{{"name":"srv__{prec}__b{b}","family":"srv","paper_name":"ServeBench","task":"cls","precision":"{prec}","bits":{bits},"resolution":{res},"batch":{b},"input_shape":[{b},{res},{res},3],"output_shape":[{b},10],"params":1000,"size_bytes":{size},"flops":{flops},"accuracy":1.0,"accuracy_metric":"top1","hlo":"srv_{prec}_b{b}.hlo.txt"}}"#
+                ));
+            }
+        }
+        let manifest = format!(r#"{{"version":1,"models":[{}]}}"#, models.join(","));
+        Registry::from_manifest_json(&manifest, PathBuf::from("/tmp/oodin_bench"))
             .unwrap()
     }
 
@@ -349,6 +402,22 @@ mod tests {
         );
         // helper: rebuild string of first model
         assert!(Registry::from_manifest_json(&dup, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn bench_registry_has_two_full_ladders() {
+        let r = bench_registry(16);
+        assert_eq!(r.variants().len(), 6);
+        for prec in [Precision::Fp32, Precision::Int8] {
+            for b in [1usize, 4, 8] {
+                let v = r.find("srv", prec, b).unwrap();
+                assert_eq!(v.batch, b);
+                assert_eq!(v.accuracy, 1.0, "bench predictions must be exact");
+            }
+        }
+        // Per-sample FLOPs shrink with batch: batching pays off.
+        let f = |b: usize| r.find("srv", Precision::Fp32, b).unwrap().flops;
+        assert!(f(8) < f(4) && f(4) < f(1));
     }
 
     #[test]

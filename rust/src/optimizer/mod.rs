@@ -30,9 +30,13 @@ pub const RECOGNITION_RATES: [f64; 3] = [1.0, 0.5, 0.25];
 /// The tunable system-level parameters hw = <ce, N_threads, g, r>.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HwConfig {
+    /// ce: the engine the model runs on.
     pub engine: EngineKind,
+    /// N_threads: CPU threads (1 for offload engines).
     pub threads: usize,
+    /// g: the DVFS governor.
     pub governor: Governor,
+    /// r: fraction of camera frames actually processed.
     pub recognition_rate: f64,
 }
 
@@ -40,11 +44,14 @@ pub struct HwConfig {
 /// (m_ref, t) as `<family>__<precision>__b1`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Design {
+    /// Variant name encoding (m_ref, t).
     pub variant: String,
+    /// The system-parameter half of σ.
     pub hw: HwConfig,
 }
 
 impl Design {
+    /// The LUT configuration this design reads its measurements from.
     pub fn lut_key(&self) -> LutKey {
         LutKey {
             variant: self.variant.clone(),
@@ -58,6 +65,7 @@ impl Design {
 /// Metrics of a design evaluated against a LUT (the paper's P).
 #[derive(Debug, Clone)]
 pub struct Evaluated {
+    /// The design these metrics describe.
     pub design: Design,
     /// T: latency statistic targeted by the objective (ms).
     pub latency_ms: f64,
@@ -77,13 +85,29 @@ pub struct Evaluated {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Objective {
     /// Eq. (3): max fps s.t. a_ref − a ≤ ε.
-    MaxFps { epsilon: f64 },
+    MaxFps {
+        /// Tolerated accuracy drop ε.
+        epsilon: f64,
+    },
     /// Eq. (4): max accuracy s.t. T(stat) ≤ t_target_ms.
-    TargetLatency { t_target_ms: f64, stat: Percentile },
+    TargetLatency {
+        /// Latency budget (ms).
+        t_target_ms: f64,
+        /// Statistic the budget constrains.
+        stat: Percentile,
+    },
     /// Eq. (5): max a/a_max + w_fps · fps/fps_max.
-    MaxAccMaxFps { w_fps: f64 },
+    MaxAccMaxFps {
+        /// Weight of the fps term.
+        w_fps: f64,
+    },
     /// Fig 3–6: min T(stat) s.t. a_ref − a ≤ ε.
-    MinLatency { stat: Percentile, epsilon: f64 },
+    MinLatency {
+        /// Statistic being minimised.
+        stat: Percentile,
+        /// Tolerated accuracy drop ε.
+        epsilon: f64,
+    },
 }
 
 impl Objective {
@@ -112,15 +136,18 @@ pub struct SearchSpace {
 }
 
 impl SearchSpace {
+    /// Restrict to one model family, everything else free.
     pub fn family(name: &str) -> Self {
         SearchSpace { family: Some(name.to_string()), ..Default::default() }
     }
 
+    /// Restrict the engine set.
     pub fn with_engines(mut self, engines: &[EngineKind]) -> Self {
         self.engines = Some(engines.to_vec());
         self
     }
 
+    /// Restrict the transformation set.
     pub fn with_precisions(mut self, precisions: &[Precision]) -> Self {
         self.precisions = Some(precisions.to_vec());
         self
@@ -149,19 +176,24 @@ impl SearchSpace {
 
 /// The System Optimisation module.
 pub struct Optimizer<'a> {
+    /// Target device.
     pub device: &'a DeviceProfile,
+    /// Model space M.
     pub registry: &'a Registry,
+    /// Device measurements driving the search.
     pub lut: &'a Lut,
     /// Camera/source frame rate bounding effective fps.
     pub camera_fps: f64,
 }
 
 impl<'a> Optimizer<'a> {
+    /// An optimiser over (device, registry, LUT) at the default 30 fps.
     pub fn new(device: &'a DeviceProfile, registry: &'a Registry, lut: &'a Lut)
                -> Self {
         Optimizer { device, registry, lut, camera_fps: 30.0 }
     }
 
+    /// Override the camera/source frame rate.
     pub fn with_camera_fps(mut self, fps: f64) -> Self {
         self.camera_fps = fps;
         self

@@ -23,6 +23,7 @@ use crate::model::{ModelVariant, Precision};
 /// Instantaneous execution conditions seen by one engine.
 #[derive(Debug, Clone, Copy)]
 pub struct ExecConditions {
+    /// Active DVFS governor.
     pub governor: Governor,
     /// CPU threads (ignored by offload engines).
     pub threads: usize,

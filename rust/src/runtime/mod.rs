@@ -34,16 +34,35 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::device::DeviceProfile;
+use crate::device::{DeviceProfile, EngineKind};
+use crate::dvfs::Governor;
 use crate::model::Registry;
 
 /// Result of one execution.
 #[derive(Debug, Clone)]
 pub struct ExecOutput {
+    /// Flattened f32 output tensor (batch-major).
     pub values: Vec<f32>,
     /// Host wall-clock of the execution for PJRT; the simulated device
     /// latency for SimBackend (compile/load time excluded in both).
     pub host_ms: f64,
+}
+
+/// Which system configuration an execution should be charged to — the
+/// hardware half of a design σ's `hw = <CE, threads, governor>`.
+///
+/// The serving pipeline's per-engine worker lanes pass this through
+/// [`Backend::execute_hinted`] so one shared backend can host lanes on
+/// different engines.  Backends that have no notion of engines (the real
+/// PJRT host executor) are free to ignore it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExecHint {
+    /// Engine the work is charged to.
+    pub engine: EngineKind,
+    /// CPU threads (ignored by offload engines).
+    pub threads: usize,
+    /// DVFS governor in effect.
+    pub governor: Governor,
 }
 
 /// An execution engine hosting compiled models: the seam between OODIn's
@@ -62,6 +81,15 @@ pub trait Backend: Send + Sync {
     /// Execute loaded executable `name` on `input` (f32, logical `shape`).
     fn execute(&self, name: &str, input: Vec<f32>, shape: &[usize])
                -> Result<ExecOutput>;
+
+    /// [`Backend::execute`] with an optional engine/threads/governor hint:
+    /// backends that model heterogeneous engines (the simulator) charge the
+    /// execution to the hinted engine; others fall back to plain `execute`.
+    fn execute_hinted(&self, name: &str, input: Vec<f32>, shape: &[usize],
+                      hint: Option<&ExecHint>) -> Result<ExecOutput> {
+        let _ = hint;
+        self.execute(name, input, shape)
+    }
 
     /// Drop a loaded executable (DLACL model eviction); returns whether it
     /// existed.

@@ -94,12 +94,14 @@ impl RuntimeHandle {
         rx.recv().map_err(|_| anyhow!("executor thread gone"))
     }
 
+    /// Names currently loaded, sorted.
     pub fn loaded(&self) -> Result<Vec<String>> {
         let (reply, rx) = mpsc::channel();
         self.send(Msg::Loaded { reply })?;
         rx.recv().map_err(|_| anyhow!("executor thread gone"))
     }
 
+    /// Stop the executor thread (idempotent).
     pub fn shutdown(&self) {
         let _ = self.send(Msg::Shutdown);
     }

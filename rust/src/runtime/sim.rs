@@ -29,7 +29,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::{Backend, ExecOutput};
+use super::{Backend, ExecHint, ExecOutput};
 use crate::device::{DeviceProfile, EngineKind};
 use crate::devicesim::DeviceSim;
 use crate::dvfs::Governor;
@@ -42,8 +42,11 @@ use crate::util::clock::Clock;
 /// engine/threads/governor to charge the work to.
 #[derive(Debug, Clone, Copy)]
 pub struct SimExecConfig {
+    /// Engine the simulated work is charged to.
     pub engine: EngineKind,
+    /// CPU threads (ignored by offload engines).
     pub threads: usize,
+    /// DVFS governor in effect.
     pub governor: Governor,
 }
 
@@ -97,6 +100,14 @@ impl SimBackend {
         self
     }
 
+    /// Override the log-normal latency-jitter sigma (default 0.03).  The
+    /// serve-bench harness sets 0.0 so its latency curves are byte-stable
+    /// against a pinned golden snapshot.
+    pub fn with_noise_sigma(self, sigma: f64) -> Self {
+        self.state.lock().unwrap().sim.set_noise_sigma(sigma);
+        self
+    }
+
     /// Inject external engine load (the Fig 7 contention model); affects
     /// every subsequent execution's simulated latency.
     pub fn set_load(&self, engine: EngineKind, load: f64) {
@@ -127,6 +138,15 @@ impl Backend for SimBackend {
 
     fn execute(&self, name: &str, input: Vec<f32>, shape: &[usize])
                -> Result<ExecOutput> {
+        self.execute_hinted(name, input, shape, None)
+    }
+
+    /// Charge the execution to the hinted engine/threads/governor instead
+    /// of the backend-wide [`SimBackend::with_execution`] configuration —
+    /// this is what lets the serving pipeline run per-engine worker lanes
+    /// over one shared simulated device.
+    fn execute_hinted(&self, name: &str, input: Vec<f32>, shape: &[usize],
+                      hint: Option<&ExecHint>) -> Result<ExecOutput> {
         let n: usize = shape.iter().product();
         if n != input.len() {
             bail!("input length {} != shape product {n}", input.len());
@@ -144,7 +164,14 @@ impl Backend for SimBackend {
             if n != v.input_elems() {
                 bail!("input length {n} != `{name}` input elems {}", v.input_elems());
             }
-            let exec = st.exec;
+            let exec = match hint {
+                Some(h) => SimExecConfig {
+                    engine: h.engine,
+                    threads: h.threads,
+                    governor: h.governor,
+                },
+                None => st.exec,
+            };
             let r = st.sim
                 .run_inference(&v, exec.engine, exec.threads, exec.governor)?;
             st.executions += 1;
@@ -422,6 +449,42 @@ mod tests {
         let slow = eco.execute(&v.name, input, &v.input_shape).unwrap();
         assert!(slow.host_ms > fast.host_ms * 1.15,
                 "energy_step {} vs performance {}", slow.host_ms, fast.host_ms);
+    }
+
+    #[test]
+    fn zero_noise_sigma_yields_constant_latency_while_cool() {
+        let reg = fake_registry();
+        let be = SimBackend::new(samsung_a71(), reg.clone()).with_noise_sigma(0.0);
+        let v = reg.get("mobilenet_v2_100__fp32__b1").unwrap().clone();
+        be.load(&v.name, Path::new("/x")).unwrap();
+        let input = vec![0.1f32; v.input_elems()];
+        let a = be.execute(&v.name, input.clone(), &v.input_shape).unwrap();
+        let b = be.execute(&v.name, input, &v.input_shape).unwrap();
+        assert_eq!(a.host_ms, b.host_ms,
+                   "noise-free latency must be bitwise constant while cool");
+    }
+
+    #[test]
+    fn hinted_execution_charges_requested_engine() {
+        use crate::runtime::ExecHint;
+        let reg = fake_registry();
+        let be = SimBackend::new(samsung_a71(), reg.clone()).with_noise_sigma(0.0);
+        let v = reg.get("mobilenet_v2_100__fp32__b1").unwrap().clone();
+        be.load(&v.name, Path::new("/x")).unwrap();
+        let input = vec![0.1f32; v.input_elems()];
+        let cpu = be
+            .execute_hinted(&v.name, input.clone(), &v.input_shape, None)
+            .unwrap();
+        let hint = ExecHint {
+            engine: EngineKind::Gpu,
+            threads: 1,
+            governor: Governor::Performance,
+        };
+        let gpu = be
+            .execute_hinted(&v.name, input, &v.input_shape, Some(&hint))
+            .unwrap();
+        assert_ne!(cpu.host_ms, gpu.host_ms,
+                   "hinted engine must change the charged latency");
     }
 
     #[test]

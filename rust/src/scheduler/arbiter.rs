@@ -18,19 +18,23 @@ use crate::device::EngineKind;
 /// One engine grant: `app_id` owns `engine` for the slice.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Grant {
+    /// The app receiving the engine.
     pub app_id: String,
+    /// The granted engine.
     pub engine: EngineKind,
 }
 
 /// One time slice: concurrently granted, pairwise-distinct engines.
 #[derive(Debug, Clone, Default)]
 pub struct Slice {
+    /// Grants active in this slice (engines pairwise distinct).
     pub grants: Vec<Grant>,
 }
 
 /// A planned arbitration window.
 #[derive(Debug, Clone)]
 pub struct Window {
+    /// The planned slices, in execution order.
     pub slices: Vec<Slice>,
 }
 
@@ -44,6 +48,7 @@ impl Window {
             .count()
     }
 
+    /// Grants issued across the whole window.
     pub fn total_grants(&self) -> usize {
         self.slices.iter().map(|s| s.grants.len()).sum()
     }

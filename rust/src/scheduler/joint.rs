@@ -57,11 +57,15 @@ impl GlobalBudget {
 /// One app's slice of a joint assignment, with its predicted metrics.
 #[derive(Debug, Clone)]
 pub struct PredictedApp {
+    /// The app this slice belongs to.
     pub app_id: String,
+    /// Its jointly-chosen design.
     pub design: Design,
     /// Condition-adjusted LUT latency (ms).
     pub latency_ms: f64,
+    /// Accuracy of the chosen variant.
     pub accuracy: f64,
+    /// Working-set bytes of the chosen variant.
     pub mem_bytes: u64,
     /// Predicted to meet its latency SLO.
     pub slo_ok: bool,
@@ -101,9 +105,13 @@ struct DfsState {
 
 /// The joint-optimisation search.
 pub struct JointSearch<'a> {
+    /// Target device.
     pub device: &'a DeviceProfile,
+    /// Model space M.
     pub registry: &'a Registry,
+    /// Device measurements driving the per-app rankings.
     pub lut: &'a Lut,
+    /// Global constraints the design vector must satisfy.
     pub budget: GlobalBudget,
     /// Ranked candidates kept per (engine, threads) group — the pruning
     /// knob bounding the assignment enumeration.
@@ -111,6 +119,7 @@ pub struct JointSearch<'a> {
 }
 
 impl<'a> JointSearch<'a> {
+    /// A joint search with the default pruning depth.
     pub fn new(device: &'a DeviceProfile, registry: &'a Registry, lut: &'a Lut,
                budget: GlobalBudget) -> Self {
         JointSearch { device, registry, lut, budget, keep_per_group: 3 }

@@ -45,6 +45,7 @@ use crate::optimizer::{Design, Objective};
 /// `multi` CLI scenario and the multi-app experiment driver feed in.
 #[derive(Debug, Clone)]
 pub struct WorkloadDescriptor {
+    /// Unique tenant id.
     pub app_id: String,
     /// Model family the app was built around (the user-supplied DNN).
     pub family: String,
@@ -69,9 +70,13 @@ pub enum Admission {
 /// Per-app window statistics from one arbitration window.
 #[derive(Debug, Clone)]
 pub struct AppWindowStats {
+    /// Which app the stats describe.
     pub app_id: String,
+    /// Inferences served this window.
     pub inferences: u64,
+    /// Inferences that missed the app's SLO.
     pub violations: u64,
+    /// Mean latency over the window (ms).
     pub mean_latency_ms: f64,
 }
 
@@ -80,6 +85,7 @@ pub struct AppWindowStats {
 pub struct WindowReport {
     /// Device-timeline instant at the start of the window (ms).
     pub at_ms: f64,
+    /// Per-app outcomes, sorted by app id.
     pub apps: Vec<AppWindowStats>,
 }
 
@@ -98,6 +104,7 @@ pub struct Scheduler {
     lut: Arc<Lut>,
     budget: GlobalBudget,
     policy: Policy,
+    /// The time-slice arbiter planning execution windows.
     pub arbiter: Arbiter,
     apps: Vec<AppState>,
     last_loads: BTreeMap<EngineKind, f64>,
@@ -107,6 +114,7 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// An empty scheduler with the device's own budget and default policy.
     pub fn new(device: Arc<DeviceProfile>, registry: Arc<Registry>,
                lut: Arc<Lut>) -> Self {
         let budget = GlobalBudget::of(&device);
@@ -124,11 +132,13 @@ impl Scheduler {
         }
     }
 
+    /// Override the global resource budget.
     pub fn with_budget(mut self, budget: GlobalBudget) -> Self {
         self.budget = budget;
         self
     }
 
+    /// Override the re-adaptation policy.
     pub fn with_policy(mut self, policy: Policy) -> Self {
         self.policy = policy;
         self
@@ -139,14 +149,17 @@ impl Scheduler {
                          self.budget.clone())
     }
 
+    /// Number of hosted apps.
     pub fn len(&self) -> usize {
         self.apps.len()
     }
 
+    /// True when no app is hosted.
     pub fn is_empty(&self) -> bool {
         self.apps.is_empty()
     }
 
+    /// Hosted workload descriptors, in registration order.
     pub fn descriptors(&self) -> Vec<WorkloadDescriptor> {
         self.apps.iter().map(|a| a.desc.clone()).collect()
     }
@@ -159,6 +172,7 @@ impl Scheduler {
             .collect()
     }
 
+    /// The running design of one hosted app.
     pub fn design_of(&self, app_id: &str) -> Option<&Design> {
         self.apps
             .iter()

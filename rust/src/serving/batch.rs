@@ -1,0 +1,191 @@
+//! Deadline-aware dynamic batch formation.
+//!
+//! The policy is a pure function over the queue's observable state in
+//! microseconds, so the threaded [`Server`](crate::serving::Server) (real
+//! clock) and the virtual-time
+//! [`EventPipeline`](crate::serving::pipeline::EventPipeline) (simulated
+//! clock) share one set of batching semantics.  A batch launches when the
+//! first of three triggers fires:
+//!
+//! 1. **Full** — enough requests wait to fill the largest compiled batch;
+//! 2. **MaxWait** — the oldest request has waited the configured maximum;
+//! 3. **DeadlineRisk** — waiting any longer would make the most urgent
+//!    waiting request (tightest deadline anywhere in the queue) miss it,
+//!    given the current service-time estimate.
+//!
+//! Otherwise the batcher sleeps until the earliest future trigger.
+
+use crate::model::ModelVariant;
+
+/// Why a batch was admitted for execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchReason {
+    /// The largest compiled batch size filled up.
+    Full,
+    /// The oldest request hit the max-wait timer.
+    MaxWait,
+    /// The most urgent waiting deadline would otherwise be missed.
+    DeadlineRisk,
+}
+
+impl LaunchReason {
+    /// Telemetry counter name for this trigger.
+    pub fn counter(&self) -> &'static str {
+        match self {
+            LaunchReason::Full => "launch_full",
+            LaunchReason::MaxWait => "launch_maxwait",
+            LaunchReason::DeadlineRisk => "launch_deadline",
+        }
+    }
+}
+
+/// One batching decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchDecision {
+    /// Launch a batch now, for the given reason.
+    Launch(LaunchReason),
+    /// Nothing to launch before this absolute instant (µs); re-evaluate
+    /// then, or earlier on a new arrival.
+    WaitUntil(u64),
+}
+
+/// Decide whether a batch should launch at `now_us`.
+///
+/// * `queue_len` describes the waiting work, `oldest_arrival_us` the queue
+///   front, and `earliest_deadline_us` the tightest deadline over *all*
+///   waiting entries (`u64::MAX` means none) — with per-request deadlines
+///   a later arrival can be more urgent than the front;
+/// * `max_batch` is the largest compiled batch size of the active ladder;
+/// * `est_service_us` is the current service-time estimate for the batch
+///   that would launch (0 = unknown);
+/// * `max_wait_us` / `slack_us` are the policy knobs: the max-wait timer
+///   and the safety margin subtracted from deadlines.
+#[allow(clippy::too_many_arguments)]
+pub fn decide(now_us: u64, queue_len: usize, max_batch: usize,
+              oldest_arrival_us: u64, earliest_deadline_us: u64,
+              est_service_us: u64, max_wait_us: u64, slack_us: u64)
+              -> LaunchDecision {
+    debug_assert!(queue_len > 0, "decide() on an empty queue");
+    if queue_len >= max_batch {
+        return LaunchDecision::Launch(LaunchReason::Full);
+    }
+    let wait_trigger = oldest_arrival_us.saturating_add(max_wait_us);
+    if now_us >= wait_trigger {
+        return LaunchDecision::Launch(LaunchReason::MaxWait);
+    }
+    if earliest_deadline_us != u64::MAX {
+        let margin = est_service_us.saturating_add(slack_us);
+        if now_us.saturating_add(margin) >= earliest_deadline_us {
+            return LaunchDecision::Launch(LaunchReason::DeadlineRisk);
+        }
+        let deadline_trigger = earliest_deadline_us - margin;
+        return LaunchDecision::WaitUntil(
+            wait_trigger.min(deadline_trigger).max(now_us + 1),
+        );
+    }
+    LaunchDecision::WaitUntil(wait_trigger.max(now_us + 1))
+}
+
+/// Pick the compiled batch size for `len` waiting requests: an exact fit
+/// wins; otherwise the smallest size above `len` whose padded-slot fraction
+/// stays within `max_pad_ratio` (one amortised execution beats several
+/// small ones); otherwise the largest size <= len (batch 1 repeated).
+pub fn pick_variant<'v>(variants: &'v [(usize, ModelVariant)], len: usize,
+                        max_pad_ratio: f64) -> &'v (usize, ModelVariant) {
+    let len = len.max(1);
+    if let Some(exact) = variants.iter().find(|(b, _)| *b == len) {
+        return exact;
+    }
+    if let Some(padded) = variants
+        .iter()
+        .find(|(b, _)| *b > len && (*b - len) as f64 / *b as f64 <= max_pad_ratio)
+    {
+        return padded;
+    }
+    variants
+        .iter()
+        .rev()
+        .find(|(b, _)| *b <= len)
+        .unwrap_or(&variants[0])
+}
+
+/// Last-observed service time (µs) per (ladder, batch size) — the
+/// estimate the deadline trigger of [`decide`] works from.  Deliberately a
+/// last-value estimator, not an EWMA: on the deterministic simulator the
+/// service time of a (variant, conditions) pair is a constant, and on the
+/// real path the newest observation already reflects the current thermal /
+/// contention state.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceEstimator {
+    entries: std::collections::BTreeMap<(bool, usize), u64>,
+}
+
+impl ServiceEstimator {
+    /// An empty estimator (every estimate starts at 0 = unknown).
+    pub fn new() -> Self {
+        ServiceEstimator::default()
+    }
+
+    /// Record an observed service time for (`degraded` ladder, `batch`).
+    pub fn record(&mut self, degraded: bool, batch: usize, service_us: u64) {
+        self.entries.insert((degraded, batch), service_us.max(1));
+    }
+
+    /// Current estimate for (`degraded` ladder, `batch`); 0 when unknown.
+    pub fn estimate(&self, degraded: bool, batch: usize) -> u64 {
+        self.entries.get(&(degraded, batch)).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: u64 = 1000;
+
+    #[test]
+    fn full_queue_launches_immediately() {
+        let d = decide(0, 8, 8, 0, u64::MAX, 0, 5 * MS, MS);
+        assert_eq!(d, LaunchDecision::Launch(LaunchReason::Full));
+    }
+
+    #[test]
+    fn max_wait_timer_fires() {
+        // Oldest arrived at 0, max wait 5 ms: at 5 ms the timer fires.
+        let d = decide(5 * MS, 2, 8, 0, u64::MAX, 0, 5 * MS, MS);
+        assert_eq!(d, LaunchDecision::Launch(LaunchReason::MaxWait));
+        let w = decide(3 * MS, 2, 8, 0, u64::MAX, 0, 5 * MS, MS);
+        assert_eq!(w, LaunchDecision::WaitUntil(5 * MS));
+    }
+
+    #[test]
+    fn deadline_risk_preempts_max_wait() {
+        // Deadline at 10 ms, service estimate 6 ms, slack 1 ms: waiting
+        // past 3 ms would miss it, even though max-wait allows 20 ms.
+        let d = decide(3 * MS, 2, 8, 0, 10 * MS, 6 * MS, 20 * MS, MS);
+        assert_eq!(d, LaunchDecision::Launch(LaunchReason::DeadlineRisk));
+        let w = decide(MS, 2, 8, 0, 10 * MS, 6 * MS, 20 * MS, MS);
+        assert_eq!(w, LaunchDecision::WaitUntil(3 * MS));
+    }
+
+    #[test]
+    fn wait_until_always_makes_progress() {
+        // Degenerate knobs must still advance time by at least 1 µs.
+        match decide(7, 1, 8, 7, u64::MAX, 0, 0, 0) {
+            LaunchDecision::Launch(LaunchReason::MaxWait) => {}
+            other => panic!("expected immediate max-wait launch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn estimator_tracks_last_observation() {
+        let mut e = ServiceEstimator::new();
+        assert_eq!(e.estimate(false, 4), 0);
+        e.record(false, 4, 8 * MS);
+        e.record(false, 4, 9 * MS);
+        assert_eq!(e.estimate(false, 4), 9 * MS);
+        assert_eq!(e.estimate(true, 4), 0);
+        e.record(true, 4, 0); // clamped to >= 1
+        assert_eq!(e.estimate(true, 4), 1);
+    }
+}

@@ -1,35 +1,61 @@
-//! Async serving front-end: bounded request queue + dynamic batcher over
-//! any execution [`Backend`].
+//! Async serving front-end: an event-driven pipeline — bounded
+//! [`queue`] → deadline-aware [`batch`] formation → per-engine worker
+//! lanes — over any execution [`Backend`].
 //!
-//! The AOT path compiles batched executables for the flagship model
-//! (b=1/4/8); the batcher drains the queue, picks the largest compiled batch
-//! size that the waiting requests fill (padding the tail by replication when
-//! the timeout expires), executes once, and scatters the per-sample outputs
-//! back to the callers.  Batching amortises dispatch overhead — the same
-//! effect the paper's throughput-oriented use-cases exploit via the
-//! recognition-rate parameter.
+//! The AOT path compiles batched executables for a family (b=1/4/8); the
+//! pipeline admits requests into a bounded deadline queue (shedding, with
+//! counts, once it is full), forms batches when the largest compiled size
+//! fills, the oldest request's deadline approaches, or the max-wait timer
+//! fires, and executes them on worker lanes that each carry an optional
+//! engine hint over the *shared* backend.  Under queue pressure the
+//! pipeline *degrades* — it serves from a cheaper (lower-precision) batch
+//! ladder until the backlog drains, the serving-side analogue of the
+//! scheduler's degrade-or-reject admission control.
 //!
-//! Built on std threads + channels (no tokio on this image); the bounded
-//! queue provides backpressure: `submit` blocks when the queue is full,
-//! `try_submit` refuses.
+//! Two drivers share these mechanics:
+//!
+//! * [`Server`] — real threads and wall-clock time (std threads +
+//!   channels; no tokio on this image).  `submit` blocks when the queue is
+//!   full (backpressure), `try_submit` refuses and counts the shed.
+//! * [`pipeline::EventPipeline`] — the same queue/policy/lanes advanced on
+//!   a deterministic integer-µs virtual clock, used by
+//!   `experiments::loadgen` and the `serve-bench` golden snapshot.
+//!
+//! Telemetry: `queue_depth` samples, `shed_requests`, `deadline_misses`,
+//! `degraded_requests`, per-trigger `launch_*` counters, and the PR 2
+//! padded-slot accounting (`executed_slots` / `padded_slots` /
+//! [`Server::wasted_compute_ratio`]).
+
+pub mod batch;
+pub mod pipeline;
+pub mod queue;
+
+pub use batch::{decide, pick_variant, LaunchDecision, LaunchReason,
+                ServiceEstimator};
+pub use pipeline::{Completion, EventPipeline, TraceReport};
+pub use queue::{Admitted, DeadlineQueue, QueueEntry};
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::mpsc::{self, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::dlacl::{decode_top1, stage_input};
-use crate::model::{ModelVariant, Registry};
-use crate::runtime::Backend;
+use crate::manager::Conditions;
+use crate::model::{ModelVariant, Precision, Registry};
+use crate::runtime::{Backend, ExecHint};
+use crate::scheduler::{Admission, Scheduler, WorkloadDescriptor};
 use crate::telemetry::Telemetry;
 
-/// One classification request (a camera frame).
+/// One classification request (a camera frame) waiting in the queue.
 pub struct Request {
+    /// RGB frame data (HWC, f32).
     pub frame: Vec<f32>,
+    /// Frame height in pixels.
     pub height: usize,
+    /// Frame width in pixels.
     pub width: usize,
     reply: mpsc::Sender<Result<Response>>,
     enqueued: Instant,
@@ -38,7 +64,9 @@ pub struct Request {
 /// The reply to a request.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// Predicted class (top-1).
     pub class: usize,
+    /// Top-1 logit score.
     pub confidence: f32,
     /// Time spent queued before its batch launched (ms).
     pub queue_ms: f64,
@@ -49,28 +77,50 @@ pub struct Response {
     /// Name of the model variant that served this request — multi-app
     /// traces attribute latency to a model with it.
     pub variant: String,
+    /// True when the request completed after its deadline.
+    pub missed_deadline: bool,
+    /// True when served from the degraded (cheaper) ladder under queue
+    /// pressure.
+    pub degraded: bool,
 }
 
 /// Server configuration.
 #[derive(Clone)]
 pub struct ServerConfig {
-    /// Variants by batch size, ascending (must include batch 1).
+    /// Primary ladder: variants by batch size, ascending (must include
+    /// batch 1).
     pub variants: Vec<(usize, String)>,
     /// Max time the batcher waits to fill a batch.
     pub max_batch_delay_ms: f64,
     /// Bounded queue capacity (backpressure).
     pub queue_cap: usize,
+    /// Classes decoded from the classification head.
     pub n_classes: usize,
     /// A flushed tail may round *up* to the next compiled batch size (one
     /// big execution instead of several small ones) when the padded-slot
     /// fraction `(b - len) / b` stays within this bound.
     pub max_pad_ratio: f64,
+    /// Default per-request completion deadline (ms; `INFINITY` = none).
+    pub deadline_ms: f64,
+    /// Safety margin subtracted from deadlines when predicting misses.
+    pub deadline_slack_ms: f64,
+    /// Degraded (cheaper) ladder served under queue pressure; empty
+    /// disables degrade mode.
+    pub degraded_variants: Vec<(usize, String)>,
+    /// Queue depth at which degrade mode engages.
+    pub degrade_high: usize,
+    /// Queue depth at which degrade mode disengages.
+    pub degrade_low: usize,
+    /// Worker lanes; each optionally pins an engine/threads/governor on
+    /// backends that model heterogeneous engines.
+    pub lanes: Vec<Option<ExecHint>>,
 }
 
 impl ServerConfig {
-    /// All compiled batch sizes of `family`/`precision` from the registry.
-    pub fn for_family(registry: &Registry, family: &str,
-                      precision: crate::model::Precision) -> Result<Self> {
+    /// All compiled batch sizes of `family`/`precision` from the registry,
+    /// ascending — empty when the family has no such variants.
+    pub fn ladder(registry: &Registry, family: &str, precision: Precision)
+                  -> Vec<(usize, String)> {
         let mut variants: Vec<(usize, String)> = registry
             .variants()
             .iter()
@@ -78,6 +128,14 @@ impl ServerConfig {
             .map(|v| (v.batch, v.name.clone()))
             .collect();
         variants.sort();
+        variants
+    }
+
+    /// Serving defaults over the compiled batch ladder of
+    /// `family`/`precision` (which must include batch 1).
+    pub fn for_family(registry: &Registry, family: &str,
+                      precision: Precision) -> Result<Self> {
+        let variants = Self::ladder(registry, family, precision);
         if variants.is_empty() || variants[0].0 != 1 {
             return Err(anyhow!("no batch-1 variant for {family}"));
         }
@@ -87,65 +145,207 @@ impl ServerConfig {
             queue_cap: 64,
             n_classes: 10,
             max_pad_ratio: 0.25,
+            deadline_ms: f64::INFINITY,
+            deadline_slack_ms: 0.5,
+            degraded_variants: Vec::new(),
+            degrade_high: usize::MAX,
+            degrade_low: 0,
+            lanes: vec![None],
         })
+    }
+
+    /// Enable degrade mode: serve `precision` (typically INT8) once the
+    /// queue reaches `high` waiting requests, back to the primary ladder
+    /// at `low`.  No-op when the family lacks that ladder.
+    pub fn with_degraded(mut self, registry: &Registry, family: &str,
+                         precision: Precision, high: usize, low: usize)
+                         -> Self {
+        let ladder = Self::ladder(registry, family, precision);
+        if !ladder.is_empty() {
+            self.degraded_variants = ladder;
+            self.degrade_high = high;
+            self.degrade_low = low;
+        }
+        self
     }
 }
 
-/// The serving coordinator.
+/// Shared worker/submitter state behind the queue mutex.
+struct Inner {
+    queue: DeadlineQueue<Request>,
+    est: ServiceEstimator,
+    stopping: bool,
+}
+
+struct Shared {
+    inner: Mutex<Inner>,
+    /// Signalled on new work and on stop.
+    work: Condvar,
+    /// Signalled when the queue drains (unblocks backpressured `submit`).
+    space: Condvar,
+}
+
+/// The threaded serving coordinator: bounded queue + deadline-aware
+/// batcher + per-lane worker threads over one shared backend.
 pub struct Server {
-    tx: SyncSender<Request>,
-    worker: Option<std::thread::JoinHandle<()>>,
-    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    t0: Instant,
+    deadline_ms: f64,
+    /// Metrics sink (counters + latency samples) for this app's pipeline.
     pub telemetry: Arc<Telemetry>,
 }
 
+/// Resolve a (batch, variant-name) ladder against the registry and load
+/// every executable on the backend — shared by the threaded [`Server`] and
+/// the virtual-time [`EventPipeline`] so the two drivers cannot diverge.
+pub(crate) fn resolve_ladder(runtime: &dyn Backend, registry: &Registry,
+                             names: &[(usize, String)])
+                             -> Result<Vec<(usize, ModelVariant)>> {
+    let mut out = Vec::new();
+    for (b, name) in names {
+        let v = registry
+            .get(name)
+            .ok_or_else(|| anyhow!("variant `{name}` not in registry"))?
+            .clone();
+        runtime.load(name, &registry.hlo_path(&v))?;
+        out.push((*b, v));
+    }
+    Ok(out)
+}
+
+/// Validate the resolved ladders + lanes a pipeline driver was given.
+pub(crate) fn check_pipeline_config(primary: &[(usize, ModelVariant)],
+                                    lanes: &[Option<ExecHint>])
+                                    -> Result<()> {
+    if primary.is_empty() {
+        return Err(anyhow!("serving needs at least one primary variant"));
+    }
+    if lanes.is_empty() {
+        return Err(anyhow!("serving needs at least one worker lane"));
+    }
+    Ok(())
+}
+
 impl Server {
-    /// Start the server: loads every batched executable on the backend,
-    /// then spawns the batcher thread.
-    pub fn start(runtime: Arc<dyn Backend>, registry: &Registry, cfg: ServerConfig)
-                 -> Result<Self> {
-        let mut loaded: Vec<(usize, ModelVariant)> = Vec::new();
-        for (b, name) in &cfg.variants {
-            let v = registry
-                .get(name)
-                .ok_or_else(|| anyhow!("variant `{name}` not in registry"))?
-                .clone();
-            runtime.load(name, &registry.hlo_path(&v))?;
-            loaded.push((*b, v));
-        }
+    /// Start the server: loads both ladders' executables on the backend,
+    /// then spawns one worker thread per configured lane.
+    pub fn start(runtime: Arc<dyn Backend>, registry: &Registry,
+                 cfg: ServerConfig) -> Result<Self> {
+        let primary = resolve_ladder(&*runtime, registry, &cfg.variants)?;
+        let degraded =
+            resolve_ladder(&*runtime, registry, &cfg.degraded_variants)?;
+        check_pipeline_config(&primary, &cfg.lanes)?;
         let telemetry = Arc::new(Telemetry::new());
-        let stop = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_cap);
-        let worker = {
+        let shared = Arc::new(Shared {
+            inner: Mutex::new(Inner {
+                queue: DeadlineQueue::new(cfg.queue_cap, cfg.degrade_high,
+                                          cfg.degrade_low),
+                est: ServiceEstimator::new(),
+                stopping: false,
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+        });
+        let t0 = Instant::now();
+        let mut workers = Vec::new();
+        for (lane, hint) in cfg.lanes.iter().enumerate() {
+            let shared = Arc::clone(&shared);
+            let runtime = Arc::clone(&runtime);
             let telemetry = Arc::clone(&telemetry);
-            let stop = Arc::clone(&stop);
-            std::thread::Builder::new()
-                .name("oodin-batcher".into())
-                .spawn(move || batcher_main(rx, runtime, loaded, cfg, telemetry, stop))?
-        };
-        Ok(Server { tx, worker: Some(worker), stop, telemetry })
+            let primary = primary.clone();
+            let degraded = degraded.clone();
+            let cfg = cfg.clone();
+            let hint = *hint;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("oodin-batcher-{lane}"))
+                    .spawn(move || {
+                        worker_main(shared, runtime, primary, degraded, cfg,
+                                    hint, telemetry, t0)
+                    })?,
+            );
+        }
+        Ok(Server {
+            shared,
+            workers,
+            t0,
+            deadline_ms: cfg.deadline_ms,
+            telemetry,
+        })
     }
 
-    /// Submit a frame; blocks when the queue is full (backpressure).
+    fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    fn deadline_us(&self, now_us: u64, deadline_ms: f64) -> u64 {
+        if deadline_ms.is_finite() {
+            now_us.saturating_add((deadline_ms * 1e3).round() as u64)
+        } else {
+            u64::MAX
+        }
+    }
+
+    /// Submit a frame with the config's default deadline; blocks when the
+    /// queue is full (backpressure).
     pub fn submit(&self, frame: Vec<f32>, height: usize, width: usize)
                   -> Result<Receiver<Result<Response>>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request { frame, height, width, reply, enqueued: Instant::now() })
-            .map_err(|_| anyhow!("server stopped"))?;
-        Ok(rx)
+        self.submit_with_deadline(frame, height, width, self.deadline_ms)
     }
 
-    /// Non-blocking submit; `None` when the queue is full.
+    /// Submit a frame that should complete within `deadline_ms`
+    /// (`INFINITY` = no deadline); blocks when the queue is full.
+    pub fn submit_with_deadline(&self, frame: Vec<f32>, height: usize,
+                                width: usize, deadline_ms: f64)
+                                -> Result<Receiver<Result<Response>>> {
+        let (reply, rx) = mpsc::channel();
+        let mut job = Request {
+            frame, height, width, reply, enqueued: Instant::now(),
+        };
+        let mut g = self.shared.inner.lock().unwrap();
+        loop {
+            if g.stopping {
+                return Err(anyhow!("server stopped"));
+            }
+            let now = self.now_us();
+            match g.queue.admit(job, now, self.deadline_us(now, deadline_ms)) {
+                Ok(_) => {
+                    self.telemetry.record("queue_depth", g.queue.len() as f64);
+                    self.shared.work.notify_all();
+                    return Ok(rx);
+                }
+                Err(returned) => {
+                    job = returned;
+                    g = self.shared.space.wait(g).unwrap();
+                }
+            }
+        }
+    }
+
+    /// Non-blocking submit; `None` when the queue is full (the shed is
+    /// counted in `shed_requests`).
     pub fn try_submit(&self, frame: Vec<f32>, height: usize, width: usize)
                       -> Result<Option<Receiver<Result<Response>>>> {
         let (reply, rx) = mpsc::channel();
-        match self.tx.try_send(Request {
+        let job = Request {
             frame, height, width, reply, enqueued: Instant::now(),
-        }) {
-            Ok(()) => Ok(Some(rx)),
-            Err(TrySendError::Full(_)) => Ok(None),
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("server stopped")),
+        };
+        let mut g = self.shared.inner.lock().unwrap();
+        if g.stopping {
+            return Err(anyhow!("server stopped"));
+        }
+        let now = self.now_us();
+        match g.queue.admit(job, now, self.deadline_us(now, self.deadline_ms)) {
+            Ok(_) => {
+                self.telemetry.record("queue_depth", g.queue.len() as f64);
+                self.shared.work.notify_all();
+                Ok(Some(rx))
+            }
+            Err(_) => {
+                self.telemetry.incr("shed_requests");
+                Ok(None)
+            }
         }
     }
 
@@ -160,10 +360,19 @@ impl Server {
         self.telemetry.counter("padded_slots") as f64 / executed as f64
     }
 
+    /// Stop accepting work, drain the queue, and join the workers.
     pub fn stop(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        drop(self.tx.clone()); // original tx dropped in Drop
-        if let Some(w) = self.worker.take() {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        {
+            let mut g = self.shared.inner.lock().unwrap();
+            g.stopping = true;
+        }
+        self.shared.work.notify_all();
+        self.shared.space.notify_all();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -171,9 +380,133 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.shutdown();
+    }
+}
+
+/// One worker lane: waits for queued work, runs the deadline-aware batch
+/// policy, executes the formed batch on this lane's engine hint, and
+/// scatters the replies.
+#[allow(clippy::too_many_arguments)]
+fn worker_main(shared: Arc<Shared>, runtime: Arc<dyn Backend>,
+               primary: Vec<(usize, ModelVariant)>,
+               degraded: Vec<(usize, ModelVariant)>, cfg: ServerConfig,
+               hint: Option<ExecHint>, telemetry: Arc<Telemetry>,
+               t0: Instant) {
+    let max_wait_us = (cfg.max_batch_delay_ms * 1e3).round() as u64;
+    let slack_us = (cfg.deadline_slack_ms * 1e3).round() as u64;
+    let mut g = shared.inner.lock().unwrap();
+    loop {
+        if g.queue.is_empty() {
+            if g.stopping {
+                return;
+            }
+            let (guard, _) = shared
+                .work
+                .wait_timeout(g, Duration::from_millis(50))
+                .unwrap();
+            g = guard;
+            continue;
+        }
+        let now = t0.elapsed().as_micros() as u64;
+        let use_degraded = g.queue.degraded() && !degraded.is_empty();
+        let ladder = if use_degraded { &degraded } else { &primary };
+        let max_batch = ladder.last().map(|(b, _)| *b).unwrap_or(1);
+        let (bsz, v) = {
+            let picked = pick_variant(ladder, g.queue.len(), cfg.max_pad_ratio);
+            (picked.0, picked.1.clone())
+        };
+        let est = g.est.estimate(use_degraded, bsz);
+        match decide(now, g.queue.len(), max_batch,
+                     g.queue.oldest_arrival_us().expect("non-empty queue"),
+                     g.queue.earliest_deadline_us().expect("non-empty queue"),
+                     est, max_wait_us, slack_us) {
+            LaunchDecision::WaitUntil(t) => {
+                let wait = Duration::from_micros(t.saturating_sub(now).max(1));
+                let (guard, _) = shared.work.wait_timeout(g, wait).unwrap();
+                g = guard;
+            }
+            LaunchDecision::Launch(reason) => {
+                telemetry.incr(reason.counter());
+                let n = bsz.min(g.queue.len());
+                let chunk = g.queue.pop_chunk(n);
+                drop(g);
+                shared.space.notify_all();
+                let svc_us = serve_chunk(&*runtime, &v, bsz, chunk, now,
+                                         use_degraded, hint.as_ref(),
+                                         cfg.n_classes, &telemetry, t0);
+                g = shared.inner.lock().unwrap();
+                if let Some(svc) = svc_us {
+                    g.est.record(use_degraded, bsz, svc);
+                }
+            }
+        }
+    }
+}
+
+/// Stage one formed batch, execute it, and scatter per-sample replies.
+/// Returns the observed service time (µs) on success.
+#[allow(clippy::too_many_arguments)]
+fn serve_chunk(runtime: &dyn Backend, v: &ModelVariant, bsz: usize,
+               chunk: Vec<QueueEntry<Request>>, launched_us: u64,
+               degraded: bool, hint: Option<&ExecHint>, n_classes: usize,
+               telemetry: &Telemetry, t0: Instant) -> Option<u64> {
+    // Stage: fill [bsz, res, res, 3]; the tail (if chunk < bsz after a
+    // timeout flush) replicates the last sample and is discarded.
+    let per = v.resolution * v.resolution * 3;
+    let mut input = vec![0.0f32; bsz * per];
+    for (i, e) in chunk.iter().enumerate() {
+        stage_input(&e.item.frame, e.item.height, e.item.width,
+                    &mut input[i * per..(i + 1) * per], v.resolution);
+    }
+    for i in chunk.len()..bsz {
+        let (a, b) = input.split_at_mut(i * per);
+        b[..per].copy_from_slice(&a[(chunk.len() - 1) * per..][..per]);
+    }
+
+    let wall0 = Instant::now();
+    let result = runtime.execute_hinted(&v.name, input, &v.input_shape, hint);
+    let exec_ms = wall0.elapsed().as_secs_f64() * 1e3;
+    telemetry.record("batch_exec_ms", exec_ms);
+    telemetry.add("batched_requests", chunk.len() as u64);
+    telemetry.add("executed_slots", bsz as u64);
+    telemetry.add("padded_slots", (bsz - chunk.len()) as u64);
+    telemetry.incr(&format!("batch_size_{bsz}"));
+    if degraded {
+        telemetry.add("degraded_requests", chunk.len() as u64);
+    }
+
+    match result {
+        Ok(out) => {
+            let svc_us = (out.host_ms * 1e3).round().max(1.0) as u64;
+            let done_us = t0.elapsed().as_micros() as u64;
+            let stride = out.values.len() / bsz;
+            for (i, e) in chunk.into_iter().enumerate() {
+                let (class, confidence) = decode_top1(
+                    &out.values[i * stride..(i + 1) * stride], n_classes);
+                let missed = done_us > e.deadline_us;
+                if missed {
+                    telemetry.incr("deadline_misses");
+                }
+                let _ = e.item.reply.send(Ok(Response {
+                    class,
+                    confidence,
+                    queue_ms: launched_us.saturating_sub(e.arrival_us) as f64
+                        / 1e3,
+                    total_ms: e.item.enqueued.elapsed().as_secs_f64() * 1e3,
+                    batch: bsz,
+                    variant: v.name.clone(),
+                    missed_deadline: missed,
+                    degraded,
+                }));
+            }
+            Some(svc_us)
+        }
+        Err(err) => {
+            for e in chunk {
+                let _ = e.item.reply.send(Err(anyhow!("exec failed: {err}")));
+            }
+            None
         }
     }
 }
@@ -189,10 +522,12 @@ pub struct MultiServer {
 }
 
 impl MultiServer {
+    /// An empty front-end over one shared backend.
     pub fn new(backend: Arc<dyn Backend>) -> Self {
         MultiServer { backend, apps: BTreeMap::new() }
     }
 
+    /// The shared execution backend.
     pub fn backend(&self) -> Arc<dyn Backend> {
         Arc::clone(&self.backend)
     }
@@ -208,19 +543,58 @@ impl MultiServer {
         Ok(())
     }
 
+    /// Register an app through the multi-app scheduler's admission control
+    /// (degrade-or-reject): on admission, the app's server is configured
+    /// from the jointly-chosen design — its family/precision ladder, a
+    /// worker lane pinned to the design's engine/threads/governor, and an
+    /// INT8 degraded ladder (when one exists) for overload brownout.
+    /// Rejected apps get no server.
+    pub fn register_admitted(&mut self, scheduler: &mut Scheduler,
+                             registry: &Registry, desc: WorkloadDescriptor,
+                             now_ms: f64, conds: &Conditions)
+                             -> Result<Admission> {
+        let app_id = desc.app_id.clone();
+        let slo_latency_ms = desc.slo_latency_ms;
+        let adm = scheduler.register(desc, now_ms, conds)?;
+        if let Admission::Admitted { design, .. } = &adm {
+            let v = registry.get(&design.variant).ok_or_else(|| {
+                anyhow!("admitted variant `{}` not in registry", design.variant)
+            })?;
+            let mut cfg =
+                ServerConfig::for_family(registry, &v.family, v.precision)?;
+            if v.precision != Precision::Int8 {
+                let high = (cfg.queue_cap * 3) / 4;
+                let low = cfg.queue_cap / 4;
+                cfg = cfg.with_degraded(registry, &v.family, Precision::Int8,
+                                        high, low);
+            }
+            cfg.deadline_ms = slo_latency_ms;
+            cfg.lanes = vec![Some(ExecHint {
+                engine: design.hw.engine,
+                threads: design.hw.threads,
+                governor: design.hw.governor,
+            })];
+            self.register(&app_id, registry, cfg)?;
+        }
+        Ok(adm)
+    }
+
     /// The per-app serving handle.
     pub fn app(&self, app_id: &str) -> Option<&Server> {
         self.apps.get(app_id)
     }
 
+    /// Registered app ids, sorted.
     pub fn app_ids(&self) -> impl Iterator<Item = &str> {
         self.apps.keys().map(|s| s.as_str())
     }
 
+    /// Number of registered apps.
     pub fn len(&self) -> usize {
         self.apps.len()
     }
 
+    /// True when no app is registered.
     pub fn is_empty(&self) -> bool {
         self.apps.is_empty()
     }
@@ -233,126 +607,16 @@ impl MultiServer {
     }
 }
 
-fn batcher_main(rx: Receiver<Request>, runtime: Arc<dyn Backend>,
-                variants: Vec<(usize, ModelVariant)>, cfg: ServerConfig,
-                telemetry: Arc<Telemetry>, stop: Arc<AtomicBool>) {
-    let max_batch = variants.last().map(|(b, _)| *b).unwrap_or(1);
-    loop {
-        // Block for the first request (with periodic stop checks).
-        let first = match rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(r) => r,
-            Err(RecvTimeoutError::Timeout) => {
-                if stop.load(Ordering::SeqCst) {
-                    return;
-                }
-                continue;
-            }
-            Err(RecvTimeoutError::Disconnected) => return,
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now()
-            + Duration::from_micros((cfg.max_batch_delay_ms * 1e3) as u64);
-        while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(_) => break,
-            }
-        }
-        serve_batch(&*runtime, &variants, &cfg, batch, &telemetry);
-    }
-}
-
-/// Pick the compiled batch size for `len` waiting requests: an exact fit
-/// wins; otherwise the smallest size above `len` whose padded-slot fraction
-/// stays within `max_pad_ratio` (one amortised execution beats several
-/// small ones); otherwise the largest size <= len (batch 1 repeated).
-fn pick_variant<'v>(variants: &'v [(usize, ModelVariant)], len: usize,
-                    max_pad_ratio: f64) -> &'v (usize, ModelVariant) {
-    let len = len.max(1);
-    if let Some(exact) = variants.iter().find(|(b, _)| *b == len) {
-        return exact;
-    }
-    if let Some(padded) = variants
-        .iter()
-        .find(|(b, _)| *b > len && (*b - len) as f64 / *b as f64 <= max_pad_ratio)
-    {
-        return padded;
-    }
-    variants
-        .iter()
-        .rev()
-        .find(|(b, _)| *b <= len)
-        .unwrap_or(&variants[0])
-}
-
-fn serve_batch(runtime: &dyn Backend, variants: &[(usize, ModelVariant)],
-               cfg: &ServerConfig, batch: Vec<Request>, telemetry: &Telemetry) {
-    let mut remaining = batch;
-    while !remaining.is_empty() {
-        let (bsz, v) = pick_variant(variants, remaining.len(), cfg.max_pad_ratio);
-        let take = (*bsz).min(remaining.len());
-        let chunk: Vec<Request> = remaining.drain(..take).collect();
-
-        // Stage: fill [bsz, res, res, 3]; the tail (if chunk < bsz after a
-        // timeout flush) replicates the last sample and is discarded.
-        let per = v.resolution * v.resolution * 3;
-        let mut input = vec![0.0f32; bsz * per];
-        for (i, r) in chunk.iter().enumerate() {
-            stage_input(&r.frame, r.height, r.width,
-                        &mut input[i * per..(i + 1) * per], v.resolution);
-        }
-        for i in chunk.len()..*bsz {
-            let (a, b) = input.split_at_mut(i * per);
-            b[..per].copy_from_slice(&a[(chunk.len() - 1) * per..][..per]);
-        }
-
-        let t0 = Instant::now();
-        let result = runtime.execute(&v.name, input, &v.input_shape);
-        let exec_ms = t0.elapsed().as_secs_f64() * 1e3;
-        telemetry.record("batch_exec_ms", exec_ms);
-        telemetry.add("batched_requests", chunk.len() as u64);
-        telemetry.add("executed_slots", *bsz as u64);
-        telemetry.add("padded_slots", (*bsz - chunk.len()) as u64);
-        telemetry.incr(&format!("batch_size_{bsz}"));
-
-        match result {
-            Ok(out) => {
-                let stride = out.values.len() / bsz;
-                for (i, r) in chunk.into_iter().enumerate() {
-                    let (class, confidence) = decode_top1(
-                        &out.values[i * stride..(i + 1) * stride], cfg.n_classes);
-                    let queue_ms =
-                        (t0 - r.enqueued).as_secs_f64() * 1e3;
-                    let _ = r.reply.send(Ok(Response {
-                        class,
-                        confidence,
-                        queue_ms,
-                        total_ms: r.enqueued.elapsed().as_secs_f64() * 1e3,
-                        batch: *bsz,
-                        variant: v.name.clone(),
-                    }));
-                }
-            }
-            Err(e) => {
-                for r in chunk {
-                    let _ = r.reply.send(Err(anyhow!("exec failed: {e}")));
-                }
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::device::profiles::samsung_a71;
-    use crate::model::test_fixtures::serving_registry;
+    use crate::measurements::Measurer;
+    use crate::model::test_fixtures::{fake_registry, serving_registry};
+    use crate::optimizer::Objective;
     use crate::runtime::SimBackend;
     use crate::sil::camera::class_frame;
+    use crate::util::stats::Percentile;
 
     const RES: usize = 16;
 
@@ -372,6 +636,8 @@ mod tests {
         let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.class, 9);
         assert!(resp.total_ms >= 0.0);
+        assert!(!resp.missed_deadline, "no deadline configured by default");
+        assert!(!resp.degraded);
         srv.stop();
     }
 
@@ -420,6 +686,8 @@ mod tests {
             let _ = rx.recv();
         }
         assert!(refused > 0, "expected backpressure refusals");
+        // Refusals are counted, not silent.
+        assert_eq!(srv.telemetry.counter("shed_requests"), refused);
         srv.stop();
     }
 
@@ -449,6 +717,20 @@ mod tests {
     }
 
     #[test]
+    fn generous_deadline_is_met_and_recorded() {
+        let reg = serving_registry(RES);
+        let srv = Server::start(backend(&reg), &reg, config(&reg)).unwrap();
+        let rx = srv
+            .submit_with_deadline(class_frame(RES, 5), RES, RES, 10_000.0)
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.class, 5);
+        assert!(!resp.missed_deadline, "10 s deadline on an idle server");
+        assert_eq!(srv.telemetry.counter("deadline_misses"), 0);
+        srv.stop();
+    }
+
+    #[test]
     fn multi_server_isolated_apps_shared_backend() {
         let reg = serving_registry(RES);
         let mut multi = MultiServer::new(backend(&reg));
@@ -467,6 +749,58 @@ mod tests {
         assert_eq!(multi.app("camera").unwrap().telemetry.counter("batched_requests"), 1);
         assert_eq!(multi.app("ocr").unwrap().telemetry.counter("batched_requests"), 1);
         assert!(multi.app("missing").is_none());
+        multi.stop();
+    }
+
+    #[test]
+    fn register_admitted_wires_scheduler_admission_to_serving() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(30, 2).measure_all().unwrap();
+        let mut sched = Scheduler::new(Arc::new(dev.clone()),
+                                       Arc::new(reg.clone()), Arc::new(lut));
+        let mut multi = MultiServer::new(backend(&reg));
+        let idle = Conditions::idle();
+        let desc = WorkloadDescriptor {
+            app_id: "cam".into(),
+            family: "mobilenet_v2_100".into(),
+            arrival_fps: 30.0,
+            objective: Objective::MinLatency {
+                stat: Percentile::Avg,
+                epsilon: 0.05,
+            },
+            slo_latency_ms: 1e6,
+        };
+        let adm = multi
+            .register_admitted(&mut sched, &reg, desc, 0.0, &idle)
+            .unwrap();
+        assert!(matches!(adm, Admission::Admitted { .. }));
+        assert_eq!(multi.len(), 1);
+        // The admitted app serves through its scheduler-chosen design.
+        let v = reg.get("mobilenet_v2_100__fp32__b1").unwrap();
+        let rx = multi.app("cam").unwrap()
+            .submit(class_frame(v.resolution, 3), v.resolution, v.resolution)
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert!(resp.variant.starts_with("mobilenet_v2_100"),
+                "served by the admitted design's family: {}", resp.variant);
+
+        // A workload no design can host is rejected: no server appears.
+        let ghost = WorkloadDescriptor {
+            app_id: "ghost".into(),
+            family: "no_such_family".into(),
+            arrival_fps: 30.0,
+            objective: Objective::MinLatency {
+                stat: Percentile::Avg,
+                epsilon: 0.05,
+            },
+            slo_latency_ms: 1e6,
+        };
+        let adm = multi
+            .register_admitted(&mut sched, &reg, ghost, 0.0, &idle)
+            .unwrap();
+        assert!(matches!(adm, Admission::Rejected { .. }));
+        assert_eq!(multi.len(), 1);
         multi.stop();
     }
 }

@@ -1,0 +1,221 @@
+//! Bounded, deadline-annotated request queue with load-shedding admission
+//! and degrade-mode watermarks.
+//!
+//! This is the pipeline's single source of backpressure truth, shared by
+//! the threaded [`Server`](crate::serving::Server) (behind a mutex) and
+//! the deterministic virtual-time
+//! [`EventPipeline`](crate::serving::pipeline::EventPipeline):
+//!
+//! * **Bounded**: `admit` refuses (sheds) once `cap` entries wait — the
+//!   queue can never exceed its capacity, by construction.
+//! * **Deadline-annotated**: every entry carries its arrival and absolute
+//!   deadline in microseconds on the caller's timeline, which is what the
+//!   deadline-aware batch policy reasons about.
+//! * **Degrade watermarks**: crossing `degrade_high` waiting entries flips
+//!   the queue into *degraded* mode (serve the cheaper ladder — OODIn's
+//!   accuracy-for-latency trade under pressure, the serving-side analogue
+//!   of the scheduler's degrade-or-reject admission); draining back to
+//!   `degrade_low` flips it back.
+
+use std::collections::VecDeque;
+
+/// One queued request: caller payload + timing metadata (µs on the
+/// caller's timeline — wall µs since server start, or virtual µs).
+#[derive(Debug, Clone)]
+pub struct QueueEntry<T> {
+    /// Caller payload (frame + reply channel, or a virtual request).
+    pub item: T,
+    /// Enqueue instant (µs).
+    pub arrival_us: u64,
+    /// Absolute completion deadline (µs); `u64::MAX` = none.
+    pub deadline_us: u64,
+}
+
+/// Admission outcome for an accepted request — the serving-level mirror of
+/// the scheduler's degrade-or-reject admission control.  A refused request
+/// is returned to the caller as the `Err` arm of
+/// [`DeadlineQueue::admit`], counted (never silently dropped).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Admitted {
+    /// True when the queue was already in degraded mode at admission.
+    pub degraded: bool,
+}
+
+/// The bounded deadline queue.
+#[derive(Debug)]
+pub struct DeadlineQueue<T> {
+    cap: usize,
+    degrade_high: usize,
+    degrade_low: usize,
+    entries: VecDeque<QueueEntry<T>>,
+    degraded: bool,
+    /// Requests refused at capacity.
+    pub sheds: u64,
+    /// Requests accepted.
+    pub admitted: u64,
+    /// Times the queue entered degraded mode.
+    pub degrade_transitions: u64,
+    /// High-water mark of the queue depth ever observed.
+    pub max_depth: usize,
+}
+
+impl<T> DeadlineQueue<T> {
+    /// An empty queue holding at most `cap` entries.  `degrade_high` /
+    /// `degrade_low` are the enter/leave watermarks for degraded mode
+    /// (`usize::MAX` / `0` disable it).
+    pub fn new(cap: usize, degrade_high: usize, degrade_low: usize) -> Self {
+        assert!(cap > 0, "queue capacity must be positive");
+        assert!(degrade_low <= degrade_high, "watermarks inverted");
+        DeadlineQueue {
+            cap,
+            degrade_high,
+            degrade_low,
+            entries: VecDeque::new(),
+            degraded: false,
+            sheds: 0,
+            admitted: 0,
+            degrade_transitions: 0,
+            max_depth: 0,
+        }
+    }
+
+    /// Number of waiting entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing waits.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Configured capacity bound.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// True while the queue is above the degrade watermarks — batches
+    /// should launch from the degraded (cheaper) ladder.
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Arrival instant of the oldest waiting entry.
+    pub fn oldest_arrival_us(&self) -> Option<u64> {
+        self.entries.front().map(|e| e.arrival_us)
+    }
+
+    /// Deadline of the oldest waiting entry.
+    pub fn oldest_deadline_us(&self) -> Option<u64> {
+        self.entries.front().map(|e| e.deadline_us)
+    }
+
+    /// Tightest deadline across *all* waiting entries — what the
+    /// deadline-risk launch trigger must watch: with per-request deadlines
+    /// a later arrival can be more urgent than the queue front.  O(len),
+    /// and len is bounded by the (small) queue capacity.
+    pub fn earliest_deadline_us(&self) -> Option<u64> {
+        self.entries.iter().map(|e| e.deadline_us).min()
+    }
+
+    /// Try to enqueue: sheds (counts, and hands the item back as `Err`)
+    /// when at capacity, otherwise pushes and updates the degrade
+    /// watermark state.
+    pub fn admit(&mut self, item: T, arrival_us: u64, deadline_us: u64)
+                 -> Result<Admitted, T> {
+        if self.entries.len() >= self.cap {
+            self.sheds += 1;
+            return Err(item);
+        }
+        self.entries.push_back(QueueEntry { item, arrival_us, deadline_us });
+        self.admitted += 1;
+        self.max_depth = self.max_depth.max(self.entries.len());
+        let was = self.degraded;
+        if !self.degraded && self.entries.len() >= self.degrade_high {
+            self.degraded = true;
+            self.degrade_transitions += 1;
+        }
+        Ok(Admitted { degraded: was })
+    }
+
+    /// Pop up to `n` oldest entries (a batch) and update the degrade
+    /// watermark state after the drain.
+    pub fn pop_chunk(&mut self, n: usize) -> Vec<QueueEntry<T>> {
+        let take = n.min(self.entries.len());
+        let chunk: Vec<QueueEntry<T>> = self.entries.drain(..take).collect();
+        if self.degraded && self.entries.len() <= self.degrade_low {
+            self.degraded = false;
+        }
+        chunk
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sheds_at_capacity_and_returns_item() {
+        let mut q: DeadlineQueue<usize> = DeadlineQueue::new(2, usize::MAX, 0);
+        assert_eq!(q.admit(0, 0, u64::MAX), Ok(Admitted { degraded: false }));
+        assert_eq!(q.admit(1, 1, u64::MAX), Ok(Admitted { degraded: false }));
+        assert_eq!(q.admit(2, 2, u64::MAX), Err(2), "shed hands the item back");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.sheds, 1);
+        assert_eq!(q.admitted, 2);
+        assert_eq!(q.max_depth, 2);
+    }
+
+    #[test]
+    fn watermarks_enter_and_leave_degraded_mode() {
+        let mut q: DeadlineQueue<usize> = DeadlineQueue::new(8, 3, 1);
+        assert!(q.admit(0, 0, u64::MAX).is_ok());
+        assert!(q.admit(1, 0, u64::MAX).is_ok());
+        assert!(!q.degraded());
+        let adm = q.admit(2, 0, u64::MAX); // depth 3 >= high
+        assert_eq!(adm, Ok(Admitted { degraded: false }),
+                   "the tipping request itself was admitted un-degraded");
+        assert!(q.degraded());
+        assert_eq!(q.degrade_transitions, 1);
+        q.pop_chunk(1); // depth 2 > low: still degraded
+        assert!(q.degraded());
+        q.pop_chunk(1); // depth 1 <= low: recovered
+        assert!(!q.degraded());
+    }
+
+    #[test]
+    fn pop_chunk_is_fifo_and_clamped() {
+        let mut q: DeadlineQueue<usize> = DeadlineQueue::new(8, usize::MAX, 0);
+        for i in 0..3usize {
+            assert!(q.admit(i, i as u64, u64::MAX).is_ok());
+        }
+        let chunk = q.pop_chunk(10);
+        assert_eq!(chunk.iter().map(|e| e.item).collect::<Vec<_>>(), [0, 1, 2]);
+        assert!(q.is_empty());
+        assert!(q.oldest_arrival_us().is_none());
+    }
+
+    #[test]
+    fn oldest_metadata_tracks_front() {
+        let mut q: DeadlineQueue<&str> = DeadlineQueue::new(4, usize::MAX, 0);
+        assert!(q.admit("a", 10, 100).is_ok());
+        assert!(q.admit("b", 20, 50).is_ok());
+        assert_eq!(q.oldest_arrival_us(), Some(10));
+        assert_eq!(q.oldest_deadline_us(), Some(100));
+        q.pop_chunk(1);
+        assert_eq!(q.oldest_deadline_us(), Some(50));
+    }
+
+    #[test]
+    fn earliest_deadline_sees_urgent_entries_behind_the_front() {
+        let mut q: DeadlineQueue<&str> = DeadlineQueue::new(4, usize::MAX, 0);
+        assert!(q.admit("lazy", 0, u64::MAX).is_ok());
+        assert!(q.admit("urgent", 10, 5_000).is_ok());
+        // The front has no deadline, but the queue's tightest one is what
+        // the deadline-risk trigger must watch.
+        assert_eq!(q.oldest_deadline_us(), Some(u64::MAX));
+        assert_eq!(q.earliest_deadline_us(), Some(5_000));
+        q.pop_chunk(2);
+        assert_eq!(q.earliest_deadline_us(), None);
+    }
+}

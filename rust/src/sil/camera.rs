@@ -6,11 +6,13 @@
 
 use crate::util::rng::Rng;
 
+/// Number of synthetic scene classes.
 pub const NUM_CLASSES: usize = 10;
 
-/// Class-blob channel weights (dominant / secondary) — shared with the
-/// SimBackend matched filter so generator and decoder stay in lockstep.
+/// Class-blob dominant-channel weight — shared with the SimBackend
+/// matched filter so generator and decoder stay in lockstep.
 pub const BLOB_AMP: f32 = 1.5;
+/// Class-blob secondary-channel weight (see [`BLOB_AMP`]).
 pub const BLOB_SECONDARY: f32 = 0.5;
 
 /// Scene-template geometry shared by the frame generator and the
@@ -26,20 +28,27 @@ pub fn class_template(res: usize, label: usize) -> (f64, f64, f64) {
 /// One captured RGB frame (HWC, f32).
 #[derive(Debug, Clone)]
 pub struct Frame {
+    /// RGB pixels, HWC layout.
     pub data: Vec<f32>,
+    /// Height in pixels.
     pub height: usize,
+    /// Width in pixels.
     pub width: usize,
     /// Ground-truth class of the synthetic scene.
     pub label: usize,
     /// Capture timestamp on the device timeline (ms).
     pub ts_ms: f64,
+    /// Monotone capture sequence number.
     pub seq: u64,
 }
 
 /// Synthetic Camera2 stand-in: frames at a fixed rate and resolution.
 pub struct SyntheticCamera {
+    /// Configured capture rate (frames/s).
     pub fps: f64,
+    /// Square frame resolution (pixels per side).
     pub resolution: usize,
+    /// Exposure multiplier (middleware-b adjusts it).
     pub exposure: f64,
     noise: f64,
     rng: Rng,
@@ -47,6 +56,7 @@ pub struct SyntheticCamera {
 }
 
 impl SyntheticCamera {
+    /// A camera producing `resolution`-square frames at `fps`, seeded.
     pub fn new(resolution: usize, fps: f64, seed: u64) -> Self {
         SyntheticCamera { fps, resolution, exposure: 1.0, noise: 0.95,
                           rng: Rng::new(seed), seq: 0 }

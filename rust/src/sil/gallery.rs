@@ -12,11 +12,17 @@ use crate::util::json::{self, Value};
 /// One stored record: a processed frame's label and metadata.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GalleryEntry {
+    /// Capture timestamp on the device timeline (ms).
     pub ts_ms: f64,
+    /// Frame sequence number.
     pub seq: u64,
+    /// Top-1 class the resident model predicted.
     pub predicted_class: usize,
+    /// Top-1 score.
     pub confidence: f64,
+    /// Variant that produced the prediction.
     pub model: String,
+    /// Engine it ran on.
     pub engine: String,
 }
 
@@ -80,6 +86,7 @@ impl Gallery {
         Self::open(path)
     }
 
+    /// Append one record.
     pub fn add(&mut self, entry: &GalleryEntry) -> Result<()> {
         let mut line = json::to_string(&entry.to_json());
         line.push('\n');
@@ -88,10 +95,12 @@ impl Gallery {
         Ok(())
     }
 
+    /// Stored record count.
     pub fn len(&self) -> u64 {
         self.count
     }
 
+    /// True when nothing is stored.
     pub fn is_empty(&self) -> bool {
         self.count == 0
     }

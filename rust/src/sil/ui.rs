@@ -6,13 +6,16 @@
 /// Collected UI state.
 #[derive(Debug, Default)]
 pub struct UiStub {
+    /// Current configuration banner text.
     pub banner: String,
+    /// Event log, oldest first.
     pub events: Vec<String>,
     /// When true, events are echoed to stdout as they arrive.
     pub live: bool,
 }
 
 impl UiStub {
+    /// A fresh UI; `live` echoes events to stdout.
     pub fn new(live: bool) -> Self {
         UiStub { live, ..Default::default() }
     }
@@ -34,6 +37,7 @@ impl UiStub {
         self.events.push(text);
     }
 
+    /// Most recent event line, if any.
     pub fn last_event(&self) -> Option<&str> {
         self.events.last().map(|s| s.as_str())
     }

@@ -20,19 +20,23 @@ pub struct Telemetry {
 }
 
 impl Telemetry {
+    /// An empty sink.
     pub fn new() -> Self {
         Telemetry::default()
     }
 
+    /// Increment counter `name` by one.
     pub fn incr(&self, name: &str) {
         self.add(name, 1);
     }
 
+    /// Add `by` to counter `name` (created at zero).
     pub fn add(&self, name: &str, by: u64) {
         let mut g = self.inner.lock().unwrap();
         *g.counters.entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Current counter value (0 when never touched).
     pub fn counter(&self, name: &str) -> u64 {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
     }
@@ -43,12 +47,14 @@ impl Telemetry {
         g.samples.entry(name.to_string()).or_default().push(ms);
     }
 
+    /// Summary of the samples recorded under `name`; `None` when empty.
     pub fn stats(&self, name: &str) -> Option<LatencyStats> {
         let g = self.inner.lock().unwrap();
         g.samples.get(name).filter(|s| !s.is_empty())
             .map(|s| LatencyStats::from_samples(s))
     }
 
+    /// Everything as JSON: counters verbatim, samples summarised.
     pub fn snapshot(&self) -> Value {
         let g = self.inner.lock().unwrap();
         let counters: Vec<(String, Value)> = g

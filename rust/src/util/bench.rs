@@ -16,12 +16,16 @@ pub fn black_box<T>(x: T) -> T {
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Per-iteration latency summary (ms).
     pub stats: LatencyStats,
+    /// Measured iterations.
     pub iters: usize,
 }
 
 impl BenchResult {
+    /// Print the criterion-style summary line.
     pub fn print(&self) {
         println!(
             "{:<44} {:>10.4} ms/iter  (median {:.4}, p90 {:.4}, min {:.4}, n={})",

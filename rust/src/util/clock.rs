@@ -11,18 +11,22 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+/// A monotone timeline: wall clock or explicitly-advanced simulated time.
 #[derive(Clone)]
 pub enum Clock {
+    /// Wall clock anchored at construction.
     Real(Instant),
-    /// Microsecond counter advanced by `advance`.
+    /// Microsecond counter advanced by [`Clock::advance_ms`].
     Sim(Arc<AtomicU64>),
 }
 
 impl Clock {
+    /// A wall clock starting now.
     pub fn real() -> Self {
         Clock::Real(Instant::now())
     }
 
+    /// A simulated clock starting at 0; clones share the counter.
     pub fn sim() -> Self {
         Clock::Sim(Arc::new(AtomicU64::new(0)))
     }
@@ -45,6 +49,7 @@ impl Clock {
         }
     }
 
+    /// True for simulated clocks.
     pub fn is_sim(&self) -> bool {
         matches!(self, Clock::Sim(_))
     }

@@ -13,15 +13,22 @@ use anyhow::{anyhow, bail, Result};
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (stored as f64).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Value>),
+    /// JSON object, insertion order preserved.
     Obj(Vec<(String, Value)>),
 }
 
 impl Value {
+    /// Object field lookup; `None` on non-objects and missing keys.
     pub fn get(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -34,6 +41,7 @@ impl Value {
         self.get(key).ok_or_else(|| anyhow!("missing field `{key}`"))
     }
 
+    /// The number, or an error on any other kind.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Value::Num(n) => Ok(*n),
@@ -41,6 +49,7 @@ impl Value {
         }
     }
 
+    /// The number as an unsigned integer (rejects negatives/fractions).
     pub fn as_u64(&self) -> Result<u64> {
         let f = self.as_f64()?;
         if f < 0.0 || f.fract() != 0.0 {
@@ -49,10 +58,12 @@ impl Value {
         Ok(f as u64)
     }
 
+    /// [`Value::as_u64`] narrowed to `usize`.
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_u64()? as usize)
     }
 
+    /// The string, or an error on any other kind.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -60,6 +71,7 @@ impl Value {
         }
     }
 
+    /// The boolean, or an error on any other kind.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -67,6 +79,7 @@ impl Value {
         }
     }
 
+    /// The array items, or an error on any other kind.
     pub fn as_arr(&self) -> Result<&[Value]> {
         match self {
             Value::Arr(a) => Ok(a),
@@ -74,6 +87,7 @@ impl Value {
         }
     }
 
+    /// The object's (key, value) pairs, or an error on any other kind.
     pub fn as_obj(&self) -> Result<&[(String, Value)]> {
         match self {
             Value::Obj(o) => Ok(o),
@@ -86,6 +100,7 @@ impl Value {
 // Parsing
 // ---------------------------------------------------------------------------
 
+/// Parse a complete JSON document (trailing garbage is an error).
 pub fn parse(text: &str) -> Result<Value> {
     let mut p = Parser { b: text.as_bytes(), i: 0 };
     p.ws();
@@ -278,6 +293,7 @@ impl<'a> Parser<'a> {
 // Serialization
 // ---------------------------------------------------------------------------
 
+/// Serialise compactly (no whitespace; integers without a fraction).
 pub fn to_string(v: &Value) -> String {
     let mut out = String::new();
     write_value(&mut out, v);
@@ -344,10 +360,12 @@ pub fn obj(kv: Vec<(&str, Value)>) -> Value {
     Value::Obj(kv.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// A [`Value::Num`].
 pub fn num(n: f64) -> Value {
     Value::Num(n)
 }
 
+/// A [`Value::Str`].
 pub fn s(v: &str) -> Value {
     Value::Str(v.to_string())
 }

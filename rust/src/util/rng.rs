@@ -11,10 +11,12 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded generator; equal seeds give equal streams.
     pub fn new(seed: u64) -> Self {
         Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -50,6 +52,7 @@ impl Rng {
         (self.normal() * sigma).exp()
     }
 
+    /// Uniformly pick one element (panics on an empty slice).
     pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.below(items.len())]
     }

@@ -8,16 +8,24 @@ use crate::util::json::{self, Value};
 /// Summary statistics over a set of latency samples (milliseconds).
 #[derive(Debug, Clone, PartialEq)]
 pub struct LatencyStats {
+    /// Fastest sample (ms).
     pub min: f64,
+    /// Slowest sample (ms).
     pub max: f64,
+    /// Arithmetic mean (ms).
     pub avg: f64,
+    /// 50th percentile (ms).
     pub median: f64,
+    /// 90th percentile (ms).
     pub p90: f64,
+    /// 99th percentile (ms).
     pub p99: f64,
+    /// Sample count.
     pub n: usize,
 }
 
 impl LatencyStats {
+    /// Summarise a non-empty sample set (panics on empty input).
     pub fn from_samples(samples: &[f64]) -> Self {
         assert!(!samples.is_empty(), "no samples");
         let mut s = samples.to_vec();
@@ -45,6 +53,7 @@ impl LatencyStats {
         }
     }
 
+    /// Serialise for LUT files / telemetry snapshots.
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("min", json::num(self.min)),
@@ -57,6 +66,7 @@ impl LatencyStats {
         ])
     }
 
+    /// Parse the [`LatencyStats::to_json`] representation.
     pub fn from_json(v: &Value) -> anyhow::Result<Self> {
         Ok(LatencyStats {
             min: v.req("min")?.as_f64()?,
@@ -74,15 +84,22 @@ impl LatencyStats {
 /// percentile).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Percentile {
+    /// Fastest sample.
     Min,
+    /// Slowest sample.
     Max,
+    /// Arithmetic mean.
     Avg,
+    /// 50th percentile.
     Median,
+    /// 90th percentile.
     P90,
+    /// 99th percentile.
     P99,
 }
 
 impl Percentile {
+    /// Parse a statistic name (`avg`, `p50`, `p90`, ...).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         Ok(match s {
             "min" => Percentile::Min,
@@ -95,6 +112,7 @@ impl Percentile {
         })
     }
 
+    /// Canonical lower-case name.
     pub fn name(&self) -> &'static str {
         match self {
             Percentile::Min => "min",
@@ -136,11 +154,13 @@ pub struct RollingWindow {
 }
 
 impl RollingWindow {
+    /// An empty window keeping the most recent `cap` samples.
     pub fn new(cap: usize) -> Self {
         assert!(cap > 0);
         RollingWindow { cap, buf: Vec::with_capacity(cap), next: 0, full: false }
     }
 
+    /// Append a sample, evicting the oldest once full.
     pub fn push(&mut self, x: f64) {
         if self.buf.len() < self.cap {
             self.buf.push(x);
@@ -153,18 +173,22 @@ impl RollingWindow {
         }
     }
 
+    /// Samples currently held.
     pub fn len(&self) -> usize {
         self.buf.len()
     }
 
+    /// True before the first sample.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
 
+    /// True once `cap` samples have been seen.
     pub fn is_full(&self) -> bool {
         self.full
     }
 
+    /// Mean of the held samples; `None` when empty.
     pub fn mean(&self) -> Option<f64> {
         if self.buf.is_empty() {
             None
@@ -173,6 +197,7 @@ impl RollingWindow {
         }
     }
 
+    /// Percentile of the held samples; `None` when empty.
     pub fn percentile(&self, p: f64) -> Option<f64> {
         if self.buf.is_empty() {
             return None;
@@ -182,6 +207,7 @@ impl RollingWindow {
         Some(percentile_sorted(&s, p))
     }
 
+    /// Drop every held sample.
     pub fn clear(&mut self) {
         self.buf.clear();
         self.next = 0;

@@ -8,12 +8,15 @@
 //! * responses map to their own requests (no cross-wiring inside a batch,
 //!   across chunked batches, or under queue pressure);
 //! * `try_submit` backpressure triggers at the configured queue bound and
-//!   accepted requests still complete.
+//!   accepted requests still complete;
+//! * the bounded queue never exceeds its capacity (queue-depth telemetry),
+//!   refused requests are counted in `shed_requests`, and sustained
+//!   pressure engages the degraded (INT8) ladder until the backlog drains.
 
 use std::sync::Arc;
 
 use oodin::device::profiles::samsung_a71;
-use oodin::model::test_fixtures::serving_registry;
+use oodin::model::test_fixtures::{bench_registry, serving_registry};
 use oodin::model::{Precision, Registry};
 use oodin::runtime::{Backend, SimBackend};
 use oodin::serving::{Server, ServerConfig};
@@ -126,6 +129,77 @@ fn prop_try_submit_backpressure_at_queue_bound() {
         }
         srv.stop();
     }
+}
+
+#[test]
+fn prop_queue_depth_telemetry_never_exceeds_capacity() {
+    for case in 0..3u64 {
+        let mut rng = Rng::new(15_000 + case);
+        let reg = serving_registry(RES);
+        let mut cfg = config(&reg);
+        cfg.queue_cap = 2 + rng.below(6);
+        cfg.max_batch_delay_ms = 1.0;
+        let srv = Server::start(backend(&reg, 2.0), &reg, cfg.clone()).unwrap();
+        let mut rxs = Vec::new();
+        let mut refused = 0u64;
+        for i in 0..48usize {
+            if i % 2 == 0 {
+                rxs.push(srv.submit(class_frame(RES, i % 10), RES, RES).unwrap());
+            } else {
+                match srv.try_submit(class_frame(RES, i % 10), RES, RES).unwrap() {
+                    Some(rx) => rxs.push(rx),
+                    None => refused += 1,
+                }
+            }
+        }
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        // The queue-depth gauge (sampled at every admission) must respect
+        // the bound, and every refusal must be counted.
+        let depth = srv.telemetry.stats("queue_depth").unwrap();
+        assert!(depth.max <= cfg.queue_cap as f64,
+                "case {case}: depth {} > cap {}", depth.max, cfg.queue_cap);
+        assert_eq!(srv.telemetry.counter("shed_requests"), refused,
+                   "case {case}: sheds not counted");
+        srv.stop();
+    }
+}
+
+#[test]
+fn prop_sustained_pressure_engages_degraded_ladder() {
+    // The `srv` bench family carries an FP32 primary ladder and an INT8
+    // degraded ladder.  A slow backend plus blocking submits keeps the
+    // queue at its bound, which must flip the pipeline into degraded mode
+    // (responses flagged, telemetry counted) — and the flagged responses
+    // must still decode their own class exactly.
+    let reg = bench_registry(RES);
+    let be: Arc<dyn Backend> = Arc::new(
+        SimBackend::new(samsung_a71(), reg.clone()).with_wall_delay_ms(3.0),
+    );
+    let mut cfg = ServerConfig::for_family(&reg, "srv", Precision::Fp32)
+        .unwrap()
+        .with_degraded(&reg, "srv", Precision::Int8, 8, 2);
+    cfg.queue_cap = 16;
+    cfg.max_batch_delay_ms = 1.0;
+    let srv = Server::start(be, &reg, cfg).unwrap();
+    let rxs: Vec<_> = (0..64)
+        .map(|i| srv.submit(class_frame(RES, i % 10), RES, RES).unwrap())
+        .collect();
+    let mut degraded = 0u64;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.class, i % 10, "degradation corrupted request {i}");
+        if resp.degraded {
+            assert!(resp.variant.contains("int8"),
+                    "degraded response served by {}", resp.variant);
+            degraded += 1;
+        }
+    }
+    assert!(degraded > 0, "16-deep queue at the bound never degraded");
+    assert_eq!(srv.telemetry.counter("degraded_requests"), degraded);
+    assert_eq!(srv.telemetry.counter("batched_requests"), 64);
+    srv.stop();
 }
 
 #[test]

@@ -1,0 +1,539 @@
+#!/usr/bin/env python3
+"""Independent oracle for the design-space layer's golden snapshots.
+
+Re-implements, in plain Python, every deterministic component behind
+
+  * ``rust/tests/golden/pareto_frontier.txt`` — the Pareto frontier of the
+    canonical 4-app mix on all three Table I device profiles, and
+  * ``rust/tests/golden/optbench_smoke.json`` — the ``oodin opt-bench
+    --smoke`` payload,
+
+namely: the zero-noise Measurer LUT (latencies are exactly the roofline
+model's closed-form predictions), the design-space enumeration with its
+constraint pre-filters, the canonical selection order, slice-local Pareto
+dominance, conditions buckets, the frontier cache accounting, and the JSON
+emission of `util::json::to_string`.
+
+Why this exists: the golden snapshots must be producible *without* running
+the Rust binary (the authoring container has no Rust toolchain), and they
+double as an N-version check — Rust and Python implementations of the same
+spec must agree byte-for-byte.
+
+Exactness argument: with measurement noise at 0 every quantity is IEEE-754
+double arithmetic (+, *, /, max, min) mirrored here in the same operation
+order; 2^load appears only at bucket centres (exact powers of two) and
+log2 is only taken of exact powers of two.  The oracle also re-runs the
+full enumerative search at every event and asserts it picks the same
+design as the frontier walk — an independent check of the exactness
+theorem the Rust property tests pin.
+
+Usage:  python3 python/golden_optbench.py [--check]
+  default: writes both golden files
+  --check: compares against the existing files, exit 1 on drift
+"""
+
+import math
+import os
+import sys
+
+# --------------------------------------------------------------------------
+# Device profiles (device/profiles.rs) — resource + calibration constants.
+# --------------------------------------------------------------------------
+
+GOV_ORDER = ["performance", "schedutil", "energy_step"]
+FREQ_SCALE = {"performance": 1.0, "schedutil": 0.94, "energy_step": 0.78}
+HEAT_FACTOR = {"performance": 1.0, "schedutil": 0.85, "energy_step": 0.58}
+ENGINE_ORDER = ["cpu", "gpu", "nnapi"]
+
+
+def engine(kind, peak, fp16, int8, bw, dispatch, parallel, heat):
+    return dict(kind=kind, peak=peak, fp16=fp16, int8=int8, bw=bw,
+                dispatch=dispatch, parallel=parallel, heat=heat)
+
+
+DEVICES = {
+    "sony_c5": dict(
+        engines=[
+            engine("cpu", 6.0, 0.85, 1.8, 2.5, 0.004, 0.80, 1.05),
+            engine("gpu", 9.0, 1.7, 0.9, 3.5, 0.080, 0.0, 0.90),
+        ],
+        n_cores=8,
+        mem_budget=4 * 1024 * 1024,
+        governors=["performance", "schedutil"],
+        max_deployable=8.0,
+    ),
+    "samsung_a71": dict(
+        engines=[
+            engine("cpu", 14.0, 0.95, 2.2, 8.0, 0.002, 0.85, 0.08),
+            engine("gpu", 22.0, 1.9, 1.3, 11.0, 0.012, 0.0, 0.25),
+            engine("nnapi", 16.0, 1.4, 4.0625, 9.0, 0.018, 0.0, 0.30),
+        ],
+        n_cores=8,
+        mem_budget=12 * 1024 * 1024,
+        governors=["energy_step", "performance", "schedutil"],
+        max_deployable=25.0,
+    ),
+    "samsung_s20_fe": dict(
+        engines=[
+            engine("cpu", 30.0, 1.0, 2.5, 16.0, 0.0015, 0.85, 0.48),
+            engine("gpu", 60.0, 1.9, 1.4, 22.0, 0.018, 0.0, 0.42),
+            engine("nnapi", 20.0, 1.6, 7.5, 14.0, 0.030, 0.0, 0.66),
+        ],
+        n_cores=8,
+        mem_budget=12 * 1024 * 1024,
+        governors=["energy_step", "performance", "schedutil"],
+        max_deployable=25.0,
+    ),
+}
+
+NPU_PENALTY = {
+    ("samsung_a71", "efficientnet_lite4"): 3.0,
+    ("samsung_a71", "deeplab_v3"): 12.0,
+    ("samsung_a71", "resnet_v2"): 1.8,
+    ("samsung_s20_fe", "efficientnet_lite4"): 1.5,
+    ("samsung_s20_fe", "deeplab_v3"): 110.0,
+    ("samsung_s20_fe", "inception_v3"): 4.0,
+    ("samsung_s20_fe", "resnet_v2"): 3.0,
+}
+
+# --------------------------------------------------------------------------
+# Model fixture (model::test_fixtures::fake_registry).
+# --------------------------------------------------------------------------
+
+FAMS = [
+    ("mobilenet_v2_100", "cls", 24, 4_000_000),
+    ("efficientnet_lite4", "cls", 32, 40_000_000),
+    ("inception_v3", "cls", 32, 90_000_000),
+    ("deeplab_v3", "seg", 48, 50_000_000),
+]
+PRECS = [("fp32", 32, 0.90), ("fp16", 16, 0.899), ("int8", 8, 0.885)]
+
+
+def variants():
+    out = {}
+    for fam, task, res, flops in FAMS:
+        for prec, bits, acc in PRECS:
+            name = f"{fam}__{prec}__b1"
+            in_elems = res * res * 3
+            out_elems = 10 if task == "cls" else res * res * 5
+            size = 400_000 * bits // 32
+            io = max(in_elems, out_elems) * 4
+            out[name] = dict(
+                name=name, family=fam, prec=prec, res=res, flops=flops,
+                size=size, acc=acc, in_elems=in_elems, out_elems=out_elems,
+                mem=size + in_elems * 4 + io * 2,
+            )
+    return out
+
+
+VARIANTS = variants()
+A_REF = {fam: 0.90 for fam, _, _, _ in FAMS}
+
+# --------------------------------------------------------------------------
+# Roofline latency (perf::latency_ms) and the zero-noise Measurer LUT.
+# --------------------------------------------------------------------------
+
+
+def thread_speedup(parallel, threads):
+    if threads <= 1:
+        return 1.0
+    return 1.0 / ((1.0 - parallel) + parallel / float(threads))
+
+
+def base_latency_ms(dev_name, spec, v, threads, governor):
+    dev = DEVICES[dev_name]
+    threads = max(min(threads, dev["n_cores"]), 1)
+    if spec["kind"] == "cpu":
+        allc = thread_speedup(spec["parallel"], dev["n_cores"])
+        base = spec["peak"] / allc * thread_speedup(spec["parallel"], threads)
+    else:
+        base = spec["peak"]
+    penalty = (NPU_PENALTY.get((dev_name, v["family"]), 1.0)
+               if spec["kind"] == "nnapi" else 1.0)
+    pm = {"fp32": 1.0, "fp16": spec["fp16"], "int8": spec["int8"]}[v["prec"]]
+    gflops = base * pm * FREQ_SCALE[governor] * 1.0 / penalty
+    compute = (float(v["flops"]) * 1.0) / (gflops * 1e6)
+    act = (v["in_elems"] + v["out_elems"]) * 4
+    memory = (float(v["size"]) + float(act)) / (spec["bw"] * 1e6)
+    roof = max(compute, memory)
+    return (spec["dispatch"] + roof) * 1.0  # contention(0) == 1.0
+
+
+def percentile_sorted(s, p):
+    if len(s) == 1:
+        return s[0]
+    rank = p / 100.0 * float(len(s) - 1)
+    lo = int(math.floor(rank))
+    hi = int(math.ceil(rank))
+    frac = rank - float(lo)
+    return s[lo] * (1.0 - frac) + s[hi] * frac
+
+
+def stats_from_identical(base, runs):
+    s = [base] * runs
+    total = 0.0
+    for x in s:
+        total += x
+    return {
+        "avg": total / float(runs),
+        "p90": percentile_sorted(s, 90.0),
+    }
+
+
+def thread_candidates(n_cores):
+    t = [1]
+    v = 2
+    while v < n_cores:
+        t.append(v)
+        v *= 2
+    if n_cores > 1:
+        t.append(n_cores)
+    return t
+
+
+def build_lut(dev_name, runs=8):
+    """(variant, engine, threads, governor) -> {avg, p90} — zero noise."""
+    dev = DEVICES[dev_name]
+    lut = {}
+    for v in VARIANTS.values():
+        for spec in dev["engines"]:
+            threads = (thread_candidates(dev["n_cores"])
+                       if spec["kind"] == "cpu" else [1])
+            for t in threads:
+                for g in dev["governors"]:
+                    base = base_latency_ms(dev_name, spec, v, t, g)
+                    lut[(v["name"], spec["kind"], t, g)] = \
+                        stats_from_identical(base, runs)
+    return lut
+
+
+# --------------------------------------------------------------------------
+# designspace: enumeration, canonical rank, dominance, buckets.
+# --------------------------------------------------------------------------
+
+RATES = [1.0, 0.5, 0.25]
+CAMERA_FPS = 30.0
+BUCKET_LOG2_STEP = 0.5
+
+
+def rust_round(x):
+    f = math.floor(x)
+    return int(f) if x - f < 0.5 else int(f) + 1
+
+
+def bucket_of(conds):
+    """conds: {engine: load} ∪ {('thermal', engine): scale} -> bucket id."""
+    steps = {}
+    for e in ENGINE_ORDER:
+        load = conds.get(e, 0.0)
+        thermal = conds.get(("thermal", e), 1.0)
+        mult = (2.0 ** max(load, 0.0)) / max(thermal, 1e-3)
+        step = rust_round(math.log2(mult) / BUCKET_LOG2_STEP)
+        if step != 0:
+            steps[e] = step
+    return steps
+
+
+def bucket_id(steps):
+    if not steps:
+        return "idle"
+    return ",".join(f"{e}{steps[e]:+d}" for e in ENGINE_ORDER if e in steps)
+
+
+def bucket_representative(steps):
+    return {e: s * BUCKET_LOG2_STEP for e, s in steps.items()}
+
+
+def spec_of(dev_name, kind):
+    for s in DEVICES[dev_name]["engines"]:
+        if s["kind"] == kind:
+            return s
+    return None
+
+
+def energy_proxy(spec, avg_ms, governor):
+    f = FREQ_SCALE[governor]
+    return avg_ms * spec["heat"] * f * f * HEAT_FACTOR[governor]
+
+
+def enumerate_space(dev_name, lut, family, objective, rep_loads):
+    """Mirror of DesignSpace::enumerate at representative conditions."""
+    dev = DEVICES[dev_name]
+    stat = objective["stat"]
+    eps = objective.get("eps")
+    out = []
+    for key in sorted(lut.keys(),
+                      key=lambda k: (k[0], ENGINE_ORDER.index(k[1]),
+                                     k[2], GOV_ORDER.index(k[3]))):
+        variant, kind, threads, governor = key
+        v = VARIANTS[variant]
+        if v["family"] != family:
+            continue
+        spec = spec_of(dev_name, kind)
+        if spec is None:
+            continue
+        entry = lut[key]
+        if not v["mem"] <= dev["mem_budget"]:
+            continue
+        if entry["avg"] > dev["max_deployable"]:
+            continue
+        if eps is not None and A_REF[family] - v["acc"] > eps + 1e-12:
+            continue
+        energy = energy_proxy(spec, entry["avg"], governor)
+        mult = 2.0 ** max(rep_loads.get(kind, 0.0), 0.0)
+        for r in RATES:
+            lat = entry[stat] * mult / 1.0
+            avg = entry["avg"] * mult / 1.0
+            fps = min(CAMERA_FPS * r, 1000.0 / avg)
+            out.append(dict(
+                variant=variant, engine=kind, threads=threads,
+                governor=governor, r=r, latency=lat, avg=avg, fps=fps,
+                mem=v["mem"], acc=v["acc"], energy=energy,
+            ))
+    return out
+
+
+def score_of(objective, c):
+    if objective["kind"] == "min_latency":
+        return -c["latency"]
+    if objective["kind"] == "max_fps":
+        return c["fps"] - 1e-6 * c["avg"]
+    raise AssertionError(objective)
+
+
+def rank_key(c):
+    return (-c["score"], c["energy"], c["latency"], -c["acc"], c["avg"],
+            -c["r"], c["mem"], c["variant"],
+            ENGINE_ORDER.index(c["engine"]), c["threads"],
+            GOV_ORDER.index(c["governor"]))
+
+
+def rank(cands, objective):
+    scored = []
+    for c in cands:
+        s = score_of(objective, c)
+        if s is None:
+            continue
+        c = dict(c)
+        c["score"] = s
+        scored.append(c)
+    return sorted(scored, key=rank_key)
+
+
+def dominates(p, q):
+    if (p["engine"] != q["engine"] or p["r"] != q["r"]
+            or p["threads"] != q["threads"]):
+        return False
+    quality_no_worse = (p["acc"] > q["acc"]
+                        or (p["acc"] == q["acc"] and p["mem"] <= q["mem"]))
+    no_worse = (p["latency"] <= q["latency"] and p["avg"] <= q["avg"]
+                and p["energy"] <= q["energy"] and quality_no_worse)
+    strict = (p["latency"] < q["latency"] or p["avg"] < q["avg"]
+              or p["energy"] < q["energy"] or p["acc"] > q["acc"]
+              or (p["acc"] == q["acc"] and p["mem"] < q["mem"]))
+    return no_worse and strict
+
+
+def build_frontier(dev_name, lut, family, objective, steps):
+    rep = bucket_representative(steps)
+    cands = enumerate_space(dev_name, lut, family, objective, rep)
+    survivors = [q for q in cands
+                 if not any(dominates(p, q) for p in cands)]
+    return rank(survivors, objective), len(cands), cands
+
+
+# --------------------------------------------------------------------------
+# The canonical mix + event sequence (experiments/optbench.rs).
+# --------------------------------------------------------------------------
+
+MIX = [
+    ("ai_camera", "mobilenet_v2_100",
+     dict(kind="min_latency", stat="avg", eps=0.05,
+          label="min_latency(avg,eps=0.05)")),
+    ("video_conference", "efficientnet_lite4",
+     dict(kind="max_fps", stat="avg", eps=0.05, label="max_fps(eps=0.05)")),
+    ("gallery_tagger", "inception_v3",
+     dict(kind="min_latency", stat="avg", eps=0.05,
+          label="min_latency(avg,eps=0.05)")),
+    ("scene_segmenter", "deeplab_v3",
+     dict(kind="min_latency", stat="p90", eps=0.05,
+          label="min_latency(p90,eps=0.05)")),
+]
+
+EVENTS = [
+    ("idle", {}),
+    ("gpu_load", {"gpu": 1.0}),
+    ("gpu_load_repeat", {"gpu": 1.0}),
+    ("cpu_load", {"cpu": 2.0}),
+    ("npu_throttle", {("thermal", "nnapi"): 0.5}),
+    ("idle_return", {}),
+    ("mixed", {"gpu": 1.0, ("thermal", "nnapi"): 0.5}),
+    ("cpu_load_repeat", {"cpu": 2.0}),
+]
+
+SIM_NS_PER_EVAL = 150
+
+
+def fmt_f64(x):
+    """Rust `{}` Display for the f64 values we print (r, eps)."""
+    if x == int(x):
+        return str(int(x))
+    return repr(x)
+
+
+def jnum(n):
+    f = float(n)
+    if f == int(f) and abs(f) < 9e15:
+        return str(int(f))
+    return repr(f)
+
+
+def jobj(fields):
+    return "{" + ",".join(f'"{k}":{v}' for k, v in fields) + "}"
+
+
+def r3(x):
+    return rust_round(x * 1000.0) / 1000.0
+
+
+def design_id(c):
+    return (f"{c['variant']}|{c['engine']}|{c['threads']}|{c['governor']}"
+            f"|r={fmt_f64(c['r'])}")
+
+
+# --------------------------------------------------------------------------
+# Golden 1: pareto_frontier.txt
+# --------------------------------------------------------------------------
+
+
+def render_frontier_snapshot():
+    out = []
+    for dev_name in ["sony_c5", "samsung_a71", "samsung_s20_fe"]:
+        lut = build_lut(dev_name)
+        for app, family, obj in MIX:
+            points, space_size, _ = build_frontier(
+                dev_name, lut, family, obj, {})
+            out.append(f"== {dev_name} / {app} ({family}, {obj['label']}) "
+                       f"space={space_size} frontier={len(points)}")
+            for p in points:
+                out.append(
+                    f"{p['variant']}|{p['engine']}|{p['threads']}"
+                    f"|{p['governor']}|r={fmt_f64(p['r'])}"
+                    f" T={p['latency']:.4f}ms acc={p['acc']:.4f}"
+                    f" E={p['energy']:.5f} mem={p['mem']}")
+    return "\n".join(out) + "\n"
+
+
+# --------------------------------------------------------------------------
+# Golden 2: optbench_smoke.json
+# --------------------------------------------------------------------------
+
+
+def run_optbench_smoke():
+    dev_name = "samsung_a71"
+    lut = build_lut(dev_name)
+    rows = []
+    for app, family, obj in MIX:
+        cache = {}
+        builds = hits = build_evals = 0
+        full_total = frontier_total = 0
+        space_size = frontier_size_idle = 0
+        events = []
+        for name, conds in EVENTS:
+            steps = bucket_of(conds)
+            bid = bucket_id(steps)
+            rep = bucket_representative(steps)
+            full = rank(enumerate_space(dev_name, lut, family, obj, rep),
+                        obj)
+            full_evals = len(full)
+            if bid in cache:
+                hits += 1
+                built = False
+                points = cache[bid]
+            else:
+                points, sz, _ = build_frontier(dev_name, lut, family, obj,
+                                               steps)
+                assert sz == full_evals
+                cache[bid] = points
+                builds += 1
+                build_evals += sz
+                built = True
+            frontier_evals = len(points)
+            assert frontier_evals < full_evals, (app, name)
+            pick = points[0]
+            assert design_id(pick) == design_id(full[0]), \
+                f"{app}@{name}: frontier {design_id(pick)} != " \
+                f"full {design_id(full[0])}"
+            space_size = full_evals
+            if not steps:
+                frontier_size_idle = frontier_evals
+            full_total += full_evals
+            frontier_total += frontier_evals
+            events.append(jobj([
+                ("name", f'"{name}"'),
+                ("bucket", f'"{bid}"'),
+                ("full_evals", jnum(full_evals)),
+                ("frontier_evals", jnum(frontier_evals)),
+                ("built", "true" if built else "false"),
+                ("match", "true"),
+                ("pick", f'"{design_id(pick)}"'),
+                ("latency_ms", jnum(r3(pick["latency"]))),
+            ]))
+        cost = lambda n: jnum(r3(n * float(SIM_NS_PER_EVAL) / 1000.0))  # noqa: E731
+        rows.append(jobj([
+            ("device", f'"{dev_name}"'),
+            ("app", f'"{app}"'),
+            ("family", f'"{family}"'),
+            ("objective", f'"{obj["label"]}"'),
+            ("space_size", jnum(space_size)),
+            ("frontier_size_idle", jnum(frontier_size_idle)),
+            ("events", "[" + ",".join(events) + "]"),
+            ("full_evals_total", jnum(full_total)),
+            ("frontier_evals_total", jnum(frontier_total)),
+            ("frontier_build_evals", jnum(build_evals)),
+            ("builds", jnum(builds)),
+            ("hits", jnum(hits)),
+            ("full_cost_us", cost(float(full_total))),
+            ("frontier_walk_cost_us", cost(float(frontier_total))),
+            ("frontier_cost_us_amortized",
+             cost(float(frontier_total + build_evals))),
+            ("walk_speedup",
+             jnum(r3(float(full_total) / float(frontier_total)))),
+        ]))
+    inner = jobj([
+        ("lut_runs", jnum(8)),
+        ("noise_sigma", jnum(0.0)),
+        ("sim_ns_per_eval", jnum(SIM_NS_PER_EVAL)),
+        ("rows", "[" + ",".join(rows) + "]"),
+    ])
+    return jobj([("opt_bench", inner)]) + "\n"
+
+
+def main():
+    golden_dir = os.path.normpath(os.path.join(
+        os.path.dirname(__file__), "..", "rust", "tests", "golden"))
+    outputs = {
+        os.path.join(golden_dir, "pareto_frontier.txt"):
+            render_frontier_snapshot(),
+        os.path.join(golden_dir, "optbench_smoke.json"):
+            run_optbench_smoke(),
+    }
+    rc = 0
+    for path, content in outputs.items():
+        if "--check" in sys.argv:
+            want = open(path).read()
+            if want != content:
+                print(f"DRIFT: {path} does not match oracle",
+                      file=sys.stderr)
+                rc = 1
+            else:
+                print(f"{path} matches oracle", file=sys.stderr)
+        else:
+            with open(path, "w") as f:
+                f.write(content)
+            print(f"wrote {path} ({len(content)} bytes)", file=sys.stderr)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,428 @@
+//! Cached Pareto frontiers: precompute the multi-objective front once per
+//! (task, conditions-bucket), then make every adaptation decision an
+//! O(frontier) walk (CARIn's fix for OODIn's per-event full re-search).
+//!
+//! **Dominance.**  Candidate p dominates q when both spend the *same
+//! resources* — equal engine, recognition rate r and thread count — and p
+//! is no worse on every objective dimension, strictly better on at least
+//! one.  The objective dimensions are the targeted latency statistic, the
+//! average latency (it drives every fps term, so it must be protected even
+//! when the objective targets a tail statistic), energy, and *quality* —
+//! accuracy ordered lexicographically with memory (strictly higher
+//! accuracy wins; at exactly equal accuracy, not-larger memory wins).
+//! Quality is lexicographic rather than two independent dimensions on
+//! purpose: an ordered memory dimension would protect every
+//! lower-precision variant from pruning (smaller weights), gutting the
+//! frontier, while the lexicographic form prunes them through their
+//! accuracy gap yet still keeps a smaller-memory variant whose accuracy
+//! exactly ties.  Known trade-off: a variant that is strictly less
+//! accurate *and* slower *and* hotter survives only through its accuracy
+//! gap being real — if such a variant's sole advantage is memory, it is
+//! pruned, so under extreme memory pressure the joint packer can reject
+//! an app the raw (unpruned) ranking could still have degraded onto it.
+//! The precision ladders that carry the practical memory fallbacks all
+//! have genuine accuracy gaps and therefore survive.
+//!
+//! The resource triple is an equality *slice* rather than a set of
+//! ordered dimensions because its "better" direction is
+//! consumer-dependent: the GPU/NNAPI engines are exclusively owned in a
+//! joint assignment, higher r means more fps for a solo app but more
+//! engine time charged against the scheduler's utilisation budget, and
+//! more threads mean lower latency but a bigger bite of the shared
+//! CPU-core budget.  Slicing keeps every fallback ladder (alternative
+//! engines, lower r, fewer threads, smaller variants) that engine
+//! arbitration and admission control rely on, so one frontier serves both
+//! the single-app selectors and the joint packer.  Slice-local dominance
+//! also makes the *membership* of the frontier conditions-invariant:
+//! external load and throttling scale every candidate on an engine by the
+//! same multiplier, which can never flip a within-engine dominance — only
+//! the scored ranking changes across buckets.
+//!
+//! **Exactness.**  The selection order ([`super::cmp_ranked`]) scores with
+//! formulas that are monotone along every dominance dimension at fixed
+//! (engine, r, threads), and its tie chain walks those same dimensions in
+//! the dominating direction before any neutral tie-breaker.  Hence the
+//! full-search arg-best is never dominated — it is always *on* the
+//! frontier — and walking the frontier with the same order returns exactly
+//! the full-search result (property-tested per objective, including
+//! tail-statistic targets, in `tests/designspace_props.rs`).
+//!
+//! **Conditions buckets.**  Adjusted latency scales each engine by
+//! `2^load / thermal`; the bucket quantises that per-engine multiplier in
+//! half-doubling steps so one cached frontier serves every condition
+//! vector in its bucket.  Both the frontier build and the subsequent walk
+//! evaluate at the bucket's representative conditions, so the cached
+//! selection equals a full search at those representative conditions.
+//!
+//! **Invalidation.**  The cache fingerprints the LUT and the registry;
+//! when either changes (re-measurement, model-zoo update) every cached
+//! frontier is dropped and rebuilt on demand.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::device::EngineKind;
+use crate::manager::Conditions;
+use crate::measurements::Lut;
+use crate::model::Registry;
+use crate::optimizer::{Objective, SearchSpace};
+use crate::perf;
+
+use super::{cmp_ranked, rank, Candidate, DesignSpace};
+
+/// Log2 width of one conditions-bucket step (half-doubling granularity:
+/// multipliers within ~19% land in the same bucket).
+pub const BUCKET_LOG2_STEP: f64 = 0.5;
+
+/// A quantised per-engine condition vector: the cache key dimension that
+/// lets one frontier serve a whole neighbourhood of condition vectors.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ConditionsBucket {
+    /// Quantised steps of log2(latency multiplier) per engine; engines at
+    /// nominal conditions (step 0) are omitted.
+    steps: BTreeMap<EngineKind, i32>,
+}
+
+impl ConditionsBucket {
+    /// The bucket containing `conds`: per engine, the latency multiplier
+    /// `2^load / thermal` quantised to [`BUCKET_LOG2_STEP`]-wide steps.
+    pub fn of(conds: &Conditions) -> Self {
+        let mut steps = BTreeMap::new();
+        for e in EngineKind::ALL {
+            let mult = perf::contention(conds.load(e))
+                / conds.thermal_scale(e).max(1e-3);
+            let step = (mult.log2() / BUCKET_LOG2_STEP).round() as i32;
+            if step != 0 {
+                steps.insert(e, step);
+            }
+        }
+        ConditionsBucket { steps }
+    }
+
+    /// The bucket's representative conditions: each engine's multiplier is
+    /// re-expressed as a pure load factor (`2^load`, cool thermal state) at
+    /// the bucket's centre.
+    pub fn representative(&self) -> Conditions {
+        let mut conds = Conditions::idle();
+        for (&e, &step) in &self.steps {
+            conds.loads.insert(e, step as f64 * BUCKET_LOG2_STEP);
+        }
+        conds
+    }
+
+    /// True at nominal conditions on every engine.
+    pub fn is_idle(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Canonical id, e.g. `cpu+2,nnapi+3` (`idle` when empty) — used in
+    /// cache keys and experiment reports.
+    pub fn id(&self) -> String {
+        if self.steps.is_empty() {
+            return "idle".to_string();
+        }
+        self.steps
+            .iter()
+            .map(|(e, s)| format!("{}{:+}", e.name(), s))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// True when `p` Pareto-dominates `q`: equal resource slice (engine,
+/// recognition rate, thread count), no worse on every objective dimension
+/// — targeted-statistic latency, average latency, energy, and quality
+/// (accuracy, then memory at exactly equal accuracy) — strictly better on
+/// at least one.
+pub fn dominates(p: &Candidate, q: &Candidate) -> bool {
+    if p.design.hw.engine != q.design.hw.engine
+        || p.design.hw.recognition_rate != q.design.hw.recognition_rate
+        || p.design.hw.threads != q.design.hw.threads
+    {
+        return false;
+    }
+    let quality_no_worse = p.accuracy > q.accuracy
+        || (p.accuracy == q.accuracy && p.mem_bytes <= q.mem_bytes);
+    let no_worse = p.latency_ms <= q.latency_ms
+        && p.avg_latency_ms <= q.avg_latency_ms
+        && p.energy_mj <= q.energy_mj
+        && quality_no_worse;
+    let strictly_better = p.latency_ms < q.latency_ms
+        || p.avg_latency_ms < q.avg_latency_ms
+        || p.energy_mj < q.energy_mj
+        || p.accuracy > q.accuracy
+        || (p.accuracy == q.accuracy && p.mem_bytes < q.mem_bytes);
+    no_worse && strictly_better
+}
+
+/// A dominance-pruned design front for one (objective, search space) at
+/// one conditions bucket, stored in canonical selection order.
+#[derive(Debug, Clone)]
+pub struct ParetoFrontier {
+    /// The bucket this frontier was built at.
+    pub bucket: ConditionsBucket,
+    /// Non-dominated, objective-feasible candidates, best-first under
+    /// [`cmp_ranked`] (scored at the bucket's representative conditions).
+    points: Vec<Candidate>,
+    /// Enumerated-space size after constraint pre-filtering — the
+    /// per-event cost a full search would pay.
+    pub space_size: usize,
+}
+
+impl ParetoFrontier {
+    /// Enumerate the space at the bucket's representative conditions,
+    /// prune dominated candidates, and rank the survivors.
+    pub fn build(space: &DesignSpace, objective: Objective,
+                 sspace: &SearchSpace, bucket: &ConditionsBucket) -> Self {
+        let conds = bucket.representative();
+        let cands = space.enumerate(objective, sspace, &conds);
+        let space_size = cands.len();
+        let survivors: Vec<Candidate> = cands
+            .iter()
+            .filter(|q| !cands.iter().any(|p| dominates(p, q)))
+            .cloned()
+            .collect();
+        ParetoFrontier {
+            bucket: bucket.clone(),
+            points: rank(survivors, objective),
+            space_size,
+        }
+    }
+
+    /// The frontier points, best-first under the canonical selection
+    /// order.
+    pub fn points(&self) -> &[Candidate] {
+        &self.points
+    }
+
+    /// Number of frontier points — the per-event cost of a frontier walk.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True when no feasible design survives (e.g. an unknown family or an
+    /// unreachable latency target).
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The frontier-walk selection: the best feasible candidate, already
+    /// front-of-list by construction.
+    pub fn best(&self) -> Option<&Candidate> {
+        self.points.first()
+    }
+}
+
+/// Cache effectiveness counters, reported by `oodin opt-bench`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// Frontier builds (cache misses).
+    pub builds: u64,
+    /// Cache hits (adaptation events served without a build).
+    pub hits: u64,
+    /// Whole-cache invalidations from a LUT / registry change.
+    pub invalidations: u64,
+    /// Candidates enumerated across all builds (the amortised build cost).
+    pub candidates_enumerated: u64,
+}
+
+/// The frontier cache: one [`ParetoFrontier`] per (task, bucket), keyed by
+/// a canonical task tag, fingerprint-invalidated when the LUT or registry
+/// changes.
+#[derive(Debug, Default)]
+pub struct FrontierCache {
+    fingerprint: u64,
+    map: BTreeMap<(String, String), Arc<ParetoFrontier>>,
+    /// Effectiveness counters since construction.
+    pub stats: CacheStats,
+}
+
+/// Canonical cache tag of one search task (objective + space restriction +
+/// camera rate — the last caps every fps score, so spaces differing only
+/// in camera rate must not share frontiers).  `Objective` and
+/// `SearchSpace` carry floats, so a formatted tag stands in for
+/// `Ord`/`Hash` keys.
+pub fn task_tag(objective: Objective, space: &SearchSpace, camera_fps: f64)
+                -> String {
+    format!(
+        "{objective:?}|fam={:?}|eng={:?}|prec={:?}|r={:?}|cam={camera_fps}",
+        space.family, space.engines, space.precisions, space.recognition_rate
+    )
+}
+
+/// FNV-1a fingerprint of the (LUT, registry) pair driving every frontier;
+/// any drift in either invalidates the whole cache.  Allocation-free and
+/// a plain linear read (~ns per entry), so recomputing it per lookup
+/// stays far below the enumeration + scoring + sorting cost the cache
+/// exists to avoid.
+pub fn fingerprint(lut: &Lut, registry: &Registry) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    eat(lut.device.as_bytes());
+    for (k, e) in &lut.entries {
+        eat(k.variant.as_bytes());
+        eat(&[k.engine as u8, k.governor as u8]);
+        eat(&(k.threads as u64).to_le_bytes());
+        eat(&e.latency.avg.to_bits().to_le_bytes());
+        eat(&e.latency.p90.to_bits().to_le_bytes());
+        eat(&e.latency.p99.to_bits().to_le_bytes());
+        eat(&e.accuracy.to_bits().to_le_bytes());
+        eat(&e.mem_bytes.to_le_bytes());
+    }
+    for v in registry.variants() {
+        eat(v.name.as_bytes());
+        eat(&v.accuracy.to_bits().to_le_bytes());
+        eat(&v.size_bytes.to_le_bytes());
+    }
+    h
+}
+
+impl FrontierCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        FrontierCache::default()
+    }
+
+    /// The cached frontier for (objective, space restriction, camera rate,
+    /// bucket), building it on first use and whenever the LUT or registry
+    /// changed since the last call.  Every lookup re-runs the
+    /// [`fingerprint`] guard — an O(LUT + registry) branch-free linear
+    /// read (no allocation), orders of magnitude cheaper than the
+    /// enumeration + scoring + sort a miss would pay, but not free; the
+    /// `opt-bench` cost model counts scored candidates only and excludes
+    /// this guard.
+    pub fn frontier(&mut self, space: &DesignSpace, objective: Objective,
+                    sspace: &SearchSpace, bucket: &ConditionsBucket)
+                    -> Arc<ParetoFrontier> {
+        let fp = fingerprint(space.lut, space.registry);
+        if fp != self.fingerprint {
+            if self.fingerprint != 0 && !self.map.is_empty() {
+                self.stats.invalidations += 1;
+            }
+            self.map.clear();
+            self.fingerprint = fp;
+        }
+        let key = (task_tag(objective, sspace, space.camera_fps), bucket.id());
+        if let Some(f) = self.map.get(&key) {
+            self.stats.hits += 1;
+            return Arc::clone(f);
+        }
+        let f = Arc::new(ParetoFrontier::build(space, objective, sspace, bucket));
+        self.stats.builds += 1;
+        self.stats.candidates_enumerated += f.space_size as u64;
+        self.map.insert(key, Arc::clone(&f));
+        f
+    }
+
+    /// Cached frontiers currently resident.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True before the first build (or right after an invalidation).
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles::samsung_a71;
+    use crate::manager::Conditions;
+    use crate::measurements::Measurer;
+    use crate::model::test_fixtures::fake_registry;
+    use crate::util::stats::Percentile;
+
+    fn obj() -> Objective {
+        Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 }
+    }
+
+    #[test]
+    fn bucket_quantises_and_represents() {
+        let mut conds = Conditions::idle();
+        conds.loads.insert(EngineKind::Gpu, 1.0);
+        let b = ConditionsBucket::of(&conds);
+        assert!(!b.is_idle());
+        assert_eq!(b.id(), "gpu+2");
+        let rep = b.representative();
+        assert!((rep.load(EngineKind::Gpu) - 1.0).abs() < 1e-12);
+        assert_eq!(ConditionsBucket::of(&rep), b, "representative re-buckets");
+        assert!(ConditionsBucket::of(&Conditions::idle()).is_idle());
+    }
+
+    #[test]
+    fn thermal_throttle_lands_in_load_bucket() {
+        // thermal 0.5 halves the clock: multiplier 2 == load 1.0.
+        let mut hot = Conditions::idle();
+        hot.thermal.insert(EngineKind::Npu, 0.5);
+        let mut loaded = Conditions::idle();
+        loaded.loads.insert(EngineKind::Npu, 1.0);
+        assert_eq!(ConditionsBucket::of(&hot), ConditionsBucket::of(&loaded));
+    }
+
+    #[test]
+    fn frontier_smaller_than_space_and_selects_best() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(20, 2).measure_all().unwrap();
+        let ds = DesignSpace::new(&dev, &reg, &lut);
+        let space = SearchSpace::family("mobilenet_v2_100");
+        let b = ConditionsBucket::of(&Conditions::idle());
+        let f = ParetoFrontier::build(&ds, obj(), &space, &b);
+        assert!(!f.is_empty());
+        assert!(f.len() < f.space_size,
+                "frontier {} !< space {}", f.len(), f.space_size);
+        let full = rank(ds.enumerate(obj(), &space, &Conditions::idle()), obj());
+        assert_eq!(f.best().unwrap().design, full[0].design);
+    }
+
+    #[test]
+    fn camera_rate_gets_its_own_frontier() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(10, 1).measure_all().unwrap();
+        let space = SearchSpace::family("mobilenet_v2_100");
+        let b = ConditionsBucket::of(&Conditions::idle());
+        let mut cache = FrontierCache::new();
+        let obj = Objective::MaxFps { epsilon: 0.05 };
+        let ds30 = DesignSpace::new(&dev, &reg, &lut);
+        let ds60 = DesignSpace::new(&dev, &reg, &lut).with_camera_fps(60.0);
+        let f30 = cache.frontier(&ds30, obj, &space, &b);
+        let f60 = cache.frontier(&ds60, obj, &space, &b);
+        assert_eq!(cache.stats.builds, 2, "camera rates must not share");
+        assert!(f30.best().unwrap().fps <= 30.0 + 1e-9);
+        assert!(f60.best().unwrap().fps > 30.0);
+    }
+
+    #[test]
+    fn cache_hits_and_fingerprint_invalidation() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(10, 1).measure_all().unwrap();
+        let space = SearchSpace::family("mobilenet_v2_100");
+        let b = ConditionsBucket::of(&Conditions::idle());
+        let mut cache = FrontierCache::new();
+        {
+            let ds = DesignSpace::new(&dev, &reg, &lut);
+            cache.frontier(&ds, obj(), &space, &b);
+            cache.frontier(&ds, obj(), &space, &b);
+        }
+        assert_eq!(cache.stats.builds, 1);
+        assert_eq!(cache.stats.hits, 1);
+        // Perturb one LUT entry: the whole cache must invalidate.
+        let mut lut2 = lut.clone();
+        let k = lut2.entries.keys().next().unwrap().clone();
+        lut2.entries.get_mut(&k).unwrap().accuracy += 0.001;
+        let ds2 = DesignSpace::new(&dev, &reg, &lut2);
+        cache.frontier(&ds2, obj(), &space, &b);
+        assert_eq!(cache.stats.invalidations, 1);
+        assert_eq!(cache.stats.builds, 2);
+        assert_eq!(cache.len(), 1, "stale frontiers dropped");
+    }
+}

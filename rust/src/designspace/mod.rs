@@ -1,0 +1,349 @@
+//! The unified design-space layer (CARIn-style, Panopoulos et al. 2024):
+//! one home for every σ-space search in the system.
+//!
+//! Three layers used to re-enumerate the full design space with their own
+//! near-copies of the scoring loop on every adaptation event —
+//! [`crate::optimizer`] (offline System Optimisation),
+//! [`crate::scheduler::joint`] (the multi-app σ-vector search) and
+//! [`crate::manager`] (`best_under` re-search).  This module factors the
+//! common machinery out:
+//!
+//! * [`DesignSpace`] — lazily enumerates [`Candidate`]s from
+//!   `Registry × DeviceProfile × Lut` with constraint *pre-filtering*
+//!   (memory budget, engine availability, deployable-latency bound, the
+//!   objective's ε-accuracy constraint), scoring latencies through the one
+//!   canonical scorer [`crate::manager::adjusted_latency`].
+//! * [`rank`] — the shared selection order: objective score first, then a
+//!   canonical tie chain (energy ↑, latency ↑, accuracy ↓, recognition
+//!   rate ↓, memory ↑, LUT key).  Every search layer selects with this
+//!   exact total order, which is what makes frontier-walk selection
+//!   *provably* equal to full-search selection (see [`frontier`]).
+//! * [`frontier`] — Pareto frontiers over (latency, accuracy, energy),
+//!   sliced by the resource dimensions (engine, recognition rate,
+//!   threads), cached per (objective + space, conditions-bucket) and
+//!   invalidated when the LUT or registry changes, so runtime
+//!   re-adaptation walks O(frontier) points instead of re-scoring the
+//!   O(space) enumeration per event.
+
+pub mod frontier;
+
+pub use frontier::{dominates, CacheStats, ConditionsBucket, FrontierCache,
+                   ParetoFrontier};
+
+use std::cmp::Ordering;
+
+use crate::device::DeviceProfile;
+use crate::manager::{adjusted_latency, Conditions};
+use crate::measurements::Lut;
+use crate::model::{Precision, Registry};
+use crate::optimizer::{Design, HwConfig, Objective, SearchSpace, RECOGNITION_RATES};
+use crate::perf;
+use crate::util::stats::Percentile;
+
+/// One evaluated design σ with the metric vector every search layer reads.
+/// `latency_ms`/`avg_latency_ms`/`fps` are condition-adjusted (through
+/// [`crate::manager::adjusted_latency`]); `energy_mj` and `mem_bytes` are
+/// static per-design properties.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// The design these metrics describe.
+    pub design: Design,
+    /// T: latency statistic targeted by the objective (ms), adjusted for
+    /// the enumeration conditions.
+    pub latency_ms: f64,
+    /// Condition-adjusted average latency (drives fps regardless of the
+    /// targeted statistic).
+    pub avg_latency_ms: f64,
+    /// fps: effective processed frames/s at recognition rate r.
+    pub fps: f64,
+    /// mem: working-set bytes.
+    pub mem_bytes: u64,
+    /// a: accuracy of the variant.
+    pub accuracy: f64,
+    /// First-order per-inference energy estimate at idle conditions
+    /// ([`perf::energy_proxy_mj`]); a static design property used as a
+    /// Pareto dimension and as the leading tie-breaker.
+    pub energy_mj: f64,
+    /// Objective score (higher is better, across all objectives); 0 until
+    /// [`rank`] assigns it.
+    pub score: f64,
+}
+
+/// Normalisation constants for the weighted-sum objective (Eq. 5): the
+/// maxima observed over the candidate set.  Dominance preserves both
+/// maxima, so norms computed over a Pareto frontier equal norms computed
+/// over the full enumerated space — weighted-sum selection from the
+/// frontier stays exact.
+#[derive(Debug, Clone, Copy)]
+pub struct Norms {
+    /// Max effective fps over the candidates.
+    pub fps_max: f64,
+    /// Max accuracy over the candidates.
+    pub a_max: f64,
+}
+
+impl Norms {
+    /// The maxima over a candidate set.
+    pub fn of(cands: &[Candidate]) -> Self {
+        Norms {
+            fps_max: cands.iter().map(|c| c.fps).fold(f64::MIN, f64::max),
+            a_max: cands.iter().map(|c| c.accuracy).fold(f64::MIN, f64::max),
+        }
+    }
+}
+
+/// The unified design space: every valid σ = <m_ref, t, hw> the measured
+/// LUT supports on this device.
+pub struct DesignSpace<'a> {
+    /// Target device.
+    pub device: &'a DeviceProfile,
+    /// Model space M.
+    pub registry: &'a Registry,
+    /// Device measurements driving every score.
+    pub lut: &'a Lut,
+    /// Camera/source frame rate bounding effective fps.
+    pub camera_fps: f64,
+}
+
+impl<'a> DesignSpace<'a> {
+    /// A design space over (device, registry, LUT) at the default 30 fps
+    /// camera rate (matching [`crate::optimizer::Optimizer::new`]).
+    pub fn new(device: &'a DeviceProfile, registry: &'a Registry, lut: &'a Lut)
+               -> Self {
+        DesignSpace { device, registry, lut, camera_fps: 30.0 }
+    }
+
+    /// Override the camera/source frame rate.
+    pub fn with_camera_fps(mut self, fps: f64) -> Self {
+        self.camera_fps = fps;
+        self
+    }
+
+    /// Reference accuracy a_ref for a family: its FP32 (identity-
+    /// transformation) variant.
+    pub fn reference_accuracy(&self, family: &str) -> Option<f64> {
+        self.registry
+            .find(family, Precision::Fp32, 1)
+            .map(|v| v.accuracy)
+    }
+
+    /// Enumerate every candidate admitted by the constraint pre-filter:
+    /// the restriction `space`, the device memory budget, engine
+    /// availability, the sustained-deployability latency bound (paper
+    /// Fig 4) and the objective's ε-accuracy constraint where it carries
+    /// one.  Latencies are condition-adjusted through the single scorer
+    /// [`adjusted_latency`]; `Conditions::idle()` reproduces the offline
+    /// enumeration exactly.
+    pub fn enumerate(&self, objective: Objective, space: &SearchSpace,
+                     conds: &Conditions) -> Vec<Candidate> {
+        let stat = objective.stat();
+        let eps = match objective {
+            Objective::MaxFps { epsilon } => Some(epsilon),
+            Objective::MinLatency { epsilon, .. } => Some(epsilon),
+            _ => None,
+        };
+        let fixed_rate = [space.recognition_rate.unwrap_or(0.0)];
+        let rates: &[f64] = if space.recognition_rate.is_some() {
+            &fixed_rate
+        } else {
+            &RECOGNITION_RATES
+        };
+        let mut out = Vec::new();
+        for (key, entry) in &self.lut.entries {
+            if !space.admits(self.registry, key) {
+                continue;
+            }
+            // Engine availability: a LUT loaded from disk may carry
+            // entries for engines this device does not expose.
+            let Some(spec) = self.device.engine(key.engine) else {
+                continue;
+            };
+            let v = self.registry.get(&key.variant).unwrap();
+            // Deployability (paper Fig 4: overheating / >=5 s lag models
+            // are not deployable): memory budget + sustained-latency bound.
+            if !perf::fits_memory(self.device, v) {
+                continue;
+            }
+            if entry.latency.avg > self.device.max_deployable_latency_ms {
+                continue;
+            }
+            // ε-constraint on accuracy where the objective carries one.
+            let a_ref = self.reference_accuracy(&v.family).unwrap_or(v.accuracy);
+            if let Some(eps) = eps {
+                if a_ref - entry.accuracy > eps + 1e-12 {
+                    continue;
+                }
+            }
+            let energy_mj =
+                perf::energy_proxy_mj(spec, entry.latency.avg, key.governor);
+            for &r in rates {
+                let design = Design {
+                    variant: key.variant.clone(),
+                    hw: HwConfig {
+                        engine: key.engine,
+                        threads: key.threads,
+                        governor: key.governor,
+                        recognition_rate: r,
+                    },
+                };
+                let Some(latency_ms) =
+                    adjusted_latency(self.lut, &design, stat, conds)
+                else {
+                    continue;
+                };
+                let Some(avg_latency_ms) =
+                    adjusted_latency(self.lut, &design, Percentile::Avg, conds)
+                else {
+                    continue;
+                };
+                let fps = (self.camera_fps * r).min(1000.0 / avg_latency_ms);
+                out.push(Candidate {
+                    design,
+                    latency_ms,
+                    avg_latency_ms,
+                    fps,
+                    mem_bytes: entry.mem_bytes,
+                    accuracy: entry.accuracy,
+                    energy_mj,
+                    score: 0.0,
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Objective score of one candidate (higher is better); `None` when the
+/// candidate fails the objective's own feasibility constraint (the
+/// target-latency budget).  The formulas are the paper's Eq. 3–5 scores,
+/// unchanged — this function exists so every layer scores identically.
+pub fn objective_score(objective: Objective, c: &Candidate, norms: &Norms)
+                       -> Option<f64> {
+    match objective {
+        Objective::MaxFps { .. } => {
+            // fps saturates at the camera rate; break ties toward the
+            // lowest-latency (headroom) design.
+            Some(c.fps - 1e-6 * c.avg_latency_ms)
+        }
+        Objective::TargetLatency { t_target_ms, .. } => {
+            if c.latency_ms > t_target_ms {
+                return None;
+            }
+            // Accuracy first; fps breaks ties.
+            Some(c.accuracy + 1e-6 * c.fps)
+        }
+        Objective::MaxAccMaxFps { w_fps } => {
+            Some(c.accuracy / norms.a_max + w_fps * c.fps / norms.fps_max)
+        }
+        Objective::MinLatency { .. } => Some(-c.latency_ms),
+    }
+}
+
+/// The canonical selection order: score (descending) first, then the
+/// deterministic tie chain — energy ↑, targeted latency ↑, accuracy ↓,
+/// average latency ↑, recognition rate ↓, memory ↑, then the LUT key for
+/// total stability.  The chain walks every Pareto-dominance dimension
+/// (energy, latency, accuracy, average latency, then memory within equal
+/// accuracy) in the dominating direction before any neutral tie-breaker,
+/// so a dominated candidate can never be selected ahead of its dominator —
+/// the invariant the frontier's exactness proof rests on.
+pub fn cmp_ranked(a: &Candidate, b: &Candidate) -> Ordering {
+    b.score
+        .partial_cmp(&a.score)
+        .unwrap()
+        .then_with(|| a.energy_mj.partial_cmp(&b.energy_mj).unwrap())
+        .then_with(|| a.latency_ms.partial_cmp(&b.latency_ms).unwrap())
+        .then_with(|| b.accuracy.partial_cmp(&a.accuracy).unwrap())
+        .then_with(|| a.avg_latency_ms.partial_cmp(&b.avg_latency_ms).unwrap())
+        .then_with(|| {
+            b.design
+                .hw
+                .recognition_rate
+                .partial_cmp(&a.design.hw.recognition_rate)
+                .unwrap()
+        })
+        .then_with(|| a.mem_bytes.cmp(&b.mem_bytes))
+        .then_with(|| a.design.lut_key().cmp(&b.design.lut_key()))
+}
+
+/// Score and sort candidates best-first under the canonical selection
+/// order, dropping candidates infeasible for the objective.  This is the
+/// selection semantics of `optimizer::search`, `manager::best_under`, the
+/// joint search's per-app rankings and the frontier walk — one
+/// implementation for all four.
+pub fn rank(cands: Vec<Candidate>, objective: Objective) -> Vec<Candidate> {
+    let norms = Norms::of(&cands);
+    let mut scored: Vec<Candidate> = cands
+        .into_iter()
+        .filter_map(|mut c| {
+            c.score = objective_score(objective, &c, &norms)?;
+            Some(c)
+        })
+        .collect();
+    scored.sort_by(cmp_ranked);
+    scored
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles::samsung_a71;
+    use crate::measurements::Measurer;
+    use crate::model::test_fixtures::fake_registry;
+    use crate::optimizer::{Objective, Optimizer, SearchSpace};
+    use crate::util::stats::Percentile;
+
+    #[test]
+    fn idle_enumeration_matches_optimizer_search() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(20, 2).measure_all().unwrap();
+        let obj = Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 };
+        let space = SearchSpace::family("mobilenet_v2_100");
+        let ds = DesignSpace::new(&dev, &reg, &lut);
+        let ranked = rank(ds.enumerate(obj, &space, &Conditions::idle()), obj);
+        let opt = Optimizer::new(&dev, &reg, &lut);
+        let searched = opt.search(obj, &space).unwrap();
+        assert_eq!(ranked.len(), searched.len());
+        for (a, b) in ranked.iter().zip(&searched) {
+            assert_eq!(a.design, b.design);
+            assert!((a.latency_ms - b.latency_ms).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn enumeration_respects_fixed_recognition_rate() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(10, 1).measure_all().unwrap();
+        let obj = Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 };
+        let mut space = SearchSpace::family("mobilenet_v2_100");
+        space.recognition_rate = Some(0.5);
+        let ds = DesignSpace::new(&dev, &reg, &lut);
+        let cands = ds.enumerate(obj, &space, &Conditions::idle());
+        assert!(!cands.is_empty());
+        assert!(cands.iter().all(|c| c.design.hw.recognition_rate == 0.5));
+    }
+
+    #[test]
+    fn conditions_scale_enumerated_latencies() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(10, 1).measure_all().unwrap();
+        let obj = Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 };
+        let space = SearchSpace::family("mobilenet_v2_100");
+        let ds = DesignSpace::new(&dev, &reg, &lut);
+        let idle = ds.enumerate(obj, &space, &Conditions::idle());
+        let mut conds = Conditions::idle();
+        conds.loads.insert(crate::device::EngineKind::Gpu, 1.0);
+        let loaded = ds.enumerate(obj, &space, &conds);
+        assert_eq!(idle.len(), loaded.len());
+        for (a, b) in idle.iter().zip(&loaded) {
+            if a.design.hw.engine == crate::device::EngineKind::Gpu {
+                assert!((b.latency_ms - 2.0 * a.latency_ms).abs() < 1e-9);
+            } else {
+                assert!((b.latency_ms - a.latency_ms).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -9,6 +9,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod loadgen;
 pub mod multiapp;
+pub mod optbench;
 pub mod tables;
 
 use std::sync::Arc;

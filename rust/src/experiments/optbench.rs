@@ -1,0 +1,466 @@
+//! Design-space / frontier adaptation benchmark (`oodin opt-bench`):
+//! quantifies what the cached-Pareto-frontier refactor buys on every
+//! adaptation path.
+//!
+//! For each device and each app of the canonical four-app mix, a fixed
+//! sequence of condition events (load shifts, a thermal throttle, returns
+//! to idle — the Fig 7/8 shapes) is replayed twice:
+//!
+//! * **full search** — enumerate + score the whole pre-filtered σ-space at
+//!   the event's conditions bucket, exactly what every layer did before
+//!   the refactor (O(space) per event);
+//! * **frontier walk** — select from the bucket's cached Pareto frontier
+//!   (built on first visit, reused on every repeat — O(frontier) per
+//!   event).
+//!
+//! Both selections are asserted equal (the design-space layer's exactness
+//! guarantee), and the driver reports enumerated-space size, frontier
+//! size, per-event decision counts and simulated-µs adaptation cost
+//! (decision counts × a nominal [`SIM_NS_PER_EVAL`] per scored candidate —
+//! a deterministic stand-in for wall-clock so the smoke JSON is
+//! byte-stable and golden-pinned, `tests/golden/optbench_smoke.json`).
+//!
+//! The smoke configuration measures its LUT with *zero* sampling noise so
+//! the whole report is closed-form from the roofline model — the
+//! independent Python oracle (`python/golden_optbench.py`) regenerates the
+//! golden byte-for-byte without running this binary.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::designspace::{rank, ConditionsBucket, DesignSpace, FrontierCache};
+use crate::device::EngineKind;
+use crate::manager::Conditions;
+use crate::mdcl;
+use crate::measurements::Measurer;
+use crate::model::Registry;
+use crate::optimizer::{Objective, SearchSpace};
+use crate::util::json::{self, Value};
+use crate::util::stats::Percentile;
+
+/// Nominal simulated cost of scoring one candidate (ns) — the unit behind
+/// the report's deterministic µs figures.
+pub const SIM_NS_PER_EVAL: u64 = 150;
+
+/// One condition event of the replayed adaptation sequence.
+#[derive(Debug, Clone)]
+pub struct BenchEvent {
+    /// Event label in the report.
+    pub name: &'static str,
+    /// Conditions observed at this event.
+    pub conds: Conditions,
+}
+
+/// Experiment dimensions and depth.
+#[derive(Debug, Clone)]
+pub struct OptBenchConfig {
+    /// Device profiles to sweep.
+    pub devices: Vec<String>,
+    /// Measurement runs for the per-device LUT.
+    pub lut_runs: usize,
+    /// Log-normal sampling noise of the LUT measurement (0 = closed-form).
+    pub noise_sigma: f64,
+    /// Apps of the canonical mix to include (1..=4).
+    pub n_apps: usize,
+}
+
+impl OptBenchConfig {
+    /// The full sweep: all three Table I devices, paper-depth LUTs.
+    pub fn full() -> Self {
+        OptBenchConfig {
+            devices: vec!["sony_c5".into(), "samsung_a71".into(),
+                          "samsung_s20_fe".into()],
+            lut_runs: 60,
+            noise_sigma: 0.04,
+            n_apps: 4,
+        }
+    }
+
+    /// The CI-sized, golden-pinned configuration: one device, zero-noise
+    /// LUT (latencies are exactly the roofline predictions).
+    pub fn smoke() -> Self {
+        OptBenchConfig {
+            devices: vec!["samsung_a71".into()],
+            lut_runs: 8,
+            noise_sigma: 0.0,
+            n_apps: 4,
+        }
+    }
+}
+
+/// The canonical four-app mix (same tuples as [`crate::app::multi_scenario`])
+/// as (app_id, family, objective).
+pub fn canonical_mix(n: usize) -> Vec<(&'static str, &'static str, Objective)> {
+    let mix: [(&'static str, &'static str, Objective); 4] = [
+        ("ai_camera", "mobilenet_v2_100",
+         Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 }),
+        ("video_conference", "efficientnet_lite4",
+         Objective::MaxFps { epsilon: 0.05 }),
+        ("gallery_tagger", "inception_v3",
+         Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 }),
+        ("scene_segmenter", "deeplab_v3",
+         Objective::MinLatency { stat: Percentile::P90, epsilon: 0.05 }),
+    ];
+    mix.into_iter().take(n).collect()
+}
+
+/// The replayed condition sequence: load shifts, a repeat (the cache-hit
+/// case), a thermal throttle, mixed pressure, and returns to idle.  Loads
+/// are chosen on bucket centres (exact powers of two) so the smoke report
+/// stays closed-form.
+pub fn event_sequence() -> Vec<BenchEvent> {
+    let mut events = Vec::new();
+    let mut push = |name: &'static str,
+                    loads: &[(EngineKind, f64)],
+                    thermal: &[(EngineKind, f64)]| {
+        let mut conds = Conditions::idle();
+        for &(e, l) in loads {
+            conds.loads.insert(e, l);
+        }
+        for &(e, t) in thermal {
+            conds.thermal.insert(e, t);
+        }
+        events.push(BenchEvent { name, conds });
+    };
+    push("idle", &[], &[]);
+    push("gpu_load", &[(EngineKind::Gpu, 1.0)], &[]);
+    push("gpu_load_repeat", &[(EngineKind::Gpu, 1.0)], &[]);
+    push("cpu_load", &[(EngineKind::Cpu, 2.0)], &[]);
+    push("npu_throttle", &[], &[(EngineKind::Npu, 0.5)]);
+    push("idle_return", &[], &[]);
+    push("mixed", &[(EngineKind::Gpu, 1.0)], &[(EngineKind::Npu, 0.5)]);
+    push("cpu_load_repeat", &[(EngineKind::Cpu, 2.0)], &[]);
+    events
+}
+
+/// One adaptation event's decision record.
+#[derive(Debug, Clone)]
+pub struct EventRow {
+    /// Event label.
+    pub name: &'static str,
+    /// Conditions-bucket id the event landed in.
+    pub bucket: String,
+    /// Candidates a full search scores at this event.
+    pub full_evals: usize,
+    /// Candidates the frontier walk scores at this event.
+    pub frontier_evals: usize,
+    /// True when this event built the bucket's frontier (first visit).
+    pub built: bool,
+    /// True when both selections agree (must always hold).
+    pub selections_match: bool,
+    /// The selected design, `variant|engine|threads|governor|r=..`.
+    pub pick: String,
+    /// Adjusted latency of the selection at the bucket's representative
+    /// conditions (ms).
+    pub latency_ms: f64,
+}
+
+/// One (device, app) row of the report.
+#[derive(Debug, Clone)]
+pub struct AppRow {
+    /// Device profile name.
+    pub device: String,
+    /// App id from the canonical mix.
+    pub app: &'static str,
+    /// Model family the app is built around.
+    pub family: &'static str,
+    /// Objective label.
+    pub objective: String,
+    /// Enumerated-space size after constraint pre-filtering.
+    pub space_size: usize,
+    /// Frontier size at the idle bucket.
+    pub frontier_size_idle: usize,
+    /// Per-event decision records.
+    pub events: Vec<EventRow>,
+    /// Σ full-search candidates over the events.
+    pub full_evals_total: usize,
+    /// Σ frontier-walk candidates over the events.
+    pub frontier_evals_total: usize,
+    /// Candidates enumerated by frontier builds (the amortised cost).
+    pub frontier_build_evals: usize,
+    /// Frontier builds (distinct buckets visited).
+    pub builds: u64,
+    /// Cache hits (events served without a build).
+    pub hits: u64,
+}
+
+/// Human-readable objective tag for reports and cache keys.
+pub fn objective_label(o: Objective) -> String {
+    match o {
+        Objective::MaxFps { epsilon } => format!("max_fps(eps={epsilon})"),
+        Objective::TargetLatency { t_target_ms, stat } => {
+            format!("target_latency({}ms,{})", t_target_ms, stat.name())
+        }
+        Objective::MaxAccMaxFps { w_fps } => {
+            format!("max_acc_max_fps(w={w_fps})")
+        }
+        Objective::MinLatency { stat, epsilon } => {
+            format!("min_latency({},eps={epsilon})", stat.name())
+        }
+    }
+}
+
+fn design_id(d: &crate::optimizer::Design) -> String {
+    format!("{}|{}|{}|{}|r={}", d.variant, d.hw.engine.name(), d.hw.threads,
+            d.hw.governor.name(), d.hw.recognition_rate)
+}
+
+/// Round to 3 decimals (report formatting; matches the serve-bench JSON).
+fn r3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+/// Run one (device, app) adaptation replay.
+fn run_app(device: &crate::device::DeviceProfile, registry: &Registry,
+           lut: &crate::measurements::Lut, app: &'static str,
+           family: &'static str, objective: Objective) -> Result<AppRow> {
+    let space = DesignSpace::new(device, registry, lut);
+    let sspace = SearchSpace::family(family);
+    let mut cache = FrontierCache::new();
+    let mut events = Vec::new();
+    let mut full_total = 0usize;
+    let mut frontier_total = 0usize;
+    let mut space_size = 0usize;
+    let mut frontier_size_idle = 0usize;
+
+    for ev in event_sequence() {
+        let bucket = ConditionsBucket::of(&ev.conds);
+        let rep = bucket.representative();
+
+        // Full search: enumerate + score the whole space at this bucket —
+        // the pre-refactor per-event cost.
+        let cands = space.enumerate(objective, &sspace, &rep);
+        let full_evals = cands.len();
+        let full_ranked = rank(cands, objective);
+        let full_pick = full_ranked
+            .first()
+            .with_context(|| format!("{app}: no feasible design at {}",
+                                     bucket.id()))?;
+
+        // Frontier walk: cached per bucket.
+        let builds_before = cache.stats.builds;
+        let frontier = cache.frontier(&space, objective, &sspace, &bucket);
+        let built = cache.stats.builds > builds_before;
+        let frontier_evals = frontier.len();
+        let frontier_pick = frontier
+            .best()
+            .with_context(|| format!("{app}: empty frontier at {}",
+                                     bucket.id()))?;
+
+        // Strictly fewer whenever anything in the space is dominated; a
+        // space that is already all-Pareto-optimal (tiny spaces on low-end
+        // profiles) walks exactly its own size.  The smoke configuration
+        // is strictly smaller on every event (asserted in tests and
+        // pinned in the golden JSON).
+        ensure!(
+            frontier_evals <= full_evals,
+            "{app}@{}: frontier walk ({frontier_evals}) must never evaluate \
+             more candidates than full search ({full_evals})",
+            ev.name
+        );
+        let selections_match = frontier_pick.design == full_pick.design;
+        ensure!(selections_match,
+                "{app}@{}: frontier pick {} != full-search pick {}",
+                ev.name, design_id(&frontier_pick.design),
+                design_id(&full_pick.design));
+
+        space_size = full_evals;
+        if bucket.is_idle() {
+            frontier_size_idle = frontier_evals;
+        }
+        full_total += full_evals;
+        frontier_total += frontier_evals;
+        events.push(EventRow {
+            name: ev.name,
+            bucket: bucket.id(),
+            full_evals,
+            frontier_evals,
+            built,
+            selections_match,
+            pick: design_id(&frontier_pick.design),
+            latency_ms: r3(frontier_pick.latency_ms),
+        });
+    }
+
+    Ok(AppRow {
+        device: device.name.to_string(),
+        app,
+        family,
+        objective: objective_label(objective),
+        space_size,
+        frontier_size_idle,
+        events,
+        full_evals_total: full_total,
+        frontier_evals_total: frontier_total,
+        frontier_build_evals: cache.stats.candidates_enumerated as usize,
+        builds: cache.stats.builds,
+        hits: cache.stats.hits,
+    })
+}
+
+/// Run the full (device × app) sweep.
+pub fn run(registry: &Registry, cfg: &OptBenchConfig) -> Result<Vec<AppRow>> {
+    let mut rows = Vec::new();
+    for device_name in &cfg.devices {
+        let device = mdcl::detect(device_name)?;
+        let lut = Measurer::new(&device, registry)
+            .with_runs(cfg.lut_runs, (cfg.lut_runs / 10).max(1))
+            .with_noise_sigma(cfg.noise_sigma)
+            .measure_all()?;
+        for (app, family, objective) in canonical_mix(cfg.n_apps) {
+            match run_app(&device, registry, &lut, app, family, objective) {
+                Ok(row) => rows.push(row),
+                // A family can be undeployable on a low-end profile (the
+                // Fig 4 filter); the mix degrades gracefully, like the
+                // multi-app scenario does.
+                Err(e) if format!("{e:#}").contains("no feasible design") => {
+                    eprintln!("note: {device_name}/{app}: {e:#}");
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    Ok(rows)
+}
+
+fn cost_us(evals: usize) -> f64 {
+    r3(evals as f64 * SIM_NS_PER_EVAL as f64 / 1000.0)
+}
+
+fn rows_to_json(rows: &[AppRow]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|r| {
+                let events = r
+                    .events
+                    .iter()
+                    .map(|e| {
+                        json::obj(vec![
+                            ("name", json::s(e.name)),
+                            ("bucket", json::s(&e.bucket)),
+                            ("full_evals", json::num(e.full_evals as f64)),
+                            ("frontier_evals",
+                             json::num(e.frontier_evals as f64)),
+                            ("built", Value::Bool(e.built)),
+                            ("match", Value::Bool(e.selections_match)),
+                            ("pick", json::s(&e.pick)),
+                            ("latency_ms", json::num(e.latency_ms)),
+                        ])
+                    })
+                    .collect();
+                let amortised = r.frontier_evals_total + r.frontier_build_evals;
+                json::obj(vec![
+                    ("device", json::s(&r.device)),
+                    ("app", json::s(r.app)),
+                    ("family", json::s(r.family)),
+                    ("objective", json::s(&r.objective)),
+                    ("space_size", json::num(r.space_size as f64)),
+                    ("frontier_size_idle",
+                     json::num(r.frontier_size_idle as f64)),
+                    ("events", Value::Arr(events)),
+                    ("full_evals_total", json::num(r.full_evals_total as f64)),
+                    ("frontier_evals_total",
+                     json::num(r.frontier_evals_total as f64)),
+                    ("frontier_build_evals",
+                     json::num(r.frontier_build_evals as f64)),
+                    ("builds", json::num(r.builds as f64)),
+                    ("hits", json::num(r.hits as f64)),
+                    ("full_cost_us", json::num(cost_us(r.full_evals_total))),
+                    ("frontier_walk_cost_us",
+                     json::num(cost_us(r.frontier_evals_total))),
+                    ("frontier_cost_us_amortized",
+                     json::num(cost_us(amortised))),
+                    ("walk_speedup",
+                     json::num(r3(r.full_evals_total as f64
+                                  / r.frontier_evals_total as f64))),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// The complete report as one JSON value (the golden-pinned payload).
+pub fn report_json(rows: &[AppRow], cfg: &OptBenchConfig) -> Value {
+    json::obj(vec![(
+        "opt_bench",
+        json::obj(vec![
+            ("lut_runs", json::num(cfg.lut_runs as f64)),
+            ("noise_sigma", json::num(cfg.noise_sigma)),
+            ("sim_ns_per_eval", json::num(SIM_NS_PER_EVAL as f64)),
+            ("rows", rows_to_json(rows)),
+        ]),
+    )])
+}
+
+/// Print the adaptation-cost table; also emit the rows as a JSON line and,
+/// when `json_out` is given, write them to that file.
+pub fn print(registry: &Registry, cfg: &OptBenchConfig,
+             json_out: Option<&str>) -> Result<()> {
+    let rows = run(registry, cfg)?;
+    println!("OPT-BENCH — full σ-space search vs cached Pareto-frontier \
+              walk per adaptation event");
+    println!("{:<15} {:<16} {:>5} {:>5} | {:>7} {:>7} {:>5} {:>4} | {:>9} \
+              {:>9} {:>7}",
+             "device", "app", "space", "front", "full#", "walk#", "build",
+             "hit", "full µs", "walk µs", "speedup");
+    println!("{}", super::rule(100));
+    for r in &rows {
+        println!("{:<15} {:<16} {:>5} {:>5} | {:>7} {:>7} {:>5} {:>4} | \
+                  {:>9.1} {:>9.1} {:>6.1}x",
+                 r.device, r.app, r.space_size, r.frontier_size_idle,
+                 r.full_evals_total, r.frontier_evals_total, r.builds,
+                 r.hits, cost_us(r.full_evals_total),
+                 cost_us(r.frontier_evals_total),
+                 r.full_evals_total as f64 / r.frontier_evals_total as f64);
+    }
+    println!("(space = enumerated candidates after pre-filtering; front = \
+              idle-bucket frontier; full#/walk# = candidates scored over \
+              {} adaptation events; µs simulated at {} ns/candidate; \
+              selections verified equal on every event)",
+             event_sequence().len(), SIM_NS_PER_EVAL);
+    let payload = report_json(&rows, cfg);
+    let line = json::to_string(&payload);
+    println!("OPTBENCH_JSON {line}");
+    if let Some(path) = json_out {
+        std::fs::write(path, &line)
+            .with_context(|| format!("writing {path}"))?;
+        println!("JSON written to {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_fixtures::fake_registry;
+
+    #[test]
+    fn smoke_rows_cover_mix_and_beat_full_search() {
+        let reg = fake_registry();
+        let rows = run(&reg, &OptBenchConfig::smoke()).unwrap();
+        assert_eq!(rows.len(), 4, "all four apps deployable on the A71");
+        for r in &rows {
+            assert!(r.frontier_evals_total < r.full_evals_total, "{r:?}");
+            assert!(r.builds >= 1 && r.hits >= 1, "{r:?}");
+            for e in &r.events {
+                assert!(e.selections_match);
+                assert!(e.frontier_evals < e.full_evals);
+            }
+            // Repeated buckets never rebuild.
+            let repeat = r.events.iter().find(|e| e.name == "gpu_load_repeat");
+            assert!(!repeat.unwrap().built);
+        }
+    }
+
+    #[test]
+    fn event_sequence_revisits_buckets() {
+        let evs = event_sequence();
+        let b = |n: &str| {
+            ConditionsBucket::of(
+                &evs.iter().find(|e| e.name == n).unwrap().conds)
+        };
+        assert_eq!(b("gpu_load"), b("gpu_load_repeat"));
+        assert_eq!(b("idle"), b("idle_return"));
+        assert!(b("idle").is_idle());
+        assert_ne!(b("npu_throttle"), b("mixed"));
+    }
+}

@@ -32,9 +32,14 @@
 //! * [`runtime`] — the [`runtime::Backend`] trait + its PJRT and simulator
 //!   implementations.
 //! * [`measurements`] — Device Measurements sweeps -> look-up tables.
+//! * [`designspace`] — the unified design-space layer: one σ-space
+//!   enumeration with constraint pre-filtering, the canonical selection
+//!   order, and cached Pareto frontiers per (task, conditions-bucket) —
+//!   the O(frontier) re-adaptation substrate every search layer shares.
 //! * [`optimizer`] — System Optimisation: the MOO formulations of Eq. 3-5
-//!   and the enumerative LUT search.
-//! * [`manager`] — the Runtime Manager's adaptation state machine.
+//!   and the enumerative LUT search (over the design-space layer).
+//! * [`manager`] — the Runtime Manager's adaptation state machine
+//!   (frontier-walk re-search).
 //! * [`scheduler`] — the multi-app layer: N concurrent DL apps with
 //!   per-app SLOs, joint (σ₁…σ_N) optimisation under global resource
 //!   constraints, time-sliced engine arbitration with admission control,
@@ -56,6 +61,7 @@
 
 pub mod app;
 pub mod config;
+pub mod designspace;
 pub mod device;
 pub mod devicesim;
 pub mod dlacl;

@@ -11,6 +11,7 @@
 //! oodin serve   --family <f> [--precision p] [--requests n] [--device d]
 //! oodin serve-bench [--smoke] [--device d] [--rate r] [--duration ms] [--json f]
 //! oodin multi   [--smoke] [--device d] [--apps n] [--windows w] [--json f]
+//! oodin opt-bench [--smoke] [--device d] [--apps n] [--json f]
 //! ```
 //!
 //! Every command runs hermetically when `artifacts/` is absent: the
@@ -19,7 +20,8 @@
 use anyhow::{bail, Context, Result};
 
 use oodin::config::UseCase;
-use oodin::experiments::{fig3, fig456, fig7, fig8, loadgen, multiapp, tables};
+use oodin::experiments::{fig3, fig456, fig7, fig8, loadgen, multiapp,
+                         optbench, tables};
 use oodin::measurements::Measurer;
 use oodin::model::Precision;
 use oodin::optimizer::Optimizer;
@@ -89,6 +91,7 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&args),
         "serve-bench" => cmd_serve_bench(&args),
         "multi" => cmd_multi(&args),
+        "opt-bench" => cmd_opt_bench(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -112,6 +115,7 @@ fn print_usage() {
          \x20 serve    --family <f> [--precision p] [--requests n] [--device d]  serving demo\n\
          \x20 serve-bench [--smoke] [--device d] [--rate r] [--duration ms] [--json f]  pipeline load bench\n\
          \x20 multi    [--smoke] [--device d] [--apps n] [--windows w] [--json f]  multi-app contention table\n\
+         \x20 opt-bench [--smoke] [--device d] [--apps n] [--json f]  full-search vs frontier-walk adaptation cost\n\
          \n\
          (no artifacts/?  everything runs on the hermetic SimBackend)"
     );
@@ -212,6 +216,22 @@ fn cmd_multi(args: &Args) -> Result<()> {
         cfg.windows = w.parse().context("--windows")?;
     }
     multiapp::print(&registry, &cfg, args.flag("json"))
+}
+
+fn cmd_opt_bench(args: &Args) -> Result<()> {
+    let registry = load_registry_or_synthetic()?;
+    let mut cfg = if args.has("smoke") {
+        optbench::OptBenchConfig::smoke()
+    } else {
+        optbench::OptBenchConfig::full()
+    };
+    if let Some(d) = args.flag("device") {
+        cfg.devices = vec![d.to_string()];
+    }
+    if let Some(n) = args.flag("apps") {
+        cfg.n_apps = n.parse().context("--apps")?;
+    }
+    optbench::print(&registry, &cfg, args.flag("json"))
 }
 
 fn cmd_serve_bench(args: &Args) -> Result<()> {

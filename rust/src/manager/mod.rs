@@ -11,16 +11,25 @@
 //!
 //! Detection timing (Fig 8: ~800 ms / ~1150 ms) falls out of the check
 //! interval × consecutive-confirmation policy rather than being hard-coded.
+//!
+//! Since the design-space refactor the re-search no longer re-enumerates
+//! the σ-space per event: `best_under` buckets the observed conditions
+//! ([`crate::designspace::ConditionsBucket`]) and selects from the cached
+//! Pareto frontier of that bucket — O(frontier) per adaptation event, with
+//! the enumeration paid once per bucket and invalidated only when the LUT
+//! or registry changes.
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::designspace::{CacheStats, ConditionsBucket, DesignSpace,
+                         FrontierCache};
 use crate::device::{DeviceProfile, EngineKind};
 use crate::measurements::Lut;
 use crate::model::Registry;
-use crate::optimizer::{Design, Objective, Optimizer, SearchSpace};
+use crate::optimizer::{Design, Objective, SearchSpace};
 use crate::perf;
 use crate::util::stats::{Percentile, RollingWindow};
 
@@ -171,6 +180,9 @@ pub struct RuntimeManager {
     violations: usize,
     degradation_start_ms: Option<f64>,
     window: RollingWindow,
+    /// Cached Pareto frontiers per conditions-bucket (interior-mutable so
+    /// `best_under` keeps its `&self` signature).
+    frontiers: Mutex<FrontierCache>,
     /// History of all switches (experiment reporting).
     pub switches: Vec<Switch>,
 }
@@ -193,6 +205,7 @@ impl RuntimeManager {
             violations: 0,
             degradation_start_ms: None,
             window: RollingWindow::new(policy.latency_window.max(1)),
+            frontiers: Mutex::new(FrontierCache::new()),
             policy,
             switches: Vec::new(),
         }
@@ -222,40 +235,40 @@ impl RuntimeManager {
         adjusted_latency(&self.lut, design, self.objective.stat(), conds)
     }
 
-    /// Best design under adjusted conditions (same enumerative search as the
-    /// offline optimiser, but over condition-scaled latencies).
+    /// Best design under adjusted conditions.  The observed conditions are
+    /// quantised to a [`ConditionsBucket`]; the bucket's cached Pareto
+    /// frontier (built on first use) is walked in the canonical selection
+    /// order — the same search the offline optimiser runs over
+    /// condition-scaled latencies, at O(frontier) instead of O(space) per
+    /// event.  For a hard latency target the walk re-checks the budget at
+    /// the *exact* observed conditions (the bucket's representative can
+    /// sit up to half a quantisation step away), so a returned design
+    /// never violates the target the way a quantised-only check could;
+    /// the residual quantisation error is conservative (a design just
+    /// inside budget at the exact conditions but outside at the bucket
+    /// centre may be missed).
     pub fn best_under(&self, conds: &Conditions) -> Result<Design> {
-        let opt = Optimizer::new(&self.device, &self.registry, &self.lut);
-        let ranked = opt.search(self.objective, &self.space)?;
-        // Re-rank by adjusted latency; for accuracy-first objectives the
-        // offline ranking already encodes accuracy, so stable-sort by the
-        // adjusted latency penalty only within equal accuracy.
-        let mut best: Option<(f64, Design)> = None;
-        for cand in &ranked {
-            let Some(adj) = self.adjusted_latency(&cand.design, conds) else {
-                continue;
-            };
-            let key = match self.objective {
-                Objective::TargetLatency { t_target_ms, .. } => {
-                    if adj > t_target_ms {
-                        continue;
-                    }
-                    // maximise accuracy, tie-break on adjusted latency
-                    (-(cand.accuracy), adj)
-                }
-                Objective::MaxAccMaxFps { w_fps } => {
-                    let fps = 1000.0 / adj;
-                    (-(cand.accuracy + w_fps * fps / 1000.0), adj)
-                }
-                _ => (0.0, adj),
-            };
-            let metric = key.0 * 1e6 + key.1; // lexicographic-ish
-            if best.as_ref().map_or(true, |(m, _)| metric < *m) {
-                best = Some((metric, cand.design.clone()));
+        let bucket = ConditionsBucket::of(conds);
+        let space = DesignSpace::new(&self.device, &self.registry, &self.lut);
+        let frontier = self.frontiers.lock().unwrap().frontier(
+            &space, self.objective, &self.space, &bucket);
+        let pick = match self.objective {
+            Objective::TargetLatency { t_target_ms, .. } => {
+                frontier.points().iter().find(|c| {
+                    self.adjusted_latency(&c.design, conds)
+                        .map_or(false, |adj| adj <= t_target_ms)
+                })
             }
-        }
-        best.map(|(_, d)| d)
+            _ => frontier.best(),
+        };
+        pick.map(|c| c.design.clone())
             .ok_or_else(|| anyhow::anyhow!("no feasible design under conditions"))
+    }
+
+    /// Frontier-cache effectiveness counters (adaptation-cost telemetry
+    /// reported by `oodin opt-bench`).
+    pub fn frontier_stats(&self) -> CacheStats {
+        self.frontiers.lock().unwrap().stats
     }
 
     /// Record one measured inference latency (ms) on the current design.
@@ -395,7 +408,7 @@ mod tests {
     use crate::device::profiles::samsung_a71;
     use crate::measurements::Measurer;
     use crate::model::test_fixtures::fake_registry;
-    use crate::optimizer::Objective;
+    use crate::optimizer::{Objective, Optimizer};
     use crate::util::stats::Percentile;
 
     fn mk_manager(dev: &DeviceProfile, reg: &Registry, lut: &Lut)
@@ -570,5 +583,28 @@ mod tests {
         let mgr = mk_manager(&dev, &reg, &lut);
         let best = mgr.best_under(&Conditions::idle()).unwrap();
         assert_eq!(&best, mgr.current());
+    }
+
+    #[test]
+    fn repeated_best_under_hits_the_frontier_cache() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(20, 2).measure_all().unwrap();
+        let mgr = mk_manager(&dev, &reg, &lut);
+        let idle = Conditions::idle();
+        let a = mgr.best_under(&idle).unwrap();
+        let b = mgr.best_under(&idle).unwrap();
+        assert_eq!(a, b);
+        let stats = mgr.frontier_stats();
+        assert_eq!(stats.builds, 1, "second call must not re-enumerate");
+        assert_eq!(stats.hits, 1);
+        // A different conditions bucket builds its own frontier once.
+        let mut loaded = Conditions::idle();
+        loaded.loads.insert(a.hw.engine, 2.0);
+        mgr.best_under(&loaded).unwrap();
+        mgr.best_under(&loaded).unwrap();
+        let stats = mgr.frontier_stats();
+        assert_eq!(stats.builds, 2);
+        assert_eq!(stats.hits, 2);
     }
 }

@@ -211,6 +211,14 @@ impl<'a> Measurer<'a> {
         self
     }
 
+    /// Override the run-to-run jitter; 0 collapses every sample to the
+    /// performance model's closed-form prediction (the golden-pinned
+    /// `opt-bench --smoke` path).
+    pub fn with_noise_sigma(mut self, sigma: f64) -> Self {
+        self.noise_sigma = sigma;
+        self
+    }
+
     /// Calibrate CPU entries against real executions on `rt`.
     pub fn host_calibrated(mut self, rt: &'a dyn Backend) -> Self {
         self.mode = MeasureMode::HostCalibrated;

@@ -14,15 +14,27 @@
 //! paper's Fig 3–6 evaluations use.  `SearchSpace` restrictions express the
 //! baselines (oSQ-CPU/-GPU/-NNAPI restrict the engine set; PAW-D / MAW-D
 //! transplant configurations — see `experiments/`).
+//!
+//! Since the design-space refactor the enumeration, constraint
+//! pre-filtering and selection order live in [`crate::designspace`]
+//! (shared with the Runtime Manager's frontier walk and the multi-app
+//! joint search); this module keeps the paper-facing API.  Ties in an
+//! objective's score resolve along the canonical chain (energy ↑,
+//! latency ↑, accuracy ↓, recognition rate ↓, memory ↑), so e.g. a
+//! weighted-sum tie now breaks toward the lowest-energy design.
 
 use anyhow::{anyhow, Result};
 
+use crate::designspace::{rank, DesignSpace};
 use crate::device::{DeviceProfile, EngineKind};
 use crate::dvfs::Governor;
+use crate::manager::Conditions;
 use crate::measurements::{Lut, LutKey};
 use crate::model::{Precision, Registry};
 use crate::perf;
 use crate::util::stats::Percentile;
+
+pub use crate::designspace::Candidate as Evaluated;
 
 /// Recognition-rate candidates r (inference invocation frequency, §III-B1).
 pub const RECOGNITION_RATES: [f64; 3] = [1.0, 0.5, 0.25];
@@ -60,25 +72,6 @@ impl Design {
             governor: self.hw.governor,
         }
     }
-}
-
-/// Metrics of a design evaluated against a LUT (the paper's P).
-#[derive(Debug, Clone)]
-pub struct Evaluated {
-    /// The design these metrics describe.
-    pub design: Design,
-    /// T: latency statistic targeted by the objective (ms).
-    pub latency_ms: f64,
-    /// Average latency (used for fps regardless of the targeted statistic).
-    pub avg_latency_ms: f64,
-    /// fps: effective processed frames/s at recognition rate r.
-    pub fps: f64,
-    /// mem: working-set bytes.
-    pub mem_bytes: u64,
-    /// a: accuracy of the variant.
-    pub accuracy: f64,
-    /// Objective score (higher is better, across all objectives).
-    pub score: f64,
 }
 
 /// The user-specified optimisation objective o_i = <P, max/min/val(stat)>.
@@ -153,7 +146,9 @@ impl SearchSpace {
         self
     }
 
-    fn admits(&self, reg: &Registry, key: &LutKey) -> bool {
+    /// True when a LUT configuration passes this restriction (the
+    /// design-space layer's pre-filter hook).
+    pub fn admits(&self, reg: &Registry, key: &LutKey) -> bool {
         let Some(v) = reg.get(&key.variant) else { return false };
         if let Some(f) = &self.family {
             if &v.family != f {
@@ -207,107 +202,37 @@ impl<'a> Optimizer<'a> {
             .map(|v| v.accuracy)
     }
 
+    /// This optimiser's view of the unified design-space layer.
+    fn design_space(&self) -> DesignSpace<'a> {
+        DesignSpace {
+            device: self.device,
+            registry: self.registry,
+            lut: self.lut,
+            camera_fps: self.camera_fps,
+        }
+    }
+
     /// Enumerate, filter (deployability + ε-constraints) and score every
-    /// candidate; returns them best-first.  This is the paper's "complete
-    /// enumerative search over the populated look-up tables".
+    /// candidate; returns them best-first under the canonical selection
+    /// order.  This is the paper's "complete enumerative search over the
+    /// populated look-up tables", now delegated to
+    /// [`crate::designspace::DesignSpace::enumerate`] +
+    /// [`crate::designspace::rank`] so every layer searches identically.
     pub fn search(&self, objective: Objective, space: &SearchSpace)
                   -> Result<Vec<Evaluated>> {
-        let stat = objective.stat();
-        let rates: &[f64] = match space.recognition_rate {
-            Some(_) => &[0.0], // placeholder, replaced below
-            None => &RECOGNITION_RATES,
-        };
-
-        // Pass 1: collect feasible candidates with raw metrics.
-        let mut cands: Vec<Evaluated> = Vec::new();
-        for (key, entry) in &self.lut.entries {
-            if !space.admits(self.registry, key) {
-                continue;
-            }
-            let v = self.registry.get(&key.variant).unwrap();
-            // Deployability (paper Fig 4: overheating / >=5 s lag models
-            // are not deployable): memory budget + sustained-latency bound.
-            if !perf::fits_memory(self.device, v) {
-                continue;
-            }
-            if entry.latency.avg > self.device.max_deployable_latency_ms {
-                continue;
-            }
-            // ε-constraint on accuracy where the objective carries one.
-            let a_ref = self.reference_accuracy(&v.family).unwrap_or(v.accuracy);
-            let eps = match objective {
-                Objective::MaxFps { epsilon } => Some(epsilon),
-                Objective::MinLatency { epsilon, .. } => Some(epsilon),
-                _ => None,
-            };
-            if let Some(eps) = eps {
-                if a_ref - entry.accuracy > eps + 1e-12 {
-                    continue;
-                }
-            }
-            let latency = entry.latency.metric(stat);
-            for &r in rates {
-                let r = space.recognition_rate.unwrap_or(r);
-                let fps = (self.camera_fps * r).min(1000.0 / entry.latency.avg);
-                cands.push(Evaluated {
-                    design: Design {
-                        variant: key.variant.clone(),
-                        hw: HwConfig {
-                            engine: key.engine,
-                            threads: key.threads,
-                            governor: key.governor,
-                            recognition_rate: r,
-                        },
-                    },
-                    latency_ms: latency,
-                    avg_latency_ms: entry.latency.avg,
-                    fps,
-                    mem_bytes: entry.mem_bytes,
-                    accuracy: entry.accuracy,
-                    score: 0.0,
-                });
-            }
-        }
+        let cands = self
+            .design_space()
+            .enumerate(objective, space, &Conditions::idle());
         if cands.is_empty() {
             return Err(anyhow!(
                 "no deployable design for objective {objective:?} on {}",
                 self.device.name
             ));
         }
-
-        // Pass 2: objective-specific constraint + normalised scoring.
-        let fps_max = cands.iter().map(|c| c.fps).fold(f64::MIN, f64::max);
-        let a_max = cands.iter().map(|c| c.accuracy).fold(f64::MIN, f64::max);
-        let mut scored: Vec<Evaluated> = cands
-            .into_iter()
-            .filter_map(|mut c| {
-                match objective {
-                    Objective::MaxFps { .. } => {
-                        // fps saturates at the camera rate; break ties
-                        // toward the lowest-latency (headroom) design.
-                        c.score = c.fps - 1e-6 * c.avg_latency_ms;
-                    }
-                    Objective::TargetLatency { t_target_ms, .. } => {
-                        if c.latency_ms > t_target_ms {
-                            return None;
-                        }
-                        // Accuracy first; fps breaks ties.
-                        c.score = c.accuracy + 1e-6 * c.fps;
-                    }
-                    Objective::MaxAccMaxFps { w_fps } => {
-                        c.score = c.accuracy / a_max + w_fps * c.fps / fps_max;
-                    }
-                    Objective::MinLatency { .. } => {
-                        c.score = -c.latency_ms;
-                    }
-                }
-                Some(c)
-            })
-            .collect();
+        let scored = rank(cands, objective);
         if scored.is_empty() {
             return Err(anyhow!("no design satisfies {objective:?}"));
         }
-        scored.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
         Ok(scored)
     }
 
@@ -326,6 +251,11 @@ impl<'a> Optimizer<'a> {
             .lut
             .get(&design.lut_key())
             .ok_or_else(|| anyhow!("design {:?} not in LUT (engine absent?)", design))?;
+        let spec = self
+            .device
+            .engine(design.hw.engine)
+            .ok_or_else(|| anyhow!("device {} has no engine {}",
+                                   self.device.name, design.hw.engine.name()))?;
         let r = design.hw.recognition_rate;
         Ok(Evaluated {
             design: design.clone(),
@@ -334,6 +264,8 @@ impl<'a> Optimizer<'a> {
             fps: (self.camera_fps * r).min(1000.0 / entry.latency.avg),
             mem_bytes: entry.mem_bytes,
             accuracy: entry.accuracy,
+            energy_mj: perf::energy_proxy_mj(spec, entry.latency.avg,
+                                             design.hw.governor),
             score: 0.0,
         })
     }

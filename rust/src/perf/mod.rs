@@ -123,6 +123,23 @@ pub fn fits_memory(dev: &DeviceProfile, v: &ModelVariant) -> bool {
     v.mem_bytes() <= dev.mem_budget_bytes
 }
 
+/// First-order per-inference energy estimate (arbitrary units ∝ mJ) of one
+/// execution measured at `avg_latency_ms` on `spec` under `governor`:
+///
+///   energy ∝ latency · heat_per_ms · freq² · gov_heat
+///
+/// i.e. run time × the engine's dissipation rate at the governor's
+/// sustained clock — the same `freq² · gov_heat` power term the thermal RC
+/// model integrates (`dvfs::ThermalModel::record_work`).  It is a *static*
+/// per-design property (evaluated at idle, cool conditions), giving the
+/// design-space layer its third Pareto dimension without any new
+/// calibration constants.
+pub fn energy_proxy_mj(spec: &EngineSpec, avg_latency_ms: f64,
+                       governor: Governor) -> f64 {
+    let f = governor.freq_scale();
+    avg_latency_ms * spec.thermal.heat_per_ms * f * f * governor.heat_factor()
+}
+
 /// Busy time the engine accrues for thermal accounting (compute only:
 /// dispatch is host-side).
 pub fn busy_ms(dev: &DeviceProfile, kind: EngineKind, v: &ModelVariant,
@@ -257,6 +274,20 @@ mod tests {
         c.thermal_freq_scale = 0.5;
         let hot = latency_ms(&d, EngineKind::Npu, &v, &c).unwrap();
         assert!(hot > cool * 1.5);
+    }
+
+    #[test]
+    fn energy_proxy_orders_governors_and_scales_with_latency() {
+        let d = samsung_a71();
+        let cpu = d.engine(EngineKind::Cpu).unwrap();
+        // At equal measured latency, lower clocks burn strictly less.
+        let perf = energy_proxy_mj(cpu, 4.0, Governor::Performance);
+        let sched = energy_proxy_mj(cpu, 4.0, Governor::Schedutil);
+        let eco = energy_proxy_mj(cpu, 4.0, Governor::EnergyStep);
+        assert!(perf > sched && sched > eco, "{perf} {sched} {eco}");
+        // Linear in run time.
+        assert!((energy_proxy_mj(cpu, 8.0, Governor::Performance)
+                 - 2.0 * perf).abs() < 1e-12);
     }
 
     #[test]

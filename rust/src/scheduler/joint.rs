@@ -13,21 +13,26 @@
 //!   `util_cap` of wall time (dropping the recognition rate r is how an
 //!   app degrades itself into fitting).
 //!
-//! Per-app candidates come from the app's own [`Optimizer::search`]
-//! ranking (pruned per engine/thread group), re-scored under current
-//! conditions with the Runtime Manager's [`manager::adjusted_latency`].
-//! The joint objective is lexicographic: fewest predicted SLO violations,
-//! then minimal total SLO pressure Σ latency/SLO.
+//! Per-app candidates come from the app's *cached Pareto frontier*
+//! ([`crate::designspace::frontier`]) at the current conditions bucket —
+//! pruned per engine/thread group, re-scored under the exact current
+//! conditions with the Runtime Manager's [`manager::adjusted_latency`] —
+//! so a re-adaptation event composes per-app frontiers under the global
+//! budget instead of re-scoring the raw product space.  The joint
+//! objective is lexicographic: fewest predicted SLO violations, then
+//! minimal total SLO pressure Σ latency/SLO.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::designspace::{ConditionsBucket, DesignSpace, FrontierCache};
 use crate::device::{DeviceProfile, EngineKind};
 use crate::manager::{self, Conditions};
 use crate::measurements::Lut;
 use crate::model::Registry;
-use crate::optimizer::{Design, Optimizer, SearchSpace};
+use crate::optimizer::{Design, SearchSpace};
 
 use super::WorkloadDescriptor;
 
@@ -116,26 +121,50 @@ pub struct JointSearch<'a> {
     /// Ranked candidates kept per (engine, threads) group — the pruning
     /// knob bounding the assignment enumeration.
     pub keep_per_group: usize,
+    /// Cached per-app Pareto frontiers; [`crate::scheduler::Scheduler`]
+    /// shares one cache across all its re-adaptation events.
+    pub frontiers: Arc<Mutex<FrontierCache>>,
 }
 
 impl<'a> JointSearch<'a> {
-    /// A joint search with the default pruning depth.
+    /// A joint search with the default pruning depth and a private
+    /// frontier cache.
     pub fn new(device: &'a DeviceProfile, registry: &'a Registry, lut: &'a Lut,
                budget: GlobalBudget) -> Self {
-        JointSearch { device, registry, lut, budget, keep_per_group: 3 }
+        JointSearch {
+            device,
+            registry,
+            lut,
+            budget,
+            keep_per_group: 3,
+            frontiers: Arc::new(Mutex::new(FrontierCache::new())),
+        }
     }
 
-    /// One app's candidate list: its own enumerative ranking, pruned to the
-    /// best `keep_per_group` per (engine, threads) group, with latencies
-    /// re-scored under `conds`.  Rank order is preserved, so index 0 is the
-    /// app's solo-optimal choice (the `degraded` reference point).
+    /// Share a frontier cache (so repeated searches — admission events,
+    /// re-adaptations — reuse each app's cached frontiers).
+    pub fn with_cache(mut self, cache: Arc<Mutex<FrontierCache>>) -> Self {
+        self.frontiers = cache;
+        self
+    }
+
+    /// One app's candidate list: its cached Pareto frontier at the current
+    /// conditions bucket, pruned to the best `keep_per_group` per (engine,
+    /// threads) group, with latencies re-scored under the exact `conds`.
+    /// Frontier order is the canonical selection order, so index 0 is the
+    /// app's solo-optimal choice (the `degraded` reference point); the
+    /// lower-rate / lower-accuracy frontier points behind it are the
+    /// degrade ladder admission control falls down.
     fn candidates(&self, desc: &WorkloadDescriptor, conds: &Conditions)
                   -> Result<Vec<Cand>> {
-        let opt = Optimizer::new(self.device, self.registry, self.lut);
-        let ranked = opt.search(desc.objective, &SearchSpace::family(&desc.family))?;
+        let bucket = ConditionsBucket::of(conds);
+        let sspace = SearchSpace::family(&desc.family);
+        let space = DesignSpace::new(self.device, self.registry, self.lut);
+        let frontier = self.frontiers.lock().unwrap().frontier(
+            &space, desc.objective, &sspace, &bucket);
         let mut counts: BTreeMap<(EngineKind, usize), usize> = BTreeMap::new();
         let mut kept = Vec::new();
-        for c in &ranked {
+        for c in frontier.points() {
             let group = (c.design.hw.engine, c.design.hw.threads);
             let n = counts.entry(group).or_insert(0);
             if *n >= self.keep_per_group {

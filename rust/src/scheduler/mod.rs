@@ -20,7 +20,10 @@
 //!    condition shift the joint search re-runs under adjusted latencies
 //!    (reusing the Runtime Manager's [`manager::adjusted_latency`]
 //!    scoring) and issues *coordinated* switches, instead of N
-//!    independent, oscillating managers.
+//!    independent, oscillating managers.  Per-app candidates come from
+//!    cached Pareto frontiers ([`crate::designspace`]) shared across all
+//!    admission/re-adaptation events, so each event composes O(frontier)
+//!    ladders instead of re-enumerating the σ-space.
 
 pub mod arbiter;
 pub mod joint;
@@ -29,10 +32,11 @@ pub use arbiter::{Arbiter, Grant, Slice, Window};
 pub use joint::{GlobalBudget, JointAssignment, JointSearch, PredictedApp};
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
+use crate::designspace::{CacheStats, FrontierCache};
 use crate::device::{DeviceProfile, EngineKind};
 use crate::devicesim::DeviceSim;
 use crate::manager::{Conditions, Policy, Reason, Switch};
@@ -109,6 +113,9 @@ pub struct Scheduler {
     apps: Vec<AppState>,
     last_loads: BTreeMap<EngineKind, f64>,
     last_adapt_ms: f64,
+    /// Per-app Pareto frontiers shared across every admission and
+    /// re-adaptation event (the design-space layer's cache).
+    frontiers: Arc<Mutex<FrontierCache>>,
     /// Coordinated reconfigurations issued so far: (app_id, switch).
     pub switches: Vec<(String, Switch)>,
 }
@@ -128,6 +135,7 @@ impl Scheduler {
             apps: Vec::new(),
             last_loads: BTreeMap::new(),
             last_adapt_ms: f64::NEG_INFINITY,
+            frontiers: Arc::new(Mutex::new(FrontierCache::new())),
             switches: Vec::new(),
         }
     }
@@ -147,6 +155,13 @@ impl Scheduler {
     fn joint(&self) -> JointSearch<'_> {
         JointSearch::new(&self.device, &self.registry, &self.lut,
                          self.budget.clone())
+            .with_cache(Arc::clone(&self.frontiers))
+    }
+
+    /// Frontier-cache effectiveness counters across every admission and
+    /// re-adaptation event this scheduler has run.
+    pub fn frontier_stats(&self) -> CacheStats {
+        self.frontiers.lock().unwrap().stats
     }
 
     /// Number of hosted apps.
@@ -521,5 +536,34 @@ mod tests {
         // Within the cooldown no further joint switches are issued.
         let again = sched.observe(5100.0, &conds);
         assert!(again.is_empty());
+    }
+
+    #[test]
+    fn readaptation_reuses_cached_frontiers() {
+        let (dev, reg, lut) = setup();
+        let mut sched = Scheduler::new(dev, reg, lut);
+        let idle = Conditions::idle();
+        sched.register(desc("a", "mobilenet_v2_100", 60.0, 1e6), 0.0, &idle)
+            .unwrap();
+        let after_register = sched.frontier_stats();
+        assert!(after_register.builds >= 1);
+        // Alternate between two condition vectors in the same two buckets:
+        // after the first visit to each bucket, every further event is a
+        // cache hit — no frontier is ever rebuilt.
+        let e0 = sched.design_of("a").unwrap().hw.engine;
+        let mut loaded = Conditions::idle();
+        loaded.loads.insert(e0, 3.0);
+        let mut t = 5000.0;
+        for _ in 0..6 {
+            sched.observe(t, &loaded);
+            t += 2000.0;
+            sched.observe(t, &idle);
+            t += 2000.0;
+        }
+        let stats = sched.frontier_stats();
+        assert!(stats.builds <= after_register.builds + 2,
+                "re-adaptation kept rebuilding frontiers: {stats:?}");
+        assert!(stats.hits >= 8, "expected cache hits, got {stats:?}");
+        assert_eq!(stats.invalidations, 0);
     }
 }

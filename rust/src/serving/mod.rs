@@ -543,6 +543,34 @@ impl MultiServer {
         Ok(())
     }
 
+    /// The serving configuration a jointly-chosen design implies: the
+    /// design family's batch ladder, an INT8 degraded ladder (when one
+    /// exists) for overload brownout, the app's SLO as the request
+    /// deadline, and one worker lane pinned to the design's
+    /// engine/threads/governor.  Shared by admission
+    /// ([`MultiServer::register_admitted`]) and re-adaptation
+    /// ([`MultiServer::readapt`]).
+    fn config_for_design(registry: &Registry, design: &crate::optimizer::Design,
+                         slo_latency_ms: f64) -> Result<ServerConfig> {
+        let v = registry.get(&design.variant).ok_or_else(|| {
+            anyhow!("admitted variant `{}` not in registry", design.variant)
+        })?;
+        let mut cfg = ServerConfig::for_family(registry, &v.family, v.precision)?;
+        if v.precision != Precision::Int8 {
+            let high = (cfg.queue_cap * 3) / 4;
+            let low = cfg.queue_cap / 4;
+            cfg = cfg.with_degraded(registry, &v.family, Precision::Int8,
+                                    high, low);
+        }
+        cfg.deadline_ms = slo_latency_ms;
+        cfg.lanes = vec![Some(ExecHint {
+            engine: design.hw.engine,
+            threads: design.hw.threads,
+            governor: design.hw.governor,
+        })];
+        Ok(cfg)
+    }
+
     /// Register an app through the multi-app scheduler's admission control
     /// (degrade-or-reject): on admission, the app's server is configured
     /// from the jointly-chosen design — its family/precision ladder, a
@@ -557,26 +585,67 @@ impl MultiServer {
         let slo_latency_ms = desc.slo_latency_ms;
         let adm = scheduler.register(desc, now_ms, conds)?;
         if let Admission::Admitted { design, .. } = &adm {
-            let v = registry.get(&design.variant).ok_or_else(|| {
-                anyhow!("admitted variant `{}` not in registry", design.variant)
-            })?;
-            let mut cfg =
-                ServerConfig::for_family(registry, &v.family, v.precision)?;
-            if v.precision != Precision::Int8 {
-                let high = (cfg.queue_cap * 3) / 4;
-                let low = cfg.queue_cap / 4;
-                cfg = cfg.with_degraded(registry, &v.family, Precision::Int8,
-                                        high, low);
-            }
-            cfg.deadline_ms = slo_latency_ms;
-            cfg.lanes = vec![Some(ExecHint {
-                engine: design.hw.engine,
-                threads: design.hw.threads,
-                governor: design.hw.governor,
-            })];
+            let cfg = Self::config_for_design(registry, design, slo_latency_ms)?;
             self.register(&app_id, registry, cfg)?;
         }
         Ok(adm)
+    }
+
+    /// Serving-side joint re-adaptation: run the scheduler's coordinated
+    /// re-optimisation (an O(frontier) walk over the cached per-app Pareto
+    /// frontiers — see [`crate::designspace`]) and, for every app whose
+    /// design switched, restart its `Server` with the new design's ladder
+    /// and engine lane.  In-flight requests of a restarted app drain on
+    /// the old server before it stops.  Every switched app is attempted —
+    /// a failed restart leaves that app serving on its previous
+    /// configuration and is reported in the returned error (naming the
+    /// apps) only after the remaining switches have been applied, so a
+    /// single failure cannot silently desynchronise the rest of the
+    /// fleet.  Caveat: the scheduler has already committed the switch, so
+    /// a named-failed app serves on its old lane while the arbiter
+    /// accounts for the new one until the caller re-registers it or a
+    /// later re-adaptation moves it again — the error exists precisely so
+    /// the caller can repair that.  Returns the coordinated switches.
+    pub fn readapt(&mut self, scheduler: &mut Scheduler, registry: &Registry,
+                   now_ms: f64, conds: &Conditions)
+                   -> Result<Vec<(String, crate::manager::Switch)>> {
+        let issued = scheduler.observe(now_ms, conds);
+        let mut failures: Vec<String> = Vec::new();
+        for (app_id, sw) in &issued {
+            if !self.apps.contains_key(app_id) {
+                continue; // scheduler tenant without a serving front-end
+            }
+            let slo = scheduler
+                .descriptors()
+                .iter()
+                .find(|d| &d.app_id == app_id)
+                .map(|d| d.slo_latency_ms)
+                .unwrap_or(f64::INFINITY);
+            // Build and start the replacement *before* tearing the old
+            // server down: a failure here leaves the app serving on its
+            // previous configuration instead of dropping it.
+            let started = Self::config_for_design(registry, &sw.to, slo)
+                .and_then(|cfg| {
+                    Server::start(Arc::clone(&self.backend), registry, cfg)
+                });
+            match started {
+                Ok(srv) => {
+                    if let Some(old) = self.apps.remove(app_id) {
+                        old.stop();
+                    }
+                    self.apps.insert(app_id.clone(), srv);
+                }
+                Err(e) => failures.push(format!("{app_id}: {e:#}")),
+            }
+        }
+        if !failures.is_empty() {
+            return Err(anyhow!(
+                "readapt: {} of {} switched servers failed to restart \
+                 (still serving their previous designs): {}",
+                failures.len(), issued.len(), failures.join("; ")
+            ));
+        }
+        Ok(issued)
     }
 
     /// The per-app serving handle.
@@ -801,6 +870,51 @@ mod tests {
             .unwrap();
         assert!(matches!(adm, Admission::Rejected { .. }));
         assert_eq!(multi.len(), 1);
+        multi.stop();
+    }
+
+    #[test]
+    fn readapt_restarts_switched_servers_from_the_frontier() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(30, 2).measure_all().unwrap();
+        let mut sched = Scheduler::new(Arc::new(dev.clone()),
+                                       Arc::new(reg.clone()), Arc::new(lut));
+        let mut multi = MultiServer::new(backend(&reg));
+        let idle = Conditions::idle();
+        let desc = WorkloadDescriptor {
+            app_id: "cam".into(),
+            family: "mobilenet_v2_100".into(),
+            arrival_fps: 30.0,
+            objective: Objective::MinLatency {
+                stat: Percentile::Avg,
+                epsilon: 0.05,
+            },
+            slo_latency_ms: 1e6,
+        };
+        multi.register_admitted(&mut sched, &reg, desc, 0.0, &idle).unwrap();
+        let e0 = sched.design_of("cam").unwrap().hw.engine;
+
+        // Quiet conditions: no switch, server untouched.
+        let issued = multi.readapt(&mut sched, &reg, 5000.0, &idle).unwrap();
+        assert!(issued.is_empty());
+
+        // Heavy load on the app's engine: the coordinated re-adaptation
+        // migrates it and the serving front-end restarts on the new lane.
+        let mut loaded = Conditions::idle();
+        loaded.loads.insert(e0, 3.0);
+        let issued = multi.readapt(&mut sched, &reg, 10_000.0, &loaded).unwrap();
+        assert_eq!(issued.len(), 1, "expected one coordinated switch");
+        assert_ne!(issued[0].1.to.hw.engine, e0);
+        assert_eq!(multi.len(), 1, "restarted in place, not duplicated");
+
+        // The restarted server still serves its app.
+        let v = reg.get("mobilenet_v2_100__fp32__b1").unwrap();
+        let rx = multi.app("cam").unwrap()
+            .submit(class_frame(v.resolution, 4), v.resolution, v.resolution)
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert!(resp.variant.starts_with("mobilenet_v2_100"), "{}", resp.variant);
         multi.stop();
     }
 }

@@ -13,8 +13,11 @@
 //!   FP32/GPU at 3.0 ms once ε = 0 excludes lossy precisions);
 //! * target-latency maximises accuracy inside the 3 ms budget (FP32/GPU);
 //! * the weighted accuracy+fps sum saturates fps at the camera rate, so
-//!   every FP32 r=1 design ties at score 2.0 and the stable sort keeps the
-//!   first LUT entry (CPU, 1 thread, performance).
+//!   every FP32 r=1 design ties at score 2.0 and the design-space layer's
+//!   canonical tie chain breaks toward the lowest-energy design: CPU
+//!   4-thread schedutil at 5 ms (energy ∝ T·heat·f²·gov_heat = 5.0 × 0.08
+//!   × 0.94² × 0.85 ≈ 0.300, below the 4-thread performance entry's 0.320
+//!   and every GPU/NNAPI entry).
 
 use std::collections::BTreeMap;
 

@@ -1,0 +1,886 @@
+#!/usr/bin/env python3
+"""Independent oracle for the fleet-bench golden snapshot.
+
+Re-implements, in plain Python, every deterministic component behind
+``rust/tests/golden/fleetbench_smoke.json`` — the ``oodin fleet-bench
+--smoke`` payload: SplitMix64 population sampling, archetype perturbation
+along the five heterogeneity axes (+ hidden per-engine latent efficiency),
+zero-noise Measurer LUTs, cross-device roofline-ratio LUT transfer with
+confidence-gated probe fallback, cohort grouping with shared
+frontier-cache accounting, the RuntimeManager decide() state machine under
+the scripted condition storm, regret against the full-profile oracle, and
+the JSON emission of ``util::json::to_string``.
+
+Why this exists: the golden snapshot must be producible *without* running
+the Rust binary (the authoring container has no Rust toolchain), and it
+doubles as an N-version check — Rust and Python implementations of the
+same spec must agree byte-for-byte (the same convention as
+``golden_optbench.py`` and ``golden_serve_bench.py``).
+
+Exactness notes: with measurement noise at 0 every latency is IEEE-754
+double arithmetic mirrored here in the same operation order.  Storm loads
+sit on conditions-bucket centres (exact powers of two), so bucketed and
+exact conditions coincide.  Where the Rust side walks a cached Pareto
+frontier this oracle runs the full enumerative search at the bucket's
+representative conditions — the design-space layer's exactness theorem
+(property-tested in `tests/designspace_props.rs`, re-asserted per event by
+the Rust driver) guarantees both pick the same design.
+
+Usage:  python3 python/golden_fleetbench.py [--check]
+  default: writes the golden file
+  --check: compares against the existing file, exit 1 on drift
+"""
+
+import math
+import os
+import sys
+
+# --------------------------------------------------------------------------
+# util::rng::Rng (SplitMix64)
+# --------------------------------------------------------------------------
+
+M64 = (1 << 64) - 1
+GOLDEN_GAMMA = 0x9E3779B97F4A7C15
+
+
+class Rng:
+    def __init__(self, seed):
+        self.state = (seed + GOLDEN_GAMMA) & M64
+
+    def next_u64(self):
+        self.state = (self.state + GOLDEN_GAMMA) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return z ^ (z >> 31)
+
+    def f64(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def range(self, lo, hi):
+        return lo + self.f64() * (hi - lo)
+
+    def below(self, n):
+        return self.next_u64() % n
+
+
+def device_seed(seed, index):
+    """fleet::population::device_seed — FNV-1a over seed + index bytes."""
+    h = 0xCBF29CE484222325
+    data = seed.to_bytes(8, "little") + index.to_bytes(8, "little")
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & M64
+    return h
+
+
+def rust_round(x):
+    """f64::round: half away from zero (positive inputs here)."""
+    f = math.floor(x)
+    return int(f) if x - f < 0.5 else int(f) + 1
+
+
+def r3(x):
+    return rust_round(x * 1000.0) / 1000.0
+
+
+# --------------------------------------------------------------------------
+# Device archetypes (device/profiles.rs) and model fixture
+# (model::test_fixtures::fake_registry) — as in golden_optbench.py.
+# --------------------------------------------------------------------------
+
+GOV_ORDER = ["performance", "schedutil", "energy_step"]
+FREQ_SCALE = {"performance": 1.0, "schedutil": 0.94, "energy_step": 0.78}
+HEAT_FACTOR = {"performance": 1.0, "schedutil": 0.85, "energy_step": 0.58}
+ENGINE_ORDER = ["cpu", "gpu", "nnapi"]
+ARCHETYPES = ["sony_c5", "samsung_a71", "samsung_s20_fe"]
+
+
+def engine(kind, peak, fp16, int8, bw, dispatch, parallel, heat):
+    return dict(kind=kind, peak=peak, fp16=fp16, int8=int8, bw=bw,
+                dispatch=dispatch, parallel=parallel, heat=heat)
+
+
+BASE_DEVICES = {
+    "sony_c5": dict(
+        engines=[
+            engine("cpu", 6.0, 0.85, 1.8, 2.5, 0.004, 0.80, 1.05),
+            engine("gpu", 9.0, 1.7, 0.9, 3.5, 0.080, 0.0, 0.90),
+        ],
+        n_cores=8,
+        mem_budget=4 * 1024 * 1024,
+        governors=["performance", "schedutil"],
+        max_deployable=8.0,
+    ),
+    "samsung_a71": dict(
+        engines=[
+            engine("cpu", 14.0, 0.95, 2.2, 8.0, 0.002, 0.85, 0.08),
+            engine("gpu", 22.0, 1.9, 1.3, 11.0, 0.012, 0.0, 0.25),
+            engine("nnapi", 16.0, 1.4, 4.0625, 9.0, 0.018, 0.0, 0.30),
+        ],
+        n_cores=8,
+        mem_budget=12 * 1024 * 1024,
+        governors=["energy_step", "performance", "schedutil"],
+        max_deployable=25.0,
+    ),
+    "samsung_s20_fe": dict(
+        engines=[
+            engine("cpu", 30.0, 1.0, 2.5, 16.0, 0.0015, 0.85, 0.48),
+            engine("gpu", 60.0, 1.9, 1.4, 22.0, 0.018, 0.0, 0.42),
+            engine("nnapi", 20.0, 1.6, 7.5, 14.0, 0.030, 0.0, 0.66),
+        ],
+        n_cores=8,
+        mem_budget=12 * 1024 * 1024,
+        governors=["energy_step", "performance", "schedutil"],
+        max_deployable=25.0,
+    ),
+}
+
+NPU_PENALTY = {
+    ("samsung_a71", "efficientnet_lite4"): 3.0,
+    ("samsung_a71", "deeplab_v3"): 12.0,
+    ("samsung_a71", "resnet_v2"): 1.8,
+    ("samsung_s20_fe", "efficientnet_lite4"): 1.5,
+    ("samsung_s20_fe", "deeplab_v3"): 110.0,
+    ("samsung_s20_fe", "inception_v3"): 4.0,
+    ("samsung_s20_fe", "resnet_v2"): 3.0,
+}
+
+FAMS = [
+    ("mobilenet_v2_100", "cls", 24, 4_000_000),
+    ("efficientnet_lite4", "cls", 32, 40_000_000),
+    ("inception_v3", "cls", 32, 90_000_000),
+    ("deeplab_v3", "seg", 48, 50_000_000),
+]
+PRECS = [("fp32", 32, 0.90), ("fp16", 16, 0.899), ("int8", 8, 0.885)]
+
+
+def variants():
+    out = {}
+    for fam, task, res, flops in FAMS:
+        for prec, bits, acc in PRECS:
+            name = f"{fam}__{prec}__b1"
+            in_elems = res * res * 3
+            out_elems = 10 if task == "cls" else res * res * 5
+            size = 400_000 * bits // 32
+            io = max(in_elems, out_elems) * 4
+            out[name] = dict(
+                name=name, family=fam, prec=prec, flops=flops, size=size,
+                acc=acc, in_elems=in_elems, out_elems=out_elems,
+                mem=size + in_elems * 4 + io * 2,
+            )
+    return out
+
+
+VARIANTS = variants()
+# Registry order (manifest order): families × precisions.
+VARIANT_ORDER = [f"{fam}__{prec}__b1" for fam, _, _, _ in FAMS
+                 for prec, _, _ in PRECS]
+A_REF = 0.90
+
+
+# --------------------------------------------------------------------------
+# Roofline latency (perf::latency_ms) parametrised over synthesized devices.
+# --------------------------------------------------------------------------
+
+
+def thread_speedup(parallel, threads):
+    if threads <= 1:
+        return 1.0
+    return 1.0 / ((1.0 - parallel) + parallel / float(threads))
+
+
+def spec_of(dev, kind):
+    for s in dev["engines"]:
+        if s["kind"] == kind:
+            return s
+    return None
+
+
+def roofline_ms(dev, kind, vname, threads, governor):
+    """perf::latency_ms at nominal (idle, cool) conditions."""
+    spec = spec_of(dev, kind)
+    if spec is None:
+        return None
+    v = VARIANTS[vname]
+    threads = max(min(threads, dev["n_cores"]), 1)
+    if spec["kind"] == "cpu":
+        allc = thread_speedup(spec["parallel"], dev["n_cores"])
+        base = spec["peak"] / allc * thread_speedup(spec["parallel"], threads)
+    else:
+        base = spec["peak"]
+    penalty = (NPU_PENALTY.get((dev["archetype"], v["family"]), 1.0)
+               if spec["kind"] == "nnapi" else 1.0)
+    pm = {"fp32": 1.0, "fp16": spec["fp16"], "int8": spec["int8"]}[v["prec"]]
+    gflops = base * pm * FREQ_SCALE[governor] * 1.0 / penalty
+    compute = (float(v["flops"]) * 1.0) / (gflops * 1e6)
+    act = (v["in_elems"] + v["out_elems"]) * 4
+    memory = (float(v["size"]) + float(act)) / (spec["bw"] * 1e6)
+    roof = max(compute, memory)
+    return (spec["dispatch"] + roof) * 1.0  # contention(0) == 1.0
+
+
+def avg_of_identical(base, runs):
+    """LatencyStats::from_samples mean over `runs` identical samples."""
+    total = 0.0
+    for _ in range(runs):
+        total += base
+    return total / float(runs)
+
+
+def thread_candidates(n_cores):
+    t = [1]
+    v = 2
+    while v < n_cores:
+        t.append(v)
+        v *= 2
+    if n_cores > 1:
+        t.append(n_cores)
+    return t
+
+
+def lut_keys(dev):
+    """Every (variant, engine, threads, governor) the Measurer sweeps."""
+    keys = []
+    for spec in dev["engines"]:
+        threads = (thread_candidates(dev["n_cores"])
+                   if spec["kind"] == "cpu" else [1])
+        for vname in VARIANT_ORDER:
+            for t in threads:
+                for g in dev["governors"]:
+                    keys.append((vname, spec["kind"], t, g))
+    return keys
+
+
+def key_sort(key):
+    v, e, t, g = key
+    return (v, ENGINE_ORDER.index(e), t, GOV_ORDER.index(g))
+
+
+def build_lut(dev, runs):
+    """Zero-noise Measurer sweep: (variant, engine, threads, gov) -> avg."""
+    lut = {}
+    for key in lut_keys(dev):
+        vname, kind, t, g = key
+        lut[key] = avg_of_identical(roofline_ms(dev, kind, vname, t, g), runs)
+    return lut
+
+
+# --------------------------------------------------------------------------
+# fleet::population — sampling and cohorts.
+# --------------------------------------------------------------------------
+
+CFG = dict(
+    size=200, seed=77,
+    flops_log_spread=0.30, bw_log_spread=0.15, thermal_log_spread=0.20,
+    mem_log_spread=0.15, latent_log_spread=0.10, npu_drop_prob=0.15,
+    confidence_threshold=0.72, probe_runs=4, probes_per_engine=2,
+    lut_runs=4, frontier_cache_cap=256,
+    family="mobilenet_v2_100", eps=0.05,
+    ticks=12, tick_ms=250.0, regret_ticks=[1, 4, 8, 11],
+)
+RATES = [1.0, 0.5, 0.25]
+CAMERA_FPS = 30.0
+BUCKET_LOG2_STEP = 0.5
+
+
+def scaled_device(archetype, axes, thermal_ln, mem_ln, latent):
+    base = BASE_DEVICES[archetype]
+    engines = []
+    for kind, f, b, lat in axes:
+        spec = dict(spec_of(base, kind))
+        spec["peak"] = spec["peak"] * math.exp(f)
+        spec["bw"] = spec["bw"] * math.exp(b)
+        if latent:
+            spec["peak"] = spec["peak"] * math.exp(lat)
+            spec["bw"] = spec["bw"] * math.exp(lat)
+        spec["heat"] = spec["heat"] * math.exp(-thermal_ln)
+        engines.append(spec)
+    return dict(
+        archetype=archetype,
+        engines=engines,
+        n_cores=base["n_cores"],
+        mem_budget=int(base["mem_budget"] * math.exp(mem_ln)),
+        governors=base["governors"],
+        max_deployable=base["max_deployable"],
+    )
+
+
+def sample_device(idx):
+    rng = Rng(device_seed(CFG["seed"], idx))
+    archetype = ARCHETYPES[rng.below(3)]
+    base = BASE_DEVICES[archetype]
+    drop = rng.f64() < CFG["npu_drop_prob"]
+    axes = []
+    dropped = False
+    for spec in base["engines"]:
+        f = rng.range(-CFG["flops_log_spread"], CFG["flops_log_spread"])
+        b = rng.range(-CFG["bw_log_spread"], CFG["bw_log_spread"])
+        lat = rng.range(-CFG["latent_log_spread"], CFG["latent_log_spread"])
+        if spec["kind"] == "nnapi" and drop:
+            dropped = True
+            continue
+        axes.append((spec["kind"], f, b, lat))
+    thermal_ln = rng.range(-CFG["thermal_log_spread"],
+                           CFG["thermal_log_spread"])
+    mem_ln = rng.range(-CFG["mem_log_spread"], CFG["mem_log_spread"])
+    return dict(
+        idx=idx,
+        archetype=archetype,
+        axes=axes,
+        dropped=dropped,
+        nominal=scaled_device(archetype, axes, thermal_ln, mem_ln, False),
+        true=scaled_device(archetype, axes, thermal_ln, mem_ln, True),
+    )
+
+
+def cohort_key(d):
+    return (d["archetype"],
+            tuple(ENGINE_ORDER.index(k) for k, _, _, _ in d["axes"]),
+            tuple(f >= 0.0 for _, f, _, _ in d["axes"]))
+
+
+def cohort_id(key):
+    arch, engines, hi = key
+    names = "+".join(ENGINE_ORDER[e] for e in engines)
+    signs = "".join("+" if h else "-" for h in hi)
+    return f"{arch}|{names}|f={signs}"
+
+
+def cohort_representative(key):
+    arch, engines, hi = key
+    fs = CFG["flops_log_spread"]
+    axes = [(ENGINE_ORDER[e], (fs / 2.0) if h else (-fs / 2.0), 0.0, 0.0)
+            for e, h in zip(engines, hi)]
+    return scaled_device(arch, axes, 0.0, -CFG["mem_log_spread"], False)
+
+
+# --------------------------------------------------------------------------
+# fleet::transfer — roofline-ratio prediction + probe fallback.
+# --------------------------------------------------------------------------
+
+
+def engine_distance(t, a):
+    return (abs(math.log(t["peak"] / a["peak"]))
+            + abs(math.log(t["bw"] / a["bw"]))
+            + abs(math.log(t["dispatch"] / a["dispatch"])))
+
+
+def anchors_by_distance(anchors, spec):
+    ranked = []
+    for i, a in enumerate(anchors):
+        aspec = spec_of(a["profile"], spec["kind"])
+        if aspec is not None:
+            ranked.append((i, engine_distance(spec, aspec)))
+    ranked.sort(key=lambda x: x[1])
+    return ranked
+
+
+def predict_lut(anchors, nominal):
+    """TransferEngine::predict — entries + per-engine (anchor, distance)."""
+    entries = {}
+    engines = {}
+    for spec in nominal["engines"]:
+        ranked = anchors_by_distance(anchors, spec)
+        nearest, distance = ranked[0]
+        engines[spec["kind"]] = dict(
+            anchor=anchors[nearest]["name"], distance=distance,
+            confidence=math.exp(-distance), probed=False, probes=0,
+            correction=1.0)
+        threads = (thread_candidates(nominal["n_cores"])
+                   if spec["kind"] == "cpu" else [1])
+        for vname in VARIANT_ORDER:
+            for t in threads:
+                for g in nominal["governors"]:
+                    key = (vname, spec["kind"], t, g)
+                    hit = None
+                    for i, _ in ranked:
+                        if key in anchors[i]["lut"]:
+                            hit = i
+                            break
+                    if hit is None:
+                        continue
+                    target_roof = roofline_ms(nominal, spec["kind"], vname,
+                                              t, g)
+                    anchor_roof = roofline_ms(anchors[hit]["profile"],
+                                              spec["kind"], vname, t, g)
+                    ratio = target_roof / anchor_roof
+                    entries[key] = anchors[hit]["lut"][key] * ratio
+    return entries, engines
+
+
+def probe_engine(entries, engines, kind, true_profile):
+    """TransferEngine::probe_engine — geometric-mean correction."""
+    keys = sorted([k for k in entries if k[1] == kind], key=key_sort)
+    p = CFG["probes_per_engine"]
+    picks = []
+    for j in range(p):
+        idx = 0 if p == 1 else j * (len(keys) - 1) // (p - 1)
+        if keys[idx] not in picks:
+            picks.append(keys[idx])
+    log_sum = 0.0
+    for key in picks:
+        vname, k, t, g = key
+        measured = avg_of_identical(roofline_ms(true_profile, k, vname, t, g),
+                                    CFG["probe_runs"])
+        log_sum += math.log(measured / entries[key])
+    correction = math.exp(log_sum / len(picks))
+    for key in list(entries.keys()):
+        if key[1] == kind:
+            entries[key] = entries[key] * correction
+    engines[kind]["probed"] = True
+    engines[kind]["probes"] = len(picks)
+    engines[kind]["correction"] = correction
+
+
+# --------------------------------------------------------------------------
+# designspace mirror: buckets, enumeration, canonical rank.
+# --------------------------------------------------------------------------
+
+
+def contention(load):
+    return 2.0 ** max(load, 0.0)
+
+
+def bucket_of(loads, thermals):
+    steps = {}
+    for e in ENGINE_ORDER:
+        mult = contention(loads.get(e, 0.0)) / max(thermals.get(e, 1.0), 1e-3)
+        step = rust_round(math.log2(mult) / BUCKET_LOG2_STEP)
+        if step != 0:
+            steps[e] = step
+    return steps
+
+
+def bucket_id(steps):
+    if not steps:
+        return "idle"
+    return ",".join(f"{e}{steps[e]:+d}" for e in ENGINE_ORDER if e in steps)
+
+
+def energy_proxy(spec, avg_ms, governor):
+    f = FREQ_SCALE[governor]
+    return avg_ms * spec["heat"] * f * f * HEAT_FACTOR[governor]
+
+
+def adjusted(lut, design, loads, thermals):
+    """manager::adjusted_latency at stat=avg."""
+    key = design[:4]
+    if key not in lut:
+        return None
+    e = design[1]
+    return lut[key] * contention(loads.get(e, 0.0)) \
+        / max(thermals.get(e, 1.0), 1e-3)
+
+
+def enumerate_space(dev, lut, family, eps, loads, thermals):
+    """DesignSpace::enumerate for MinLatency(avg) at given conditions."""
+    out = []
+    for key in sorted(lut.keys(), key=key_sort):
+        vname, kind, threads, governor = key
+        v = VARIANTS[vname]
+        if v["family"] != family:
+            continue
+        spec = spec_of(dev, kind)
+        if spec is None:
+            continue
+        raw_avg = lut[key]
+        if not v["mem"] <= dev["mem_budget"]:
+            continue
+        if raw_avg > dev["max_deployable"]:
+            continue
+        if A_REF - v["acc"] > eps + 1e-12:
+            continue
+        energy = energy_proxy(spec, raw_avg, governor)
+        adj = raw_avg * contention(loads.get(kind, 0.0)) \
+            / max(thermals.get(kind, 1.0), 1e-3)
+        for r in RATES:
+            fps = min(CAMERA_FPS * r, 1000.0 / adj)
+            out.append(dict(
+                variant=vname, engine=kind, threads=threads,
+                governor=governor, r=r, latency=adj, avg=adj, fps=fps,
+                mem=v["mem"], acc=v["acc"], energy=energy,
+            ))
+    return out
+
+
+def rank_key(c):
+    return (-c["score"], c["energy"], c["latency"], -c["acc"], c["avg"],
+            -c["r"], c["mem"], c["variant"],
+            ENGINE_ORDER.index(c["engine"]), c["threads"],
+            GOV_ORDER.index(c["governor"]))
+
+
+def best_design(dev, lut, loads, thermals):
+    """rank(enumerate)[0] as a design tuple (MinLatency: score=-latency)."""
+    cands = enumerate_space(dev, lut, CFG["family"], CFG["eps"], loads,
+                            thermals)
+    for c in cands:
+        c["score"] = -c["latency"]
+    if not cands:
+        return None
+    best = min(cands, key=rank_key)
+    return (best["variant"], best["engine"], best["threads"],
+            best["governor"], best["r"])
+
+
+# --------------------------------------------------------------------------
+# manager::RuntimeManager::decide — the adaptation state machine.
+# --------------------------------------------------------------------------
+
+POLICY = dict(load_delta=0.1, min_improvement=1.10, check_interval=250.0,
+              confirmations=3, violation_ratio=1.25, cooldown=1000.0,
+              thermal_alert=0.95)
+
+
+class Manager:
+    def __init__(self, current):
+        self.current = current
+        self.last_loads = {}
+        self.last_check = -math.inf
+        self.last_switch = -math.inf
+        self.violations = 0
+
+    def decide(self, now, loads, thermals, select):
+        if now - self.last_check < POLICY["check_interval"]:
+            return ("hold", "not_due")
+        self.last_check = now
+        if now - self.last_switch < POLICY["cooldown"]:
+            return ("hold", "cooldown")
+        load_changed = any(
+            abs(loads.get(k, 0.0) - self.last_loads.get(k, 0.0))
+            >= POLICY["load_delta"] for k in ENGINE_ORDER)
+        # No measured-latency window in the fleet driver: degradation is
+        # the middleware-c thermal alert on the current engine only.
+        degraded_now = (thermals.get(self.current[1], 1.0)
+                        < POLICY["thermal_alert"])
+        if degraded_now:
+            self.violations += 1
+        else:
+            self.violations = 0
+        confirmed = self.violations >= POLICY["confirmations"]
+        if not load_changed and not confirmed:
+            return ("hold", "no_trigger")
+        if load_changed:
+            for k in ENGINE_ORDER:
+                self.last_loads[k] = loads.get(k, 0.0)
+        best = select(loads, thermals)
+        if best is None:
+            return ("hold", "no_alternative")
+        if best == self.current:
+            return ("hold", "current_still_best")
+        cur_adj = adjusted(self.lut, self.current, loads, thermals)
+        best_adj = adjusted(self.lut, best, loads, thermals)
+        if cur_adj is None or best_adj is None:
+            return ("hold", "no_alternative")
+        if cur_adj / best_adj < POLICY["min_improvement"]:
+            return ("hold", "below_hysteresis")
+        reason = "degradation" if confirmed else "load"
+        self.current = best
+        self.last_switch = now
+        self.violations = 0
+        return ("switch", reason)
+
+
+# --------------------------------------------------------------------------
+# The bench: cohorts, shared-cache accounting, storm, regret, JSON.
+# --------------------------------------------------------------------------
+
+
+def storm_phase(tick):
+    if tick <= 2:
+        return "calm"
+    if tick <= 6:
+        return "gpu_surge"
+    if tick <= 9:
+        return "npu_throttle"
+    return "recovery"
+
+
+def storm_conditions(tick, idx, has_npu):
+    loads, thermals = {}, {}
+    phase = storm_phase(tick)
+    if phase == "gpu_surge":
+        if idx % 2 == 0:
+            loads["gpu"] = 1.0
+    elif phase == "npu_throttle":
+        if has_npu:
+            thermals["nnapi"] = 0.5
+        else:
+            loads["cpu"] = 1.0
+    return loads, thermals
+
+
+def jnum(n):
+    f = float(n)
+    if f == int(f) and abs(f) < 9e15:
+        return str(int(f))
+    return repr(f)
+
+
+def jobj(fields):
+    return "{" + ",".join(f'"{k}":{v}' for k, v in fields) + "}"
+
+
+def jbool(b):
+    return "true" if b else "false"
+
+
+def run_fleetbench_smoke():
+    # Anchors: every archetype, full zero-noise sweep.
+    anchors = []
+    for name in ARCHETYPES:
+        profile = dict(BASE_DEVICES[name], archetype=name)
+        anchors.append(dict(name=name, profile=profile,
+                            lut=build_lut(profile, CFG["lut_runs"])))
+
+    # Population.
+    devices = [sample_device(i) for i in range(CFG["size"])]
+    arch_counts = {a: 0 for a in ARCHETYPES}
+    npu_dropped = 0
+    for d in devices:
+        arch_counts[d["archetype"]] += 1
+        if d["dropped"]:
+            npu_dropped += 1
+
+    # Cohorts in canonical key order, with cohort-level confidence (worst
+    # member) and probe fallback on the first member.
+    groups = {}
+    for d in devices:
+        groups.setdefault(cohort_key(d), []).append(d["idx"])
+    cohorts = []
+    device_cohort = {}
+    for ci, key in enumerate(sorted(groups.keys())):
+        members = groups[key]
+        rep = cohort_representative(key)
+        entries, engines = predict_lut(anchors, rep)
+        for kind in sorted(engines.keys(), key=ENGINE_ORDER.index):
+            dist = engines[kind]["distance"]
+            for m in members:
+                mspec = spec_of(devices[m]["nominal"], kind)
+                ranked = anchors_by_distance(anchors, mspec)
+                dist = max(dist, ranked[0][1])
+            engines[kind]["distance"] = dist
+            engines[kind]["confidence"] = math.exp(-dist)
+            if engines[kind]["confidence"] < CFG["confidence_threshold"]:
+                probe_engine(entries, engines, kind,
+                             devices[members[0]]["true"])
+        for m in members:
+            device_cohort[m] = ci
+        cohorts.append(dict(
+            key=key, id=cohort_id(key), rep=rep, lut=entries,
+            engines=engines, members=members, cache={}, builds=0, hits=0))
+
+    # Full-profile oracle LUTs + transfer prediction error on the family.
+    oracle_luts = []
+    err_sum = 0.0
+    err_max = 0.0
+    err_n = 0
+    for d in devices:
+        true_lut = build_lut(d["true"], CFG["lut_runs"])
+        c = cohorts[device_cohort[d["idx"]]]
+        for key in sorted(c["lut"].keys(), key=key_sort):
+            if VARIANTS[key[0]]["family"] != CFG["family"]:
+                continue
+            err = abs(c["lut"][key] / true_lut[key] - 1.0)
+            err_sum += err
+            err_max = max(err_max, err)
+            err_n += 1
+        oracle_luts.append(true_lut)
+
+    def cohort_select(ci, loads, thermals):
+        c = cohorts[ci]
+        bid = bucket_id(bucket_of(loads, thermals))
+        if bid in c["cache"]:
+            c["hits"] += 1
+            return c["cache"][bid]
+        steps = bucket_of(loads, thermals)
+        rep_loads = {e: s * BUCKET_LOG2_STEP for e, s in steps.items()}
+        best = best_design(c["rep"], c["lut"], rep_loads, {})
+        c["builds"] += 1
+        c["cache"][bid] = best
+        return best
+
+    # Managers: initial design = idle-conditions cohort selection.
+    managers = []
+    for d in devices:
+        ci = device_cohort[d["idx"]]
+        init = cohort_select(ci, {}, {})
+        m = Manager(init)
+        m.lut = cohorts[ci]["lut"]
+        m.ci = ci
+        managers.append(m)
+
+    # The storm.
+    holds = dict(not_due=0, cooldown=0, no_trigger=0, no_alternative=0,
+                 current_still_best=0, below_hysteresis=0)
+    switches = switch_load = switch_degradation = 0
+    per_device_switches = [0] * len(devices)
+    regrets = []
+    deploy_faults = 0
+    for tick in range(CFG["ticks"]):
+        now = tick * CFG["tick_ms"]
+        regret_tick = tick in CFG["regret_ticks"]
+        for idx, d in enumerate(devices):
+            has_npu = any(k == "nnapi" for k, _, _, _ in d["axes"])
+            loads, thermals = storm_conditions(tick, idx, has_npu)
+            ci = device_cohort[idx]
+            outcome = managers[idx].decide(
+                now, loads, thermals,
+                lambda ld, th: cohort_select(ci, ld, th))
+            if outcome[0] == "switch":
+                switches += 1
+                per_device_switches[idx] += 1
+                if outcome[1] == "load":
+                    switch_load += 1
+                else:
+                    switch_degradation += 1
+            else:
+                holds[outcome[1]] += 1
+            if regret_tick:
+                sel = cohort_select(ci, loads, thermals)
+                true_lut = oracle_luts[idx]
+                oracle = best_design(d["true"], true_lut, loads, thermals)
+                sel_adj = adjusted(true_lut, sel, loads, thermals)
+                oracle_adj = adjusted(true_lut, oracle, loads, thermals)
+                v = VARIANTS[sel[0]]
+                admissible = (v["mem"] <= d["true"]["mem_budget"]
+                              and true_lut[sel[:4]]
+                              <= d["true"]["max_deployable"])
+                r = sel_adj / oracle_adj - 1.0
+                # Inadmissible picks can undercut the feasible-only oracle:
+                # clamp their regret at 0 (the fault counter is their
+                # signal) so the enforced mean is never flattered.
+                if not admissible:
+                    deploy_faults += 1
+                    regrets.append(max(r, 0.0))
+                else:
+                    regrets.append(r)
+
+    regret_sum = 0.0
+    for r in regrets:
+        regret_sum += r
+    regret_mean = regret_sum / max(len(regrets), 1)
+    regret_max = 0.0
+    for r in regrets:
+        regret_max = max(regret_max, r)
+    zero = sum(1 for r in regrets if r <= 1e-12)
+    builds = sum(c["builds"] for c in cohorts)
+    hits = sum(c["hits"] for c in cohorts)
+
+    # Oracle-side acceptance checks (the Rust driver ensure!s the same).
+    assert builds < CFG["size"], (builds, CFG["size"])
+    assert 100.0 * regret_mean <= 5.0, regret_mean
+
+    probed_cohorts = sum(
+        1 for c in cohorts if any(e["probed"] for e in c["engines"].values()))
+    probe_measurements = sum(e["probes"] for c in cohorts
+                             for e in c["engines"].values())
+
+    # -- JSON emission (mirrors experiments::fleetbench::report_json) -----
+    config = jobj([
+        ("devices", jnum(CFG["size"])),
+        ("seed", jnum(CFG["seed"])),
+        ("family", f'"{CFG["family"]}"'),
+        ("objective", '"min_latency(avg,eps=0.05)"'),
+        ("lut_runs", jnum(CFG["lut_runs"])),
+        ("noise_sigma", jnum(0.0)),
+        ("flops_log_spread", jnum(CFG["flops_log_spread"])),
+        ("bw_log_spread", jnum(CFG["bw_log_spread"])),
+        ("thermal_log_spread", jnum(CFG["thermal_log_spread"])),
+        ("mem_log_spread", jnum(CFG["mem_log_spread"])),
+        ("latent_log_spread", jnum(CFG["latent_log_spread"])),
+        ("npu_drop_prob", jnum(CFG["npu_drop_prob"])),
+        ("confidence_threshold", jnum(CFG["confidence_threshold"])),
+        ("probes_per_engine", jnum(CFG["probes_per_engine"])),
+        ("frontier_cache_cap", jnum(CFG["frontier_cache_cap"])),
+        ("ticks", jnum(CFG["ticks"])),
+        ("tick_ms", jnum(CFG["tick_ms"])),
+    ])
+    population = jobj([
+        ("archetypes", jobj([(a, jnum(arch_counts[a])) for a in ARCHETYPES])),
+        ("npu_dropped", jnum(npu_dropped)),
+        ("cohorts", jnum(len(cohorts))),
+    ])
+    transfer = jobj([
+        ("probed_cohorts", jnum(probed_cohorts)),
+        ("probe_measurements", jnum(probe_measurements)),
+        ("pred_err_mean_pct", jnum(r3(100.0 * err_sum / max(err_n, 1)))),
+        ("pred_err_max_pct", jnum(r3(100.0 * err_max))),
+    ])
+    cohort_rows = []
+    for c in cohorts:
+        min_conf = min(e["confidence"] for e in c["engines"].values())
+        cohort_rows.append(jobj([
+            ("id", f'"{c["id"]}"'),
+            ("members", jnum(len(c["members"]))),
+            ("probed", jbool(any(e["probed"] for e in c["engines"].values()))),
+            ("min_confidence", jnum(r3(min_conf))),
+            ("builds", jnum(c["builds"])),
+            ("hits", jnum(c["hits"])),
+        ]))
+    storm = jobj([
+        ("ticks", jnum(CFG["ticks"])),
+        ("decisions", jnum(CFG["ticks"] * CFG["size"])),
+        ("switches", jnum(switches)),
+        ("switch_load", jnum(switch_load)),
+        ("switch_degradation", jnum(switch_degradation)),
+        ("holds", jobj([
+            ("not_due", jnum(holds["not_due"])),
+            ("cooldown", jnum(holds["cooldown"])),
+            ("no_trigger", jnum(holds["no_trigger"])),
+            ("no_alternative", jnum(holds["no_alternative"])),
+            ("current_still_best", jnum(holds["current_still_best"])),
+            ("below_hysteresis", jnum(holds["below_hysteresis"])),
+        ])),
+        ("devices_switched",
+         jnum(sum(1 for s in per_device_switches if s > 0))),
+        ("max_switches_per_device", jnum(max(per_device_switches))),
+    ])
+    regret = jobj([
+        ("events", jnum(len(regrets))),
+        ("mean_pct", jnum(r3(100.0 * regret_mean))),
+        ("max_pct", jnum(r3(100.0 * regret_max))),
+        ("zero_share", jnum(r3(zero / max(len(regrets), 1)))),
+        ("deploy_faults", jnum(deploy_faults)),
+    ])
+    cache = jobj([
+        ("builds", jnum(builds)),
+        ("hits", jnum(hits)),
+        ("bench_lookups", jnum(len(regrets))),
+        ("evictions", jnum(0)),
+        ("hit_rate", jnum(r3(hits / max(hits + builds, 1)))),
+        ("builds_lt_devices", jbool(builds < CFG["size"])),
+    ])
+    inner = jobj([
+        ("config", config),
+        ("population", population),
+        ("transfer", transfer),
+        ("cohorts", "[" + ",".join(cohort_rows) + "]"),
+        ("storm", storm),
+        ("regret", regret),
+        ("cache", cache),
+    ])
+    return jobj([("fleet_bench", inner)]) + "\n"
+
+
+def main():
+    golden = os.path.normpath(os.path.join(
+        os.path.dirname(__file__), "..", "rust", "tests", "golden",
+        "fleetbench_smoke.json"))
+    content = run_fleetbench_smoke()
+    if "--check" in sys.argv:
+        want = open(golden).read()
+        if want != content:
+            print(f"DRIFT: {golden} does not match oracle", file=sys.stderr)
+            return 1
+        print(f"{golden} matches oracle", file=sys.stderr)
+        return 0
+    with open(golden, "w") as f:
+        f.write(content)
+    print(f"wrote {golden} ({len(content)} bytes)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -57,6 +57,14 @@
 //! **Invalidation.**  The cache fingerprints the LUT and the registry;
 //! when either changes (re-measurement, model-zoo update) every cached
 //! frontier is dropped and rebuilt on demand.
+//!
+//! **Capacity.**  The cache is LRU-bounded
+//! ([`FRONTIER_CACHE_DEFAULT_CAP`], overridable via
+//! [`FrontierCache::with_cap`]): once one cache is shared across a whole
+//! cohort of fleet devices ([`crate::fleet`]), the set of (task, bucket)
+//! pairs its members visit can grow with the population, so resident
+//! frontiers are capped and the least-recently-used one is evicted
+//! (counted in [`CacheStats::evictions`]).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -213,7 +221,8 @@ impl ParetoFrontier {
     }
 }
 
-/// Cache effectiveness counters, reported by `oodin opt-bench`.
+/// Cache effectiveness counters, reported by `oodin opt-bench` and
+/// `oodin fleet-bench`.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CacheStats {
     /// Frontier builds (cache misses).
@@ -224,17 +233,41 @@ pub struct CacheStats {
     pub invalidations: u64,
     /// Candidates enumerated across all builds (the amortised build cost).
     pub candidates_enumerated: u64,
+    /// Frontiers dropped by the LRU capacity bound.
+    pub evictions: u64,
 }
+
+/// Default LRU capacity of a [`FrontierCache`]: generous enough that the
+/// single-device paths (a handful of tasks × conditions buckets) never
+/// evict, while bounding memory when one cache is shared across a whole
+/// cohort of fleet devices.
+pub const FRONTIER_CACHE_DEFAULT_CAP: usize = 1024;
 
 /// The frontier cache: one [`ParetoFrontier`] per (task, bucket), keyed by
 /// a canonical task tag, fingerprint-invalidated when the LUT or registry
-/// changes.
-#[derive(Debug, Default)]
+/// changes, and LRU-bounded to `cap` resident frontiers.
+#[derive(Debug)]
 pub struct FrontierCache {
     fingerprint: u64,
-    map: BTreeMap<(String, String), Arc<ParetoFrontier>>,
+    /// (task, bucket) -> (frontier, last-use tick) — the tick drives LRU
+    /// eviction once `cap` is reached.
+    map: BTreeMap<(String, String), (Arc<ParetoFrontier>, u64)>,
+    tick: u64,
+    cap: usize,
     /// Effectiveness counters since construction.
     pub stats: CacheStats,
+}
+
+impl Default for FrontierCache {
+    fn default() -> Self {
+        FrontierCache {
+            fingerprint: 0,
+            map: BTreeMap::new(),
+            tick: 0,
+            cap: FRONTIER_CACHE_DEFAULT_CAP,
+            stats: CacheStats::default(),
+        }
+    }
 }
 
 /// Canonical cache tag of one search task (objective + space restriction +
@@ -283,9 +316,23 @@ pub fn fingerprint(lut: &Lut, registry: &Registry) -> u64 {
 }
 
 impl FrontierCache {
-    /// An empty cache.
+    /// An empty cache at the default LRU capacity.
     pub fn new() -> Self {
         FrontierCache::default()
+    }
+
+    /// Override the LRU capacity (0 disables the bound).  Evicting the
+    /// least-recently-used frontier keeps a cohort-shared cache's memory
+    /// proportional to its working set of (task, bucket) pairs rather than
+    /// to everything any member ever visited.
+    pub fn with_cap(mut self, cap: usize) -> Self {
+        self.cap = cap;
+        self
+    }
+
+    /// The active LRU capacity (0 = unbounded).
+    pub fn cap(&self) -> usize {
+        self.cap
     }
 
     /// The cached frontier for (objective, space restriction, camera rate,
@@ -308,14 +355,30 @@ impl FrontierCache {
             self.fingerprint = fp;
         }
         let key = (task_tag(objective, sspace, space.camera_fps), bucket.id());
-        if let Some(f) = self.map.get(&key) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some((f, used)) = self.map.get_mut(&key) {
+            *used = tick;
             self.stats.hits += 1;
             return Arc::clone(f);
+        }
+        if self.cap > 0 && self.map.len() >= self.cap {
+            // Evict the least-recently-used frontier (linear scan: the map
+            // is at most `cap` entries and eviction is the rare path).
+            if let Some(lru) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&lru);
+                self.stats.evictions += 1;
+            }
         }
         let f = Arc::new(ParetoFrontier::build(space, objective, sspace, bucket));
         self.stats.builds += 1;
         self.stats.candidates_enumerated += f.space_size as u64;
-        self.map.insert(key, Arc::clone(&f));
+        self.map.insert(key, (Arc::clone(&f), tick));
         f
     }
 
@@ -398,6 +461,39 @@ mod tests {
         assert_eq!(cache.stats.builds, 2, "camera rates must not share");
         assert!(f30.best().unwrap().fps <= 30.0 + 1e-9);
         assert!(f60.best().unwrap().fps > 30.0);
+    }
+
+    #[test]
+    fn lru_cap_bounds_residency_and_counts_evictions() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(10, 1).measure_all().unwrap();
+        let space = SearchSpace::family("mobilenet_v2_100");
+        let ds = DesignSpace::new(&dev, &reg, &lut);
+        let mut cache = FrontierCache::new().with_cap(2);
+        assert_eq!(cache.cap(), 2);
+        // Visit three distinct buckets: the third build must evict the
+        // least-recently-used (the first) while staying at cap residency.
+        let buckets: Vec<ConditionsBucket> = [0.0, 1.0, 2.0]
+            .iter()
+            .map(|&l| {
+                let mut c = Conditions::idle();
+                c.loads.insert(EngineKind::Cpu, l);
+                ConditionsBucket::of(&c)
+            })
+            .collect();
+        for b in &buckets {
+            cache.frontier(&ds, obj(), &space, b);
+        }
+        assert_eq!(cache.len(), 2, "residency must not exceed the cap");
+        assert_eq!(cache.stats.builds, 3);
+        assert_eq!(cache.stats.evictions, 1);
+        // The survivors still hit; the evicted bucket rebuilds.
+        cache.frontier(&ds, obj(), &space, &buckets[2]);
+        assert_eq!(cache.stats.hits, 1);
+        cache.frontier(&ds, obj(), &space, &buckets[0]);
+        assert_eq!(cache.stats.builds, 4, "evicted frontier must rebuild");
+        assert_eq!(cache.stats.evictions, 2);
     }
 
     #[test]

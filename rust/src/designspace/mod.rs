@@ -28,7 +28,7 @@
 pub mod frontier;
 
 pub use frontier::{dominates, CacheStats, ConditionsBucket, FrontierCache,
-                   ParetoFrontier};
+                   ParetoFrontier, FRONTIER_CACHE_DEFAULT_CAP};
 
 use std::cmp::Ordering;
 
@@ -264,6 +264,27 @@ pub fn cmp_ranked(a: &Candidate, b: &Candidate) -> Ordering {
         })
         .then_with(|| a.mem_bytes.cmp(&b.mem_bytes))
         .then_with(|| a.design.lut_key().cmp(&b.design.lut_key()))
+}
+
+/// The canonical frontier-walk selection: the best feasible frontier
+/// point, with hard latency targets re-checked at the *exact* observed
+/// conditions (the frontier is built and ranked at its bucket's
+/// representative conditions, which can sit up to half a quantisation
+/// step away).  `manager::best_under` and the fleet layer's per-device
+/// selection both walk frontiers through this one function, so the
+/// population bench provably mirrors the manager's semantics.
+pub fn select_from_frontier<'f>(frontier: &'f ParetoFrontier, lut: &Lut,
+                                objective: Objective, conds: &Conditions)
+                                -> Option<&'f Candidate> {
+    match objective {
+        Objective::TargetLatency { t_target_ms, .. } => {
+            frontier.points().iter().find(|c| {
+                adjusted_latency(lut, &c.design, objective.stat(), conds)
+                    .map_or(false, |adj| adj <= t_target_ms)
+            })
+        }
+        _ => frontier.best(),
+    }
 }
 
 /// Score and sort candidates best-first under the canonical selection

@@ -1,0 +1,640 @@
+//! Fleet benchmark (`oodin fleet-bench`): population-scale adaptation with
+//! transferred LUTs and cohort-shared frontier caches, judged against a
+//! full-profile oracle.
+//!
+//! The driver builds a seeded device fleet ([`crate::fleet`]), transfers
+//! one LUT per cohort, then replays a scripted condition storm (calm →
+//! GPU surge → NPU thermal wave → recovery) through one
+//! [`crate::manager::RuntimeManager`] per device — every manager pointed
+//! at its cohort's representative profile, transferred LUT and *shared*
+//! frontier cache.  It reports:
+//!
+//! * **decision regret** — at sampled storm ticks, the transferred-LUT
+//!   selection (cohort frontier walk) is re-scored under the device's
+//!   *true* measured LUT and compared with the full-profile oracle's
+//!   selection (complete search over the true LUT at the exact
+//!   conditions).  Regret is the relative true-latency excess;
+//! * **cohort cache effectiveness** — frontier builds vs hits across the
+//!   population (builds scale with cohorts × visited buckets, not with
+//!   devices);
+//! * **per-device adaptation decisions** — switches and hold reasons from
+//!   the real manager state machine under the storm.
+//!
+//! The smoke configuration (200 devices, zero measurement noise) is
+//! byte-stable and golden-pinned (`tests/golden/fleetbench_smoke.json`),
+//! regenerated independently by the Python oracle
+//! `python/golden_fleetbench.py` — same N-version convention as
+//! `opt-bench` and `serve-bench`.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::designspace::{rank, ConditionsBucket, DesignSpace};
+use crate::device::EngineKind;
+use crate::fleet::{Fleet, FleetConfig, PopulationConfig};
+use crate::manager::{adjusted_latency, Conditions, Decision, HoldReason,
+                     Reason, RuntimeManager};
+use crate::measurements::Lut;
+use crate::model::Registry;
+use crate::optimizer::{Objective, SearchSpace};
+use crate::perf;
+use crate::util::json::{self, Value};
+use crate::util::stats::Percentile;
+
+use super::optbench::objective_label;
+use super::r3;
+
+/// Experiment dimensions and depth.
+#[derive(Debug, Clone)]
+pub struct FleetBenchConfig {
+    /// Fleet construction parameters (population, transfer, LUT depth).
+    pub fleet: FleetConfig,
+    /// Model family every device's app is built around.
+    pub family: String,
+    /// Per-app objective.
+    pub objective: Objective,
+    /// Storm length in manager ticks.
+    pub ticks: usize,
+    /// Milliseconds between ticks (the manager check interval).
+    pub tick_ms: f64,
+    /// Ticks at which regret is evaluated against the oracle.
+    pub regret_ticks: Vec<usize>,
+    /// When set, `run` fails if mean regret exceeds this many percent.
+    pub enforce_regret_pct: Option<f64>,
+}
+
+impl FleetBenchConfig {
+    /// The CI-sized, golden-pinned configuration: 200 devices, zero
+    /// measurement noise (every latency is the closed-form roofline
+    /// prediction), regret enforced at ≤ 5%.
+    pub fn smoke() -> Self {
+        FleetBenchConfig {
+            fleet: FleetConfig::default(),
+            family: "mobilenet_v2_100".to_string(),
+            objective: Objective::MinLatency {
+                stat: Percentile::Avg,
+                epsilon: 0.05,
+            },
+            ticks: 12,
+            tick_ms: 250.0,
+            regret_ticks: vec![1, 4, 8, 11],
+            enforce_regret_pct: Some(5.0),
+        }
+    }
+
+    /// The full sweep: a 1000-device fleet with realistic measurement
+    /// noise (not golden-pinned).
+    pub fn full() -> Self {
+        let mut cfg = FleetBenchConfig::smoke();
+        cfg.fleet.population = PopulationConfig {
+            size: 1000,
+            ..PopulationConfig::default()
+        };
+        cfg.fleet.lut_runs = 20;
+        cfg.fleet.lut_warmup = 2;
+        cfg.fleet.noise_sigma = 0.02;
+        cfg.fleet.transfer.noise_sigma = 0.02;
+        cfg.enforce_regret_pct = None;
+        cfg
+    }
+}
+
+/// Storm phase label of a tick.
+pub fn storm_phase(tick: usize) -> &'static str {
+    match tick {
+        0..=2 => "calm",
+        3..=6 => "gpu_surge",
+        7..=9 => "npu_throttle",
+        _ => "recovery",
+    }
+}
+
+/// Scripted per-device conditions at a storm tick.  Loads sit on
+/// conditions-bucket centres (exact powers of two) so the smoke report
+/// stays closed-form.
+pub fn storm_conditions(tick: usize, device_idx: usize, has_npu: bool)
+                        -> Conditions {
+    let mut c = Conditions::idle();
+    match storm_phase(tick) {
+        "gpu_surge" => {
+            if device_idx % 2 == 0 {
+                c.loads.insert(EngineKind::Gpu, 1.0);
+            }
+        }
+        "npu_throttle" => {
+            if has_npu {
+                c.thermal.insert(EngineKind::Npu, 0.5);
+            } else {
+                c.loads.insert(EngineKind::Cpu, 1.0);
+            }
+        }
+        _ => {}
+    }
+    c
+}
+
+/// Hold-reason histogram over every manager tick.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HoldCounts {
+    /// Check interval not elapsed.
+    pub not_due: u64,
+    /// Post-switch quiet period.
+    pub cooldown: u64,
+    /// Stable conditions, nothing to react to.
+    pub no_trigger: u64,
+    /// Trigger fired but no feasible alternative.
+    pub no_alternative: u64,
+    /// Re-search picked the running design.
+    pub current_still_best: u64,
+    /// Alternative won by less than the hysteresis margin.
+    pub below_hysteresis: u64,
+}
+
+/// One cohort's summary row in the report.
+#[derive(Debug, Clone)]
+pub struct CohortRow {
+    /// Canonical cohort id.
+    pub id: String,
+    /// Member device count.
+    pub members: usize,
+    /// True when any engine ran the probe fallback.
+    pub probed: bool,
+    /// Lowest per-engine transfer confidence (worst member).
+    pub min_confidence: f64,
+    /// Frontier builds charged to this cohort's shared cache.
+    pub builds: u64,
+    /// Frontier hits served by this cohort's shared cache.
+    pub hits: u64,
+}
+
+/// The aggregated fleet-bench report.
+#[derive(Debug)]
+pub struct FleetBenchReport {
+    /// The configuration the report was produced under.
+    pub cfg: FleetBenchConfig,
+    /// Devices per archetype, in sampling order.
+    pub archetype_counts: Vec<(&'static str, usize)>,
+    /// Units whose NPU was dropped by the availability axis.
+    pub npu_dropped: usize,
+    /// Per-cohort summary rows.
+    pub cohorts: Vec<CohortRow>,
+    /// Cohorts that ran the probe fallback.
+    pub probed_cohorts: usize,
+    /// Probe configurations measured across the fleet.
+    pub probe_measurements: usize,
+    /// Mean |predicted − true|/true over the family's LUT entries (%).
+    pub pred_err_mean_pct: f64,
+    /// Worst such error (%).
+    pub pred_err_max_pct: f64,
+    /// Manager decisions taken (ticks × devices).
+    pub decisions: u64,
+    /// Reconfigurations issued.
+    pub switches: u64,
+    /// Switches triggered by load change.
+    pub switch_load: u64,
+    /// Switches triggered by confirmed degradation.
+    pub switch_degradation: u64,
+    /// Hold-reason histogram.
+    pub holds: HoldCounts,
+    /// Devices that switched at least once.
+    pub devices_switched: usize,
+    /// Largest per-device switch count.
+    pub max_switches_per_device: u64,
+    /// Regret samples evaluated (regret ticks × devices).
+    pub regret_events: usize,
+    /// Mean regret (%).
+    pub regret_mean_pct: f64,
+    /// Worst regret (%).
+    pub regret_max_pct: f64,
+    /// Fraction of events with (near-)zero regret.
+    pub regret_zero_share: f64,
+    /// Transferred selections inadmissible under the device's true
+    /// memory/deployability filters.
+    pub deploy_faults: u64,
+    /// Frontier builds across every cohort cache.
+    pub cache_builds: u64,
+    /// Frontier hits across every cohort cache.
+    pub cache_hits: u64,
+    /// Cache lookups made by the bench's own regret instrumentation (one
+    /// per regret event) — included in `cache_builds`/`cache_hits`, broken
+    /// out so the adaptation-path rate can be read separately.
+    pub cache_bench_lookups: u64,
+    /// LRU evictions across every cohort cache.
+    pub cache_evictions: u64,
+}
+
+/// The full-profile oracle's selection: complete search over the device's
+/// true LUT at the *exact* observed conditions.
+fn oracle_pick(fleet: &Fleet, device_idx: usize, true_lut: &Lut,
+               objective: Objective, space: &SearchSpace,
+               conds: &Conditions)
+               -> Result<crate::designspace::Candidate> {
+    let ds = DesignSpace::new(&fleet.devices[device_idx].profile,
+                              &fleet.registry, true_lut);
+    let ranked = rank(ds.enumerate(objective, space, conds), objective);
+    ranked.into_iter().next().with_context(|| {
+        format!("{}: oracle found no feasible design",
+                fleet.devices[device_idx].id)
+    })
+}
+
+/// Run the fleet benchmark.
+pub fn run(registry: &Registry, cfg: &FleetBenchConfig)
+           -> Result<FleetBenchReport> {
+    let fleet = Fleet::build(std::sync::Arc::new(registry.clone()),
+                             cfg.fleet.clone())?;
+    let space = SearchSpace::family(&cfg.family);
+    let objective = cfg.objective;
+
+    // Population summary.
+    let mut archetype_counts: Vec<(&'static str, usize)> =
+        crate::fleet::population::ARCHETYPES
+            .iter()
+            .map(|&a| (a, 0usize))
+            .collect();
+    let mut npu_dropped = 0usize;
+    for d in &fleet.devices {
+        if let Some(c) = archetype_counts.iter_mut().find(|c| c.0 == d.archetype)
+        {
+            c.1 += 1;
+        }
+        if d.dropped_npu {
+            npu_dropped += 1;
+        }
+    }
+
+    // Full-profile oracle LUTs (what per-device profiling would have
+    // produced) and the transfer prediction error against them.
+    let mut oracle_luts = Vec::with_capacity(fleet.len());
+    let mut err_sum = 0.0;
+    let mut err_max = 0.0f64;
+    let mut err_n = 0usize;
+    for idx in 0..fleet.len() {
+        let true_lut = fleet.oracle_lut(idx)?;
+        let cohort = fleet.cohort_of(idx);
+        for (k, pred) in &cohort.lut.entries {
+            let fam = &registry
+                .get(&k.variant)
+                .with_context(|| format!("variant {}", k.variant))?
+                .family;
+            if fam != &cfg.family {
+                continue;
+            }
+            let truth = true_lut
+                .get(k)
+                .with_context(|| format!("{}: oracle missing {}",
+                                         fleet.devices[idx].id, k.id()))?;
+            let err = (pred.latency.avg / truth.latency.avg - 1.0).abs();
+            err_sum += err;
+            err_max = err_max.max(err);
+            err_n += 1;
+        }
+        oracle_luts.push(true_lut);
+    }
+
+    // One RuntimeManager per device over the cohort-shared state.
+    let mut managers: Vec<RuntimeManager> = Vec::with_capacity(fleet.len());
+    for idx in 0..fleet.len() {
+        managers.push(fleet.manager_for(idx, objective, &space)?);
+    }
+
+    // The storm.
+    let mut holds = HoldCounts::default();
+    let mut switches = 0u64;
+    let mut switch_load = 0u64;
+    let mut switch_degradation = 0u64;
+    let mut per_device_switches = vec![0u64; fleet.len()];
+    let mut regrets: Vec<f64> = Vec::new();
+    let mut deploy_faults = 0u64;
+    for tick in 0..cfg.ticks {
+        let now_ms = tick as f64 * cfg.tick_ms;
+        let regret_tick = cfg.regret_ticks.contains(&tick);
+        for idx in 0..fleet.len() {
+            let has_npu = fleet.devices[idx].has_npu();
+            let conds = storm_conditions(tick, idx, has_npu);
+            match managers[idx].decide(now_ms, &conds) {
+                Decision::Switch(sw) => {
+                    switches += 1;
+                    per_device_switches[idx] += 1;
+                    match sw.reason {
+                        Reason::LoadChange => switch_load += 1,
+                        Reason::Degradation => switch_degradation += 1,
+                    }
+                }
+                Decision::Hold(h) => match h {
+                    HoldReason::NotDue => holds.not_due += 1,
+                    HoldReason::Cooldown { .. } => holds.cooldown += 1,
+                    HoldReason::NoTrigger => holds.no_trigger += 1,
+                    HoldReason::NoAlternative => holds.no_alternative += 1,
+                    HoldReason::CurrentStillBest => {
+                        holds.current_still_best += 1
+                    }
+                    HoldReason::BelowHysteresis { .. } => {
+                        holds.below_hysteresis += 1
+                    }
+                },
+            }
+            if regret_tick {
+                let sel = fleet.select(idx, objective, &space, &conds)?;
+                // In-binary exactness re-check: the cohort frontier walk
+                // must equal a full search over the cohort LUT at the
+                // bucket's representative conditions.
+                let bucket = ConditionsBucket::of(&conds);
+                let cohort = fleet.cohort_of(idx);
+                let ds = DesignSpace::new(&cohort.rep, &fleet.registry,
+                                          &cohort.lut);
+                let full = rank(
+                    ds.enumerate(objective, &space, &bucket.representative()),
+                    objective,
+                );
+                ensure!(
+                    full.first().map(|c| &c.design) == Some(&sel),
+                    "{}@t{}: frontier walk diverged from full search",
+                    fleet.devices[idx].id, tick
+                );
+
+                let true_lut = &oracle_luts[idx];
+                let oracle = oracle_pick(&fleet, idx, true_lut, objective,
+                                         &space, &conds)?;
+                let sel_adj = adjusted_latency(true_lut, &sel,
+                                               objective.stat(), &conds)
+                    .with_context(|| format!("{}: transferred pick absent \
+                                              from the true LUT",
+                                             fleet.devices[idx].id))?;
+                let oracle_adj = adjusted_latency(true_lut, &oracle.design,
+                                                  objective.stat(), &conds)
+                    .context("oracle pick absent from the true LUT")?;
+                let entry = true_lut.get(&sel.lut_key()).unwrap();
+                let v = registry.get(&sel.variant).unwrap();
+                let admissible =
+                    perf::fits_memory(&fleet.devices[idx].profile, v)
+                        && entry.latency.avg
+                            <= fleet.devices[idx].profile
+                                .max_deployable_latency_ms;
+                let r = sel_adj / oracle_adj - 1.0;
+                // An inadmissible pick can undercut the (feasible-only)
+                // oracle; clamping its regret at 0 keeps the headline mean
+                // from being flattered by deployability faults — the fault
+                // counter, not a negative regret, is their signal.
+                if !admissible {
+                    deploy_faults += 1;
+                    regrets.push(r.max(0.0));
+                } else {
+                    regrets.push(r);
+                }
+            }
+        }
+    }
+
+    let regret_events = regrets.len();
+    let regret_sum: f64 = regrets.iter().sum();
+    let regret_mean = regret_sum / regret_events.max(1) as f64;
+    let regret_max = regrets.iter().fold(0.0f64, |a, &b| a.max(b));
+    let zero = regrets.iter().filter(|&&r| r <= 1e-12).count();
+
+    let stats = fleet.cache_stats();
+    // The acceptance-criteria ensures are tied to the regret enforcement:
+    // ad-hoc invocations (e.g. `--smoke --devices 20`, where the cohort
+    // count can approach the device count) are reported, not aborted.
+    if let Some(limit) = cfg.enforce_regret_pct {
+        ensure!(
+            stats.builds < fleet.len() as u64,
+            "cohort sharing must amortise: {} frontier builds for {} devices",
+            stats.builds, fleet.len()
+        );
+        ensure!(
+            100.0 * regret_mean <= limit,
+            "mean transferred-LUT regret {:.3}% exceeds the {limit}% bound",
+            100.0 * regret_mean
+        );
+    }
+
+    let cohorts: Vec<CohortRow> = fleet
+        .cohorts
+        .iter()
+        .map(|c| {
+            let s = c.cache_stats();
+            CohortRow {
+                id: c.id.clone(),
+                members: c.members.len(),
+                probed: c.probed(),
+                min_confidence: c.min_confidence(),
+                builds: s.builds,
+                hits: s.hits,
+            }
+        })
+        .collect();
+    let probed_cohorts = fleet.cohorts.iter().filter(|c| c.probed()).count();
+    let probe_measurements: usize = fleet
+        .cohorts
+        .iter()
+        .flat_map(|c| c.transfer.values())
+        .map(|t| t.probes)
+        .sum();
+
+    Ok(FleetBenchReport {
+        cfg: cfg.clone(),
+        archetype_counts,
+        npu_dropped,
+        cohorts,
+        probed_cohorts,
+        probe_measurements,
+        pred_err_mean_pct: r3(100.0 * err_sum / err_n.max(1) as f64),
+        pred_err_max_pct: r3(100.0 * err_max),
+        decisions: (cfg.ticks * fleet.len()) as u64,
+        switches,
+        switch_load,
+        switch_degradation,
+        holds,
+        devices_switched:
+            per_device_switches.iter().filter(|&&s| s > 0).count(),
+        max_switches_per_device:
+            per_device_switches.iter().copied().max().unwrap_or(0),
+        regret_events,
+        regret_mean_pct: r3(100.0 * regret_mean),
+        regret_max_pct: r3(100.0 * regret_max),
+        regret_zero_share: r3(zero as f64 / regret_events.max(1) as f64),
+        deploy_faults,
+        cache_builds: stats.builds,
+        cache_hits: stats.hits,
+        cache_bench_lookups: regret_events as u64,
+        cache_evictions: stats.evictions,
+    })
+}
+
+/// The complete report as one JSON value (the golden-pinned payload).
+pub fn report_json(r: &FleetBenchReport) -> Value {
+    let p = &r.cfg.fleet.population;
+    let t = &r.cfg.fleet.transfer;
+    let config = json::obj(vec![
+        ("devices", json::num(p.size as f64)),
+        ("seed", json::num(p.seed as f64)),
+        ("family", json::s(&r.cfg.family)),
+        ("objective", json::s(&objective_label(r.cfg.objective))),
+        ("lut_runs", json::num(r.cfg.fleet.lut_runs as f64)),
+        ("noise_sigma", json::num(r.cfg.fleet.noise_sigma)),
+        ("flops_log_spread", json::num(p.flops_log_spread)),
+        ("bw_log_spread", json::num(p.bw_log_spread)),
+        ("thermal_log_spread", json::num(p.thermal_log_spread)),
+        ("mem_log_spread", json::num(p.mem_log_spread)),
+        ("latent_log_spread", json::num(p.latent_log_spread)),
+        ("npu_drop_prob", json::num(p.npu_drop_prob)),
+        ("confidence_threshold", json::num(t.confidence_threshold)),
+        ("probes_per_engine", json::num(t.probes_per_engine as f64)),
+        ("frontier_cache_cap",
+         json::num(r.cfg.fleet.frontier_cache_cap as f64)),
+        ("ticks", json::num(r.cfg.ticks as f64)),
+        ("tick_ms", json::num(r.cfg.tick_ms)),
+    ]);
+    let archetypes = json::obj(
+        r.archetype_counts
+            .iter()
+            .map(|&(name, n)| (name, json::num(n as f64)))
+            .collect(),
+    );
+    let population = json::obj(vec![
+        ("archetypes", archetypes),
+        ("npu_dropped", json::num(r.npu_dropped as f64)),
+        ("cohorts", json::num(r.cohorts.len() as f64)),
+    ]);
+    let transfer = json::obj(vec![
+        ("probed_cohorts", json::num(r.probed_cohorts as f64)),
+        ("probe_measurements", json::num(r.probe_measurements as f64)),
+        ("pred_err_mean_pct", json::num(r.pred_err_mean_pct)),
+        ("pred_err_max_pct", json::num(r.pred_err_max_pct)),
+    ]);
+    let cohorts = Value::Arr(
+        r.cohorts
+            .iter()
+            .map(|c| {
+                json::obj(vec![
+                    ("id", json::s(&c.id)),
+                    ("members", json::num(c.members as f64)),
+                    ("probed", Value::Bool(c.probed)),
+                    ("min_confidence", json::num(r3(c.min_confidence))),
+                    ("builds", json::num(c.builds as f64)),
+                    ("hits", json::num(c.hits as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let holds = json::obj(vec![
+        ("not_due", json::num(r.holds.not_due as f64)),
+        ("cooldown", json::num(r.holds.cooldown as f64)),
+        ("no_trigger", json::num(r.holds.no_trigger as f64)),
+        ("no_alternative", json::num(r.holds.no_alternative as f64)),
+        ("current_still_best",
+         json::num(r.holds.current_still_best as f64)),
+        ("below_hysteresis", json::num(r.holds.below_hysteresis as f64)),
+    ]);
+    let storm = json::obj(vec![
+        ("ticks", json::num(r.cfg.ticks as f64)),
+        ("decisions", json::num(r.decisions as f64)),
+        ("switches", json::num(r.switches as f64)),
+        ("switch_load", json::num(r.switch_load as f64)),
+        ("switch_degradation", json::num(r.switch_degradation as f64)),
+        ("holds", holds),
+        ("devices_switched", json::num(r.devices_switched as f64)),
+        ("max_switches_per_device",
+         json::num(r.max_switches_per_device as f64)),
+    ]);
+    let regret = json::obj(vec![
+        ("events", json::num(r.regret_events as f64)),
+        ("mean_pct", json::num(r.regret_mean_pct)),
+        ("max_pct", json::num(r.regret_max_pct)),
+        ("zero_share", json::num(r.regret_zero_share)),
+        ("deploy_faults", json::num(r.deploy_faults as f64)),
+    ]);
+    let total = r.cache_builds + r.cache_hits;
+    let cache = json::obj(vec![
+        ("builds", json::num(r.cache_builds as f64)),
+        ("hits", json::num(r.cache_hits as f64)),
+        ("bench_lookups", json::num(r.cache_bench_lookups as f64)),
+        ("evictions", json::num(r.cache_evictions as f64)),
+        ("hit_rate",
+         json::num(r3(r.cache_hits as f64 / total.max(1) as f64))),
+        ("builds_lt_devices",
+         Value::Bool(r.cache_builds < p.size as u64)),
+    ]);
+    json::obj(vec![(
+        "fleet_bench",
+        json::obj(vec![
+            ("config", config),
+            ("population", population),
+            ("transfer", transfer),
+            ("cohorts", cohorts),
+            ("storm", storm),
+            ("regret", regret),
+            ("cache", cache),
+        ]),
+    )])
+}
+
+/// Print the fleet table; also emit the report as a JSON line and, when
+/// `json_out` is given, write it to that file.
+pub fn print(registry: &Registry, cfg: &FleetBenchConfig,
+             json_out: Option<&str>) -> Result<()> {
+    let r = run(registry, cfg)?;
+    println!("FLEET-BENCH — {} devices, {} cohorts, transferred LUTs vs \
+              full-profile oracle",
+             r.cfg.fleet.population.size, r.cohorts.len());
+    println!("{:<38} {:>7} {:>6} {:>6} {:>7} {:>6}",
+             "cohort", "members", "probed", "conf", "builds", "hits");
+    println!("{}", super::rule(80));
+    for c in &r.cohorts {
+        println!("{:<38} {:>7} {:>6} {:>6.3} {:>7} {:>6}",
+                 c.id, c.members, if c.probed { "yes" } else { "no" },
+                 c.min_confidence, c.builds, c.hits);
+    }
+    println!("transfer: {} probed cohorts, {} probe measurements, \
+              family pred err mean {:.3}% max {:.3}%",
+             r.probed_cohorts, r.probe_measurements, r.pred_err_mean_pct,
+             r.pred_err_max_pct);
+    println!("storm: {} decisions, {} switches ({} load / {} degradation), \
+              {} devices switched, max {} per device",
+             r.decisions, r.switches, r.switch_load, r.switch_degradation,
+             r.devices_switched, r.max_switches_per_device);
+    println!("regret vs oracle: mean {:.3}% max {:.3}% over {} events \
+              ({:.1}% zero-regret, {} deploy faults)",
+             r.regret_mean_pct, r.regret_max_pct, r.regret_events,
+             100.0 * r.regret_zero_share, r.deploy_faults);
+    println!("cohort caches: {} builds, {} hits ({} of the lookups are \
+              bench regret instrumentation), {} evictions \
+              (builds < devices: {})",
+             r.cache_builds, r.cache_hits, r.cache_bench_lookups,
+             r.cache_evictions,
+             r.cache_builds < r.cfg.fleet.population.size as u64);
+    let payload = report_json(&r);
+    let line = json::to_string(&payload);
+    println!("FLEETBENCH_JSON {line}");
+    if let Some(path) = json_out {
+        std::fs::write(path, &line)
+            .with_context(|| format!("writing {path}"))?;
+        println!("JSON written to {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn storm_phases_cover_every_tick() {
+        assert_eq!(storm_phase(0), "calm");
+        assert_eq!(storm_phase(3), "gpu_surge");
+        assert_eq!(storm_phase(7), "npu_throttle");
+        assert_eq!(storm_phase(11), "recovery");
+    }
+
+    #[test]
+    fn storm_conditions_on_bucket_centres() {
+        let c = storm_conditions(4, 0, true);
+        assert_eq!(c.load(EngineKind::Gpu), 1.0);
+        let c = storm_conditions(4, 1, true);
+        assert_eq!(c.load(EngineKind::Gpu), 0.0);
+        let c = storm_conditions(8, 0, true);
+        assert_eq!(c.thermal_scale(EngineKind::Npu), 0.5);
+        let c = storm_conditions(8, 0, false);
+        assert_eq!(c.load(EngineKind::Cpu), 1.0);
+    }
+}

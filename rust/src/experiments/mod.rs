@@ -7,6 +7,7 @@ pub mod fig3;
 pub mod fig456;
 pub mod fig7;
 pub mod fig8;
+pub mod fleetbench;
 pub mod loadgen;
 pub mod multiapp;
 pub mod optbench;
@@ -43,4 +44,11 @@ pub fn build_lut(device: &DeviceProfile, registry: &Registry) -> Result<Arc<Lut>
 /// Pretty horizontal rule for report printers.
 pub fn rule(width: usize) -> String {
     "-".repeat(width)
+}
+
+/// Round to 3 decimals — the numeric resolution of every golden-pinned
+/// report JSON (serve-bench, opt-bench, fleet-bench share one rounding
+/// convention, mirrored by the Python oracles).
+pub(crate) fn r3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
 }

@@ -204,10 +204,7 @@ fn design_id(d: &crate::optimizer::Design) -> String {
             d.hw.governor.name(), d.hw.recognition_rate)
 }
 
-/// Round to 3 decimals (report formatting; matches the serve-bench JSON).
-fn r3(x: f64) -> f64 {
-    (x * 1000.0).round() / 1000.0
-}
+use super::r3;
 
 /// Run one (device, app) adaptation replay.
 fn run_app(device: &crate::device::DeviceProfile, registry: &Registry,

@@ -1,0 +1,364 @@
+//! Fleet layer: population-scale device simulation with cross-device LUT
+//! transfer and cohort-shared frontier caches.
+//!
+//! OODIn's premise is that DL deployment must adapt to *vast* system
+//! heterogeneity (§I/§II) — but per-device offline profiling (§III-D)
+//! and per-device Pareto-frontier builds ([`crate::designspace`]) do not
+//! scale from three calibrated phones to the thousands of SoC / thermal /
+//! memory configurations a real deployment faces.  This subsystem scales
+//! the existing stack to a population:
+//!
+//! * [`population`] — a seeded sampler perturbing the Table I archetypes
+//!   along peak-FLOPS / bandwidth / thermal-capacity / memory-capacity /
+//!   engine-availability axes into reproducible fleets, each device with
+//!   a hidden per-engine latent efficiency no spec sheet shows.
+//! * [`transfer`] — cross-device LUT transfer: an unseen device's
+//!   per-design latencies predicted from its nearest measured anchors by
+//!   roofline-ratio scaling, with confidence bounds and a probe-set
+//!   micro-profiling fallback — solving LUT cold-start without the full
+//!   per-device sweep.
+//! * [`Fleet`] — quantises devices into [`Cohort`]s (archetype × engine
+//!   set × coarse performance bin), transfers **one LUT per cohort**
+//!   (predicted at the cohort representative, probe-corrected when
+//!   confidence is low) and shares **one LRU-bounded
+//!   [`FrontierCache`] per cohort**, so the Pareto-frontier builds that
+//!   power O(frontier) re-adaptation amortise across the population:
+//!   frontier builds scale with (cohorts × visited buckets), not with
+//!   devices.  Per-device adaptation then runs through the *existing*
+//!   [`crate::manager::RuntimeManager`] path, each manager pointed at its
+//!   cohort's representative device, LUT and shared cache.
+//!
+//! `oodin fleet-bench` ([`crate::experiments::fleetbench`]) drives a
+//! scripted condition storm across the fleet and reports transferred-LUT
+//! decision regret against a full-profile oracle, cohort cache hit rates,
+//! and per-device adaptation decision counts.
+
+pub mod population;
+pub mod transfer;
+
+pub use population::{CohortKey, PopulationConfig, SampledDevice};
+pub use transfer::{Anchor, EngineTransfer, TransferConfig, TransferEngine,
+                   TransferredLut};
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::designspace::{CacheStats, ConditionsBucket, DesignSpace,
+                         FrontierCache};
+use crate::device::{DeviceProfile, EngineKind};
+use crate::manager::{Conditions, RuntimeManager};
+use crate::measurements::{Lut, Measurer};
+use crate::model::Registry;
+use crate::optimizer::{Design, Objective, SearchSpace};
+
+/// Fleet construction parameters.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Population sampling parameters.
+    pub population: PopulationConfig,
+    /// Cross-device transfer parameters.
+    pub transfer: TransferConfig,
+    /// Measured runs for anchor LUTs and full-profile oracle LUTs.
+    pub lut_runs: usize,
+    /// Discarded warm-up runs for those sweeps.
+    pub lut_warmup: usize,
+    /// Log-normal measurement noise of those sweeps (0 = closed-form).
+    pub noise_sigma: f64,
+    /// LRU capacity of each cohort's shared frontier cache.
+    pub frontier_cache_cap: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            population: PopulationConfig::default(),
+            transfer: TransferConfig::default(),
+            lut_runs: 4,
+            lut_warmup: 1,
+            noise_sigma: 0.0,
+            frontier_cache_cap: 256,
+        }
+    }
+}
+
+/// One device cohort: the sharing unit for the transferred LUT and the
+/// frontier cache.
+pub struct Cohort {
+    /// The quantisation cell.
+    pub key: CohortKey,
+    /// Canonical cohort id ([`CohortKey::id`]).
+    pub id: String,
+    /// Representative nominal profile every member's manager runs against.
+    pub rep: Arc<DeviceProfile>,
+    /// The cohort's transferred (and possibly probe-corrected) LUT.
+    pub lut: Arc<Lut>,
+    /// The cohort-shared, LRU-bounded frontier cache.
+    pub cache: Arc<Mutex<FrontierCache>>,
+    /// Member device indices, ascending.
+    pub members: Vec<usize>,
+    /// Per-engine transfer provenance at cohort level (distance /
+    /// confidence are the worst member's).
+    pub transfer: BTreeMap<EngineKind, EngineTransfer>,
+}
+
+impl Cohort {
+    /// True when any engine ran the probe fallback.
+    pub fn probed(&self) -> bool {
+        self.transfer.values().any(|t| t.probed)
+    }
+
+    /// Lowest per-engine transfer confidence.
+    pub fn min_confidence(&self) -> f64 {
+        self.transfer
+            .values()
+            .map(|t| t.confidence)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// This cohort's cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.lock().unwrap().stats
+    }
+}
+
+/// A sampled device population organised into cohorts with shared
+/// transferred LUTs and frontier caches.
+pub struct Fleet {
+    /// Construction parameters.
+    pub cfg: FleetConfig,
+    /// The sampled devices, by index.
+    pub devices: Vec<SampledDevice>,
+    /// Cohorts in canonical ([`CohortKey`]) order.
+    pub cohorts: Vec<Cohort>,
+    /// Device index → cohort index.
+    pub device_cohort: Vec<usize>,
+    /// Shared model registry.
+    pub registry: Arc<Registry>,
+}
+
+impl Fleet {
+    /// Sample the population, measure the anchors, group cohorts, and
+    /// transfer one LUT per cohort (probing low-confidence engines on the
+    /// cohort's first member).
+    pub fn build(registry: Arc<Registry>, cfg: FleetConfig) -> Result<Fleet> {
+        let devices = population::sample_fleet(&cfg.population);
+        let te = TransferEngine::from_archetypes(
+            &registry, cfg.transfer.clone(), cfg.lut_runs, cfg.lut_warmup,
+            cfg.noise_sigma)?;
+
+        let mut groups: BTreeMap<CohortKey, Vec<usize>> = BTreeMap::new();
+        for d in &devices {
+            groups.entry(d.cohort_key()).or_default().push(d.index);
+        }
+
+        let mut cohorts = Vec::new();
+        let mut device_cohort = vec![0usize; devices.len()];
+        for (ci, (key, members)) in groups.into_iter().enumerate() {
+            let rep = key.representative(&cfg.population);
+            let mut tlut = te.predict(&rep)?;
+            // Cohort confidence is the worst member's: the transfer must
+            // hold for every device the shared LUT will decide for.
+            let kinds: Vec<EngineKind> = tlut.engines.keys().copied().collect();
+            for kind in kinds {
+                let mut dist = tlut.engines[&kind].distance;
+                for &m in &members {
+                    let d = te
+                        .nearest_distance(&devices[m].nominal, kind)
+                        .ok_or_else(|| anyhow!("member {m} lacks {}",
+                                               kind.name()))?;
+                    dist = dist.max(d);
+                }
+                let conf = transfer::confidence(dist);
+                {
+                    let rec = tlut.engines.get_mut(&kind).unwrap();
+                    rec.distance = dist;
+                    rec.confidence = conf;
+                }
+                if conf < cfg.transfer.confidence_threshold {
+                    let probe_on = members[0];
+                    te.probe_engine(&devices[probe_on].profile, &mut tlut,
+                                    kind)?;
+                }
+            }
+            for &m in &members {
+                device_cohort[m] = ci;
+            }
+            cohorts.push(Cohort {
+                id: key.id(),
+                rep: Arc::new(rep),
+                lut: Arc::new(tlut.lut),
+                cache: Arc::new(Mutex::new(
+                    FrontierCache::new().with_cap(cfg.frontier_cache_cap))),
+                members,
+                transfer: tlut.engines,
+                key,
+            });
+        }
+        Ok(Fleet { cfg, devices, cohorts, device_cohort, registry })
+    }
+
+    /// Number of devices.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// True for an empty fleet.
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// The cohort a device belongs to.
+    pub fn cohort_of(&self, device_idx: usize) -> &Cohort {
+        &self.cohorts[self.device_cohort[device_idx]]
+    }
+
+    /// The transferred-LUT selection for one device at the given
+    /// conditions: a frontier walk over the device's cohort cache, exactly
+    /// the [`RuntimeManager::best_under`] semantics (bucketed frontier;
+    /// hard latency targets re-checked at the exact conditions).
+    pub fn select(&self, device_idx: usize, objective: Objective,
+                  space: &SearchSpace, conds: &Conditions) -> Result<Design> {
+        let cohort = self.cohort_of(device_idx);
+        let bucket = ConditionsBucket::of(conds);
+        let ds = DesignSpace::new(&cohort.rep, &self.registry, &cohort.lut);
+        let frontier = cohort.cache.lock().unwrap().frontier(
+            &ds, objective, space, &bucket);
+        crate::designspace::select_from_frontier(&frontier, &cohort.lut,
+                                                 objective, conds)
+            .map(|c| c.design.clone())
+            .ok_or_else(|| {
+                anyhow!("{}: no feasible design in cohort {}",
+                        self.devices[device_idx].id, cohort.id)
+            })
+    }
+
+    /// A [`RuntimeManager`] for one device, running against its cohort's
+    /// representative profile, transferred LUT and shared frontier cache;
+    /// the initial design is the cohort's idle-conditions selection.
+    pub fn manager_for(&self, device_idx: usize, objective: Objective,
+                       space: &SearchSpace) -> Result<RuntimeManager> {
+        let initial =
+            self.select(device_idx, objective, space, &Conditions::idle())?;
+        let cohort = self.cohort_of(device_idx);
+        Ok(RuntimeManager::new(
+            Arc::clone(&cohort.rep),
+            Arc::clone(&self.registry),
+            Arc::clone(&cohort.lut),
+            objective,
+            space.clone(),
+            initial,
+        )
+        .with_frontier_cache(Arc::clone(&cohort.cache)))
+    }
+
+    /// Full-profile oracle LUT of one device: the complete measurement
+    /// sweep on the *true* profile — what per-device offline profiling
+    /// would have produced, and what transferred selections are judged
+    /// against.
+    pub fn oracle_lut(&self, device_idx: usize) -> Result<Lut> {
+        Measurer::new(&self.devices[device_idx].profile, &self.registry)
+            .with_runs(self.cfg.lut_runs, self.cfg.lut_warmup)
+            .with_noise_sigma(self.cfg.noise_sigma)
+            .measure_all()
+    }
+
+    /// Aggregate cache counters over every cohort.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for c in &self.cohorts {
+            let s = c.cache_stats();
+            total.builds += s.builds;
+            total.hits += s.hits;
+            total.invalidations += s.invalidations;
+            total.candidates_enumerated += s.candidates_enumerated;
+            total.evictions += s.evictions;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_fixtures::fake_registry;
+    use crate::util::stats::Percentile;
+
+    fn small_fleet(size: usize) -> Fleet {
+        let cfg = FleetConfig {
+            population: PopulationConfig { size, ..Default::default() },
+            ..Default::default()
+        };
+        Fleet::build(Arc::new(fake_registry()), cfg).unwrap()
+    }
+
+    fn obj() -> Objective {
+        Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 }
+    }
+
+    #[test]
+    fn build_partitions_every_device_into_one_cohort() {
+        let fleet = small_fleet(48);
+        assert_eq!(fleet.len(), 48);
+        let covered: usize = fleet.cohorts.iter().map(|c| c.members.len()).sum();
+        assert_eq!(covered, 48);
+        assert!(fleet.cohorts.len() < 48);
+        for (i, c) in fleet.cohorts.iter().enumerate() {
+            for &m in &c.members {
+                assert_eq!(fleet.device_cohort[m], i);
+                assert_eq!(fleet.devices[m].cohort_key(), c.key);
+            }
+        }
+    }
+
+    #[test]
+    fn cohort_sharing_amortises_frontier_builds() {
+        let fleet = small_fleet(32);
+        let space = SearchSpace::family("mobilenet_v2_100");
+        for idx in 0..fleet.len() {
+            fleet.select(idx, obj(), &space, &Conditions::idle()).unwrap();
+        }
+        let stats = fleet.cache_stats();
+        assert_eq!(stats.builds, fleet.cohorts.len() as u64,
+                   "one idle frontier per cohort");
+        assert_eq!(stats.hits + stats.builds, fleet.len() as u64);
+        assert!(stats.builds < fleet.len() as u64);
+    }
+
+    #[test]
+    fn managers_share_their_cohort_cache() {
+        // 64 devices quantise into ~21 cohorts (seed 77): even after the
+        // idle bucket and one loaded bucket build per cohort, builds stay
+        // well below the device count.
+        let fleet = small_fleet(64);
+        let space = SearchSpace::family("mobilenet_v2_100");
+        let mut managers: Vec<RuntimeManager> = (0..fleet.len())
+            .map(|i| fleet.manager_for(i, obj(), &space).unwrap())
+            .collect();
+        let builds_after_init = fleet.cache_stats().builds;
+        // A shared load shift: every manager re-searches, but each cohort
+        // builds the loaded bucket's frontier at most once.
+        let mut conds = Conditions::idle();
+        conds.loads.insert(EngineKind::Cpu, 2.0);
+        for m in managers.iter_mut() {
+            m.decide(10_000.0, &conds);
+        }
+        let stats = fleet.cache_stats();
+        assert!(stats.builds <= builds_after_init + fleet.cohorts.len() as u64);
+        assert!(stats.builds < fleet.len() as u64);
+    }
+
+    #[test]
+    fn oracle_lut_reflects_the_true_profile() {
+        let fleet = small_fleet(8);
+        let lut = fleet.oracle_lut(0).unwrap();
+        let d = &fleet.devices[0];
+        // Engine set matches the true device (e.g. no NNAPI entries after
+        // an NPU drop).
+        for k in lut.entries.keys() {
+            assert!(d.profile.has_engine(k.engine));
+        }
+        assert!(!lut.is_empty());
+    }
+}

@@ -1,0 +1,365 @@
+//! Seeded device-population sampling: reproducible fleets of thousands of
+//! simulated handsets grown from the Table I archetypes.
+//!
+//! Real deployments face *vast* system heterogeneity (paper §I/§II;
+//! Almeida et al. 2021 count thousands of distinct SoC/thermal/memory
+//! configurations in the wild).  This module models that spread as
+//! deterministic perturbations of the three calibrated archetype profiles
+//! along five axes:
+//!
+//! * **peak FLOPS** — per-engine silicon/bin spread (log-uniform),
+//! * **memory bandwidth** — per-engine DRAM/bus spread (log-uniform),
+//! * **thermal capacity** — device-wide heat-dissipation spread applied to
+//!   every engine's `heat_per_ms` (a roomier chassis heats slower),
+//! * **memory capacity** — device-wide budget spread,
+//! * **engine availability** — a fraction of mid/high-tier units ship
+//!   without a usable NNAPI path (vendor HAL missing or blocklisted).
+//!
+//! On top of the *observable* (spec-sheet) spread, every engine carries a
+//! hidden **latent efficiency** factor — driver quality, firmware, memory
+//! timings — that perturbs its true throughput but is invisible to any
+//! analytical model.  Cross-device LUT transfer ([`super::transfer`]) can
+//! scale away the spec-sheet spread exactly; the latent factor is exactly
+//! what its probe fallback exists to recover.
+//!
+//! Sampling is bit-reproducible: each device draws from its own
+//! [`crate::util::rng::Rng`] stream seeded from `(fleet seed, index)`, so
+//! fleets are stable across runs, platforms and the independent Python
+//! oracle (`python/golden_fleetbench.py`).
+
+use crate::device::profiles::{samsung_a71, samsung_s20_fe, sony_c5};
+use crate::device::{DeviceProfile, EngineKind};
+use crate::util::rng::Rng;
+
+/// The archetype names a population is grown from, in sampling order.
+pub const ARCHETYPES: [&str; 3] = ["sony_c5", "samsung_a71", "samsung_s20_fe"];
+
+/// The archetype profile for a [`ARCHETYPES`] name.
+pub fn archetype_profile(name: &str) -> DeviceProfile {
+    match name {
+        "sony_c5" => sony_c5(),
+        "samsung_a71" => samsung_a71(),
+        _ => samsung_s20_fe(),
+    }
+}
+
+/// Log-spread population parameters.  Every factor is sampled log-uniform:
+/// `exp(U(-spread, spread))`.
+#[derive(Debug, Clone)]
+pub struct PopulationConfig {
+    /// Fleet size.
+    pub size: usize,
+    /// Fleet seed; equal seeds give bit-identical fleets.
+    pub seed: u64,
+    /// Per-engine peak-FLOPS log-spread (observable).
+    pub flops_log_spread: f64,
+    /// Per-engine memory-bandwidth log-spread (observable).
+    pub bw_log_spread: f64,
+    /// Device-wide thermal-capacity log-spread (observable; divides
+    /// `heat_per_ms`).
+    pub thermal_log_spread: f64,
+    /// Device-wide memory-budget log-spread (observable).
+    pub mem_log_spread: f64,
+    /// Per-engine *latent* efficiency log-spread (hidden from transfer).
+    pub latent_log_spread: f64,
+    /// Probability that a unit with an NPU archetype ships without a
+    /// usable NNAPI path.
+    pub npu_drop_prob: f64,
+}
+
+impl Default for PopulationConfig {
+    fn default() -> Self {
+        PopulationConfig {
+            size: 200,
+            seed: 77,
+            flops_log_spread: 0.30,
+            bw_log_spread: 0.15,
+            thermal_log_spread: 0.20,
+            mem_log_spread: 0.15,
+            latent_log_spread: 0.10,
+            npu_drop_prob: 0.15,
+        }
+    }
+}
+
+/// The sampled axis values of one engine on one device.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineAxes {
+    /// Which engine the axes perturb.
+    pub kind: EngineKind,
+    /// Observable log peak-FLOPS factor.
+    pub flops_ln: f64,
+    /// Observable log memory-bandwidth factor.
+    pub bw_ln: f64,
+    /// Hidden log efficiency factor (true profile only).
+    pub latent_ln: f64,
+}
+
+/// One device of a sampled fleet.
+///
+/// `nominal` is the *spec-sheet* view — what a cross-device latency
+/// predictor is allowed to know.  `profile` is the *true* device — the
+/// nominal specs with the hidden latent efficiency folded into every
+/// engine's throughput and bandwidth; measurements (oracle LUTs, probe
+/// micro-profiles) run against it.  Both keep the archetype's `name`, so
+/// family-level NNAPI op-support penalties keep applying.
+#[derive(Debug, Clone)]
+pub struct SampledDevice {
+    /// Stable fleet-local id, `d0000`…
+    pub id: String,
+    /// Index in the fleet (drives the per-device RNG stream).
+    pub index: usize,
+    /// Archetype the device was grown from.
+    pub archetype: &'static str,
+    /// Spec-sheet profile (no latent factors).
+    pub nominal: DeviceProfile,
+    /// True profile (latent factors folded in); the measurable device.
+    pub profile: DeviceProfile,
+    /// Per-engine sampled axes, in the archetype's engine order (dropped
+    /// engines excluded).
+    pub axes: Vec<EngineAxes>,
+    /// Device-wide log thermal-capacity factor (divides `heat_per_ms`).
+    pub thermal_ln: f64,
+    /// Device-wide log memory-budget factor.
+    pub mem_ln: f64,
+    /// True when the archetype's NPU was dropped (engine-availability
+    /// axis).
+    pub dropped_npu: bool,
+}
+
+impl SampledDevice {
+    /// True when the device exposes an NNAPI path.
+    pub fn has_npu(&self) -> bool {
+        self.profile.has_engine(EngineKind::Npu)
+    }
+
+    /// The cohort this device quantises into.
+    pub fn cohort_key(&self) -> CohortKey {
+        CohortKey {
+            archetype: self.archetype,
+            engines: self.axes.iter().map(|a| a.kind).collect(),
+            flops_hi: self.axes.iter().map(|a| a.flops_ln >= 0.0).collect(),
+        }
+    }
+}
+
+/// FNV-1a over the fleet seed and device index: each device gets its own
+/// deterministic RNG stream, independent of fleet size.
+pub fn device_seed(seed: u64, index: usize) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in seed.to_le_bytes().into_iter().chain((index as u64).to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Scale an archetype profile along sampled axes into a device profile.
+/// `latent` selects whether each engine's hidden efficiency is folded in
+/// (the true profile) or not (the nominal spec-sheet view).
+pub fn scaled_profile(archetype: &DeviceProfile, axes: &[EngineAxes],
+                      thermal_ln: f64, mem_ln: f64, latent: bool)
+                      -> DeviceProfile {
+    let mut p = archetype.clone();
+    p.engines = axes
+        .iter()
+        .map(|a| {
+            let mut e = archetype
+                .engine(a.kind)
+                .expect("axis for an engine the archetype lacks")
+                .clone();
+            e.peak_gflops_fp32 *= a.flops_ln.exp();
+            e.mem_bw_gbps *= a.bw_ln.exp();
+            if latent {
+                e.peak_gflops_fp32 *= a.latent_ln.exp();
+                e.mem_bw_gbps *= a.latent_ln.exp();
+            }
+            e.thermal.heat_per_ms *= (-thermal_ln).exp();
+            e
+        })
+        .collect();
+    p.mem_budget_bytes =
+        (archetype.mem_budget_bytes as f64 * mem_ln.exp()) as u64;
+    p
+}
+
+/// Sample one device of the fleet.  The RNG draw order is part of the
+/// format (mirrored by the Python oracle): archetype, NPU-drop, then per
+/// archetype engine (flops, bandwidth, latent), then thermal, then memory.
+pub fn sample_device(cfg: &PopulationConfig, index: usize) -> SampledDevice {
+    let mut rng = Rng::new(device_seed(cfg.seed, index));
+    let archetype = ARCHETYPES[rng.below(ARCHETYPES.len())];
+    let base = archetype_profile(archetype);
+    let drop_npu = rng.f64() < cfg.npu_drop_prob;
+    let mut axes = Vec::new();
+    let mut dropped = false;
+    for spec in &base.engines {
+        let a = EngineAxes {
+            kind: spec.kind,
+            flops_ln: rng.range(-cfg.flops_log_spread, cfg.flops_log_spread),
+            bw_ln: rng.range(-cfg.bw_log_spread, cfg.bw_log_spread),
+            latent_ln: rng.range(-cfg.latent_log_spread,
+                                 cfg.latent_log_spread),
+        };
+        if spec.kind == EngineKind::Npu && drop_npu {
+            dropped = true;
+            continue;
+        }
+        axes.push(a);
+    }
+    let thermal_ln = rng.range(-cfg.thermal_log_spread, cfg.thermal_log_spread);
+    let mem_ln = rng.range(-cfg.mem_log_spread, cfg.mem_log_spread);
+    SampledDevice {
+        id: format!("d{index:04}"),
+        index,
+        archetype,
+        nominal: scaled_profile(&base, &axes, thermal_ln, mem_ln, false),
+        profile: scaled_profile(&base, &axes, thermal_ln, mem_ln, true),
+        axes,
+        thermal_ln,
+        mem_ln,
+        dropped_npu: dropped,
+    }
+}
+
+/// Sample the whole fleet.
+pub fn sample_fleet(cfg: &PopulationConfig) -> Vec<SampledDevice> {
+    (0..cfg.size).map(|i| sample_device(cfg, i)).collect()
+}
+
+/// A device cohort: the quantisation cell the fleet layer shares one
+/// transferred LUT and one frontier cache across.
+///
+/// Cohorts quantise the *observable* axes only — archetype, surviving
+/// engine set, and the sign of each engine's log peak-FLOPS factor (a
+/// two-level half-spread quantisation).  Bandwidth/thermal sit at the
+/// archetype centre of the representative and memory is represented at
+/// the *floor* of its spread, so a variant the representative admits fits
+/// every member (conservative memory admission).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CohortKey {
+    /// Archetype of every member.
+    pub archetype: &'static str,
+    /// Surviving engines, in archetype order.
+    pub engines: Vec<EngineKind>,
+    /// Per engine: log peak-FLOPS factor ≥ 0 (upper half of the spread).
+    pub flops_hi: Vec<bool>,
+}
+
+impl CohortKey {
+    /// Canonical id, e.g. `samsung_a71|cpu+gpu+nnapi|f=+-+`.
+    pub fn id(&self) -> String {
+        let engines: Vec<&str> = self.engines.iter().map(|e| e.name()).collect();
+        let signs: String = self
+            .flops_hi
+            .iter()
+            .map(|&h| if h { '+' } else { '-' })
+            .collect();
+        format!("{}|{}|f={}", self.archetype, engines.join("+"), signs)
+    }
+
+    /// The cohort's representative *nominal* profile: each engine's peak
+    /// FLOPS at the centre of its half-spread (`exp(±spread/2)`),
+    /// bandwidth and thermal at the archetype centre, memory at the floor
+    /// of the spread (conservative admission).
+    pub fn representative(&self, cfg: &PopulationConfig) -> DeviceProfile {
+        let base = archetype_profile(self.archetype);
+        let axes: Vec<EngineAxes> = self
+            .engines
+            .iter()
+            .zip(&self.flops_hi)
+            .map(|(&kind, &hi)| EngineAxes {
+                kind,
+                flops_ln: if hi {
+                    cfg.flops_log_spread / 2.0
+                } else {
+                    -cfg.flops_log_spread / 2.0
+                },
+                bw_ln: 0.0,
+                latent_ln: 0.0,
+            })
+            .collect();
+        scaled_profile(&base, &axes, 0.0, -cfg.mem_log_spread, false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_deterministic_and_seed_sensitive() {
+        let cfg = PopulationConfig { size: 16, ..Default::default() };
+        let a = sample_fleet(&cfg);
+        let b = sample_fleet(&cfg);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.archetype, y.archetype);
+            assert_eq!(x.cohort_key(), y.cohort_key());
+            assert_eq!(x.profile.mem_budget_bytes, y.profile.mem_budget_bytes);
+        }
+        let other = sample_fleet(&PopulationConfig { seed: 78, ..cfg });
+        assert!(a.iter().zip(&other).any(|(x, y)| {
+            x.archetype != y.archetype
+                || x.profile.mem_budget_bytes != y.profile.mem_budget_bytes
+        }));
+    }
+
+    #[test]
+    fn perturbations_stay_within_spread() {
+        let cfg = PopulationConfig { size: 64, ..Default::default() };
+        for d in sample_fleet(&cfg) {
+            let base = archetype_profile(d.archetype);
+            for a in &d.axes {
+                assert!(a.flops_ln.abs() <= cfg.flops_log_spread);
+                let nom = d.nominal.engine(a.kind).unwrap().peak_gflops_fp32;
+                let arch = base.engine(a.kind).unwrap().peak_gflops_fp32;
+                let lo = arch * (-cfg.flops_log_spread).exp();
+                let hi = arch * cfg.flops_log_spread.exp();
+                assert!(nom >= lo * (1.0 - 1e-12) && nom <= hi * (1.0 + 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn latent_folds_only_into_true_profile() {
+        let cfg = PopulationConfig { size: 64, ..Default::default() };
+        for d in sample_fleet(&cfg) {
+            for a in &d.axes {
+                let nom = d.nominal.engine(a.kind).unwrap();
+                let tru = d.profile.engine(a.kind).unwrap();
+                let expect = nom.peak_gflops_fp32 * a.latent_ln.exp();
+                assert!((tru.peak_gflops_fp32 - expect).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn npu_drop_and_cohort_engines_agree() {
+        let cfg = PopulationConfig { size: 128, ..Default::default() };
+        let fleet = sample_fleet(&cfg);
+        assert!(fleet.iter().any(|d| d.dropped_npu), "expect some NPU drops");
+        for d in &fleet {
+            let key = d.cohort_key();
+            assert_eq!(key.engines.contains(&EngineKind::Npu), d.has_npu());
+            if d.archetype == "sony_c5" {
+                assert!(!d.has_npu());
+            }
+            // The representative exposes exactly the member engine set and
+            // never admits more memory than the member has.
+            let rep = key.representative(&cfg);
+            assert_eq!(rep.engines.len(), d.profile.engines.len());
+            assert!(rep.mem_budget_bytes <= d.profile.mem_budget_bytes);
+        }
+    }
+
+    #[test]
+    fn cohorts_far_fewer_than_devices() {
+        let cfg = PopulationConfig { size: 200, ..Default::default() };
+        let fleet = sample_fleet(&cfg);
+        let cohorts: std::collections::BTreeSet<CohortKey> =
+            fleet.iter().map(|d| d.cohort_key()).collect();
+        assert!(cohorts.len() < fleet.len() / 4,
+                "{} cohorts for {} devices", cohorts.len(), fleet.len());
+    }
+}

@@ -1,0 +1,461 @@
+//! Cross-device LUT transfer: predict an unseen device's per-design
+//! latencies from measured *anchor* devices, without running the full
+//! per-device measurement sweep.
+//!
+//! The registry cold-start problem at fleet scale: OODIn's offline Device
+//! Measurements sweep every `<variant, engine, threads, governor>`
+//! configuration per device (§III-D, 200 runs each) — affordable for three
+//! phones, impossible for thousands of SoC variants.  This module
+//! amortises it:
+//!
+//! * **Roofline-ratio scaling.**  For each LUT key, the predicted latency
+//!   is the nearest anchor's *measured* entry scaled by the ratio of the
+//!   closed-form roofline predictions ([`crate::perf::latency_ms`]) on the
+//!   target's spec-sheet profile vs the anchor's.  The anchor measurement
+//!   carries everything the analytical model got right about reality
+//!   (noise floor, warm-up-trimmed statistics); the ratio carries the
+//!   *observable* hardware delta (peak FLOPS, bandwidth, dispatch).  When
+//!   the target *is* an anchor the ratio is exactly 1 and the prediction
+//!   is the anchor entry bit-for-bit — transfer is anchored, not fitted.
+//!
+//! * **Confidence bounds.**  Per engine, confidence decays exponentially
+//!   with the log-space distance between the target's engine spec and its
+//!   nearest anchor's: far extrapolations are flagged rather than trusted.
+//!
+//! * **Probe fallback.**  Below the confidence threshold the engine is
+//!   micro-profiled: a small probe set of designs (default 2 per engine)
+//!   is measured on the *true* device through the simulator-backed
+//!   [`crate::measurements::Measurer`], and the geometric-mean
+//!   measured/predicted ratio becomes a per-engine correction applied to
+//!   every predicted entry.  This is what recovers the hidden latent
+//!   efficiency of [`super::population`] devices — the component no
+//!   spec-sheet model can see — at probe-set cost instead of
+//!   full-sweep cost.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::device::{DeviceProfile, EngineKind, EngineSpec};
+use crate::measurements::{Lut, LutKey, Measurer};
+use crate::model::Registry;
+use crate::perf::{self, ExecConditions};
+use crate::util::stats::LatencyStats;
+
+/// Transfer tuning knobs.
+#[derive(Debug, Clone)]
+pub struct TransferConfig {
+    /// Probe an engine when its transfer confidence falls below this.
+    pub confidence_threshold: f64,
+    /// Measured runs per probe configuration.
+    pub probe_runs: usize,
+    /// Discarded warm-up runs per probe configuration.
+    pub probe_warmup: usize,
+    /// Probe designs per low-confidence engine.
+    pub probes_per_engine: usize,
+    /// Log-normal measurement noise of the probes (0 = closed-form).
+    pub noise_sigma: f64,
+}
+
+impl Default for TransferConfig {
+    fn default() -> Self {
+        TransferConfig {
+            confidence_threshold: 0.72,
+            probe_runs: 4,
+            probe_warmup: 1,
+            probes_per_engine: 2,
+            noise_sigma: 0.0,
+        }
+    }
+}
+
+/// A fully measured reference device the transfer extrapolates from.
+#[derive(Debug, Clone)]
+pub struct Anchor {
+    /// Anchor name (its archetype profile name).
+    pub name: String,
+    /// The anchor's spec-sheet profile.
+    pub profile: DeviceProfile,
+    /// The anchor's measured LUT (full sweep).
+    pub lut: Lut,
+}
+
+/// Per-engine transfer provenance, reported by `oodin fleet-bench`.
+#[derive(Debug, Clone)]
+pub struct EngineTransfer {
+    /// Nearest anchor this engine extrapolates from.
+    pub anchor: String,
+    /// Log-space spec distance to that anchor.
+    pub distance: f64,
+    /// `exp(-distance)` — the transfer confidence.
+    pub confidence: f64,
+    /// True when the probe fallback ran for this engine.
+    pub probed: bool,
+    /// Probe configurations measured (0 when not probed).
+    pub probes: usize,
+    /// Multiplicative correction applied to every predicted entry on this
+    /// engine (1.0 when not probed).
+    pub correction: f64,
+}
+
+/// A transferred LUT plus its per-engine provenance.
+#[derive(Debug, Clone)]
+pub struct TransferredLut {
+    /// The predicted LUT for the target device.
+    pub lut: Lut,
+    /// Per-engine anchor choice, confidence and probe outcome.
+    pub engines: BTreeMap<EngineKind, EngineTransfer>,
+}
+
+/// Log-space distance between two engine specs: the observable axes the
+/// roofline ratio extrapolates along (peak throughput, bandwidth,
+/// dispatch overhead).
+pub fn engine_distance(t: &EngineSpec, a: &EngineSpec) -> f64 {
+    (t.peak_gflops_fp32 / a.peak_gflops_fp32).ln().abs()
+        + (t.mem_bw_gbps / a.mem_bw_gbps).ln().abs()
+        + (t.dispatch_ms / a.dispatch_ms).ln().abs()
+}
+
+/// Transfer confidence for a spec distance: `exp(-d)` ∈ (0, 1].
+pub fn confidence(distance: f64) -> f64 {
+    (-distance).exp()
+}
+
+/// Closed-form roofline latency of a LUT configuration on a profile, at
+/// nominal (idle, cool) conditions — the analytical half of the transfer
+/// ratio.
+pub fn roofline_ms(profile: &DeviceProfile, registry: &Registry, key: &LutKey)
+                   -> Option<f64> {
+    let v = registry.get(&key.variant)?;
+    let cond = ExecConditions {
+        governor: key.governor,
+        threads: key.threads,
+        load_factor: 0.0,
+        thermal_freq_scale: 1.0,
+    };
+    perf::latency_ms(profile, key.engine, v, &cond)
+}
+
+fn scale_stats(s: &LatencyStats, r: f64) -> LatencyStats {
+    LatencyStats {
+        min: s.min * r,
+        max: s.max * r,
+        avg: s.avg * r,
+        median: s.median * r,
+        p90: s.p90 * r,
+        p99: s.p99 * r,
+        n: s.n,
+    }
+}
+
+/// The cross-device LUT transfer engine.
+pub struct TransferEngine<'a> {
+    /// Measured anchors, in preference order on distance ties.
+    pub anchors: Vec<Anchor>,
+    /// Model space shared by every device.
+    pub registry: &'a Registry,
+    /// Tuning knobs.
+    pub cfg: TransferConfig,
+}
+
+impl<'a> TransferEngine<'a> {
+    /// A transfer engine over measured anchors.
+    pub fn new(anchors: Vec<Anchor>, registry: &'a Registry,
+               cfg: TransferConfig) -> Self {
+        TransferEngine { anchors, registry, cfg }
+    }
+
+    /// Measure the standard anchors (every archetype, full sweep) with the
+    /// given depth/noise and build a transfer engine over them.
+    pub fn from_archetypes(registry: &'a Registry, cfg: TransferConfig,
+                           lut_runs: usize, lut_warmup: usize,
+                           noise_sigma: f64) -> Result<Self> {
+        let mut anchors = Vec::new();
+        for name in super::population::ARCHETYPES {
+            let profile = super::population::archetype_profile(name);
+            let lut = Measurer::new(&profile, registry)
+                .with_runs(lut_runs, lut_warmup)
+                .with_noise_sigma(noise_sigma)
+                .measure_all()?;
+            anchors.push(Anchor { name: name.to_string(), profile, lut });
+        }
+        Ok(TransferEngine::new(anchors, registry, cfg))
+    }
+
+    /// Anchor indices ordered by spec distance to `spec` (anchors lacking
+    /// the engine excluded); ties keep anchor order.
+    fn anchors_by_distance(&self, spec: &EngineSpec) -> Vec<(usize, f64)> {
+        let mut out: Vec<(usize, f64)> = self
+            .anchors
+            .iter()
+            .enumerate()
+            .filter_map(|(i, a)| {
+                a.profile
+                    .engine(spec.kind)
+                    .map(|aspec| (i, engine_distance(spec, aspec)))
+            })
+            .collect();
+        out.sort_by(|x, y| x.1.partial_cmp(&y.1).unwrap());
+        out
+    }
+
+    /// The distance from a profile's engine to its nearest anchor (`None`
+    /// when the profile lacks the engine or no anchor has it).
+    pub fn nearest_distance(&self, nominal: &DeviceProfile, kind: EngineKind)
+                            -> Option<f64> {
+        let spec = nominal.engine(kind)?;
+        self.anchors_by_distance(spec).first().map(|&(_, d)| d)
+    }
+
+    /// Predict the target's full LUT from its spec-sheet profile: for each
+    /// valid configuration, the nearest anchor's measured entry scaled by
+    /// the target/anchor roofline ratio.  Keys fall back to the
+    /// next-nearest anchor when the nearest lacks them (e.g. a governor
+    /// outside the anchor's set).
+    pub fn predict(&self, nominal: &DeviceProfile) -> Result<TransferredLut> {
+        let mut entries = BTreeMap::new();
+        let mut engines = BTreeMap::new();
+        for spec in &nominal.engines {
+            let ranked = self.anchors_by_distance(spec);
+            let &(nearest, distance) = ranked.first().ok_or_else(|| {
+                anyhow!("no anchor exposes engine {}", spec.kind.name())
+            })?;
+            engines.insert(spec.kind, EngineTransfer {
+                anchor: self.anchors[nearest].name.clone(),
+                distance,
+                confidence: confidence(distance),
+                probed: false,
+                probes: 0,
+                correction: 1.0,
+            });
+            let threads: Vec<usize> = match spec.kind {
+                EngineKind::Cpu => nominal.thread_candidates(),
+                _ => vec![1],
+            };
+            for v in self.registry.variants().iter().filter(|v| v.batch == 1) {
+                for &t in &threads {
+                    for &g in &nominal.governors {
+                        let key = LutKey {
+                            variant: v.name.clone(),
+                            engine: spec.kind,
+                            threads: t,
+                            governor: g,
+                        };
+                        let Some((anchor, entry)) = ranked
+                            .iter()
+                            .find_map(|&(i, _)| {
+                                self.anchors[i]
+                                    .lut
+                                    .get(&key)
+                                    .map(|e| (&self.anchors[i], e))
+                            })
+                        else {
+                            continue;
+                        };
+                        let target_roof = roofline_ms(nominal, self.registry,
+                                                      &key)
+                            .ok_or_else(|| anyhow!("roofline for {}",
+                                                   key.id()))?;
+                        let anchor_roof = roofline_ms(&anchor.profile,
+                                                      self.registry, &key)
+                            .ok_or_else(|| anyhow!("anchor roofline for {}",
+                                                   key.id()))?;
+                        let ratio = target_roof / anchor_roof;
+                        let mut e = entry.clone();
+                        e.latency = scale_stats(&entry.latency, ratio);
+                        e.mem_bytes = v.mem_bytes();
+                        e.accuracy = v.accuracy;
+                        entries.insert(key, e);
+                    }
+                }
+            }
+        }
+        Ok(TransferredLut {
+            lut: Lut { device: nominal.name.to_string(), entries },
+            engines,
+        })
+    }
+
+    /// Evenly spaced probe keys for one engine of a predicted LUT.
+    pub fn probe_keys(&self, tlut: &TransferredLut, kind: EngineKind)
+                      -> Vec<LutKey> {
+        let keys: Vec<&LutKey> = tlut
+            .lut
+            .entries
+            .keys()
+            .filter(|k| k.engine == kind)
+            .collect();
+        if keys.is_empty() {
+            return Vec::new();
+        }
+        let p = self.cfg.probes_per_engine.max(1);
+        let mut picks = Vec::new();
+        for j in 0..p {
+            let idx = if p == 1 { 0 } else { j * (keys.len() - 1) / (p - 1) };
+            let k = keys[idx].clone();
+            if !picks.contains(&k) {
+                picks.push(k);
+            }
+        }
+        picks
+    }
+
+    /// Probe fallback for one engine: micro-profile the probe set on the
+    /// *true* device profile (simulator-backed measurement), fold the
+    /// geometric-mean measured/predicted ratio into every predicted entry
+    /// on the engine, and record the outcome.
+    pub fn probe_engine(&self, true_profile: &DeviceProfile,
+                        tlut: &mut TransferredLut, kind: EngineKind)
+                        -> Result<()> {
+        let picks = self.probe_keys(tlut, kind);
+        if picks.is_empty() {
+            return Err(anyhow!("no predicted entries to probe on {}",
+                               kind.name()));
+        }
+        let measurer = Measurer::new(true_profile, self.registry)
+            .with_runs(self.cfg.probe_runs, self.cfg.probe_warmup)
+            .with_noise_sigma(self.cfg.noise_sigma);
+        let mut log_sum = 0.0;
+        for key in &picks {
+            let measured = measurer.measure_one(key)?;
+            let predicted = tlut
+                .lut
+                .get(key)
+                .ok_or_else(|| anyhow!("probe key {} unpredicted", key.id()))?;
+            log_sum += (measured.latency.avg / predicted.latency.avg).ln();
+        }
+        let correction = (log_sum / picks.len() as f64).exp();
+        for (k, e) in tlut.lut.entries.iter_mut() {
+            if k.engine == kind {
+                e.latency = scale_stats(&e.latency, correction);
+            }
+        }
+        let rec = tlut
+            .engines
+            .get_mut(&kind)
+            .ok_or_else(|| anyhow!("no transfer record for {}", kind.name()))?;
+        rec.probed = true;
+        rec.probes = picks.len();
+        rec.correction = correction;
+        Ok(())
+    }
+
+    /// Predict and, for every engine whose confidence falls below the
+    /// threshold, run the probe fallback against the true profile.
+    pub fn predict_with_probes(&self, nominal: &DeviceProfile,
+                               true_profile: &DeviceProfile)
+                               -> Result<TransferredLut> {
+        let mut tlut = self.predict(nominal)?;
+        let kinds: Vec<EngineKind> = tlut.engines.keys().copied().collect();
+        for kind in kinds {
+            if tlut.engines[&kind].confidence < self.cfg.confidence_threshold {
+                self.probe_engine(true_profile, &mut tlut, kind)?;
+            }
+        }
+        Ok(tlut)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::population::{archetype_profile, sample_device,
+                                   PopulationConfig};
+    use crate::model::test_fixtures::fake_registry;
+
+    fn engine_over(reg: &Registry) -> TransferEngine<'_> {
+        TransferEngine::from_archetypes(reg, TransferConfig::default(), 8, 1,
+                                        0.0)
+            .unwrap()
+    }
+
+    #[test]
+    fn anchor_predicts_itself_exactly() {
+        let reg = fake_registry();
+        let te = engine_over(&reg);
+        for anchor in &te.anchors {
+            let t = te.predict(&anchor.profile).unwrap();
+            assert_eq!(t.lut.len(), anchor.lut.len());
+            for (k, e) in &anchor.lut.entries {
+                let p = t.lut.get(k).unwrap();
+                assert_eq!(p.latency.avg, e.latency.avg, "{}", k.id());
+                assert_eq!(p.latency.p90, e.latency.p90, "{}", k.id());
+            }
+            for rec in t.engines.values() {
+                assert_eq!(rec.distance, 0.0);
+                assert_eq!(rec.confidence, 1.0);
+                assert!(!rec.probed);
+            }
+        }
+    }
+
+    #[test]
+    fn prediction_covers_the_target_key_space() {
+        let reg = fake_registry();
+        let te = engine_over(&reg);
+        let d = sample_device(&PopulationConfig::default(), 3);
+        let t = te.predict(&d.nominal).unwrap();
+        // Every key measurable on the true device is predicted.
+        let full = Measurer::new(&d.profile, &reg)
+            .with_runs(4, 1)
+            .with_noise_sigma(0.0)
+            .measure_all()
+            .unwrap();
+        assert_eq!(t.lut.len(), full.len());
+        for k in full.entries.keys() {
+            assert!(t.lut.get(k).is_some(), "missing {}", k.id());
+        }
+    }
+
+    #[test]
+    fn low_confidence_triggers_probe_and_correction_recovers_latent() {
+        let reg = fake_registry();
+        let te = engine_over(&reg);
+        // A target far from every anchor on the CPU axis, with a strong
+        // hidden latent inefficiency the spec sheet cannot see.
+        let base = archetype_profile("samsung_a71");
+        let mut nominal = base.clone();
+        nominal.engines[0].peak_gflops_fp32 *= (0.9f64).exp();
+        let mut true_profile = nominal.clone();
+        true_profile.engines[0].peak_gflops_fp32 *= 0.8;
+        true_profile.engines[0].mem_bw_gbps *= 0.8;
+
+        let t = te.predict_with_probes(&nominal, &true_profile).unwrap();
+        let cpu = &t.engines[&EngineKind::Cpu];
+        assert!(cpu.confidence < te.cfg.confidence_threshold,
+                "confidence {} not low", cpu.confidence);
+        assert!(cpu.probed && cpu.probes >= 2);
+        // The latent factor slows the device ~1/0.8: the correction must
+        // recover most of it (dispatch overhead keeps it from being exact).
+        assert!(cpu.correction > 1.15 && cpu.correction < 1.30,
+                "correction {}", cpu.correction);
+        // Post-correction predictions sit close to true measurements.
+        let full = Measurer::new(&true_profile, &reg)
+            .with_runs(4, 1)
+            .with_noise_sigma(0.0)
+            .measure_all()
+            .unwrap();
+        for (k, e) in &full.entries {
+            if k.engine != EngineKind::Cpu {
+                continue;
+            }
+            let p = t.lut.get(k).unwrap();
+            let err = (p.latency.avg / e.latency.avg - 1.0).abs();
+            assert!(err < 0.06, "{}: err {err}", k.id());
+        }
+    }
+
+    #[test]
+    fn high_confidence_skips_probes() {
+        let reg = fake_registry();
+        let te = engine_over(&reg);
+        let d = sample_device(&PopulationConfig::default(), 11);
+        let t = te.predict_with_probes(&d.nominal, &d.profile).unwrap();
+        for (kind, rec) in &t.engines {
+            if rec.confidence >= te.cfg.confidence_threshold {
+                assert!(!rec.probed, "{} probed at confidence {}",
+                        kind.name(), rec.confidence);
+            }
+        }
+    }
+}

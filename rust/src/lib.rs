@@ -44,6 +44,11 @@
 //!   per-app SLOs, joint (σ₁…σ_N) optimisation under global resource
 //!   constraints, time-sliced engine arbitration with admission control,
 //!   and coordinated joint re-adaptation.
+//! * [`fleet`] — the population layer: seeded device-population sampling
+//!   from the Table I archetypes, cross-device LUT transfer (roofline-
+//!   ratio scaling + confidence-gated probe fallback), and device cohorts
+//!   sharing one transferred LUT and one LRU-bounded frontier cache each,
+//!   so profiling and Pareto builds amortise across thousands of devices.
 //! * [`sil`] / [`dlacl`] / [`mdcl`] — the multi-layer mobile software
 //!   architecture (Fig 2).
 //! * [`app`] — the assembled Application; [`serving`] — the async serving
@@ -67,6 +72,7 @@ pub mod devicesim;
 pub mod dlacl;
 pub mod dvfs;
 pub mod experiments;
+pub mod fleet;
 pub mod manager;
 pub mod mdcl;
 pub mod measurements;

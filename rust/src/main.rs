@@ -12,6 +12,7 @@
 //! oodin serve-bench [--smoke] [--device d] [--rate r] [--duration ms] [--json f]
 //! oodin multi   [--smoke] [--device d] [--apps n] [--windows w] [--json f]
 //! oodin opt-bench [--smoke] [--device d] [--apps n] [--json f]
+//! oodin fleet-bench [--smoke] [--devices n] [--seed s] [--family f] [--json f]
 //! ```
 //!
 //! Every command runs hermetically when `artifacts/` is absent: the
@@ -20,8 +21,8 @@
 use anyhow::{bail, Context, Result};
 
 use oodin::config::UseCase;
-use oodin::experiments::{fig3, fig456, fig7, fig8, loadgen, multiapp,
-                         optbench, tables};
+use oodin::experiments::{fig3, fig456, fig7, fig8, fleetbench, loadgen,
+                         multiapp, optbench, tables};
 use oodin::measurements::Measurer;
 use oodin::model::Precision;
 use oodin::optimizer::Optimizer;
@@ -92,6 +93,7 @@ fn run() -> Result<()> {
         "serve-bench" => cmd_serve_bench(&args),
         "multi" => cmd_multi(&args),
         "opt-bench" => cmd_opt_bench(&args),
+        "fleet-bench" => cmd_fleet_bench(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -116,6 +118,7 @@ fn print_usage() {
          \x20 serve-bench [--smoke] [--device d] [--rate r] [--duration ms] [--json f]  pipeline load bench\n\
          \x20 multi    [--smoke] [--device d] [--apps n] [--windows w] [--json f]  multi-app contention table\n\
          \x20 opt-bench [--smoke] [--device d] [--apps n] [--json f]  full-search vs frontier-walk adaptation cost\n\
+         \x20 fleet-bench [--smoke] [--devices n] [--seed s] [--family f] [--json f]  population-scale LUT transfer + cohort caches\n\
          \n\
          (no artifacts/?  everything runs on the hermetic SimBackend)"
     );
@@ -232,6 +235,31 @@ fn cmd_opt_bench(args: &Args) -> Result<()> {
         cfg.n_apps = n.parse().context("--apps")?;
     }
     optbench::print(&registry, &cfg, args.flag("json"))
+}
+
+fn cmd_fleet_bench(args: &Args) -> Result<()> {
+    let registry = load_registry_or_synthetic()?;
+    let mut cfg = if args.has("smoke") {
+        fleetbench::FleetBenchConfig::smoke()
+    } else {
+        fleetbench::FleetBenchConfig::full()
+    };
+    if let Some(n) = args.flag("devices") {
+        cfg.fleet.population.size = n.parse().context("--devices")?;
+    }
+    if let Some(s) = args.flag("seed") {
+        cfg.fleet.population.seed = s.parse().context("--seed")?;
+    }
+    if let Some(f) = args.flag("family") {
+        cfg.family = f.to_string();
+    }
+    // The smoke acceptance bounds (mean regret ≤ 5%, builds < devices) are
+    // pinned to the standard smoke population; any override makes this an
+    // exploration run — report the metrics instead of aborting on them.
+    if args.has("devices") || args.has("seed") || args.has("family") {
+        cfg.enforce_regret_pct = None;
+    }
+    fleetbench::print(&registry, &cfg, args.flag("json"))
 }
 
 fn cmd_serve_bench(args: &Args) -> Result<()> {

@@ -181,8 +181,11 @@ pub struct RuntimeManager {
     degradation_start_ms: Option<f64>,
     window: RollingWindow,
     /// Cached Pareto frontiers per conditions-bucket (interior-mutable so
-    /// `best_under` keeps its `&self` signature).
-    frontiers: Mutex<FrontierCache>,
+    /// `best_under` keeps its `&self` signature).  Private by default; the
+    /// fleet layer injects one shared cache per device cohort through
+    /// [`RuntimeManager::with_frontier_cache`] so frontier builds amortise
+    /// across a whole population of near-identical devices.
+    frontiers: Arc<Mutex<FrontierCache>>,
     /// History of all switches (experiment reporting).
     pub switches: Vec<Switch>,
 }
@@ -205,7 +208,7 @@ impl RuntimeManager {
             violations: 0,
             degradation_start_ms: None,
             window: RollingWindow::new(policy.latency_window.max(1)),
-            frontiers: Mutex::new(FrontierCache::new()),
+            frontiers: Arc::new(Mutex::new(FrontierCache::new())),
             policy,
             switches: Vec::new(),
         }
@@ -215,6 +218,17 @@ impl RuntimeManager {
     pub fn with_policy(mut self, policy: Policy) -> Self {
         self.window = RollingWindow::new(policy.latency_window.max(1));
         self.policy = policy;
+        self
+    }
+
+    /// Share an external frontier cache instead of the manager's private
+    /// one.  Managers of devices in the same fleet cohort point at one
+    /// cache over the same (representative device, LUT), so each
+    /// (task, conditions-bucket) frontier is built once per cohort rather
+    /// than once per device.
+    pub fn with_frontier_cache(mut self,
+                               cache: Arc<Mutex<FrontierCache>>) -> Self {
+        self.frontiers = cache;
         self
     }
 
@@ -252,16 +266,9 @@ impl RuntimeManager {
         let space = DesignSpace::new(&self.device, &self.registry, &self.lut);
         let frontier = self.frontiers.lock().unwrap().frontier(
             &space, self.objective, &self.space, &bucket);
-        let pick = match self.objective {
-            Objective::TargetLatency { t_target_ms, .. } => {
-                frontier.points().iter().find(|c| {
-                    self.adjusted_latency(&c.design, conds)
-                        .map_or(false, |adj| adj <= t_target_ms)
-                })
-            }
-            _ => frontier.best(),
-        };
-        pick.map(|c| c.design.clone())
+        crate::designspace::select_from_frontier(&frontier, &self.lut,
+                                                 self.objective, conds)
+            .map(|c| c.design.clone())
             .ok_or_else(|| anyhow::anyhow!("no feasible design under conditions"))
     }
 

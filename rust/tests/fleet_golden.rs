@@ -1,0 +1,76 @@
+//! Golden + acceptance tests for `oodin fleet-bench --smoke`.
+//!
+//! The smoke payload is pinned byte-for-byte in
+//! `tests/golden/fleetbench_smoke.json`, generated INDEPENDENTLY by
+//! `python/golden_fleetbench.py` (an N-version Python oracle of the whole
+//! smoke path: SplitMix64 population sampling, roofline LUTs, roofline-
+//! ratio transfer + probe fallback, cohort cache accounting, the manager
+//! decide() state machine under the storm, and the JSON formatting).
+//! Regenerate with
+//!
+//!     python3 python/golden_fleetbench.py
+//!
+//! and the issue's acceptance criteria are asserted here explicitly:
+//! transferred-LUT selections reach ≤ 5% mean latency regret vs the
+//! full-profile oracle on a ≥ 200-device fleet, with cohort frontier
+//! builds strictly fewer than devices.
+
+use oodin::experiments::fleetbench::{self, FleetBenchConfig};
+use oodin::model::test_fixtures::fake_registry;
+use oodin::util::json;
+
+#[test]
+fn golden_fleetbench_smoke_json() {
+    let reg = fake_registry();
+    let cfg = FleetBenchConfig::smoke();
+    let report = fleetbench::run(&reg, &cfg).unwrap();
+    let got = json::to_string(&fleetbench::report_json(&report)) + "\n";
+    let path = concat!(env!("CARGO_MANIFEST_DIR"),
+                       "/tests/golden/fleetbench_smoke.json");
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(path, &got).unwrap();
+    }
+    let want = std::fs::read_to_string(path)
+        .expect("golden snapshot missing — run with UPDATE_GOLDEN=1 or \
+                 python3 python/golden_fleetbench.py");
+    assert_eq!(got, want,
+               "fleet-bench smoke JSON drifted from the golden snapshot \
+                (UPDATE_GOLDEN=1 to accept, then re-run the Python oracle \
+                to confirm both implementations still agree)");
+}
+
+#[test]
+fn smoke_meets_acceptance_criteria() {
+    let reg = fake_registry();
+    let cfg = FleetBenchConfig::smoke();
+    let report = fleetbench::run(&reg, &cfg).unwrap();
+    // ≥ 200-device fleet.
+    assert!(cfg.fleet.population.size >= 200);
+    assert_eq!(report.decisions,
+               (cfg.ticks * cfg.fleet.population.size) as u64);
+    // Transferred-LUT selections: ≤ 5% mean latency regret vs the
+    // full-profile oracle.
+    assert!(report.regret_mean_pct <= 5.0,
+            "mean regret {}%", report.regret_mean_pct);
+    assert!(report.regret_events
+            >= cfg.regret_ticks.len() * cfg.fleet.population.size);
+    // Cohort sharing demonstrably amortises: strictly fewer frontier
+    // builds than devices, and hits dominate.
+    assert!(report.cache_builds < cfg.fleet.population.size as u64,
+            "{} builds for {} devices", report.cache_builds,
+            cfg.fleet.population.size);
+    assert!(report.cache_hits > report.cache_builds);
+    // The storm actually exercises adaptation on a meaningful share of
+    // the fleet.
+    assert!(report.switches > 0 && report.devices_switched > 0);
+}
+
+#[test]
+fn smoke_is_deterministic() {
+    let reg = fake_registry();
+    let cfg = FleetBenchConfig::smoke();
+    let a = fleetbench::run(&reg, &cfg).unwrap();
+    let b = fleetbench::run(&reg, &cfg).unwrap();
+    assert_eq!(json::to_string(&fleetbench::report_json(&a)),
+               json::to_string(&fleetbench::report_json(&b)));
+}

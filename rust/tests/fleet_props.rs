@@ -1,0 +1,249 @@
+//! Property tests for the fleet layer: cross-device LUT transfer
+//! (zero regret on anchors, monotone scaling along every perturbation
+//! axis, confidence-gated probe fallback) and cohort-shared frontier
+//! caches (builds amortise across the population).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use oodin::designspace::{rank, DesignSpace};
+use oodin::device::EngineKind;
+use oodin::dvfs::Governor;
+use oodin::fleet::population::{archetype_profile, sample_fleet, EngineAxes,
+                               PopulationConfig};
+use oodin::fleet::{Fleet, FleetConfig, TransferConfig, TransferEngine};
+use oodin::fleet::{population, transfer};
+use oodin::manager::Conditions;
+use oodin::measurements::LutKey;
+use oodin::model::test_fixtures::{fake_manifest, fake_registry};
+use oodin::model::Registry;
+use oodin::optimizer::{Objective, SearchSpace};
+use oodin::util::stats::Percentile;
+
+fn obj() -> Objective {
+    Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 }
+}
+
+fn anchors(reg: &Registry) -> TransferEngine<'_> {
+    TransferEngine::from_archetypes(reg, TransferConfig::default(), 8, 1, 0.0)
+        .unwrap()
+}
+
+/// Axes covering every archetype engine, flops-perturbed on one engine.
+fn axes_with(base: &oodin::device::DeviceProfile, kind: EngineKind,
+             flops_ln: f64, bw_ln: f64) -> Vec<EngineAxes> {
+    base.engines
+        .iter()
+        .map(|e| EngineAxes {
+            kind: e.kind,
+            flops_ln: if e.kind == kind { flops_ln } else { 0.0 },
+            bw_ln: if e.kind == kind { bw_ln } else { 0.0 },
+            latent_ln: 0.0,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Satellite property 1: zero regret when the target device IS an anchor.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn anchor_target_has_exactly_zero_regret() {
+    let reg = fake_registry();
+    let te = anchors(&reg);
+    let space = SearchSpace::family("mobilenet_v2_100");
+    let mut loaded = Conditions::idle();
+    loaded.loads.insert(EngineKind::Cpu, 2.0);
+    for anchor in &te.anchors {
+        let predicted = te.predict(&anchor.profile).unwrap().lut;
+        for conds in [Conditions::idle(), loaded.clone()] {
+            let ds_pred = DesignSpace::new(&anchor.profile, &reg, &predicted);
+            let ds_true = DesignSpace::new(&anchor.profile, &reg, &anchor.lut);
+            let p = rank(ds_pred.enumerate(obj(), &space, &conds), obj());
+            let t = rank(ds_true.enumerate(obj(), &space, &conds), obj());
+            assert_eq!(p.len(), t.len());
+            // Same selection AND bit-identical true latency: regret == 0.
+            assert_eq!(p[0].design, t[0].design, "{}", anchor.name);
+            assert_eq!(p[0].latency_ms, t[0].latency_ms, "{}", anchor.name);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Satellite property 2: monotone latency scaling along each axis.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn predicted_latency_monotone_in_flops_axis() {
+    let reg = fake_registry();
+    let te = anchors(&reg);
+    let base = archetype_profile("samsung_a71");
+    // inception fp32 on the CPU is strongly compute-bound: more peak FLOPS
+    // must strictly reduce the predicted latency.
+    let key = LutKey {
+        variant: "inception_v3__fp32__b1".into(),
+        engine: EngineKind::Cpu,
+        threads: 8,
+        governor: Governor::Performance,
+    };
+    let mut prev = f64::INFINITY;
+    for f in [-0.3, -0.1, 0.0, 0.1, 0.3] {
+        let axes = axes_with(&base, EngineKind::Cpu, f, 0.0);
+        let nominal = population::scaled_profile(&base, &axes, 0.0, 0.0, false);
+        let t = te.predict(&nominal).unwrap();
+        let avg = t.lut.get(&key).unwrap().latency.avg;
+        assert!(avg < prev, "flops_ln={f}: {avg} !< {prev}");
+        prev = avg;
+    }
+}
+
+#[test]
+fn predicted_latency_monotone_in_bandwidth_axis() {
+    // Make inception fp32 memory-bound so the bandwidth axis bites.
+    let manifest = fake_manifest().replace(
+        r#""size_bytes":400000,"flops":90000000"#,
+        r#""size_bytes":200000000,"flops":90000000"#,
+    );
+    let reg = Registry::from_manifest_json(&manifest,
+                                           PathBuf::from("/tmp/fake"))
+        .unwrap();
+    let te = anchors(&reg);
+    let base = archetype_profile("samsung_a71");
+    let key = LutKey {
+        variant: "inception_v3__fp32__b1".into(),
+        engine: EngineKind::Cpu,
+        threads: 8,
+        governor: Governor::Performance,
+    };
+    let mut prev = f64::INFINITY;
+    for b in [-0.15, -0.05, 0.0, 0.05, 0.15] {
+        let axes = axes_with(&base, EngineKind::Cpu, 0.0, b);
+        let nominal = population::scaled_profile(&base, &axes, 0.0, 0.0, false);
+        let t = te.predict(&nominal).unwrap();
+        let avg = t.lut.get(&key).unwrap().latency.avg;
+        assert!(avg < prev, "bw_ln={b}: {avg} !< {prev}");
+        prev = avg;
+    }
+}
+
+#[test]
+fn thermal_and_memory_axes_scale_their_targets() {
+    let base = archetype_profile("samsung_a71");
+    let axes = axes_with(&base, EngineKind::Cpu, 0.0, 0.0);
+    let mut prev_heat = f64::INFINITY;
+    let mut prev_mem = 0u64;
+    for x in [-0.2, 0.0, 0.2] {
+        let p = population::scaled_profile(&base, &axes, x, x, false);
+        // More thermal capacity → strictly lower heat accumulation.
+        let heat = p.engine(EngineKind::Cpu).unwrap().thermal.heat_per_ms;
+        assert!(heat < prev_heat, "thermal_ln={x}");
+        prev_heat = heat;
+        // Memory axis monotone in the budget.
+        assert!(p.mem_budget_bytes > prev_mem, "mem_ln={x}");
+        prev_mem = p.mem_budget_bytes;
+    }
+}
+
+#[test]
+fn memory_axis_gates_deployability() {
+    // With an oversized mobilenet FP32 (fast enough to stay deployable on
+    // the sony latency bound, but near its memory budget) the memory axis
+    // decides how much of the family's ladder is admitted: a roomier
+    // sampled device must never admit fewer designs.
+    let manifest = fake_manifest().replace(
+        r#""size_bytes":400000,"flops":4000000"#,
+        r#""size_bytes":3600000,"flops":4000000"#,
+    );
+    let reg = Registry::from_manifest_json(&manifest,
+                                           PathBuf::from("/tmp/fake"))
+        .unwrap();
+    let te = anchors(&reg);
+    let base = archetype_profile("sony_c5");
+    let axes = axes_with(&base, EngineKind::Cpu, 0.0, 0.0);
+    let space = SearchSpace::family("mobilenet_v2_100");
+    let mut prev = 0usize;
+    let mut grew = false;
+    for m in [-0.15, 0.0, 0.15] {
+        let nominal = population::scaled_profile(&base, &axes, 0.0, m, false);
+        let t = te.predict(&nominal).unwrap();
+        let ds = DesignSpace::new(&nominal, &reg, &t.lut);
+        let n = ds.enumerate(obj(), &space, &Conditions::idle()).len();
+        assert!(n >= prev, "mem_ln={m}: {n} admitted < {prev}");
+        if n > prev && prev > 0 {
+            grew = true;
+        }
+        prev = n;
+    }
+    assert!(grew, "memory spread never changed admission");
+}
+
+#[test]
+fn engine_availability_axis_removes_lut_entries() {
+    let reg = fake_registry();
+    let te = anchors(&reg);
+    let cfg = PopulationConfig { size: 128, ..Default::default() };
+    let fleet = sample_fleet(&cfg);
+    let dropped = fleet.iter().find(|d| d.dropped_npu).expect("some drop");
+    let t = te.predict(&dropped.nominal).unwrap();
+    assert!(t.lut.entries.keys().all(|k| k.engine != EngineKind::Npu));
+    assert!(!t.engines.contains_key(&EngineKind::Npu));
+}
+
+// ---------------------------------------------------------------------------
+// Satellite property 3: probe fallback triggers exactly under low
+// confidence.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn probe_fallback_triggers_iff_confidence_low() {
+    let reg = fake_registry();
+    let te = anchors(&reg);
+    let base = archetype_profile("samsung_a71");
+    for delta in [0.0, 0.2, 0.5, 0.9] {
+        let axes = axes_with(&base, EngineKind::Cpu, delta, 0.0);
+        let nominal = population::scaled_profile(&base, &axes, 0.0, 0.0, false);
+        let t = te.predict_with_probes(&nominal, &nominal).unwrap();
+        let cpu = &t.engines[&EngineKind::Cpu];
+        let expect_probe =
+            transfer::confidence(delta) < te.cfg.confidence_threshold;
+        assert_eq!(cpu.probed, expect_probe,
+                   "delta={delta}: confidence {}", cpu.confidence);
+        if cpu.probed {
+            // True profile == nominal here, so the probes must confirm the
+            // prediction (correction ≈ 1).
+            assert!((cpu.correction - 1.0).abs() < 1e-9,
+                    "correction {}", cpu.correction);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet-level amortisation.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_cohort_builds_stay_below_devices_under_churn() {
+    // 128 devices quantise into ~26 cohorts (seed 77): three visited
+    // buckets per cohort keep builds far below the device count.
+    let cfg = FleetConfig {
+        population: PopulationConfig { size: 128, ..Default::default() },
+        ..Default::default()
+    };
+    let fleet = Fleet::build(Arc::new(fake_registry()), cfg).unwrap();
+    let space = SearchSpace::family("mobilenet_v2_100");
+    // Every device visits three condition buckets.
+    let mut gpu = Conditions::idle();
+    gpu.loads.insert(EngineKind::Gpu, 1.0);
+    let mut hot = Conditions::idle();
+    hot.thermal.insert(EngineKind::Npu, 0.5);
+    for idx in 0..fleet.len() {
+        for conds in [&Conditions::idle(), &gpu, &hot] {
+            fleet.select(idx, obj(), &space, conds).unwrap();
+        }
+    }
+    let stats = fleet.cache_stats();
+    assert!(stats.builds < fleet.len() as u64,
+            "{} builds for {} devices", stats.builds, fleet.len());
+    assert_eq!(stats.builds + stats.hits, 3 * fleet.len() as u64);
+    assert!(stats.hits > stats.builds, "sharing must dominate: {stats:?}");
+}

@@ -276,12 +276,20 @@ CFG = dict(
     mem_log_spread=0.15, latent_log_spread=0.10, npu_drop_prob=0.15,
     confidence_threshold=0.72, probe_runs=4, probes_per_engine=2,
     lut_runs=4, frontier_cache_cap=256,
+    frontier_mem_budget_bytes=8 * 1024 * 1024,
     family="mobilenet_v2_100", eps=0.05,
     ticks=12, tick_ms=250.0, regret_ticks=[1, 4, 8, 11],
 )
 RATES = [1.0, 0.5, 0.25]
 CAMERA_FPS = 30.0
 BUCKET_LOG2_STEP = 0.5
+# designspace::frontier resident-byte accounting constants.
+FRONTIER_BASE_BYTES = 256
+FRONTIER_POINT_BYTES = 192
+# experiments::fleetbench post-storm correction + cost-model constants.
+CORRECTION_ENGINE = "cpu"
+CORRECTION_FACTOR = 1.25
+SIM_NS_PER_EVAL = 150
 
 
 def scaled_device(archetype, axes, thermal_ln, mem_ln, latent):
@@ -524,6 +532,60 @@ def best_design(dev, lut, loads, thermals):
             best["governor"], best["r"])
 
 
+def design_tuple(p):
+    return (p["variant"], p["engine"], p["threads"], p["governor"], p["r"])
+
+
+def dominates(p, q):
+    """designspace::frontier::dominates (slice-local Pareto dominance)."""
+    if (p["engine"] != q["engine"] or p["r"] != q["r"]
+            or p["threads"] != q["threads"]):
+        return False
+    quality_no_worse = (p["acc"] > q["acc"]
+                        or (p["acc"] == q["acc"] and p["mem"] <= q["mem"]))
+    no_worse = (p["latency"] <= q["latency"] and p["avg"] <= q["avg"]
+                and p["energy"] <= q["energy"] and quality_no_worse)
+    strictly = (p["latency"] < q["latency"] or p["avg"] < q["avg"]
+                or p["energy"] < q["energy"] or p["acc"] > q["acc"]
+                or (p["acc"] == q["acc"] and p["mem"] < q["mem"]))
+    return no_worse and strictly
+
+
+def frontier_build(dev, lut, rep_loads):
+    """ParetoFrontier::build at the bucket's representative conditions:
+    ranked non-dominated points plus the enumerated-space size."""
+    cands = enumerate_space(dev, lut, CFG["family"], CFG["eps"], rep_loads,
+                            {})
+    for c in cands:
+        c["score"] = -c["latency"]
+    pts = [q for q in cands if not any(dominates(p, q) for p in cands)]
+    pts.sort(key=rank_key)
+    return pts, len(cands)
+
+
+def eval_key(dev, lut, key, r, rep_loads):
+    """DesignSpace::eval_candidate for MinLatency(avg): re-score one
+    (LUT key, rate) pair, None when the pre-filter now rejects it."""
+    vname, kind, threads, governor = key
+    v = VARIANTS[vname]
+    spec = spec_of(dev, kind)
+    raw = lut.get(key)
+    if spec is None or raw is None:
+        return None
+    if not v["mem"] <= dev["mem_budget"]:
+        return None
+    if raw > dev["max_deployable"]:
+        return None
+    if A_REF - v["acc"] > CFG["eps"] + 1e-12:
+        return None
+    energy = energy_proxy(spec, raw, governor)
+    adj = raw * contention(rep_loads.get(kind, 0.0)) / max(1.0, 1e-3)
+    fps = min(CAMERA_FPS * r, 1000.0 / adj)
+    return dict(variant=vname, engine=kind, threads=threads,
+                governor=governor, r=r, latency=adj, avg=adj, fps=fps,
+                mem=v["mem"], acc=v["acc"], energy=energy, score=-adj)
+
+
 # --------------------------------------------------------------------------
 # manager::RuntimeManager::decide — the adaptation state machine.
 # --------------------------------------------------------------------------
@@ -669,7 +731,8 @@ def run_fleetbench_smoke():
             device_cohort[m] = ci
         cohorts.append(dict(
             key=key, id=cohort_id(key), rep=rep, lut=entries,
-            engines=engines, members=members, cache={}, builds=0, hits=0))
+            engines=engines, members=members, cache={}, builds=0, hits=0,
+            evals=0))
 
     # Full-profile oracle LUTs + transfer prediction error on the family.
     oracle_luts = []
@@ -690,15 +753,20 @@ def run_fleetbench_smoke():
 
     def cohort_select(ci, loads, thermals):
         c = cohorts[ci]
-        bid = bucket_id(bucket_of(loads, thermals))
+        steps = bucket_of(loads, thermals)
+        bid = bucket_id(steps)
         if bid in c["cache"]:
             c["hits"] += 1
-            return c["cache"][bid]
-        steps = bucket_of(loads, thermals)
+            pts = c["cache"][bid]["points"]
+            return design_tuple(pts[0]) if pts else None
         rep_loads = {e: s * BUCKET_LOG2_STEP for e, s in steps.items()}
-        best = best_design(c["rep"], c["lut"], rep_loads, {})
+        pts, n_cands = frontier_build(c["rep"], c["lut"], rep_loads)
         c["builds"] += 1
-        c["cache"][bid] = best
+        c["evals"] += n_cands
+        c["cache"][bid] = dict(points=pts, steps=steps)
+        best = design_tuple(pts[0]) if pts else None
+        # The frontier-walk exactness theorem, re-asserted oracle-side.
+        assert best == best_design(c["rep"], c["lut"], rep_loads, {})
         return best
 
     # Managers: initial design = idle-conditions cohort selection.
@@ -776,6 +844,70 @@ def run_fleetbench_smoke():
         1 for c in cohorts if any(e["probed"] for e in c["engines"].values()))
     probe_measurements = sum(e["probes"] for c in cohorts
                              for e in c["engines"].values())
+    candidates_enumerated = sum(c["evals"] for c in cohorts)
+
+    # -- post-storm per-engine correction via the incremental delta path --
+    # Mirrors Fleet::apply_engine_correction: every cohort's CPU rows
+    # × CORRECTION_FACTOR, each resident frontier carried in place
+    # (ParetoFrontier::apply_delta with a pure engine-scale delta: resident
+    # CPU points re-scored from the new LUT, dropped only past the
+    # deployability bound; factor > 1 admits nothing new).
+    mem_budget_per_cohort = max(
+        CFG["frontier_mem_budget_bytes"] // len(cohorts), 1)
+    delta_updated = 0
+    delta_points_touched = 0
+    delta_rebuild_points = 0
+    for c in cohorts:
+        new_lut = {k: (v * CORRECTION_FACTOR if k[1] == CORRECTION_ENGINE
+                       else v)
+                   for k, v in c["lut"].items()}
+        # Refreshed space_size: count_admitted over the new LUT
+        # (conditions-independent), i.e. what a full rebuild would score.
+        sz_new = len(enumerate_space(c["rep"], new_lut, CFG["family"],
+                                     CFG["eps"], {}, {}))
+        for entry in c["cache"].values():
+            rep_loads = {e: s * BUCKET_LOG2_STEP
+                         for e, s in entry["steps"].items()}
+            touched = 0
+            newpts = []
+            for p in entry["points"]:
+                if p["engine"] != CORRECTION_ENGINE:
+                    newpts.append(p)
+                    continue
+                touched += 1
+                key = (p["variant"], p["engine"], p["threads"],
+                       p["governor"])
+                rescored = eval_key(c["rep"], new_lut, key, p["r"],
+                                    rep_loads)
+                if rescored is not None:
+                    newpts.append(rescored)
+            newpts.sort(key=rank_key)
+            entry["points"] = newpts
+            delta_updated += 1
+            delta_points_touched += touched
+            delta_rebuild_points += sz_new
+        c["lut"] = new_lut
+        resident_c = sum(FRONTIER_BASE_BYTES
+                         + FRONTIER_POINT_BYTES * len(e["points"])
+                         for e in c["cache"].values())
+        assert resident_c <= mem_budget_per_cohort, (c["id"], resident_c)
+    # The Rust driver ensure!s the same invariants.
+    assert delta_updated > 0
+    assert delta_points_touched < delta_rebuild_points, (
+        delta_points_touched, delta_rebuild_points)
+
+    # Post-correction idle round: every cohort's idle frontier stays warm
+    # (zero builds) and its walk still equals the full search.
+    for idx in range(CFG["size"]):
+        c = cohorts[device_cohort[idx]]
+        assert "idle" in c["cache"]
+        pts = c["cache"]["idle"]["points"]
+        assert design_tuple(pts[0]) == best_design(c["rep"], c["lut"], {},
+                                                   {})
+
+    resident_bytes = sum(
+        FRONTIER_BASE_BYTES + FRONTIER_POINT_BYTES * len(e["points"])
+        for c in cohorts for e in c["cache"].values())
 
     # -- JSON emission (mirrors experiments::fleetbench::report_json) -----
     config = jobj([
@@ -794,6 +926,8 @@ def run_fleetbench_smoke():
         ("confidence_threshold", jnum(CFG["confidence_threshold"])),
         ("probes_per_engine", jnum(CFG["probes_per_engine"])),
         ("frontier_cache_cap", jnum(CFG["frontier_cache_cap"])),
+        ("frontier_mem_budget_bytes",
+         jnum(CFG["frontier_mem_budget_bytes"])),
         ("ticks", jnum(CFG["ticks"])),
         ("tick_ms", jnum(CFG["tick_ms"])),
     ])
@@ -844,6 +978,17 @@ def run_fleetbench_smoke():
         ("zero_share", jnum(r3(zero / max(len(regrets), 1)))),
         ("deploy_faults", jnum(deploy_faults)),
     ])
+    delta = jobj([
+        ("engine", f'"{CORRECTION_ENGINE}"'),
+        ("factor", jnum(CORRECTION_FACTOR)),
+        ("updated", jnum(delta_updated)),
+        ("points_touched", jnum(delta_points_touched)),
+        ("rebuild_points", jnum(delta_rebuild_points)),
+        ("delta_lt_rebuild",
+         jbool(delta_points_touched < delta_rebuild_points)),
+        ("idempotent_reapply_updates", jnum(0)),
+        ("post_correction_builds", jnum(0)),
+    ])
     cache = jobj([
         ("builds", jnum(builds)),
         ("hits", jnum(hits)),
@@ -851,6 +996,15 @@ def run_fleetbench_smoke():
         ("evictions", jnum(0)),
         ("hit_rate", jnum(r3(hits / max(hits + builds, 1)))),
         ("builds_lt_devices", jbool(builds < CFG["size"])),
+        ("resident_bytes", jnum(resident_bytes)),
+        ("mem_budget_per_cohort", jnum(mem_budget_per_cohort)),
+        ("under_budget",
+         jbool(resident_bytes <= mem_budget_per_cohort * len(cohorts))),
+        ("candidates_enumerated", jnum(candidates_enumerated)),
+        ("decisions_per_sec_amortized",
+         jnum(r3(float(CFG["ticks"] * CFG["size"]) * 1e9
+                 / (float(SIM_NS_PER_EVAL)
+                    * float(max(candidates_enumerated, 1)))))),
     ])
     inner = jobj([
         ("config", config),
@@ -859,6 +1013,7 @@ def run_fleetbench_smoke():
         ("cohorts", "[" + ",".join(cohort_rows) + "]"),
         ("storm", storm),
         ("regret", regret),
+        ("delta", delta),
         ("cache", cache),
     ])
     return jobj([("fleet_bench", inner)]) + "\n"

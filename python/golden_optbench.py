@@ -256,40 +256,69 @@ def energy_proxy(spec, avg_ms, governor):
     return avg_ms * spec["heat"] * f * f * HEAT_FACTOR[governor]
 
 
-def enumerate_space(dev_name, lut, family, objective, rep_loads):
-    """Mirror of DesignSpace::enumerate at representative conditions."""
+def lut_key_sorted(lut):
+    """LUT keys in Rust BTreeMap order (variant, engine, threads, gov)."""
+    return sorted(lut.keys(),
+                  key=lambda k: (k[0], ENGINE_ORDER.index(k[1]),
+                                 k[2], GOV_ORDER.index(k[3])))
+
+
+def key_admitted(dev_name, lut, family, objective, key):
+    """Mirror of DesignSpace::entry_admitted (condition-independent)."""
+    variant, kind, threads, governor = key
+    v = VARIANTS[variant]
+    if v["family"] != family:
+        return False
+    if spec_of(dev_name, kind) is None:
+        return False
+    entry = lut.get(key)
+    if entry is None:
+        return False
     dev = DEVICES[dev_name]
-    stat = objective["stat"]
+    if not v["mem"] <= dev["mem_budget"]:
+        return False
+    if entry["avg"] > dev["max_deployable"]:
+        return False
     eps = objective.get("eps")
+    if eps is not None and A_REF[family] - v["acc"] > eps + 1e-12:
+        return False
+    return True
+
+
+def eval_key(dev_name, lut, family, objective, rep_loads, key, r):
+    """Mirror of DesignSpace::eval_candidate for one (key, rate)."""
+    if not key_admitted(dev_name, lut, family, objective, key):
+        return None
+    variant, kind, threads, governor = key
+    v = VARIANTS[variant]
+    spec = spec_of(dev_name, kind)
+    entry = lut[key]
+    stat = objective["stat"]
+    energy = energy_proxy(spec, entry["avg"], governor)
+    mult = 2.0 ** max(rep_loads.get(kind, 0.0), 0.0)
+    lat = entry[stat] * mult / 1.0
+    avg = entry["avg"] * mult / 1.0
+    fps = min(CAMERA_FPS * r, 1000.0 / avg)
+    return dict(
+        variant=variant, engine=kind, threads=threads,
+        governor=governor, r=r, latency=lat, avg=avg, fps=fps,
+        mem=v["mem"], acc=v["acc"], energy=energy,
+    )
+
+
+def enumerate_space(dev_name, lut, family, objective, rep_loads,
+                    pred=None):
+    """Mirror of DesignSpace::enumerate_where at representative
+    conditions (``pred=None`` is exactly ``enumerate``)."""
     out = []
-    for key in sorted(lut.keys(),
-                      key=lambda k: (k[0], ENGINE_ORDER.index(k[1]),
-                                     k[2], GOV_ORDER.index(k[3]))):
-        variant, kind, threads, governor = key
-        v = VARIANTS[variant]
-        if v["family"] != family:
+    for key in lut_key_sorted(lut):
+        if pred is not None and not pred(key):
             continue
-        spec = spec_of(dev_name, kind)
-        if spec is None:
-            continue
-        entry = lut[key]
-        if not v["mem"] <= dev["mem_budget"]:
-            continue
-        if entry["avg"] > dev["max_deployable"]:
-            continue
-        if eps is not None and A_REF[family] - v["acc"] > eps + 1e-12:
-            continue
-        energy = energy_proxy(spec, entry["avg"], governor)
-        mult = 2.0 ** max(rep_loads.get(kind, 0.0), 0.0)
         for r in RATES:
-            lat = entry[stat] * mult / 1.0
-            avg = entry["avg"] * mult / 1.0
-            fps = min(CAMERA_FPS * r, 1000.0 / avg)
-            out.append(dict(
-                variant=variant, engine=kind, threads=threads,
-                governor=governor, r=r, latency=lat, avg=avg, fps=fps,
-                mem=v["mem"], acc=v["acc"], energy=energy,
-            ))
+            c = eval_key(dev_name, lut, family, objective, rep_loads,
+                         key, r)
+            if c is not None:
+                out.append(c)
     return out
 
 
@@ -340,6 +369,96 @@ def build_frontier(dev_name, lut, family, objective, steps):
     survivors = [q for q in cands
                  if not any(dominates(p, q) for p in cands)]
     return rank(survivors, objective), len(cands), cands
+
+
+# --------------------------------------------------------------------------
+# Incremental frontier maintenance (ParetoFrontier::apply_delta) and the
+# frontier cache's byte accounting.
+# --------------------------------------------------------------------------
+
+FRONTIER_BASE_BYTES = 256
+FRONTIER_POINT_BYTES = 192
+APP_CACHE_BUDGET_BYTES = 256 * 1024
+
+
+def prune_slice_local(cands):
+    return [q for q in cands if not any(dominates(p, q) for p in cands)]
+
+
+def lut_scaled_engine(lut, engine, factor):
+    """Mirror of Lut::scaled_engine on the observed (avg, p90) stats."""
+    out = {}
+    for k, e in lut.items():
+        if k[1] == engine:
+            out[k] = {"avg": e["avg"] * factor, "p90": e["p90"] * factor}
+        else:
+            out[k] = e
+    return out
+
+
+def apply_delta_to_frontier(dev_name, old_lut, new_lut, family, obj,
+                            steps, points, changed, removed, scales):
+    """Mirror of ParetoFrontier::apply_delta — returns (points', touched).
+
+    ``changed``/``removed`` are LUT keys, ``scales`` is {engine: factor};
+    together they must cover every old→new difference (LutDelta).
+    """
+    rep = bucket_representative(steps)
+    touched = 0
+    # Entry-level changes perturb only their own (engine, threads) slices.
+    slices = set()
+    for (variant, kind, threads, gov) in list(changed) + list(removed):
+        if VARIANTS[variant]["family"] == family:
+            slices.add((kind, threads))
+    kept = [p for p in points
+            if (p["engine"], p["threads"]) not in slices]
+    incoming = []
+    if slices:
+        cands = enumerate_space(
+            dev_name, new_lut, family, obj, rep,
+            pred=lambda k: (k[1], k[2]) in slices)
+        touched += len(cands)
+        incoming.extend(prune_slice_local(cands))
+    # Per-engine scale: surviving points re-scored in place (within-slice
+    # dominance membership is invariant under a uniform latency scale).
+    for engine in sorted(scales.keys(), key=ENGINE_ORDER.index):
+        factor = scales[engine]
+        nxt = []
+        for c in kept:
+            if c["engine"] != engine:
+                nxt.append(c)
+                continue
+            touched += 1
+            key = (c["variant"], c["engine"], c["threads"], c["governor"])
+            re = eval_key(dev_name, new_lut, family, obj, rep, key, c["r"])
+            if re is not None:
+                nxt.append(re)
+        kept = nxt
+        if factor < 1.0:
+            # A speedup may pull previously-undeployable keys under the
+            # sustained-latency bound (detected on the OLD LUT, exactly).
+            news = [
+                k for k in lut_key_sorted(new_lut)
+                if k[1] == engine and (k[1], k[2]) not in slices
+                and (k not in old_lut
+                     or old_lut[k]["avg"]
+                     > DEVICES[dev_name]["max_deployable"])
+                and key_admitted(dev_name, new_lut, family, obj, k)
+            ]
+            if news:
+                cands = enumerate_space(dev_name, new_lut, family, obj,
+                                        rep, pred=lambda k: k in news)
+                touched += len(cands)
+                fresh = prune_slice_local(cands)
+                fresh = [q for q in fresh
+                         if not any(dominates(p, q)
+                                    for p in kept + incoming)]
+                kept = [q for q in kept
+                        if not any(dominates(p, q) for p in fresh)]
+                incoming = [q for q in incoming
+                            if not any(dominates(p, q) for p in fresh)]
+                incoming.extend(fresh)
+    return rank(kept + incoming, obj), touched
 
 
 # --------------------------------------------------------------------------
@@ -435,6 +554,7 @@ def run_optbench_smoke():
     rows = []
     for app, family, obj in MIX:
         cache = {}
+        cache_steps = {}
         builds = hits = build_evals = 0
         full_total = frontier_total = 0
         space_size = frontier_size_idle = 0
@@ -442,6 +562,7 @@ def run_optbench_smoke():
         for name, conds in EVENTS:
             steps = bucket_of(conds)
             bid = bucket_id(steps)
+            cache_steps[bid] = steps
             rep = bucket_representative(steps)
             full = rank(enumerate_space(dev_name, lut, family, obj, rep),
                         obj)
@@ -479,6 +600,62 @@ def run_optbench_smoke():
                 ("pick", f'"{design_id(pick)}"'),
                 ("latency_ms", jnum(r3(pick["latency"]))),
             ]))
+        # -- online LUT corrections through the incremental delta path,
+        #    mirroring optbench::run_app's correction phase exactly -------
+        fp32 = f"{family}__fp32__b1"
+        int8 = f"{family}__int8__b1"
+        lut1 = lut_scaled_engine(lut, "gpu", 1.25)
+        lut2 = dict(lut1)
+        changed2 = [k for k in lut1 if k[0] == fp32 and k[1] == "cpu"]
+        for k in changed2:
+            e = lut2[k]
+            lut2[k] = {"avg": e["avg"] * 1.05, "p90": e["p90"] * 1.05}
+        removed3 = [k for k in lut2 if k[0] == int8 and k[1] == "gpu"]
+        lut3 = {k: v for k, v in lut2.items() if k not in removed3}
+        sequence = [
+            ("gpu_scale_1.25", lut, lut1, [], [], {"gpu": 1.25}),
+            ("remeasure_fp32_cpu", lut1, lut2, changed2, [], {}),
+            ("retire_int8_gpu", lut2, lut3, [], removed3, {}),
+        ]
+        corr_objs = []
+        touched_total = rebuild_total = 0
+        for cname, old_l, new_l, chg, rem, scales in sequence:
+            sz_new = len(enumerate_space(dev_name, new_l, family, obj, {}))
+            touched = 0
+            for bid in cache:
+                cache[bid], t = apply_delta_to_frontier(
+                    dev_name, old_l, new_l, family, obj,
+                    cache_steps[bid], cache[bid], chg, rem, scales)
+                touched += t
+            updated = len(cache)
+            rebuild = updated * sz_new
+            assert touched < rebuild, (app, cname, touched, rebuild)
+            touched_total += touched
+            rebuild_total += rebuild
+            corr_objs.append(jobj([
+                ("name", f'"{cname}"'),
+                ("updated", jnum(updated)),
+                ("points_touched", jnum(touched)),
+                ("rebuild_points", jnum(rebuild)),
+            ]))
+        # Post-correction differential check (mirrors the binary's): the
+        # carried frontiers select exactly like a full search over the
+        # corrected LUT, with zero extra builds.
+        for name, conds in EVENTS:
+            steps = bucket_of(conds)
+            bid = bucket_id(steps)
+            rep = bucket_representative(steps)
+            full = rank(enumerate_space(dev_name, lut3, family, obj, rep),
+                        obj)
+            assert design_id(cache[bid][0]) == design_id(full[0]), \
+                f"{app}@{name}: post-correction pick drift"
+        resident = sum(FRONTIER_BASE_BYTES
+                       + FRONTIER_POINT_BYTES * len(pts)
+                       for pts in cache.values())
+        assert resident <= APP_CACHE_BUDGET_BYTES, (app, resident)
+        n_events = float(len(EVENTS))
+        dps = lambda evals: jnum(r3(  # noqa: E731
+            n_events * 1e9 / (float(SIM_NS_PER_EVAL) * float(evals))))
         cost = lambda n: jnum(r3(n * float(SIM_NS_PER_EVAL) / 1000.0))  # noqa: E731
         rows.append(jobj([
             ("device", f'"{dev_name}"'),
@@ -499,6 +676,19 @@ def run_optbench_smoke():
              cost(float(frontier_total + build_evals))),
             ("walk_speedup",
              jnum(r3(float(full_total) / float(frontier_total)))),
+            ("corrections", "[" + ",".join(corr_objs) + "]"),
+            ("delta_points_touched", jnum(touched_total)),
+            ("delta_rebuild_points", jnum(rebuild_total)),
+            ("delta_lt_rebuild",
+             "true" if touched_total < rebuild_total else "false"),
+            ("post_correction_builds", jnum(0)),
+            ("cache_resident_bytes", jnum(resident)),
+            ("cache_mem_budget", jnum(APP_CACHE_BUDGET_BYTES)),
+            ("cache_evictions", jnum(0)),
+            ("cache_under_budget",
+             "true" if resident <= APP_CACHE_BUDGET_BYTES else "false"),
+            ("decisions_per_sec_full", dps(float(full_total))),
+            ("decisions_per_sec_frontier", dps(float(frontier_total))),
         ]))
     inner = jobj([
         ("lut_runs", jnum(8)),

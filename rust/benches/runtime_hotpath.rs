@@ -11,11 +11,18 @@
 
 use std::sync::Arc;
 
+use oodin::designspace::{ConditionsBucket, DesignSpace, LutDelta,
+                         ParetoFrontier};
 use oodin::device::profiles::samsung_a71;
+use oodin::device::EngineKind;
+use oodin::manager::Conditions;
+use oodin::measurements::Measurer;
 use oodin::model::Precision;
+use oodin::optimizer::{Objective, SearchSpace};
 use oodin::runtime::{default_backend, Backend};
 use oodin::serving::{Server, ServerConfig};
 use oodin::util::bench::{bench, black_box};
+use oodin::util::stats::Percentile;
 
 fn main() {
     let registry = oodin::load_registry_or_synthetic().unwrap();
@@ -112,5 +119,52 @@ fn main() {
         );
         srv.stop();
     }
+
+    // Decision hot path: full frontier rebuild vs the incremental delta
+    // path across a per-engine LUT correction (the fleet probe-fallback
+    // shape).  `opt-bench` / `fleet-bench` golden-pin the same comparison
+    // under the simulated cost model; this is the wall-clock view.
+    println!("\n== frontier maintenance: full rebuild vs incremental delta ==");
+    let device = samsung_a71();
+    let lut = Measurer::new(&device, &registry).measure_all().unwrap();
+    let objective =
+        Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 };
+    let sspace = SearchSpace::family("mobilenet_v2_100");
+    let bucket = ConditionsBucket::of(&Conditions::idle());
+    let old_space = DesignSpace::new(&device, &registry, &lut);
+    let frontier =
+        ParetoFrontier::build(&old_space, objective, &sspace, &bucket);
+    let new_lut = lut.scaled_engine(EngineKind::Gpu, 1.25);
+    let new_space = DesignSpace::new(&device, &registry, &new_lut);
+    let delta = LutDelta::engine_scale(EngineKind::Gpu, 1.25);
+    let (carried, touched) = frontier.apply_delta(&old_space, &new_space,
+                                                  objective, &sspace, &delta);
+    let rebuilt = ParetoFrontier::build(&new_space, objective, &sspace,
+                                        &bucket);
+    assert_eq!(carried.best().map(|c| &c.design),
+               rebuilt.best().map(|c| &c.design),
+               "delta path must stay exact");
+    let full = bench("frontier/full_rebuild", 20, 400, || {
+        black_box(ParetoFrontier::build(&new_space, objective, &sspace,
+                                        &bucket));
+    });
+    let inc = bench("frontier/apply_delta", 20, 400, || {
+        black_box(frontier.apply_delta(&old_space, &new_space, objective,
+                                       &sspace, &delta));
+    });
+    let walk = bench("frontier/walk_decision", 20, 400, || {
+        black_box(carried.best());
+    });
+    println!(
+        "frontier/delta: {touched} points touched vs {} rebuild candidates \
+         ({} frontier points); delta {:.0}/s vs rebuild {:.0}/s \
+         ({:.1}x cheaper); decisions {:.0}/s on the warm frontier",
+        rebuilt.space_size,
+        carried.len(),
+        1e3 / inc.stats.avg.max(1e-9),
+        1e3 / full.stats.avg.max(1e-9),
+        full.stats.avg / inc.stats.avg.max(1e-9),
+        1e3 / walk.stats.avg.max(1e-9),
+    );
     rt.shutdown();
 }

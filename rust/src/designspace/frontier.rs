@@ -54,24 +54,62 @@
 //! evaluate at the bucket's representative conditions, so the cached
 //! selection equals a full search at those representative conditions.
 //!
-//! **Invalidation.**  The cache fingerprints the LUT and the registry;
-//! when either changes (re-measurement, model-zoo update) every cached
-//! frontier is dropped and rebuilt on demand.
+//! **Invalidation.**  Each cache entry carries a [`scoped_fingerprint`] of
+//! the slice of (LUT, registry) its search space can observe — the entries
+//! its (family, engine, precision) restriction admits plus the registry
+//! variants of its family.  A lookup whose scope fingerprint drifted drops
+//! and rebuilds *that entry only*: re-measuring one app's family no longer
+//! cold-starts every other app's warm frontiers.
 //!
-//! **Capacity.**  The cache is LRU-bounded
-//! ([`FRONTIER_CACHE_DEFAULT_CAP`], overridable via
-//! [`FrontierCache::with_cap`]): once one cache is shared across a whole
-//! cohort of fleet devices ([`crate::fleet`]), the set of (task, bucket)
-//! pairs its members visit can grow with the population, so resident
-//! frontiers are capped and the least-recently-used one is evicted
-//! (counted in [`CacheStats::evictions`]).
+//! **Incremental maintenance.**  When the caller can *describe* a LUT
+//! change as a [`LutDelta`] (entry edits/additions, entry removals, or a
+//! uniform per-engine latency scale like the fleet probe fallback's
+//! correction), [`FrontierCache::apply_delta`] updates resident frontiers
+//! in place instead of dropping them.  The delta path is exact, not
+//! approximate, resting on two invariants:
+//!
+//! * Dominance is slice-local (equal engine, rate, threads) and
+//!   transitive, so a changed/removed key perturbs only its own
+//!   (engine, threads) slices — those slices are re-enumerated from the
+//!   new LUT and re-pruned while every other slice is kept verbatim, and
+//!   any candidate dominated by a non-frontier point is also dominated by
+//!   some frontier point (dominator chains end on the frontier).
+//! * A uniform per-engine latency scale multiplies every latency statistic
+//!   *and* the energy proxy of a slice's candidates by the same factor
+//!   while leaving accuracy and memory untouched, so within-slice
+//!   dominance membership is invariant — resident points on the scaled
+//!   engine are re-scored in place.  The deployability bound is the one
+//!   filter a scale can cross: a slowdown can only drop a dominator
+//!   together with everything it dominated (no resurrection), while a
+//!   speedup may newly admit previously-undeployable keys, which are
+//!   enumerated and inserted with frontier-local dominance checks.
+//!
+//! The delta path *falls back to a full rebuild* (the entry is dropped and
+//! rebuilt on demand, counted in [`CacheStats::invalidations`]) whenever a
+//! resident entry's fingerprint matches neither side of the declared
+//! (old LUT → new LUT) transition — e.g. the entry predates an undescribed
+//! change — so correctness never depends on delta bookkeeping being
+//! complete.  The full rebuild ([`ParetoFrontier::build`]) remains the
+//! reference implementation; `tests/frontier_incremental_props.rs`
+//! asserts set-identity between both paths on randomized change-sets.
+//!
+//! **Capacity.**  The cache is LRU-bounded two ways: by resident frontier
+//! *count* ([`FRONTIER_CACHE_DEFAULT_CAP`], overridable via
+//! [`FrontierCache::with_cap`]) and — data-driven — by resident *bytes*
+//! ([`FrontierCache::with_mem_budget`], accounted as
+//! [`FRONTIER_BASE_BYTES`] + points × [`FRONTIER_POINT_BYTES`] per
+//! frontier).  Once one cache is shared across a whole cohort of fleet
+//! devices ([`crate::fleet`]), the set of (task, bucket) pairs its members
+//! visit can grow with the population, so the least-recently-used frontier
+//! is evicted (counted in [`CacheStats::evictions`]) whenever either bound
+//! is exceeded.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 use crate::device::EngineKind;
 use crate::manager::Conditions;
-use crate::measurements::Lut;
+use crate::measurements::{Lut, LutEntry, LutKey};
 use crate::model::Registry;
 use crate::optimizer::{Objective, SearchSpace};
 use crate::perf;
@@ -163,6 +201,88 @@ pub fn dominates(p: &Candidate, q: &Candidate) -> bool {
     no_worse && strictly_better
 }
 
+/// A structured description of one LUT transition — the delta path's
+/// input.  Three change families cover every online-correction source the
+/// system produces: entry edits/additions (`changed`), entry removals
+/// (`removed`), and uniform per-engine latency scale corrections
+/// (`engine_scales`, the shape of the fleet probe fallback's
+/// geometric-mean factor).  A delta passed to
+/// [`FrontierCache::apply_delta`] must cover *every* difference between
+/// the old and new LUT ([`LutDelta::between`] computes exactly that);
+/// entries outside the declared delta are assumed byte-identical.
+#[derive(Debug, Clone, Default)]
+pub struct LutDelta {
+    /// Keys whose entries changed in, or were added to, the new LUT.
+    pub changed: BTreeSet<LutKey>,
+    /// Keys absent from the new LUT.
+    pub removed: BTreeSet<LutKey>,
+    /// Uniform per-engine latency scale factors: every latency statistic
+    /// of every entry on the engine is multiplied by the factor (accuracy
+    /// and memory untouched), as produced by
+    /// [`crate::measurements::Lut::scaled_engine`].
+    pub engine_scales: BTreeMap<EngineKind, f64>,
+}
+
+/// True when two LUT entries are byte-identical on every field a frontier
+/// can observe.
+fn same_entry(a: &LutEntry, b: &LutEntry) -> bool {
+    let l = &a.latency;
+    let r = &b.latency;
+    [l.min, l.max, l.avg, l.median, l.p90, l.p99]
+        .iter()
+        .zip([r.min, r.max, r.avg, r.median, r.p90, r.p99].iter())
+        .all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.mem_bytes == b.mem_bytes
+        && a.accuracy.to_bits() == b.accuracy.to_bits()
+}
+
+impl LutDelta {
+    /// A delta describing edited or added entries.
+    pub fn entries(keys: impl IntoIterator<Item = LutKey>) -> Self {
+        LutDelta { changed: keys.into_iter().collect(), ..Default::default() }
+    }
+
+    /// A delta describing removed entries.
+    pub fn removal(keys: impl IntoIterator<Item = LutKey>) -> Self {
+        LutDelta { removed: keys.into_iter().collect(), ..Default::default() }
+    }
+
+    /// A delta describing a uniform latency scale on one engine.
+    pub fn engine_scale(engine: EngineKind, factor: f64) -> Self {
+        let mut engine_scales = BTreeMap::new();
+        engine_scales.insert(engine, factor);
+        LutDelta { engine_scales, ..Default::default() }
+    }
+
+    /// The exact diff between two LUTs as an entry-level delta (no scale
+    /// inference): keys edited or added end up in `changed`, keys dropped
+    /// in `removed`.
+    pub fn between(old: &Lut, new: &Lut) -> Self {
+        let mut delta = LutDelta::default();
+        for (k, e) in &new.entries {
+            match old.entries.get(k) {
+                Some(o) if same_entry(o, e) => {}
+                _ => {
+                    delta.changed.insert(k.clone());
+                }
+            }
+        }
+        for k in old.entries.keys() {
+            if !new.entries.contains_key(k) {
+                delta.removed.insert(k.clone());
+            }
+        }
+        delta
+    }
+
+    /// True when the delta describes no change at all.
+    pub fn is_empty(&self) -> bool {
+        self.changed.is_empty()
+            && self.removed.is_empty()
+            && self.engine_scales.is_empty()
+    }
+}
+
 /// A dominance-pruned design front for one (objective, search space) at
 /// one conditions bucket, stored in canonical selection order.
 #[derive(Debug, Clone)]
@@ -219,6 +339,140 @@ impl ParetoFrontier {
     pub fn best(&self) -> Option<&Candidate> {
         self.points.first()
     }
+
+    /// Incrementally carry this frontier (built over `old`'s LUT) across
+    /// the LUT transition described by `delta`, returning the updated
+    /// frontier plus the number of points/candidates the delta path
+    /// touched (the cost a caller compares against the `space_size` a full
+    /// rebuild would enumerate).  Exact — set-identical to
+    /// `ParetoFrontier::build` over `new` — provided `delta` covers every
+    /// difference between `old.lut` and `new.lut` (see [`LutDelta`] and
+    /// the module docs for the invariants this rests on).
+    pub fn apply_delta(&self, old: &DesignSpace, new: &DesignSpace,
+                       objective: Objective, sspace: &SearchSpace,
+                       delta: &LutDelta) -> (ParetoFrontier, u64) {
+        let conds = self.bucket.representative();
+        let mut touched: u64 = 0;
+
+        // Entry-level changes perturb only their own (engine, threads)
+        // slices: those slices are rebuilt from the new LUT wholesale.
+        let mut slices: BTreeSet<(EngineKind, usize)> = BTreeSet::new();
+        for k in delta.changed.iter().chain(delta.removed.iter()) {
+            if sspace.admits(new.registry, k) {
+                slices.insert((k.engine, k.threads));
+            }
+        }
+
+        // Points outside the rebuilt slices survive verbatim (their LUT
+        // entries are byte-identical across the transition).
+        let mut kept: Vec<Candidate> = self
+            .points
+            .iter()
+            .filter(|c| {
+                !slices.contains(&(c.design.hw.engine, c.design.hw.threads))
+            })
+            .cloned()
+            .collect();
+
+        // Slice rebuild: re-enumerate only keys inside affected slices and
+        // prune within them — dominance never crosses a slice boundary, so
+        // slice-local pruning is exact.
+        let mut incoming: Vec<Candidate> = Vec::new();
+        if !slices.is_empty() {
+            let cands = new.enumerate_where(objective, sspace, &conds, |k| {
+                slices.contains(&(k.engine, k.threads))
+            });
+            touched += cands.len() as u64;
+            incoming.extend(
+                cands
+                    .iter()
+                    .filter(|q| !cands.iter().any(|p| dominates(p, q)))
+                    .cloned(),
+            );
+        }
+
+        // Per-engine scale: within-slice dominance membership is invariant
+        // under a uniform latency scale, so surviving points on the engine
+        // are re-scored in place from the new LUT.
+        for (&engine, &factor) in &delta.engine_scales {
+            if let Some(engines) = &sspace.engines {
+                if !engines.contains(&engine) {
+                    continue;
+                }
+            }
+            let mut next = Vec::with_capacity(kept.len());
+            for c in kept {
+                if c.design.hw.engine != engine {
+                    next.push(c);
+                    continue;
+                }
+                touched += 1;
+                if let Some(rescored) = new.eval_candidate(
+                    objective, sspace, &conds, &c.design.lut_key(),
+                    c.design.hw.recognition_rate)
+                {
+                    next.push(rescored);
+                }
+                // else: scaled past the deployability bound — safe to drop
+                // without re-checking the slice, because a uniform scale
+                // can only push a dominator out together with everything
+                // it dominated.
+            }
+            kept = next;
+            if factor < 1.0 {
+                // A speedup may pull previously-undeployable keys under
+                // the sustained-latency bound: enumerate and insert them
+                // with frontier-local dominance checks (exact, because any
+                // dominator chain over them ends on the frontier).
+                let news: Vec<&LutKey> = new
+                    .lut
+                    .entries
+                    .keys()
+                    .filter(|k| {
+                        k.engine == engine
+                            && !slices.contains(&(k.engine, k.threads))
+                            && old.lut.get(k).map_or(true, |e| {
+                                e.latency.avg
+                                    > old.device.max_deployable_latency_ms
+                            })
+                            && new.entry_admitted(objective, sspace, k)
+                    })
+                    .collect();
+                if !news.is_empty() {
+                    let cands =
+                        new.enumerate_where(objective, sspace, &conds, |k| {
+                            news.contains(&k)
+                        });
+                    touched += cands.len() as u64;
+                    let mut fresh: Vec<Candidate> = cands
+                        .iter()
+                        .filter(|q| !cands.iter().any(|p| dominates(p, q)))
+                        .cloned()
+                        .collect();
+                    fresh.retain(|q| {
+                        !kept
+                            .iter()
+                            .chain(incoming.iter())
+                            .any(|p| dominates(p, q))
+                    });
+                    kept.retain(|q| !fresh.iter().any(|p| dominates(p, q)));
+                    incoming
+                        .retain(|q| !fresh.iter().any(|p| dominates(p, q)));
+                    incoming.extend(fresh);
+                }
+            }
+        }
+
+        kept.extend(incoming);
+        (
+            ParetoFrontier {
+                bucket: self.bucket.clone(),
+                points: rank(kept, objective),
+                space_size: new.count_admitted(objective, sspace),
+            },
+            touched,
+        )
+    }
 }
 
 /// Cache effectiveness counters, reported by `oodin opt-bench` and
@@ -229,12 +483,50 @@ pub struct CacheStats {
     pub builds: u64,
     /// Cache hits (adaptation events served without a build).
     pub hits: u64,
-    /// Whole-cache invalidations from a LUT / registry change.
+    /// Cached frontiers dropped because their scope fingerprint drifted
+    /// (an undescribed LUT / registry change, or the delta fallback).
     pub invalidations: u64,
     /// Candidates enumerated across all builds (the amortised build cost).
     pub candidates_enumerated: u64,
-    /// Frontiers dropped by the LRU capacity bound.
+    /// Frontiers dropped by the LRU capacity or memory-budget bound.
     pub evictions: u64,
+    /// Frontiers carried across a LUT transition in place by the delta
+    /// path ([`FrontierCache::apply_delta`]).
+    pub delta_updates: u64,
+    /// Points/candidates the delta path re-evaluated — compare against
+    /// `candidates_enumerated` growth to see the avoided rebuild cost.
+    pub delta_points_touched: u64,
+}
+
+/// Aggregate outcome of one [`FrontierCache::apply_delta`] call (or of
+/// several absorbed together, e.g. across a fleet's cohorts).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeltaOutcome {
+    /// Resident frontiers delta-updated in place.
+    pub updated: u64,
+    /// Resident frontiers left untouched: their scope cannot observe the
+    /// delta, or they already sit at the new fingerprint (idempotent
+    /// re-apply on a shared cache).
+    pub untouched: u64,
+    /// Resident frontiers dropped to rebuild-on-demand — the fallback when
+    /// a fingerprint matches neither side of the declared transition.
+    pub dropped: u64,
+    /// Points/candidates the delta path re-evaluated.
+    pub points_touched: u64,
+    /// Candidates a from-scratch rebuild of the *updated* frontiers would
+    /// have enumerated — the cost the delta path avoided.
+    pub rebuild_points: u64,
+}
+
+impl DeltaOutcome {
+    /// Fold another outcome into this one (fleet-level aggregation).
+    pub fn absorb(&mut self, other: DeltaOutcome) {
+        self.updated += other.updated;
+        self.untouched += other.untouched;
+        self.dropped += other.dropped;
+        self.points_touched += other.points_touched;
+        self.rebuild_points += other.rebuild_points;
+    }
 }
 
 /// Default LRU capacity of a [`FrontierCache`]: generous enough that the
@@ -243,17 +535,44 @@ pub struct CacheStats {
 /// cohort of fleet devices.
 pub const FRONTIER_CACHE_DEFAULT_CAP: usize = 1024;
 
+/// Nominal accounted bytes per resident frontier point.  A fixed
+/// accounting constant rather than `size_of::<Candidate>()` so that
+/// budget arithmetic is identical across platforms and reproducible by
+/// the Python golden oracles; 192 B covers the metric vector, the design
+/// (short strings included) and `Vec` slack on 64-bit targets.
+pub const FRONTIER_POINT_BYTES: u64 = 192;
+
+/// Nominal accounted fixed overhead per resident frontier (cache key
+/// strings, bucket, fingerprint, ticks).
+pub const FRONTIER_BASE_BYTES: u64 = 256;
+
+/// One resident frontier plus everything needed to validate and
+/// delta-update it without the original caller.
+#[derive(Debug)]
+struct CacheEntry {
+    frontier: Arc<ParetoFrontier>,
+    /// Last-use tick; drives LRU eviction.
+    used: u64,
+    /// [`scoped_fingerprint`] of the (LUT, registry) slice this entry's
+    /// search space observes, as of the build or last delta update.
+    scope_fp: u64,
+    objective: Objective,
+    sspace: SearchSpace,
+    camera_fps: f64,
+}
+
 /// The frontier cache: one [`ParetoFrontier`] per (task, bucket), keyed by
-/// a canonical task tag, fingerprint-invalidated when the LUT or registry
-/// changes, and LRU-bounded to `cap` resident frontiers.
+/// a canonical task tag, scope-fingerprint-invalidated per entry when the
+/// LUT or registry drifts, delta-updatable in place via
+/// [`FrontierCache::apply_delta`], and LRU-bounded both by entry count
+/// (`cap`) and by accounted resident bytes (`mem_budget`).
 #[derive(Debug)]
 pub struct FrontierCache {
-    fingerprint: u64,
-    /// (task, bucket) -> (frontier, last-use tick) — the tick drives LRU
-    /// eviction once `cap` is reached.
-    map: BTreeMap<(String, String), (Arc<ParetoFrontier>, u64)>,
+    /// (task, bucket) -> resident entry.
+    map: BTreeMap<(String, String), CacheEntry>,
     tick: u64,
     cap: usize,
+    mem_budget: u64,
     /// Effectiveness counters since construction.
     pub stats: CacheStats,
 }
@@ -261,10 +580,10 @@ pub struct FrontierCache {
 impl Default for FrontierCache {
     fn default() -> Self {
         FrontierCache {
-            fingerprint: 0,
             map: BTreeMap::new(),
             tick: 0,
             cap: FRONTIER_CACHE_DEFAULT_CAP,
+            mem_budget: 0,
             stats: CacheStats::default(),
         }
     }
@@ -283,12 +602,16 @@ pub fn task_tag(objective: Objective, space: &SearchSpace, camera_fps: f64)
     )
 }
 
-/// FNV-1a fingerprint of the (LUT, registry) pair driving every frontier;
-/// any drift in either invalidates the whole cache.  Allocation-free and
-/// a plain linear read (~ns per entry), so recomputing it per lookup
-/// stays far below the enumeration + scoring + sorting cost the cache
-/// exists to avoid.
-pub fn fingerprint(lut: &Lut, registry: &Registry) -> u64 {
+/// FNV-1a fingerprint of the slice of the (LUT, registry) pair that
+/// `space`'s restriction can observe: the device name, every LUT entry the
+/// (family, engine, precision) restriction admits, and the registry
+/// variants of the restricted family.  Invalidation is therefore scoped —
+/// a change to one app's family leaves other apps' cached frontiers warm.
+/// Allocation-free and a plain linear read (~ns per entry), so recomputing
+/// it per lookup stays far below the enumeration + scoring + sorting cost
+/// the cache exists to avoid.
+pub fn scoped_fingerprint(lut: &Lut, registry: &Registry,
+                          space: &SearchSpace) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     let mut eat = |bytes: &[u8]| {
         for &b in bytes {
@@ -298,6 +621,9 @@ pub fn fingerprint(lut: &Lut, registry: &Registry) -> u64 {
     };
     eat(lut.device.as_bytes());
     for (k, e) in &lut.entries {
+        if !space.admits(registry, k) {
+            continue;
+        }
         eat(k.variant.as_bytes());
         eat(&[k.engine as u8, k.governor as u8]);
         eat(&(k.threads as u64).to_le_bytes());
@@ -308,6 +634,11 @@ pub fn fingerprint(lut: &Lut, registry: &Registry) -> u64 {
         eat(&e.mem_bytes.to_le_bytes());
     }
     for v in registry.variants() {
+        if let Some(fam) = &space.family {
+            if &v.family != fam {
+                continue;
+            }
+        }
         eat(v.name.as_bytes());
         eat(&v.accuracy.to_bits().to_le_bytes());
         eat(&v.size_bytes.to_le_bytes());
@@ -335,32 +666,78 @@ impl FrontierCache {
         self.cap
     }
 
+    /// Bound accounted resident bytes ([`Self::resident_bytes`]) instead
+    /// of — well, alongside — the entry-count cap: whenever the gauge
+    /// exceeds `bytes`, least-recently-used frontiers are evicted until it
+    /// fits (the most-recently-used frontier always stays resident, so the
+    /// active decision path cannot thrash).  0 disables the bound.
+    pub fn with_mem_budget(mut self, bytes: u64) -> Self {
+        self.mem_budget = bytes;
+        self
+    }
+
+    /// The active memory budget in accounted bytes (0 = unbounded).
+    pub fn mem_budget(&self) -> u64 {
+        self.mem_budget
+    }
+
+    /// Accounted bytes of all resident frontiers:
+    /// [`FRONTIER_BASE_BYTES`] + points × [`FRONTIER_POINT_BYTES`] each.
+    pub fn resident_bytes(&self) -> u64 {
+        self.map
+            .values()
+            .map(|e| {
+                FRONTIER_BASE_BYTES
+                    + FRONTIER_POINT_BYTES * e.frontier.len() as u64
+            })
+            .sum()
+    }
+
+    /// Evict least-recently-used frontiers (linear scan: the map is small
+    /// and eviction is the rare path) until the memory budget holds.
+    fn enforce_mem_budget(&mut self) {
+        if self.mem_budget == 0 {
+            return;
+        }
+        while self.map.len() > 1 && self.resident_bytes() > self.mem_budget {
+            if let Some(lru) = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.used)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&lru);
+                self.stats.evictions += 1;
+            }
+        }
+    }
+
     /// The cached frontier for (objective, space restriction, camera rate,
-    /// bucket), building it on first use and whenever the LUT or registry
-    /// changed since the last call.  Every lookup re-runs the
-    /// [`fingerprint`] guard — an O(LUT + registry) branch-free linear
-    /// read (no allocation), orders of magnitude cheaper than the
+    /// bucket), building it on first use and whenever the entry's scope
+    /// fingerprint drifted since it was built ([`scoped_fingerprint`] — a
+    /// linear allocation-free read, orders of magnitude cheaper than the
     /// enumeration + scoring + sort a miss would pay, but not free; the
     /// `opt-bench` cost model counts scored candidates only and excludes
-    /// this guard.
+    /// this guard).  Only the stale entry itself is dropped: frontiers
+    /// whose scope did not drift stay warm.
     pub fn frontier(&mut self, space: &DesignSpace, objective: Objective,
                     sspace: &SearchSpace, bucket: &ConditionsBucket)
                     -> Arc<ParetoFrontier> {
-        let fp = fingerprint(space.lut, space.registry);
-        if fp != self.fingerprint {
-            if self.fingerprint != 0 && !self.map.is_empty() {
-                self.stats.invalidations += 1;
-            }
-            self.map.clear();
-            self.fingerprint = fp;
-        }
+        let fp = scoped_fingerprint(space.lut, space.registry, sspace);
         let key = (task_tag(objective, sspace, space.camera_fps), bucket.id());
         self.tick += 1;
         let tick = self.tick;
-        if let Some((f, used)) = self.map.get_mut(&key) {
-            *used = tick;
-            self.stats.hits += 1;
-            return Arc::clone(f);
+        match self.map.get_mut(&key) {
+            Some(e) if e.scope_fp == fp => {
+                e.used = tick;
+                self.stats.hits += 1;
+                return Arc::clone(&e.frontier);
+            }
+            Some(_) => {
+                self.map.remove(&key);
+                self.stats.invalidations += 1;
+            }
+            None => {}
         }
         if self.cap > 0 && self.map.len() >= self.cap {
             // Evict the least-recently-used frontier (linear scan: the map
@@ -368,7 +745,7 @@ impl FrontierCache {
             if let Some(lru) = self
                 .map
                 .iter()
-                .min_by_key(|(_, (_, used))| *used)
+                .min_by_key(|(_, e)| e.used)
                 .map(|(k, _)| k.clone())
             {
                 self.map.remove(&lru);
@@ -378,8 +755,79 @@ impl FrontierCache {
         let f = Arc::new(ParetoFrontier::build(space, objective, sspace, bucket));
         self.stats.builds += 1;
         self.stats.candidates_enumerated += f.space_size as u64;
-        self.map.insert(key, (Arc::clone(&f), tick));
+        self.map.insert(
+            key,
+            CacheEntry {
+                frontier: Arc::clone(&f),
+                used: tick,
+                scope_fp: fp,
+                objective,
+                sspace: sspace.clone(),
+                camera_fps: space.camera_fps,
+            },
+        );
+        self.enforce_mem_budget();
         f
+    }
+
+    /// Carry every resident frontier across the (`old` → `new`) LUT
+    /// transition described by `delta`, in place, instead of dropping the
+    /// cache.  Per entry: if its scope fingerprint already matches the new
+    /// LUT it is untouched (the delta cannot be observed by its search
+    /// space, or was already applied — re-applying on a cohort-shared
+    /// cache is idempotent); if it matches the *old* LUT it is
+    /// delta-updated exactly ([`ParetoFrontier::apply_delta`]); otherwise
+    /// it predates an undescribed change and falls back to
+    /// rebuild-on-demand (dropped, counted as an invalidation).
+    pub fn apply_delta(&mut self, old: &DesignSpace, new: &DesignSpace,
+                       delta: &LutDelta) -> DeltaOutcome {
+        let mut out = DeltaOutcome::default();
+        let keys: Vec<(String, String)> = self.map.keys().cloned().collect();
+        for key in keys {
+            let (objective, sspace, camera_fps, scope_fp, frontier) = {
+                let e = self.map.get(&key).unwrap();
+                (e.objective, e.sspace.clone(), e.camera_fps, e.scope_fp,
+                 Arc::clone(&e.frontier))
+            };
+            let fp_new = scoped_fingerprint(new.lut, new.registry, &sspace);
+            if scope_fp == fp_new {
+                out.untouched += 1;
+                continue;
+            }
+            let fp_old = scoped_fingerprint(old.lut, old.registry, &sspace);
+            if scope_fp != fp_old {
+                // Fallback to full rebuild on next lookup.
+                self.map.remove(&key);
+                self.stats.invalidations += 1;
+                out.dropped += 1;
+                continue;
+            }
+            let old_ds = DesignSpace {
+                device: old.device,
+                registry: old.registry,
+                lut: old.lut,
+                camera_fps,
+            };
+            let new_ds = DesignSpace {
+                device: new.device,
+                registry: new.registry,
+                lut: new.lut,
+                camera_fps,
+            };
+            let (updated, touched) =
+                frontier.apply_delta(&old_ds, &new_ds, objective, &sspace,
+                                     delta);
+            out.updated += 1;
+            out.points_touched += touched;
+            out.rebuild_points += updated.space_size as u64;
+            self.stats.delta_updates += 1;
+            self.stats.delta_points_touched += touched;
+            let e = self.map.get_mut(&key).unwrap();
+            e.frontier = Arc::new(updated);
+            e.scope_fp = fp_new;
+        }
+        self.enforce_mem_budget();
+        out
     }
 
     /// Cached frontiers currently resident.
@@ -497,7 +945,7 @@ mod tests {
     }
 
     #[test]
-    fn cache_hits_and_fingerprint_invalidation() {
+    fn cache_hits_and_scoped_invalidation() {
         let dev = samsung_a71();
         let reg = fake_registry();
         let lut = Measurer::new(&dev, &reg).with_runs(10, 1).measure_all().unwrap();
@@ -511,14 +959,135 @@ mod tests {
         }
         assert_eq!(cache.stats.builds, 1);
         assert_eq!(cache.stats.hits, 1);
-        // Perturb one LUT entry: the whole cache must invalidate.
+        // Perturbing another family's entry is outside this space's scope:
+        // the warm frontier must survive (a hit, not an invalidation).
         let mut lut2 = lut.clone();
-        let k = lut2.entries.keys().next().unwrap().clone();
-        lut2.entries.get_mut(&k).unwrap().accuracy += 0.001;
+        let other = lut2
+            .entries
+            .keys()
+            .find(|k| k.variant.starts_with("deeplab_v3"))
+            .unwrap()
+            .clone();
+        lut2.entries.get_mut(&other).unwrap().accuracy += 0.001;
         let ds2 = DesignSpace::new(&dev, &reg, &lut2);
         cache.frontier(&ds2, obj(), &space, &b);
+        assert_eq!(cache.stats.invalidations, 0, "out-of-scope change");
+        assert_eq!((cache.stats.builds, cache.stats.hits), (1, 2));
+        // Perturbing an in-scope entry must drop exactly that entry.
+        let mut lut3 = lut2.clone();
+        let own = lut3
+            .entries
+            .keys()
+            .find(|k| k.variant.starts_with("mobilenet_v2_100"))
+            .unwrap()
+            .clone();
+        lut3.entries.get_mut(&own).unwrap().accuracy += 0.001;
+        let ds3 = DesignSpace::new(&dev, &reg, &lut3);
+        cache.frontier(&ds3, obj(), &space, &b);
         assert_eq!(cache.stats.invalidations, 1);
         assert_eq!(cache.stats.builds, 2);
-        assert_eq!(cache.len(), 1, "stale frontiers dropped");
+        assert_eq!(cache.len(), 1, "stale frontier dropped and rebuilt");
+    }
+
+    #[test]
+    fn delta_engine_scale_matches_rebuild_and_is_idempotent() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(10, 1).measure_all().unwrap();
+        let space = SearchSpace::family("mobilenet_v2_100");
+        let b = ConditionsBucket::of(&Conditions::idle());
+        let mut cache = FrontierCache::new();
+        let ds = DesignSpace::new(&dev, &reg, &lut);
+        cache.frontier(&ds, obj(), &space, &b);
+        let lut2 = std::sync::Arc::new(lut.scaled_engine(EngineKind::Cpu, 1.25));
+        let delta = LutDelta::engine_scale(EngineKind::Cpu, 1.25);
+        let ds2 = DesignSpace::new(&dev, &reg, &lut2);
+        let out = cache.apply_delta(&ds, &ds2, &delta);
+        assert_eq!((out.updated, out.dropped), (1, 0));
+        assert!(out.points_touched < out.rebuild_points,
+                "delta touched {} !< rebuild {}", out.points_touched,
+                out.rebuild_points);
+        // The updated frontier must serve a lookup against the new LUT as
+        // a hit and equal a from-scratch rebuild exactly.
+        let cached = cache.frontier(&ds2, obj(), &space, &b);
+        assert_eq!(cache.stats.builds, 1, "no rebuild after delta");
+        let rebuilt = ParetoFrontier::build(&ds2, obj(), &space, &b);
+        assert_eq!(cached.len(), rebuilt.len());
+        assert_eq!(cached.space_size, rebuilt.space_size);
+        for (a, c) in cached.points().iter().zip(rebuilt.points()) {
+            assert_eq!(a.design, c.design);
+            assert_eq!(a.latency_ms.to_bits(), c.latency_ms.to_bits());
+            assert_eq!(a.energy_mj.to_bits(), c.energy_mj.to_bits());
+        }
+        // Re-applying the same transition (second manager on a shared
+        // cohort cache) must be a no-op.
+        let again = cache.apply_delta(&ds, &ds2, &delta);
+        assert_eq!((again.updated, again.untouched), (0, 1));
+        assert_eq!(again.points_touched, 0);
+    }
+
+    #[test]
+    fn delta_entry_edit_and_removal_match_rebuild() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(10, 1).measure_all().unwrap();
+        let space = SearchSpace::family("mobilenet_v2_100");
+        let b = ConditionsBucket::of(&Conditions::idle());
+        let mut cache = FrontierCache::new();
+        let ds = DesignSpace::new(&dev, &reg, &lut);
+        cache.frontier(&ds, obj(), &space, &b);
+        // Edit one entry and remove another (both in scope).
+        let mut lut2 = lut.clone();
+        let keys: Vec<LutKey> = lut2
+            .entries
+            .keys()
+            .filter(|k| k.variant.starts_with("mobilenet_v2_100"))
+            .cloned()
+            .collect();
+        lut2.entries.get_mut(&keys[0]).unwrap().latency.avg *= 1.4;
+        lut2.entries.remove(&keys[1]);
+        let delta = LutDelta::between(&lut, &lut2);
+        assert_eq!(delta.changed.len(), 1);
+        assert_eq!(delta.removed.len(), 1);
+        let ds2 = DesignSpace::new(&dev, &reg, &lut2);
+        let out = cache.apply_delta(&ds, &ds2, &delta);
+        assert_eq!(out.updated, 1);
+        assert!(out.points_touched < out.rebuild_points);
+        let cached = cache.frontier(&ds2, obj(), &space, &b);
+        assert_eq!(cache.stats.builds, 1, "no rebuild after delta");
+        let rebuilt = ParetoFrontier::build(&ds2, obj(), &space, &b);
+        assert_eq!(cached.len(), rebuilt.len());
+        for (a, c) in cached.points().iter().zip(rebuilt.points()) {
+            assert_eq!(a.design, c.design);
+            assert_eq!(a.latency_ms.to_bits(), c.latency_ms.to_bits());
+        }
+    }
+
+    #[test]
+    fn mem_budget_bounds_resident_bytes() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg).with_runs(10, 1).measure_all().unwrap();
+        let space = SearchSpace::family("mobilenet_v2_100");
+        let ds = DesignSpace::new(&dev, &reg, &lut);
+        // First find one frontier's accounted footprint, then budget for
+        // barely more than one frontier: a second bucket must evict the
+        // first while the newest stays resident.
+        let mut probe = FrontierCache::new();
+        let b0 = ConditionsBucket::of(&Conditions::idle());
+        probe.frontier(&ds, obj(), &space, &b0);
+        let one = probe.resident_bytes();
+        assert!(one > FRONTIER_BASE_BYTES);
+        let mut cache = FrontierCache::new().with_mem_budget(one + 1);
+        assert_eq!(cache.mem_budget(), one + 1);
+        cache.frontier(&ds, obj(), &space, &b0);
+        let mut loaded = Conditions::idle();
+        loaded.loads.insert(EngineKind::Cpu, 1.0);
+        let b1 = ConditionsBucket::of(&loaded);
+        cache.frontier(&ds, obj(), &space, &b1);
+        assert_eq!(cache.len(), 1, "budget must evict down to one frontier");
+        assert_eq!(cache.stats.evictions, 1);
+        assert!(cache.resident_bytes() <= cache.mem_budget()
+                || cache.len() == 1);
     }
 }

@@ -27,14 +27,16 @@
 
 pub mod frontier;
 
-pub use frontier::{dominates, CacheStats, ConditionsBucket, FrontierCache,
-                   ParetoFrontier, FRONTIER_CACHE_DEFAULT_CAP};
+pub use frontier::{dominates, CacheStats, ConditionsBucket, DeltaOutcome,
+                   FrontierCache, LutDelta, ParetoFrontier,
+                   FRONTIER_CACHE_DEFAULT_CAP, FRONTIER_BASE_BYTES,
+                   FRONTIER_POINT_BYTES};
 
 use std::cmp::Ordering;
 
 use crate::device::DeviceProfile;
 use crate::manager::{adjusted_latency, Conditions};
-use crate::measurements::Lut;
+use crate::measurements::{Lut, LutKey};
 use crate::model::{Precision, Registry};
 use crate::optimizer::{Design, HwConfig, Objective, SearchSpace, RECOGNITION_RATES};
 use crate::perf;
@@ -136,12 +138,20 @@ impl<'a> DesignSpace<'a> {
     /// enumeration exactly.
     pub fn enumerate(&self, objective: Objective, space: &SearchSpace,
                      conds: &Conditions) -> Vec<Candidate> {
-        let stat = objective.stat();
-        let eps = match objective {
-            Objective::MaxFps { epsilon } => Some(epsilon),
-            Objective::MinLatency { epsilon, .. } => Some(epsilon),
-            _ => None,
-        };
+        self.enumerate_where(objective, space, conds, |_| true)
+    }
+
+    /// [`Self::enumerate`] restricted to LUT keys satisfying `pred` — the
+    /// incremental frontier maintenance path re-enumerates only the
+    /// (engine, threads) slices a LUT delta touched.  With `|_| true` this
+    /// is exactly `enumerate` (same key order, same filters, same
+    /// arithmetic), which is what keeps the delta path bit-identical to a
+    /// full rebuild.
+    pub fn enumerate_where<F>(&self, objective: Objective, space: &SearchSpace,
+                              conds: &Conditions, pred: F) -> Vec<Candidate>
+    where
+        F: Fn(&LutKey) -> bool,
+    {
         let fixed_rate = [space.recognition_rate.unwrap_or(0.0)];
         let rates: &[f64] = if space.recognition_rate.is_some() {
             &fixed_rate
@@ -149,67 +159,121 @@ impl<'a> DesignSpace<'a> {
             &RECOGNITION_RATES
         };
         let mut out = Vec::new();
-        for (key, entry) in &self.lut.entries {
-            if !space.admits(self.registry, key) {
+        for key in self.lut.entries.keys() {
+            if !pred(key) || !self.entry_admitted(objective, space, key) {
                 continue;
             }
-            // Engine availability: a LUT loaded from disk may carry
-            // entries for engines this device does not expose.
-            let Some(spec) = self.device.engine(key.engine) else {
-                continue;
-            };
-            let v = self.registry.get(&key.variant).unwrap();
-            // Deployability (paper Fig 4: overheating / >=5 s lag models
-            // are not deployable): memory budget + sustained-latency bound.
-            if !perf::fits_memory(self.device, v) {
-                continue;
-            }
-            if entry.latency.avg > self.device.max_deployable_latency_ms {
-                continue;
-            }
-            // ε-constraint on accuracy where the objective carries one.
-            let a_ref = self.reference_accuracy(&v.family).unwrap_or(v.accuracy);
-            if let Some(eps) = eps {
-                if a_ref - entry.accuracy > eps + 1e-12 {
-                    continue;
-                }
-            }
-            let energy_mj =
-                perf::energy_proxy_mj(spec, entry.latency.avg, key.governor);
             for &r in rates {
-                let design = Design {
-                    variant: key.variant.clone(),
-                    hw: HwConfig {
-                        engine: key.engine,
-                        threads: key.threads,
-                        governor: key.governor,
-                        recognition_rate: r,
-                    },
-                };
-                let Some(latency_ms) =
-                    adjusted_latency(self.lut, &design, stat, conds)
-                else {
-                    continue;
-                };
-                let Some(avg_latency_ms) =
-                    adjusted_latency(self.lut, &design, Percentile::Avg, conds)
-                else {
-                    continue;
-                };
-                let fps = (self.camera_fps * r).min(1000.0 / avg_latency_ms);
-                out.push(Candidate {
-                    design,
-                    latency_ms,
-                    avg_latency_ms,
-                    fps,
-                    mem_bytes: entry.mem_bytes,
-                    accuracy: entry.accuracy,
-                    energy_mj,
-                    score: 0.0,
-                });
+                if let Some(c) = self.eval_candidate(objective, space, conds,
+                                                     key, r) {
+                    out.push(c);
+                }
             }
         }
         out
+    }
+
+    /// The constraint pre-filter for one LUT key: the restriction `space`,
+    /// engine availability, the device memory budget, the sustained-
+    /// deployability latency bound (paper Fig 4) and the objective's
+    /// ε-accuracy constraint where it carries one.
+    fn entry_admitted(&self, objective: Objective, space: &SearchSpace,
+                      key: &LutKey) -> bool {
+        let Some(entry) = self.lut.get(key) else {
+            return false;
+        };
+        if !space.admits(self.registry, key) {
+            return false;
+        }
+        // Engine availability: a LUT loaded from disk may carry entries
+        // for engines this device does not expose.
+        if self.device.engine(key.engine).is_none() {
+            return false;
+        }
+        let v = self.registry.get(&key.variant).unwrap();
+        // Deployability (paper Fig 4: overheating / >=5 s lag models are
+        // not deployable): memory budget + sustained-latency bound.
+        if !perf::fits_memory(self.device, v) {
+            return false;
+        }
+        if entry.latency.avg > self.device.max_deployable_latency_ms {
+            return false;
+        }
+        // ε-constraint on accuracy where the objective carries one.
+        let eps = match objective {
+            Objective::MaxFps { epsilon } => Some(epsilon),
+            Objective::MinLatency { epsilon, .. } => Some(epsilon),
+            _ => None,
+        };
+        if let Some(eps) = eps {
+            let a_ref = self.reference_accuracy(&v.family).unwrap_or(v.accuracy);
+            if a_ref - entry.accuracy > eps + 1e-12 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Evaluate one (LUT key, recognition rate) pair into a [`Candidate`],
+    /// or `None` when the pre-filter rejects the key.  Single-candidate
+    /// form of the [`Self::enumerate`] loop body (identical filters and
+    /// arithmetic), used by the delta path to re-score resident frontier
+    /// points in place.
+    pub fn eval_candidate(&self, objective: Objective, space: &SearchSpace,
+                          conds: &Conditions, key: &LutKey, r: f64)
+                          -> Option<Candidate> {
+        if !self.entry_admitted(objective, space, key) {
+            return None;
+        }
+        let entry = self.lut.get(key).unwrap();
+        let spec = self.device.engine(key.engine).unwrap();
+        let energy_mj =
+            perf::energy_proxy_mj(spec, entry.latency.avg, key.governor);
+        let design = Design {
+            variant: key.variant.clone(),
+            hw: HwConfig {
+                engine: key.engine,
+                threads: key.threads,
+                governor: key.governor,
+                recognition_rate: r,
+            },
+        };
+        let latency_ms =
+            adjusted_latency(self.lut, &design, objective.stat(), conds)?;
+        let avg_latency_ms =
+            adjusted_latency(self.lut, &design, Percentile::Avg, conds)?;
+        let fps = (self.camera_fps * r).min(1000.0 / avg_latency_ms);
+        Some(Candidate {
+            design,
+            latency_ms,
+            avg_latency_ms,
+            fps,
+            mem_bytes: entry.mem_bytes,
+            accuracy: entry.accuracy,
+            energy_mj,
+            score: 0.0,
+        })
+    }
+
+    /// `enumerate(objective, space, _).len()` without building candidates:
+    /// the pre-filter is conditions-independent and every admitted key
+    /// yields exactly one candidate per recognition rate, so the count is
+    /// admitted keys × rates.  The delta path uses this to refresh a
+    /// frontier's `space_size` (the cost a full rebuild would have paid)
+    /// without paying that cost.
+    pub fn count_admitted(&self, objective: Objective, space: &SearchSpace)
+                          -> usize {
+        let rates = if space.recognition_rate.is_some() {
+            1
+        } else {
+            RECOGNITION_RATES.len()
+        };
+        self.lut
+            .entries
+            .keys()
+            .filter(|k| self.entry_admitted(objective, space, k))
+            .count()
+            * rates
     }
 }
 

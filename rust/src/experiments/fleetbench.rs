@@ -28,7 +28,7 @@
 
 use anyhow::{ensure, Context, Result};
 
-use crate::designspace::{rank, ConditionsBucket, DesignSpace};
+use crate::designspace::{rank, ConditionsBucket, DesignSpace, LutDelta};
 use crate::device::EngineKind;
 use crate::fleet::{Fleet, FleetConfig, PopulationConfig};
 use crate::manager::{adjusted_latency, Conditions, Decision, HoldReason,
@@ -40,8 +40,14 @@ use crate::perf;
 use crate::util::json::{self, Value};
 use crate::util::stats::Percentile;
 
-use super::optbench::objective_label;
+use super::optbench::{objective_label, SIM_NS_PER_EVAL};
 use super::r3;
+
+/// Engine of the fleet-wide online correction replayed after the storm
+/// (the probe-fallback shape: one uniform per-engine latency factor).
+pub const CORRECTION_ENGINE: EngineKind = EngineKind::Cpu;
+/// Uniform latency factor of that correction.
+pub const CORRECTION_FACTOR: f64 = 1.25;
 
 /// Experiment dimensions and depth.
 #[derive(Debug, Clone)]
@@ -220,6 +226,27 @@ pub struct FleetBenchReport {
     pub cache_bench_lookups: u64,
     /// LRU evictions across every cohort cache.
     pub cache_evictions: u64,
+    /// Candidates enumerated by frontier builds across every cohort cache
+    /// (the amortised decision cost the rate below is computed from).
+    pub candidates_enumerated: u64,
+    /// Cohort-cache frontiers carried in place by the post-storm
+    /// per-engine correction.
+    pub delta_updated: u64,
+    /// Frontier points the correction's delta path touched.
+    pub delta_points_touched: u64,
+    /// Candidates full rebuilds of the same frontiers would have scored.
+    pub delta_rebuild_points: u64,
+    /// Frontiers updated when every device's manager re-applied the same
+    /// correction to its cohort-shared cache (must be 0: idempotent).
+    pub idempotent_reapply_updates: u64,
+    /// Frontier builds during the post-correction idle round (must be 0:
+    /// the correction keeps every visited bucket warm).
+    pub post_correction_builds: u64,
+    /// Accounted resident bytes across every cohort cache.
+    pub resident_bytes: u64,
+    /// Byte budget each cohort cache runs under
+    /// ([`FleetConfig::frontier_mem_budget_bytes`] split evenly).
+    pub mem_budget_per_cohort: u64,
 }
 
 /// The full-profile oracle's selection: complete search over the device's
@@ -240,8 +267,8 @@ fn oracle_pick(fleet: &Fleet, device_idx: usize, true_lut: &Lut,
 /// Run the fleet benchmark.
 pub fn run(registry: &Registry, cfg: &FleetBenchConfig)
            -> Result<FleetBenchReport> {
-    let fleet = Fleet::build(std::sync::Arc::new(registry.clone()),
-                             cfg.fleet.clone())?;
+    let mut fleet = Fleet::build(std::sync::Arc::new(registry.clone()),
+                                 cfg.fleet.clone())?;
     let space = SearchSpace::family(&cfg.family);
     let objective = cfg.objective;
 
@@ -431,6 +458,63 @@ pub fn run(registry: &Registry, cfg: &FleetBenchConfig)
         .map(|t| t.probes)
         .sum();
 
+    // -- post-storm online correction through the incremental delta path --
+    // The probe-fallback shape at fleet scale: every cohort's CPU rows 25%
+    // slower.  Cohort caches must be carried in place (no cold starts),
+    // per-manager re-application must be idempotent on the shared caches,
+    // and a follow-up idle round must be served entirely from warm
+    // frontiers.
+    let delta = LutDelta::engine_scale(CORRECTION_ENGINE, CORRECTION_FACTOR);
+    let correction =
+        fleet.apply_engine_correction(CORRECTION_ENGINE, CORRECTION_FACTOR);
+    ensure!(correction.dropped == 0,
+            "correction dropped {} warm cohort frontiers", correction.dropped);
+    ensure!(correction.updated == 0
+                || correction.points_touched < correction.rebuild_points,
+            "delta path touched {} points but full rebuilds would score \
+             only {}",
+            correction.points_touched, correction.rebuild_points);
+    if cfg.enforce_regret_pct.is_some() {
+        ensure!(correction.updated > 0,
+                "the smoke storm must leave warm cohort frontiers for the \
+                 correction to carry");
+    }
+    let mut idempotent_reapply_updates = 0u64;
+    for idx in 0..fleet.len() {
+        let new_lut = std::sync::Arc::clone(&fleet.cohort_of(idx).lut);
+        let re = managers[idx].apply_lut_delta(new_lut, &delta);
+        ensure!(re.dropped == 0,
+                "{}: manager re-apply dropped {} frontiers",
+                fleet.devices[idx].id, re.dropped);
+        idempotent_reapply_updates += re.updated;
+    }
+    ensure!(idempotent_reapply_updates == 0,
+            "per-manager re-apply must be idempotent on shared caches, \
+             updated {idempotent_reapply_updates} frontiers");
+    let builds_before = fleet.cache_stats().builds;
+    let idle = Conditions::idle();
+    for idx in 0..fleet.len() {
+        let sel = fleet.select(idx, objective, &space, &idle)?;
+        let cohort = fleet.cohort_of(idx);
+        let ds = DesignSpace::new(&cohort.rep, &fleet.registry, &cohort.lut);
+        let full = rank(ds.enumerate(objective, &space, &idle), objective);
+        ensure!(full.first().map(|c| &c.design) == Some(&sel),
+                "{}: post-correction frontier walk diverged from full \
+                 search",
+                fleet.devices[idx].id);
+    }
+    let post_correction_builds = fleet.cache_stats().builds - builds_before;
+    ensure!(post_correction_builds == 0,
+            "correction left {post_correction_builds} cohort buckets cold");
+    for c in &fleet.cohorts {
+        ensure!(c.mem_budget() == 0 || c.resident_bytes() <= c.mem_budget(),
+                "{}: resident {} B over the {} B cohort budget",
+                c.id, c.resident_bytes(), c.mem_budget());
+    }
+    let resident_bytes = fleet.resident_bytes();
+    let mem_budget_per_cohort =
+        fleet.cohorts.first().map(|c| c.mem_budget()).unwrap_or(0);
+
     Ok(FleetBenchReport {
         cfg: cfg.clone(),
         archetype_counts,
@@ -458,6 +542,14 @@ pub fn run(registry: &Registry, cfg: &FleetBenchConfig)
         cache_hits: stats.hits,
         cache_bench_lookups: regret_events as u64,
         cache_evictions: stats.evictions,
+        candidates_enumerated: stats.candidates_enumerated,
+        delta_updated: correction.updated,
+        delta_points_touched: correction.points_touched,
+        delta_rebuild_points: correction.rebuild_points,
+        idempotent_reapply_updates,
+        post_correction_builds,
+        resident_bytes,
+        mem_budget_per_cohort,
     })
 }
 
@@ -482,6 +574,8 @@ pub fn report_json(r: &FleetBenchReport) -> Value {
         ("probes_per_engine", json::num(t.probes_per_engine as f64)),
         ("frontier_cache_cap",
          json::num(r.cfg.fleet.frontier_cache_cap as f64)),
+        ("frontier_mem_budget_bytes",
+         json::num(r.cfg.fleet.frontier_mem_budget_bytes as f64)),
         ("ticks", json::num(r.cfg.ticks as f64)),
         ("tick_ms", json::num(r.cfg.tick_ms)),
     ]);
@@ -544,6 +638,19 @@ pub fn report_json(r: &FleetBenchReport) -> Value {
         ("zero_share", json::num(r.regret_zero_share)),
         ("deploy_faults", json::num(r.deploy_faults as f64)),
     ]);
+    let delta = json::obj(vec![
+        ("engine", json::s(CORRECTION_ENGINE.name())),
+        ("factor", json::num(CORRECTION_FACTOR)),
+        ("updated", json::num(r.delta_updated as f64)),
+        ("points_touched", json::num(r.delta_points_touched as f64)),
+        ("rebuild_points", json::num(r.delta_rebuild_points as f64)),
+        ("delta_lt_rebuild",
+         Value::Bool(r.delta_points_touched < r.delta_rebuild_points)),
+        ("idempotent_reapply_updates",
+         json::num(r.idempotent_reapply_updates as f64)),
+        ("post_correction_builds",
+         json::num(r.post_correction_builds as f64)),
+    ]);
     let total = r.cache_builds + r.cache_hits;
     let cache = json::obj(vec![
         ("builds", json::num(r.cache_builds as f64)),
@@ -554,6 +661,19 @@ pub fn report_json(r: &FleetBenchReport) -> Value {
          json::num(r3(r.cache_hits as f64 / total.max(1) as f64))),
         ("builds_lt_devices",
          Value::Bool(r.cache_builds < p.size as u64)),
+        ("resident_bytes", json::num(r.resident_bytes as f64)),
+        ("mem_budget_per_cohort",
+         json::num(r.mem_budget_per_cohort as f64)),
+        ("under_budget",
+         Value::Bool(r.resident_bytes
+                     <= r.mem_budget_per_cohort
+                         * r.cohorts.len() as u64)),
+        ("candidates_enumerated",
+         json::num(r.candidates_enumerated as f64)),
+        ("decisions_per_sec_amortized",
+         json::num(r3(r.decisions as f64 * 1e9
+                      / (SIM_NS_PER_EVAL as f64
+                         * r.candidates_enumerated.max(1) as f64)))),
     ]);
     json::obj(vec![(
         "fleet_bench",
@@ -564,6 +684,7 @@ pub fn report_json(r: &FleetBenchReport) -> Value {
             ("cohorts", cohorts),
             ("storm", storm),
             ("regret", regret),
+            ("delta", delta),
             ("cache", cache),
         ]),
     )])
@@ -603,6 +724,15 @@ pub fn print(registry: &Registry, cfg: &FleetBenchConfig,
              r.cache_builds, r.cache_hits, r.cache_bench_lookups,
              r.cache_evictions,
              r.cache_builds < r.cfg.fleet.population.size as u64);
+    println!("incremental correction ({} x{:.2}): {} frontiers carried in \
+              place, {} points touched vs {} rebuild candidates, \
+              {} re-apply updates, {} post-correction builds",
+             CORRECTION_ENGINE.name(), CORRECTION_FACTOR, r.delta_updated,
+             r.delta_points_touched, r.delta_rebuild_points,
+             r.idempotent_reapply_updates, r.post_correction_builds);
+    println!("memory: {} resident bytes across {} cohort caches \
+              ({} B budget per cohort)",
+             r.resident_bytes, r.cohorts.len(), r.mem_budget_per_cohort);
     let payload = report_json(&r);
     let line = json::to_string(&payload);
     println!("FLEETBENCH_JSON {line}");

@@ -27,11 +27,12 @@
 
 use anyhow::{ensure, Context, Result};
 
-use crate::designspace::{rank, ConditionsBucket, DesignSpace, FrontierCache};
+use crate::designspace::{rank, ConditionsBucket, DesignSpace, FrontierCache,
+                         LutDelta};
 use crate::device::EngineKind;
 use crate::manager::Conditions;
 use crate::mdcl;
-use crate::measurements::Measurer;
+use crate::measurements::{Lut, Measurer};
 use crate::model::Registry;
 use crate::optimizer::{Objective, SearchSpace};
 use crate::util::json::{self, Value};
@@ -40,6 +41,11 @@ use crate::util::stats::Percentile;
 /// Nominal simulated cost of scoring one candidate (ns) — the unit behind
 /// the report's deterministic µs figures.
 pub const SIM_NS_PER_EVAL: u64 = 150;
+
+/// Byte budget for one app's private frontier cache.  Generous — the five
+/// smoke buckets sit far below it, so the golden pins zero evictions while
+/// still exercising the resident-bytes accounting end to end.
+pub const APP_CACHE_BUDGET_BYTES: u64 = 256 * 1024;
 
 /// One condition event of the replayed adaptation sequence.
 #[derive(Debug, Clone)]
@@ -154,6 +160,21 @@ pub struct EventRow {
     pub latency_ms: f64,
 }
 
+/// One online LUT correction replayed through the incremental delta path
+/// against the app's warm frontier cache.
+#[derive(Debug, Clone)]
+pub struct CorrectionRow {
+    /// Correction label.
+    pub name: &'static str,
+    /// Cached frontiers carried across the transition in place.
+    pub updated: u64,
+    /// Frontier points / candidates the delta path touched.
+    pub points_touched: u64,
+    /// Candidates full rebuilds of the same frontiers would score — the
+    /// cost the delta path must stay strictly under (the CI perf gate).
+    pub rebuild_points: u64,
+}
+
 /// One (device, app) row of the report.
 #[derive(Debug, Clone)]
 pub struct AppRow {
@@ -181,6 +202,18 @@ pub struct AppRow {
     pub builds: u64,
     /// Cache hits (events served without a build).
     pub hits: u64,
+    /// Online LUT corrections replayed through the delta path after the
+    /// adaptation sequence.
+    pub corrections: Vec<CorrectionRow>,
+    /// Frontier builds the post-correction verification replay caused
+    /// (must be 0: corrections keep every bucket warm).
+    pub post_correction_builds: u64,
+    /// Accounted resident bytes of the frontier cache after the replay.
+    pub resident_bytes: u64,
+    /// Byte budget of the frontier cache.
+    pub mem_budget: u64,
+    /// LRU evictions (count-cap or byte-budget pressure).
+    pub evictions: u64,
 }
 
 /// Human-readable objective tag for reports and cache keys.
@@ -212,7 +245,8 @@ fn run_app(device: &crate::device::DeviceProfile, registry: &Registry,
            family: &'static str, objective: Objective) -> Result<AppRow> {
     let space = DesignSpace::new(device, registry, lut);
     let sspace = SearchSpace::family(family);
-    let mut cache = FrontierCache::new();
+    let mut cache = FrontierCache::new()
+        .with_mem_budget(APP_CACHE_BUDGET_BYTES);
     let mut events = Vec::new();
     let mut full_total = 0usize;
     let mut frontier_total = 0usize;
@@ -278,6 +312,92 @@ fn run_app(device: &crate::device::DeviceProfile, registry: &Registry,
         });
     }
 
+    // Snapshot replay-phase counters: the correction + verification
+    // phases below serve every event as a cache hit and would otherwise
+    // skew the adaptation-phase figures the table reports.
+    let builds = cache.stats.builds;
+    let hits = cache.stats.hits;
+    let frontier_build_evals = cache.stats.candidates_enumerated as usize;
+
+    // -- online LUT corrections through the incremental delta path --------
+    // Three correction shapes, replayed sequentially against the warm
+    // cache: a per-engine scale (the fleet probe fallback's shape), a
+    // re-measurement of individual entries, and an entry retirement.
+    // Each must keep every cached frontier warm and touch strictly fewer
+    // points than the full rebuilds it replaces — the CI perf gate,
+    // golden-pinned in smoke mode.
+    let mut corrections = Vec::new();
+    let mut apply = |cur: &Lut, next: &Lut, delta: &LutDelta,
+                     name: &'static str| -> Result<CorrectionRow> {
+        let old_ds = DesignSpace::new(device, registry, cur);
+        let new_ds = DesignSpace::new(device, registry, next);
+        let out = cache.apply_delta(&old_ds, &new_ds, delta);
+        ensure!(out.dropped == 0,
+                "{app}/{name}: correction dropped {} warm frontiers",
+                out.dropped);
+        ensure!(out.updated == 0 || out.points_touched < out.rebuild_points,
+                "{app}/{name}: delta path touched {} points but full \
+                 rebuilds would score only {}",
+                out.points_touched, out.rebuild_points);
+        Ok(CorrectionRow {
+            name,
+            updated: out.updated,
+            points_touched: out.points_touched,
+            rebuild_points: out.rebuild_points,
+        })
+    };
+
+    // 1. The probe-fallback shape: every GPU row 25% slower.
+    let next = lut.scaled_engine(EngineKind::Gpu, 1.25);
+    corrections.push(apply(lut, &next,
+                           &LutDelta::engine_scale(EngineKind::Gpu, 1.25),
+                           "gpu_scale_1.25")?);
+    let cur = next;
+
+    // 2. Re-measurement: the family's FP32 CPU rows come back 5% slower.
+    let mut next = cur.clone();
+    let fp32 = format!("{family}__fp32__b1");
+    for (k, e) in next.entries.iter_mut() {
+        if k.variant == fp32 && k.engine == EngineKind::Cpu {
+            e.latency = e.latency.scaled(1.05);
+        }
+    }
+    corrections.push(apply(&cur, &next, &LutDelta::between(&cur, &next),
+                           "remeasure_fp32_cpu")?);
+    let cur = next;
+
+    // 3. Retirement: the family's INT8 GPU rows are withdrawn.
+    let int8 = format!("{family}__int8__b1");
+    let mut next = cur.clone();
+    next.entries
+        .retain(|k, _| !(k.variant == int8 && k.engine == EngineKind::Gpu));
+    corrections.push(apply(&cur, &next, &LutDelta::between(&cur, &next),
+                           "retire_int8_gpu")?);
+    let cur = next;
+
+    // Post-correction differential check: every bucket must still be warm
+    // (zero rebuilds) and frontier-walk selection must agree with a full
+    // search over the corrected LUT on every event.
+    let builds_before_verify = cache.stats.builds;
+    let corrected = DesignSpace::new(device, registry, &cur);
+    for ev in event_sequence() {
+        let bucket = ConditionsBucket::of(&ev.conds);
+        let rep = bucket.representative();
+        let full = rank(corrected.enumerate(objective, &sspace, &rep),
+                        objective);
+        let frontier = cache.frontier(&corrected, objective, &sspace,
+                                      &bucket);
+        let walk_pick = frontier.best().map(|c| design_id(&c.design));
+        let full_pick = full.first().map(|c| design_id(&c.design));
+        ensure!(walk_pick == full_pick,
+                "{app}@{} post-correction: frontier pick {walk_pick:?} != \
+                 full-search pick {full_pick:?}",
+                ev.name);
+    }
+    let post_correction_builds = cache.stats.builds - builds_before_verify;
+    ensure!(post_correction_builds == 0,
+            "{app}: corrections left {post_correction_builds} buckets cold");
+
     Ok(AppRow {
         device: device.name.to_string(),
         app,
@@ -288,9 +408,14 @@ fn run_app(device: &crate::device::DeviceProfile, registry: &Registry,
         events,
         full_evals_total: full_total,
         frontier_evals_total: frontier_total,
-        frontier_build_evals: cache.stats.candidates_enumerated as usize,
-        builds: cache.stats.builds,
-        hits: cache.stats.hits,
+        frontier_build_evals,
+        builds,
+        hits,
+        corrections,
+        post_correction_builds,
+        resident_bytes: cache.resident_bytes(),
+        mem_budget: cache.mem_budget(),
+        evictions: cache.stats.evictions,
     })
 }
 
@@ -345,6 +470,29 @@ fn rows_to_json(rows: &[AppRow]) -> Value {
                     })
                     .collect();
                 let amortised = r.frontier_evals_total + r.frontier_build_evals;
+                let corrections: Vec<Value> = r
+                    .corrections
+                    .iter()
+                    .map(|c| {
+                        json::obj(vec![
+                            ("name", json::s(c.name)),
+                            ("updated", json::num(c.updated as f64)),
+                            ("points_touched",
+                             json::num(c.points_touched as f64)),
+                            ("rebuild_points",
+                             json::num(c.rebuild_points as f64)),
+                        ])
+                    })
+                    .collect();
+                let touched_total: u64 =
+                    r.corrections.iter().map(|c| c.points_touched).sum();
+                let rebuild_total: u64 =
+                    r.corrections.iter().map(|c| c.rebuild_points).sum();
+                let n_events = r.events.len() as f64;
+                let dps = |evals: usize| {
+                    r3(n_events * 1e9
+                       / (SIM_NS_PER_EVAL as f64 * evals as f64))
+                };
                 json::obj(vec![
                     ("device", json::s(&r.device)),
                     ("app", json::s(r.app)),
@@ -369,6 +517,25 @@ fn rows_to_json(rows: &[AppRow]) -> Value {
                     ("walk_speedup",
                      json::num(r3(r.full_evals_total as f64
                                   / r.frontier_evals_total as f64))),
+                    ("corrections", Value::Arr(corrections)),
+                    ("delta_points_touched",
+                     json::num(touched_total as f64)),
+                    ("delta_rebuild_points",
+                     json::num(rebuild_total as f64)),
+                    ("delta_lt_rebuild",
+                     Value::Bool(touched_total < rebuild_total)),
+                    ("post_correction_builds",
+                     json::num(r.post_correction_builds as f64)),
+                    ("cache_resident_bytes",
+                     json::num(r.resident_bytes as f64)),
+                    ("cache_mem_budget", json::num(r.mem_budget as f64)),
+                    ("cache_evictions", json::num(r.evictions as f64)),
+                    ("cache_under_budget",
+                     Value::Bool(r.resident_bytes <= r.mem_budget)),
+                    ("decisions_per_sec_full",
+                     json::num(dps(r.full_evals_total))),
+                    ("decisions_per_sec_frontier",
+                     json::num(dps(r.frontier_evals_total))),
                 ])
             })
             .collect(),
@@ -414,6 +581,19 @@ pub fn print(registry: &Registry, cfg: &OptBenchConfig,
               {} adaptation events; µs simulated at {} ns/candidate; \
               selections verified equal on every event)",
              event_sequence().len(), SIM_NS_PER_EVAL);
+    println!("incremental corrections (delta path vs full rebuild, points \
+              touched):");
+    for r in &rows {
+        let touched: u64 =
+            r.corrections.iter().map(|c| c.points_touched).sum();
+        let rebuild: u64 =
+            r.corrections.iter().map(|c| c.rebuild_points).sum();
+        println!("  {:<16} {} corrections: {} pts touched vs {} rebuild \
+                  ({} frontiers kept warm, {} B resident / {} B budget)",
+                 r.app, r.corrections.len(), touched, rebuild,
+                 r.corrections.iter().map(|c| c.updated).max().unwrap_or(0),
+                 r.resident_bytes, r.mem_budget);
+    }
     let payload = report_json(&rows, cfg);
     let line = json::to_string(&payload);
     println!("OPTBENCH_JSON {line}");
@@ -445,6 +625,17 @@ mod tests {
             // Repeated buckets never rebuild.
             let repeat = r.events.iter().find(|e| e.name == "gpu_load_repeat");
             assert!(!repeat.unwrap().built);
+            // The incremental-correction gate: every correction keeps all
+            // frontiers warm and beats the rebuilds it replaces.
+            assert_eq!(r.corrections.len(), 3, "{r:?}");
+            for c in &r.corrections {
+                assert_eq!(c.updated, r.builds, "{c:?}");
+                assert!(c.points_touched < c.rebuild_points, "{c:?}");
+            }
+            assert_eq!(r.post_correction_builds, 0, "{r:?}");
+            assert_eq!(r.evictions, 0, "{r:?}");
+            assert!(r.resident_bytes > 0 && r.resident_bytes <= r.mem_budget,
+                    "{r:?}");
         }
     }
 

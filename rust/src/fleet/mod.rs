@@ -45,8 +45,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use crate::designspace::{CacheStats, ConditionsBucket, DesignSpace,
-                         FrontierCache};
+use crate::designspace::{CacheStats, ConditionsBucket, DeltaOutcome,
+                         DesignSpace, FrontierCache, LutDelta};
 use crate::device::{DeviceProfile, EngineKind};
 use crate::manager::{Conditions, RuntimeManager};
 use crate::measurements::{Lut, Measurer};
@@ -68,6 +68,10 @@ pub struct FleetConfig {
     pub noise_sigma: f64,
     /// LRU capacity of each cohort's shared frontier cache.
     pub frontier_cache_cap: usize,
+    /// Fleet-wide frontier memory budget in accounted bytes
+    /// ([`FrontierCache::resident_bytes`]); split evenly across cohorts so
+    /// each shared cache's LRU bound is data-driven (0 = unbounded).
+    pub frontier_mem_budget_bytes: u64,
 }
 
 impl Default for FleetConfig {
@@ -79,6 +83,7 @@ impl Default for FleetConfig {
             lut_warmup: 1,
             noise_sigma: 0.0,
             frontier_cache_cap: 256,
+            frontier_mem_budget_bytes: 8 * 1024 * 1024,
         }
     }
 }
@@ -121,6 +126,16 @@ impl Cohort {
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.lock().unwrap().stats
     }
+
+    /// Accounted bytes of this cohort's resident frontiers.
+    pub fn resident_bytes(&self) -> u64 {
+        self.cache.lock().unwrap().resident_bytes()
+    }
+
+    /// The per-cohort share of the fleet memory budget this cache enforces.
+    pub fn mem_budget(&self) -> u64 {
+        self.cache.lock().unwrap().mem_budget()
+    }
 }
 
 /// A sampled device population organised into cohorts with shared
@@ -155,6 +170,13 @@ impl Fleet {
 
         let mut cohorts = Vec::new();
         let mut device_cohort = vec![0usize; devices.len()];
+        // Even split of the fleet-wide frontier memory budget: the LRU
+        // byte bound every cohort-shared cache enforces.
+        let per_cohort_budget = if cfg.frontier_mem_budget_bytes == 0 {
+            0
+        } else {
+            (cfg.frontier_mem_budget_bytes / groups.len().max(1) as u64).max(1)
+        };
         for (ci, (key, members)) in groups.into_iter().enumerate() {
             let rep = key.representative(&cfg.population);
             let mut tlut = te.predict(&rep)?;
@@ -190,7 +212,9 @@ impl Fleet {
                 rep: Arc::new(rep),
                 lut: Arc::new(tlut.lut),
                 cache: Arc::new(Mutex::new(
-                    FrontierCache::new().with_cap(cfg.frontier_cache_cap))),
+                    FrontierCache::new()
+                        .with_cap(cfg.frontier_cache_cap)
+                        .with_mem_budget(per_cohort_budget))),
                 members,
                 transfer: tlut.engines,
                 key,
@@ -264,6 +288,40 @@ impl Fleet {
             .measure_all()
     }
 
+    /// Apply a uniform per-engine latency correction (the probe
+    /// fallback's shape: every latency statistic on `engine` × `factor`)
+    /// to **every cohort's LUT**, carrying each cohort's shared frontier
+    /// cache across the transition incrementally
+    /// ([`FrontierCache::apply_delta`]) instead of cold-starting all of
+    /// them.  Returns the aggregate delta outcome.  Member managers built
+    /// before the correction still hold the old LUT `Arc`; push the new
+    /// one with [`RuntimeManager::apply_lut_delta`] (idempotent on the
+    /// shared caches).
+    pub fn apply_engine_correction(&mut self, engine: EngineKind,
+                                   factor: f64) -> DeltaOutcome {
+        let delta = LutDelta::engine_scale(engine, factor);
+        let mut total = DeltaOutcome::default();
+        for cohort in &mut self.cohorts {
+            let new_lut = Arc::new(cohort.lut.scaled_engine(engine, factor));
+            let outcome = {
+                let old_ds = DesignSpace::new(&cohort.rep, &self.registry,
+                                              &cohort.lut);
+                let new_ds = DesignSpace::new(&cohort.rep, &self.registry,
+                                              &new_lut);
+                cohort.cache.lock().unwrap().apply_delta(&old_ds, &new_ds,
+                                                         &delta)
+            };
+            cohort.lut = new_lut;
+            total.absorb(outcome);
+        }
+        total
+    }
+
+    /// Accounted resident frontier bytes summed over every cohort cache.
+    pub fn resident_bytes(&self) -> u64 {
+        self.cohorts.iter().map(|c| c.resident_bytes()).sum()
+    }
+
     /// Aggregate cache counters over every cohort.
     pub fn cache_stats(&self) -> CacheStats {
         let mut total = CacheStats::default();
@@ -274,6 +332,8 @@ impl Fleet {
             total.invalidations += s.invalidations;
             total.candidates_enumerated += s.candidates_enumerated;
             total.evictions += s.evictions;
+            total.delta_updates += s.delta_updates;
+            total.delta_points_touched += s.delta_points_touched;
         }
         total
     }
@@ -347,6 +407,38 @@ mod tests {
         let stats = fleet.cache_stats();
         assert!(stats.builds <= builds_after_init + fleet.cohorts.len() as u64);
         assert!(stats.builds < fleet.len() as u64);
+    }
+
+    #[test]
+    fn engine_correction_keeps_cohort_caches_warm() {
+        let mut fleet = small_fleet(32);
+        let space = SearchSpace::family("mobilenet_v2_100");
+        for idx in 0..fleet.len() {
+            fleet.select(idx, obj(), &space, &Conditions::idle()).unwrap();
+        }
+        let builds_before = fleet.cache_stats().builds;
+        let out = fleet.apply_engine_correction(EngineKind::Cpu, 1.25);
+        assert_eq!(out.updated, fleet.cohorts.len() as u64,
+                   "every cohort's idle frontier carried in place");
+        assert_eq!(out.dropped, 0);
+        assert!(out.points_touched < out.rebuild_points,
+                "delta {} !< rebuild {}", out.points_touched,
+                out.rebuild_points);
+        // Post-correction selections hit the carried frontiers — zero
+        // rebuilds — and still equal a full search over the corrected LUT.
+        for idx in 0..fleet.len() {
+            let pick =
+                fleet.select(idx, obj(), &space, &Conditions::idle()).unwrap();
+            let cohort = fleet.cohort_of(idx);
+            let ds = DesignSpace::new(&cohort.rep, &fleet.registry,
+                                      &cohort.lut);
+            let full = crate::designspace::rank(
+                ds.enumerate(obj(), &space, &Conditions::idle()), obj());
+            assert_eq!(pick, full[0].design);
+        }
+        assert_eq!(fleet.cache_stats().builds, builds_before,
+                   "no cold start after the correction");
+        assert!(fleet.resident_bytes() > 0);
     }
 
     #[test]

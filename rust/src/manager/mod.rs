@@ -24,8 +24,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::designspace::{CacheStats, ConditionsBucket, DesignSpace,
-                         FrontierCache};
+use crate::designspace::{CacheStats, ConditionsBucket, DeltaOutcome,
+                         DesignSpace, FrontierCache, LutDelta};
 use crate::device::{DeviceProfile, EngineKind};
 use crate::measurements::Lut;
 use crate::model::Registry;
@@ -276,6 +276,27 @@ impl RuntimeManager {
     /// reported by `oodin opt-bench`).
     pub fn frontier_stats(&self) -> CacheStats {
         self.frontiers.lock().unwrap().stats
+    }
+
+    /// Swap in a corrected LUT, carrying the (possibly cohort-shared)
+    /// frontier cache across the transition incrementally instead of
+    /// cold-starting it ([`FrontierCache::apply_delta`]).  `delta` must
+    /// describe every difference between the current and the new LUT.
+    /// Idempotent on a shared cache: the first manager of a cohort pays
+    /// the delta update, the rest see every entry already at the new
+    /// fingerprint.
+    pub fn apply_lut_delta(&mut self, new_lut: Arc<Lut>, delta: &LutDelta)
+                           -> DeltaOutcome {
+        let outcome = {
+            let old_ds =
+                DesignSpace::new(&self.device, &self.registry, &self.lut);
+            let new_ds =
+                DesignSpace::new(&self.device, &self.registry, &new_lut);
+            self.frontiers.lock().unwrap().apply_delta(&old_ds, &new_ds,
+                                                       delta)
+        };
+        self.lut = new_lut;
+        outcome
     }
 
     /// Record one measured inference latency (ms) on the current design.

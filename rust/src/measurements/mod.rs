@@ -106,6 +106,22 @@ impl Lut {
         self.entries.get(key)
     }
 
+    /// A copy with every latency statistic of `engine`'s entries
+    /// multiplied by `factor` (accuracy and memory untouched, other
+    /// engines byte-identical) — the LUT-side of a per-engine online
+    /// correction, paired with
+    /// [`crate::designspace::LutDelta::engine_scale`] so frontier caches
+    /// can follow the change incrementally.
+    pub fn scaled_engine(&self, engine: EngineKind, factor: f64) -> Lut {
+        let mut entries = self.entries.clone();
+        for (k, e) in entries.iter_mut() {
+            if k.engine == engine {
+                e.latency = e.latency.scaled(factor);
+            }
+        }
+        Lut { device: self.device.clone(), entries }
+    }
+
     /// Number of measured configurations.
     pub fn len(&self) -> usize {
         self.entries.len()

@@ -36,7 +36,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
-use crate::designspace::{CacheStats, FrontierCache};
+use crate::designspace::{CacheStats, DeltaOutcome, DesignSpace,
+                         FrontierCache, LutDelta};
 use crate::device::{DeviceProfile, EngineKind};
 use crate::devicesim::DeviceSim;
 use crate::manager::{Conditions, Policy, Reason, Switch};
@@ -162,6 +163,25 @@ impl Scheduler {
     /// re-adaptation event this scheduler has run.
     pub fn frontier_stats(&self) -> CacheStats {
         self.frontiers.lock().unwrap().stats
+    }
+
+    /// Swap in a corrected LUT, delta-updating every per-app frontier the
+    /// joint search has cached ([`FrontierCache::apply_delta`]) instead of
+    /// cold-starting them.  `delta` must describe every difference between
+    /// the current and the new LUT; subsequent [`JointSearch`] passes
+    /// (admission, re-adaptation) then hit the carried frontiers.
+    pub fn apply_lut_delta(&mut self, new_lut: Arc<Lut>, delta: &LutDelta)
+                           -> DeltaOutcome {
+        let outcome = {
+            let old_ds =
+                DesignSpace::new(&self.device, &self.registry, &self.lut);
+            let new_ds =
+                DesignSpace::new(&self.device, &self.registry, &new_lut);
+            self.frontiers.lock().unwrap().apply_delta(&old_ds, &new_ds,
+                                                       delta)
+        };
+        self.lut = new_lut;
+        outcome
     }
 
     /// Number of hosted apps.

@@ -41,6 +41,21 @@ impl LatencyStats {
         }
     }
 
+    /// Every statistic multiplied by `factor` (sample count unchanged) —
+    /// the shape of a uniform latency correction, e.g. the fleet probe
+    /// fallback's per-engine scale.
+    pub fn scaled(&self, factor: f64) -> Self {
+        LatencyStats {
+            min: self.min * factor,
+            max: self.max * factor,
+            avg: self.avg * factor,
+            median: self.median * factor,
+            p90: self.p90 * factor,
+            p99: self.p99 * factor,
+            n: self.n,
+        }
+    }
+
     /// Pick the statistic named by the objective (`avg`, `median`, `p90`...).
     pub fn metric(&self, which: Percentile) -> f64 {
         match which {

@@ -26,9 +26,20 @@ representative conditions — the design-space layer's exactness theorem
 (property-tested in `tests/designspace_props.rs`, re-asserted per event by
 the Rust driver) guarantees both pick the same design.
 
+Beyond the report JSON this oracle also regenerates the decision
+flight-recorder trace (``rust/tests/golden/fleetbench_smoke_trace.jsonl``)
+— the ``oodin fleet-bench --smoke --trace`` JSON-lines payload: cohort
+transfer provenance and probe fallbacks at virtual t=0, one frontier
+cache event per shared-cache lookup, one hold-or-switch event per
+``decide()`` (switches with their ``explain`` records), the per-cohort
+``frontier_delta`` + fleet ``correction`` aggregate for the post-storm
+CPU correction, and the post-correction warm-hit round — in the same
+emission order and with the same pinned key order as
+``telemetry::trace``.
+
 Usage:  python3 python/golden_fleetbench.py [--check]
-  default: writes the golden file
-  --check: compares against the existing file, exit 1 on drift
+  default: writes both golden files
+  --check: compares against the existing files, exit 1 on drift
 """
 
 import math
@@ -596,19 +607,31 @@ POLICY = dict(load_delta=0.1, min_improvement=1.10, check_interval=250.0,
 
 
 class Manager:
-    def __init__(self, current):
+    def __init__(self, current, scope=None, tr=None):
         self.current = current
         self.last_loads = {}
         self.last_check = -math.inf
         self.last_switch = -math.inf
         self.violations = 0
+        self.degradation_start = None
+        self.scope = scope
+        self.tr = tr
+
+    def hold(self, trigger, reason):
+        if self.tr is not None:
+            self.tr.emit("hold", [
+                ("scope", f'"{self.scope}"'),
+                ("trigger", f'"{trigger}"'),
+                ("reason", f'"{reason}"'),
+            ])
+        return ("hold", reason)
 
     def decide(self, now, loads, thermals, select):
         if now - self.last_check < POLICY["check_interval"]:
-            return ("hold", "not_due")
+            return self.hold("none", "not_due")
         self.last_check = now
         if now - self.last_switch < POLICY["cooldown"]:
-            return ("hold", "cooldown")
+            return self.hold("none", "cooldown")
         load_changed = any(
             abs(loads.get(k, 0.0) - self.last_loads.get(k, 0.0))
             >= POLICY["load_delta"] for k in ENGINE_ORDER)
@@ -617,31 +640,53 @@ class Manager:
         degraded_now = (thermals.get(self.current[1], 1.0)
                         < POLICY["thermal_alert"])
         if degraded_now:
+            if self.degradation_start is None:
+                self.degradation_start = now
             self.violations += 1
         else:
             self.violations = 0
+            self.degradation_start = None
         confirmed = self.violations >= POLICY["confirmations"]
         if not load_changed and not confirmed:
-            return ("hold", "no_trigger")
+            return self.hold("none", "no_trigger")
+        trigger = "degradation" if confirmed else "load"
         if load_changed:
             for k in ENGINE_ORDER:
                 self.last_loads[k] = loads.get(k, 0.0)
-        best = select(loads, thermals)
+        best, bid, npts = select(loads, thermals)
         if best is None:
-            return ("hold", "no_alternative")
+            return self.hold(trigger, "no_alternative")
         if best == self.current:
-            return ("hold", "current_still_best")
+            return self.hold(trigger, "current_still_best")
         cur_adj = adjusted(self.lut, self.current, loads, thermals)
         best_adj = adjusted(self.lut, best, loads, thermals)
         if cur_adj is None or best_adj is None:
-            return ("hold", "no_alternative")
+            return self.hold(trigger, "no_alternative")
         if cur_adj / best_adj < POLICY["min_improvement"]:
-            return ("hold", "below_hysteresis")
-        reason = "degradation" if confirmed else "load"
+            return self.hold(trigger, "below_hysteresis")
+        detection = (now - self.degradation_start
+                     if self.degradation_start is not None else 0.0)
+        if self.tr is not None:
+            self.tr.emit("switch", [
+                ("scope", f'"{self.scope}"'),
+                ("from", f'"{design_id(self.current)}"'),
+                ("to", f'"{design_id(best)}"'),
+                ("reason", f'"{trigger}"'),
+                ("detection_ms", jnum(detection)),
+            ])
+            self.tr.emit("explain", [
+                ("scope", f'"{self.scope}"'),
+                ("bucket", f'"{bid}"'),
+                ("chosen", f'"{design_id(best)}"'),
+                ("score", jnum(r3(best_adj))),
+                ("frontier", jnum(npts)),
+                ("alternatives", jnum(max(npts - 1, 0))),
+            ])
         self.current = best
         self.last_switch = now
         self.violations = 0
-        return ("switch", reason)
+        self.degradation_start = None
+        return ("switch", trigger)
 
 
 # --------------------------------------------------------------------------
@@ -686,6 +731,40 @@ def jobj(fields):
 
 def jbool(b):
     return "true" if b else "false"
+
+
+def fmt_f64(x):
+    """Rust f64 Display for the design-id rate (1 -> "1", 0.5 -> "0.5")."""
+    return str(int(x)) if x == int(x) else repr(x)
+
+
+def design_id(d):
+    """manager::design_id — canonical design identity string."""
+    return f"{d[0]}|{d[1]}|{d[2]}|{d[3]}|r={fmt_f64(d[4])}"
+
+
+class Trace:
+    """telemetry::trace::FlightRecorder mirror: JSON-lines emission with
+    the pinned key order ``seq``, ``t_us``, ``ev``, then the payload.
+    The smoke trace stays far below the 65 536-event ring capacity, so
+    the oracle never models drops."""
+
+    def __init__(self):
+        self.lines = []
+        self.seq = 0
+        self.t_us = 0
+
+    def set_now_us(self, t_us):
+        self.t_us = t_us
+
+    def emit(self, ev, fields):
+        parts = [("seq", jnum(self.seq)), ("t_us", jnum(self.t_us)),
+                 ("ev", f'"{ev}"')] + fields
+        self.lines.append(jobj(parts))
+        self.seq += 1
+
+    def dump(self):
+        return "".join(line + "\n" for line in self.lines)
 
 
 def run_fleetbench_smoke():
@@ -734,6 +813,30 @@ def run_fleetbench_smoke():
             engines=engines, members=members, cache={}, builds=0, hits=0,
             evals=0))
 
+    # Flight recorder attach (Fleet::attach_recorder at virtual t=0):
+    # transfer provenance per cohort in canonical order, probe fallbacks
+    # per probed engine in EngineKind order.
+    tr = Trace()
+    tr.set_now_us(0)
+    for c in cohorts:
+        min_conf = min(e["confidence"] for e in c["engines"].values())
+        tr.emit("cohort_transfer", [
+            ("cohort", f'"{c["id"]}"'),
+            ("members", jnum(len(c["members"]))),
+            ("min_confidence", jnum(r3(min_conf))),
+            ("probed", jbool(any(e["probed"]
+                                 for e in c["engines"].values()))),
+        ])
+        for kind in ENGINE_ORDER:
+            e = c["engines"].get(kind)
+            if e is not None and e["probed"]:
+                tr.emit("probe_fallback", [
+                    ("cohort", f'"{c["id"]}"'),
+                    ("engine", f'"{kind}"'),
+                    ("probes", jnum(e["probes"])),
+                    ("correction", jnum(r3(e["correction"]))),
+                ])
+
     # Full-profile oracle LUTs + transfer prediction error on the family.
     oracle_luts = []
     err_sum = 0.0
@@ -752,29 +855,44 @@ def run_fleetbench_smoke():
         oracle_luts.append(true_lut)
 
     def cohort_select(ci, loads, thermals):
+        """Shared-cache lookup; returns (best, bucket id, frontier len)
+        and emits the cache-side trace event, exactly as
+        FrontierCache::frontier does."""
         c = cohorts[ci]
         steps = bucket_of(loads, thermals)
         bid = bucket_id(steps)
         if bid in c["cache"]:
             c["hits"] += 1
             pts = c["cache"][bid]["points"]
-            return design_tuple(pts[0]) if pts else None
+            tr.emit("frontier_hit", [
+                ("scope", f'"{c["id"]}"'),
+                ("bucket", f'"{bid}"'),
+                ("points", jnum(len(pts))),
+            ])
+            return (design_tuple(pts[0]) if pts else None, bid, len(pts))
         rep_loads = {e: s * BUCKET_LOG2_STEP for e, s in steps.items()}
         pts, n_cands = frontier_build(c["rep"], c["lut"], rep_loads)
         c["builds"] += 1
         c["evals"] += n_cands
         c["cache"][bid] = dict(points=pts, steps=steps)
+        tr.emit("frontier_build", [
+            ("scope", f'"{c["id"]}"'),
+            ("bucket", f'"{bid}"'),
+            ("points", jnum(len(pts))),
+            ("candidates", jnum(n_cands)),
+        ])
         best = design_tuple(pts[0]) if pts else None
         # The frontier-walk exactness theorem, re-asserted oracle-side.
         assert best == best_design(c["rep"], c["lut"], rep_loads, {})
-        return best
+        return (best, bid, len(pts))
 
-    # Managers: initial design = idle-conditions cohort selection.
+    # Managers: initial design = idle-conditions cohort selection
+    # (Fleet::manager_for), each scoped to its device id for the trace.
     managers = []
     for d in devices:
         ci = device_cohort[d["idx"]]
-        init = cohort_select(ci, {}, {})
-        m = Manager(init)
+        init, _, _ = cohort_select(ci, {}, {})
+        m = Manager(init, scope=f'd{d["idx"]:04d}', tr=tr)
         m.lut = cohorts[ci]["lut"]
         m.ci = ci
         managers.append(m)
@@ -788,6 +906,7 @@ def run_fleetbench_smoke():
     deploy_faults = 0
     for tick in range(CFG["ticks"]):
         now = tick * CFG["tick_ms"]
+        tr.set_now_us(int(now * 1000.0))
         regret_tick = tick in CFG["regret_ticks"]
         for idx, d in enumerate(devices):
             has_npu = any(k == "nnapi" for k, _, _, _ in d["axes"])
@@ -806,7 +925,7 @@ def run_fleetbench_smoke():
             else:
                 holds[outcome[1]] += 1
             if regret_tick:
-                sel = cohort_select(ci, loads, thermals)
+                sel, _, _ = cohort_select(ci, loads, thermals)
                 true_lut = oracle_luts[idx]
                 oracle = best_design(d["true"], true_lut, loads, thermals)
                 sel_adj = adjusted(true_lut, sel, loads, thermals)
@@ -857,6 +976,7 @@ def run_fleetbench_smoke():
     delta_updated = 0
     delta_points_touched = 0
     delta_rebuild_points = 0
+    tr.set_now_us(int(CFG["ticks"] * CFG["tick_ms"] * 1000.0))
     for c in cohorts:
         new_lut = {k: (v * CORRECTION_FACTOR if k[1] == CORRECTION_ENGINE
                        else v)
@@ -865,6 +985,9 @@ def run_fleetbench_smoke():
         # (conditions-independent), i.e. what a full rebuild would score.
         sz_new = len(enumerate_space(c["rep"], new_lut, CFG["family"],
                                      CFG["eps"], {}, {}))
+        coh_updated = 0
+        coh_touched = 0
+        coh_rebuild = 0
         for entry in c["cache"].values():
             rep_loads = {e: s * BUCKET_LOG2_STEP
                          for e, s in entry["steps"].items()}
@@ -883,9 +1006,21 @@ def run_fleetbench_smoke():
                     newpts.append(rescored)
             newpts.sort(key=rank_key)
             entry["points"] = newpts
-            delta_updated += 1
-            delta_points_touched += touched
-            delta_rebuild_points += sz_new
+            coh_updated += 1
+            coh_touched += touched
+            coh_rebuild += sz_new
+        # FrontierCache::apply_delta's per-cache summary event (no
+        # entries are ever dropped by the factor-up correction).
+        if coh_updated > 0:
+            tr.emit("frontier_delta", [
+                ("scope", f'"{c["id"]}"'),
+                ("updated", jnum(coh_updated)),
+                ("points_touched", jnum(coh_touched)),
+                ("rebuild_points", jnum(coh_rebuild)),
+            ])
+        delta_updated += coh_updated
+        delta_points_touched += coh_touched
+        delta_rebuild_points += coh_rebuild
         c["lut"] = new_lut
         resident_c = sum(FRONTIER_BASE_BYTES
                          + FRONTIER_POINT_BYTES * len(e["points"])
@@ -896,12 +1031,28 @@ def run_fleetbench_smoke():
     assert delta_points_touched < delta_rebuild_points, (
         delta_points_touched, delta_rebuild_points)
 
+    # Fleet::apply_engine_correction's fleet-level aggregate event.
+    tr.emit("correction", [
+        ("engine", f'"{CORRECTION_ENGINE}"'),
+        ("factor", jnum(CORRECTION_FACTOR)),
+        ("updated", jnum(delta_updated)),
+        ("points_touched", jnum(delta_points_touched)),
+    ])
+
     # Post-correction idle round: every cohort's idle frontier stays warm
-    # (zero builds) and its walk still equals the full search.
+    # (zero builds) and its walk still equals the full search.  The Rust
+    # driver serves these 200 selections from the carried frontiers, so
+    # each emits a frontier_hit (after the report's cache-stats snapshot,
+    # hence emitted here without touching the counters above).
     for idx in range(CFG["size"]):
         c = cohorts[device_cohort[idx]]
         assert "idle" in c["cache"]
         pts = c["cache"]["idle"]["points"]
+        tr.emit("frontier_hit", [
+            ("scope", f'"{c["id"]}"'),
+            ("bucket", '"idle"'),
+            ("points", jnum(len(pts))),
+        ])
         assert design_tuple(pts[0]) == best_design(c["rep"], c["lut"], {},
                                                    {})
 
@@ -1016,24 +1167,32 @@ def run_fleetbench_smoke():
         ("delta", delta),
         ("cache", cache),
     ])
-    return jobj([("fleet_bench", inner)]) + "\n"
+    return jobj([("fleet_bench", inner)]) + "\n", tr.dump()
 
 
 def main():
-    golden = os.path.normpath(os.path.join(
-        os.path.dirname(__file__), "..", "rust", "tests", "golden",
-        "fleetbench_smoke.json"))
-    content = run_fleetbench_smoke()
+    gdir = os.path.normpath(os.path.join(
+        os.path.dirname(__file__), "..", "rust", "tests", "golden"))
+    golden = os.path.join(gdir, "fleetbench_smoke.json")
+    golden_trace = os.path.join(gdir, "fleetbench_smoke_trace.jsonl")
+    content, trace = run_fleetbench_smoke()
     if "--check" in sys.argv:
-        want = open(golden).read()
-        if want != content:
-            print(f"DRIFT: {golden} does not match oracle", file=sys.stderr)
-            return 1
-        print(f"{golden} matches oracle", file=sys.stderr)
-        return 0
+        ok = True
+        for path, want_content in [(golden, content), (golden_trace, trace)]:
+            have = open(path).read()
+            if have != want_content:
+                print(f"DRIFT: {path} does not match oracle",
+                      file=sys.stderr)
+                ok = False
+            else:
+                print(f"{path} matches oracle", file=sys.stderr)
+        return 0 if ok else 1
     with open(golden, "w") as f:
         f.write(content)
     print(f"wrote {golden} ({len(content)} bytes)", file=sys.stderr)
+    with open(golden_trace, "w") as f:
+        f.write(trace)
+    print(f"wrote {golden_trace} ({len(trace)} bytes)", file=sys.stderr)
     return 0
 
 

@@ -155,6 +155,7 @@ fn main() {
     let walk = bench("frontier/walk_decision", 20, 400, || {
         black_box(carried.best());
     });
+    let ratio = full.stats.avg / inc.stats.avg.max(1e-9);
     println!(
         "frontier/delta: {touched} points touched vs {} rebuild candidates \
          ({} frontier points); delta {:.0}/s vs rebuild {:.0}/s \
@@ -163,8 +164,29 @@ fn main() {
         carried.len(),
         1e3 / inc.stats.avg.max(1e-9),
         1e3 / full.stats.avg.max(1e-9),
-        full.stats.avg / inc.stats.avg.max(1e-9),
+        ratio,
         1e3 / walk.stats.avg.max(1e-9),
     );
+    // Wall-clock regression gate: apply_delta must beat a full rebuild by a
+    // comfortable margin.  The work-count gap (points_touched vs space_size)
+    // is typically >10x, so a 2x wall-clock floor leaves generous headroom
+    // for shared-runner timing noise while still catching an accidental
+    // rebuild-in-disguise.  Skipped when the rebuild itself is too fast to
+    // time reliably (sub-50µs averages are mostly harness overhead).
+    const MIN_DELTA_SPEEDUP: f64 = 2.0;
+    if full.stats.avg > 0.05 {
+        assert!(
+            ratio >= MIN_DELTA_SPEEDUP,
+            "frontier/apply_delta regressed: only {ratio:.2}x faster than \
+             full_rebuild (floor {MIN_DELTA_SPEEDUP}x; rebuild avg \
+             {:.4} ms, delta avg {:.4} ms)",
+            full.stats.avg, inc.stats.avg,
+        );
+        println!("frontier/delta wall-clock gate: {ratio:.1}x >= \
+                  {MIN_DELTA_SPEEDUP}x floor — ok");
+    } else {
+        println!("frontier/delta wall-clock gate: rebuild avg {:.4} ms too \
+                  small to time reliably — gate skipped", full.stats.avg);
+    }
     rt.shutdown();
 }

@@ -113,6 +113,7 @@ use crate::measurements::{Lut, LutEntry, LutKey};
 use crate::model::Registry;
 use crate::optimizer::{Objective, SearchSpace};
 use crate::perf;
+use crate::telemetry::trace::{FlightRecorder, TraceEvent};
 
 use super::{cmp_ranked, rank, Candidate, DesignSpace};
 
@@ -573,6 +574,9 @@ pub struct FrontierCache {
     tick: u64,
     cap: usize,
     mem_budget: u64,
+    /// Attached flight recorder (with its scope label) — every cache
+    /// transition (build / hit / evict / delta-apply) is emitted when set.
+    recorder: Option<(Arc<FlightRecorder>, String)>,
     /// Effectiveness counters since construction.
     pub stats: CacheStats,
 }
@@ -584,6 +588,7 @@ impl Default for FrontierCache {
             tick: 0,
             cap: FRONTIER_CACHE_DEFAULT_CAP,
             mem_budget: 0,
+            recorder: None,
             stats: CacheStats::default(),
         }
     }
@@ -681,6 +686,28 @@ impl FrontierCache {
         self.mem_budget
     }
 
+    /// Attach a flight recorder: every subsequent build / hit / evict /
+    /// delta-apply emits a [`TraceEvent`] scoped to `scope` (the cache
+    /// owner — a cohort id or an app id).  Recording never changes cache
+    /// behaviour or statistics.
+    pub fn set_recorder(&mut self, recorder: Arc<FlightRecorder>,
+                        scope: &str) {
+        self.recorder = Some((recorder, scope.to_string()));
+    }
+
+    fn emit(&self, event: TraceEvent) {
+        if let Some((rec, _)) = &self.recorder {
+            rec.emit(event);
+        }
+    }
+
+    fn scope(&self) -> String {
+        self.recorder
+            .as_ref()
+            .map(|(_, s)| s.clone())
+            .unwrap_or_default()
+    }
+
     /// Accounted bytes of all resident frontiers:
     /// [`FRONTIER_BASE_BYTES`] + points × [`FRONTIER_POINT_BYTES`] each.
     pub fn resident_bytes(&self) -> u64 {
@@ -706,7 +733,13 @@ impl FrontierCache {
                 .min_by_key(|(_, e)| e.used)
                 .map(|(k, _)| k.clone())
             {
-                self.map.remove(&lru);
+                if let Some(e) = self.map.remove(&lru) {
+                    self.emit(TraceEvent::FrontierEvict {
+                        scope: self.scope(),
+                        bucket: lru.1.clone(),
+                        points: e.frontier.len() as u64,
+                    });
+                }
                 self.stats.evictions += 1;
             }
         }
@@ -731,7 +764,13 @@ impl FrontierCache {
             Some(e) if e.scope_fp == fp => {
                 e.used = tick;
                 self.stats.hits += 1;
-                return Arc::clone(&e.frontier);
+                let f = Arc::clone(&e.frontier);
+                self.emit(TraceEvent::FrontierHit {
+                    scope: self.scope(),
+                    bucket: bucket.id(),
+                    points: f.len() as u64,
+                });
+                return f;
             }
             Some(_) => {
                 self.map.remove(&key);
@@ -748,13 +787,25 @@ impl FrontierCache {
                 .min_by_key(|(_, e)| e.used)
                 .map(|(k, _)| k.clone())
             {
-                self.map.remove(&lru);
+                if let Some(e) = self.map.remove(&lru) {
+                    self.emit(TraceEvent::FrontierEvict {
+                        scope: self.scope(),
+                        bucket: lru.1.clone(),
+                        points: e.frontier.len() as u64,
+                    });
+                }
                 self.stats.evictions += 1;
             }
         }
         let f = Arc::new(ParetoFrontier::build(space, objective, sspace, bucket));
         self.stats.builds += 1;
         self.stats.candidates_enumerated += f.space_size as u64;
+        self.emit(TraceEvent::FrontierBuild {
+            scope: self.scope(),
+            bucket: bucket.id(),
+            points: f.len() as u64,
+            candidates: f.space_size as u64,
+        });
         self.map.insert(
             key,
             CacheEntry {
@@ -827,6 +878,16 @@ impl FrontierCache {
             e.scope_fp = fp_new;
         }
         self.enforce_mem_budget();
+        // One event per effective application; idempotent re-applies on a
+        // shared cache (everything untouched) stay silent.
+        if out.updated + out.dropped > 0 {
+            self.emit(TraceEvent::FrontierDelta {
+                scope: self.scope(),
+                updated: out.updated,
+                points_touched: out.points_touched,
+                rebuild_points: out.rebuild_points,
+            });
+        }
         out
     }
 

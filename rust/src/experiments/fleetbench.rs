@@ -37,8 +37,11 @@ use crate::measurements::Lut;
 use crate::model::Registry;
 use crate::optimizer::{Objective, SearchSpace};
 use crate::perf;
+use crate::telemetry::trace::FlightRecorder;
 use crate::util::json::{self, Value};
-use crate::util::stats::Percentile;
+use crate::util::stats::{LatencyStats, Percentile};
+
+use std::sync::Arc;
 
 use super::optbench::{objective_label, SIM_NS_PER_EVAL};
 use super::r3;
@@ -247,6 +250,13 @@ pub struct FleetBenchReport {
     /// Byte budget each cohort cache runs under
     /// ([`FleetConfig::frontier_mem_budget_bytes`] split evenly).
     pub mem_budget_per_cohort: u64,
+    /// Fleet-wide regret distribution (%) from the per-cohort telemetry
+    /// rollup — bounded log-scaled histograms merged across every cohort
+    /// sink; `None` when no regret ticks ran.
+    pub rollup_regret: Option<LatencyStats>,
+    /// Bytes resident across every cohort telemetry sink (constant in
+    /// sample count).
+    pub telemetry_resident_bytes: usize,
 }
 
 /// The full-profile oracle's selection: complete search over the device's
@@ -267,8 +277,23 @@ fn oracle_pick(fleet: &Fleet, device_idx: usize, true_lut: &Lut,
 /// Run the fleet benchmark.
 pub fn run(registry: &Registry, cfg: &FleetBenchConfig)
            -> Result<FleetBenchReport> {
+    run_traced(registry, cfg, None)
+}
+
+/// [`run`] with an optional flight recorder: cohort-transfer provenance,
+/// every frontier-cache transition, every per-device decide outcome and
+/// the post-storm correction land in the trace, stamped with the storm's
+/// deterministic virtual clock (µs = tick × tick_ms × 1000).  Recording
+/// never changes a decision, a cache counter, or the report.
+pub fn run_traced(registry: &Registry, cfg: &FleetBenchConfig,
+                  recorder: Option<&Arc<FlightRecorder>>)
+                  -> Result<FleetBenchReport> {
     let mut fleet = Fleet::build(std::sync::Arc::new(registry.clone()),
                                  cfg.fleet.clone())?;
+    if let Some(rec) = recorder {
+        rec.set_now_us(0);
+        fleet.attach_recorder(rec);
+    }
     let space = SearchSpace::family(&cfg.family);
     let objective = cfg.objective;
 
@@ -321,7 +346,11 @@ pub fn run(registry: &Registry, cfg: &FleetBenchConfig)
     // One RuntimeManager per device over the cohort-shared state.
     let mut managers: Vec<RuntimeManager> = Vec::with_capacity(fleet.len());
     for idx in 0..fleet.len() {
-        managers.push(fleet.manager_for(idx, objective, &space)?);
+        let mut m = fleet.manager_for(idx, objective, &space)?;
+        if let Some(rec) = recorder {
+            m = m.with_recorder(Arc::clone(rec), &fleet.devices[idx].id);
+        }
+        managers.push(m);
     }
 
     // The storm.
@@ -334,12 +363,18 @@ pub fn run(registry: &Registry, cfg: &FleetBenchConfig)
     let mut deploy_faults = 0u64;
     for tick in 0..cfg.ticks {
         let now_ms = tick as f64 * cfg.tick_ms;
+        if let Some(rec) = recorder {
+            rec.set_now_us((now_ms * 1000.0) as u64);
+        }
         let regret_tick = cfg.regret_ticks.contains(&tick);
         for idx in 0..fleet.len() {
             let has_npu = fleet.devices[idx].has_npu();
             let conds = storm_conditions(tick, idx, has_npu);
+            let sink = Arc::clone(&fleet.cohort_of(idx).telemetry);
+            sink.incr("decisions");
             match managers[idx].decide(now_ms, &conds) {
                 Decision::Switch(sw) => {
+                    sink.incr("switches");
                     switches += 1;
                     per_device_switches[idx] += 1;
                     match sw.reason {
@@ -402,12 +437,14 @@ pub fn run(registry: &Registry, cfg: &FleetBenchConfig)
                 // oracle; clamping its regret at 0 keeps the headline mean
                 // from being flattered by deployability faults — the fault
                 // counter, not a negative regret, is their signal.
-                if !admissible {
-                    deploy_faults += 1;
-                    regrets.push(r.max(0.0));
+                let rv = if admissible {
+                    r
                 } else {
-                    regrets.push(r);
-                }
+                    deploy_faults += 1;
+                    r.max(0.0)
+                };
+                regrets.push(rv);
+                sink.record("regret_pct", 100.0 * rv);
             }
         }
     }
@@ -464,6 +501,9 @@ pub fn run(registry: &Registry, cfg: &FleetBenchConfig)
     // per-manager re-application must be idempotent on the shared caches,
     // and a follow-up idle round must be served entirely from warm
     // frontiers.
+    if let Some(rec) = recorder {
+        rec.set_now_us((cfg.ticks as f64 * cfg.tick_ms * 1000.0) as u64);
+    }
     let delta = LutDelta::engine_scale(CORRECTION_ENGINE, CORRECTION_FACTOR);
     let correction =
         fleet.apply_engine_correction(CORRECTION_ENGINE, CORRECTION_FACTOR);
@@ -514,6 +554,10 @@ pub fn run(registry: &Registry, cfg: &FleetBenchConfig)
     let resident_bytes = fleet.resident_bytes();
     let mem_budget_per_cohort =
         fleet.cohorts.first().map(|c| c.mem_budget()).unwrap_or(0);
+    let rollup = fleet.rollup();
+    let rollup_regret = rollup.stats("regret_pct");
+    let telemetry_resident_bytes: usize =
+        fleet.cohorts.iter().map(|c| c.telemetry.resident_bytes()).sum();
 
     Ok(FleetBenchReport {
         cfg: cfg.clone(),
@@ -550,6 +594,8 @@ pub fn run(registry: &Registry, cfg: &FleetBenchConfig)
         post_correction_builds,
         resident_bytes,
         mem_budget_per_cohort,
+        rollup_regret,
+        telemetry_resident_bytes,
     })
 }
 
@@ -691,10 +737,14 @@ pub fn report_json(r: &FleetBenchReport) -> Value {
 }
 
 /// Print the fleet table; also emit the report as a JSON line and, when
-/// `json_out` is given, write it to that file.
+/// `json_out` is given, write it to that file.  With `trace_out`, the
+/// whole run is flight-recorded and exported as JSON-lines at that path
+/// plus Chrome trace-event JSON (Perfetto-loadable) at
+/// `<trace_out>.chrome.json`.
 pub fn print(registry: &Registry, cfg: &FleetBenchConfig,
-             json_out: Option<&str>) -> Result<()> {
-    let r = run(registry, cfg)?;
+             json_out: Option<&str>, trace_out: Option<&str>) -> Result<()> {
+    let recorder = trace_out.map(|_| Arc::new(FlightRecorder::new()));
+    let r = run_traced(registry, cfg, recorder.as_ref())?;
     println!("FLEET-BENCH — {} devices, {} cohorts, transferred LUTs vs \
               full-profile oracle",
              r.cfg.fleet.population.size, r.cohorts.len());
@@ -733,6 +783,23 @@ pub fn print(registry: &Registry, cfg: &FleetBenchConfig,
     println!("memory: {} resident bytes across {} cohort caches \
               ({} B budget per cohort)",
              r.resident_bytes, r.cohorts.len(), r.mem_budget_per_cohort);
+    if let Some(s) = &r.rollup_regret {
+        println!("telemetry rollup: regret p50 {:.3}% p99 {:.3}% max {:.3}% \
+                  over {} samples merged from {} cohort sinks \
+                  ({} B resident)",
+                 s.median, s.p99, s.max, s.n, r.cohorts.len(),
+                 r.telemetry_resident_bytes);
+    }
+    if let (Some(path), Some(rec)) = (trace_out, &recorder) {
+        std::fs::write(path, rec.to_jsonl())
+            .with_context(|| format!("writing {path}"))?;
+        let chrome = format!("{path}.chrome.json");
+        std::fs::write(&chrome, rec.to_chrome_trace())
+            .with_context(|| format!("writing {chrome}"))?;
+        println!("trace: {} events ({} dropped) to {path}; Chrome trace \
+                  to {chrome}",
+                 rec.len(), rec.dropped());
+    }
     let payload = report_json(&r);
     let line = json::to_string(&payload);
     println!("FLEETBENCH_JSON {line}");

@@ -27,14 +27,17 @@
 
 use anyhow::{ensure, Context, Result};
 
+use std::sync::Arc;
+
 use crate::designspace::{rank, ConditionsBucket, DesignSpace, FrontierCache,
                          LutDelta};
 use crate::device::EngineKind;
-use crate::manager::Conditions;
+use crate::manager::{design_id, Conditions};
 use crate::mdcl;
 use crate::measurements::{Lut, Measurer};
 use crate::model::Registry;
 use crate::optimizer::{Objective, SearchSpace};
+use crate::telemetry::trace::FlightRecorder;
 use crate::util::json::{self, Value};
 use crate::util::stats::Percentile;
 
@@ -232,28 +235,32 @@ pub fn objective_label(o: Objective) -> String {
     }
 }
 
-fn design_id(d: &crate::optimizer::Design) -> String {
-    format!("{}|{}|{}|{}|r={}", d.variant, d.hw.engine.name(), d.hw.threads,
-            d.hw.governor.name(), d.hw.recognition_rate)
-}
-
 use super::r3;
 
 /// Run one (device, app) adaptation replay.
 fn run_app(device: &crate::device::DeviceProfile, registry: &Registry,
            lut: &crate::measurements::Lut, app: &'static str,
-           family: &'static str, objective: Objective) -> Result<AppRow> {
+           family: &'static str, objective: Objective,
+           recorder: Option<&Arc<FlightRecorder>>) -> Result<AppRow> {
     let space = DesignSpace::new(device, registry, lut);
     let sspace = SearchSpace::family(family);
     let mut cache = FrontierCache::new()
         .with_mem_budget(APP_CACHE_BUDGET_BYTES);
+    if let Some(rec) = recorder {
+        cache.set_recorder(Arc::clone(rec), app);
+    }
     let mut events = Vec::new();
     let mut full_total = 0usize;
     let mut frontier_total = 0usize;
     let mut space_size = 0usize;
     let mut frontier_size_idle = 0usize;
 
-    for ev in event_sequence() {
+    for (i, ev) in event_sequence().into_iter().enumerate() {
+        // One virtual millisecond per adaptation event keeps the Chrome
+        // trace timeline readable; opt-bench has no timeline of its own.
+        if let Some(rec) = recorder {
+            rec.set_now_us(i as u64 * 1_000);
+        }
         let bucket = ConditionsBucket::of(&ev.conds);
         let rep = bucket.representative();
 
@@ -326,6 +333,9 @@ fn run_app(device: &crate::device::DeviceProfile, registry: &Registry,
     // Each must keep every cached frontier warm and touch strictly fewer
     // points than the full rebuilds it replaces — the CI perf gate,
     // golden-pinned in smoke mode.
+    if let Some(rec) = recorder {
+        rec.set_now_us(event_sequence().len() as u64 * 1_000);
+    }
     let mut corrections = Vec::new();
     let mut apply = |cur: &Lut, next: &Lut, delta: &LutDelta,
                      name: &'static str| -> Result<CorrectionRow> {
@@ -421,6 +431,15 @@ fn run_app(device: &crate::device::DeviceProfile, registry: &Registry,
 
 /// Run the full (device × app) sweep.
 pub fn run(registry: &Registry, cfg: &OptBenchConfig) -> Result<Vec<AppRow>> {
+    run_traced(registry, cfg, None)
+}
+
+/// [`run`] with an optional flight recorder: every per-app frontier-cache
+/// transition (build, hit, delta application) is recorded, scoped by app
+/// id, stamped one virtual millisecond per adaptation event.
+pub fn run_traced(registry: &Registry, cfg: &OptBenchConfig,
+                  recorder: Option<&Arc<FlightRecorder>>)
+                  -> Result<Vec<AppRow>> {
     let mut rows = Vec::new();
     for device_name in &cfg.devices {
         let device = mdcl::detect(device_name)?;
@@ -429,7 +448,8 @@ pub fn run(registry: &Registry, cfg: &OptBenchConfig) -> Result<Vec<AppRow>> {
             .with_noise_sigma(cfg.noise_sigma)
             .measure_all()?;
         for (app, family, objective) in canonical_mix(cfg.n_apps) {
-            match run_app(&device, registry, &lut, app, family, objective) {
+            match run_app(&device, registry, &lut, app, family, objective,
+                          recorder) {
                 Ok(row) => rows.push(row),
                 // A family can be undeployable on a low-end profile (the
                 // Fig 4 filter); the mix degrades gracefully, like the
@@ -556,10 +576,13 @@ pub fn report_json(rows: &[AppRow], cfg: &OptBenchConfig) -> Value {
 }
 
 /// Print the adaptation-cost table; also emit the rows as a JSON line and,
-/// when `json_out` is given, write them to that file.
+/// when `json_out` is given, write them to that file.  With `trace_out`,
+/// the run is flight-recorded and exported as JSON-lines at that path
+/// plus Chrome trace-event JSON at `<trace_out>.chrome.json`.
 pub fn print(registry: &Registry, cfg: &OptBenchConfig,
-             json_out: Option<&str>) -> Result<()> {
-    let rows = run(registry, cfg)?;
+             json_out: Option<&str>, trace_out: Option<&str>) -> Result<()> {
+    let recorder = trace_out.map(|_| Arc::new(FlightRecorder::new()));
+    let rows = run_traced(registry, cfg, recorder.as_ref())?;
     println!("OPT-BENCH — full σ-space search vs cached Pareto-frontier \
               walk per adaptation event");
     println!("{:<15} {:<16} {:>5} {:>5} | {:>7} {:>7} {:>5} {:>4} | {:>9} \
@@ -593,6 +616,16 @@ pub fn print(registry: &Registry, cfg: &OptBenchConfig,
                  r.app, r.corrections.len(), touched, rebuild,
                  r.corrections.iter().map(|c| c.updated).max().unwrap_or(0),
                  r.resident_bytes, r.mem_budget);
+    }
+    if let (Some(path), Some(rec)) = (trace_out, &recorder) {
+        std::fs::write(path, rec.to_jsonl())
+            .with_context(|| format!("writing {path}"))?;
+        let chrome = format!("{path}.chrome.json");
+        std::fs::write(&chrome, rec.to_chrome_trace())
+            .with_context(|| format!("writing {chrome}"))?;
+        println!("trace: {} events ({} dropped) to {path}; Chrome trace \
+                  to {chrome}",
+                 rec.len(), rec.dropped());
     }
     let payload = report_json(&rows, cfg);
     let line = json::to_string(&payload);

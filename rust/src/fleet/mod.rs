@@ -52,6 +52,8 @@ use crate::manager::{Conditions, RuntimeManager};
 use crate::measurements::{Lut, Measurer};
 use crate::model::Registry;
 use crate::optimizer::{Design, Objective, SearchSpace};
+use crate::telemetry::trace::{round3, FlightRecorder, TraceEvent};
+use crate::telemetry::Telemetry;
 
 /// Fleet construction parameters.
 #[derive(Debug, Clone)]
@@ -106,6 +108,9 @@ pub struct Cohort {
     /// Per-engine transfer provenance at cohort level (distance /
     /// confidence are the worst member's).
     pub transfer: BTreeMap<EngineKind, EngineTransfer>,
+    /// Cohort-local metrics sink (bounded histograms); the fleet-wide
+    /// view is the merge of every cohort's — see [`Fleet::rollup`].
+    pub telemetry: Arc<Telemetry>,
 }
 
 impl Cohort {
@@ -151,6 +156,9 @@ pub struct Fleet {
     pub device_cohort: Vec<usize>,
     /// Shared model registry.
     pub registry: Arc<Registry>,
+    /// Attached flight recorder ([`Fleet::attach_recorder`]); fleet-level
+    /// events (engine corrections) are emitted here when set.
+    recorder: Option<Arc<FlightRecorder>>,
 }
 
 impl Fleet {
@@ -217,10 +225,56 @@ impl Fleet {
                         .with_mem_budget(per_cohort_budget))),
                 members,
                 transfer: tlut.engines,
+                telemetry: Arc::new(Telemetry::new()),
                 key,
             });
         }
-        Ok(Fleet { cfg, devices, cohorts, device_cohort, registry })
+        Ok(Fleet { cfg, devices, cohorts, device_cohort, registry,
+                   recorder: None })
+    }
+
+    /// Attach a flight recorder to every cohort's shared frontier cache
+    /// (scope = cohort id) and emit each cohort's transfer provenance —
+    /// a [`TraceEvent::CohortTransfer`] per cohort in canonical order,
+    /// followed by a [`TraceEvent::ProbeFallback`] per probed engine.
+    /// Recording never changes selections or cache behaviour.
+    pub fn attach_recorder(&mut self, recorder: &Arc<FlightRecorder>) {
+        self.recorder = Some(Arc::clone(recorder));
+        for cohort in &self.cohorts {
+            cohort
+                .cache
+                .lock()
+                .unwrap()
+                .set_recorder(Arc::clone(recorder), &cohort.id);
+            recorder.emit(TraceEvent::CohortTransfer {
+                cohort: cohort.id.clone(),
+                members: cohort.members.len() as u64,
+                min_confidence: round3(cohort.min_confidence()),
+                probed: cohort.probed(),
+            });
+            for (kind, t) in &cohort.transfer {
+                if t.probed {
+                    recorder.emit(TraceEvent::ProbeFallback {
+                        cohort: cohort.id.clone(),
+                        engine: kind.name().to_string(),
+                        probes: t.probes as u64,
+                        correction: round3(t.correction),
+                    });
+                }
+            }
+        }
+    }
+
+    /// The fleet-wide telemetry rollup: every cohort's sink merged into
+    /// one (counters add, latency histograms merge bucket-wise) — the
+    /// population view stays `O(metrics × buckets)` no matter how many
+    /// devices or samples fed the cohort sinks.
+    pub fn rollup(&self) -> Telemetry {
+        let total = Telemetry::new();
+        for c in &self.cohorts {
+            total.merge_from(&c.telemetry);
+        }
+        total
     }
 
     /// Number of devices.
@@ -313,6 +367,16 @@ impl Fleet {
             };
             cohort.lut = new_lut;
             total.absorb(outcome);
+        }
+        // The per-cohort `FrontierDelta` events above come from the
+        // caches themselves; this is the fleet-level aggregate.
+        if let Some(rec) = &self.recorder {
+            rec.emit(TraceEvent::Correction {
+                engine: engine.name().to_string(),
+                factor,
+                updated: total.updated,
+                points_touched: total.points_touched,
+            });
         }
         total
     }
@@ -439,6 +503,53 @@ mod tests {
         assert_eq!(fleet.cache_stats().builds, builds_before,
                    "no cold start after the correction");
         assert!(fleet.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn recorder_captures_transfer_and_correction_events() {
+        let mut fleet = small_fleet(32);
+        let rec = Arc::new(FlightRecorder::new());
+        fleet.attach_recorder(&rec);
+        let transfers = rec
+            .records()
+            .iter()
+            .filter(|r| matches!(r.event, TraceEvent::CohortTransfer { .. }))
+            .count();
+        assert_eq!(transfers, fleet.cohorts.len());
+        let space = SearchSpace::family("mobilenet_v2_100");
+        for idx in 0..fleet.len() {
+            fleet.select(idx, obj(), &space, &Conditions::idle()).unwrap();
+        }
+        // Build/hit events mirror the cache counters exactly.
+        let events = rec.records();
+        let builds = events
+            .iter()
+            .filter(|r| matches!(r.event, TraceEvent::FrontierBuild { .. }))
+            .count();
+        let hits = events
+            .iter()
+            .filter(|r| matches!(r.event, TraceEvent::FrontierHit { .. }))
+            .count();
+        let stats = fleet.cache_stats();
+        assert_eq!(builds as u64, stats.builds);
+        assert_eq!(hits as u64, stats.hits);
+        fleet.apply_engine_correction(EngineKind::Cpu, 1.25);
+        assert!(rec
+            .records()
+            .iter()
+            .any(|r| matches!(r.event, TraceEvent::Correction { .. })));
+    }
+
+    #[test]
+    fn cohort_rollup_merges_sinks() {
+        let fleet = small_fleet(16);
+        for (i, c) in fleet.cohorts.iter().enumerate() {
+            c.telemetry.incr("decisions");
+            c.telemetry.record("regret_pct", 1.0 + i as f64);
+        }
+        let total = fleet.rollup();
+        assert_eq!(total.counter("decisions"), fleet.cohorts.len() as u64);
+        assert_eq!(total.stats("regret_pct").unwrap().n, fleet.cohorts.len());
     }
 
     #[test]

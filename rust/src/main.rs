@@ -9,11 +9,15 @@
 //! oodin optimize --use-case <file.json>      Run System Optimisation
 //! oodin resources                            Print the detected R per device
 //! oodin serve   --family <f> [--precision p] [--requests n] [--device d]
-//! oodin serve-bench [--smoke] [--device d] [--rate r] [--duration ms] [--json f]
+//! oodin serve-bench [--smoke] [--device d] [--rate r] [--duration ms] [--json f] [--trace f]
 //! oodin multi   [--smoke] [--device d] [--apps n] [--windows w] [--json f]
-//! oodin opt-bench [--smoke] [--device d] [--apps n] [--json f]
-//! oodin fleet-bench [--smoke] [--devices n] [--seed s] [--family f] [--json f]
+//! oodin opt-bench [--smoke] [--device d] [--apps n] [--json f] [--trace f]
+//! oodin fleet-bench [--smoke] [--devices n] [--seed s] [--family f] [--json f] [--trace f]
 //! ```
+//!
+//! `--trace <path>` (the three benches above) writes the decision flight
+//! recorder as JSON-lines to `<path>` and a Perfetto/Chrome-loadable
+//! trace to `<path>.chrome.json`.
 //!
 //! Every command runs hermetically when `artifacts/` is absent: the
 //! synthetic registry + SimBackend stand in for the AOT zoo + PJRT.
@@ -115,11 +119,13 @@ fn print_usage() {
          \x20 optimize --use-case <file.json>    run System Optimisation\n\
          \x20 resources                           print resource model R per device\n\
          \x20 serve    --family <f> [--precision p] [--requests n] [--device d]  serving demo\n\
-         \x20 serve-bench [--smoke] [--device d] [--rate r] [--duration ms] [--json f]  pipeline load bench\n\
+         \x20 serve-bench [--smoke] [--device d] [--rate r] [--duration ms] [--json f] [--trace f]  pipeline load bench\n\
          \x20 multi    [--smoke] [--device d] [--apps n] [--windows w] [--json f]  multi-app contention table\n\
-         \x20 opt-bench [--smoke] [--device d] [--apps n] [--json f]  full-search vs frontier-walk adaptation cost\n\
-         \x20 fleet-bench [--smoke] [--devices n] [--seed s] [--family f] [--json f]  population-scale LUT transfer + cohort caches\n\
+         \x20 opt-bench [--smoke] [--device d] [--apps n] [--json f] [--trace f]  full-search vs frontier-walk adaptation cost\n\
+         \x20 fleet-bench [--smoke] [--devices n] [--seed s] [--family f] [--json f] [--trace f]  population-scale LUT transfer + cohort caches\n\
          \n\
+         --trace <path> (benches) writes a decision flight-recorder trace as\n\
+         JSON-lines plus a Perfetto-loadable <path>.chrome.json\n\
          (no artifacts/?  everything runs on the hermetic SimBackend)"
     );
 }
@@ -234,7 +240,7 @@ fn cmd_opt_bench(args: &Args) -> Result<()> {
     if let Some(n) = args.flag("apps") {
         cfg.n_apps = n.parse().context("--apps")?;
     }
-    optbench::print(&registry, &cfg, args.flag("json"))
+    optbench::print(&registry, &cfg, args.flag("json"), args.flag("trace"))
 }
 
 fn cmd_fleet_bench(args: &Args) -> Result<()> {
@@ -259,7 +265,7 @@ fn cmd_fleet_bench(args: &Args) -> Result<()> {
     if args.has("devices") || args.has("seed") || args.has("family") {
         cfg.enforce_regret_pct = None;
     }
-    fleetbench::print(&registry, &cfg, args.flag("json"))
+    fleetbench::print(&registry, &cfg, args.flag("json"), args.flag("trace"))
 }
 
 fn cmd_serve_bench(args: &Args) -> Result<()> {
@@ -283,7 +289,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     if let Some(s) = args.flag("seed") {
         cfg.seed = s.parse().context("--seed")?;
     }
-    loadgen::print(&cfg, args.flag("json"))
+    loadgen::print(&cfg, args.flag("json"), args.flag("trace"))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

@@ -31,7 +31,27 @@ use crate::measurements::Lut;
 use crate::model::Registry;
 use crate::optimizer::{Design, Objective, SearchSpace};
 use crate::perf;
+use crate::telemetry::trace::{round3, FlightRecorder, TraceEvent};
 use crate::util::stats::{Percentile, RollingWindow};
+
+/// Canonical design id used across trace events and experiment reports:
+/// `variant|engine|threads|governor|r=rate`.
+pub fn design_id(d: &Design) -> String {
+    format!("{}|{}|{}|{}|r={}", d.variant, d.hw.engine.name(), d.hw.threads,
+            d.hw.governor.name(), d.hw.recognition_rate)
+}
+
+/// Canonical hold-reason label (the trace schema's `reason` field).
+pub fn hold_label(r: &HoldReason) -> &'static str {
+    match r {
+        HoldReason::NotDue => "not_due",
+        HoldReason::Cooldown { .. } => "cooldown",
+        HoldReason::NoTrigger => "no_trigger",
+        HoldReason::NoAlternative => "no_alternative",
+        HoldReason::CurrentStillBest => "current_still_best",
+        HoldReason::BelowHysteresis { .. } => "below_hysteresis",
+    }
+}
 
 /// Condition-adjusted LUT latency of a design: `lut(stat) · 2^load /
 /// thermal_scale` on the design's engine.  This is the Runtime Manager's
@@ -186,6 +206,9 @@ pub struct RuntimeManager {
     /// [`RuntimeManager::with_frontier_cache`] so frontier builds amortise
     /// across a whole population of near-identical devices.
     frontiers: Arc<Mutex<FrontierCache>>,
+    /// Attached flight recorder plus this manager's scope label (device
+    /// or app id); every decide outcome is emitted when set.
+    recorder: Option<(Arc<FlightRecorder>, String)>,
     /// History of all switches (experiment reporting).
     pub switches: Vec<Switch>,
 }
@@ -209,6 +232,7 @@ impl RuntimeManager {
             degradation_start_ms: None,
             window: RollingWindow::new(policy.latency_window.max(1)),
             frontiers: Arc::new(Mutex::new(FrontierCache::new())),
+            recorder: None,
             policy,
             switches: Vec::new(),
         }
@@ -229,6 +253,17 @@ impl RuntimeManager {
     pub fn with_frontier_cache(mut self,
                                cache: Arc<Mutex<FrontierCache>>) -> Self {
         self.frontiers = cache;
+        self
+    }
+
+    /// Attach a flight recorder under `scope` (this manager's device or
+    /// app id): every [`RuntimeManager::decide`] outcome — hold with
+    /// trigger + reason, switch, and its `explain` record — is emitted as
+    /// a [`TraceEvent`].  Recording never changes decisions or cache
+    /// behaviour.
+    pub fn with_recorder(mut self, recorder: Arc<FlightRecorder>,
+                         scope: &str) -> Self {
+        self.recorder = Some((recorder, scope.to_string()));
         self
     }
 
@@ -262,14 +297,37 @@ impl RuntimeManager {
     /// inside budget at the exact conditions but outside at the bucket
     /// centre may be missed).
     pub fn best_under(&self, conds: &Conditions) -> Result<Design> {
+        self.best_under_explained(conds).map(|(d, _, _)| d)
+    }
+
+    /// [`best_under`](Self::best_under) plus the explain payload: the
+    /// bucket id of the frontier slice walked and the frontier's length
+    /// (alternatives considered).  One code path serves both so tracing
+    /// can never diverge from the selection it describes.
+    fn best_under_explained(&self, conds: &Conditions)
+                            -> Result<(Design, String, usize)> {
         let bucket = ConditionsBucket::of(conds);
         let space = DesignSpace::new(&self.device, &self.registry, &self.lut);
         let frontier = self.frontiers.lock().unwrap().frontier(
             &space, self.objective, &self.space, &bucket);
         crate::designspace::select_from_frontier(&frontier, &self.lut,
                                                  self.objective, conds)
-            .map(|c| c.design.clone())
+            .map(|c| (c.design.clone(), bucket.id(), frontier.len()))
             .ok_or_else(|| anyhow::anyhow!("no feasible design under conditions"))
+    }
+
+    /// Emit a hold event (when a recorder is attached) and return the
+    /// hold decision.  `trigger` is what fired before the manager held
+    /// (`load`, `degradation`) or `none` for pre-trigger holds.
+    fn hold(&self, trigger: &str, reason: HoldReason) -> Decision {
+        if let Some((rec, scope)) = &self.recorder {
+            rec.emit(TraceEvent::Hold {
+                scope: scope.clone(),
+                trigger: trigger.to_string(),
+                reason: hold_label(&reason).to_string(),
+            });
+        }
+        Decision::Hold(reason)
     }
 
     /// Frontier-cache effectiveness counters (adaptation-cost telemetry
@@ -318,11 +376,11 @@ impl RuntimeManager {
     /// `Cooldown`) — the signal joint re-adaptation consumes.
     pub fn decide(&mut self, now_ms: f64, conds: &Conditions) -> Decision {
         if now_ms - self.last_check_ms < self.policy.check_interval_ms {
-            return Decision::Hold(HoldReason::NotDue);
+            return self.hold("none", HoldReason::NotDue);
         }
         self.last_check_ms = now_ms;
         if now_ms - self.last_switch_ms < self.policy.cooldown_ms {
-            return Decision::Hold(HoldReason::Cooldown {
+            return self.hold("none", HoldReason::Cooldown {
                 remaining_ms: self.policy.cooldown_ms - (now_ms - self.last_switch_ms),
             });
         }
@@ -359,8 +417,9 @@ impl RuntimeManager {
         let degradation_confirmed = self.violations >= self.policy.confirmations;
 
         if !load_changed && !degradation_confirmed {
-            return Decision::Hold(HoldReason::NoTrigger);
+            return self.hold("none", HoldReason::NoTrigger);
         }
+        let trigger = if degradation_confirmed { "degradation" } else { "load" };
         if load_changed {
             for k in EngineKind::ALL {
                 self.last_loads.insert(k, conds.load(k));
@@ -386,20 +445,22 @@ impl RuntimeManager {
             }
         }
         let conds = &eff;
-        let Ok(best) = self.best_under(conds) else {
-            return Decision::Hold(HoldReason::NoAlternative);
+        let Ok((best, bucket_id, frontier_len)) =
+            self.best_under_explained(conds)
+        else {
+            return self.hold(trigger, HoldReason::NoAlternative);
         };
         if best == self.current {
-            return Decision::Hold(HoldReason::CurrentStillBest);
+            return self.hold(trigger, HoldReason::CurrentStillBest);
         }
         let (Some(cur_adj), Some(best_adj)) = (
             self.adjusted_latency(&self.current, conds),
             self.adjusted_latency(&best, conds),
         ) else {
-            return Decision::Hold(HoldReason::NoAlternative);
+            return self.hold(trigger, HoldReason::NoAlternative);
         };
         if cur_adj / best_adj < self.policy.min_improvement {
-            return Decision::Hold(HoldReason::BelowHysteresis {
+            return self.hold(trigger, HoldReason::BelowHysteresis {
                 predicted_gain: cur_adj / best_adj,
             });
         }
@@ -420,6 +481,23 @@ impl RuntimeManager {
             detection_ms,
             reason,
         };
+        if let Some((rec, scope)) = &self.recorder {
+            rec.emit(TraceEvent::Switch {
+                scope: scope.clone(),
+                from: design_id(&sw.from),
+                to: design_id(&sw.to),
+                reason: trigger.to_string(),
+                detection_ms: sw.detection_ms,
+            });
+            rec.emit(TraceEvent::Explain {
+                scope: scope.clone(),
+                bucket: bucket_id,
+                chosen: design_id(&sw.to),
+                score: round3(best_adj),
+                frontier: frontier_len as u64,
+                alternatives: frontier_len.saturating_sub(1) as u64,
+            });
+        }
         self.current = best;
         self.last_switch_ms = now_ms;
         self.violations = 0;

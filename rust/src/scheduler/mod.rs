@@ -40,7 +40,8 @@ use crate::designspace::{CacheStats, DeltaOutcome, DesignSpace,
                          FrontierCache, LutDelta};
 use crate::device::{DeviceProfile, EngineKind};
 use crate::devicesim::DeviceSim;
-use crate::manager::{Conditions, Policy, Reason, Switch};
+use crate::manager::{design_id, Conditions, Policy, Reason, Switch};
+use crate::telemetry::trace::{FlightRecorder, TraceEvent};
 use crate::measurements::Lut;
 use crate::model::Registry;
 use crate::optimizer::{Design, Objective};
@@ -117,6 +118,10 @@ pub struct Scheduler {
     /// Per-app Pareto frontiers shared across every admission and
     /// re-adaptation event (the design-space layer's cache).
     frontiers: Arc<Mutex<FrontierCache>>,
+    /// Attached flight recorder plus this scheduler's scope label;
+    /// admissions, arbitration windows and coordinated switches are
+    /// emitted when set.
+    recorder: Option<(Arc<FlightRecorder>, String)>,
     /// Coordinated reconfigurations issued so far: (app_id, switch).
     pub switches: Vec<(String, Switch)>,
 }
@@ -137,8 +142,23 @@ impl Scheduler {
             last_loads: BTreeMap::new(),
             last_adapt_ms: f64::NEG_INFINITY,
             frontiers: Arc::new(Mutex::new(FrontierCache::new())),
+            recorder: None,
             switches: Vec::new(),
         }
+    }
+
+    /// Attach a flight recorder under `scope` (the scheduler's scenario
+    /// label): admission outcomes, arbitration windows and coordinated
+    /// switches are emitted, and the shared frontier cache's
+    /// build/hit/evict/delta transitions are recorded under the same
+    /// scope.  Recording never changes scheduling decisions.
+    pub fn set_recorder(&mut self, recorder: Arc<FlightRecorder>,
+                        scope: &str) {
+        self.frontiers
+            .lock()
+            .unwrap()
+            .set_recorder(Arc::clone(&recorder), scope);
+        self.recorder = Some((recorder, scope.to_string()));
     }
 
     /// Override the global resource budget.
@@ -247,7 +267,15 @@ impl Scheduler {
         let assignment = match self.joint().search(&descs, conds) {
             Ok(a) => a,
             Err(e) => {
-                return Ok(Admission::Rejected { reason: format!("{e:#}") })
+                let reason = format!("{e:#}");
+                if let Some((rec, _)) = &self.recorder {
+                    rec.emit(TraceEvent::Admission {
+                        scope: desc.app_id.clone(),
+                        outcome: "rejected".to_string(),
+                        detail: reason.clone(),
+                    });
+                }
+                return Ok(Admission::Rejected { reason });
             }
         };
         self.apply(&assignment, now_ms, Reason::LoadChange);
@@ -263,6 +291,17 @@ impl Scheduler {
             .iter()
             .find(|p| p.app_id == desc.app_id)
             .expect("joint assignment covers every descriptor");
+        if let Some((rec, _)) = &self.recorder {
+            rec.emit(TraceEvent::Admission {
+                scope: desc.app_id.clone(),
+                outcome: if newcomer.degraded {
+                    "admitted_degraded".to_string()
+                } else {
+                    "admitted".to_string()
+                },
+                detail: design_id(&newcomer.design),
+            });
+        }
         self.apps.push(AppState {
             desc,
             design: newcomer.design.clone(),
@@ -299,6 +338,18 @@ impl Scheduler {
                     reason,
                 };
                 app.design = p.design.clone();
+                if let Some((rec, _)) = &self.recorder {
+                    rec.emit(TraceEvent::Switch {
+                        scope: p.app_id.clone(),
+                        from: design_id(&sw.from),
+                        to: design_id(&sw.to),
+                        reason: match reason {
+                            Reason::LoadChange => "load".to_string(),
+                            Reason::Degradation => "degradation".to_string(),
+                        },
+                        detection_ms: sw.detection_ms,
+                    });
+                }
                 self.switches.push((p.app_id.clone(), sw.clone()));
                 issued.push((p.app_id.clone(), sw));
             }
@@ -323,6 +374,15 @@ impl Scheduler {
             })
             .collect();
         let window = self.arbiter.plan(&plan_input);
+        if let Some((rec, scope)) = &self.recorder {
+            let grants: usize =
+                window.slices.iter().map(|s| s.grants.len()).sum();
+            rec.emit(TraceEvent::Arbitration {
+                scope: scope.clone(),
+                window_ms: self.arbiter.window_ms,
+                grants: grants as u64,
+            });
+        }
 
         let at_ms = sim.clock.now_ms();
         let mut stats: BTreeMap<String, (u64, u64, f64)> = BTreeMap::new();
@@ -556,6 +616,50 @@ mod tests {
         // Within the cooldown no further joint switches are issued.
         let again = sched.observe(5100.0, &conds);
         assert!(again.is_empty());
+    }
+
+    #[test]
+    fn recorder_captures_admissions_windows_and_switches() {
+        let (dev, reg, lut) = setup();
+        let mut sched = Scheduler::new(Arc::clone(&dev), reg, lut);
+        let rec = Arc::new(FlightRecorder::new());
+        sched.set_recorder(Arc::clone(&rec), "multi");
+        let idle = Conditions::idle();
+        sched.register(desc("a", "mobilenet_v2_100", 60.0, 1e6), 0.0, &idle)
+            .unwrap();
+        sched.register(desc("ghost", "no_such_family", 30.0, 50.0), 0.0,
+                       &idle)
+            .unwrap();
+        let admissions: Vec<String> = rec
+            .records()
+            .iter()
+            .filter_map(|r| match &r.event {
+                TraceEvent::Admission { outcome, .. } => {
+                    Some(outcome.clone())
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(admissions.len(), 2);
+        assert!(admissions[0].starts_with("admitted"));
+        assert_eq!(admissions[1], "rejected");
+        let mut sim = DeviceSim::new((*dev).clone(), Clock::sim());
+        sched.run_window(&mut sim).unwrap();
+        assert!(rec
+            .records()
+            .iter()
+            .any(|r| matches!(r.event, TraceEvent::Arbitration { .. })));
+        // A coordinated re-adaptation switch is traced per app.
+        let e0 = sched.design_of("a").unwrap().hw.engine;
+        let mut conds = Conditions::idle();
+        conds.loads.insert(e0, 3.0);
+        let issued = sched.observe(5000.0, &conds);
+        let switches = rec
+            .records()
+            .iter()
+            .filter(|r| matches!(r.event, TraceEvent::Switch { .. }))
+            .count();
+        assert_eq!(switches, issued.len());
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Fixed-bucket log-scaled latency histograms: the bounded-memory,
+//! mergeable substrate behind [`super::Telemetry`] and the per-cohort
+//! fleet rollups.
+//!
+//! Motivation: the old telemetry sink kept every raw sample in a
+//! `Vec<f64>` per metric — a long-running device recording one latency
+//! per inference grows without bound.  A `LogHistogram` instead buckets
+//! samples on a logarithmic grid with [`SUBBUCKETS_PER_OCTAVE`] buckets
+//! per power of two, so memory is `O(BUCKETS)` regardless of sample
+//! count, and two histograms merge by adding counts — exactly what
+//! population-scale rollups (fleet cohorts → fleet) need.
+//!
+//! **Accuracy contract.** `count`, `sum` (hence the mean), `min` and
+//! `max` are exact.  Quantiles are approximate: a reported quantile is
+//! the geometric midpoint of the sub-bucket holding the ranked sample,
+//! clamped to `[min, max]`, so its relative error versus the exact
+//! sample value is at most `2^(1/SUBBUCKETS_PER_OCTAVE) - 1` — with 16
+//! sub-buckets per octave, **≤ 4.5 %**.  The property suite in
+//! `tests/telemetry_props.rs` enforces this bound against exact
+//! order statistics.
+
+use crate::util::stats::LatencyStats;
+
+/// Log-grid resolution: sub-buckets per power of two.  The documented
+/// quantile error bound is `2^(1/SUBBUCKETS_PER_OCTAVE) - 1` (≈ 4.43 %).
+pub const SUBBUCKETS_PER_OCTAVE: usize = 16;
+
+/// Smallest finite-bucket exponent: values below `2^MIN_EXP` (≈ 1 µs when
+/// samples are milliseconds) land in the underflow bucket.
+pub const MIN_EXP: i32 = -20;
+
+/// Largest finite-bucket exponent: values at or above `2^MAX_EXP`
+/// (≈ 12 days in milliseconds) land in the overflow bucket.
+pub const MAX_EXP: i32 = 30;
+
+/// Total bucket count: the finite log grid plus one underflow and one
+/// overflow bucket.  Memory per histogram is `BUCKETS * 8` bytes of
+/// counts plus a constant header — independent of how many samples are
+/// recorded.
+pub const BUCKETS: usize =
+    (MAX_EXP - MIN_EXP) as usize * SUBBUCKETS_PER_OCTAVE + 2;
+
+/// A bounded, mergeable latency histogram (samples in milliseconds).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+/// The sub-bucket a value falls into.  Non-positive (and NaN) values
+/// share the underflow bucket: latencies are positive by construction
+/// and the recorder must stay total.
+fn bucket_index(v: f64) -> usize {
+    if !(v >= f64::exp2(MIN_EXP as f64)) {
+        return 0; // underflow (also v <= 0 and NaN)
+    }
+    let l = v.log2();
+    if l >= MAX_EXP as f64 {
+        return BUCKETS - 1; // overflow
+    }
+    let grid = ((l - MIN_EXP as f64) * SUBBUCKETS_PER_OCTAVE as f64) as usize;
+    1 + grid.min(BUCKETS - 3)
+}
+
+/// Geometric midpoint of a finite sub-bucket — the value a quantile
+/// query reports for samples in that bucket.
+fn bucket_mid(i: usize) -> f64 {
+    debug_assert!(i >= 1 && i <= BUCKETS - 2);
+    let step = (i - 1) as f64 + 0.5;
+    f64::exp2(MIN_EXP as f64 + step / SUBBUCKETS_PER_OCTAVE as f64)
+}
+
+impl LogHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Record one sample.  O(1); never allocates after construction.
+    /// NaN is recorded as zero (underflow) so the sink stays total.
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_nan() { 0.0 } else { v };
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Samples recorded (exact).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all samples (exact).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Fold another histogram into this one: counts add bucket-wise,
+    /// `sum`/`count`/`min`/`max` combine exactly.  This is the cohort →
+    /// fleet rollup primitive.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    /// Approximate quantile `q ∈ [0, 1]`: the geometric midpoint of the
+    /// sub-bucket holding the sample of rank `ceil(q·count)`, clamped to
+    /// the exact `[min, max]`.  `None` when empty.  Relative error vs
+    /// the exact order statistic is ≤ `2^(1/SUBBUCKETS_PER_OCTAVE) - 1`.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let target = ((q * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let mid = if i == 0 {
+                    self.min
+                } else if i == BUCKETS - 1 {
+                    self.max
+                } else {
+                    bucket_mid(i)
+                };
+                return Some(mid.clamp(self.min, self.max));
+            }
+        }
+        Some(self.max)
+    }
+
+    /// Summarise as [`LatencyStats`]: `min`/`max`/`avg`/`n` exact,
+    /// `median`/`p90`/`p99` within the documented bucket error.  `None`
+    /// when empty.
+    pub fn stats(&self) -> Option<LatencyStats> {
+        if self.count == 0 {
+            return None;
+        }
+        Some(LatencyStats {
+            min: self.min,
+            max: self.max,
+            avg: self.sum / self.count as f64,
+            median: self.quantile(0.5).unwrap(),
+            p90: self.quantile(0.9).unwrap(),
+            p99: self.quantile(0.99).unwrap(),
+            n: self.count as usize,
+        })
+    }
+
+    /// Bytes resident in this histogram — a constant (`BUCKETS` counts
+    /// plus the header), independent of samples recorded.
+    pub fn resident_bytes(&self) -> usize {
+        self.counts.capacity() * std::mem::size_of::<u64>()
+            + std::mem::size_of::<Self>()
+    }
+}
+
+/// Exact quantile of a raw sample set — the reference the property suite
+/// compares [`LogHistogram::quantile`] against (rank semantics match:
+/// the sample of rank `ceil(q·n)`).
+pub fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let target = ((q * sorted.len() as f64).ceil() as usize)
+        .clamp(1, sorted.len());
+    sorted[target - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_moments_survive_bucketing() {
+        let mut h = LogHistogram::new();
+        for x in [1.0, 2.0, 3.0] {
+            h.record(x);
+        }
+        let s = h.stats().unwrap();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.avg, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn quantiles_within_documented_bound() {
+        let bound = f64::exp2(1.0 / SUBBUCKETS_PER_OCTAVE as f64) - 1.0;
+        let mut h = LogHistogram::new();
+        let mut raw: Vec<f64> = (1..=500).map(|i| 0.37 * i as f64).collect();
+        for &x in &raw {
+            h.record(x);
+        }
+        raw.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let exact = exact_quantile(&raw, q);
+            let approx = h.quantile(q).unwrap();
+            let err = (approx / exact - 1.0).abs();
+            assert!(err <= bound, "q={q}: {approx} vs {exact} (err {err})");
+        }
+    }
+
+    #[test]
+    fn merge_is_count_exact() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for i in 0..100 {
+            a.record(1.0 + i as f64);
+            b.record(500.0 + i as f64);
+        }
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.count(), 200);
+        assert_eq!(m.sum(), a.sum() + b.sum());
+        let s = m.stats().unwrap();
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 599.0);
+    }
+
+    #[test]
+    fn degenerate_values_land_in_underflow() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(f64::NAN);
+        assert_eq!(h.count(), 3);
+        // The underflow bucket reports `min` for every quantile.
+        assert_eq!(h.quantile(0.5).unwrap(), h.stats().unwrap().min);
+    }
+
+    #[test]
+    fn memory_is_constant_in_sample_count() {
+        let mut h = LogHistogram::new();
+        let before = h.resident_bytes();
+        for i in 0..10_000 {
+            h.record(0.01 * (i + 1) as f64);
+        }
+        assert_eq!(h.resident_bytes(), before);
+    }
+}

@@ -1,5 +1,18 @@
-//! Lightweight metrics registry: counters + latency samples, thread-safe,
-//! serialisable to JSON for the experiment reports.
+//! Observability layer: bounded metrics plus the decision flight
+//! recorder.
+//!
+//! * [`Telemetry`] — thread-safe counters and latency metrics.  Latency
+//!   samples land in fixed-bucket log-scaled [`histogram::LogHistogram`]s,
+//!   so a metric's memory is `O(buckets)` no matter how many samples a
+//!   long-running device records, and sinks merge — the substrate for
+//!   per-cohort fleet rollups.
+//! * [`trace::FlightRecorder`] — a bounded ring of typed, virtually
+//!   timestamped [`trace::TraceEvent`]s explaining every adaptation
+//!   decision, frontier-cache transition, serving action and fleet
+//!   correction after the fact.
+
+pub mod histogram;
+pub mod trace;
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -7,13 +20,15 @@ use std::sync::Mutex;
 use crate::util::json::{self, Value};
 use crate::util::stats::LatencyStats;
 
+use histogram::LogHistogram;
+
 #[derive(Default)]
 struct Inner {
     counters: BTreeMap<String, u64>,
-    samples: BTreeMap<String, Vec<f64>>,
+    samples: BTreeMap<String, LogHistogram>,
 }
 
-/// Shared metrics sink.
+/// Shared metrics sink with bounded per-metric memory.
 #[derive(Default)]
 pub struct Telemetry {
     inner: Mutex<Inner>,
@@ -41,17 +56,39 @@ impl Telemetry {
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
     }
 
-    /// Record one latency sample (ms) under `name`.
+    /// Record one latency sample (ms) under `name`.  O(1) memory per
+    /// metric: the sample folds into a bounded log-scaled histogram.
     pub fn record(&self, name: &str, ms: f64) {
         let mut g = self.inner.lock().unwrap();
-        g.samples.entry(name.to_string()).or_default().push(ms);
+        g.samples.entry(name.to_string()).or_default().record(ms);
     }
 
     /// Summary of the samples recorded under `name`; `None` when empty.
+    /// `min`/`max`/`avg`/`n` are exact; quantiles carry the histogram's
+    /// documented bucket error (≤ 4.5 % relative).
     pub fn stats(&self, name: &str) -> Option<LatencyStats> {
         let g = self.inner.lock().unwrap();
-        g.samples.get(name).filter(|s| !s.is_empty())
-            .map(|s| LatencyStats::from_samples(s))
+        g.samples.get(name).and_then(|h| h.stats())
+    }
+
+    /// Bytes resident in the latency histograms — proportional to the
+    /// number of *metrics*, never to the number of samples.
+    pub fn resident_bytes(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.samples.values().map(|h| h.resident_bytes()).sum()
+    }
+
+    /// Fold another sink into this one: counters add, histograms merge
+    /// bucket-wise.  The cohort → fleet rollup primitive.
+    pub fn merge_from(&self, other: &Telemetry) {
+        let o = other.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap();
+        for (k, v) in &o.counters {
+            *g.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, h) in &o.samples {
+            g.samples.entry(k.clone()).or_default().merge(h);
+        }
     }
 
     /// Everything as JSON: counters verbatim, samples summarised.
@@ -65,8 +102,7 @@ impl Telemetry {
         let stats: Vec<(String, Value)> = g
             .samples
             .iter()
-            .filter(|(_, s)| !s.is_empty())
-            .map(|(k, s)| (k.clone(), LatencyStats::from_samples(s).to_json()))
+            .filter_map(|(k, h)| h.stats().map(|s| (k.clone(), s.to_json())))
             .collect();
         Value::Obj(vec![
             ("counters".to_string(), Value::Obj(counters)),
@@ -129,5 +165,25 @@ mod tests {
         let v = t.snapshot();
         assert!(v.get("counters").unwrap().get("a").is_some());
         assert!(v.get("latency").unwrap().get("l").is_some());
+    }
+
+    #[test]
+    fn memory_stays_bounded_and_sinks_merge() {
+        let a = Telemetry::new();
+        a.record("lat", 1.0);
+        let footprint = a.resident_bytes();
+        for i in 0..50_000 {
+            a.record("lat", 0.5 + (i % 100) as f64);
+        }
+        assert_eq!(a.resident_bytes(), footprint);
+
+        let b = Telemetry::new();
+        b.incr("req");
+        b.record("lat", 1000.0);
+        a.merge_from(&b);
+        assert_eq!(a.counter("req"), 1);
+        let s = a.stats("lat").unwrap();
+        assert_eq!(s.n, 50_002);
+        assert_eq!(s.max, 1000.0);
     }
 }

@@ -1,0 +1,647 @@
+//! Decision flight recorder: a bounded ring buffer of typed, virtually
+//! timestamped trace events covering every adaptive layer of the stack.
+//!
+//! The runtime layer is driven entirely by monitored conditions —
+//! re-adaptation triggers, hold reasons, frontier walks, admission and
+//! shed decisions — yet counters alone cannot answer *why* a device
+//! switched (or held) after the fact.  A [`FlightRecorder`] captures
+//! that causality as a stream of [`TraceEvent`]s:
+//!
+//! * **adaptation** — decide/hold with trigger + hold-reason, switches,
+//!   and a per-decision `explain` record (chosen design, objective
+//!   score, frontier slice walked, alternatives considered);
+//! * **frontier** — cache build/hit/evict and in-place delta
+//!   application with points touched;
+//! * **serving** — enqueue/shed/batch-launch/complete with deadline
+//!   slack;
+//! * **fleet** — cohort transfer provenance, probe fallbacks, and
+//!   engine-scale corrections;
+//! * **scheduler** — multi-app admission and arbitration windows.
+//!
+//! Payloads are plain strings and numbers, so every layer can emit
+//! without depending on a higher layer's types, and events are stamped
+//! from the recorder's own **virtual clock** (`set_now_us`), driven by
+//! the same deterministic simulated time the benches use — traces are
+//! bit-reproducible and golden-pinnable.  The ring is bounded: past
+//! `capacity`, the oldest event is dropped and counted, never the
+//! process's memory.
+//!
+//! Export is dual-format: JSON-lines (one event per line, fixed key
+//! order — the golden-diffable form) and the Chrome trace-event JSON
+//! that Perfetto (<https://ui.perfetto.dev>) loads directly.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::{self, Value};
+
+/// Default ring capacity — comfortably above the ~5 k events a smoke
+/// bench emits, small enough (a few MB) to embed per device.
+pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
+
+/// Round to 3 decimals (half away from zero) — the float precision the
+/// trace schema pins, matching the experiment reports and the Python
+/// oracles' `r3`.
+pub fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+/// One structured flight-recorder event.  Every variant's payload is
+/// plain data; `scope` identifies the emitting entity (device id, app
+/// name, or cohort id).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// Adaptation held the current design.
+    Hold {
+        /// Device or app the decision belongs to.
+        scope: String,
+        /// What fired (`load`, `degradation`) or `none` when the check
+        /// never reached trigger evaluation.
+        trigger: String,
+        /// Hold reason (`not_due`, `cooldown`, `no_trigger`,
+        /// `no_alternative`, `current_still_best`, `below_hysteresis`).
+        reason: String,
+    },
+    /// Adaptation switched designs.
+    Switch {
+        /// Device or app the decision belongs to.
+        scope: String,
+        /// Design id switched away from.
+        from: String,
+        /// Design id switched to.
+        to: String,
+        /// Trigger that caused the switch (`load`, `degradation`).
+        reason: String,
+        /// Milliseconds from first violation to the switch (0 for pure
+        /// load triggers).
+        detection_ms: f64,
+    },
+    /// Per-decision explanation emitted alongside a switch.
+    Explain {
+        /// Device or app the decision belongs to.
+        scope: String,
+        /// Conditions-bucket id of the frontier slice walked.
+        bucket: String,
+        /// Chosen design id.
+        chosen: String,
+        /// Objective score of the chosen design at the exact observed
+        /// conditions (rounded to 3 decimals).
+        score: f64,
+        /// Pareto-frontier points walked for this decision.
+        frontier: u64,
+        /// Alternatives considered and rejected (`frontier - 1`).
+        alternatives: u64,
+    },
+    /// Frontier cache built a frontier for a bucket (cold miss).
+    FrontierBuild {
+        /// Cache owner (cohort id or app id).
+        scope: String,
+        /// Conditions-bucket id.
+        bucket: String,
+        /// Points on the built frontier.
+        points: u64,
+        /// Candidates enumerated to build it.
+        candidates: u64,
+    },
+    /// Frontier cache served a warm frontier.
+    FrontierHit {
+        /// Cache owner (cohort id or app id).
+        scope: String,
+        /// Conditions-bucket id.
+        bucket: String,
+        /// Points on the served frontier.
+        points: u64,
+    },
+    /// Frontier cache evicted an entry (capacity or memory budget).
+    FrontierEvict {
+        /// Cache owner (cohort id or app id).
+        scope: String,
+        /// Conditions-bucket id evicted.
+        bucket: String,
+        /// Points the evicted frontier held.
+        points: u64,
+    },
+    /// A described LUT delta was applied across a cache's entries.
+    FrontierDelta {
+        /// Cache owner (cohort id or app id).
+        scope: String,
+        /// Entries updated in place.
+        updated: u64,
+        /// Frontier points touched by the in-place pass.
+        points_touched: u64,
+        /// Points a full rebuild of the updated entries would have
+        /// re-enumerated (the work the delta path avoided).
+        rebuild_points: u64,
+    },
+    /// Serving: a request was admitted to the deadline queue.
+    Enqueue {
+        /// Pipeline scope (scenario or device id).
+        scope: String,
+        /// Request class name.
+        class: String,
+        /// Queue depth after admission.
+        depth: u64,
+    },
+    /// Serving: a request was shed at admission.
+    Shed {
+        /// Pipeline scope (scenario or device id).
+        scope: String,
+        /// Request class name.
+        class: String,
+        /// Queue depth at the shed decision.
+        depth: u64,
+    },
+    /// Serving: a batch launched.
+    BatchLaunch {
+        /// Pipeline scope (scenario or device id).
+        scope: String,
+        /// Launch reason (`full`, `max_wait`, `deadline_risk`).
+        reason: String,
+        /// Requests in the batch.
+        size: u64,
+        /// Padding slots added to reach the executable batch shape.
+        padded: u64,
+    },
+    /// Serving: a batch completed.
+    BatchComplete {
+        /// Pipeline scope (scenario or device id).
+        scope: String,
+        /// Requests in the batch.
+        size: u64,
+        /// Deadline slack of the tightest request in µs (negative =
+        /// missed).
+        slack_us: i64,
+    },
+    /// Fleet: one cohort's LUT-transfer summary at build time.
+    CohortTransfer {
+        /// Cohort id.
+        cohort: String,
+        /// Member devices.
+        members: u64,
+        /// Worst per-engine transfer confidence across members
+        /// (rounded to 3 decimals).
+        min_confidence: f64,
+        /// True when any engine fell back to probing.
+        probed: bool,
+    },
+    /// Fleet: the probe fallback ran for one engine of a cohort.
+    ProbeFallback {
+        /// Cohort id.
+        cohort: String,
+        /// Engine probed.
+        engine: String,
+        /// Probe configurations measured.
+        probes: u64,
+        /// Multiplicative correction folded into the engine's
+        /// predictions (rounded to 3 decimals).
+        correction: f64,
+    },
+    /// Fleet: an engine-scale LUT correction swept the cohort caches.
+    Correction {
+        /// Engine corrected.
+        engine: String,
+        /// Multiplicative latency factor applied.
+        factor: f64,
+        /// Cache entries updated in place across all cohorts.
+        updated: u64,
+        /// Frontier points touched across all cohorts.
+        points_touched: u64,
+    },
+    /// Scheduler: a multi-app admission decision.
+    Admission {
+        /// App admitted or rejected.
+        scope: String,
+        /// `admitted`, `admitted_degraded`, or `rejected`.
+        outcome: String,
+        /// Chosen design id, or the rejection reason.
+        detail: String,
+    },
+    /// Scheduler: an arbitration window was planned.
+    Arbitration {
+        /// Scheduler scope label.
+        scope: String,
+        /// Window length (ms).
+        window_ms: f64,
+        /// Slice grants issued in the window.
+        grants: u64,
+    },
+}
+
+impl TraceEvent {
+    /// Canonical event name (the JSON `ev` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEvent::Hold { .. } => "hold",
+            TraceEvent::Switch { .. } => "switch",
+            TraceEvent::Explain { .. } => "explain",
+            TraceEvent::FrontierBuild { .. } => "frontier_build",
+            TraceEvent::FrontierHit { .. } => "frontier_hit",
+            TraceEvent::FrontierEvict { .. } => "frontier_evict",
+            TraceEvent::FrontierDelta { .. } => "frontier_delta",
+            TraceEvent::Enqueue { .. } => "enqueue",
+            TraceEvent::Shed { .. } => "shed",
+            TraceEvent::BatchLaunch { .. } => "batch_launch",
+            TraceEvent::BatchComplete { .. } => "batch_complete",
+            TraceEvent::CohortTransfer { .. } => "cohort_transfer",
+            TraceEvent::ProbeFallback { .. } => "probe_fallback",
+            TraceEvent::Correction { .. } => "correction",
+            TraceEvent::Admission { .. } => "admission",
+            TraceEvent::Arbitration { .. } => "arbitration",
+        }
+    }
+
+    /// Layer category (the Chrome trace `cat` field).
+    pub fn category(&self) -> &'static str {
+        match self {
+            TraceEvent::Hold { .. }
+            | TraceEvent::Switch { .. }
+            | TraceEvent::Explain { .. } => "adaptation",
+            TraceEvent::FrontierBuild { .. }
+            | TraceEvent::FrontierHit { .. }
+            | TraceEvent::FrontierEvict { .. }
+            | TraceEvent::FrontierDelta { .. } => "frontier",
+            TraceEvent::Enqueue { .. }
+            | TraceEvent::Shed { .. }
+            | TraceEvent::BatchLaunch { .. }
+            | TraceEvent::BatchComplete { .. } => "serving",
+            TraceEvent::CohortTransfer { .. }
+            | TraceEvent::ProbeFallback { .. }
+            | TraceEvent::Correction { .. } => "fleet",
+            TraceEvent::Admission { .. } | TraceEvent::Arbitration { .. } => {
+                "scheduler"
+            }
+        }
+    }
+
+    /// Payload fields in pinned order (the JSON keys after `ev`).
+    fn fields(&self) -> Vec<(&'static str, Value)> {
+        match self {
+            TraceEvent::Hold { scope, trigger, reason } => vec![
+                ("scope", json::s(scope)),
+                ("trigger", json::s(trigger)),
+                ("reason", json::s(reason)),
+            ],
+            TraceEvent::Switch { scope, from, to, reason, detection_ms } => {
+                vec![
+                    ("scope", json::s(scope)),
+                    ("from", json::s(from)),
+                    ("to", json::s(to)),
+                    ("reason", json::s(reason)),
+                    ("detection_ms", json::num(*detection_ms)),
+                ]
+            }
+            TraceEvent::Explain {
+                scope,
+                bucket,
+                chosen,
+                score,
+                frontier,
+                alternatives,
+            } => vec![
+                ("scope", json::s(scope)),
+                ("bucket", json::s(bucket)),
+                ("chosen", json::s(chosen)),
+                ("score", json::num(*score)),
+                ("frontier", json::num(*frontier as f64)),
+                ("alternatives", json::num(*alternatives as f64)),
+            ],
+            TraceEvent::FrontierBuild { scope, bucket, points, candidates } => {
+                vec![
+                    ("scope", json::s(scope)),
+                    ("bucket", json::s(bucket)),
+                    ("points", json::num(*points as f64)),
+                    ("candidates", json::num(*candidates as f64)),
+                ]
+            }
+            TraceEvent::FrontierHit { scope, bucket, points } => vec![
+                ("scope", json::s(scope)),
+                ("bucket", json::s(bucket)),
+                ("points", json::num(*points as f64)),
+            ],
+            TraceEvent::FrontierEvict { scope, bucket, points } => vec![
+                ("scope", json::s(scope)),
+                ("bucket", json::s(bucket)),
+                ("points", json::num(*points as f64)),
+            ],
+            TraceEvent::FrontierDelta {
+                scope,
+                updated,
+                points_touched,
+                rebuild_points,
+            } => vec![
+                ("scope", json::s(scope)),
+                ("updated", json::num(*updated as f64)),
+                ("points_touched", json::num(*points_touched as f64)),
+                ("rebuild_points", json::num(*rebuild_points as f64)),
+            ],
+            TraceEvent::Enqueue { scope, class, depth } => vec![
+                ("scope", json::s(scope)),
+                ("class", json::s(class)),
+                ("depth", json::num(*depth as f64)),
+            ],
+            TraceEvent::Shed { scope, class, depth } => vec![
+                ("scope", json::s(scope)),
+                ("class", json::s(class)),
+                ("depth", json::num(*depth as f64)),
+            ],
+            TraceEvent::BatchLaunch { scope, reason, size, padded } => vec![
+                ("scope", json::s(scope)),
+                ("reason", json::s(reason)),
+                ("size", json::num(*size as f64)),
+                ("padded", json::num(*padded as f64)),
+            ],
+            TraceEvent::BatchComplete { scope, size, slack_us } => vec![
+                ("scope", json::s(scope)),
+                ("size", json::num(*size as f64)),
+                ("slack_us", json::num(*slack_us as f64)),
+            ],
+            TraceEvent::CohortTransfer {
+                cohort,
+                members,
+                min_confidence,
+                probed,
+            } => vec![
+                ("cohort", json::s(cohort)),
+                ("members", json::num(*members as f64)),
+                ("min_confidence", json::num(*min_confidence)),
+                ("probed", Value::Bool(*probed)),
+            ],
+            TraceEvent::ProbeFallback { cohort, engine, probes, correction } => {
+                vec![
+                    ("cohort", json::s(cohort)),
+                    ("engine", json::s(engine)),
+                    ("probes", json::num(*probes as f64)),
+                    ("correction", json::num(*correction)),
+                ]
+            }
+            TraceEvent::Correction {
+                engine,
+                factor,
+                updated,
+                points_touched,
+            } => vec![
+                ("engine", json::s(engine)),
+                ("factor", json::num(*factor)),
+                ("updated", json::num(*updated as f64)),
+                ("points_touched", json::num(*points_touched as f64)),
+            ],
+            TraceEvent::Admission { scope, outcome, detail } => vec![
+                ("scope", json::s(scope)),
+                ("outcome", json::s(outcome)),
+                ("detail", json::s(detail)),
+            ],
+            TraceEvent::Arbitration { scope, window_ms, grants } => vec![
+                ("scope", json::s(scope)),
+                ("window_ms", json::num(*window_ms)),
+                ("grants", json::num(*grants as f64)),
+            ],
+        }
+    }
+}
+
+/// A recorded event: sequence number, virtual timestamp, payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// Monotone per-recorder sequence number (0-based, counts drops).
+    pub seq: u64,
+    /// Virtual timestamp (µs) the event was stamped with.
+    pub t_us: u64,
+    /// The event payload.
+    pub event: TraceEvent,
+}
+
+impl TraceRecord {
+    /// The pinned JSON-lines form of this record.
+    pub fn to_json_line(&self) -> String {
+        let mut fields: Vec<(String, Value)> = vec![
+            ("seq".to_string(), json::num(self.seq as f64)),
+            ("t_us".to_string(), json::num(self.t_us as f64)),
+            ("ev".to_string(), json::s(self.event.name())),
+        ];
+        for (k, v) in self.event.fields() {
+            fields.push((k.to_string(), v));
+        }
+        json::to_string(&Value::Obj(fields))
+    }
+}
+
+#[derive(Debug)]
+struct Ring {
+    events: VecDeque<TraceRecord>,
+    capacity: usize,
+    seq: u64,
+    dropped: u64,
+}
+
+/// Bounded, thread-safe ring buffer of [`TraceRecord`]s with a
+/// driver-advanced virtual clock.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    ring: Mutex<Ring>,
+    now_us: AtomicU64,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder::new()
+    }
+}
+
+impl FlightRecorder {
+    /// A recorder with the default capacity.
+    pub fn new() -> Self {
+        FlightRecorder::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+
+    /// A recorder holding at most `capacity` events (≥ 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        FlightRecorder {
+            ring: Mutex::new(Ring {
+                events: VecDeque::with_capacity(capacity.max(1).min(4096)),
+                capacity: capacity.max(1),
+                seq: 0,
+                dropped: 0,
+            }),
+            now_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Advance the virtual clock; subsequent [`emit`](Self::emit) calls
+    /// stamp this time.
+    pub fn set_now_us(&self, t_us: u64) {
+        self.now_us.store(t_us, Ordering::Relaxed);
+    }
+
+    /// The current virtual time (µs).
+    pub fn now_us(&self) -> u64 {
+        self.now_us.load(Ordering::Relaxed)
+    }
+
+    /// Record an event at the current virtual time.
+    pub fn emit(&self, event: TraceEvent) {
+        self.emit_at(self.now_us(), event);
+    }
+
+    /// Record an event at an explicit virtual time (used by layers that
+    /// carry their own clock, e.g. the serving pipeline's event loop).
+    pub fn emit_at(&self, t_us: u64, event: TraceEvent) {
+        let mut g = self.ring.lock().unwrap();
+        let seq = g.seq;
+        g.seq += 1;
+        if g.events.len() == g.capacity {
+            g.events.pop_front();
+            g.dropped += 1;
+        }
+        g.events.push_back(TraceRecord { seq, t_us, event });
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().events.len()
+    }
+
+    /// True when nothing has been retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.ring.lock().unwrap().capacity
+    }
+
+    /// Events evicted to bound the ring.
+    pub fn dropped(&self) -> u64 {
+        self.ring.lock().unwrap().dropped
+    }
+
+    /// Total events ever emitted (retained + dropped).
+    pub fn emitted(&self) -> u64 {
+        self.ring.lock().unwrap().seq
+    }
+
+    /// Snapshot the retained records in emission order.
+    pub fn records(&self) -> Vec<TraceRecord> {
+        self.ring.lock().unwrap().events.iter().cloned().collect()
+    }
+
+    /// Drop every retained record (sequence numbers keep counting).
+    pub fn clear(&self) {
+        self.ring.lock().unwrap().events.clear();
+    }
+
+    /// JSON-lines export: one pinned-key-order object per line, trailing
+    /// newline — the golden-diffable format.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in self.records() {
+            out.push_str(&r.to_json_line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome trace-event export (Perfetto-loadable): every record as an
+    /// instant event with its payload under `args`.
+    pub fn to_chrome_trace(&self) -> String {
+        let events: Vec<Value> = self
+            .records()
+            .iter()
+            .map(|r| {
+                let args: Vec<(String, Value)> = r
+                    .event
+                    .fields()
+                    .into_iter()
+                    .map(|(k, v)| (k.to_string(), v))
+                    .chain(std::iter::once((
+                        "seq".to_string(),
+                        json::num(r.seq as f64),
+                    )))
+                    .collect();
+                json::obj(vec![
+                    ("name", json::s(r.event.name())),
+                    ("cat", json::s(r.event.category())),
+                    ("ph", json::s("i")),
+                    ("ts", json::num(r.t_us as f64)),
+                    ("pid", json::num(1.0)),
+                    ("tid", json::num(1.0)),
+                    ("s", json::s("t")),
+                    ("args", Value::Obj(args)),
+                ])
+            })
+            .collect();
+        json::to_string(&json::obj(vec![(
+            "traceEvents",
+            Value::Arr(events),
+        )]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hold(scope: &str) -> TraceEvent {
+        TraceEvent::Hold {
+            scope: scope.to_string(),
+            trigger: "none".to_string(),
+            reason: "no_trigger".to_string(),
+        }
+    }
+
+    #[test]
+    fn stamps_virtual_time_and_sequence() {
+        let rec = FlightRecorder::new();
+        rec.emit(hold("d0"));
+        rec.set_now_us(250_000);
+        rec.emit(hold("d1"));
+        let rs = rec.records();
+        assert_eq!(rs[0].seq, 0);
+        assert_eq!(rs[0].t_us, 0);
+        assert_eq!(rs[1].seq, 1);
+        assert_eq!(rs[1].t_us, 250_000);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let rec = FlightRecorder::with_capacity(4);
+        for _ in 0..10 {
+            rec.emit(hold("d"));
+        }
+        assert_eq!(rec.len(), 4);
+        assert_eq!(rec.dropped(), 6);
+        assert_eq!(rec.emitted(), 10);
+        // Oldest evicted: the survivors are the last four.
+        assert_eq!(rec.records()[0].seq, 6);
+    }
+
+    #[test]
+    fn jsonl_key_order_is_pinned() {
+        let rec = FlightRecorder::new();
+        rec.emit(hold("d0007"));
+        let line = rec.to_jsonl();
+        assert_eq!(
+            line,
+            "{\"seq\":0,\"t_us\":0,\"ev\":\"hold\",\"scope\":\"d0007\",\
+             \"trigger\":\"none\",\"reason\":\"no_trigger\"}\n"
+        );
+    }
+
+    #[test]
+    fn chrome_trace_wraps_trace_events() {
+        let rec = FlightRecorder::new();
+        rec.emit(hold("d0"));
+        let chrome = rec.to_chrome_trace();
+        assert!(chrome.starts_with("{\"traceEvents\":["));
+        assert!(chrome.contains("\"ph\":\"i\""));
+        assert!(chrome.contains("\"cat\":\"adaptation\""));
+    }
+
+    #[test]
+    fn round3_matches_report_precision() {
+        assert_eq!(round3(2.2414), 2.241);
+        assert_eq!(round3(2.0 / 3.0), 0.667);
+        assert_eq!(round3(3.0), 3.0);
+    }
+}

@@ -15,8 +15,11 @@
 //! full-profile oracle on a ≥ 200-device fleet, with cohort frontier
 //! builds strictly fewer than devices.
 
+use std::sync::Arc;
+
 use oodin::experiments::fleetbench::{self, FleetBenchConfig};
 use oodin::model::test_fixtures::fake_registry;
+use oodin::telemetry::trace::FlightRecorder;
 use oodin::util::json;
 
 #[test]
@@ -35,6 +38,28 @@ fn golden_fleetbench_smoke_json() {
                  python3 python/golden_fleetbench.py");
     assert_eq!(got, want,
                "fleet-bench smoke JSON drifted from the golden snapshot \
+                (UPDATE_GOLDEN=1 to accept, then re-run the Python oracle \
+                to confirm both implementations still agree)");
+}
+
+#[test]
+fn golden_fleetbench_smoke_trace_jsonl() {
+    let reg = fake_registry();
+    let cfg = FleetBenchConfig::smoke();
+    let rec = Arc::new(FlightRecorder::new());
+    fleetbench::run_traced(&reg, &cfg, Some(&rec)).unwrap();
+    assert_eq!(rec.dropped(), 0, "smoke trace must fit the default ring");
+    let got = rec.to_jsonl();
+    let path = concat!(env!("CARGO_MANIFEST_DIR"),
+                       "/tests/golden/fleetbench_smoke_trace.jsonl");
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(path, &got).unwrap();
+    }
+    let want = std::fs::read_to_string(path)
+        .expect("golden trace missing — run with UPDATE_GOLDEN=1 or \
+                 python3 python/golden_fleetbench.py");
+    assert_eq!(got, want,
+               "fleet-bench smoke trace drifted from the golden snapshot \
                 (UPDATE_GOLDEN=1 to accept, then re-run the Python oracle \
                 to confirm both implementations still agree)");
 }

@@ -1,0 +1,84 @@
+//! Property suite for the decision flight recorder: trace determinism
+//! (same seed ⇒ byte-identical bytes), ring boundedness under the full
+//! smoke storm, and the decide()/trace correspondence — every manager
+//! decision leaves exactly one `hold` or `switch` event, and every
+//! switch carries its `explain` record.
+
+use std::sync::Arc;
+
+use oodin::experiments::fleetbench::{self, FleetBenchConfig,
+                                     FleetBenchReport};
+use oodin::model::test_fixtures::fake_registry;
+use oodin::telemetry::trace::{FlightRecorder, TraceEvent};
+
+fn traced_smoke(rec: &Arc<FlightRecorder>) -> FleetBenchReport {
+    let reg = fake_registry();
+    let cfg = FleetBenchConfig::smoke();
+    fleetbench::run_traced(&reg, &cfg, Some(rec)).unwrap()
+}
+
+#[test]
+fn same_seed_yields_byte_identical_trace() {
+    let a = Arc::new(FlightRecorder::new());
+    let b = Arc::new(FlightRecorder::new());
+    traced_smoke(&a);
+    traced_smoke(&b);
+    assert_eq!(a.dropped(), 0, "smoke trace must fit the default ring");
+    assert!(!a.is_empty());
+    assert_eq!(a.to_jsonl(), b.to_jsonl(),
+               "virtual-clock traces must be reproducible byte-for-byte");
+    assert_eq!(a.to_chrome_trace(), b.to_chrome_trace());
+}
+
+#[test]
+fn ring_stays_bounded_under_storm() {
+    let rec = Arc::new(FlightRecorder::with_capacity(64));
+    traced_smoke(&rec);
+    assert!(rec.emitted() > 64, "storm must overflow the tiny ring");
+    assert_eq!(rec.capacity(), 64);
+    assert_eq!(rec.len(), 64, "ring must never exceed its capacity");
+    assert_eq!(rec.dropped(), rec.emitted() - 64);
+    assert_eq!(rec.to_jsonl().lines().count(), 64);
+    // The survivors are the newest events, with sequence numbers that
+    // still count every emission (drops included).
+    let records = rec.records();
+    assert_eq!(records.last().unwrap().seq, rec.emitted() - 1);
+    assert_eq!(records.first().unwrap().seq, rec.emitted() - 64);
+    for w in records.windows(2) {
+        assert_eq!(w[1].seq, w[0].seq + 1, "seq must stay contiguous");
+        assert!(w[1].t_us >= w[0].t_us, "virtual time must be monotone");
+    }
+}
+
+#[test]
+fn every_decide_emits_exactly_one_adaptation_event() {
+    let rec = Arc::new(FlightRecorder::new());
+    let report = traced_smoke(&rec);
+    let records = rec.records();
+    let holds = records
+        .iter()
+        .filter(|r| matches!(r.event, TraceEvent::Hold { .. }))
+        .count() as u64;
+    let switches = records
+        .iter()
+        .filter(|r| matches!(r.event, TraceEvent::Switch { .. }))
+        .count() as u64;
+    let explains = records
+        .iter()
+        .filter(|r| matches!(r.event, TraceEvent::Explain { .. }))
+        .count() as u64;
+    assert_eq!(holds + switches, report.decisions,
+               "each decide() must leave exactly one hold-or-switch event");
+    assert_eq!(switches, report.switches);
+    assert_eq!(explains, switches,
+               "every switch must carry its explain record");
+    // Recording never perturbs the run: the traced report matches an
+    // untraced one bit-for-bit through the JSON emission.
+    let reg = fake_registry();
+    let cfg = FleetBenchConfig::smoke();
+    let untraced = fleetbench::run(&reg, &cfg).unwrap();
+    assert_eq!(
+        oodin::util::json::to_string(&fleetbench::report_json(&report)),
+        oodin::util::json::to_string(&fleetbench::report_json(&untraced)),
+    );
+}

@@ -37,6 +37,16 @@ CPU correction, and the post-correction warm-hit round — in the same
 emission order and with the same pinned key order as
 ``telemetry::trace``.
 
+PR 8 extends both payloads with the fleet control-plane scenario
+(``experiments::fleetbench::run_control_plane``): a pre-canary baseline
+sweep, the mispredicted revision canaried and auto-rolled-back, the good
+revision widened up the ladder to fleet-wide promotion, three residual
+feedback rounds folded through the incremental delta path, threshold
+re-anchoring, and a closing regret sweep — every frontier-cache lookup,
+``rollout`` / ``residual`` / ``re_anchor`` transition and per-cohort
+``frontier_delta`` mirrored in the same order on the storm's continued
+virtual clock, plus the report's ``rollout`` and ``feedback`` blocks.
+
 Usage:  python3 python/golden_fleetbench.py [--check]
   default: writes both golden files
   --check: compares against the existing files, exit 1 on drift
@@ -301,6 +311,21 @@ FRONTIER_POINT_BYTES = 192
 CORRECTION_ENGINE = "cpu"
 CORRECTION_FACTOR = 1.25
 SIM_NS_PER_EVAL = 150
+# experiments::fleetbench control-plane scenario constants + the
+# fleet::rollout / fleet::feedback default thresholds.
+ROLLOUT_ENGINE = "cpu"
+ROLLOUT_BAD_FACTOR = 0.25
+ROLLOUT_GOOD_FACTOR = 0.8
+ROLLOUT_SLO_MS = 1000.0 / 30.0
+FEEDBACK_ROUNDS = 3
+ROLLOUT_LADDER = [4, 7, 14]
+ROLLOUT_MIN_SAMPLES = 2
+MAX_REGRET_DELTA_PCT = 2.0
+MAX_ABS_REGRET_PCT = 5.0
+MAX_SLO_MISS_DELTA = 0.1
+MAX_FAULT_DELTA = 0.0
+FB_MIN_SAMPLES = 2
+RE_ANCHOR_THRESHOLD = 0.15
 
 
 def scaled_device(archetype, axes, thermal_ln, mem_ln, latent):
@@ -1060,6 +1085,516 @@ def run_fleetbench_smoke():
         FRONTIER_BASE_BYTES + FRONTIER_POINT_BYTES * len(e["points"])
         for c in cohorts for e in c["cache"].values())
 
+    # ===== fleet control plane ==========================================
+    # Mirrors experiments::fleetbench::run_control_plane on the storm's
+    # continued virtual clock.  Every report value above keeps its
+    # pre-scenario computation point, exactly like the Rust driver; the
+    # scenario's cache traffic runs on its own counters.
+
+    def has_npu_of(d):
+        return any(kk == "nnapi" for kk, _, _, _ in d["axes"])
+
+    # The oracle's adjusted latency per (regret tick, device): true LUTs
+    # never change, so every sweep reuses one full-search pass.
+    oracle_adj = []
+    for tick in CFG["regret_ticks"]:
+        row = []
+        for idx, d in enumerate(devices):
+            loads, thermals = storm_conditions(tick, idx, has_npu_of(d))
+            oracle = best_design(d["true"], oracle_luts[idx], loads,
+                                 thermals)
+            row.append(adjusted(oracle_luts[idx], oracle, loads, thermals))
+        oracle_adj.append(row)
+
+    for c in cohorts:
+        for e in c["cache"].values():
+            e["stale"] = False
+    sc = dict(builds=0, hits=0)
+    assigned = [0] * len(cohorts)  # RevisionRegistry: live revision/cohort
+
+    def scenario_select(ci, loads, thermals):
+        """Fleet::select after the report's cache-stats snapshot: same
+        FrontierCache::frontier semantics (hit on a fresh entry; a stale
+        scope fingerprint drops the entry silently and rebuilds)."""
+        c = cohorts[ci]
+        steps = bucket_of(loads, thermals)
+        bid = bucket_id(steps)
+        entry = c["cache"].get(bid)
+        if entry is not None and not entry["stale"]:
+            sc["hits"] += 1
+            pts = entry["points"]
+            tr.emit("frontier_hit", [
+                ("scope", f'"{c["id"]}"'),
+                ("bucket", f'"{bid}"'),
+                ("points", jnum(len(pts))),
+            ])
+            return design_tuple(pts[0])
+        if entry is not None:
+            del c["cache"][bid]  # invalidation: counted, never emitted
+        rep_loads = {e: s * BUCKET_LOG2_STEP for e, s in steps.items()}
+        pts, n_cands = frontier_build(c["rep"], c["lut"], rep_loads)
+        sc["builds"] += 1
+        c["cache"][bid] = dict(points=pts, steps=steps, stale=False)
+        tr.emit("frontier_build", [
+            ("scope", f'"{c["id"]}"'),
+            ("bucket", f'"{bid}"'),
+            ("points", jnum(len(pts))),
+            ("candidates", jnum(n_cands)),
+        ])
+        assert design_tuple(pts[0]) == best_design(c["rep"], c["lut"],
+                                                   rep_loads, {})
+        resident_c = sum(FRONTIER_BASE_BYTES
+                         + FRONTIER_POINT_BYTES * len(e["points"])
+                         for e in c["cache"].values())
+        assert resident_c <= mem_budget_per_cohort, (c["id"], resident_c)
+        return design_tuple(pts[0])
+
+    def apply_cohort_delta(ci, eng, factor, new_lut):
+        """Fleet::swap_cohort_lut under an engine-scale LutDelta: every
+        resident frontier shares one family search scope, so either every
+        entry observes the transition or none does (a bitwise no-op scale
+        leaves the fingerprint — and the cache — untouched, with no
+        event).  Per entry, ParetoFrontier::apply_delta: re-score resident
+        points on the engine from the new LUT (drops past the
+        deployability bound only); factor < 1 re-admits newly deployable
+        keys with frontier-local dominance pruning."""
+        c = cohorts[ci]
+        old_lut = c["lut"]
+        changed = any(new_lut[k] != old_lut[k] for k in old_lut
+                      if VARIANTS[k[0]]["family"] == CFG["family"])
+        if not changed:
+            c["lut"] = new_lut
+            return (0, 0, 0)
+        sz_new = len(enumerate_space(c["rep"], new_lut, CFG["family"],
+                                     CFG["eps"], {}, {}))
+        updated = touched_total = rebuild = 0
+        for entry in c["cache"].values():
+            # Re-anchoring is the scenario's last mutation before the
+            # closing sweep, so no delta ever lands on a stale entry.
+            assert not entry["stale"]
+            rep_loads = {e: s * BUCKET_LOG2_STEP
+                         for e, s in entry["steps"].items()}
+            touched = 0
+            kept = []
+            for p in entry["points"]:
+                if p["engine"] != eng:
+                    kept.append(p)
+                    continue
+                touched += 1
+                key = (p["variant"], p["engine"], p["threads"],
+                       p["governor"])
+                rescored = eval_key(c["rep"], new_lut, key, p["r"],
+                                    rep_loads)
+                if rescored is not None:
+                    kept.append(rescored)
+            if factor < 1.0:
+                news = [k for k in sorted(new_lut.keys(), key=key_sort)
+                        if k[1] == eng
+                        and (k not in old_lut
+                             or old_lut[k] > c["rep"]["max_deployable"])
+                        and eval_key(c["rep"], new_lut, k, 1.0, {})
+                        is not None]
+                cands = []
+                for k in news:
+                    for r in RATES:
+                        q = eval_key(c["rep"], new_lut, k, r, rep_loads)
+                        if q is not None:
+                            cands.append(q)
+                touched += len(cands)
+                fresh = [q for q in cands
+                         if not any(dominates(p, q) for p in cands)]
+                fresh = [q for q in fresh
+                         if not any(dominates(p, q) for p in kept)]
+                kept = [p for p in kept
+                        if not any(dominates(q, p) for q in fresh)]
+                kept.extend(fresh)
+            kept.sort(key=rank_key)
+            entry["points"] = kept
+            updated += 1
+            touched_total += touched
+            rebuild += sz_new
+        c["lut"] = new_lut
+        if updated > 0:
+            tr.emit("frontier_delta", [
+                ("scope", f'"{c["id"]}"'),
+                ("updated", jnum(updated)),
+                ("points_touched", jnum(touched_total)),
+                ("rebuild_points", jnum(rebuild)),
+            ])
+        return (updated, touched_total, rebuild)
+
+    def stats0():
+        return dict(samples=0, regret=0.0, slo=0, faults=0)
+
+    def fold_stats(tgt, s):
+        tgt["samples"] += s["samples"]
+        tgt["regret"] += s["regret"]
+        tgt["slo"] += s["slo"]
+        tgt["faults"] += s["faults"]
+
+    def regret_mean_of(s):
+        return s["regret"] / s["samples"] if s["samples"] else 0.0
+
+    def slo_rate_of(s):
+        return s["slo"] / s["samples"] if s["samples"] else 0.0
+
+    def fault_rate_of(s):
+        return s["faults"] / s["samples"] if s["samples"] else 0.0
+
+    class RolloutSM:
+        """fleet::rollout::Rollout — the canary stage machine with the
+        diff-in-diff gates, over the shared `assigned` revision table."""
+
+        def __init__(self, rev, eng, factor):
+            self.rev = rev
+            self.eng = eng
+            self.factor = factor
+            self.stage = "proposed"
+            self.rung = 0
+            self.treated = []
+            self.snapshots = {}
+            self.baseline = {}
+            self.tstats = {}
+            self.cstats = stats0()
+            self.seen = set()
+            self.dups = 0
+            self.stale = 0
+
+        def emit(self, stage, n, detail):
+            tr.emit("rollout", [
+                ("revision", jnum(self.rev)),
+                ("stage", f'"{stage}"'),
+                ("cohorts", jnum(n)),
+                ("detail", f'"{detail}"'),
+            ])
+
+        def ingest(self, rep):
+            if rep["cohort"] >= len(cohorts):
+                return "unknown"
+            dk = (rep["cohort"], rep["seq"])
+            if dk in self.seen:
+                self.dups += 1
+                return "duplicate"
+            self.seen.add(dk)
+            if rep["revision"] != assigned[rep["cohort"]]:
+                self.stale += 1
+                return "stale"
+            if self.stage == "proposed":
+                tgt = self.baseline.setdefault(rep["cohort"], stats0())
+            elif rep["cohort"] in self.treated:
+                tgt = self.tstats.setdefault(rep["cohort"], stats0())
+            else:
+                tgt = self.cstats
+            fold_stats(tgt, rep)
+            return "accepted"
+
+        def extend_to(self, n):
+            for ci in range(n):
+                if ci in self.snapshots:
+                    continue
+                assert assigned[ci] == 0
+                self.snapshots[ci] = dict(cohorts[ci]["lut"])
+                new_lut = {k: (v * self.factor if k[1] == self.eng else v)
+                           for k, v in cohorts[ci]["lut"].items()}
+                apply_cohort_delta(ci, self.eng, self.factor, new_lut)
+                assigned[ci] = self.rev
+                self.treated.append(ci)
+
+        def begin_canary(self):
+            assert self.stage == "proposed"
+            n = min(max(ROLLOUT_LADDER[0], 1), len(cohorts))
+            for ci in range(n):
+                assert assigned[ci] == 0
+            self.extend_to(n)
+            self.stage = "canary"
+            self.emit("canary", len(self.treated), "")
+
+        def hold(self, reason):
+            self.emit("held", len(self.treated), reason)
+            return ("held", reason)
+
+        def roll_back(self, reason):
+            inv = 1.0 / self.factor
+            for ci in self.treated:
+                apply_cohort_delta(ci, self.eng, inv,
+                                   dict(self.snapshots[ci]))
+                assigned[ci] = 0
+            self.stage = "rolled_back"
+            self.emit("rolled_back", 0, reason)
+            return ("rolled_back", reason)
+
+        def evaluate(self):
+            assert self.stage in ("canary", "widening")
+            for ci in self.treated:
+                s = self.tstats.get(ci)
+                if s is None:
+                    return self.hold(
+                        f"missing_reports:{cohorts[ci]['id']}")
+                if s["samples"] < ROLLOUT_MIN_SAMPLES:
+                    return self.hold(
+                        f"insufficient_samples:{cohorts[ci]['id']}")
+            treated = stats0()
+            for ci in sorted(self.tstats):
+                fold_stats(treated, self.tstats[ci])
+            control = self.cstats
+            base = stats0()
+            for ci in self.treated:
+                if ci in self.baseline:
+                    fold_stats(base, self.baseline[ci])
+            breach = None
+            if (control["samples"] > 0
+                    and regret_mean_of(treated) - regret_mean_of(control)
+                    > MAX_REGRET_DELTA_PCT):
+                breach = (f"regret_delta:"
+                          f"{regret_mean_of(treated) - regret_mean_of(control):.3f}")
+            elif (control["samples"] == 0
+                  and regret_mean_of(treated) > MAX_ABS_REGRET_PCT):
+                breach = f"regret_abs:{regret_mean_of(treated):.3f}"
+            elif (slo_rate_of(treated) - slo_rate_of(base)
+                  > MAX_SLO_MISS_DELTA):
+                breach = (f"slo_delta:"
+                          f"{slo_rate_of(treated) - slo_rate_of(base):.3f}")
+            elif (fault_rate_of(treated) - fault_rate_of(base)
+                  > MAX_FAULT_DELTA):
+                breach = (f"fault_delta:"
+                          f"{fault_rate_of(treated) - fault_rate_of(base):.3f}")
+            if breach is not None:
+                return self.roll_back(breach)
+            if len(self.treated) >= len(cohorts):
+                self.stage = "promoted"
+                self.snapshots = {}
+                self.emit("promoted", len(cohorts), "")
+                return ("promoted", None)
+            next_rung = 1 if self.stage == "canary" else self.rung + 1
+            target = (ROLLOUT_LADDER[next_rung]
+                      if next_rung < len(ROLLOUT_LADDER) else len(cohorts))
+            target = min(max(target, len(self.treated) + 1), len(cohorts))
+            for ci in range(target):
+                if ci not in self.snapshots and assigned[ci] != 0:
+                    return self.hold(f"cohort_conflict:{cohorts[ci]['id']}")
+            self.extend_to(target)
+            self.stage = "widening"
+            self.rung = next_rung
+            self.tstats = {}
+            self.cstats = stats0()
+            self.emit("widening", len(self.treated), "")
+            return ("advanced", None)
+
+    def control_sweep(seq):
+        """One telemetry round: every device re-selected at the storm's
+        regret-tick snapshots, scored against the precomputed oracle."""
+        reports = [dict(cohort=ci, revision=assigned[ci], seq=seq,
+                        samples=0, regret=0.0, slo=0, faults=0)
+                   for ci in range(len(cohorts))]
+        sweep_regrets = []
+        n_lookups = 0
+        for ti, tick in enumerate(CFG["regret_ticks"]):
+            for idx, d in enumerate(devices):
+                loads, thermals = storm_conditions(tick, idx, has_npu_of(d))
+                sel = scenario_select(device_cohort[idx], loads, thermals)
+                n_lookups += 1
+                true_lut = oracle_luts[idx]
+                sel_adj = adjusted(true_lut, sel, loads, thermals)
+                assert sel_adj is not None
+                v = VARIANTS[sel[0]]
+                admissible = (v["mem"] <= d["true"]["mem_budget"]
+                              and true_lut[sel[:4]]
+                              <= d["true"]["max_deployable"])
+                r = sel_adj / oracle_adj[ti][idx] - 1.0
+                rep = reports[device_cohort[idx]]
+                if admissible:
+                    rv = r
+                else:
+                    rep["faults"] += 1
+                    rv = max(r, 0.0)
+                sweep_regrets.append(rv)
+                rep["samples"] += 1
+                rep["regret"] += 100.0 * rv
+                if sel_adj > ROLLOUT_SLO_MS:
+                    rep["slo"] += 1
+        return reports, sweep_regrets, n_lookups
+
+    step_us = int(CFG["tick_ms"] * 1000.0)
+    base_us = CFG["ticks"] * step_us
+    clock = dict(k=0)
+
+    def advance_clock():
+        clock["k"] += 1
+        tr.set_now_us(base_us + clock["k"] * step_us)
+
+    cp_lookups = 0
+
+    # Pre-canary baseline round: anchors the self-controlled SLO/fault
+    # gates of both rollouts.
+    advance_clock()
+    baseline_reports, _, lk = control_sweep(0)
+    cp_lookups += lk
+    baseline_samples = sum(r["samples"] for r in baseline_reports)
+
+    # -- the mispredicted revision: canary, gate breach, auto-rollback --
+    bad = RolloutSM(1, ROLLOUT_ENGINE, ROLLOUT_BAD_FACTOR)
+    for rep in baseline_reports:
+        assert bad.ingest(rep) == "accepted"
+    canary_n = min(ROLLOUT_LADDER[0], len(cohorts))
+    pre_snap = [dict(cohorts[ci]["lut"]) for ci in range(canary_n)]
+    advance_clock()
+    bad.begin_canary()
+    advance_clock()
+    bad_reports, _, lk = control_sweep(1)
+    cp_lookups += lk
+    for rep in bad_reports:
+        assert bad.ingest(rep) == "accepted"
+    outcome, bad_reason = bad.evaluate()
+    assert outcome == "rolled_back", (outcome, bad_reason)
+    assert sum(1 for a in assigned if a == 1) == 0
+    post_snap = [dict(cohorts[ci]["lut"]) for ci in range(canary_n)]
+    fp_match = pre_snap == post_snap
+    assert fp_match, "rollback failed to restore treated LUTs bit-identically"
+    tsum = csum = 0.0
+    tn = cn = 0
+    for rep in bad_reports:
+        if rep["cohort"] in bad.treated:
+            tsum += rep["regret"]
+            tn += rep["samples"]
+        else:
+            csum += rep["regret"]
+            cn += rep["samples"]
+    bad_canary_regret = tsum / max(tn, 1)
+    bad_control_regret = csum / max(cn, 1)
+
+    # -- the good revision: canary, widen up the ladder, promote --
+    good = RolloutSM(2, ROLLOUT_ENGINE, ROLLOUT_GOOD_FACTOR)
+    for rep in baseline_reports:
+        assert good.ingest(rep) == "accepted"
+    advance_clock()
+    good.begin_canary()
+    good_rounds = 0
+    seq = 2
+    while True:
+        advance_clock()
+        sweep_reports, _, lk = control_sweep(seq)
+        cp_lookups += lk
+        for rep in sweep_reports:
+            assert good.ingest(rep) == "accepted"
+        if good_rounds == 0:
+            # A replayed (cohort, seq) report must be discarded.
+            assert good.ingest(sweep_reports[0]) == "duplicate"
+        good_rounds += 1
+        seq += 1
+        outcome, reason = good.evaluate()
+        if outcome == "promoted":
+            break
+        assert outcome == "advanced", (outcome, reason)
+        assert good_rounds <= len(cohorts), "rollout failed to terminate"
+    assert good.stage == "promoted"
+    assert sum(1 for a in assigned if a == 2) == len(cohorts)
+
+    # -- residual feedback: observe, correct through the delta path --
+    fb_cells = {}  # (cohort, engine idx) -> [sum_ln, sum_abs_ln, samples]
+    fb_accumulated = {}
+    residual_rounds = []
+    fb_samples = 0
+    fb_corrections = 0
+    fb_delta = [0, 0, 0]
+    for _ in range(FEEDBACK_ROUNDS):
+        advance_clock()
+        for tick in CFG["regret_ticks"]:
+            for idx, d in enumerate(devices):
+                loads, thermals = storm_conditions(tick, idx, has_npu_of(d))
+                ci = device_cohort[idx]
+                sel = scenario_select(ci, loads, thermals)
+                cp_lookups += 1
+                key = sel[:4]
+                measured = oracle_luts[idx][key]
+                predicted = cohorts[ci]["lut"][key]
+                # RuntimeManager::record_latency is decision-inert (no
+                # trace, no counters): not modelled.
+                if (measured > 0.0 and predicted > 0.0
+                        and math.isfinite(measured)
+                        and math.isfinite(predicted)):
+                    ln = math.log(measured / predicted)
+                    cell = fb_cells.setdefault(
+                        (ci, ENGINE_ORDER.index(sel[1])), [0.0, 0.0, 0])
+                    cell[0] += ln
+                    cell[1] += abs(ln)
+                    cell[2] += 1
+        # FeedbackLoop::apply_round: cells in (cohort, engine) order.
+        cells = dict(fb_cells)
+        fb_cells.clear()
+        round_samples = 0
+        sum_abs_total = 0.0
+        for ck in sorted(cells):
+            ci, ei = ck
+            sum_ln, sum_abs, n = cells[ck]
+            round_samples += n
+            sum_abs_total += sum_abs
+            if n < FB_MIN_SAMPLES:
+                continue
+            mean_ln = sum_ln / n
+            factor = math.exp(mean_ln)
+            eng = ENGINE_ORDER[ei]
+            new_lut = {k: (v * factor if k[1] == eng else v)
+                       for k, v in cohorts[ci]["lut"].items()}
+            u, t, rb = apply_cohort_delta(ci, eng, factor, new_lut)
+            fb_delta = [fb_delta[0] + u, fb_delta[1] + t, fb_delta[2] + rb]
+            fb_corrections += 1
+            fb_accumulated[ci] = fb_accumulated.get(ci, 0.0) + abs(mean_ln)
+            tr.emit("residual", [
+                ("cohort", f'"{cohorts[ci]["id"]}"'),
+                ("engine", f'"{eng}"'),
+                ("samples", jnum(n)),
+                ("factor", jnum(r3(factor))),
+            ])
+        fb_samples += round_samples
+        residual_rounds.append(
+            sum_abs_total / round_samples if round_samples else 0.0)
+    for prev, cur in zip(residual_rounds, residual_rounds[1:]):
+        assert cur <= prev + 1e-9, residual_rounds
+
+    # -- re-anchor drifted cohorts, then the closing regret round --
+    advance_clock()
+    re_anchored = []
+    for ci, m in sorted(fb_accumulated.items()):
+        if m <= RE_ANCHOR_THRESHOLD:
+            continue
+        member = cohorts[ci]["members"][0]
+        anchor_lut = build_lut(devices[member]["true"], CFG["lut_runs"])
+        cohorts[ci]["lut"] = anchor_lut
+        for e in cohorts[ci]["cache"].values():
+            e["stale"] = True  # lazy scope-fingerprint invalidation
+        fb_accumulated[ci] = 0.0
+        tr.emit("re_anchor", [
+            ("cohort", f'"{cohorts[ci]["id"]}"'),
+            ("device", f'"d{member:04d}"'),
+            ("magnitude", jnum(r3(m))),
+            ("entries", jnum(len(anchor_lut))),
+        ])
+        re_anchored.append(ci)
+    assert re_anchored, "no cohort crossed the re-anchor threshold"
+    assert len(re_anchored) < len(cohorts), re_anchored
+    builds_before_post = sc["builds"]
+    advance_clock()
+    post_reports, post_regrets, lk = control_sweep(seq)
+    cp_lookups += lk
+    post_builds = sc["builds"] - builds_before_post
+    post_sum = 0.0
+    for rv in post_regrets:
+        post_sum += rv
+    post_mean = post_sum / max(len(post_regrets), 1)
+    post_max = 0.0
+    for rv in post_regrets:
+        post_max = max(post_max, rv)
+    post_faults = sum(rep["faults"] for rep in post_reports)
+    improved = post_mean <= regret_mean
+    assert improved, (post_mean, regret_mean)
+    # Every control-plane lookup accounted by its own sweeps.
+    assert sc["builds"] + sc["hits"] == cp_lookups
+    for c in cohorts:
+        resident_c = sum(FRONTIER_BASE_BYTES
+                         + FRONTIER_POINT_BYTES * len(e["points"])
+                         for e in c["cache"].values())
+        assert resident_c <= mem_budget_per_cohort, (c["id"], resident_c)
+
     # -- JSON emission (mirrors experiments::fleetbench::report_json) -----
     config = jobj([
         ("devices", jnum(CFG["size"])),
@@ -1157,6 +1692,51 @@ def run_fleetbench_smoke():
                  / (float(SIM_NS_PER_EVAL)
                     * float(max(candidates_enumerated, 1)))))),
     ])
+    rollout = jobj([
+        ("engine", f'"{ROLLOUT_ENGINE}"'),
+        ("ladder", "[" + ",".join(jnum(n) for n in ROLLOUT_LADDER) + "]"),
+        ("min_samples", jnum(ROLLOUT_MIN_SAMPLES)),
+        ("max_regret_delta_pct", jnum(MAX_REGRET_DELTA_PCT)),
+        ("max_slo_miss_delta", jnum(MAX_SLO_MISS_DELTA)),
+        ("max_fault_delta", jnum(MAX_FAULT_DELTA)),
+        ("slo_ms", jnum(r3(ROLLOUT_SLO_MS))),
+        ("baseline_samples", jnum(baseline_samples)),
+        ("bad_revision", jnum(bad.rev)),
+        ("bad_factor", jnum(ROLLOUT_BAD_FACTOR)),
+        ("bad_stage", f'"{bad.stage}"'),
+        ("bad_reason", f'"{bad_reason}"'),
+        ("bad_canary_regret_pct", jnum(r3(bad_canary_regret))),
+        ("bad_control_regret_pct", jnum(r3(bad_control_regret))),
+        ("bad_live_cohorts",
+         jnum(sum(1 for a in assigned if a == bad.rev))),
+        ("rollback_fingerprints_match", jbool(fp_match)),
+        ("good_revision", jnum(good.rev)),
+        ("good_factor", jnum(ROLLOUT_GOOD_FACTOR)),
+        ("good_stage", f'"{good.stage}"'),
+        ("good_rounds", jnum(good_rounds)),
+        ("good_live_cohorts",
+         jnum(sum(1 for a in assigned if a == good.rev))),
+        ("duplicates_rejected", jnum(good.dups)),
+        ("lookups", jnum(cp_lookups)),
+    ])
+    feedback = jobj([
+        ("rounds", jnum(FEEDBACK_ROUNDS)),
+        ("samples", jnum(fb_samples)),
+        ("corrections", jnum(fb_corrections)),
+        ("mean_abs_ln",
+         "[" + ",".join(jnum(r3(v)) for v in residual_rounds) + "]"),
+        ("delta_updated", jnum(fb_delta[0])),
+        ("delta_points_touched", jnum(fb_delta[1])),
+        ("delta_rebuild_points", jnum(fb_delta[2])),
+        ("re_anchor_threshold", jnum(RE_ANCHOR_THRESHOLD)),
+        ("re_anchored_cohorts", jnum(len(re_anchored))),
+        ("post_feedback_builds", jnum(post_builds)),
+        ("pre_regret_mean_pct", jnum(r3(100.0 * regret_mean))),
+        ("post_regret_mean_pct", jnum(r3(100.0 * post_mean))),
+        ("post_regret_max_pct", jnum(r3(100.0 * post_max))),
+        ("post_deploy_faults", jnum(post_faults)),
+        ("regret_improved", jbool(improved)),
+    ])
     inner = jobj([
         ("config", config),
         ("population", population),
@@ -1166,6 +1746,8 @@ def run_fleetbench_smoke():
         ("regret", regret),
         ("delta", delta),
         ("cache", cache),
+        ("rollout", rollout),
+        ("feedback", feedback),
     ])
     return jobj([("fleet_bench", inner)]) + "\n", tr.dump()
 

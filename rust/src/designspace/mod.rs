@@ -27,10 +27,10 @@
 
 pub mod frontier;
 
-pub use frontier::{dominates, CacheStats, ConditionsBucket, DeltaOutcome,
-                   FrontierCache, LutDelta, ParetoFrontier,
-                   FRONTIER_CACHE_DEFAULT_CAP, FRONTIER_BASE_BYTES,
-                   FRONTIER_POINT_BYTES};
+pub use frontier::{dominates, scoped_fingerprint, CacheStats,
+                   ConditionsBucket, DeltaOutcome, FrontierCache, LutDelta,
+                   ParetoFrontier, FRONTIER_CACHE_DEFAULT_CAP,
+                   FRONTIER_BASE_BYTES, FRONTIER_POINT_BYTES};
 
 use std::cmp::Ordering;
 

@@ -20,17 +20,33 @@
 //! * **per-device adaptation decisions** — switches and hold reasons from
 //!   the real manager state machine under the storm.
 //!
+//! After the storm the bench drives the **fleet control plane** end to
+//! end ([`run_control_plane`]): a deliberately mispredicted LUT revision
+//! is canaried through the staged-rollout state machine and must be
+//! auto-rolled-back by the live regret gate (treated cohort LUTs
+//! restored bit-identically, zero cohorts left live); a good revision
+//! must then widen up the ladder and promote fleet-wide.  Three online
+//! residual-feedback rounds fold measured-vs-predicted latencies into
+//! per-cohort per-engine corrections through the incremental delta
+//! path, cohorts whose accumulated correction crosses the re-anchor
+//! threshold are promoted to measured anchors, and a closing regret
+//! round must beat the pre-feedback storm mean.
+//!
 //! The smoke configuration (200 devices, zero measurement noise) is
 //! byte-stable and golden-pinned (`tests/golden/fleetbench_smoke.json`),
 //! regenerated independently by the Python oracle
 //! `python/golden_fleetbench.py` — same N-version convention as
 //! `opt-bench` and `serve-bench`.
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use crate::designspace::{rank, ConditionsBucket, DesignSpace, LutDelta};
+use crate::designspace::{rank, scoped_fingerprint, ConditionsBucket,
+                         DeltaOutcome, DesignSpace, LutDelta};
 use crate::device::EngineKind;
-use crate::fleet::{Fleet, FleetConfig, PopulationConfig};
+use crate::fleet::{CohortReport, FeedbackConfig, FeedbackLoop, Fleet,
+                   FleetConfig, IngestOutcome, PopulationConfig,
+                   RevisionRegistry, Rollout, RolloutConfig, RolloutOutcome,
+                   RolloutStage};
 use crate::manager::{adjusted_latency, Conditions, Decision, HoldReason,
                      Reason, RuntimeManager};
 use crate::measurements::Lut;
@@ -51,6 +67,22 @@ use super::r3;
 pub const CORRECTION_ENGINE: EngineKind = EngineKind::Cpu;
 /// Uniform latency factor of that correction.
 pub const CORRECTION_FACTOR: f64 = 1.25;
+
+/// Engine both control-plane revisions rescale.
+pub const ROLLOUT_ENGINE: EngineKind = EngineKind::Cpu;
+/// Factor of the deliberately mispredicted revision: CPU rows claimed 4×
+/// faster than the cohort believes, flipping CPU-marginal cohorts onto
+/// catastrophically regretful selections the canary gate must catch.
+pub const ROLLOUT_BAD_FACTOR: f64 = 0.25;
+/// Factor of the good revision: (approximately) undoes the post-storm
+/// 1.25× CPU correction, so treated cohorts decide no worse than the
+/// controls and every gate passes up the ladder.
+pub const ROLLOUT_GOOD_FACTOR: f64 = 0.8;
+/// SLO latency bound the cohort telemetry reports misses against
+/// (a 30 fps frame budget).
+pub const ROLLOUT_SLO_MS: f64 = 1000.0 / 30.0;
+/// Residual-feedback rounds the control plane drives after promotion.
+pub const FEEDBACK_ROUNDS: usize = 3;
 
 /// Experiment dimensions and depth.
 #[derive(Debug, Clone)]
@@ -175,6 +207,75 @@ pub struct CohortRow {
     pub hits: u64,
 }
 
+/// Everything the staged-rollout + residual-feedback scenario measured
+/// ([`run_control_plane`]).
+#[derive(Debug, Clone, Default)]
+pub struct ControlPlaneReport {
+    /// Telemetry samples in the pre-canary baseline round.
+    pub baseline_samples: u64,
+    /// Id of the deliberately mispredicted revision.
+    pub bad_revision: u64,
+    /// Final stage of the bad rollout (must be `rolled_back`).
+    pub bad_stage: String,
+    /// The gate that rolled it back.
+    pub bad_reason: String,
+    /// Mean canary-cohort regret (%) observed while the bad revision was
+    /// live.
+    pub bad_canary_regret_pct: f64,
+    /// Mean concurrent control-cohort regret (%) in the same round.
+    pub bad_control_regret_pct: f64,
+    /// Cohorts still carrying the bad revision after rollback (must be
+    /// 0).
+    pub bad_live_cohorts: usize,
+    /// Treated-cohort LUT scope fingerprints restored bit-identically by
+    /// the rollback.
+    pub rollback_fingerprints_match: bool,
+    /// Id of the good revision.
+    pub good_revision: u64,
+    /// Final stage of the good rollout (must be `promoted`).
+    pub good_stage: String,
+    /// Evaluation rounds the good rollout took to promote.
+    pub good_rounds: usize,
+    /// Cohorts carrying the good revision after promotion (must be all).
+    pub good_live_cohorts: usize,
+    /// Duplicate telemetry reports rejected by ingestion.
+    pub duplicates_rejected: u64,
+    /// Frontier-cache lookups made by the control plane's own telemetry
+    /// sweeps — the scenario's analogue of `cache_bench_lookups`, fully
+    /// accounted against the cache counters.
+    pub lookups: u64,
+    /// Residual-feedback rounds driven.
+    pub feedback_rounds: usize,
+    /// Residual observations folded across those rounds.
+    pub feedback_samples: u64,
+    /// (cohort, engine) corrections applied.
+    pub feedback_corrections: u64,
+    /// Mean |ln(measured/predicted)| per round (must not grow round over
+    /// round).
+    pub residual_mean_abs_ln: Vec<f64>,
+    /// Frontiers the feedback corrections carried in place.
+    pub feedback_delta_updated: u64,
+    /// Frontier points those corrections' delta paths touched.
+    pub feedback_delta_points_touched: u64,
+    /// Candidates full rebuilds of the same frontiers would have scored.
+    pub feedback_delta_rebuild_points: u64,
+    /// Cohorts promoted to measured anchors by the accumulated-correction
+    /// threshold.
+    pub re_anchored_cohorts: usize,
+    /// Frontier rebuilds the closing regret round paid for re-anchored
+    /// cohorts (their caches invalidate lazily on first access).
+    pub post_feedback_builds: u64,
+    /// Closing-round mean regret (%).
+    pub post_regret_mean_pct: f64,
+    /// Closing-round worst regret (%).
+    pub post_regret_max_pct: f64,
+    /// Closing-round deploy faults.
+    pub post_deploy_faults: u64,
+    /// Closing-round mean regret ≤ the pre-feedback storm mean
+    /// (compared un-rounded).
+    pub regret_improved: bool,
+}
+
 /// The aggregated fleet-bench report.
 #[derive(Debug)]
 pub struct FleetBenchReport {
@@ -257,6 +358,8 @@ pub struct FleetBenchReport {
     /// Bytes resident across every cohort telemetry sink (constant in
     /// sample count).
     pub telemetry_resident_bytes: usize,
+    /// The staged-rollout + residual-feedback scenario outcome.
+    pub control_plane: ControlPlaneReport,
 }
 
 /// The full-profile oracle's selection: complete search over the device's
@@ -274,6 +377,364 @@ fn oracle_pick(fleet: &Fleet, device_idx: usize, true_lut: &Lut,
     })
 }
 
+/// One control-plane telemetry round: every device re-selected at the
+/// storm's regret-tick condition snapshots, scored against the
+/// (precomputed) oracle, aggregated into per-cohort [`CohortReport`]s.
+struct SweepOutcome {
+    /// One report per cohort, canonical order, tagged with the cohort's
+    /// live revision.
+    reports: Vec<CohortReport>,
+    /// Per-event regret values (deploy-fault-clamped, fractions).
+    regrets: Vec<f64>,
+    /// Frontier-cache lookups the sweep made.
+    lookups: u64,
+}
+
+fn control_sweep(fleet: &Fleet, reg: &RevisionRegistry, oracle_luts: &[Lut],
+                 oracle_adj: &[Vec<f64>], objective: Objective,
+                 space: &SearchSpace, regret_ticks: &[usize], seq: u64)
+                 -> Result<SweepOutcome> {
+    let mut reports: Vec<CohortReport> = (0..fleet.cohorts.len())
+        .map(|ci| CohortReport {
+            cohort: ci,
+            revision: reg.live(ci),
+            seq,
+            samples: 0,
+            regret_pct_sum: 0.0,
+            slo_misses: 0,
+            deploy_faults: 0,
+        })
+        .collect();
+    let mut regrets = Vec::with_capacity(regret_ticks.len() * fleet.len());
+    let mut lookups = 0u64;
+    for (ti, &tick) in regret_ticks.iter().enumerate() {
+        for idx in 0..fleet.len() {
+            let conds = storm_conditions(tick, idx,
+                                         fleet.devices[idx].has_npu());
+            let sel = fleet.select(idx, objective, space, &conds)?;
+            lookups += 1;
+            let true_lut = &oracle_luts[idx];
+            let sel_adj = adjusted_latency(true_lut, &sel, objective.stat(),
+                                           &conds)
+                .with_context(|| format!("{}: control-plane pick absent \
+                                          from the true LUT",
+                                         fleet.devices[idx].id))?;
+            let entry = true_lut.get(&sel.lut_key()).unwrap();
+            let v = fleet.registry.get(&sel.variant).unwrap();
+            let admissible =
+                perf::fits_memory(&fleet.devices[idx].profile, v)
+                    && entry.latency.avg
+                        <= fleet.devices[idx].profile
+                            .max_deployable_latency_ms;
+            let r = sel_adj / oracle_adj[ti][idx] - 1.0;
+            let rep = &mut reports[fleet.device_cohort[idx]];
+            let rv = if admissible {
+                r
+            } else {
+                rep.deploy_faults += 1;
+                r.max(0.0)
+            };
+            regrets.push(rv);
+            rep.samples += 1;
+            rep.regret_pct_sum += 100.0 * rv;
+            if sel_adj > ROLLOUT_SLO_MS {
+                rep.slo_misses += 1;
+            }
+        }
+    }
+    Ok(SweepOutcome { reports, regrets, lookups })
+}
+
+/// Drive the fleet control plane over the post-storm fleet: canary and
+/// auto-roll-back the mispredicted revision, canary → widen → promote
+/// the good one, run [`FEEDBACK_ROUNDS`] residual-feedback rounds,
+/// re-anchor drifted cohorts, and verify the closing regret round beats
+/// `pre_regret_mean` (the storm's un-rounded mean regret fraction).
+///
+/// Hard scenario invariants (rollback restores fingerprints, the bad
+/// revision dies with zero live cohorts, promotion covers the fleet,
+/// duplicates never double-count, every lookup is accounted) are always
+/// enforced; the statistical ones (residual convergence, regret
+/// improvement, selective re-anchoring) only under
+/// [`FleetBenchConfig::enforce_regret_pct`], like the storm's own
+/// acceptance gates.
+pub fn run_control_plane(fleet: &mut Fleet, managers: &mut [RuntimeManager],
+                         oracle_luts: &[Lut], cfg: &FleetBenchConfig,
+                         objective: Objective, space: &SearchSpace,
+                         recorder: Option<&Arc<FlightRecorder>>,
+                         pre_regret_mean: f64)
+                         -> Result<ControlPlaneReport> {
+    let enforce = cfg.enforce_regret_pct.is_some();
+    let step_us = (cfg.tick_ms * 1000.0) as u64;
+    let base_us = cfg.ticks as u64 * step_us;
+    let mut k = 0u64;
+    let mut advance_clock = |k: &mut u64| {
+        *k += 1;
+        if let Some(rec) = recorder {
+            rec.set_now_us(base_us + *k * step_us);
+        }
+    };
+
+    // The oracle's adjusted latency per (regret tick, device): true LUTs
+    // never change, so every sweep reuses one full-search pass.
+    let mut oracle_adj =
+        vec![vec![0.0f64; fleet.len()]; cfg.regret_ticks.len()];
+    for (ti, &tick) in cfg.regret_ticks.iter().enumerate() {
+        for idx in 0..fleet.len() {
+            let conds = storm_conditions(tick, idx,
+                                         fleet.devices[idx].has_npu());
+            let oracle = oracle_pick(fleet, idx, &oracle_luts[idx],
+                                     objective, space, &conds)?;
+            oracle_adj[ti][idx] =
+                adjusted_latency(&oracle_luts[idx], &oracle.design,
+                                 objective.stat(), &conds)
+                    .context("oracle pick absent from the true LUT")?;
+        }
+    }
+
+    let pre_cache = fleet.cache_stats();
+    let mut lookups = 0u64;
+    let rollout_cfg = RolloutConfig::default();
+    let mut reg = RevisionRegistry::new(fleet.cohorts.len());
+
+    // Pre-canary baseline round: anchors the self-controlled SLO/fault
+    // gates of both rollouts.
+    advance_clock(&mut k);
+    let baseline = control_sweep(fleet, &reg, oracle_luts, &oracle_adj,
+                                 objective, space, &cfg.regret_ticks, 0)?;
+    lookups += baseline.lookups;
+
+    // -- the mispredicted revision: canary, gate breach, auto-rollback --
+    let bad_rev = reg.register(ROLLOUT_ENGINE, ROLLOUT_BAD_FACTOR);
+    let mut bad = Rollout::new(bad_rev, rollout_cfg.clone());
+    for rep in &baseline.reports {
+        ensure!(bad.ingest(*rep, &reg) == IngestOutcome::Accepted,
+                "baseline report rejected");
+    }
+    let canary_n = rollout_cfg
+        .ladder
+        .first()
+        .copied()
+        .unwrap_or(fleet.cohorts.len())
+        .min(fleet.cohorts.len());
+    let fingerprint = |fleet: &Fleet, ci: usize| {
+        scoped_fingerprint(&fleet.cohorts[ci].lut, &fleet.registry, space)
+    };
+    let pre_fps: Vec<u64> =
+        (0..canary_n).map(|ci| fingerprint(fleet, ci)).collect();
+    advance_clock(&mut k);
+    bad.begin_canary(fleet, &mut reg)?;
+    advance_clock(&mut k);
+    let bad_sweep = control_sweep(fleet, &reg, oracle_luts, &oracle_adj,
+                                  objective, space, &cfg.regret_ticks, 1)?;
+    lookups += bad_sweep.lookups;
+    for rep in &bad_sweep.reports {
+        ensure!(bad.ingest(*rep, &reg) == IngestOutcome::Accepted,
+                "canary report rejected");
+    }
+    let bad_reason = match bad.evaluate(fleet, &mut reg) {
+        RolloutOutcome::RolledBack { reason } => reason,
+        other => bail!("mispredicted revision survived its canary: \
+                        {other:?}"),
+    };
+    ensure!(reg.live_count(bad_rev.id) == 0,
+            "bad revision still live on {} cohorts after rollback",
+            reg.live_count(bad_rev.id));
+    let post_fps: Vec<u64> =
+        (0..canary_n).map(|ci| fingerprint(fleet, ci)).collect();
+    ensure!(pre_fps == post_fps,
+            "rollback failed to restore treated cohort LUTs bit-identically");
+    let treated = bad.treated().to_vec();
+    let (mut tsum, mut tn, mut csum, mut cn) = (0.0, 0u64, 0.0, 0u64);
+    for rep in &bad_sweep.reports {
+        if treated.contains(&rep.cohort) {
+            tsum += rep.regret_pct_sum;
+            tn += rep.samples;
+        } else {
+            csum += rep.regret_pct_sum;
+            cn += rep.samples;
+        }
+    }
+    let bad_canary_regret = tsum / tn.max(1) as f64;
+    let bad_control_regret = csum / cn.max(1) as f64;
+
+    // -- the good revision: canary, widen up the ladder, promote --
+    let good_rev = reg.register(ROLLOUT_ENGINE, ROLLOUT_GOOD_FACTOR);
+    let mut good = Rollout::new(good_rev, rollout_cfg.clone());
+    for rep in &baseline.reports {
+        ensure!(good.ingest(*rep, &reg) == IngestOutcome::Accepted,
+                "baseline report rejected");
+    }
+    advance_clock(&mut k);
+    good.begin_canary(fleet, &mut reg)?;
+    let mut good_rounds = 0usize;
+    let mut seq = 2u64;
+    loop {
+        advance_clock(&mut k);
+        let sweep = control_sweep(fleet, &reg, oracle_luts, &oracle_adj,
+                                  objective, space, &cfg.regret_ticks,
+                                  seq)?;
+        lookups += sweep.lookups;
+        for rep in &sweep.reports {
+            ensure!(good.ingest(*rep, &reg) == IngestOutcome::Accepted,
+                    "widening report rejected");
+        }
+        if good_rounds == 0 {
+            // A replayed (cohort, seq) report must be discarded, never
+            // double-counted against the gates.
+            ensure!(good.ingest(sweep.reports[0], &reg)
+                        == IngestOutcome::Duplicate,
+                    "duplicate report was not rejected");
+        }
+        good_rounds += 1;
+        seq += 1;
+        match good.evaluate(fleet, &mut reg) {
+            RolloutOutcome::Promoted => break,
+            RolloutOutcome::Advanced { .. } => {}
+            other => bail!("good revision failed to advance: {other:?}"),
+        }
+        ensure!(good_rounds <= fleet.cohorts.len(),
+                "rollout failed to terminate");
+    }
+    ensure!(good.stage() == RolloutStage::Promoted
+                && reg.live_count(good_rev.id) == fleet.cohorts.len(),
+            "promotion must cover the fleet: {}/{} cohorts live",
+            reg.live_count(good_rev.id), fleet.cohorts.len());
+
+    // -- residual feedback: observe, correct through the delta path --
+    let fb_cfg = FeedbackConfig::default();
+    let mut fb = FeedbackLoop::new(fb_cfg.clone());
+    let mut residual_rounds: Vec<f64> = Vec::new();
+    let mut fb_samples = 0u64;
+    let mut fb_corrections = 0u64;
+    let mut fb_delta = DeltaOutcome::default();
+    for _ in 0..FEEDBACK_ROUNDS {
+        advance_clock(&mut k);
+        for &tick in &cfg.regret_ticks {
+            for idx in 0..fleet.len() {
+                let conds = storm_conditions(tick, idx,
+                                             fleet.devices[idx].has_npu());
+                let sel = fleet.select(idx, objective, space, &conds)?;
+                lookups += 1;
+                let ci = fleet.device_cohort[idx];
+                let key = sel.lut_key();
+                let measured = oracle_luts[idx]
+                    .get(&key)
+                    .with_context(|| format!("{}: feedback pick absent \
+                                              from the true LUT",
+                                             fleet.devices[idx].id))?
+                    .latency
+                    .avg;
+                let predicted = fleet.cohorts[ci]
+                    .lut
+                    .get(&key)
+                    .with_context(|| format!("{}: feedback pick absent \
+                                              from the cohort LUT",
+                                             fleet.cohorts[ci].id))?
+                    .latency
+                    .avg;
+                let measured_adj =
+                    adjusted_latency(&oracle_luts[idx], &sel,
+                                     objective.stat(), &conds)
+                        .context("feedback pick absent from the true LUT")?;
+                // What the device actually observed, into the manager's
+                // degradation window — the production ingest point.
+                managers[idx].record_latency(measured_adj);
+                fb.observe(ci, sel.hw.engine, measured, predicted);
+            }
+        }
+        let round = fb.apply_round(fleet);
+        fb_samples += round.samples;
+        fb_corrections += round.corrections;
+        residual_rounds.push(round.mean_abs_ln);
+        fb_delta.absorb(round.delta);
+    }
+    if enforce {
+        for w in residual_rounds.windows(2) {
+            ensure!(w[1] <= w[0] + 1e-9,
+                    "residual feedback failed to converge: \
+                     {residual_rounds:?}");
+        }
+    }
+
+    // -- re-anchor drifted cohorts, then the closing regret round --
+    advance_clock(&mut k);
+    let anchors = fb.re_anchor(fleet)?;
+    if enforce {
+        ensure!(!anchors.is_empty(),
+                "no cohort crossed the re-anchor threshold");
+        ensure!(anchors.len() < fleet.cohorts.len(),
+                "re-anchoring must stay selective: {}/{} cohorts",
+                anchors.len(), fleet.cohorts.len());
+    }
+    let builds_before_post = fleet.cache_stats().builds;
+    advance_clock(&mut k);
+    let post = control_sweep(fleet, &reg, oracle_luts, &oracle_adj,
+                             objective, space, &cfg.regret_ticks, seq)?;
+    lookups += post.lookups;
+    let post_builds = fleet.cache_stats().builds - builds_before_post;
+    let post_mean = post.regrets.iter().sum::<f64>()
+        / post.regrets.len().max(1) as f64;
+    let post_max = post.regrets.iter().fold(0.0f64, |a, &b| a.max(b));
+    let post_faults: u64 =
+        post.reports.iter().map(|r| r.deploy_faults).sum();
+    let improved = post_mean <= pre_regret_mean;
+    if enforce {
+        ensure!(improved,
+                "post-feedback mean regret {:.3}% exceeds the pre-feedback \
+                 {:.3}%",
+                100.0 * post_mean, 100.0 * pre_regret_mean);
+    }
+
+    // Every control-plane lookup accounted: the scenario cannot have
+    // contaminated the storm's regret metric (computed before it ran),
+    // and its cache traffic is fully explained by its own sweeps.
+    let after = fleet.cache_stats();
+    ensure!(after.builds + after.hits - pre_cache.builds - pre_cache.hits
+                == lookups,
+            "control-plane cache traffic unaccounted: {} lookups vs {} \
+             counted",
+            after.builds + after.hits - pre_cache.builds - pre_cache.hits,
+            lookups);
+    for c in &fleet.cohorts {
+        ensure!(c.mem_budget() == 0 || c.resident_bytes() <= c.mem_budget(),
+                "{}: resident {} B over the {} B cohort budget after the \
+                 control plane",
+                c.id, c.resident_bytes(), c.mem_budget());
+    }
+
+    Ok(ControlPlaneReport {
+        baseline_samples: baseline.reports.iter().map(|r| r.samples).sum(),
+        bad_revision: bad_rev.id,
+        bad_stage: bad.stage().name().to_string(),
+        bad_reason,
+        bad_canary_regret_pct: r3(bad_canary_regret),
+        bad_control_regret_pct: r3(bad_control_regret),
+        bad_live_cohorts: reg.live_count(bad_rev.id),
+        rollback_fingerprints_match: pre_fps == post_fps,
+        good_revision: good_rev.id,
+        good_stage: good.stage().name().to_string(),
+        good_rounds,
+        good_live_cohorts: reg.live_count(good_rev.id),
+        duplicates_rejected: good.duplicates(),
+        lookups,
+        feedback_rounds: FEEDBACK_ROUNDS,
+        feedback_samples: fb_samples,
+        feedback_corrections: fb_corrections,
+        residual_mean_abs_ln: residual_rounds.iter().map(|&v| r3(v))
+            .collect(),
+        feedback_delta_updated: fb_delta.updated,
+        feedback_delta_points_touched: fb_delta.points_touched,
+        feedback_delta_rebuild_points: fb_delta.rebuild_points,
+        re_anchored_cohorts: anchors.len(),
+        post_feedback_builds: post_builds,
+        post_regret_mean_pct: r3(100.0 * post_mean),
+        post_regret_max_pct: r3(100.0 * post_max),
+        post_deploy_faults: post_faults,
+        regret_improved: improved,
+    })
+}
+
 /// Run the fleet benchmark.
 pub fn run(registry: &Registry, cfg: &FleetBenchConfig)
            -> Result<FleetBenchReport> {
@@ -281,10 +742,13 @@ pub fn run(registry: &Registry, cfg: &FleetBenchConfig)
 }
 
 /// [`run`] with an optional flight recorder: cohort-transfer provenance,
-/// every frontier-cache transition, every per-device decide outcome and
-/// the post-storm correction land in the trace, stamped with the storm's
-/// deterministic virtual clock (µs = tick × tick_ms × 1000).  Recording
-/// never changes a decision, a cache counter, or the report.
+/// every frontier-cache transition, every per-device decide outcome, the
+/// post-storm correction and the whole control-plane scenario (rollout
+/// stage transitions, residual corrections, anchor promotions) land in
+/// the trace, stamped with the storm's deterministic virtual clock
+/// (µs = tick × tick_ms × 1000; the control plane continues the clock
+/// past the storm at the same cadence).  Recording never changes a
+/// decision, a cache counter, or the report.
 pub fn run_traced(registry: &Registry, cfg: &FleetBenchConfig,
                   recorder: Option<&Arc<FlightRecorder>>)
                   -> Result<FleetBenchReport> {
@@ -559,6 +1023,11 @@ pub fn run_traced(registry: &Registry, cfg: &FleetBenchConfig,
     let telemetry_resident_bytes: usize =
         fleet.cohorts.iter().map(|c| c.telemetry.resident_bytes()).sum();
 
+    // -- the fleet control plane: staged rollouts + residual feedback --
+    let control_plane =
+        run_control_plane(&mut fleet, &mut managers, &oracle_luts, cfg,
+                          objective, &space, recorder, regret_mean)?;
+
     Ok(FleetBenchReport {
         cfg: cfg.clone(),
         archetype_counts,
@@ -596,6 +1065,7 @@ pub fn run_traced(registry: &Registry, cfg: &FleetBenchConfig,
         mem_budget_per_cohort,
         rollup_regret,
         telemetry_resident_bytes,
+        control_plane,
     })
 }
 
@@ -721,6 +1191,59 @@ pub fn report_json(r: &FleetBenchReport) -> Value {
                       / (SIM_NS_PER_EVAL as f64
                          * r.candidates_enumerated.max(1) as f64)))),
     ]);
+    let rc = RolloutConfig::default();
+    let cp = &r.control_plane;
+    let rollout = json::obj(vec![
+        ("engine", json::s(ROLLOUT_ENGINE.name())),
+        ("ladder",
+         Value::Arr(rc.ladder.iter().map(|&n| json::num(n as f64))
+             .collect())),
+        ("min_samples", json::num(rc.min_samples as f64)),
+        ("max_regret_delta_pct", json::num(rc.max_regret_delta_pct)),
+        ("max_slo_miss_delta", json::num(rc.max_slo_miss_delta)),
+        ("max_fault_delta", json::num(rc.max_fault_delta)),
+        ("slo_ms", json::num(r3(ROLLOUT_SLO_MS))),
+        ("baseline_samples", json::num(cp.baseline_samples as f64)),
+        ("bad_revision", json::num(cp.bad_revision as f64)),
+        ("bad_factor", json::num(ROLLOUT_BAD_FACTOR)),
+        ("bad_stage", json::s(&cp.bad_stage)),
+        ("bad_reason", json::s(&cp.bad_reason)),
+        ("bad_canary_regret_pct", json::num(cp.bad_canary_regret_pct)),
+        ("bad_control_regret_pct", json::num(cp.bad_control_regret_pct)),
+        ("bad_live_cohorts", json::num(cp.bad_live_cohorts as f64)),
+        ("rollback_fingerprints_match",
+         Value::Bool(cp.rollback_fingerprints_match)),
+        ("good_revision", json::num(cp.good_revision as f64)),
+        ("good_factor", json::num(ROLLOUT_GOOD_FACTOR)),
+        ("good_stage", json::s(&cp.good_stage)),
+        ("good_rounds", json::num(cp.good_rounds as f64)),
+        ("good_live_cohorts", json::num(cp.good_live_cohorts as f64)),
+        ("duplicates_rejected", json::num(cp.duplicates_rejected as f64)),
+        ("lookups", json::num(cp.lookups as f64)),
+    ]);
+    let feedback = json::obj(vec![
+        ("rounds", json::num(cp.feedback_rounds as f64)),
+        ("samples", json::num(cp.feedback_samples as f64)),
+        ("corrections", json::num(cp.feedback_corrections as f64)),
+        ("mean_abs_ln",
+         Value::Arr(cp.residual_mean_abs_ln.iter().map(|&v| json::num(v))
+             .collect())),
+        ("delta_updated", json::num(cp.feedback_delta_updated as f64)),
+        ("delta_points_touched",
+         json::num(cp.feedback_delta_points_touched as f64)),
+        ("delta_rebuild_points",
+         json::num(cp.feedback_delta_rebuild_points as f64)),
+        ("re_anchor_threshold",
+         json::num(FeedbackConfig::default().re_anchor_threshold)),
+        ("re_anchored_cohorts", json::num(cp.re_anchored_cohorts as f64)),
+        ("post_feedback_builds",
+         json::num(cp.post_feedback_builds as f64)),
+        ("pre_regret_mean_pct", json::num(r.regret_mean_pct)),
+        ("post_regret_mean_pct", json::num(cp.post_regret_mean_pct)),
+        ("post_regret_max_pct", json::num(cp.post_regret_max_pct)),
+        ("post_deploy_faults", json::num(cp.post_deploy_faults as f64)),
+        ("regret_improved", Value::Bool(cp.regret_improved)),
+    ]);
     json::obj(vec![(
         "fleet_bench",
         json::obj(vec![
@@ -732,6 +1255,8 @@ pub fn report_json(r: &FleetBenchReport) -> Value {
             ("regret", regret),
             ("delta", delta),
             ("cache", cache),
+            ("rollout", rollout),
+            ("feedback", feedback),
         ]),
     )])
 }
@@ -783,6 +1308,28 @@ pub fn print(registry: &Registry, cfg: &FleetBenchConfig,
     println!("memory: {} resident bytes across {} cohort caches \
               ({} B budget per cohort)",
              r.resident_bytes, r.cohorts.len(), r.mem_budget_per_cohort);
+    let cp = &r.control_plane;
+    println!("rollout: bad revision {} ({} x{:.2}) {} at canary \
+              ({}; treated {:.3}% vs control {:.3}%, {} live, \
+              fingerprints restored: {}); good revision {} ({} x{:.2}) \
+              {} fleet-wide in {} rounds ({} cohorts live); \
+              {} duplicate report(s) rejected, {} lookups",
+             cp.bad_revision, ROLLOUT_ENGINE.name(), ROLLOUT_BAD_FACTOR,
+             cp.bad_stage, cp.bad_reason, cp.bad_canary_regret_pct,
+             cp.bad_control_regret_pct, cp.bad_live_cohorts,
+             cp.rollback_fingerprints_match, cp.good_revision,
+             ROLLOUT_ENGINE.name(), ROLLOUT_GOOD_FACTOR, cp.good_stage,
+             cp.good_rounds, cp.good_live_cohorts, cp.duplicates_rejected,
+             cp.lookups);
+    println!("feedback: {} rounds, {} residuals, {} corrections, \
+              mean |ln| {:?}; {} cohorts re-anchored \
+              ({} closing-round rebuilds), regret {:.3}% -> {:.3}% \
+              (improved: {}, {} deploy faults)",
+             cp.feedback_rounds, cp.feedback_samples,
+             cp.feedback_corrections, cp.residual_mean_abs_ln,
+             cp.re_anchored_cohorts, cp.post_feedback_builds,
+             r.regret_mean_pct, cp.post_regret_mean_pct,
+             cp.regret_improved, cp.post_deploy_faults);
     if let Some(s) = &r.rollup_regret {
         println!("telemetry rollup: regret p50 {:.3}% p99 {:.3}% max {:.3}% \
                   over {} samples merged from {} cohort sinks \

@@ -1,0 +1,213 @@
+//! Online residual feedback: measured-vs-predicted latency corrections
+//! and automatic anchor promotion.
+//!
+//! Devices already observe their true latencies — every executed design
+//! lands in [`crate::manager::RuntimeManager::record_latency`] — while
+//! their cohort decides from a *transferred* LUT.  This module closes
+//! that loop:
+//!
+//! * [`FeedbackLoop::observe`] folds one execution's
+//!   `ln(measured / predicted)` residual into a per-(cohort, engine)
+//!   accumulator.
+//! * [`FeedbackLoop::apply_round`] distils each accumulator with enough
+//!   samples into a multiplicative correction
+//!   `exp(mean ln residual)` — the geometric mean of the observed
+//!   ratios, exactly the probe fallback's correction shape — and applies
+//!   it through the incremental frontier delta path
+//!   ([`Fleet::apply_cohort_scale`]), so every shared cache carries its
+//!   warm frontiers across the corrected LUT.  Each applied correction
+//!   is recorded as a [`TraceEvent::Residual`].
+//! * [`FeedbackLoop::re_anchor`] watches the per-cohort accumulated
+//!   `|ln correction|` magnitude: when it crosses the configured
+//!   threshold the cohort's first member is promoted to a measured
+//!   anchor ([`Fleet::re_anchor_cohort`]) — the continuous version of
+//!   the probe fallback — bounding worst-case transfer distance as the
+//!   population drifts.  Recorded as [`TraceEvent::ReAnchor`].
+//!
+//! Because corrections are uniform per-engine rescales, repeated rounds
+//! converge: after a correction the cohort's predicted latencies carry
+//! the geometric-mean of the observed truth, so the next round's
+//! residuals shrink towards the irreducible intra-cohort spread.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::Result;
+
+use crate::designspace::DeltaOutcome;
+use crate::device::EngineKind;
+use crate::telemetry::trace::{round3, TraceEvent};
+
+use super::Fleet;
+
+/// Feedback-loop thresholds.
+#[derive(Debug, Clone)]
+pub struct FeedbackConfig {
+    /// Minimum residual samples a (cohort, engine) cell needs before a
+    /// correction is distilled from it.
+    pub min_samples: u64,
+    /// Accumulated per-cohort `|ln correction|` above which the cohort
+    /// representative is promoted to a measured anchor.
+    pub re_anchor_threshold: f64,
+}
+
+impl Default for FeedbackConfig {
+    fn default() -> Self {
+        FeedbackConfig { min_samples: 2, re_anchor_threshold: 0.15 }
+    }
+}
+
+/// One (cohort, engine) residual accumulator cell.
+#[derive(Debug, Clone, Copy, Default)]
+struct Cell {
+    sum_ln: f64,
+    sum_abs_ln: f64,
+    samples: u64,
+}
+
+/// Aggregate outcome of one [`FeedbackLoop::apply_round`] call.
+#[derive(Debug, Clone, Default)]
+pub struct FeedbackRound {
+    /// Residual observations folded this round.
+    pub samples: u64,
+    /// Mean `|ln(measured / predicted)|` over the round's observations.
+    pub mean_abs_ln: f64,
+    /// (cohort, engine) corrections applied.
+    pub corrections: u64,
+    /// Aggregate frontier-delta outcome of the applied corrections.
+    pub delta: DeltaOutcome,
+}
+
+/// One anchor promotion performed by [`FeedbackLoop::re_anchor`].
+#[derive(Debug, Clone)]
+pub struct ReAnchorOutcome {
+    /// Cohort index promoted (canonical order).
+    pub cohort: usize,
+    /// Device measured as the new anchor.
+    pub device: String,
+    /// Accumulated `|ln correction|` that tripped the threshold.
+    pub magnitude: f64,
+    /// Entries in the freshly measured LUT.
+    pub entries: usize,
+}
+
+/// The per-fleet online feedback loop.
+#[derive(Debug, Default)]
+pub struct FeedbackLoop {
+    cfg: FeedbackConfig,
+    cells: BTreeMap<(usize, EngineKind), Cell>,
+    accumulated: BTreeMap<usize, f64>,
+    re_anchored: BTreeSet<usize>,
+}
+
+impl FeedbackLoop {
+    /// A loop with the given thresholds.
+    pub fn new(cfg: FeedbackConfig) -> FeedbackLoop {
+        FeedbackLoop { cfg, ..Default::default() }
+    }
+
+    /// The active thresholds.
+    pub fn cfg(&self) -> &FeedbackConfig {
+        &self.cfg
+    }
+
+    /// Fold one executed design's measured latency against the cohort
+    /// LUT's prediction for it.  Non-positive inputs are discarded
+    /// (nothing meaningful can be logged about them).
+    pub fn observe(&mut self, cohort: usize, engine: EngineKind,
+                   measured_ms: f64, predicted_ms: f64) {
+        if measured_ms <= 0.0
+            || predicted_ms <= 0.0
+            || !measured_ms.is_finite()
+            || !predicted_ms.is_finite()
+        {
+            return;
+        }
+        let ln = (measured_ms / predicted_ms).ln();
+        let cell = self.cells.entry((cohort, engine)).or_default();
+        cell.sum_ln += ln;
+        cell.sum_abs_ln += ln.abs();
+        cell.samples += 1;
+    }
+
+    /// Residual observations awaiting the next round.
+    pub fn pending_samples(&self) -> u64 {
+        self.cells.values().map(|c| c.samples).sum()
+    }
+
+    /// A cohort's accumulated `|ln correction|` magnitude (reset to 0 by
+    /// a re-anchor).
+    pub fn accumulated(&self, cohort: usize) -> f64 {
+        self.accumulated.get(&cohort).copied().unwrap_or(0.0)
+    }
+
+    /// Cohorts promoted to measured anchors so far, ascending.
+    pub fn re_anchored(&self) -> Vec<usize> {
+        self.re_anchored.iter().copied().collect()
+    }
+
+    /// Distil every cell with at least `min_samples` observations into a
+    /// geometric-mean correction, apply it through the delta path, and
+    /// drain the accumulators.  Cells are visited in (cohort, engine)
+    /// order, so the correction stream is deterministic.
+    pub fn apply_round(&mut self, fleet: &mut Fleet) -> FeedbackRound {
+        let cells = std::mem::take(&mut self.cells);
+        let mut round = FeedbackRound::default();
+        let mut sum_abs_ln = 0.0;
+        for ((ci, engine), cell) in cells {
+            round.samples += cell.samples;
+            sum_abs_ln += cell.sum_abs_ln;
+            if cell.samples < self.cfg.min_samples {
+                continue;
+            }
+            let mean_ln = cell.sum_ln / cell.samples as f64;
+            let factor = mean_ln.exp();
+            round.delta.absorb(fleet.apply_cohort_scale(ci, engine, factor));
+            round.corrections += 1;
+            *self.accumulated.entry(ci).or_insert(0.0) += mean_ln.abs();
+            if let Some(rec) = &fleet.recorder {
+                rec.emit(TraceEvent::Residual {
+                    cohort: fleet.cohorts[ci].id.clone(),
+                    engine: engine.name().to_string(),
+                    samples: cell.samples,
+                    factor: round3(factor),
+                });
+            }
+        }
+        round.mean_abs_ln = if round.samples == 0 {
+            0.0
+        } else {
+            sum_abs_ln / round.samples as f64
+        };
+        round
+    }
+
+    /// Promote every cohort whose accumulated correction magnitude
+    /// crossed the threshold to a measured anchor, resetting its
+    /// magnitude.  Visits cohorts in ascending order.
+    pub fn re_anchor(&mut self, fleet: &mut Fleet)
+                     -> Result<Vec<ReAnchorOutcome>> {
+        let tripped: Vec<(usize, f64)> = self
+            .accumulated
+            .iter()
+            .filter(|&(_, &m)| m > self.cfg.re_anchor_threshold)
+            .map(|(&ci, &m)| (ci, m))
+            .collect();
+        let mut outcomes = Vec::new();
+        for (ci, magnitude) in tripped {
+            let (device, entries) = fleet.re_anchor_cohort(ci)?;
+            self.accumulated.insert(ci, 0.0);
+            self.re_anchored.insert(ci);
+            if let Some(rec) = &fleet.recorder {
+                rec.emit(TraceEvent::ReAnchor {
+                    cohort: fleet.cohorts[ci].id.clone(),
+                    device: device.clone(),
+                    magnitude: round3(magnitude),
+                    entries: entries as u64,
+                });
+            }
+            outcomes.push(ReAnchorOutcome { cohort: ci, device, magnitude,
+                                            entries });
+        }
+        Ok(outcomes)
+    }
+}

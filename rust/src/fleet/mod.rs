@@ -28,15 +28,31 @@
 //!   [`crate::manager::RuntimeManager`] path, each manager pointed at its
 //!   cohort's representative device, LUT and shared cache.
 //!
+//! * [`rollout`] / [`feedback`] — the fleet **control plane**: staged
+//!   canary rollouts of versioned LUT revisions gated on live cohort
+//!   telemetry, and an online residual feedback loop that folds
+//!   measured-vs-predicted latencies into per-cohort per-engine LUT
+//!   corrections, promoting drifted cohorts to measured anchors.
+//!
 //! `oodin fleet-bench` ([`crate::experiments::fleetbench`]) drives a
 //! scripted condition storm across the fleet and reports transferred-LUT
 //! decision regret against a full-profile oracle, cohort cache hit rates,
-//! and per-device adaptation decision counts.
+//! and per-device adaptation decision counts — then a rollout scenario:
+//! a deliberately mispredicted revision must auto-roll-back off its
+//! canary cohorts while a good one promotes fleet-wide, followed by
+//! residual-feedback rounds that must not worsen mean decision regret.
 
+pub mod feedback;
 pub mod population;
+pub mod rollout;
 pub mod transfer;
 
+pub use feedback::{FeedbackConfig, FeedbackLoop, FeedbackRound,
+                   ReAnchorOutcome};
 pub use population::{CohortKey, PopulationConfig, SampledDevice};
+pub use rollout::{CohortReport, IngestOutcome, Revision, RevisionRegistry,
+                  Rollout, RolloutConfig, RolloutOutcome, RolloutStage,
+                  BASELINE_REVISION};
 pub use transfer::{Anchor, EngineTransfer, TransferConfig, TransferEngine,
                    TransferredLut};
 
@@ -353,20 +369,9 @@ impl Fleet {
     /// shared caches).
     pub fn apply_engine_correction(&mut self, engine: EngineKind,
                                    factor: f64) -> DeltaOutcome {
-        let delta = LutDelta::engine_scale(engine, factor);
         let mut total = DeltaOutcome::default();
-        for cohort in &mut self.cohorts {
-            let new_lut = Arc::new(cohort.lut.scaled_engine(engine, factor));
-            let outcome = {
-                let old_ds = DesignSpace::new(&cohort.rep, &self.registry,
-                                              &cohort.lut);
-                let new_ds = DesignSpace::new(&cohort.rep, &self.registry,
-                                              &new_lut);
-                cohort.cache.lock().unwrap().apply_delta(&old_ds, &new_ds,
-                                                         &delta)
-            };
-            cohort.lut = new_lut;
-            total.absorb(outcome);
+        for ci in 0..self.cohorts.len() {
+            total.absorb(self.apply_cohort_scale(ci, engine, factor));
         }
         // The per-cohort `FrontierDelta` events above come from the
         // caches themselves; this is the fleet-level aggregate.
@@ -379,6 +384,56 @@ impl Fleet {
             });
         }
         total
+    }
+
+    /// Scale one cohort's LUT on `engine` by `factor` (the probe
+    /// fallback's correction shape), carrying that cohort's shared
+    /// frontier cache across the transition in place.  The per-cohort
+    /// primitive behind [`Fleet::apply_engine_correction`], staged
+    /// rollouts ([`rollout::Rollout`]) and residual feedback
+    /// ([`feedback::FeedbackLoop`]).
+    pub fn apply_cohort_scale(&mut self, cohort_idx: usize,
+                              engine: EngineKind, factor: f64)
+                              -> DeltaOutcome {
+        let new_lut = Arc::new(
+            self.cohorts[cohort_idx].lut.scaled_engine(engine, factor));
+        let delta = LutDelta::engine_scale(engine, factor);
+        self.swap_cohort_lut(cohort_idx, new_lut, &delta)
+    }
+
+    /// Replace one cohort's LUT with `new_lut`, carrying the cohort's
+    /// shared frontier cache across the transition described by `delta`.
+    /// Exact whenever `delta` covers every difference between the LUTs
+    /// (rollback restores a snapshot this way: re-scoring reads the
+    /// restored LUT directly, so carried frontiers and their scope
+    /// fingerprints land bit-identical to the pre-transition state).
+    pub fn swap_cohort_lut(&mut self, cohort_idx: usize, new_lut: Arc<Lut>,
+                           delta: &LutDelta) -> DeltaOutcome {
+        let cohort = &mut self.cohorts[cohort_idx];
+        let outcome = {
+            let old_ds = DesignSpace::new(&cohort.rep, &self.registry,
+                                          &cohort.lut);
+            let new_ds = DesignSpace::new(&cohort.rep, &self.registry,
+                                          &new_lut);
+            cohort.cache.lock().unwrap().apply_delta(&old_ds, &new_ds, delta)
+        };
+        cohort.lut = new_lut;
+        outcome
+    }
+
+    /// Promote a cohort's first member to a measured anchor: replace the
+    /// transferred LUT with a full measurement sweep of that device's
+    /// *true* profile.  This is an undescribed LUT change, so the
+    /// cohort's cached frontiers invalidate lazily on their next lookup
+    /// (scope-fingerprint mismatch) and rebuild on demand.  Returns the
+    /// measured device's id and the fresh LUT's entry count.
+    pub fn re_anchor_cohort(&mut self, cohort_idx: usize)
+                            -> Result<(String, usize)> {
+        let member = self.cohorts[cohort_idx].members[0];
+        let lut = self.oracle_lut(member)?;
+        let entries = lut.len();
+        self.cohorts[cohort_idx].lut = Arc::new(lut);
+        Ok((self.devices[member].id.clone(), entries))
     }
 
     /// Accounted resident frontier bytes summed over every cohort cache.

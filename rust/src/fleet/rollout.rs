@@ -1,0 +1,576 @@
+//! Staged cohort rollouts: a versioned LUT-revision registry and a
+//! canary state machine over [`Fleet`].
+//!
+//! The fleet layer makes the population *decide* like production, but a
+//! control plane that can push a bad LUT revision to every cohort at
+//! once is worse than no control plane.  This module gates revision
+//! exposure the way real fleets do:
+//!
+//! * [`RevisionRegistry`] — monotone revision ids with a per-cohort
+//!   live-assignment table; a cohort carries exactly one live revision
+//!   (id 0 is the transferred baseline), and a second rollout cannot
+//!   claim a cohort that already carries one.
+//! * [`Rollout`] — the stage machine
+//!   `Proposed → Canary → Widening(rung)* → Promoted | RolledBack`.
+//!   Each stage applies the revision to a prefix of the canonical cohort
+//!   order through the incremental frontier delta path
+//!   ([`Fleet::apply_cohort_scale`]), snapshotting every treated
+//!   cohort's LUT first.  Stage transitions are driven exclusively by
+//!   [`CohortReport`] telemetry: observed decision regret on treated
+//!   cohorts versus the untreated controls, and SLO-miss / deploy-fault
+//!   rates versus the *same* cohorts' pre-canary baseline (reports
+//!   ingested while still `Proposed`) — a difference-in-differences
+//!   gate, because absolute miss rates are cohort-structural and the
+//!   canary prefix is not a representative sample.  Minimum-sample
+//!   guards and per-stage fresh-evidence resets apply throughout.
+//!   Any gate breach rolls every treated cohort back onto its exact
+//!   snapshot (bit-identical scoped fingerprints), carried through the
+//!   same delta path so the shared frontier caches stay warm.
+//!
+//! Telemetry ingestion is defensive: duplicate `(cohort, seq)` reports
+//! never double-count, reports tagged with a revision that is no longer
+//! live on their cohort are rejected as stale, and a silent cohort holds
+//! the stage forever — promotion requires affirmative evidence from
+//! *every* treated cohort.
+//!
+//! Every transition is recorded as a [`TraceEvent::Rollout`] through the
+//! fleet's attached flight recorder, so rollout causality is replayable
+//! next to the adaptation and frontier events it perturbs.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::designspace::{DeltaOutcome, LutDelta};
+use crate::device::EngineKind;
+use crate::measurements::Lut;
+use crate::telemetry::trace::TraceEvent;
+
+use super::Fleet;
+
+/// The revision id every cohort starts on: the transferred baseline LUT.
+pub const BASELINE_REVISION: u64 = 0;
+
+/// One versioned LUT revision: a uniform per-engine latency rescale of
+/// whatever LUT a cohort currently carries (the same shape the probe
+/// fallback and the residual feedback loop produce).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Revision {
+    /// Monotone id issued by the [`RevisionRegistry`] (0 = baseline).
+    pub id: u64,
+    /// Engine the revision rescales.
+    pub engine: EngineKind,
+    /// Multiplicative latency factor the revision applies.
+    pub factor: f64,
+}
+
+/// Monotone revision ids plus the per-cohort live-assignment table.
+#[derive(Debug, Clone)]
+pub struct RevisionRegistry {
+    next: u64,
+    revisions: BTreeMap<u64, Revision>,
+    assigned: Vec<u64>,
+}
+
+impl RevisionRegistry {
+    /// A registry for `cohorts` cohorts, all on [`BASELINE_REVISION`].
+    pub fn new(cohorts: usize) -> Self {
+        RevisionRegistry {
+            next: 1,
+            revisions: BTreeMap::new(),
+            assigned: vec![BASELINE_REVISION; cohorts],
+        }
+    }
+
+    /// Mint the next revision id for an engine-scale revision.
+    pub fn register(&mut self, engine: EngineKind, factor: f64) -> Revision {
+        let rev = Revision { id: self.next, engine, factor };
+        self.next += 1;
+        self.revisions.insert(rev.id, rev);
+        rev
+    }
+
+    /// Look up a registered revision.
+    pub fn get(&self, id: u64) -> Option<Revision> {
+        self.revisions.get(&id).copied()
+    }
+
+    /// The revision currently live on a cohort (0 = baseline).
+    pub fn live(&self, cohort: usize) -> u64 {
+        self.assigned[cohort]
+    }
+
+    /// The full per-cohort assignment table.
+    pub fn assigned(&self) -> &[u64] {
+        &self.assigned
+    }
+
+    /// Cohorts currently carrying `id`.
+    pub fn live_count(&self, id: u64) -> usize {
+        self.assigned.iter().filter(|&&a| a == id).count()
+    }
+
+    fn assign(&mut self, cohort: usize, id: u64) {
+        self.assigned[cohort] = id;
+    }
+}
+
+/// Rollout stage machine states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RolloutStage {
+    /// Registered, nothing applied yet.
+    Proposed,
+    /// Live on the first ladder rung of cohorts.
+    Canary,
+    /// Live on rung `n` of the widening ladder (1-based).
+    Widening(usize),
+    /// Live fleet-wide; every gate passed at every rung.
+    Promoted,
+    /// Reverted; every treated cohort restored to its exact snapshot.
+    RolledBack,
+}
+
+impl RolloutStage {
+    /// Stable snake_case name (the trace `stage` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RolloutStage::Proposed => "proposed",
+            RolloutStage::Canary => "canary",
+            RolloutStage::Widening(_) => "widening",
+            RolloutStage::Promoted => "promoted",
+            RolloutStage::RolledBack => "rolled_back",
+        }
+    }
+}
+
+/// Gate thresholds and the widening ladder.
+#[derive(Debug, Clone)]
+pub struct RolloutConfig {
+    /// Cumulative treated-cohort counts per rung, in canonical cohort
+    /// order; past the last rung the next advance treats every cohort.
+    pub ladder: Vec<usize>,
+    /// Max tolerated (treated − control) mean decision regret, in pct
+    /// points.
+    pub max_regret_delta_pct: f64,
+    /// Absolute mean-regret bound used when no control cohort remains
+    /// (the final fleet-wide rung).
+    pub max_abs_regret_pct: f64,
+    /// Max tolerated SLO-miss rate increase of the treated cohorts over
+    /// their own pre-canary baseline.
+    pub max_slo_miss_delta: f64,
+    /// Max tolerated deploy-fault rate increase of the treated cohorts
+    /// over their own pre-canary baseline.
+    pub max_fault_delta: f64,
+    /// Minimum accepted samples per treated cohort per stage before the
+    /// gates may be evaluated at all.
+    pub min_samples: u64,
+}
+
+impl Default for RolloutConfig {
+    fn default() -> Self {
+        RolloutConfig {
+            ladder: vec![4, 7, 14],
+            max_regret_delta_pct: 2.0,
+            max_abs_regret_pct: 5.0,
+            max_slo_miss_delta: 0.1,
+            max_fault_delta: 0.0,
+            min_samples: 2,
+        }
+    }
+}
+
+/// One cohort's telemetry report for one evaluation round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CohortReport {
+    /// Reporting cohort index (canonical order).
+    pub cohort: usize,
+    /// Revision the cohort believes it is running.
+    pub revision: u64,
+    /// Per-cohort monotone report sequence number (the dedup key).
+    pub seq: u64,
+    /// Decision samples aggregated into this report.
+    pub samples: u64,
+    /// Sum of per-decision regret percentages over those samples.
+    pub regret_pct_sum: f64,
+    /// Decisions whose observed latency missed the SLO.
+    pub slo_misses: u64,
+    /// Decisions whose selected design was undeployable on the device.
+    pub deploy_faults: u64,
+}
+
+/// What [`Rollout::ingest`] did with a report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IngestOutcome {
+    /// Counted towards the gates.
+    Accepted,
+    /// `(cohort, seq)` already seen — discarded, never double-counted.
+    Duplicate,
+    /// Tagged with a revision that is not live on the cohort — discarded.
+    Stale,
+    /// Cohort index out of range — discarded.
+    UnknownCohort,
+}
+
+/// What one [`Rollout::evaluate`] call decided.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RolloutOutcome {
+    /// Gates could not be evaluated (not live, or missing evidence).
+    Held {
+        /// Why the stage was held.
+        reason: String,
+    },
+    /// Every gate passed; the revision widened to the next rung.
+    Advanced {
+        /// Stage entered.
+        stage: RolloutStage,
+        /// Treated cohorts after widening.
+        treated: usize,
+    },
+    /// Every gate passed fleet-wide; the revision is the new baseline.
+    Promoted,
+    /// A gate breached; every treated cohort restored to its snapshot.
+    RolledBack {
+        /// The breached gate.
+        reason: String,
+    },
+}
+
+/// Accumulated gate evidence for one side (treated cohort or controls).
+#[derive(Debug, Clone, Copy, Default)]
+struct GateStats {
+    samples: u64,
+    regret_pct_sum: f64,
+    slo_misses: u64,
+    deploy_faults: u64,
+}
+
+impl GateStats {
+    fn fold(&mut self, r: &CohortReport) {
+        self.samples += r.samples;
+        self.regret_pct_sum += r.regret_pct_sum;
+        self.slo_misses += r.slo_misses;
+        self.deploy_faults += r.deploy_faults;
+    }
+
+    fn regret_mean(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.regret_pct_sum / self.samples as f64
+        }
+    }
+
+    fn slo_rate(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.slo_misses as f64 / self.samples as f64
+        }
+    }
+
+    fn fault_rate(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.deploy_faults as f64 / self.samples as f64
+        }
+    }
+}
+
+/// The staged-rollout state machine shepherding one [`Revision`] across
+/// a [`Fleet`].
+#[derive(Debug)]
+pub struct Rollout {
+    cfg: RolloutConfig,
+    revision: Revision,
+    stage: RolloutStage,
+    treated: Vec<usize>,
+    snapshots: BTreeMap<usize, Arc<Lut>>,
+    baseline: BTreeMap<usize, GateStats>,
+    treated_stats: BTreeMap<usize, GateStats>,
+    control_stats: GateStats,
+    seen: BTreeSet<(usize, u64)>,
+    duplicates: u64,
+    stale: u64,
+}
+
+impl Rollout {
+    /// A rollout for `revision` in stage [`RolloutStage::Proposed`].
+    pub fn new(revision: Revision, cfg: RolloutConfig) -> Rollout {
+        Rollout {
+            cfg,
+            revision,
+            stage: RolloutStage::Proposed,
+            treated: Vec::new(),
+            snapshots: BTreeMap::new(),
+            baseline: BTreeMap::new(),
+            treated_stats: BTreeMap::new(),
+            control_stats: GateStats::default(),
+            seen: BTreeSet::new(),
+            duplicates: 0,
+            stale: 0,
+        }
+    }
+
+    /// Current stage.
+    pub fn stage(&self) -> RolloutStage {
+        self.stage
+    }
+
+    /// The revision under rollout.
+    pub fn revision(&self) -> Revision {
+        self.revision
+    }
+
+    /// Cohorts currently (or, after a rollback, formerly) treated, in
+    /// claim order (ascending canonical cohort index).
+    pub fn treated(&self) -> &[usize] {
+        &self.treated
+    }
+
+    /// Duplicate reports rejected so far.
+    pub fn duplicates(&self) -> u64 {
+        self.duplicates
+    }
+
+    /// Stale reports rejected so far.
+    pub fn stale_reports(&self) -> u64 {
+        self.stale
+    }
+
+    /// Apply the revision to the first ladder rung of cohorts (snapshot,
+    /// scale through the delta path, assign) and enter
+    /// [`RolloutStage::Canary`].  Fails without side effects if the
+    /// rollout already left `Proposed` or any target cohort carries
+    /// another live revision.
+    pub fn begin_canary(&mut self, fleet: &mut Fleet,
+                        reg: &mut RevisionRegistry)
+                        -> Result<DeltaOutcome> {
+        if self.stage != RolloutStage::Proposed {
+            bail!("revision {} rollout already {}", self.revision.id,
+                  self.stage.name());
+        }
+        let n = self
+            .cfg
+            .ladder
+            .first()
+            .copied()
+            .unwrap_or(fleet.cohorts.len())
+            .clamp(1, fleet.cohorts.len());
+        for ci in 0..n {
+            if reg.live(ci) != BASELINE_REVISION {
+                bail!("cohort {} already carries live revision {}",
+                      fleet.cohorts[ci].id, reg.live(ci));
+            }
+        }
+        let out = self.extend_to(fleet, reg, n);
+        self.stage = RolloutStage::Canary;
+        self.emit_stage(fleet, self.treated.len() as u64, "");
+        Ok(out)
+    }
+
+    /// Fold one telemetry report into the gate evidence.  Reports
+    /// ingested while still [`RolloutStage::Proposed`] become the
+    /// per-cohort pre-canary baseline the SLO and fault gates compare
+    /// against.
+    pub fn ingest(&mut self, report: CohortReport, reg: &RevisionRegistry)
+                  -> IngestOutcome {
+        if report.cohort >= reg.assigned().len() {
+            return IngestOutcome::UnknownCohort;
+        }
+        if !self.seen.insert((report.cohort, report.seq)) {
+            self.duplicates += 1;
+            return IngestOutcome::Duplicate;
+        }
+        if report.revision != reg.live(report.cohort) {
+            self.stale += 1;
+            return IngestOutcome::Stale;
+        }
+        if self.stage == RolloutStage::Proposed {
+            self.baseline.entry(report.cohort).or_default().fold(&report);
+        } else if self.treated.contains(&report.cohort) {
+            self.treated_stats
+                .entry(report.cohort)
+                .or_default()
+                .fold(&report);
+        } else {
+            self.control_stats.fold(&report);
+        }
+        IngestOutcome::Accepted
+    }
+
+    /// Evaluate the gates on the evidence accepted since the last stage
+    /// transition: hold on missing or thin evidence, roll back on any
+    /// breach, otherwise widen one rung (or promote fleet-wide).
+    pub fn evaluate(&mut self, fleet: &mut Fleet,
+                    reg: &mut RevisionRegistry) -> RolloutOutcome {
+        match self.stage {
+            RolloutStage::Canary | RolloutStage::Widening(_) => {}
+            _ => {
+                return RolloutOutcome::Held {
+                    reason: format!("stage_{}", self.stage.name()),
+                }
+            }
+        }
+        // Gate 0: affirmative fresh evidence from every treated cohort.
+        for &ci in &self.treated {
+            match self.treated_stats.get(&ci) {
+                None => {
+                    return self.hold(fleet,
+                                     format!("missing_reports:{}",
+                                             fleet.cohorts[ci].id));
+                }
+                Some(s) if s.samples < self.cfg.min_samples => {
+                    return self.hold(fleet,
+                                     format!("insufficient_samples:{}",
+                                             fleet.cohorts[ci].id));
+                }
+                Some(_) => {}
+            }
+        }
+        let mut treated = GateStats::default();
+        for s in self.treated_stats.values() {
+            treated.samples += s.samples;
+            treated.regret_pct_sum += s.regret_pct_sum;
+            treated.slo_misses += s.slo_misses;
+            treated.deploy_faults += s.deploy_faults;
+        }
+        let control = self.control_stats;
+        // SLO and fault gates are difference-in-differences: the treated
+        // cohorts' current rates against the same cohorts' pre-canary
+        // baseline.  With no baseline evidence the rates compare against
+        // zero, which degrades to the conservative absolute gate.
+        let mut base = GateStats::default();
+        for &ci in &self.treated {
+            if let Some(s) = self.baseline.get(&ci) {
+                base.samples += s.samples;
+                base.regret_pct_sum += s.regret_pct_sum;
+                base.slo_misses += s.slo_misses;
+                base.deploy_faults += s.deploy_faults;
+            }
+        }
+        let breach = if control.samples > 0
+            && treated.regret_mean() - control.regret_mean()
+                > self.cfg.max_regret_delta_pct
+        {
+            Some(format!("regret_delta:{:.3}",
+                         treated.regret_mean() - control.regret_mean()))
+        } else if control.samples == 0
+            && treated.regret_mean() > self.cfg.max_abs_regret_pct
+        {
+            Some(format!("regret_abs:{:.3}", treated.regret_mean()))
+        } else if treated.slo_rate() - base.slo_rate()
+            > self.cfg.max_slo_miss_delta
+        {
+            Some(format!("slo_delta:{:.3}",
+                         treated.slo_rate() - base.slo_rate()))
+        } else if treated.fault_rate() - base.fault_rate()
+            > self.cfg.max_fault_delta
+        {
+            Some(format!("fault_delta:{:.3}",
+                         treated.fault_rate() - base.fault_rate()))
+        } else {
+            None
+        };
+        if let Some(reason) = breach {
+            return self.roll_back(fleet, reg, reason);
+        }
+        let all = fleet.cohorts.len();
+        if self.treated.len() >= all {
+            self.stage = RolloutStage::Promoted;
+            self.snapshots.clear();
+            self.emit_stage(fleet, all as u64, "");
+            return RolloutOutcome::Promoted;
+        }
+        let next_rung = match self.stage {
+            RolloutStage::Canary => 1,
+            RolloutStage::Widening(k) => k + 1,
+            _ => unreachable!("evaluate gated on live stages"),
+        };
+        let target = self
+            .cfg
+            .ladder
+            .get(next_rung)
+            .copied()
+            .unwrap_or(all)
+            .max(self.treated.len() + 1)
+            .min(all);
+        // A cohort can carry exactly one live revision: a conflicting
+        // claim holds the widening instead of stacking revisions.
+        for ci in 0..target {
+            if !self.snapshots.contains_key(&ci)
+                && reg.live(ci) != BASELINE_REVISION
+            {
+                return self.hold(fleet,
+                                 format!("cohort_conflict:{}",
+                                         fleet.cohorts[ci].id));
+            }
+        }
+        self.extend_to(fleet, reg, target);
+        self.stage = RolloutStage::Widening(next_rung);
+        // Each stage requires fresh evidence at the new exposure.
+        self.treated_stats.clear();
+        self.control_stats = GateStats::default();
+        self.emit_stage(fleet, self.treated.len() as u64, "");
+        RolloutOutcome::Advanced {
+            stage: self.stage,
+            treated: self.treated.len(),
+        }
+    }
+
+    fn extend_to(&mut self, fleet: &mut Fleet, reg: &mut RevisionRegistry,
+                 n: usize) -> DeltaOutcome {
+        let mut total = DeltaOutcome::default();
+        for ci in 0..n {
+            if self.snapshots.contains_key(&ci) {
+                continue;
+            }
+            debug_assert_eq!(reg.live(ci), BASELINE_REVISION);
+            self.snapshots.insert(ci, Arc::clone(&fleet.cohorts[ci].lut));
+            total.absorb(fleet.apply_cohort_scale(ci, self.revision.engine,
+                                                  self.revision.factor));
+            reg.assign(ci, self.revision.id);
+            self.treated.push(ci);
+        }
+        total
+    }
+
+    fn hold(&self, fleet: &Fleet, reason: String) -> RolloutOutcome {
+        self.emit(fleet, "held", self.treated.len() as u64, &reason);
+        RolloutOutcome::Held { reason }
+    }
+
+    fn roll_back(&mut self, fleet: &mut Fleet, reg: &mut RevisionRegistry,
+                 reason: String) -> RolloutOutcome {
+        // Restore each snapshot LUT verbatim, carrying the shared caches
+        // across with the inverse engine-scale delta: re-scoring reads the
+        // restored LUT directly, so the carried frontiers (and their scope
+        // fingerprints) land bit-identical to the pre-canary state.
+        let inverse = 1.0 / self.revision.factor;
+        for &ci in &self.treated {
+            let snap = Arc::clone(&self.snapshots[&ci]);
+            let delta = LutDelta::engine_scale(self.revision.engine, inverse);
+            fleet.swap_cohort_lut(ci, snap, &delta);
+            reg.assign(ci, BASELINE_REVISION);
+        }
+        self.stage = RolloutStage::RolledBack;
+        self.emit(fleet, "rolled_back", 0, &reason);
+        RolloutOutcome::RolledBack { reason }
+    }
+
+    fn emit_stage(&self, fleet: &Fleet, cohorts: u64, detail: &str) {
+        self.emit(fleet, self.stage.name(), cohorts, detail);
+    }
+
+    fn emit(&self, fleet: &Fleet, stage: &str, cohorts: u64, detail: &str) {
+        if let Some(rec) = &fleet.recorder {
+            rec.emit(TraceEvent::Rollout {
+                revision: self.revision.id,
+                stage: stage.to_string(),
+                cohorts,
+                detail: detail.to_string(),
+            });
+        }
+    }
+}

@@ -122,7 +122,7 @@ fn print_usage() {
          \x20 serve-bench [--smoke] [--device d] [--rate r] [--duration ms] [--json f] [--trace f]  pipeline load bench\n\
          \x20 multi    [--smoke] [--device d] [--apps n] [--windows w] [--json f]  multi-app contention table\n\
          \x20 opt-bench [--smoke] [--device d] [--apps n] [--json f] [--trace f]  full-search vs frontier-walk adaptation cost\n\
-         \x20 fleet-bench [--smoke] [--devices n] [--seed s] [--family f] [--json f] [--trace f]  population-scale LUT transfer + cohort caches\n\
+         \x20 fleet-bench [--smoke] [--devices n] [--seed s] [--family f] [--json f] [--trace f]  population-scale LUT transfer + cohort caches + staged-rollout control plane\n\
          \n\
          --trace <path> (benches) writes a decision flight-recorder trace as\n\
          JSON-lines plus a Perfetto-loadable <path>.chrome.json\n\

@@ -14,8 +14,9 @@
 //!   application with points touched;
 //! * **serving** — enqueue/shed/batch-launch/complete with deadline
 //!   slack;
-//! * **fleet** — cohort transfer provenance, probe fallbacks, and
-//!   engine-scale corrections;
+//! * **fleet** — cohort transfer provenance, probe fallbacks,
+//!   engine-scale corrections, rollout stage transitions, residual
+//!   feedback corrections, and anchor promotions;
 //! * **scheduler** — multi-app admission and arbitration windows.
 //!
 //! Payloads are plain strings and numbers, so every layer can emit
@@ -208,6 +209,44 @@ pub enum TraceEvent {
         /// Frontier points touched across all cohorts.
         points_touched: u64,
     },
+    /// Fleet control plane: a rollout stage transition (or hold).
+    Rollout {
+        /// Monotone revision id the rollout is shepherding.
+        revision: u64,
+        /// Stage entered (`canary`, `widening`, `promoted`,
+        /// `rolled_back`) or `held` when gates lacked data.
+        stage: String,
+        /// Cohorts carrying the revision after this transition.
+        cohorts: u64,
+        /// Gate verdict or hold/rollback reason (empty when clean).
+        detail: String,
+    },
+    /// Fleet control plane: a per-cohort per-engine residual correction
+    /// distilled from measured-vs-predicted latency reports.
+    Residual {
+        /// Cohort id.
+        cohort: String,
+        /// Engine corrected.
+        engine: String,
+        /// Measured samples folded into the correction.
+        samples: u64,
+        /// Multiplicative latency factor applied to the cohort LUT
+        /// (rounded to 3 decimals).
+        factor: f64,
+    },
+    /// Fleet control plane: a cohort representative was promoted to a
+    /// measured anchor after accumulated corrections crossed threshold.
+    ReAnchor {
+        /// Cohort id.
+        cohort: String,
+        /// Device re-measured as the new anchor.
+        device: String,
+        /// Accumulated |ln correction| that tripped the threshold
+        /// (rounded to 3 decimals).
+        magnitude: f64,
+        /// LUT entries in the freshly measured table.
+        entries: u64,
+    },
     /// Scheduler: a multi-app admission decision.
     Admission {
         /// App admitted or rejected.
@@ -246,6 +285,9 @@ impl TraceEvent {
             TraceEvent::CohortTransfer { .. } => "cohort_transfer",
             TraceEvent::ProbeFallback { .. } => "probe_fallback",
             TraceEvent::Correction { .. } => "correction",
+            TraceEvent::Rollout { .. } => "rollout",
+            TraceEvent::Residual { .. } => "residual",
+            TraceEvent::ReAnchor { .. } => "re_anchor",
             TraceEvent::Admission { .. } => "admission",
             TraceEvent::Arbitration { .. } => "arbitration",
         }
@@ -267,7 +309,10 @@ impl TraceEvent {
             | TraceEvent::BatchComplete { .. } => "serving",
             TraceEvent::CohortTransfer { .. }
             | TraceEvent::ProbeFallback { .. }
-            | TraceEvent::Correction { .. } => "fleet",
+            | TraceEvent::Correction { .. }
+            | TraceEvent::Rollout { .. }
+            | TraceEvent::Residual { .. }
+            | TraceEvent::ReAnchor { .. } => "fleet",
             TraceEvent::Admission { .. } | TraceEvent::Arbitration { .. } => {
                 "scheduler"
             }
@@ -386,6 +431,26 @@ impl TraceEvent {
                 ("updated", json::num(*updated as f64)),
                 ("points_touched", json::num(*points_touched as f64)),
             ],
+            TraceEvent::Rollout { revision, stage, cohorts, detail } => vec![
+                ("revision", json::num(*revision as f64)),
+                ("stage", json::s(stage)),
+                ("cohorts", json::num(*cohorts as f64)),
+                ("detail", json::s(detail)),
+            ],
+            TraceEvent::Residual { cohort, engine, samples, factor } => vec![
+                ("cohort", json::s(cohort)),
+                ("engine", json::s(engine)),
+                ("samples", json::num(*samples as f64)),
+                ("factor", json::num(*factor)),
+            ],
+            TraceEvent::ReAnchor { cohort, device, magnitude, entries } => {
+                vec![
+                    ("cohort", json::s(cohort)),
+                    ("device", json::s(device)),
+                    ("magnitude", json::num(*magnitude)),
+                    ("entries", json::num(*entries as f64)),
+                ]
+            }
             TraceEvent::Admission { scope, outcome, detail } => vec![
                 ("scope", json::s(scope)),
                 ("outcome", json::s(outcome)),

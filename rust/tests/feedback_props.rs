@@ -1,0 +1,275 @@
+//! Property tests for the fleet control plane's residual feedback loop
+//! (`fleet::feedback`): corrections monotonically shrink the residual
+//! under seeded drift, the delta-carried frontiers match a from-scratch
+//! rebuild after every correction, re-anchoring fires iff the
+//! accumulated correction magnitude crosses the threshold, and a second
+//! apply without fresh evidence (or with a bit-exact no-op correction)
+//! is idempotent.
+
+use std::sync::Arc;
+
+use oodin::designspace::{rank, scoped_fingerprint, DesignSpace};
+use oodin::device::EngineKind;
+use oodin::fleet::{FeedbackConfig, FeedbackLoop, Fleet, FleetConfig,
+                   PopulationConfig};
+use oodin::manager::Conditions;
+use oodin::measurements::LutKey;
+use oodin::model::test_fixtures::fake_registry;
+use oodin::optimizer::{Objective, SearchSpace};
+use oodin::util::stats::Percentile;
+
+fn obj() -> Objective {
+    Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 }
+}
+
+fn space() -> SearchSpace {
+    SearchSpace::family("mobilenet_v2_100")
+}
+
+fn build_fleet() -> Fleet {
+    let cfg = FleetConfig {
+        population: PopulationConfig { size: 64, ..Default::default() },
+        ..Default::default()
+    };
+    let fleet = Fleet::build(Arc::new(fake_registry()), cfg).unwrap();
+    assert!(fleet.cohorts.len() >= 4,
+            "need cohorts to correct, got {}", fleet.cohorts.len());
+    fleet
+}
+
+fn warm_idle(fleet: &Fleet) {
+    let sspace = space();
+    for i in 0..fleet.len() {
+        fleet.select(i, obj(), &sspace, &Conditions::idle()).unwrap();
+    }
+}
+
+/// Every cohort's ground truth under seeded drift: the CPU rows of the
+/// original LUT scaled by `drift` — what the devices "actually" run at
+/// while the cohort still predicts from the unscaled LUT.
+fn drift_targets(fleet: &Fleet, drift: f64) -> Vec<Vec<(LutKey, f64)>> {
+    fleet
+        .cohorts
+        .iter()
+        .map(|c| {
+            c.lut
+                .entries
+                .iter()
+                .filter(|(k, _)| k.engine == EngineKind::Cpu)
+                .map(|(k, e)| (k.clone(), e.latency.avg * drift))
+                .collect()
+        })
+        .collect()
+}
+
+/// One observation round: every CPU row's "measured" truth against the
+/// cohort's current prediction for it.
+fn observe_round(fb: &mut FeedbackLoop, fleet: &Fleet,
+                 targets: &[Vec<(LutKey, f64)>]) {
+    for (ci, rows) in targets.iter().enumerate() {
+        for (key, measured) in rows {
+            let predicted =
+                fleet.cohorts[ci].lut.get(key).unwrap().latency.avg;
+            fb.observe(ci, EngineKind::Cpu, *measured, predicted);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property 1: residual corrections monotonically shrink under seeded
+// drift — after one round the predictions carry the geometric mean of
+// the truth, so later rounds see (near-)zero residual.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn residuals_shrink_monotonically_under_seeded_drift() {
+    let mut fleet = build_fleet();
+    warm_idle(&fleet);
+    let targets = drift_targets(&fleet, 1.3);
+    let mut fb = FeedbackLoop::new(FeedbackConfig::default());
+
+    let mut rounds = Vec::new();
+    for _ in 0..3 {
+        observe_round(&mut fb, &fleet, &targets);
+        rounds.push(fb.apply_round(&mut fleet));
+    }
+    // Round 1 sees the full ln(1.3) drift; round 2 sees rounding noise.
+    assert!(rounds[0].mean_abs_ln > 0.2, "{}", rounds[0].mean_abs_ln);
+    assert!(rounds[1].mean_abs_ln < 1e-9, "{}", rounds[1].mean_abs_ln);
+    for w in rounds.windows(2) {
+        assert!(w[1].mean_abs_ln <= w[0].mean_abs_ln + 1e-9,
+                "residuals must shrink: {} -> {}", w[0].mean_abs_ln,
+                w[1].mean_abs_ln);
+    }
+    // The first round corrected every cohort through the delta path.
+    assert_eq!(rounds[0].corrections, fleet.cohorts.len() as u64);
+    assert!(rounds[0].delta.updated > 0,
+            "warm frontiers must be carried, not dropped");
+    // Accumulated magnitude records the drift that was corrected.
+    for ci in 0..fleet.cohorts.len() {
+        assert!(fb.accumulated(ci) > 0.2, "cohort {ci} accumulated \
+                 {}", fb.accumulated(ci));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property 2: after every correction the carried frontier matches a
+// from-scratch rebuild — selections equal the fresh full search, with
+// zero builds spent.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrected_frontiers_match_scratch_rebuild() {
+    let mut fleet = build_fleet();
+    let sspace = space();
+    warm_idle(&fleet);
+    let targets = drift_targets(&fleet, 0.7);
+    let mut fb = FeedbackLoop::new(FeedbackConfig::default());
+    observe_round(&mut fb, &fleet, &targets);
+    let round = fb.apply_round(&mut fleet);
+    assert!(round.corrections > 0);
+
+    let builds_before = fleet.cache_stats().builds;
+    for i in 0..fleet.len() {
+        let got =
+            fleet.select(i, obj(), &sspace, &Conditions::idle()).unwrap();
+        let c = &fleet.cohorts[fleet.device_cohort[i]];
+        let ds = DesignSpace::new(&c.rep, &fleet.registry, &c.lut);
+        let fresh = rank(ds.enumerate(obj(), &sspace, &Conditions::idle()),
+                         obj());
+        assert_eq!(got, fresh[0].design,
+                   "device {i}: carried frontier diverged from rebuild");
+    }
+    assert_eq!(fleet.cache_stats().builds, builds_before,
+               "corrections must carry warm frontiers, not rebuild them");
+}
+
+// ---------------------------------------------------------------------------
+// Property 3: re-anchoring fires iff the accumulated correction
+// magnitude crosses the threshold, resets the magnitude, and lazily
+// invalidates the cohort's cached frontiers.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn re_anchor_fires_iff_threshold_crossed() {
+    let mut fleet = build_fleet();
+    let sspace = space();
+    warm_idle(&fleet);
+    let threshold = FeedbackConfig::default().re_anchor_threshold;
+    let mut fb = FeedbackLoop::new(FeedbackConfig::default());
+
+    // Cohort 0 drifts far past the threshold, cohort 1 barely at all.
+    let targets = drift_targets(&fleet, 1.0);
+    let big: Vec<(LutKey, f64)> = targets[0]
+        .iter()
+        .map(|(k, v)| (k.clone(), v * (2.0 * threshold).exp()))
+        .collect();
+    let small: Vec<(LutKey, f64)> = targets[1]
+        .iter()
+        .map(|(k, v)| (k.clone(), v * (0.1 * threshold).exp()))
+        .collect();
+    observe_round(&mut fb, &fleet,
+                  &[big, small, Vec::new(), Vec::new()]);
+    fb.apply_round(&mut fleet);
+    assert!(fb.accumulated(0) > threshold);
+    assert!(fb.accumulated(1) > 0.0 && fb.accumulated(1) < threshold);
+
+    let outcomes = fb.re_anchor(&mut fleet).unwrap();
+    assert_eq!(outcomes.len(), 1, "exactly cohort 0 crossed");
+    assert_eq!(outcomes[0].cohort, 0);
+    assert_eq!(outcomes[0].device,
+               fleet.devices[fleet.cohorts[0].members[0]].id);
+    assert!(outcomes[0].magnitude > threshold);
+    assert_eq!(outcomes[0].entries, fleet.cohorts[0].lut.len());
+    // The magnitude resets; the untripped cohort's keeps accumulating.
+    assert_eq!(fb.accumulated(0), 0.0);
+    assert!(fb.accumulated(1) > 0.0);
+    assert_eq!(fb.re_anchored(), vec![0]);
+    // Nothing left above the threshold: a second pass is a no-op.
+    assert!(fb.re_anchor(&mut fleet).unwrap().is_empty());
+
+    // The re-anchored LUT is an undescribed change: the warm idle
+    // frontier invalidates lazily and rebuilds on the next lookup,
+    // landing on the fresh full search of the measured LUT.
+    let stats_before = fleet.cache_stats();
+    let dev = fleet.cohorts[0].members[0];
+    let got =
+        fleet.select(dev, obj(), &sspace, &Conditions::idle()).unwrap();
+    let stats_after = fleet.cache_stats();
+    assert_eq!(stats_after.builds, stats_before.builds + 1);
+    assert_eq!(stats_after.invalidations, stats_before.invalidations + 1);
+    let c = &fleet.cohorts[0];
+    let ds = DesignSpace::new(&c.rep, &fleet.registry, &c.lut);
+    let fresh =
+        rank(ds.enumerate(obj(), &sspace, &Conditions::idle()), obj());
+    assert_eq!(got, fresh[0].design);
+}
+
+// ---------------------------------------------------------------------------
+// Property 4: applying twice is idempotent — a drained loop corrects
+// nothing, and a bit-exact no-op correction (factor exactly 1.0) leaves
+// every fingerprint untouched.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn second_apply_is_idempotent() {
+    let mut fleet = build_fleet();
+    let sspace = space();
+    warm_idle(&fleet);
+    let mut fb = FeedbackLoop::new(FeedbackConfig::default());
+    let targets = drift_targets(&fleet, 1.2);
+    observe_round(&mut fb, &fleet, &targets);
+    let first = fb.apply_round(&mut fleet);
+    assert!(first.corrections > 0);
+    let fps: Vec<u64> = fleet
+        .cohorts
+        .iter()
+        .map(|c| scoped_fingerprint(&c.lut, &fleet.registry, &sspace))
+        .collect();
+
+    // The cells drained: a second apply without fresh evidence does
+    // nothing at all.
+    let second = fb.apply_round(&mut fleet);
+    assert_eq!(second.samples, 0);
+    assert_eq!(second.corrections, 0);
+    assert_eq!(second.delta.updated, 0);
+    assert_eq!(second.mean_abs_ln, 0.0);
+    let fps2: Vec<u64> = fleet
+        .cohorts
+        .iter()
+        .map(|c| scoped_fingerprint(&c.lut, &fleet.registry, &sspace))
+        .collect();
+    assert_eq!(fps, fps2);
+
+    // measured == predicted distils factor exactly 1.0: the correction
+    // is applied (and counted) but every value is bit-identical, so the
+    // scope fingerprints — and therefore the caches — are untouched.
+    let v = 10.0;
+    fb.observe(0, EngineKind::Cpu, v, v);
+    fb.observe(0, EngineKind::Cpu, v, v);
+    let noop = fb.apply_round(&mut fleet);
+    assert_eq!(noop.corrections, 1);
+    assert_eq!(noop.delta.updated, 0);
+    assert!(noop.delta.untouched > 0,
+            "warm entries must be recognised as untouched");
+    let fps3: Vec<u64> = fleet
+        .cohorts
+        .iter()
+        .map(|c| scoped_fingerprint(&c.lut, &fleet.registry, &sspace))
+        .collect();
+    assert_eq!(fps, fps3);
+}
+
+// ---------------------------------------------------------------------------
+// Property 5: observe() discards meaningless inputs.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn observe_rejects_non_positive_and_non_finite_inputs() {
+    let mut fb = FeedbackLoop::new(FeedbackConfig::default());
+    fb.observe(0, EngineKind::Cpu, -1.0, 5.0);
+    fb.observe(0, EngineKind::Cpu, 5.0, 0.0);
+    fb.observe(0, EngineKind::Cpu, f64::NAN, 5.0);
+    fb.observe(0, EngineKind::Cpu, 5.0, f64::INFINITY);
+    assert_eq!(fb.pending_samples(), 0);
+}

@@ -13,7 +13,10 @@
 //! and the issue's acceptance criteria are asserted here explicitly:
 //! transferred-LUT selections reach ≤ 5% mean latency regret vs the
 //! full-profile oracle on a ≥ 200-device fleet, with cohort frontier
-//! builds strictly fewer than devices.
+//! builds strictly fewer than devices; and the control-plane scenario
+//! rolls the bad revision back (bit-identical fingerprints, zero live
+//! cohorts), promotes the good one fleet-wide, and closes the residual
+//! feedback loop with regret no worse than the pre-feedback baseline.
 
 use std::sync::Arc;
 
@@ -88,6 +91,57 @@ fn smoke_meets_acceptance_criteria() {
     // The storm actually exercises adaptation on a meaningful share of
     // the fleet.
     assert!(report.switches > 0 && report.devices_switched > 0);
+}
+
+#[test]
+fn smoke_control_plane_meets_acceptance_criteria() {
+    let reg = fake_registry();
+    let cfg = FleetBenchConfig::smoke();
+    let report = fleetbench::run(&reg, &cfg).unwrap();
+    let cp = &report.control_plane;
+    let cohorts = report.cohorts.len();
+    // The deliberately mispredicted revision is caught at the canary rung
+    // by the regret gate and rolled back to bit-identical pre-canary
+    // LUTs, leaving no cohort on it.
+    assert_eq!(cp.bad_stage, "rolled_back");
+    assert!(cp.bad_reason.starts_with("regret_delta:"),
+            "bad reason {:?}", cp.bad_reason);
+    assert!(cp.bad_canary_regret_pct > cp.bad_control_regret_pct,
+            "canary {}% vs control {}%", cp.bad_canary_regret_pct,
+            cp.bad_control_regret_pct);
+    assert_eq!(cp.bad_live_cohorts, 0);
+    assert!(cp.rollback_fingerprints_match);
+    // The good revision widens up the ladder and promotes fleet-wide.
+    assert_eq!(cp.good_stage, "promoted");
+    assert!(cp.good_rounds > 0);
+    assert_eq!(cp.good_live_cohorts, cohorts);
+    // Ingestion faults were exercised: the replayed canary report was
+    // rejected exactly once.
+    assert_eq!(cp.duplicates_rejected, 1);
+    // Residual feedback shrinks the prediction error round over round
+    // and closes the loop with regret no worse than the pre-feedback
+    // storm baseline, without introducing deploy faults.
+    assert!(cp.feedback_rounds > 0 && cp.feedback_corrections > 0);
+    assert_eq!(cp.residual_mean_abs_ln.len(), cp.feedback_rounds);
+    for w in cp.residual_mean_abs_ln.windows(2) {
+        assert!(w[1] <= w[0] + 1e-9,
+                "residuals must not grow: {} -> {}", w[0], w[1]);
+    }
+    assert!(cp.feedback_delta_updated > 0,
+            "corrections must ride the frontier delta path");
+    assert!(cp.regret_improved);
+    assert!(cp.post_regret_mean_pct <= report.regret_mean_pct,
+            "post-feedback mean {}% vs pre {}%", cp.post_regret_mean_pct,
+            report.regret_mean_pct);
+    assert_eq!(cp.post_deploy_faults, 0);
+    // Sustained drift promotes some — but not every — cohort to a
+    // measured anchor, and their rebuilds are lazy (paid by the closing
+    // sweep, bounded by the re-anchored population).
+    assert!(cp.re_anchored_cohorts > 0 && cp.re_anchored_cohorts < cohorts,
+            "{} of {} cohorts re-anchored", cp.re_anchored_cohorts,
+            cohorts);
+    assert!(cp.post_feedback_builds > 0);
+    assert!(cp.lookups > 0, "scenario sweeps must be cache-accounted");
 }
 
 #[test]

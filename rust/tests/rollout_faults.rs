@@ -1,0 +1,240 @@
+//! Fault-injection tests for the rollout control plane's telemetry
+//! ingestion (`fleet::rollout`): dropped reports hold a stage forever,
+//! duplicated reports are rejected and never double-count towards the
+//! gates, reports tagged with a non-live revision are discarded as
+//! stale, unknown cohorts bounce, and a silent cohort blocks promotion
+//! until it affirmatively reports.
+
+use std::sync::Arc;
+
+use oodin::designspace::scoped_fingerprint;
+use oodin::device::EngineKind;
+use oodin::fleet::{CohortReport, Fleet, FleetConfig, IngestOutcome,
+                   PopulationConfig, RevisionRegistry, Rollout,
+                   RolloutConfig, RolloutOutcome, RolloutStage,
+                   BASELINE_REVISION};
+use oodin::model::test_fixtures::fake_registry;
+use oodin::optimizer::SearchSpace;
+
+fn build_fleet() -> Fleet {
+    let cfg = FleetConfig {
+        population: PopulationConfig { size: 64, ..Default::default() },
+        ..Default::default()
+    };
+    let fleet = Fleet::build(Arc::new(fake_registry()), cfg).unwrap();
+    assert!(fleet.cohorts.len() >= 8,
+            "need enough cohorts to stage over, got {}",
+            fleet.cohorts.len());
+    fleet
+}
+
+fn report(cohort: usize, revision: u64, seq: u64, samples: u64,
+          regret_mean_pct: f64) -> CohortReport {
+    CohortReport {
+        cohort,
+        revision,
+        seq,
+        samples,
+        regret_pct_sum: regret_mean_pct * samples as f64,
+        slo_misses: 0,
+        deploy_faults: 0,
+    }
+}
+
+fn fingerprints(fleet: &Fleet) -> Vec<u64> {
+    let sspace = SearchSpace::family("mobilenet_v2_100");
+    fleet
+        .cohorts
+        .iter()
+        .map(|c| scoped_fingerprint(&c.lut, &fleet.registry, &sspace))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Fault 1: dropped telemetry — a cohort whose reports never arrive
+// holds the stage forever; repeated evaluation never advances and never
+// mutates fleet state.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dropped_reports_hold_the_stage_forever() {
+    let mut fleet = build_fleet();
+    let n = fleet.cohorts.len();
+    let mut reg = RevisionRegistry::new(n);
+    let rev = reg.register(EngineKind::Cpu, 0.9);
+    let mut ro = Rollout::new(rev, RolloutConfig::default());
+    ro.begin_canary(&mut fleet, &mut reg).unwrap();
+    let treated = ro.treated().to_vec();
+    let fps = fingerprints(&fleet);
+
+    // Only the first treated cohort ever reports.
+    for seq in 0..5u64 {
+        let r = report(treated[0], rev.id, seq, 4, 1.0);
+        assert_eq!(ro.ingest(r, &reg), IngestOutcome::Accepted);
+        match ro.evaluate(&mut fleet, &mut reg) {
+            RolloutOutcome::Held { reason } => {
+                assert!(reason.starts_with("missing_reports:"), "{reason}")
+            }
+            other => panic!("dropped telemetry must hold, got {other:?}"),
+        }
+        assert_eq!(ro.stage(), RolloutStage::Canary);
+        assert_eq!(ro.treated(), &treated[..]);
+        assert_eq!(reg.live_count(rev.id), treated.len());
+        assert_eq!(fingerprints(&fleet), fps);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault 2: duplicated telemetry — a replayed (cohort, seq) report is
+// rejected and its samples are never double-counted.  With exactly
+// min_samples-1 distinct samples per cohort, a double-count would let
+// the stage advance; the dedup keeps it held on insufficient evidence.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn duplicate_reports_never_double_count() {
+    let mut fleet = build_fleet();
+    let n = fleet.cohorts.len();
+    let cfg = RolloutConfig::default();
+    assert!(cfg.min_samples >= 2, "test needs a thin-evidence gap");
+    let mut reg = RevisionRegistry::new(n);
+    let rev = reg.register(EngineKind::Cpu, 0.9);
+    let mut ro = Rollout::new(rev, cfg.clone());
+    ro.begin_canary(&mut fleet, &mut reg).unwrap();
+    let treated = ro.treated().to_vec();
+
+    // One report per treated cohort, one sample short of the minimum —
+    // then replay every single one of them.
+    for &ci in &treated {
+        let r = report(ci, rev.id, 0, cfg.min_samples - 1, 1.0);
+        assert_eq!(ro.ingest(r, &reg), IngestOutcome::Accepted);
+        assert_eq!(ro.ingest(r, &reg), IngestOutcome::Duplicate);
+    }
+    assert_eq!(ro.duplicates(), treated.len() as u64);
+    // If the replays had been counted, every cohort would now sit at
+    // 2×(min_samples−1) ≥ min_samples and the canary would widen.
+    match ro.evaluate(&mut fleet, &mut reg) {
+        RolloutOutcome::Held { reason } => {
+            assert!(reason.starts_with("insufficient_samples:"), "{reason}")
+        }
+        other => panic!("duplicates were double-counted: {other:?}"),
+    }
+    assert_eq!(ro.stage(), RolloutStage::Canary);
+}
+
+// ---------------------------------------------------------------------------
+// Fault 3: stale telemetry — reports tagged with a revision that is not
+// live on their cohort are discarded, whichever side they claim to be
+// from, and contribute nothing to the gates.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stale_revision_reports_are_rejected() {
+    let mut fleet = build_fleet();
+    let n = fleet.cohorts.len();
+    let mut reg = RevisionRegistry::new(n);
+    let rev = reg.register(EngineKind::Cpu, 0.9);
+    let mut ro = Rollout::new(rev, RolloutConfig::default());
+    ro.begin_canary(&mut fleet, &mut reg).unwrap();
+    let treated = ro.treated().to_vec();
+    let control = (0..n).find(|ci| !treated.contains(ci)).unwrap();
+
+    // A treated cohort still reporting the baseline revision is stale…
+    let r = report(treated[0], BASELINE_REVISION, 0, 4, 1.0);
+    assert_eq!(ro.ingest(r, &reg), IngestOutcome::Stale);
+    // …as is a control cohort claiming the canary revision.
+    let r = report(control, rev.id, 0, 4, 1.0);
+    assert_eq!(ro.ingest(r, &reg), IngestOutcome::Stale);
+    assert_eq!(ro.stale_reports(), 2);
+    // Neither leaked into the evidence: every treated cohort still reads
+    // as unreported.
+    match ro.evaluate(&mut fleet, &mut reg) {
+        RolloutOutcome::Held { reason } => {
+            assert!(reason.starts_with("missing_reports:"), "{reason}")
+        }
+        other => panic!("stale telemetry leaked into the gates: {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault 4: unknown cohort indices bounce without polluting any state —
+// not even the dedup set.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unknown_cohorts_bounce_cleanly() {
+    let mut fleet = build_fleet();
+    let n = fleet.cohorts.len();
+    let mut reg = RevisionRegistry::new(n);
+    let rev = reg.register(EngineKind::Cpu, 0.9);
+    let mut ro = Rollout::new(rev, RolloutConfig::default());
+    ro.begin_canary(&mut fleet, &mut reg).unwrap();
+
+    let r = report(n + 100, rev.id, 0, 4, 1.0);
+    assert_eq!(ro.ingest(r, &reg), IngestOutcome::UnknownCohort);
+    assert_eq!(ro.duplicates(), 0);
+    assert_eq!(ro.stale_reports(), 0);
+    // The bounced report did not claim its (cohort, seq) slot: a valid
+    // cohort reusing seq 0 is accepted, not deduplicated.
+    let r = report(0, reg.live(0), 0, 4, 1.0);
+    assert_eq!(ro.ingest(r, &reg), IngestOutcome::Accepted);
+}
+
+// ---------------------------------------------------------------------------
+// Fault 5: a silent cohort blocks promotion at the final rung; the
+// moment it affirmatively reports, the fleet promotes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn silent_cohort_blocks_promotion_until_it_reports() {
+    let mut fleet = build_fleet();
+    let n = fleet.cohorts.len();
+    let mut reg = RevisionRegistry::new(n);
+    let rev = reg.register(EngineKind::Cpu, 0.9);
+    let mut ro = Rollout::new(rev, RolloutConfig::default());
+    ro.begin_canary(&mut fleet, &mut reg).unwrap();
+
+    let mut seq = 0u64;
+    let mut rounds = 0usize;
+    loop {
+        let treated = ro.treated().to_vec();
+        let at_final_rung = treated.len() == n;
+        let silent = *treated.last().unwrap();
+        for ci in 0..n {
+            if at_final_rung && ci == silent {
+                continue;
+            }
+            let r = report(ci, reg.live(ci), seq, 4, 1.0);
+            assert_eq!(ro.ingest(r, &reg), IngestOutcome::Accepted);
+        }
+        if at_final_rung {
+            // Everyone but one cohort reported: promotion must wait.
+            match ro.evaluate(&mut fleet, &mut reg) {
+                RolloutOutcome::Held { reason } => {
+                    assert!(reason.starts_with("missing_reports:"),
+                            "{reason}")
+                }
+                other => {
+                    panic!("silent cohort failed to block: {other:?}")
+                }
+            }
+            assert_eq!(ro.stage(), RolloutStage::Widening(3));
+            // The cohort comes back online; the fleet promotes.
+            let r = report(silent, reg.live(silent), seq, 4, 1.0);
+            assert_eq!(ro.ingest(r, &reg), IngestOutcome::Accepted);
+            match ro.evaluate(&mut fleet, &mut reg) {
+                RolloutOutcome::Promoted => break,
+                other => panic!("expected promotion, got {other:?}"),
+            }
+        }
+        match ro.evaluate(&mut fleet, &mut reg) {
+            RolloutOutcome::Advanced { .. } => {}
+            other => panic!("expected advance, got {other:?}"),
+        }
+        seq += 1;
+        rounds += 1;
+        assert!(rounds <= n, "rollout failed to terminate");
+    }
+    assert_eq!(ro.stage(), RolloutStage::Promoted);
+    assert_eq!(reg.live_count(rev.id), n);
+}

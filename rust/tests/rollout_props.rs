@@ -1,0 +1,396 @@
+//! Property tests for the fleet control plane's staged rollouts
+//! (`fleet::rollout`): stage transitions are monotone and cannot skip
+//! the canary, rollback restores every treated cohort's LUT
+//! bit-identically (scoped fingerprints), no cohort ever carries two
+//! live revisions, promotion requires every gate to pass with
+//! sufficient samples from every treated cohort, and the whole
+//! lifecycle is bit-deterministic per fleet seed.
+
+use std::sync::Arc;
+
+use oodin::designspace::scoped_fingerprint;
+use oodin::device::EngineKind;
+use oodin::fleet::{CohortReport, Fleet, FleetConfig, IngestOutcome,
+                   PopulationConfig, RevisionRegistry, Rollout,
+                   RolloutConfig, RolloutOutcome, RolloutStage,
+                   BASELINE_REVISION};
+use oodin::manager::Conditions;
+use oodin::model::test_fixtures::fake_registry;
+use oodin::optimizer::{Objective, SearchSpace};
+use oodin::util::stats::Percentile;
+
+fn obj() -> Objective {
+    Objective::MinLatency { stat: Percentile::Avg, epsilon: 0.05 }
+}
+
+fn space() -> SearchSpace {
+    SearchSpace::family("mobilenet_v2_100")
+}
+
+fn build_fleet() -> Fleet {
+    let cfg = FleetConfig {
+        population: PopulationConfig { size: 64, ..Default::default() },
+        ..Default::default()
+    };
+    let fleet = Fleet::build(Arc::new(fake_registry()), cfg).unwrap();
+    assert!(fleet.cohorts.len() >= 8,
+            "need enough cohorts to stage over, got {}",
+            fleet.cohorts.len());
+    fleet
+}
+
+/// One synthetic telemetry report: `samples` decisions at a uniform
+/// per-decision regret, no SLO misses, no deploy faults.
+fn report(cohort: usize, revision: u64, seq: u64, samples: u64,
+          regret_mean_pct: f64) -> CohortReport {
+    CohortReport {
+        cohort,
+        revision,
+        seq,
+        samples,
+        regret_pct_sum: regret_mean_pct * samples as f64,
+        slo_misses: 0,
+        deploy_faults: 0,
+    }
+}
+
+/// Ingest one full-fleet telemetry round: treated cohorts at
+/// `treated_pct` mean regret, the rest at `control_pct`, every report
+/// tagged with its cohort's live revision.
+fn ingest_round(rollout: &mut Rollout, reg: &RevisionRegistry,
+                cohorts: usize, seq: u64, treated_pct: f64,
+                control_pct: f64) {
+    let treated: Vec<usize> = rollout.treated().to_vec();
+    for ci in 0..cohorts {
+        let pct = if treated.contains(&ci) {
+            treated_pct
+        } else {
+            control_pct
+        };
+        let r = report(ci, reg.live(ci), seq, 4, pct);
+        assert_eq!(rollout.ingest(r, reg), IngestOutcome::Accepted);
+    }
+}
+
+fn fingerprints(fleet: &Fleet) -> Vec<u64> {
+    let sspace = space();
+    fleet
+        .cohorts
+        .iter()
+        .map(|c| scoped_fingerprint(&c.lut, &fleet.registry, &sspace))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Property 1: stage transitions are monotone — Proposed → Canary →
+// Widening(1..) → Promoted, with strictly growing exposure, and the
+// canary can never be skipped.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stages_are_monotone_and_never_skip_canary() {
+    let mut fleet = build_fleet();
+    let n = fleet.cohorts.len();
+    let mut reg = RevisionRegistry::new(n);
+    let rev = reg.register(EngineKind::Cpu, 0.9);
+    let mut ro = Rollout::new(rev, RolloutConfig::default());
+
+    // Evaluating while still Proposed holds without side effects: the
+    // only exit from Proposed is begin_canary.
+    let fps0 = fingerprints(&fleet);
+    match ro.evaluate(&mut fleet, &mut reg) {
+        RolloutOutcome::Held { reason } => {
+            assert_eq!(reason, "stage_proposed")
+        }
+        other => panic!("evaluate on Proposed must hold, got {other:?}"),
+    }
+    assert_eq!(ro.stage(), RolloutStage::Proposed);
+    assert_eq!(fingerprints(&fleet), fps0);
+    assert_eq!(reg.live_count(rev.id), 0);
+
+    ro.begin_canary(&mut fleet, &mut reg).unwrap();
+    assert_eq!(ro.stage(), RolloutStage::Canary);
+    // A second begin_canary is a stage violation.
+    assert!(ro.begin_canary(&mut fleet, &mut reg).is_err());
+
+    let mut seq = 0u64;
+    let mut exposures = vec![ro.treated().len()];
+    let mut saw_widening_rung = 0usize;
+    loop {
+        ingest_round(&mut ro, &reg, n, seq, 1.0, 1.0);
+        seq += 1;
+        match ro.evaluate(&mut fleet, &mut reg) {
+            RolloutOutcome::Promoted => break,
+            RolloutOutcome::Advanced { stage, treated } => {
+                // Widening rungs are visited in order, never skipped.
+                match stage {
+                    RolloutStage::Widening(k) => {
+                        assert_eq!(k, saw_widening_rung + 1,
+                                   "rung order violated");
+                        saw_widening_rung = k;
+                    }
+                    other => panic!("advance into {other:?}"),
+                }
+                assert_eq!(treated, ro.treated().len());
+                exposures.push(treated);
+            }
+            other => panic!("clean rollout must advance, got {other:?}"),
+        }
+        assert!(exposures.len() <= n, "rollout failed to terminate");
+    }
+    assert_eq!(ro.stage(), RolloutStage::Promoted);
+    // Exposure is strictly monotone and starts at the first ladder rung
+    // (the canary) — never at a wider one.
+    assert_eq!(exposures[0], RolloutConfig::default().ladder[0].min(n));
+    assert!(exposures.windows(2).all(|w| w[0] < w[1]),
+            "exposure not strictly monotone: {exposures:?}");
+    assert_eq!(reg.live_count(rev.id), n);
+    // A promoted rollout is terminal.
+    match ro.evaluate(&mut fleet, &mut reg) {
+        RolloutOutcome::Held { reason } => {
+            assert_eq!(reason, "stage_promoted")
+        }
+        other => panic!("evaluate on Promoted must hold, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property 2: rollback restores every treated cohort bit-identically —
+// scoped fingerprints, live selections, and the warm caches all land
+// exactly on the pre-canary state.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rollback_restores_exact_pre_canary_state() {
+    let mut fleet = build_fleet();
+    let n = fleet.cohorts.len();
+    let sspace = space();
+    // Warm every cohort's shared cache at two condition buckets so the
+    // rollback has live frontiers to carry, not just LUTs.
+    let mut loaded = Conditions::idle();
+    loaded.loads.insert(EngineKind::Cpu, 1.0);
+    let pre_selects: Vec<_> = (0..fleet.len())
+        .map(|i| fleet.select(i, obj(), &sspace, &Conditions::idle())
+            .unwrap())
+        .collect();
+    for i in 0..fleet.len() {
+        fleet.select(i, obj(), &sspace, &loaded).unwrap();
+    }
+    let pre_fps = fingerprints(&fleet);
+    let pre_builds = fleet.cache_stats().builds;
+
+    let mut reg = RevisionRegistry::new(n);
+    let rev = reg.register(EngineKind::Cpu, 0.25);
+    let mut ro = Rollout::new(rev, RolloutConfig::default());
+    ro.begin_canary(&mut fleet, &mut reg).unwrap();
+    assert!(fingerprints(&fleet) != pre_fps,
+            "canary must actually change the treated LUTs");
+
+    // Treated cohorts report catastrophic regret against healthy
+    // controls: the regret-delta gate must trip.
+    ingest_round(&mut ro, &reg, n, 0, 60.0, 1.0);
+    match ro.evaluate(&mut fleet, &mut reg) {
+        RolloutOutcome::RolledBack { reason } => {
+            assert!(reason.starts_with("regret_delta:"), "{reason}")
+        }
+        other => panic!("breach must roll back, got {other:?}"),
+    }
+    assert_eq!(ro.stage(), RolloutStage::RolledBack);
+    assert_eq!(reg.live_count(rev.id), 0);
+    assert!(reg.assigned().iter().all(|&a| a == BASELINE_REVISION));
+    // Bit-identical restoration of every cohort (treated and not).
+    assert_eq!(fingerprints(&fleet), pre_fps);
+    // The carried caches still serve the exact pre-canary selections,
+    // without a single rebuild.
+    let builds_before_check = fleet.cache_stats().builds;
+    for (i, want) in pre_selects.iter().enumerate() {
+        let got =
+            fleet.select(i, obj(), &sspace, &Conditions::idle()).unwrap();
+        assert_eq!(&got, want, "device {i} selection changed by rollback");
+    }
+    assert_eq!(fleet.cache_stats().builds, builds_before_check,
+               "rollback must carry warm frontiers, not rebuild them");
+    assert_eq!(builds_before_check, pre_builds,
+               "canary+rollback must cycle through the delta path, not \
+                rebuilds");
+}
+
+// ---------------------------------------------------------------------------
+// Property 3: a cohort carries exactly one live revision — a second
+// rollout cannot claim claimed cohorts, and the failed claim has no
+// side effects.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn no_cohort_ever_carries_two_live_revisions() {
+    let mut fleet = build_fleet();
+    let n = fleet.cohorts.len();
+    let mut reg = RevisionRegistry::new(n);
+    let rev_a = reg.register(EngineKind::Cpu, 0.9);
+    let rev_b = reg.register(EngineKind::Gpu, 0.9);
+    let mut a = Rollout::new(rev_a, RolloutConfig::default());
+    let mut b = Rollout::new(rev_b, RolloutConfig::default());
+
+    a.begin_canary(&mut fleet, &mut reg).unwrap();
+    let fps_after_a = fingerprints(&fleet);
+    // B's canary would need cohorts A already claimed: refused, and the
+    // refusal is side-effect free.
+    assert!(b.begin_canary(&mut fleet, &mut reg).is_err());
+    assert_eq!(b.stage(), RolloutStage::Proposed);
+    assert_eq!(reg.live_count(rev_b.id), 0);
+    assert_eq!(fingerprints(&fleet), fps_after_a);
+    // At no point does any cohort carry more than one live revision:
+    // the assignment table IS one revision per cohort, so it suffices
+    // that A's claims and B's claims never overlap.
+    assert_eq!(reg.live_count(rev_a.id), a.treated().len());
+
+    // Roll A back; the cohorts become claimable and B's canary succeeds.
+    ingest_round(&mut a, &reg, n, 0, 60.0, 1.0);
+    match a.evaluate(&mut fleet, &mut reg) {
+        RolloutOutcome::RolledBack { .. } => {}
+        other => panic!("expected rollback, got {other:?}"),
+    }
+    b.begin_canary(&mut fleet, &mut reg).unwrap();
+    assert_eq!(reg.live_count(rev_b.id), b.treated().len());
+    assert_eq!(reg.live_count(rev_a.id), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Property 4: promotion requires every treated cohort to pass every
+// gate with sufficient samples — missing or thin evidence holds the
+// stage with zero side effects.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn promotion_requires_full_evidence_at_every_rung() {
+    let mut fleet = build_fleet();
+    let n = fleet.cohorts.len();
+    let mut reg = RevisionRegistry::new(n);
+    let rev = reg.register(EngineKind::Cpu, 0.9);
+    let mut ro = Rollout::new(rev, RolloutConfig::default());
+    let min_samples = RolloutConfig::default().min_samples;
+    assert!(min_samples >= 2, "test needs a thin-evidence gap");
+    ro.begin_canary(&mut fleet, &mut reg).unwrap();
+
+    let mut seq = 0u64;
+    let mut rounds = 0usize;
+    loop {
+        let treated: Vec<usize> = ro.treated().to_vec();
+        let last = *treated.last().unwrap();
+        let stage_before = ro.stage();
+        let fps_before = fingerprints(&fleet);
+
+        // Every treated cohort but the last reports; the silent cohort
+        // holds the stage.
+        for &ci in treated.iter().filter(|&&ci| ci != last) {
+            let r = report(ci, reg.live(ci), seq, 4, 1.0);
+            assert_eq!(ro.ingest(r, &reg), IngestOutcome::Accepted);
+        }
+        match ro.evaluate(&mut fleet, &mut reg) {
+            RolloutOutcome::Held { reason } => {
+                assert!(reason.starts_with("missing_reports:"), "{reason}")
+            }
+            other => panic!("silent cohort must hold, got {other:?}"),
+        }
+        assert_eq!(ro.stage(), stage_before);
+        assert_eq!(fingerprints(&fleet), fps_before);
+
+        // One sample below the minimum still holds.
+        let r = report(last, reg.live(last), seq, min_samples - 1, 1.0);
+        assert_eq!(ro.ingest(r, &reg), IngestOutcome::Accepted);
+        match ro.evaluate(&mut fleet, &mut reg) {
+            RolloutOutcome::Held { reason } => {
+                assert!(reason.starts_with("insufficient_samples:"),
+                        "{reason}")
+            }
+            other => panic!("thin evidence must hold, got {other:?}"),
+        }
+        assert_eq!(ro.stage(), stage_before);
+
+        // The missing sample arrives; now the rung may advance.
+        let r = report(last, reg.live(last), seq + 1, 1, 1.0);
+        assert_eq!(ro.ingest(r, &reg), IngestOutcome::Accepted);
+        seq += 2;
+        rounds += 1;
+        match ro.evaluate(&mut fleet, &mut reg) {
+            RolloutOutcome::Promoted => break,
+            RolloutOutcome::Advanced { .. } => {}
+            other => panic!("full evidence must advance, got {other:?}"),
+        }
+        assert!(rounds <= n, "rollout failed to terminate");
+    }
+    assert_eq!(ro.stage(), RolloutStage::Promoted);
+    assert_eq!(reg.live_count(rev.id), n);
+}
+
+// ---------------------------------------------------------------------------
+// Property 5: the regret-delta gate is exact at its boundary — a delta
+// of exactly the threshold passes, the next representable step breaches.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn regret_gate_is_exact_at_the_boundary() {
+    let cfg = RolloutConfig::default();
+    for (delta, expect_rollback) in
+        [(cfg.max_regret_delta_pct, false),
+         (cfg.max_regret_delta_pct + 1e-9, true)]
+    {
+        let mut fleet = build_fleet();
+        let n = fleet.cohorts.len();
+        let mut reg = RevisionRegistry::new(n);
+        let rev = reg.register(EngineKind::Cpu, 0.9);
+        let mut ro = Rollout::new(rev, cfg.clone());
+        ro.begin_canary(&mut fleet, &mut reg).unwrap();
+        ingest_round(&mut ro, &reg, n, 0, 1.0 + delta, 1.0);
+        match ro.evaluate(&mut fleet, &mut reg) {
+            RolloutOutcome::RolledBack { reason } => {
+                assert!(expect_rollback, "delta {delta} breached: {reason}")
+            }
+            RolloutOutcome::Advanced { .. } => {
+                assert!(!expect_rollback, "delta {delta} passed")
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property 6: the whole lifecycle is bit-deterministic per fleet seed.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rollout_lifecycle_is_bit_deterministic_per_seed() {
+    let run = || {
+        let mut fleet = build_fleet();
+        let n = fleet.cohorts.len();
+        let sspace = space();
+        for i in 0..fleet.len() {
+            fleet.select(i, obj(), &sspace, &Conditions::idle()).unwrap();
+        }
+        let mut reg = RevisionRegistry::new(n);
+        let rev = reg.register(EngineKind::Cpu, 0.8);
+        let mut ro = Rollout::new(rev, RolloutConfig::default());
+        ro.begin_canary(&mut fleet, &mut reg).unwrap();
+        let mut seq = 0u64;
+        loop {
+            ingest_round(&mut ro, &reg, n, seq, 1.0, 1.0);
+            seq += 1;
+            match ro.evaluate(&mut fleet, &mut reg) {
+                RolloutOutcome::Promoted => break,
+                RolloutOutcome::Advanced { .. } => {}
+                other => panic!("expected advance, got {other:?}"),
+            }
+        }
+        let selects: Vec<_> = (0..fleet.len())
+            .map(|i| {
+                let d = fleet
+                    .select(i, obj(), &sspace, &Conditions::idle())
+                    .unwrap();
+                format!("{d:?}")
+            })
+            .collect();
+        (fingerprints(&fleet), selects, fleet.cache_stats().builds,
+         fleet.cache_stats().hits)
+    };
+    assert_eq!(run(), run());
+}

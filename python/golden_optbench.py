@@ -699,6 +699,344 @@ def run_optbench_smoke():
     return jobj([("opt_bench", inner)]) + "\n"
 
 
+# --------------------------------------------------------------------------
+# Golden 3: coexec_smoke.json — intra-model co-execution.  A partitioned
+# execution plan splits one variant into 2–3 layer-group segments pinned to
+# distinct engines and runs them as a pipeline: steady-state latency is the
+# bottleneck stage (stage roofline + inter-engine transfer), not the sum.
+# Mirrors measurements::partition_plans / perf::plan cost / the plan-aware
+# designspace enumeration in Rust bit-for-bit.
+# --------------------------------------------------------------------------
+
+HANDOFF_MS = 0.05
+CUTS_2SEG = (250, 500, 750)
+CUTS_3SEG = (250, 750)
+COEXEC_EVENTS = [("idle", {}), ("cpu_load", {"cpu": 2.0})]
+
+
+def boundary_elems(v, cut_pm):
+    """Activation elements at a per-mille cut point: geometric
+    interpolation between input and output widths, via a sqrt-only chain
+    (IEEE sqrt is correctly rounded; powf is not, so Rust and Python agree
+    bit-for-bit)."""
+    i = float(v["in_elems"])
+    o = float(v["out_elems"])
+    if cut_pm == 0:
+        return i
+    if cut_pm == 1000:
+        return o
+    mid = math.sqrt(i * o)
+    if cut_pm == 500:
+        return mid
+    if cut_pm == 250:
+        return math.sqrt(i * mid)
+    if cut_pm == 750:
+        return math.sqrt(mid * o)
+    raise AssertionError(cut_pm)
+
+
+def partition_plans(dev_name):
+    """The default partition grid: every ordered pair of distinct available
+    engines at cuts {250, 500, 750}, every ordered triple of distinct
+    engines at cuts (250, 750)."""
+    avail = [s["kind"] for s in DEVICES[dev_name]["engines"]]
+    plans = []
+    for a in avail:
+        for b in avail:
+            if a == b:
+                continue
+            for cut in CUTS_2SEG:
+                plans.append(((a, b), (cut,)))
+    for a in avail:
+        for b in avail:
+            for c in avail:
+                if len({a, b, c}) != 3:
+                    continue
+                plans.append(((a, b, c), CUTS_3SEG))
+    return plans
+
+
+def stage_gflops(dev_name, spec, v, threads):
+    """perf::effective_gflops at performance governor, cool device."""
+    dev = DEVICES[dev_name]
+    threads = max(min(threads, dev["n_cores"]), 1)
+    if spec["kind"] == "cpu":
+        allc = thread_speedup(spec["parallel"], dev["n_cores"])
+        base = spec["peak"] / allc * thread_speedup(spec["parallel"], threads)
+    else:
+        base = spec["peak"]
+    penalty = (NPU_PENALTY.get((dev_name, v["family"]), 1.0)
+               if spec["kind"] == "nnapi" else 1.0)
+    pm = {"fp32": 1.0, "fp16": spec["fp16"], "int8": spec["int8"]}[v["prec"]]
+    return base * pm * FREQ_SCALE["performance"] * 1.0 / penalty
+
+
+def plan_stages(dev_name, v, engines, cuts):
+    """Per-stage roofline costs of a partitioned plan (performance
+    governor, cool, idle).  Returns (pipelined_ms, stages, threads) with
+    stages = [(engine, stage_ms, xfer_ms)]; pipelined steady-state latency
+    is the bottleneck max(xfer + stage)."""
+    dev = DEVICES[dev_name]
+    threads = dev["n_cores"] if "cpu" in engines else 1
+    bounds = (0,) + tuple(cuts) + (1000,)
+    stages = []
+    pipelined = 0.0
+    for i, kind in enumerate(engines):
+        spec = spec_of(dev_name, kind)
+        lo, hi = bounds[i], bounds[i + 1]
+        frac = float(hi - lo) / 1000.0
+        flops = float(v["flops"]) * frac
+        size = float(v["size"]) * frac
+        b_in = boundary_elems(v, lo)
+        b_out = boundary_elems(v, hi)
+        gflops = stage_gflops(dev_name, spec, v, threads)
+        compute = flops / (gflops * 1e6)
+        act = (b_in + b_out) * 4.0
+        memory = (size + act) / (spec["bw"] * 1e6)
+        stage_ms = spec["dispatch"] + max(compute, memory)
+        if i == 0:
+            xfer_ms = 0.0
+        else:
+            prev = spec_of(dev_name, engines[i - 1])
+            bw = min(prev["bw"], spec["bw"])
+            xfer_ms = (b_in * 4.0) / (bw * 1e6) + HANDOFF_MS
+        stages.append((kind, stage_ms, xfer_ms))
+        pipelined = max(pipelined, xfer_ms + stage_ms)
+    return pipelined, stages, threads
+
+
+def plan_mem_bytes(v, cuts):
+    """Variant memory plus double-buffered fp32 activations at every
+    interior segment boundary."""
+    extra = 0
+    for c in cuts:
+        extra += int(math.ceil(boundary_elems(v, c))) * 8
+    return v["mem"] + extra
+
+
+def plan_sort_key(plan):
+    """Rust ExecPlan Ord: Mono < Split, splits by (engines, cuts)."""
+    if plan is None:
+        return (0,)
+    engines, cuts = plan
+    return (1, tuple(ENGINE_ORDER.index(e) for e in engines), tuple(cuts))
+
+
+def plan_id(plan):
+    engines, cuts = plan
+    return ">".join(engines) + "@" + "+".join(str(c) for c in cuts)
+
+
+def build_coexec_lut(dev_name, runs=8):
+    """Partition-extended LUT: the mono keys (exactly ``build_lut``) plus
+    one key per (variant, partition plan), pinned to the performance
+    governor.  Keys gain a 5th ``plan`` element (None = monolithic)."""
+    lut = {}
+    for k, e in build_lut(dev_name, runs).items():
+        v = VARIANTS[k[0]]
+        lut[k + (None,)] = dict(e, stages=(), mem=v["mem"])
+    for v in VARIANTS.values():
+        for engines, cuts in partition_plans(dev_name):
+            pipelined, stages, threads = plan_stages(dev_name, v, engines,
+                                                     cuts)
+            key = (v["name"], engines[0], threads, "performance",
+                   (engines, cuts))
+            entry = stats_from_identical(pipelined, runs)
+            entry["stages"] = stages
+            entry["mem"] = plan_mem_bytes(v, cuts)
+            lut[key] = entry
+    return lut
+
+
+def coexec_key_sorted(lut):
+    return sorted(lut.keys(),
+                  key=lambda k: (k[0], ENGINE_ORDER.index(k[1]), k[2],
+                                 GOV_ORDER.index(k[3]), plan_sort_key(k[4])))
+
+
+def coexec_key_admitted(dev_name, lut, family, objective, key):
+    """entry_admitted with the plan-aware extensions: every engine the
+    plan touches must exist, and memory includes boundary buffers."""
+    variant, kind, threads, governor, plan = key
+    v = VARIANTS[variant]
+    if v["family"] != family:
+        return False
+    engines = (kind,) if plan is None else plan[0]
+    for e in engines:
+        if spec_of(dev_name, e) is None:
+            return False
+    entry = lut.get(key)
+    if entry is None:
+        return False
+    dev = DEVICES[dev_name]
+    if not entry["mem"] <= dev["mem_budget"]:
+        return False
+    if entry["avg"] > dev["max_deployable"]:
+        return False
+    eps = objective.get("eps")
+    if eps is not None and A_REF[family] - v["acc"] > eps + 1e-12:
+        return False
+    return True
+
+
+def coexec_eval_key(dev_name, lut, family, objective, rep_loads, key, r):
+    """Plan-aware eval_candidate: a monolithic key scales by its engine's
+    contention; a split key scales by the ratio of the condition-adjusted
+    bottleneck to the base bottleneck (the loaded stage may change which
+    stage bottlenecks the pipeline).  Split energy sums per-stage."""
+    if not coexec_key_admitted(dev_name, lut, family, objective, key):
+        return None
+    variant, kind, threads, governor, plan = key
+    v = VARIANTS[variant]
+    entry = lut[key]
+    stat = objective["stat"]
+    if plan is None:
+        spec = spec_of(dev_name, kind)
+        energy = energy_proxy(spec, entry["avg"], governor)
+        factor = 2.0 ** max(rep_loads.get(kind, 0.0), 0.0)
+    else:
+        energy = 0.0
+        base_bn = 0.0
+        cond_bn = 0.0
+        for e, s, x in entry["stages"]:
+            energy += energy_proxy(spec_of(dev_name, e), s, governor)
+            mult = 2.0 ** max(rep_loads.get(e, 0.0), 0.0)
+            base_bn = max(base_bn, x + s)
+            cond_bn = max(cond_bn, x + s * mult)
+        factor = cond_bn / base_bn
+    lat = entry[stat] * factor
+    avg = entry["avg"] * factor
+    fps = min(CAMERA_FPS * r, 1000.0 / avg)
+    return dict(variant=variant, engine=kind, threads=threads,
+                governor=governor, plan=plan, r=r, latency=lat, avg=avg,
+                fps=fps, mem=entry["mem"], acc=v["acc"], energy=energy)
+
+
+def coexec_enumerate(dev_name, lut, family, objective, rep_loads,
+                     mono_only=False):
+    out = []
+    for key in coexec_key_sorted(lut):
+        if mono_only and key[4] is not None:
+            continue
+        for r in RATES:
+            c = coexec_eval_key(dev_name, lut, family, objective,
+                                rep_loads, key, r)
+            if c is not None:
+                out.append(c)
+    return out
+
+
+def coexec_rank(cands, objective):
+    scored = []
+    for c in cands:
+        s = score_of(objective, c)
+        if s is None:
+            continue
+        c = dict(c)
+        c["score"] = s
+        scored.append(c)
+    return sorted(scored, key=lambda c: rank_key(c) + (plan_sort_key(c["plan"]),))
+
+
+def coexec_dominates(p, q):
+    """Dominance slices additionally require identical execution plans:
+    different plans occupy different engine sets and are incomparable."""
+    return p["plan"] == q["plan"] and dominates(p, q)
+
+
+def coexec_frontier(cands, objective):
+    survivors = [q for q in cands
+                 if not any(coexec_dominates(p, q) for p in cands)]
+    return coexec_rank(survivors, objective)
+
+
+def coexec_design_id(c):
+    label = c["engine"] if c["plan"] is None else plan_id(c["plan"])
+    return (f"{c['variant']}|{label}|{c['threads']}|{c['governor']}"
+            f"|r={fmt_f64(c['r'])}")
+
+
+def run_coexec_smoke():
+    dev_name = "samsung_a71"
+    lut = build_coexec_lut(dev_name)
+    n_split = sum(1 for k in lut if k[4] is not None)
+    rows = []
+    gate = False
+    for app, family, obj in MIX:
+        cache = {}
+        ev_objs = []
+        idle_pick = None
+        space_size = mono_size = frontier_idle = 0
+        for name, conds in COEXEC_EVENTS:
+            steps = bucket_of(conds)
+            bid = bucket_id(steps)
+            rep = bucket_representative(steps)
+            cands = coexec_enumerate(dev_name, lut, family, obj, rep)
+            full = coexec_rank(cands, obj)
+            if bid in cache:
+                points, built = cache[bid], False
+            else:
+                points = coexec_frontier(cands, obj)
+                cache[bid] = points
+                built = True
+            assert len(points) < len(full), (app, name)
+            pick = points[0]
+            assert coexec_design_id(pick) == coexec_design_id(full[0]), \
+                f"{app}@{name}: frontier {coexec_design_id(pick)} != " \
+                f"full {coexec_design_id(full[0])}"
+            if not steps:
+                idle_pick = pick
+                space_size = len(full)
+                mono_size = len([c for c in cands if c["plan"] is None])
+                frontier_idle = len(points)
+            ev_objs.append(jobj([
+                ("name", f'"{name}"'),
+                ("bucket", f'"{bid}"'),
+                ("full_evals", jnum(len(full))),
+                ("frontier_evals", jnum(len(points))),
+                ("built", "true" if built else "false"),
+                ("match", "true"),
+                ("pick", f'"{coexec_design_id(pick)}"'),
+                ("latency_ms", jnum(r3(pick["latency"]))),
+                ("partitioned",
+                 "true" if pick["plan"] is not None else "false"),
+            ]))
+        mono = coexec_rank(
+            coexec_enumerate(dev_name, lut, family, obj, {},
+                             mono_only=True), obj)[0]
+        speedup = mono["avg"] / idle_pick["avg"]
+        part = idle_pick["plan"] is not None
+        if part and speedup >= 1.2:
+            gate = True
+        rows.append(jobj([
+            ("device", f'"{dev_name}"'),
+            ("app", f'"{app}"'),
+            ("family", f'"{family}"'),
+            ("objective", f'"{obj["label"]}"'),
+            ("space_size", jnum(space_size)),
+            ("mono_space_size", jnum(mono_size)),
+            ("frontier_size_idle", jnum(frontier_idle)),
+            ("events", "[" + ",".join(ev_objs) + "]"),
+            ("best_mono", f'"{coexec_design_id(mono)}"'),
+            ("best_mono_avg_ms", jnum(r3(mono["avg"]))),
+            ("pick", f'"{coexec_design_id(idle_pick)}"'),
+            ("pick_avg_ms", jnum(r3(idle_pick["avg"]))),
+            ("speedup_vs_mono", jnum(r3(speedup))),
+            ("partitioned_pick", "true" if part else "false"),
+            ("sim_matches", "true"),
+        ]))
+    assert gate, "no app picked a partitioned plan with >= 1.2x speedup"
+    inner = jobj([
+        ("device", f'"{dev_name}"'),
+        ("lut_runs", jnum(8)),
+        ("noise_sigma", jnum(0.0)),
+        ("handoff_ms", jnum(HANDOFF_MS)),
+        ("split_keys", jnum(n_split)),
+        ("rows", "[" + ",".join(rows) + "]"),
+    ])
+    return jobj([("coexec", inner)]) + "\n"
+
+
 def main():
     golden_dir = os.path.normpath(os.path.join(
         os.path.dirname(__file__), "..", "rust", "tests", "golden"))
@@ -707,6 +1045,8 @@ def main():
             render_frontier_snapshot(),
         os.path.join(golden_dir, "optbench_smoke.json"):
             run_optbench_smoke(),
+        os.path.join(golden_dir, "coexec_smoke.json"):
+            run_coexec_smoke(),
     }
     rc = 0
     for path, content in outputs.items():

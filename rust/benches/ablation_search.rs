@@ -115,6 +115,7 @@ fn random_pick(opt: &Optimizer, registry: &Registry,
                 threads: k.threads,
                 governor: k.governor,
                 recognition_rate: 1.0,
+                plan: k.plan.clone(),
             },
         };
         if let Ok(e) = opt.evaluate(&d, Percentile::Avg) {

@@ -188,5 +188,47 @@ fn main() {
         println!("frontier/delta wall-clock gate: rebuild avg {:.4} ms too \
                   small to time reliably — gate skipped", full.stats.avg);
     }
+
+    // Co-execution decision scenario: the partitioned σ-space widens
+    // enumeration (every admitted 2–3-stage plan is an extra candidate per
+    // batch-1 variant), so the decision hot path must stay the same order
+    // of work.  At the default partition grid ({250,500,750} per-mille
+    // cuts, ≤3 stages) the widened space is bounded by 3x the monolithic
+    // candidate count — gate it so a grid change can't silently blow up
+    // every frontier build in the fleet.
+    println!("\n== co-execution: partitioned vs monolithic decision ==");
+    let wide_lut = Measurer::new(&device, &registry)
+        .measure_with_partitions()
+        .unwrap();
+    let wide_space = DesignSpace::new(&device, &registry, &wide_lut);
+    let all = SearchSpace::default();
+    let idle = Conditions::idle();
+    let n_full = wide_space.enumerate(objective, &all, &idle).len();
+    let n_mono = old_space.enumerate(objective, &all, &idle).len();
+    println!("coexec/space: {n_full} widened candidates vs {n_mono} \
+              monolithic");
+    assert!(n_full <= 3 * n_mono,
+            "partitioned enumeration blew past 3x the monolithic space: \
+             {n_full} vs {n_mono} candidates — did the partition grid grow?");
+    println!("coexec/space gate: {n_full} <= 3 * {n_mono} — ok");
+    let mono_enum = bench("coexec/enumerate_mono", 10, 100, || {
+        black_box(old_space.enumerate(objective, &all, &idle));
+    });
+    let wide_enum = bench("coexec/enumerate_partitioned", 10, 100, || {
+        black_box(wide_space.enumerate(objective, &all, &idle));
+    });
+    let wide_frontier =
+        ParetoFrontier::build(&wide_space, objective, &all, &bucket);
+    let pick = wide_frontier.best().expect("non-empty widened frontier");
+    println!(
+        "coexec/decision: widened enumerate {:.0}/s vs mono {:.0}/s \
+         ({:.2}x work); pick {} ({:.3} ms avg, {})",
+        1e3 / wide_enum.stats.avg.max(1e-9),
+        1e3 / mono_enum.stats.avg.max(1e-9),
+        wide_enum.stats.avg / mono_enum.stats.avg.max(1e-9),
+        pick.design.variant,
+        pick.avg_latency_ms,
+        if pick.design.hw.plan.is_split() { "partitioned" } else { "monolithic" },
+    );
     rt.shutdown();
 }

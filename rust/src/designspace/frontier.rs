@@ -185,6 +185,7 @@ pub fn dominates(p: &Candidate, q: &Candidate) -> bool {
     if p.design.hw.engine != q.design.hw.engine
         || p.design.hw.recognition_rate != q.design.hw.recognition_rate
         || p.design.hw.threads != q.design.hw.threads
+        || p.design.hw.plan != q.design.hw.plan
     {
         return false;
     }
@@ -235,6 +236,12 @@ fn same_entry(a: &LutEntry, b: &LutEntry) -> bool {
         .all(|(x, y)| x.to_bits() == y.to_bits())
         && a.mem_bytes == b.mem_bytes
         && a.accuracy.to_bits() == b.accuracy.to_bits()
+        && a.stages.len() == b.stages.len()
+        && a.stages.iter().zip(b.stages.iter()).all(|(x, y)| {
+            x.engine == y.engine
+                && x.stage_ms.to_bits() == y.stage_ms.to_bits()
+                && x.xfer_ms.to_bits() == y.xfer_ms.to_bits()
+        })
 }
 
 impl LutDelta {
@@ -632,6 +639,23 @@ pub fn scoped_fingerprint(lut: &Lut, registry: &Registry,
         eat(k.variant.as_bytes());
         eat(&[k.engine as u8, k.governor as u8]);
         eat(&(k.threads as u64).to_le_bytes());
+        // Partitioned keys additionally pin their plan and per-stage
+        // costs; monolithic keys eat nothing extra, keeping every
+        // pre-partitioning fingerprint stable.
+        if let crate::measurements::ExecPlan::Split(p) = &k.plan {
+            eat(&[0x70]); // 'p' marker separating plan bytes
+            for se in &p.engines {
+                eat(&[*se as u8]);
+            }
+            for c in &p.cuts_pm {
+                eat(&c.to_le_bytes());
+            }
+            for st in &e.stages {
+                eat(&[st.engine as u8]);
+                eat(&st.stage_ms.to_bits().to_le_bytes());
+                eat(&st.xfer_ms.to_bits().to_le_bytes());
+            }
+        }
         eat(&e.latency.avg.to_bits().to_le_bytes());
         eat(&e.latency.p90.to_bits().to_le_bytes());
         eat(&e.latency.p99.to_bits().to_le_bytes());

@@ -36,10 +36,9 @@ use std::cmp::Ordering;
 
 use crate::device::DeviceProfile;
 use crate::manager::{adjusted_latency, Conditions};
-use crate::measurements::{Lut, LutKey};
+use crate::measurements::{entry_energy_mj, Lut, LutKey};
 use crate::model::{Precision, Registry};
 use crate::optimizer::{Design, HwConfig, Objective, SearchSpace, RECOGNITION_RATES};
-use crate::perf;
 use crate::util::stats::Percentile;
 
 /// One evaluated design σ with the metric vector every search layer reads.
@@ -63,8 +62,9 @@ pub struct Candidate {
     /// a: accuracy of the variant.
     pub accuracy: f64,
     /// First-order per-inference energy estimate at idle conditions
-    /// ([`perf::energy_proxy_mj`]); a static design property used as a
-    /// Pareto dimension and as the leading tie-breaker.
+    /// ([`crate::perf::energy_proxy_mj`], summed per stage for
+    /// partitioned plans); a static design property used as a Pareto
+    /// dimension and as the leading tie-breaker.
     pub energy_mj: f64,
     /// Objective score (higher is better, across all objectives); 0 until
     /// [`rank`] assigns it.
@@ -186,14 +186,21 @@ impl<'a> DesignSpace<'a> {
             return false;
         }
         // Engine availability: a LUT loaded from disk may carry entries
-        // for engines this device does not expose.
-        if self.device.engine(key.engine).is_none() {
+        // for engines this device does not expose.  A partitioned key
+        // occupies every engine of its pipeline, so all must exist.
+        if key.plan
+              .engines(key.engine)
+              .iter()
+              .any(|e| self.device.engine(*e).is_none()) {
             return false;
         }
         let v = self.registry.get(&key.variant).unwrap();
         // Deployability (paper Fig 4: overheating / >=5 s lag models are
-        // not deployable): memory budget + sustained-latency bound.
-        if !perf::fits_memory(self.device, v) {
+        // not deployable): memory budget + sustained-latency bound.  The
+        // entry's own footprint covers the plan's boundary-activation
+        // buffers on top of the variant working set (equal to
+        // `perf::fits_memory` for monolithic entries).
+        if entry.mem_bytes > self.device.mem_budget_bytes {
             return false;
         }
         if entry.latency.avg > self.device.max_deployable_latency_ms {
@@ -226,9 +233,8 @@ impl<'a> DesignSpace<'a> {
             return None;
         }
         let entry = self.lut.get(key).unwrap();
-        let spec = self.device.engine(key.engine).unwrap();
         let energy_mj =
-            perf::energy_proxy_mj(spec, entry.latency.avg, key.governor);
+            entry_energy_mj(self.device, key.engine, entry, key.governor)?;
         let design = Design {
             variant: key.variant.clone(),
             hw: HwConfig {
@@ -236,6 +242,7 @@ impl<'a> DesignSpace<'a> {
                 threads: key.threads,
                 governor: key.governor,
                 recognition_rate: r,
+                plan: key.plan.clone(),
             },
         };
         let latency_ms =

@@ -130,6 +130,59 @@ impl DeviceSim {
         Ok(SimExec { latency_ms, temp_c: tm.temp_c(), thermal_scale })
     }
 
+    /// Execute one inference of `variant` as a *pipelined multi-engine
+    /// partition* (`engines` per segment, interior cut points `cuts_pm`
+    /// in per-mille): nominal per-stage costs come from
+    /// [`perf::plan_stage_costs`], the steady-state latency is the
+    /// bottleneck stage plus its inbound transfer, conditioned by the
+    /// engines' current load/thermal state through
+    /// [`perf::plan_condition_factor`].  Every touched engine is heated
+    /// by its *own* stage's busy time — that per-engine accounting is the
+    /// point of co-execution: no single engine absorbs the whole model's
+    /// heat.  Returns the hottest touched engine's temperature and the
+    /// lowest thermal scale in effect during the run.
+    pub fn run_pipelined(&mut self, variant: &ModelVariant,
+                         engines: &[EngineKind], cuts_pm: &[u32],
+                         governor: Governor) -> Result<SimExec> {
+        let now = self.clock.now_ms();
+        for e in engines {
+            let tm = self.thermal.get_mut(e).ok_or_else(|| {
+                anyhow!("{} has no {}", self.profile.name, e.name())
+            })?;
+            tm.idle_until(now);
+        }
+        let stages =
+            perf::plan_stage_costs(&self.profile, variant, engines, cuts_pm,
+                                   governor)
+                .ok_or_else(|| anyhow!("no partition cost model for plan"))?;
+        let base = perf::pipelined_latency_ms(&stages);
+        let thermal_now: BTreeMap<EngineKind, f64> = engines
+            .iter()
+            .map(|e| (*e, self.thermal[e].freq_scale()))
+            .collect();
+        let factor = perf::plan_condition_factor(
+            &stages,
+            |k| self.loads.get(&k).copied().unwrap_or(0.0),
+            |k| thermal_now.get(&k).copied().unwrap_or(1.0),
+        );
+        let latency_ms = base * factor * self.noise.lognormal(self.noise_sigma);
+
+        if self.clock.is_sim() {
+            self.clock.advance_ms(latency_ms);
+        }
+        let t_end = self.clock.now_ms();
+        let mut temp_c = f64::NEG_INFINITY;
+        for st in &stages {
+            let tm = self.thermal.get_mut(&st.engine).unwrap();
+            tm.record_work(t_end, st.stage_ms, governor);
+            temp_c = temp_c.max(tm.temp_c());
+        }
+        let thermal_scale = thermal_now
+            .values()
+            .fold(1.0f64, |a, &s| a.min(s));
+        Ok(SimExec { latency_ms, temp_c, thermal_scale })
+    }
+
     /// Advance idle time (no inference running) — cools all engines.
     pub fn idle(&mut self, ms: f64) {
         if self.clock.is_sim() {
@@ -219,5 +272,45 @@ mod tests {
         let mut sim = DeviceSim::new(crate::device::profiles::sony_c5(), Clock::sim());
         let v = variant("mobilenet_v2_100__fp32__b1");
         assert!(sim.run_inference(&v, EngineKind::Npu, 1, Governor::Performance).is_err());
+    }
+
+    #[test]
+    fn pipelined_run_matches_closed_form_and_heats_all_stages() {
+        let mut sim = DeviceSim::new(samsung_a71(), Clock::sim());
+        sim.set_noise_sigma(0.0);
+        let v = variant("deeplab_v3__int8__b1");
+        let engines = [EngineKind::Gpu, EngineKind::Cpu];
+        let cuts = [500u32];
+        let stages = perf::plan_stage_costs(&sim.profile, &v, &engines, &cuts,
+                                            Governor::Performance)
+            .unwrap();
+        let expect = perf::pipelined_latency_ms(&stages);
+        let cool_gpu = sim.temp_c(EngineKind::Gpu).unwrap();
+        let cool_cpu = sim.temp_c(EngineKind::Cpu).unwrap();
+        let r = sim
+            .run_pipelined(&v, &engines, &cuts, Governor::Performance)
+            .unwrap();
+        assert!((r.latency_ms - expect).abs() < 1e-9,
+                "cool idle pipelined run {} vs closed form {expect}",
+                r.latency_ms);
+        for _ in 0..50 {
+            sim.run_pipelined(&v, &engines, &cuts, Governor::Performance)
+                .unwrap();
+        }
+        assert!(sim.temp_c(EngineKind::Gpu).unwrap() > cool_gpu,
+                "gpu stage must heat the gpu");
+        assert!(sim.temp_c(EngineKind::Cpu).unwrap() > cool_cpu,
+                "cpu stage must heat the cpu");
+    }
+
+    #[test]
+    fn pipelined_missing_engine_errors() {
+        let mut sim = DeviceSim::new(crate::device::profiles::sony_c5(),
+                                     Clock::sim());
+        let v = variant("mobilenet_v2_100__fp32__b1");
+        assert!(sim
+            .run_pipelined(&v, &[EngineKind::Cpu, EngineKind::Npu], &[500],
+                           Governor::Performance)
+            .is_err());
     }
 }

@@ -1,0 +1,452 @@
+//! Intra-model co-execution benchmark (`oodin opt-bench --coexec`):
+//! quantifies what pipelined multi-engine partitioning buys over the best
+//! monolithic deployment of the same family.
+//!
+//! The σ-space is widened with partitioned execution plans
+//! ([`crate::measurements::partition_plans`]): every batch-1 variant is
+//! additionally measured under every 2- and 3-segment engine pipeline of
+//! the device at the default cut grid, and the frontier machinery trades
+//! those plans against the historical monolithic designs under the same
+//! memory / availability / ε-accuracy filters.  For each app of the
+//! canonical mix the driver replays two condition events (idle, a CPU load
+//! burst), asserts frontier-walk vs full-search exactness on the widened
+//! space, validates the idle selection against a zero-noise
+//! [`DeviceSim`] pipelined execution, and reports the partitioned-vs-
+//! monolithic speedup.  The smoke LUT is measured with zero sampling
+//! noise, so the whole report is closed-form from the roofline model and
+//! golden-pinned (`tests/golden/coexec_smoke.json`), regenerated
+//! independently by `python/golden_optbench.py`.
+
+use anyhow::{ensure, Context, Result};
+
+use std::sync::Arc;
+
+use crate::designspace::{rank, ConditionsBucket, DesignSpace, FrontierCache};
+use crate::device::EngineKind;
+use crate::devicesim::DeviceSim;
+use crate::manager::{design_id, Conditions};
+use crate::mdcl;
+use crate::measurements::{ExecPlan, Measurer};
+use crate::model::Registry;
+use crate::optimizer::SearchSpace;
+use crate::perf;
+use crate::telemetry::trace::{round3, FlightRecorder, TraceEvent};
+use crate::util::clock::Clock;
+use crate::util::json::{self, Value};
+
+use super::optbench::{canonical_mix, objective_label};
+use super::r3;
+
+/// Device the golden-pinned smoke runs on (the mid-tier Table I profile —
+/// the only one with all three engines *and* headroom for 3-segment
+/// pipelines).
+pub const SMOKE_DEVICE: &str = "samsung_a71";
+
+/// Measurement runs for the smoke LUT (warmup = 1, like `opt-bench`).
+pub const SMOKE_LUT_RUNS: usize = 8;
+
+/// Byte budget for one app's frontier cache.  The two smoke buckets of the
+/// widened (partition-bearing) space sit well below it — the co-exec
+/// report pins no cache-accounting fields, so this only has to be
+/// comfortable, not tight.
+pub const COEXEC_CACHE_BUDGET_BYTES: u64 = 1024 * 1024;
+
+/// The replayed condition events: idle, then a CPU load burst (bucket
+/// centre `2^2`) that pushes pipelines off their CPU segments.
+pub fn event_sequence() -> Vec<(&'static str, Conditions)> {
+    let idle = Conditions::idle();
+    let mut cpu = Conditions::idle();
+    cpu.loads.insert(EngineKind::Cpu, 2.0);
+    vec![("idle", idle), ("cpu_load", cpu)]
+}
+
+/// One condition event's decision record.
+#[derive(Debug, Clone)]
+pub struct CoexecEventRow {
+    /// Event label.
+    pub name: &'static str,
+    /// Conditions-bucket id the event landed in.
+    pub bucket: String,
+    /// Candidates a full search scores at this event (widened space).
+    pub full_evals: usize,
+    /// Candidates the frontier walk scores at this event.
+    pub frontier_evals: usize,
+    /// True when this event built the bucket's frontier (first visit).
+    pub built: bool,
+    /// True when both selections agree (must always hold).
+    pub selections_match: bool,
+    /// The selected design, `variant|engine-or-plan|threads|governor|r=..`.
+    pub pick: String,
+    /// Adjusted latency of the selection at the bucket's representative
+    /// conditions (ms).
+    pub latency_ms: f64,
+    /// True when the selection is a partitioned plan.
+    pub partitioned: bool,
+}
+
+/// One app row of the co-execution report.
+#[derive(Debug, Clone)]
+pub struct CoexecRow {
+    /// Device profile name.
+    pub device: String,
+    /// App id from the canonical mix.
+    pub app: &'static str,
+    /// Model family the app is built around.
+    pub family: &'static str,
+    /// Objective label.
+    pub objective: String,
+    /// Widened-space size (monolithic + partitioned) at the idle bucket.
+    pub space_size: usize,
+    /// Monolithic candidates within that space.
+    pub mono_space_size: usize,
+    /// Frontier size at the idle bucket.
+    pub frontier_size_idle: usize,
+    /// Per-event decision records.
+    pub events: Vec<CoexecEventRow>,
+    /// Best monolithic design at idle (the pre-partitioning optimum).
+    pub best_mono: String,
+    /// Its condition-adjusted average latency at idle (ms, un-rounded).
+    pub best_mono_avg_ms: f64,
+    /// The idle selection over the widened space.
+    pub pick: String,
+    /// Its condition-adjusted average latency at idle (ms, un-rounded).
+    pub pick_avg_ms: f64,
+    /// `best_mono_avg_ms / pick_avg_ms` (un-rounded; the CI gate compares
+    /// this raw value against the pinned 1.2× margin).
+    pub speedup_vs_mono: f64,
+    /// True when the idle selection is a partitioned plan.
+    pub partitioned_pick: bool,
+    /// True when a zero-noise [`DeviceSim`] execution of the idle
+    /// selection reproduced its LUT latency to 1e-9 ms.
+    pub sim_matches: bool,
+}
+
+/// The complete co-execution report.
+#[derive(Debug, Clone)]
+pub struct CoexecReport {
+    /// Device profile name.
+    pub device: String,
+    /// Partitioned keys the widened LUT carries.
+    pub split_keys: usize,
+    /// Per-app rows.
+    pub rows: Vec<CoexecRow>,
+}
+
+/// Run one app's co-execution replay over the widened LUT.
+fn run_app(device: &crate::device::DeviceProfile, registry: &Registry,
+           lut: &crate::measurements::Lut, app: &'static str,
+           family: &'static str, objective: crate::optimizer::Objective,
+           recorder: Option<&Arc<FlightRecorder>>) -> Result<CoexecRow> {
+    let space = DesignSpace::new(device, registry, lut);
+    let sspace = SearchSpace::family(family);
+    let mut cache =
+        FrontierCache::new().with_mem_budget(COEXEC_CACHE_BUDGET_BYTES);
+    if let Some(rec) = recorder {
+        cache.set_recorder(Arc::clone(rec), app);
+    }
+
+    let mut events = Vec::new();
+    let mut idle_pick = None;
+    let mut space_size = 0usize;
+    let mut mono_space_size = 0usize;
+    let mut frontier_size_idle = 0usize;
+
+    for (i, (name, conds)) in event_sequence().into_iter().enumerate() {
+        if let Some(rec) = recorder {
+            rec.set_now_us(i as u64 * 1_000);
+        }
+        let bucket = ConditionsBucket::of(&conds);
+        let rep = bucket.representative();
+
+        // Full search over the widened (mono + partitioned) space.
+        let cands = space.enumerate(objective, &sspace, &rep);
+        let n_mono = cands
+            .iter()
+            .filter(|c| c.design.hw.plan == ExecPlan::Mono)
+            .count();
+        let full = rank(cands, objective);
+        let full_pick = full.first().with_context(|| {
+            format!("{app}: no feasible design at {}", bucket.id())
+        })?;
+
+        // Frontier walk, cached per bucket.
+        let builds_before = cache.stats.builds;
+        let frontier = cache.frontier(&space, objective, &sspace, &bucket);
+        let built = cache.stats.builds > builds_before;
+        ensure!(frontier.len() < full.len(),
+                "{app}@{name}: frontier ({}) must stay strictly below the \
+                 widened space ({})",
+                frontier.len(), full.len());
+        let pick = frontier.best().with_context(|| {
+            format!("{app}: empty frontier at {}", bucket.id())
+        })?;
+        let selections_match = pick.design == full_pick.design;
+        ensure!(selections_match,
+                "{app}@{name}: frontier pick {} != full-search pick {}",
+                design_id(&pick.design), design_id(&full_pick.design));
+
+        if bucket.is_idle() {
+            idle_pick = Some(pick.clone());
+            space_size = full.len();
+            mono_space_size = n_mono;
+            frontier_size_idle = frontier.len();
+        }
+        events.push(CoexecEventRow {
+            name,
+            bucket: bucket.id(),
+            full_evals: full.len(),
+            frontier_evals: frontier.len(),
+            built,
+            selections_match,
+            pick: design_id(&pick.design),
+            latency_ms: r3(pick.latency_ms),
+            partitioned: pick.design.hw.plan.is_split(),
+        });
+    }
+
+    let idle_pick = idle_pick
+        .with_context(|| format!("{app}: event sequence has no idle event"))?;
+
+    // The pre-partitioning optimum: best monolithic design at idle.
+    let mono_cands = space.enumerate_where(objective, &sspace,
+                                           &Conditions::idle(),
+                                           |k| k.plan == ExecPlan::Mono);
+    let mono = rank(mono_cands, objective)
+        .into_iter()
+        .next()
+        .with_context(|| format!("{app}: no feasible monolithic design"))?;
+    let speedup = mono.avg_latency_ms / idle_pick.avg_latency_ms;
+    let partitioned_pick = idle_pick.design.hw.plan.is_split();
+
+    // Validate the idle selection against a fresh zero-noise device
+    // simulation: the pipelined (or monolithic) execution path must
+    // reproduce the LUT's closed-form latency.
+    let variant = registry.get(&idle_pick.design.variant).with_context(|| {
+        format!("{app}: unknown variant {}", idle_pick.design.variant)
+    })?;
+    let entry = lut.get(&idle_pick.design.lut_key()).with_context(|| {
+        format!("{app}: pick {} missing from LUT",
+                design_id(&idle_pick.design))
+    })?;
+    let mut sim = DeviceSim::new(device.clone(), Clock::sim());
+    sim.set_noise_sigma(0.0);
+    let simmed = match &idle_pick.design.hw.plan {
+        ExecPlan::Mono => sim.run_inference(variant,
+                                            idle_pick.design.hw.engine,
+                                            idle_pick.design.hw.threads,
+                                            idle_pick.design.hw.governor)?,
+        ExecPlan::Split(p) => sim.run_pipelined(variant, &p.engines,
+                                                &p.cuts_pm,
+                                                idle_pick.design.hw.governor)?,
+    };
+    let sim_matches = (simmed.latency_ms - entry.latency.avg).abs() <= 1e-9;
+    ensure!(sim_matches,
+            "{app}: device-sim latency {} != LUT latency {} for {}",
+            simmed.latency_ms, entry.latency.avg,
+            design_id(&idle_pick.design));
+
+    if let (Some(rec), ExecPlan::Split(p)) =
+        (recorder, &idle_pick.design.hw.plan)
+    {
+        rec.emit(TraceEvent::Partition {
+            scope: app.to_string(),
+            design: design_id(&idle_pick.design),
+            stages: p.engines.len() as u64,
+            latency_ms: round3(idle_pick.avg_latency_ms),
+            speedup: round3(speedup),
+        });
+    }
+
+    Ok(CoexecRow {
+        device: device.name.to_string(),
+        app,
+        family,
+        objective: objective_label(objective),
+        space_size,
+        mono_space_size,
+        frontier_size_idle,
+        events,
+        best_mono: design_id(&mono.design),
+        best_mono_avg_ms: mono.avg_latency_ms,
+        pick: design_id(&idle_pick.design),
+        pick_avg_ms: idle_pick.avg_latency_ms,
+        speedup_vs_mono: speedup,
+        partitioned_pick,
+        sim_matches,
+    })
+}
+
+/// Run the golden-pinned co-execution smoke.
+pub fn run(registry: &Registry) -> Result<CoexecReport> {
+    run_traced(registry, None)
+}
+
+/// [`run`] with an optional flight recorder: frontier-cache transitions
+/// plus one `partition` adaptation event per partitioned selection.
+pub fn run_traced(registry: &Registry,
+                  recorder: Option<&Arc<FlightRecorder>>)
+                  -> Result<CoexecReport> {
+    let device = mdcl::detect(SMOKE_DEVICE)?;
+    let lut = Measurer::new(&device, registry)
+        .with_runs(SMOKE_LUT_RUNS, (SMOKE_LUT_RUNS / 10).max(1))
+        .with_noise_sigma(0.0)
+        .measure_with_partitions()?;
+    let split_keys =
+        lut.entries.keys().filter(|k| k.plan.is_split()).count();
+    let mut rows = Vec::new();
+    for (app, family, objective) in canonical_mix(4) {
+        rows.push(run_app(&device, registry, &lut, app, family, objective,
+                          recorder)?);
+    }
+    // The headline acceptance gate: at least one app must deploy a
+    // partitioned plan that beats its best monolithic design by the
+    // pinned margin (compared on raw, un-rounded speedups).
+    ensure!(rows.iter().any(|r| r.partitioned_pick
+                                && r.speedup_vs_mono >= 1.2),
+            "no app picked a partitioned plan with >= 1.2x speedup");
+    Ok(CoexecReport { device: device.name.to_string(), split_keys, rows })
+}
+
+/// The complete report as one JSON value (the golden-pinned payload).
+pub fn report_json(report: &CoexecReport) -> Value {
+    let rows = report
+        .rows
+        .iter()
+        .map(|r| {
+            let events = r
+                .events
+                .iter()
+                .map(|e| {
+                    json::obj(vec![
+                        ("name", json::s(e.name)),
+                        ("bucket", json::s(&e.bucket)),
+                        ("full_evals", json::num(e.full_evals as f64)),
+                        ("frontier_evals",
+                         json::num(e.frontier_evals as f64)),
+                        ("built", Value::Bool(e.built)),
+                        ("match", Value::Bool(e.selections_match)),
+                        ("pick", json::s(&e.pick)),
+                        ("latency_ms", json::num(e.latency_ms)),
+                        ("partitioned", Value::Bool(e.partitioned)),
+                    ])
+                })
+                .collect();
+            json::obj(vec![
+                ("device", json::s(&r.device)),
+                ("app", json::s(r.app)),
+                ("family", json::s(r.family)),
+                ("objective", json::s(&r.objective)),
+                ("space_size", json::num(r.space_size as f64)),
+                ("mono_space_size", json::num(r.mono_space_size as f64)),
+                ("frontier_size_idle",
+                 json::num(r.frontier_size_idle as f64)),
+                ("events", Value::Arr(events)),
+                ("best_mono", json::s(&r.best_mono)),
+                ("best_mono_avg_ms", json::num(r3(r.best_mono_avg_ms))),
+                ("pick", json::s(&r.pick)),
+                ("pick_avg_ms", json::num(r3(r.pick_avg_ms))),
+                ("speedup_vs_mono", json::num(r3(r.speedup_vs_mono))),
+                ("partitioned_pick", Value::Bool(r.partitioned_pick)),
+                ("sim_matches", Value::Bool(r.sim_matches)),
+            ])
+        })
+        .collect();
+    json::obj(vec![(
+        "coexec",
+        json::obj(vec![
+            ("device", json::s(&report.device)),
+            ("lut_runs", json::num(SMOKE_LUT_RUNS as f64)),
+            ("noise_sigma", json::num(0.0)),
+            ("handoff_ms", json::num(perf::HANDOFF_MS)),
+            ("split_keys", json::num(report.split_keys as f64)),
+            ("rows", Value::Arr(rows)),
+        ]),
+    )])
+}
+
+/// Print the partitioned-vs-monolithic table; also emit the report as a
+/// JSON line and, when `json_out` is given, write it to that file.  With
+/// `trace_out`, the run is flight-recorded and exported as JSON-lines at
+/// that path plus Chrome trace-event JSON at `<trace_out>.chrome.json`.
+pub fn print(registry: &Registry, json_out: Option<&str>,
+             trace_out: Option<&str>) -> Result<()> {
+    let recorder = trace_out.map(|_| Arc::new(FlightRecorder::new()));
+    let report = run_traced(registry, recorder.as_ref())?;
+    println!("CO-EXEC — pipelined multi-engine partitioning vs best \
+              monolithic deployment ({} partitioned LUT keys)",
+             report.split_keys);
+    println!("{:<16} {:>5} {:>5} {:>5} | {:<34} {:>8} | {:>8} {:>7}",
+             "app", "space", "mono", "front", "idle pick", "avg ms",
+             "mono ms", "speedup");
+    println!("{}", super::rule(100));
+    for r in &report.rows {
+        println!("{:<16} {:>5} {:>5} {:>5} | {:<34} {:>8.3} | {:>8.3} \
+                  {:>6.2}x",
+                 r.app, r.space_size, r.mono_space_size,
+                 r.frontier_size_idle, r.pick, r.pick_avg_ms,
+                 r.best_mono_avg_ms, r.speedup_vs_mono);
+    }
+    println!("(space = widened σ-space at idle; mono = monolithic subset; \
+              front = idle-bucket frontier; picks verified against full \
+              search on every event and against a zero-noise device-sim \
+              execution)");
+    if let (Some(path), Some(rec)) = (trace_out, &recorder) {
+        std::fs::write(path, rec.to_jsonl())
+            .with_context(|| format!("writing {path}"))?;
+        let chrome = format!("{path}.chrome.json");
+        std::fs::write(&chrome, rec.to_chrome_trace())
+            .with_context(|| format!("writing {chrome}"))?;
+        println!("trace: {} events ({} dropped) to {path}; Chrome trace \
+                  to {chrome}",
+                 rec.len(), rec.dropped());
+    }
+    let line = json::to_string(&report_json(&report));
+    println!("COEXEC_JSON {line}");
+    if let Some(path) = json_out {
+        std::fs::write(path, &line)
+            .with_context(|| format!("writing {path}"))?;
+        println!("JSON written to {path}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_fixtures::fake_registry;
+
+    #[test]
+    fn smoke_meets_the_coexec_gate() {
+        let reg = fake_registry();
+        let report = run(&reg).unwrap();
+        assert_eq!(report.rows.len(), 4, "all four apps deployable");
+        assert!(report.split_keys > 0);
+        let mut winners = 0;
+        for r in &report.rows {
+            assert!(r.mono_space_size < r.space_size, "{r:?}");
+            assert!(r.sim_matches, "{r:?}");
+            assert!(r.speedup_vs_mono >= 1.0 - 1e-12, "{r:?}");
+            for e in &r.events {
+                assert!(e.selections_match, "{e:?}");
+                assert!(e.frontier_evals < e.full_evals, "{e:?}");
+            }
+            if r.partitioned_pick && r.speedup_vs_mono >= 1.2 {
+                winners += 1;
+            }
+        }
+        assert!(winners >= 1, "gate: no partitioned win >= 1.2x");
+    }
+
+    #[test]
+    fn partition_trace_events_are_emitted() {
+        let reg = fake_registry();
+        let rec = Arc::new(FlightRecorder::new());
+        let report = run_traced(&reg, Some(&rec)).unwrap();
+        let jsonl = rec.to_jsonl();
+        let partitioned =
+            report.rows.iter().filter(|r| r.partitioned_pick).count();
+        assert!(partitioned >= 1);
+        assert_eq!(jsonl.matches("\"ev\":\"partition\"").count(),
+                   partitioned);
+    }
+}

@@ -73,6 +73,7 @@ fn transplant(dev: &DeviceProfile, d: &Design) -> Design {
             threads: 1,
             governor: out.hw.governor,
             recognition_rate: out.hw.recognition_rate,
+            plan: crate::measurements::ExecPlan::Mono,
         };
     }
     // Clamp governor to ones the device exposes.
@@ -251,6 +252,7 @@ mod tests {
                 threads: 1,
                 governor: crate::dvfs::Governor::EnergyStep, // Sony lacks it
                 recognition_rate: 1.0,
+                plan: crate::measurements::ExecPlan::Mono,
             },
         };
         let t = transplant(&sony, &d);

@@ -3,6 +3,7 @@
 //! emits rows comparable with the paper's — the bench targets and the
 //! `oodin exp <id>` CLI both call these.
 
+pub mod coexec;
 pub mod fig3;
 pub mod fig456;
 pub mod fig7;

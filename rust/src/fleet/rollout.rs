@@ -21,8 +21,13 @@
 //!   rates versus the *same* cohorts' pre-canary baseline (reports
 //!   ingested while still `Proposed`) — a difference-in-differences
 //!   gate, because absolute miss rates are cohort-structural and the
-//!   canary prefix is not a representative sample.  Minimum-sample
-//!   guards and per-stage fresh-evidence resets apply throughout.
+//!   canary prefix is not a representative sample.  An opt-in tail gate
+//!   ([`RolloutConfig::max_p99_ratio`]) additionally compares each
+//!   treated cohort's live p99 — read from its bounded latency-histogram
+//!   rollups — against the same cohort's pre-canary p99, catching
+//!   revisions that keep the mean flat while growing a heavy tail.
+//!   Minimum-sample guards and per-stage fresh-evidence resets apply
+//!   throughout.
 //!   Any gate breach rolls every treated cohort back onto its exact
 //!   snapshot (bit-identical scoped fingerprints), carried through the
 //!   same delta path so the shared frontier caches stay warm.
@@ -165,6 +170,15 @@ pub struct RolloutConfig {
     /// Minimum accepted samples per treated cohort per stage before the
     /// gates may be evaluated at all.
     pub min_samples: u64,
+    /// Optional tail gate: max tolerated ratio of a treated cohort's
+    /// current p99 over its own pre-canary p99, read under
+    /// [`Self::p99_metric`] from the cohort's bounded latency histograms
+    /// ([`crate::telemetry::Telemetry::stats`]) — the mean gates above
+    /// cannot see a revision that keeps the average flat while growing a
+    /// heavy tail.  `None` (the default) disables the gate.
+    pub max_p99_ratio: Option<f64>,
+    /// Telemetry metric the p99 gate reads.
+    pub p99_metric: String,
 }
 
 impl Default for RolloutConfig {
@@ -176,6 +190,8 @@ impl Default for RolloutConfig {
             max_slo_miss_delta: 0.1,
             max_fault_delta: 0.0,
             min_samples: 2,
+            max_p99_ratio: None,
+            p99_metric: "regret_pct".to_string(),
         }
     }
 }
@@ -288,6 +304,7 @@ pub struct Rollout {
     treated: Vec<usize>,
     snapshots: BTreeMap<usize, Arc<Lut>>,
     baseline: BTreeMap<usize, GateStats>,
+    p99_baseline: BTreeMap<usize, f64>,
     treated_stats: BTreeMap<usize, GateStats>,
     control_stats: GateStats,
     seen: BTreeSet<(usize, u64)>,
@@ -305,6 +322,7 @@ impl Rollout {
             treated: Vec::new(),
             snapshots: BTreeMap::new(),
             baseline: BTreeMap::new(),
+            p99_baseline: BTreeMap::new(),
             treated_stats: BTreeMap::new(),
             control_stats: GateStats::default(),
             seen: BTreeSet::new(),
@@ -470,6 +488,8 @@ impl Rollout {
         {
             Some(format!("fault_delta:{:.3}",
                          treated.fault_rate() - base.fault_rate()))
+        } else if let Some(reason) = self.p99_breach(fleet) {
+            Some(reason)
         } else {
             None
         };
@@ -519,6 +539,33 @@ impl Rollout {
         }
     }
 
+    /// The tail gate: the worst treated cohort's current p99 over its
+    /// own pre-canary p99, from the per-cohort histogram rollups.  `None`
+    /// when disabled, when no treated cohort has both sides sampled, or
+    /// when every ratio is within the bound — cohorts without baseline
+    /// samples are guarded by the scalar gates alone.
+    fn p99_breach(&self, fleet: &Fleet) -> Option<String> {
+        let limit = self.cfg.max_p99_ratio?;
+        let mut worst: Option<f64> = None;
+        for &ci in &self.treated {
+            let Some(&base) = self.p99_baseline.get(&ci) else { continue };
+            let Some(cur) =
+                fleet.cohorts[ci].telemetry.stats(&self.cfg.p99_metric)
+            else {
+                continue;
+            };
+            if base <= 0.0 {
+                continue;
+            }
+            let ratio = cur.p99 / base;
+            if worst.map_or(true, |w| ratio > w) {
+                worst = Some(ratio);
+            }
+        }
+        let w = worst?;
+        (w > limit).then(|| format!("p99_ratio:{w:.3}"))
+    }
+
     fn extend_to(&mut self, fleet: &mut Fleet, reg: &mut RevisionRegistry,
                  n: usize) -> DeltaOutcome {
         let mut total = DeltaOutcome::default();
@@ -528,6 +575,13 @@ impl Rollout {
             }
             debug_assert_eq!(reg.live(ci), BASELINE_REVISION);
             self.snapshots.insert(ci, Arc::clone(&fleet.cohorts[ci].lut));
+            // Pre-treatment p99 of the tail-gate metric, snapshotted the
+            // moment the cohort is claimed.
+            if let Some(s) =
+                fleet.cohorts[ci].telemetry.stats(&self.cfg.p99_metric)
+            {
+                self.p99_baseline.insert(ci, s.p99);
+            }
             total.absorb(fleet.apply_cohort_scale(ci, self.revision.engine,
                                                   self.revision.factor));
             reg.assign(ci, self.revision.id);

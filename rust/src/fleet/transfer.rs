@@ -37,7 +37,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, Result};
 
 use crate::device::{DeviceProfile, EngineKind, EngineSpec};
-use crate::measurements::{Lut, LutKey, Measurer};
+use crate::measurements::{ExecPlan, Lut, LutKey, Measurer};
 use crate::model::Registry;
 use crate::perf::{self, ExecConditions};
 use crate::util::stats::LatencyStats;
@@ -240,6 +240,7 @@ impl<'a> TransferEngine<'a> {
                             engine: spec.kind,
                             threads: t,
                             governor: g,
+                            plan: ExecPlan::Mono,
                         };
                         let Some((anchor, entry)) = ranked
                             .iter()

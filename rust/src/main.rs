@@ -11,7 +11,7 @@
 //! oodin serve   --family <f> [--precision p] [--requests n] [--device d]
 //! oodin serve-bench [--smoke] [--device d] [--rate r] [--duration ms] [--json f] [--trace f]
 //! oodin multi   [--smoke] [--device d] [--apps n] [--windows w] [--json f]
-//! oodin opt-bench [--smoke] [--device d] [--apps n] [--json f] [--trace f]
+//! oodin opt-bench [--smoke|--coexec] [--device d] [--apps n] [--json f] [--trace f]
 //! oodin fleet-bench [--smoke] [--devices n] [--seed s] [--family f] [--json f] [--trace f]
 //! ```
 //!
@@ -25,8 +25,8 @@
 use anyhow::{bail, Context, Result};
 
 use oodin::config::UseCase;
-use oodin::experiments::{fig3, fig456, fig7, fig8, fleetbench, loadgen,
-                         multiapp, optbench, tables};
+use oodin::experiments::{coexec, fig3, fig456, fig7, fig8, fleetbench,
+                         loadgen, multiapp, optbench, tables};
 use oodin::measurements::Measurer;
 use oodin::model::Precision;
 use oodin::optimizer::Optimizer;
@@ -122,6 +122,7 @@ fn print_usage() {
          \x20 serve-bench [--smoke] [--device d] [--rate r] [--duration ms] [--json f] [--trace f]  pipeline load bench\n\
          \x20 multi    [--smoke] [--device d] [--apps n] [--windows w] [--json f]  multi-app contention table\n\
          \x20 opt-bench [--smoke] [--device d] [--apps n] [--json f] [--trace f]  full-search vs frontier-walk adaptation cost\n\
+         \x20 opt-bench --coexec [--json f] [--trace f]  pipelined multi-engine partitioning vs best monolithic\n\
          \x20 fleet-bench [--smoke] [--devices n] [--seed s] [--family f] [--json f] [--trace f]  population-scale LUT transfer + cohort caches + staged-rollout control plane\n\
          \n\
          --trace <path> (benches) writes a decision flight-recorder trace as\n\
@@ -229,6 +230,12 @@ fn cmd_multi(args: &Args) -> Result<()> {
 
 fn cmd_opt_bench(args: &Args) -> Result<()> {
     let registry = load_registry_or_synthetic()?;
+    if args.has("coexec") {
+        // The co-execution smoke: widened (partitioned) σ-space on the
+        // golden-pinned device, ignoring --device/--apps depth flags.
+        return coexec::print(&registry, args.flag("json"),
+                             args.flag("trace"));
+    }
     let mut cfg = if args.has("smoke") {
         optbench::OptBenchConfig::smoke()
     } else {

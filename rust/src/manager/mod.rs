@@ -35,9 +35,14 @@ use crate::telemetry::trace::{round3, FlightRecorder, TraceEvent};
 use crate::util::stats::{Percentile, RollingWindow};
 
 /// Canonical design id used across trace events and experiment reports:
-/// `variant|engine|threads|governor|r=rate`.
+/// `variant|engine|threads|governor|r=rate`.  Partitioned designs render
+/// their plan id (`cpu>gpu@500`) in the engine slot.
 pub fn design_id(d: &Design) -> String {
-    format!("{}|{}|{}|{}|r={}", d.variant, d.hw.engine.name(), d.hw.threads,
+    let engine = match &d.hw.plan {
+        crate::measurements::ExecPlan::Mono => d.hw.engine.name().to_string(),
+        crate::measurements::ExecPlan::Split(p) => p.id(),
+    };
+    format!("{}|{}|{}|{}|r={}", d.variant, engine, d.hw.threads,
             d.hw.governor.name(), d.hw.recognition_rate)
 }
 
@@ -60,10 +65,19 @@ pub fn hold_label(r: &HoldReason) -> &'static str {
 pub fn adjusted_latency(lut: &Lut, design: &Design, stat: Percentile,
                         conds: &Conditions) -> Option<f64> {
     let e = lut.get(&design.lut_key())?;
-    let k = design.hw.engine;
-    Some(e.latency.metric(stat)
-         * perf::contention(conds.load(k))
-         / conds.thermal_scale(k).max(1e-3))
+    if e.stages.is_empty() {
+        let k = design.hw.engine;
+        Some(e.latency.metric(stat)
+             * perf::contention(conds.load(k))
+             / conds.thermal_scale(k).max(1e-3))
+    } else {
+        // Pipelined plan: the bottleneck stage may move under load, so
+        // re-derive the steady-state factor from the per-stage costs.
+        let f = perf::plan_condition_factor(&e.stages,
+                                            |k| conds.load(k),
+                                            |k| conds.thermal_scale(k));
+        Some(e.latency.metric(stat) * f)
+    }
 }
 
 /// Instantaneous per-engine conditions, as reported by MDCL middleware c.

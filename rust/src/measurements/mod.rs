@@ -18,12 +18,12 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::device::{DeviceProfile, EngineKind};
 use crate::dvfs::Governor;
 use crate::model::Registry;
-use crate::perf::{self, ExecConditions};
+use crate::perf::{self, ExecConditions, StageCost};
 use crate::runtime::Backend;
 use crate::util::json::{self, Value};
 use crate::util::rng::Rng;
@@ -44,23 +44,144 @@ pub enum MeasureMode {
     HostCalibrated,
 }
 
+/// A partitioned execution plan: ordered per-segment engine assignments
+/// plus the interior cut points (per-mille of the variant's FLOPs/bytes,
+/// strictly increasing, exclusive of 0 and 1000).  Segment i runs on
+/// `engines[i]` and covers `(cuts[i-1], cuts[i]]`.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PartitionPlan {
+    /// Engine per segment, in pipeline order (all distinct).
+    pub engines: Vec<EngineKind>,
+    /// Interior cut points, per-mille (len = engines.len() - 1).
+    pub cuts_pm: Vec<u32>,
+}
+
+impl PartitionPlan {
+    /// `cpu>gpu@500` / `gpu>cpu>nnapi@250+750` — the saved-key encoding,
+    /// carried in the engine slot of [`LutKey::id`].
+    pub fn id(&self) -> String {
+        let engines: Vec<&str> =
+            self.engines.iter().map(|e| e.name()).collect();
+        let cuts: Vec<String> =
+            self.cuts_pm.iter().map(|c| c.to_string()).collect();
+        format!("{}@{}", engines.join(">"), cuts.join("+"))
+    }
+
+    /// Parse a [`PartitionPlan::id`] string.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (es, cs) = s
+            .split_once('@')
+            .ok_or_else(|| anyhow!("bad partition plan `{s}`"))?;
+        let engines = es
+            .split('>')
+            .map(EngineKind::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let cuts_pm = cs
+            .split('+')
+            .map(|c| c.parse::<u32>().context("cut point"))
+            .collect::<Result<Vec<_>>>()?;
+        ensure!(engines.len() >= 2 && cuts_pm.len() == engines.len() - 1,
+                "bad partition plan `{s}`: need n engines, n-1 cuts");
+        ensure!(cuts_pm.iter().all(|&c| c > 0 && c < 1000)
+                    && cuts_pm.windows(2).all(|w| w[0] < w[1]),
+                "bad partition plan `{s}`: cuts must be strictly \
+                 increasing in (0, 1000)");
+        Ok(PartitionPlan { engines, cuts_pm })
+    }
+}
+
+/// How a configuration executes: the whole model on one engine, or split
+/// into pipelined segments across several.  `Mono` sorts first so a LUT
+/// without partitioned entries keeps its historical BTreeMap order.
+#[derive(Debug, Clone, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ExecPlan {
+    /// Whole model on `LutKey::engine` (the historical design space).
+    #[default]
+    Mono,
+    /// Pipelined multi-engine partition.
+    Split(PartitionPlan),
+}
+
+impl ExecPlan {
+    /// The engines this plan occupies, given the key's (first-stage)
+    /// engine for the monolithic case.
+    pub fn engines(&self, mono_engine: EngineKind) -> Vec<EngineKind> {
+        match self {
+            ExecPlan::Mono => vec![mono_engine],
+            ExecPlan::Split(p) => p.engines.clone(),
+        }
+    }
+
+    /// True for partitioned plans.
+    pub fn is_split(&self) -> bool {
+        matches!(self, ExecPlan::Split(_))
+    }
+}
+
+/// The default partition grid for a device: every ordered pair of
+/// distinct available engines at cuts {250, 500, 750}, plus every
+/// ordered triple of distinct engines at cuts (250, 750).  On a
+/// 3-engine device that is 24 plans per variant; a 2-engine device gets
+/// the 6 pair plans only.
+pub fn partition_plans(dev: &DeviceProfile) -> Vec<PartitionPlan> {
+    let avail: Vec<EngineKind> = dev.engines.iter().map(|s| s.kind).collect();
+    let mut plans = Vec::new();
+    for &a in &avail {
+        for &b in &avail {
+            if a == b {
+                continue;
+            }
+            for &cut in &[250u32, 500, 750] {
+                plans.push(PartitionPlan {
+                    engines: vec![a, b],
+                    cuts_pm: vec![cut],
+                });
+            }
+        }
+    }
+    for &a in &avail {
+        for &b in &avail {
+            for &c in &avail {
+                if a == b || a == c || b == c {
+                    continue;
+                }
+                plans.push(PartitionPlan {
+                    engines: vec![a, b, c],
+                    cuts_pm: vec![250, 750],
+                });
+            }
+        }
+    }
+    plans
+}
+
 /// One measured system configuration of a variant on a device.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct LutKey {
     /// Variant name (`<family>__<precision>__b1`).
     pub variant: String,
-    /// Engine the configuration runs on.
+    /// Engine the configuration runs on (first-stage engine for
+    /// partitioned plans).
     pub engine: EngineKind,
     /// CPU threads (1 for offload engines).
     pub threads: usize,
     /// DVFS governor in effect.
     pub governor: Governor,
+    /// Monolithic or partitioned execution.  Last field so the derived
+    /// `Ord` keeps all-mono LUTs in the historical order.
+    pub plan: ExecPlan,
 }
 
 impl LutKey {
     /// `variant|engine|threads|governor` — the saved-LUT key format.
+    /// Partitioned keys carry the plan in the engine slot
+    /// (`variant|cpu>gpu@500|threads|governor`).
     pub fn id(&self) -> String {
-        format!("{}|{}|{}|{}", self.variant, self.engine.name(), self.threads,
+        let engine = match &self.plan {
+            ExecPlan::Mono => self.engine.name().to_string(),
+            ExecPlan::Split(p) => p.id(),
+        };
+        format!("{}|{}|{}|{}", self.variant, engine, self.threads,
                 self.governor.name())
     }
 
@@ -70,11 +191,18 @@ impl LutKey {
         if parts.len() != 4 {
             anyhow::bail!("bad LUT key `{id}`");
         }
+        let (engine, plan) = if parts[1].contains('>') {
+            let p = PartitionPlan::parse(parts[1])?;
+            (p.engines[0], ExecPlan::Split(p))
+        } else {
+            (EngineKind::parse(parts[1])?, ExecPlan::Mono)
+        };
         Ok(LutKey {
             variant: parts[0].to_string(),
-            engine: EngineKind::parse(parts[1])?,
+            engine,
             threads: parts[2].parse().context("threads")?,
             governor: Governor::parse(parts[3])?,
+            plan,
         })
     }
 }
@@ -84,11 +212,16 @@ impl LutKey {
 pub struct LutEntry {
     /// Latency summary over the measured runs (ms).
     pub latency: LatencyStats,
-    /// Peak working-set bytes (weights + DLACL buffers).
+    /// Peak working-set bytes (weights + DLACL buffers; plus boundary
+    /// activation double-buffers for partitioned plans).
     pub mem_bytes: u64,
     /// Accuracy of the variant (copied from the manifest for locality:
     /// the Runtime Manager keeps only the LUT at run time, §III-D).
     pub accuracy: f64,
+    /// Per-stage roofline breakdown for partitioned plans (empty for
+    /// monolithic entries) — the condition-adjustment model re-finds the
+    /// pipeline bottleneck from these under per-engine load/thermal.
+    pub stages: Vec<StageCost>,
 }
 
 /// The device-specific look-up table.
@@ -117,6 +250,14 @@ impl Lut {
         for (k, e) in entries.iter_mut() {
             if k.engine == engine {
                 e.latency = e.latency.scaled(factor);
+                // Partitioned entries (keyed by their first-stage engine)
+                // scale their stage breakdown uniformly so the stored
+                // stats/stages ratio — and thus the condition-adjustment
+                // factor — stays consistent.
+                for st in e.stages.iter_mut() {
+                    st.stage_ms *= factor;
+                    st.xfer_ms *= factor;
+                }
             }
         }
         Lut { device: self.device.clone(), entries }
@@ -140,18 +281,33 @@ impl Lut {
 
     // -- serialization ----------------------------------------------------
 
-    /// Serialise for `--out lut.json`.
+    /// Serialise for `--out lut.json`.  Monolithic entries keep the
+    /// historical four-field shape; partitioned entries append their
+    /// stage breakdown.
     pub fn to_json(&self) -> Value {
         let entries: Vec<Value> = self
             .entries
             .iter()
             .map(|(k, e)| {
-                json::obj(vec![
+                let mut fields = vec![
                     ("key", json::s(&k.id())),
                     ("latency", e.latency.to_json()),
                     ("mem_bytes", json::num(e.mem_bytes as f64)),
                     ("accuracy", json::num(e.accuracy)),
-                ])
+                ];
+                if !e.stages.is_empty() {
+                    let stages: Vec<Value> = e
+                        .stages
+                        .iter()
+                        .map(|st| json::obj(vec![
+                            ("engine", json::s(st.engine.name())),
+                            ("stage_ms", json::num(st.stage_ms)),
+                            ("xfer_ms", json::num(st.xfer_ms)),
+                        ]))
+                        .collect();
+                    fields.push(("stages", Value::Arr(stages)));
+                }
+                json::obj(fields)
             })
             .collect();
         json::obj(vec![
@@ -165,10 +321,26 @@ impl Lut {
         let mut entries = BTreeMap::new();
         for e in v.req("entries")?.as_arr()? {
             let key = LutKey::parse(e.req("key")?.as_str()?)?;
+            let stages = match e.get("stages") {
+                None => Vec::new(),
+                Some(arr) => arr
+                    .as_arr()?
+                    .iter()
+                    .map(|st| {
+                        Ok(StageCost {
+                            engine: EngineKind::parse(
+                                st.req("engine")?.as_str()?)?,
+                            stage_ms: st.req("stage_ms")?.as_f64()?,
+                            xfer_ms: st.req("xfer_ms")?.as_f64()?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            };
             entries.insert(key, LutEntry {
                 latency: LatencyStats::from_json(e.req("latency")?)?,
                 mem_bytes: e.req("mem_bytes")?.as_u64()?,
                 accuracy: e.req("accuracy")?.as_f64()?,
+                stages,
             });
         }
         Ok(Lut { device: v.req("device")?.as_str()?.to_string(), entries })
@@ -262,6 +434,7 @@ impl<'a> Measurer<'a> {
                             engine: spec.kind,
                             threads,
                             governor,
+                            plan: ExecPlan::Mono,
                         };
                         let entry = self.measure_one(&key)?;
                         entries.insert(key, entry);
@@ -270,6 +443,65 @@ impl<'a> Measurer<'a> {
             }
         }
         Ok(Lut { device: self.device.name.to_string(), entries })
+    }
+
+    /// [`Measurer::measure_all`] plus one partitioned entry per (variant,
+    /// plan) in the device's default grid ([`partition_plans`]), pinned
+    /// to the performance governor (co-execution is a raw-speed play; the
+    /// mono entries already cover the energy-biased governors).  Opt-in:
+    /// LUTs produced by `measure_all` are byte-identical to before this
+    /// extension existed.
+    pub fn measure_with_partitions(&self) -> Result<Lut> {
+        let mut lut = self.measure_all()?;
+        for v in self.registry.variants().iter().filter(|v| v.batch == 1) {
+            for plan in partition_plans(self.device) {
+                let key = LutKey {
+                    variant: v.name.clone(),
+                    engine: plan.engines[0],
+                    threads: perf::plan_threads(self.device, &plan.engines),
+                    governor: Governor::Performance,
+                    plan: ExecPlan::Split(plan),
+                };
+                let entry = self.measure_plan(&key)?;
+                lut.entries.insert(key, entry);
+            }
+        }
+        Ok(lut)
+    }
+
+    /// Measure one partitioned configuration: the closed-form pipelined
+    /// bottleneck is sampled under the same warm-up/noise protocol as
+    /// [`Measurer::measure_one`], and the nominal per-stage breakdown is
+    /// stored alongside for condition adjustment.  Delegates to
+    /// `measure_one` for monolithic keys.
+    pub fn measure_plan(&self, key: &LutKey) -> Result<LutEntry> {
+        let ExecPlan::Split(plan) = &key.plan else {
+            return self.measure_one(key);
+        };
+        let v = self
+            .registry
+            .get(&key.variant)
+            .ok_or_else(|| anyhow!("unknown variant `{}`", key.variant))?;
+        let stages = perf::plan_stage_costs(self.device, v, &plan.engines,
+                                            &plan.cuts_pm, key.governor)
+            .ok_or_else(|| anyhow!("device {} lacks an engine of plan {}",
+                                   self.device.name, plan.id()))?;
+        let base = perf::pipelined_latency_ms(&stages);
+        let mut rng = Rng::new(seed_for(self.device.name, &key.id()));
+        let mut samples = Vec::with_capacity(self.runs);
+        for i in 0..(self.warmup + self.runs) {
+            let cold = if i < self.warmup { 1.5 } else { 1.0 };
+            let s = base * cold * rng.lognormal(self.noise_sigma);
+            if i >= self.warmup {
+                samples.push(s);
+            }
+        }
+        Ok(LutEntry {
+            latency: LatencyStats::from_samples(&samples),
+            mem_bytes: perf::plan_mem_bytes(v, &plan.cuts_pm),
+            accuracy: v.accuracy,
+            stages,
+        })
     }
 
     /// Measure a single configuration: warm-ups discarded, `runs` samples
@@ -311,6 +543,7 @@ impl<'a> Measurer<'a> {
             latency: LatencyStats::from_samples(&samples),
             mem_bytes: v.mem_bytes(),
             accuracy: v.accuracy,
+            stages: Vec::new(),
         })
     }
 
@@ -339,6 +572,25 @@ impl<'a> Measurer<'a> {
         }
         times.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Ok(Some(times[times.len() / 2]))
+    }
+}
+
+/// Energy proxy of a LUT entry under `governor`: the monolithic closed
+/// form on the entry's engine, or the per-stage sum (each stage billed on
+/// its own engine, in pipeline order) for a partitioned entry.  `None`
+/// when the device lacks one of the engines involved.
+pub fn entry_energy_mj(dev: &DeviceProfile, key_engine: EngineKind,
+                       entry: &LutEntry, governor: Governor) -> Option<f64> {
+    if entry.stages.is_empty() {
+        let spec = dev.engine(key_engine)?;
+        Some(perf::energy_proxy_mj(spec, entry.latency.avg, governor))
+    } else {
+        let mut total = 0.0;
+        for st in &entry.stages {
+            let spec = dev.engine(st.engine)?;
+            total += perf::energy_proxy_mj(spec, st.stage_ms, governor);
+        }
+        Some(total)
     }
 }
 
@@ -388,6 +640,7 @@ mod tests {
             engine: EngineKind::Npu,
             threads: 1,
             governor: Governor::Performance,
+            plan: ExecPlan::Mono,
         };
         let a = m.measure_one(&key).unwrap();
         let b = m.measure_one(&key).unwrap();
@@ -404,6 +657,7 @@ mod tests {
             engine: EngineKind::Gpu,
             threads: 1,
             governor: Governor::Schedutil,
+            plan: ExecPlan::Mono,
         };
         let e = m.measure_one(&key).unwrap();
         let l = &e.latency;
@@ -419,6 +673,7 @@ mod tests {
             engine: EngineKind::Npu,
             threads: 4,
             governor: Governor::EnergyStep,
+            plan: ExecPlan::Mono,
         };
         assert_eq!(LutKey::parse(&key.id()).unwrap(), key);
         assert!(LutKey::parse("a|b").is_err());
@@ -465,6 +720,7 @@ mod tests {
             engine: EngineKind::Cpu,
             threads: 1,
             governor: Governor::Performance,
+            plan: ExecPlan::Mono,
         };
         assert!(m.measure_one(&key).is_err());
     }
@@ -476,5 +732,131 @@ mod tests {
         let lut = Measurer::new(&dev, &reg).with_runs(5, 0).measure_all().unwrap();
         let n = lut.keys_for_variant("mobilenet_v2_100__fp32__b1").count();
         assert_eq!(n, 5 * 2); // 5 engine-thread combos x 2 governors
+    }
+
+    #[test]
+    fn partition_grid_sizes() {
+        // 3 engines: 3·2 ordered pairs × 3 cuts + 6 ordered triples.
+        assert_eq!(partition_plans(&samsung_a71()).len(), 18 + 6);
+        // 2 engines: 2 ordered pairs × 3 cuts, no triples.
+        assert_eq!(partition_plans(&sony_c5()).len(), 6);
+    }
+
+    #[test]
+    fn partition_sweep_extends_without_disturbing_mono_entries() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let m = Measurer::new(&dev, &reg).with_runs(10, 1);
+        let mono = m.measure_all().unwrap();
+        let full = m.measure_with_partitions().unwrap();
+        // 216 mono + 12 variants × 24 plans.
+        assert_eq!(full.len(), 12 * 6 * 3 + 12 * 24);
+        for (k, e) in &mono.entries {
+            let f = full.get(k).expect("mono key must survive");
+            assert_eq!(f.latency, e.latency, "mono entry disturbed: {}",
+                       k.id());
+            assert!(f.stages.is_empty());
+        }
+        for (k, e) in &full.entries {
+            if k.plan.is_split() {
+                assert_eq!(k.governor, Governor::Performance);
+                assert!(!e.stages.is_empty());
+                assert!(e.mem_bytes
+                        > reg.get(&k.variant).unwrap().mem_bytes());
+            }
+        }
+    }
+
+    #[test]
+    fn split_key_id_roundtrip() {
+        let key = LutKey {
+            variant: "inception_v3__int8__b1".into(),
+            engine: EngineKind::Gpu,
+            threads: 8,
+            governor: Governor::Performance,
+            plan: ExecPlan::Split(PartitionPlan {
+                engines: vec![EngineKind::Gpu, EngineKind::Npu,
+                              EngineKind::Cpu],
+                cuts_pm: vec![250, 750],
+            }),
+        };
+        assert_eq!(key.id(),
+                   "inception_v3__int8__b1|gpu>nnapi>cpu@250+750|8\
+                    |performance");
+        assert_eq!(LutKey::parse(&key.id()).unwrap(), key);
+        // Malformed plans are rejected.
+        assert!(LutKey::parse("v|cpu>cpu@0|1|performance").is_err());
+        assert!(LutKey::parse("v|cpu>gpu@750+250|1|performance").is_err());
+        assert!(LutKey::parse("v|cpu>gpu|1|performance").is_err());
+    }
+
+    #[test]
+    fn partitioned_lut_json_roundtrip_keeps_stages() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg)
+            .with_runs(6, 1)
+            .measure_with_partitions()
+            .unwrap();
+        let back = Lut::from_json(&lut.to_json()).unwrap();
+        assert_eq!(back.len(), lut.len());
+        for (k, e) in &lut.entries {
+            let b = back.get(k).unwrap();
+            assert_eq!(b.latency, e.latency);
+            assert_eq!(b.stages.len(), e.stages.len());
+            for (x, y) in b.stages.iter().zip(e.stages.iter()) {
+                assert_eq!(x.engine, y.engine);
+                assert_eq!(x.stage_ms, y.stage_ms);
+                assert_eq!(x.xfer_ms, y.xfer_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_noise_split_entry_is_the_pipelined_bottleneck() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let m = Measurer::new(&dev, &reg).with_runs(8, 2).with_noise_sigma(0.0);
+        let plan = PartitionPlan {
+            engines: vec![EngineKind::Gpu, EngineKind::Cpu],
+            cuts_pm: vec![500],
+        };
+        let key = LutKey {
+            variant: "deeplab_v3__int8__b1".into(),
+            engine: EngineKind::Gpu,
+            threads: perf::plan_threads(&dev, &plan.engines),
+            governor: Governor::Performance,
+            plan: ExecPlan::Split(plan),
+        };
+        let e = m.measure_plan(&key).unwrap();
+        let bottleneck = perf::pipelined_latency_ms(&e.stages);
+        assert!((e.latency.avg - bottleneck).abs() < 1e-9);
+        // Pipelined latency is never below the slowest bare stage.
+        for st in &e.stages {
+            assert!(bottleneck >= st.stage_ms);
+        }
+    }
+
+    #[test]
+    fn scaled_engine_scales_split_stages_of_first_stage_engine() {
+        let dev = samsung_a71();
+        let reg = fake_registry();
+        let lut = Measurer::new(&dev, &reg)
+            .with_runs(6, 1)
+            .measure_with_partitions()
+            .unwrap();
+        let scaled = lut.scaled_engine(EngineKind::Gpu, 1.5);
+        for (k, e) in &lut.entries {
+            let s = scaled.get(k).unwrap();
+            if k.engine == EngineKind::Gpu {
+                assert!((s.latency.avg - e.latency.avg * 1.5).abs() < 1e-9);
+                for (x, y) in s.stages.iter().zip(e.stages.iter()) {
+                    assert_eq!(x.stage_ms, y.stage_ms * 1.5);
+                    assert_eq!(x.xfer_ms, y.xfer_ms * 1.5);
+                }
+            } else {
+                assert_eq!(s.latency.avg, e.latency.avg);
+            }
+        }
     }
 }

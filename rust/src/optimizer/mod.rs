@@ -29,9 +29,8 @@ use crate::designspace::{rank, DesignSpace};
 use crate::device::{DeviceProfile, EngineKind};
 use crate::dvfs::Governor;
 use crate::manager::Conditions;
-use crate::measurements::{Lut, LutKey};
+use crate::measurements::{entry_energy_mj, ExecPlan, Lut, LutKey};
 use crate::model::{Precision, Registry};
-use crate::perf;
 use crate::util::stats::Percentile;
 
 pub use crate::designspace::Candidate as Evaluated;
@@ -39,10 +38,11 @@ pub use crate::designspace::Candidate as Evaluated;
 /// Recognition-rate candidates r (inference invocation frequency, §III-B1).
 pub const RECOGNITION_RATES: [f64; 3] = [1.0, 0.5, 0.25];
 
-/// The tunable system-level parameters hw = <ce, N_threads, g, r>.
+/// The tunable system-level parameters hw = <ce, N_threads, g, r, π>.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HwConfig {
-    /// ce: the engine the model runs on.
+    /// ce: the engine the model runs on (first-stage engine when
+    /// partitioned).
     pub engine: EngineKind,
     /// N_threads: CPU threads (1 for offload engines).
     pub threads: usize,
@@ -50,6 +50,9 @@ pub struct HwConfig {
     pub governor: Governor,
     /// r: fraction of camera frames actually processed.
     pub recognition_rate: f64,
+    /// π: monolithic execution or a pipelined multi-engine partition
+    /// (the co-execution extension of the σ design vector).
+    pub plan: ExecPlan,
 }
 
 /// A candidate design σ = <m_ref, t, hw>: the variant name encodes
@@ -70,7 +73,17 @@ impl Design {
             engine: self.hw.engine,
             threads: self.hw.threads,
             governor: self.hw.governor,
+            plan: self.hw.plan.clone(),
         }
+    }
+
+    /// Every engine this design occupies while running: one for a
+    /// monolithic design, all pipeline stages for a partitioned one.
+    /// Exclusive-engine budgets (joint search) and per-engine
+    /// availability checks must treat a partitioned design as holding
+    /// each of these.
+    pub fn engines(&self) -> Vec<EngineKind> {
+        self.hw.plan.engines(self.hw.engine)
     }
 }
 
@@ -156,7 +169,10 @@ impl SearchSpace {
             }
         }
         if let Some(es) = &self.engines {
-            if !es.contains(&key.engine) {
+            // A partitioned key is admitted only when *every* engine it
+            // touches is allowed (an oSQ-CPU baseline must not smuggle
+            // GPU time in via a split plan).
+            if !key.plan.engines(key.engine).iter().all(|e| es.contains(e)) {
                 return false;
             }
         }
@@ -251,9 +267,8 @@ impl<'a> Optimizer<'a> {
             .lut
             .get(&design.lut_key())
             .ok_or_else(|| anyhow!("design {:?} not in LUT (engine absent?)", design))?;
-        let spec = self
-            .device
-            .engine(design.hw.engine)
+        let energy_mj = entry_energy_mj(self.device, design.hw.engine, entry,
+                                        design.hw.governor)
             .ok_or_else(|| anyhow!("device {} has no engine {}",
                                    self.device.name, design.hw.engine.name()))?;
         let r = design.hw.recognition_rate;
@@ -264,8 +279,7 @@ impl<'a> Optimizer<'a> {
             fps: (self.camera_fps * r).min(1000.0 / entry.latency.avg),
             mem_bytes: entry.mem_bytes,
             accuracy: entry.accuracy,
-            energy_mj: perf::energy_proxy_mj(spec, entry.latency.avg,
-                                             design.hw.governor),
+            energy_mj,
             score: 0.0,
         })
     }
@@ -439,6 +453,7 @@ mod tests {
                 threads: 1,
                 governor: Governor::Performance,
                 recognition_rate: 1.0,
+                plan: ExecPlan::Mono,
             },
         };
         assert!(opt.evaluate(&d, Percentile::Avg).is_err());

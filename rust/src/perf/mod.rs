@@ -148,6 +148,154 @@ pub fn busy_ms(dev: &DeviceProfile, kind: EngineKind, v: &ModelVariant,
     Some(compute_ms(dev, spec, v, cond).max(memory_ms(spec, v)))
 }
 
+// ---------------------------------------------------------------------------
+// Intra-model co-execution: a partitioned plan splits one variant into
+// 2–3 layer-group segments pinned to distinct engines and runs them as a
+// pipeline.  Steady-state latency is the bottleneck stage (stage roofline
+// + inter-engine transfer), not the sum of stages.
+// ---------------------------------------------------------------------------
+
+/// Fixed overhead (ms) of one inter-engine handoff: queue submission +
+/// synchronisation, paid per transfer on top of the activation-bytes /
+/// bandwidth term.
+pub const HANDOFF_MS: f64 = 0.05;
+
+/// Per-stage cost breakdown of a partitioned execution plan at nominal
+/// (idle, cool) conditions.  Stored in the LUT next to the sampled
+/// latency statistics so condition adjustment can re-find the bottleneck
+/// stage under per-engine load/thermal state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageCost {
+    /// Engine this segment runs on.
+    pub engine: EngineKind,
+    /// Segment roofline time (ms): dispatch + max(compute, memory).
+    pub stage_ms: f64,
+    /// Inter-engine transfer into this segment (ms); 0 for the first.
+    pub xfer_ms: f64,
+}
+
+/// Activation elements crossing a per-mille cut point: geometric
+/// interpolation between the variant's input and output widths.  The grid
+/// cuts {250, 500, 750} use a sqrt-only chain (IEEE sqrt is correctly
+/// rounded, so the Rust and Python oracles agree bit-for-bit); other cut
+/// points fall back to `powf` and must not appear on golden-pinned paths.
+pub fn boundary_elems(v: &ModelVariant, cut_pm: u32) -> f64 {
+    let i = v.input_elems() as f64;
+    let o = v.output_elems() as f64;
+    match cut_pm {
+        0 => i,
+        1000 => o,
+        500 => (i * o).sqrt(),
+        250 => {
+            let mid = (i * o).sqrt();
+            (i * mid).sqrt()
+        }
+        750 => {
+            let mid = (i * o).sqrt();
+            (mid * o).sqrt()
+        }
+        _ => {
+            let t = cut_pm as f64 / 1000.0;
+            i.powf(1.0 - t) * o.powf(t)
+        }
+    }
+}
+
+/// Threads a partitioned plan runs with: all cores when any segment is on
+/// the CPU (the CPU stage gets the full thread budget while offload
+/// stages run concurrently), 1 otherwise.
+pub fn plan_threads(dev: &DeviceProfile, engines: &[EngineKind]) -> usize {
+    if engines.contains(&EngineKind::Cpu) {
+        dev.n_cores
+    } else {
+        1
+    }
+}
+
+/// Per-stage roofline costs of a partitioned plan at idle, cool
+/// conditions under `governor`.  `cuts_pm` are the interior cut points
+/// (per-mille of the variant's FLOPs/bytes); segment i covers
+/// `(bounds[i], bounds[i+1]]` with its weights-fraction streamed plus the
+/// fp32 activations at both segment boundaries.  `None` when any engine
+/// the plan touches is absent on the device.
+pub fn plan_stage_costs(dev: &DeviceProfile, v: &ModelVariant,
+                        engines: &[EngineKind], cuts_pm: &[u32],
+                        governor: Governor) -> Option<Vec<StageCost>> {
+    let cond = ExecConditions {
+        governor,
+        threads: plan_threads(dev, engines),
+        load_factor: 0.0,
+        thermal_freq_scale: 1.0,
+    };
+    let mut bounds = Vec::with_capacity(engines.len() + 1);
+    bounds.push(0u32);
+    bounds.extend_from_slice(cuts_pm);
+    bounds.push(1000);
+    let mut stages = Vec::with_capacity(engines.len());
+    for (i, &kind) in engines.iter().enumerate() {
+        let spec = dev.engine(kind)?;
+        let (lo, hi) = (bounds[i], bounds[i + 1]);
+        let frac = (hi - lo) as f64 / 1000.0;
+        let flops = v.flops as f64 * frac;
+        let size = v.size_bytes as f64 * frac;
+        let b_in = boundary_elems(v, lo);
+        let b_out = boundary_elems(v, hi);
+        let gflops = effective_gflops(dev, spec, v, &cond);
+        let compute = flops / (gflops * 1e6);
+        let act = (b_in + b_out) * 4.0;
+        let memory = (size + act) / (spec.mem_bw_gbps * 1e6);
+        let stage_ms = spec.dispatch_ms + compute.max(memory);
+        let xfer_ms = if i == 0 {
+            0.0
+        } else {
+            let prev = dev.engine(engines[i - 1])?;
+            let bw = prev.mem_bw_gbps.min(spec.mem_bw_gbps);
+            (b_in * 4.0) / (bw * 1e6) + HANDOFF_MS
+        };
+        stages.push(StageCost { engine: kind, stage_ms, xfer_ms });
+    }
+    Some(stages)
+}
+
+/// Steady-state latency (ms) of a pipelined plan: the bottleneck
+/// max(transfer-in + stage) over all stages.
+pub fn pipelined_latency_ms(stages: &[StageCost]) -> f64 {
+    let mut bn = 0.0f64;
+    for st in stages {
+        bn = bn.max(st.xfer_ms + st.stage_ms);
+    }
+    bn
+}
+
+/// Condition-adjustment factor of a partitioned plan: the ratio of the
+/// pipeline bottleneck under per-engine contention/thermal state to the
+/// nominal bottleneck.  Stage compute scales by `2^load / thermal` on its
+/// own engine; transfers are bus-side and stay fixed — so load on one
+/// engine can move the bottleneck to a different stage.
+pub fn plan_condition_factor(stages: &[StageCost],
+                             load: impl Fn(EngineKind) -> f64,
+                             thermal: impl Fn(EngineKind) -> f64) -> f64 {
+    let mut base = 0.0f64;
+    let mut cond = 0.0f64;
+    for st in stages {
+        base = base.max(st.xfer_ms + st.stage_ms);
+        cond = cond.max(st.xfer_ms
+            + st.stage_ms * contention(load(st.engine))
+                / thermal(st.engine).max(1e-3));
+    }
+    cond / base
+}
+
+/// Working set of a partitioned plan: the variant's memory plus
+/// double-buffered fp32 activations at every interior segment boundary.
+pub fn plan_mem_bytes(v: &ModelVariant, cuts_pm: &[u32]) -> u64 {
+    let mut extra = 0u64;
+    for &c in cuts_pm {
+        extra += (boundary_elems(v, c).ceil() as u64) * 8;
+    }
+    v.mem_bytes() + extra
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

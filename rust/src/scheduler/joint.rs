@@ -264,9 +264,15 @@ impl<'a> JointSearch<'a> {
         }
         let desc = &descs[i];
         for (ci, c) in cands[i].iter().enumerate() {
-            let e = c.design.hw.engine;
-            let threads = if e == EngineKind::Cpu { c.design.hw.threads } else { 0 };
-            if e != EngineKind::Cpu && state.offload_owned.contains(&e) {
+            // A partitioned design occupies *every* engine of its
+            // pipeline for the whole inference: exclusivity, thread and
+            // time budgets are charged on each touched engine.
+            let engines = c.design.engines();
+            let uses_cpu = engines.contains(&EngineKind::Cpu);
+            let threads = if uses_cpu { c.design.hw.threads } else { 0 };
+            if engines.iter().any(|e| {
+                *e != EngineKind::Cpu && state.offload_owned.contains(e)
+            }) {
                 continue; // exclusive GPU/NNAPI ownership
             }
             if state.cpu_threads + threads > self.budget.cpu_threads {
@@ -278,16 +284,23 @@ impl<'a> JointSearch<'a> {
             let util = c.latency_ms
                 * (desc.arrival_fps * c.design.hw.recognition_rate).max(0.0)
                 / 1000.0;
-            let engine_util = state.util.get(&e).copied().unwrap_or(0.0);
-            if engine_util + util > self.budget.util_cap {
+            let prev_util: Vec<f64> = engines
+                .iter()
+                .map(|e| state.util.get(e).copied().unwrap_or(0.0))
+                .collect();
+            if prev_util.iter().any(|u| u + util > self.budget.util_cap) {
                 continue; // per-engine time budget
             }
 
             state.cpu_threads += threads;
             state.mem_bytes += c.mem_bytes;
-            state.util.insert(e, engine_util + util);
-            if e != EngineKind::Cpu {
-                state.offload_owned.push(e);
+            let mut pushed = 0usize;
+            for (e, u) in engines.iter().zip(&prev_util) {
+                state.util.insert(*e, u + util);
+                if *e != EngineKind::Cpu {
+                    state.offload_owned.push(*e);
+                    pushed += 1;
+                }
             }
             state.choice.push(ci);
             let v = violations
@@ -295,10 +308,12 @@ impl<'a> JointSearch<'a> {
             let p = pressure + c.latency_ms / desc.slo_latency_ms.max(1e-9);
             self.assign(descs, cands, i + 1, v, p, state, best);
             state.choice.pop();
-            if e != EngineKind::Cpu {
+            for _ in 0..pushed {
                 state.offload_owned.pop();
             }
-            state.util.insert(e, engine_util);
+            for (e, u) in engines.iter().zip(&prev_util) {
+                state.util.insert(*e, *u);
+            }
             state.mem_bytes -= c.mem_bytes;
             state.cpu_threads -= threads;
         }

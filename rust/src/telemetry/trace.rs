@@ -247,6 +247,22 @@ pub enum TraceEvent {
         /// LUT entries in the freshly measured table.
         entries: u64,
     },
+    /// Co-execution: a partitioned (pipelined multi-engine) design was
+    /// selected for an app, with its predicted edge over the best
+    /// monolithic alternative.
+    Partition {
+        /// App or scenario the selection belongs to.
+        scope: String,
+        /// Chosen design id (plan id in the engine slot).
+        design: String,
+        /// Pipeline stages in the plan.
+        stages: u64,
+        /// Predicted steady-state latency (ms, rounded to 3 decimals).
+        latency_ms: f64,
+        /// Speedup over the best monolithic design (rounded to 3
+        /// decimals).
+        speedup: f64,
+    },
     /// Scheduler: a multi-app admission decision.
     Admission {
         /// App admitted or rejected.
@@ -288,6 +304,7 @@ impl TraceEvent {
             TraceEvent::Rollout { .. } => "rollout",
             TraceEvent::Residual { .. } => "residual",
             TraceEvent::ReAnchor { .. } => "re_anchor",
+            TraceEvent::Partition { .. } => "partition",
             TraceEvent::Admission { .. } => "admission",
             TraceEvent::Arbitration { .. } => "arbitration",
         }
@@ -298,7 +315,8 @@ impl TraceEvent {
         match self {
             TraceEvent::Hold { .. }
             | TraceEvent::Switch { .. }
-            | TraceEvent::Explain { .. } => "adaptation",
+            | TraceEvent::Explain { .. }
+            | TraceEvent::Partition { .. } => "adaptation",
             TraceEvent::FrontierBuild { .. }
             | TraceEvent::FrontierHit { .. }
             | TraceEvent::FrontierEvict { .. }
@@ -451,6 +469,19 @@ impl TraceEvent {
                     ("entries", json::num(*entries as f64)),
                 ]
             }
+            TraceEvent::Partition {
+                scope,
+                design,
+                stages,
+                latency_ms,
+                speedup,
+            } => vec![
+                ("scope", json::s(scope)),
+                ("design", json::s(design)),
+                ("stages", json::num(*stages as f64)),
+                ("latency_ms", json::num(*latency_ms)),
+                ("speedup", json::num(*speedup)),
+            ],
             TraceEvent::Admission { scope, outcome, detail } => vec![
                 ("scope", json::s(scope)),
                 ("outcome", json::s(outcome)),

@@ -14,7 +14,7 @@ use oodin::fleet::population::{archetype_profile, sample_fleet, EngineAxes,
 use oodin::fleet::{Fleet, FleetConfig, TransferConfig, TransferEngine};
 use oodin::fleet::{population, transfer};
 use oodin::manager::Conditions;
-use oodin::measurements::LutKey;
+use oodin::measurements::{ExecPlan, LutKey};
 use oodin::model::test_fixtures::{fake_manifest, fake_registry};
 use oodin::model::Registry;
 use oodin::optimizer::{Objective, SearchSpace};
@@ -85,6 +85,7 @@ fn predicted_latency_monotone_in_flops_axis() {
         engine: EngineKind::Cpu,
         threads: 8,
         governor: Governor::Performance,
+        plan: ExecPlan::Mono,
     };
     let mut prev = f64::INFINITY;
     for f in [-0.3, -0.1, 0.0, 0.1, 0.3] {
@@ -114,6 +115,7 @@ fn predicted_latency_monotone_in_bandwidth_axis() {
         engine: EngineKind::Cpu,
         threads: 8,
         governor: Governor::Performance,
+        plan: ExecPlan::Mono,
     };
     let mut prev = f64::INFINITY;
     for b in [-0.15, -0.05, 0.0, 0.05, 0.15] {

@@ -16,7 +16,7 @@ use oodin::designspace::{rank, ConditionsBucket, DesignSpace, FrontierCache,
 use oodin::device::profiles::samsung_a71;
 use oodin::device::EngineKind;
 use oodin::manager::Conditions;
-use oodin::measurements::{Lut, LutEntry, LutKey};
+use oodin::measurements::{ExecPlan, Lut, LutEntry, LutKey};
 use oodin::model::test_fixtures::fake_registry;
 use oodin::optimizer::{Objective, SearchSpace};
 use oodin::util::rng::Rng;
@@ -44,11 +44,13 @@ fn random_lut(rng: &mut Rng) -> Lut {
                         (0..30).map(|_| base * rng.lognormal(0.05)).collect();
                     entries.insert(
                         LutKey { variant: v.name.clone(), engine: spec.kind,
-                                 threads: t, governor: *g },
+                                 threads: t, governor: *g,
+                                 plan: ExecPlan::Mono },
                         LutEntry {
                             latency: LatencyStats::from_samples(&samples),
                             mem_bytes: v.mem_bytes(),
                             accuracy: v.accuracy,
+                            stages: Vec::new(),
                         },
                     );
                 }

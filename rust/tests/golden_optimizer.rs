@@ -24,7 +24,7 @@ use std::collections::BTreeMap;
 use oodin::device::profiles::samsung_a71;
 use oodin::device::EngineKind;
 use oodin::dvfs::Governor;
-use oodin::measurements::{Lut, LutEntry, LutKey};
+use oodin::measurements::{ExecPlan, Lut, LutEntry, LutKey};
 use oodin::model::test_fixtures::fake_registry;
 use oodin::model::Registry;
 use oodin::optimizer::{Objective, Optimizer, SearchSpace};
@@ -35,11 +35,13 @@ fn fixed_lut(reg: &Registry) -> Lut {
     let mut put = |variant: &str, engine, threads, governor, ms: f64| {
         let v = reg.get(variant).expect(variant);
         entries.insert(
-            LutKey { variant: variant.to_string(), engine, threads, governor },
+            LutKey { variant: variant.to_string(), engine, threads, governor,
+                     plan: ExecPlan::Mono },
             LutEntry {
                 latency: LatencyStats::from_samples(&[ms]),
                 mem_bytes: v.mem_bytes(),
                 accuracy: v.accuracy,
+                stages: Vec::new(),
             },
         );
     };

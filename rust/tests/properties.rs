@@ -8,7 +8,7 @@ use std::collections::BTreeMap;
 use oodin::device::profiles::{profiles, samsung_a71};
 use oodin::device::EngineKind;
 use oodin::dvfs::Governor;
-use oodin::measurements::{Lut, LutEntry, LutKey, Measurer};
+use oodin::measurements::{ExecPlan, Lut, LutEntry, LutKey, Measurer};
 use oodin::model::test_fixtures::fake_registry;
 use oodin::model::Precision;
 use oodin::optimizer::{Design, HwConfig, Objective, Optimizer, SearchSpace};
@@ -39,11 +39,13 @@ fn random_lut(rng: &mut Rng, device: &str) -> (Lut, Vec<String>) {
                         (0..30).map(|_| base * rng.lognormal(0.05)).collect();
                     entries.insert(
                         LutKey { variant: v.name.clone(), engine: spec.kind,
-                                 threads: t, governor: *g },
+                                 threads: t, governor: *g,
+                                 plan: ExecPlan::Mono },
                         LutEntry {
                             latency: LatencyStats::from_samples(&samples),
                             mem_bytes: v.mem_bytes(),
                             accuracy: v.accuracy,
+                            stages: Vec::new(),
                         },
                     );
                 }
@@ -202,6 +204,7 @@ fn prop_measurer_deterministic_across_runs() {
             engine: EngineKind::Cpu,
             threads: *rng.choose(&[1usize, 2, 4, 8]),
             governor: *rng.choose(&Governor::ALL),
+            plan: ExecPlan::Mono,
         };
         assert_eq!(m1.measure_one(&key).unwrap().latency,
                    m2.measure_one(&key).unwrap().latency, "case {case}");
@@ -298,6 +301,7 @@ fn prop_design_lut_key_roundtrip() {
                 threads: 1 + rng.below(8),
                 governor: *rng.choose(&Governor::ALL),
                 recognition_rate: *rng.choose(&[1.0, 0.5, 0.25]),
+                plan: Default::default(),
             },
         };
         let key = d.lut_key();

@@ -355,7 +355,66 @@ fn regret_gate_is_exact_at_the_boundary() {
 }
 
 // ---------------------------------------------------------------------------
-// Property 6: the whole lifecycle is bit-deterministic per fleet seed.
+// Property 6: the opt-in p99 tail gate catches a revision the mean gates
+// miss — treated cohorts keep a healthy mean but grow a heavy tail, and
+// only a rollout configured with max_p99_ratio rolls back.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn p99_gate_catches_tail_regressions_the_mean_gates_miss() {
+    // Post-canary cohort telemetry: 96% of decisions as fast as the
+    // baseline, 4% fifty times slower — the mean barely moves, the p99
+    // lands in the tail.
+    let grow_tail = |fleet: &Fleet, treated: &[usize]| {
+        for &ci in treated {
+            let t = &fleet.cohorts[ci].telemetry;
+            for _ in 0..96 {
+                t.record("decision_ms", 1.0);
+            }
+            for _ in 0..4 {
+                t.record("decision_ms", 50.0);
+            }
+        }
+    };
+    for (tail_gate, expect_rollback) in [(Some(2.0), true), (None, false)] {
+        let mut fleet = build_fleet();
+        let n = fleet.cohorts.len();
+        // Pre-canary baseline: every cohort's histogram is tight at 1 ms.
+        for c in &fleet.cohorts {
+            for _ in 0..100 {
+                c.telemetry.record("decision_ms", 1.0);
+            }
+        }
+        let mut reg = RevisionRegistry::new(n);
+        let rev = reg.register(EngineKind::Cpu, 0.9);
+        let cfg = RolloutConfig {
+            max_p99_ratio: tail_gate,
+            p99_metric: "decision_ms".into(),
+            ..RolloutConfig::default()
+        };
+        let mut ro = Rollout::new(rev, cfg);
+        ro.begin_canary(&mut fleet, &mut reg).unwrap();
+        grow_tail(&fleet, &ro.treated().to_vec());
+        // Scalar reports are identical on both sides: every mean gate
+        // (regret delta, SLO, faults) passes.
+        ingest_round(&mut ro, &reg, n, 0, 1.0, 1.0);
+        match ro.evaluate(&mut fleet, &mut reg) {
+            RolloutOutcome::RolledBack { reason } => {
+                assert!(expect_rollback, "tail gate off yet rolled back: \
+                                          {reason}");
+                assert!(reason.starts_with("p99_ratio:"), "{reason}");
+            }
+            RolloutOutcome::Advanced { .. } => {
+                assert!(!expect_rollback,
+                        "tail regression must trip the p99 gate");
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property 7: the whole lifecycle is bit-deterministic per fleet seed.
 // ---------------------------------------------------------------------------
 
 #[test]

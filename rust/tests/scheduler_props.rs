@@ -18,7 +18,7 @@ use oodin::device::EngineKind;
 use oodin::devicesim::DeviceSim;
 use oodin::dvfs::Governor;
 use oodin::manager::Conditions;
-use oodin::measurements::{Lut, LutEntry, LutKey, Measurer};
+use oodin::measurements::{ExecPlan, Lut, LutEntry, LutKey, Measurer};
 use oodin::model::test_fixtures::fake_registry;
 use oodin::model::Registry;
 use oodin::optimizer::Objective;
@@ -167,11 +167,13 @@ fn fixed_lut(reg: &Registry) -> Lut {
                 engine,
                 threads,
                 governor: Governor::Performance,
+                plan: ExecPlan::Mono,
             },
             LutEntry {
                 latency: LatencyStats::from_samples(&[ms]),
                 mem_bytes: v.mem_bytes(),
                 accuracy: v.accuracy,
+                stages: Vec::new(),
             },
         );
     };

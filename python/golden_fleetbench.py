@@ -52,6 +52,7 @@ Usage:  python3 python/golden_fleetbench.py [--check]
   --check: compares against the existing files, exit 1 on drift
 """
 
+import json
 import math
 import os
 import sys
@@ -326,6 +327,27 @@ MAX_SLO_MISS_DELTA = 0.1
 MAX_FAULT_DELTA = 0.0
 FB_MIN_SAMPLES = 2
 RE_ANCHOR_THRESHOLD = 0.15
+# experiments::fleetbench storm burn-rate monitor constants
+# (telemetry::SloBurnMonitor over the per-cohort `regret_pct` rollups).
+BURN_SLO_REGRET_PCT = 5.0
+BURN_BUDGET = 0.25
+BURN_MIN_SAMPLES = 4
+# telemetry::histogram::LogHistogram bucket grid (count_above's unit).
+HIST_MIN_EXP = -20
+HIST_MAX_EXP = 30
+HIST_SUB = 16
+HIST_BUCKETS = (HIST_MAX_EXP - HIST_MIN_EXP) * HIST_SUB + 2
+
+
+def bucket_index(v):
+    """telemetry::histogram::bucket_index — the log2 sub-bucket grid."""
+    if not (v >= 2.0 ** HIST_MIN_EXP):
+        return 0
+    l2 = math.log2(v)
+    if l2 >= HIST_MAX_EXP:
+        return HIST_BUCKETS - 1
+    grid = int((l2 - HIST_MIN_EXP) * HIST_SUB)
+    return 1 + min(grid, HIST_BUCKETS - 3)
 
 
 def scaled_device(archetype, axes, thermal_ln, mem_ln, latent):
@@ -792,6 +814,342 @@ class Trace:
         return "".join(line + "\n" for line in self.lines)
 
 
+# --------------------------------------------------------------------------
+# telemetry::spans + telemetry::sampling mirror — the `oodin trace
+# --summary` payload (rust/tests/golden/trace_summary.json) regenerated
+# independently from the golden trace JSONL.
+# --------------------------------------------------------------------------
+
+SUMMARY_SAMPLE_RATE = 16
+SUMMARY_SAMPLE_SEED = 7
+PENDING_PER_KEY = 64
+PENDING_KEYS = 512
+
+
+def key_hash(seed, key):
+    """telemetry::sampling::key_hash — seeded FNV-1a over seed LE bytes
+    then the key bytes."""
+    h = 0xCBF29CE484222325
+    for b in seed.to_bytes(8, "little") + key.encode():
+        h ^= b
+        h = (h * 0x100000001B3) & M64
+    return h
+
+
+def head_keeps(rate, seed, key):
+    return rate <= 1 or key_hash(seed, key) % rate == 0
+
+
+def sample_key(e):
+    """TraceEvent::sample_key on the parsed JSONL form."""
+    ev = e["ev"]
+    if ev in ("cohort_transfer", "probe_fallback", "residual", "re_anchor"):
+        return e.get("cohort", "")
+    if ev == "rollout":
+        rev = float(e.get("revision", 0))
+        return f"rev:{int(rev) if rev > 0.0 else 0}"
+    if ev == "correction":
+        return "fleet"
+    return e.get("scope", "")
+
+
+def is_anomalous(e):
+    """TraceEvent::is_anomalous on the parsed JSONL form."""
+    ev = e["ev"]
+    if ev in ("shed", "slo_burn"):
+        return True
+    if ev == "rollout":
+        return e.get("stage", "") == "rolled_back"
+    if ev == "batch_complete":
+        return int(e.get("slack_us", 0)) < 0
+    return False
+
+
+def analyze_trace(text):
+    """telemetry::spans::Analysis::build over a pinned-schema JSONL
+    trace: one deterministic pass reconstructing all four span families
+    plus the cross-device causality chains."""
+    events = [json.loads(ln) for ln in text.splitlines() if ln.strip()]
+    a = dict(events=events, adaptation=[], abandoned=0, open_episodes=0,
+             requests=[], batches=[], sheds=0, unclosed_requests=0,
+             unclosed_batches=0, stray_completes=0, rollouts=[],
+             rollout_holds=0, burn=[], chains=[], orphan_deltas=0,
+             downstream=0, seq_gaps=0)
+    episodes = {}       # scope -> [first_t_us, blocked_holds]
+    queues = {}         # scope -> [enqueue_us, ...] FIFO
+    open_batches = {}   # scope -> [(launch_us, [members]), ...] FIFO
+    rollout_order = []
+    rollouts = {}
+    burn_order = []
+    burns = {}
+    pending = []        # (seq, t_us, scope) frontier_delta awaiting cause
+    touch = set()       # (t_us, scope) instants touched by a chain
+
+    def claim(cause, e):
+        nonlocal pending
+        cohorts = [p[2] for p in pending if p[1] == e["t_us"]]
+        pending = [p for p in pending if p[1] != e["t_us"]]
+        if cohorts:
+            for c in cohorts:
+                touch.add((e["t_us"], c))
+            a["chains"].append(dict(cause=cause, cause_seq=e["seq"],
+                                    t_us=e["t_us"], cohorts=cohorts))
+
+    for idx, e in enumerate(events):
+        if idx > 0 and e["seq"] != events[idx - 1]["seq"] + 1:
+            a["seq_gaps"] += 1
+        # Deltas from an earlier instant can no longer be claimed.
+        keep = [p for p in pending if p[1] >= e["t_us"]]
+        a["orphan_deltas"] += len(pending) - len(keep)
+        pending = keep
+        ev = e["ev"]
+        if ev == "hold":
+            scope = e.get("scope", "")
+            if e.get("trigger", "") != "none":
+                ep = episodes.setdefault(scope, [e["t_us"], 0])
+                ep[1] += 1
+            elif e.get("reason", "") == "no_trigger" and scope in episodes:
+                del episodes[scope]
+                a["abandoned"] += 1
+        elif ev == "switch":
+            scope = e.get("scope", "")
+            det_us = int(math.floor(
+                float(e.get("detection_ms", 0.0)) * 1000.0 + 0.5))
+            onset = max(e["t_us"] - det_us, 0)
+            if scope in episodes:
+                first, blocked = episodes.pop(scope)
+                start = min(first, onset)
+            else:
+                start, blocked = onset, 0
+            prev_e = events[idx - 1] if idx > 0 else None
+            if (prev_e is not None
+                    and prev_e["ev"] in ("frontier_hit", "frontier_build")
+                    and prev_e["t_us"] == e["t_us"]
+                    and (e["t_us"], prev_e.get("scope", "")) in touch):
+                a["downstream"] += 1
+            a["adaptation"].append(dict(
+                scope=scope, start_us=start, end_us=e["t_us"],
+                detection_us=det_us, blocked_holds=blocked))
+        elif ev == "enqueue":
+            queues.setdefault(e.get("scope", ""), []).append(e["t_us"])
+        elif ev == "shed":
+            a["sheds"] += 1
+        elif ev == "batch_launch":
+            scope = e.get("scope", "")
+            q = queues.setdefault(scope, [])
+            n = min(int(e.get("size", 0)), len(q))
+            members, queues[scope] = q[:n], q[n:]
+            open_batches.setdefault(scope, []).append((e["t_us"], members))
+        elif ev == "batch_complete":
+            scope = e.get("scope", "")
+            ob = open_batches.setdefault(scope, [])
+            if ob:
+                launch_us, members = ob.pop(0)
+                for m in members:
+                    a["requests"].append(dict(
+                        scope=scope, enqueue_us=m, launch_us=launch_us,
+                        complete_us=e["t_us"]))
+                a["batches"].append(dict(
+                    scope=scope, launch_us=launch_us,
+                    complete_us=e["t_us"]))
+            else:
+                a["stray_completes"] += 1
+        elif ev == "rollout":
+            rev = int(float(e.get("revision", 0)))
+            stage = e.get("stage", "")
+            if stage == "held":
+                a["rollout_holds"] += 1
+            if rev not in rollouts:
+                rollout_order.append(rev)
+                rollouts[rev] = dict(revision=rev, start_us=e["t_us"],
+                                     end_us=e["t_us"], stages=[],
+                                     terminal="", has_canary=False)
+            span = rollouts[rev]
+            span["end_us"] = e["t_us"]
+            if stage == "canary":
+                span["has_canary"] = True
+            if stage in ("promoted", "rolled_back"):
+                span["terminal"] = stage
+            span["stages"].append(stage)
+            if stage != "held":
+                claim("rollout", e)
+        elif ev == "slo_burn":
+            scope = e.get("scope", "")
+            if scope not in burns:
+                burn_order.append(scope)
+                burns[scope] = dict(scope=scope, start_us=e["t_us"],
+                                    end_us=e["t_us"], events=0,
+                                    max_fast_burn=0.0)
+            b = burns[scope]
+            b["end_us"] = e["t_us"]
+            b["events"] += 1
+            fast = float(e.get("fast_burn", 0.0))
+            if fast > b["max_fast_burn"]:
+                b["max_fast_burn"] = fast
+        elif ev == "frontier_delta":
+            pending.append((e["seq"], e["t_us"], e.get("scope", "")))
+        elif ev in ("correction", "residual", "re_anchor"):
+            claim(ev, e)
+
+    a["open_episodes"] = len(episodes)
+    a["unclosed_requests"] = (sum(len(q) for q in queues.values())
+                              + sum(len(m) for b in open_batches.values()
+                                    for _, m in b))
+    a["unclosed_batches"] = sum(len(b) for b in open_batches.values())
+    a["orphan_deltas"] += len(pending)
+    a["rollouts"] = [rollouts[r] for r in rollout_order]
+    a["burn"] = [burns[s] for s in burn_order]
+    return a
+
+
+def simulate_sampling(events, policy, rate, seed):
+    """telemetry::sampling::Sampler replay (payload: the anomaly flag);
+    returns (retained, retained_anomalous) after the end-of-stream
+    drain (drained events are rejected, not retained)."""
+    pending = {}     # key -> [anom flags] bounded FIFO
+    key_order = []
+    retained = 0
+    retained_anom = 0
+    for e in events:
+        key = sample_key(e)
+        anom = is_anomalous(e)
+        if policy == "head":
+            if head_keeps(rate, seed, key):
+                retained += 1
+                if anom:
+                    retained_anom += 1
+            continue
+        # tail
+        if anom:
+            flushed = pending.pop(key, [])
+            if flushed or key in key_order:
+                key_order.remove(key)
+            retained += len(flushed) + 1
+            retained_anom += sum(flushed) + 1
+        elif head_keeps(rate, seed, key):
+            retained += 1
+        else:
+            if key not in pending:
+                if len(key_order) == PENDING_KEYS:
+                    victim = key_order.pop(0)
+                    del pending[victim]
+                key_order.append(key)
+                pending[key] = []
+            q = pending[key]
+            if len(q) == PENDING_PER_KEY:
+                q.pop(0)
+            q.append(1 if anom else 0)
+    return retained, retained_anom
+
+
+def trace_summary(text):
+    """telemetry::spans::Analysis::summary_json + "\\n" — the byte form
+    `oodin trace --summary` prints over the trace."""
+    a = analyze_trace(text)
+    events = a["events"]
+    n = len(events)
+    first_seq = events[0]["seq"] if events else 0
+    last_seq = events[-1]["seq"] if events else 0
+    t_first = events[0]["t_us"] if events else 0
+    t_last = max((e["t_us"] for e in events), default=0)
+
+    spans = len(a["adaptation"])
+    blocked = sum(s["blocked_holds"] for s in a["adaptation"])
+    det_sum = sum(s["detection_us"] for s in a["adaptation"])
+    det_max = max((s["detection_us"] for s in a["adaptation"]), default=0)
+    dur_sum = sum(s["end_us"] - s["start_us"] for s in a["adaptation"])
+    mean_det_ms = r3(det_sum / spans / 1000.0) if spans else 0.0
+    mean_dur_ms = r3(dur_sum / spans / 1000.0) if spans else 0.0
+
+    reqs = len(a["requests"])
+    wait_sum = sum(q["launch_us"] - q["enqueue_us"] for q in a["requests"])
+    service_sum = sum(q["complete_us"] - q["launch_us"]
+                      for q in a["requests"])
+    mean_wait = r3(wait_sum / reqs) if reqs else 0.0
+    mean_service = r3(service_sum / reqs) if reqs else 0.0
+
+    promoted = sum(1 for r in a["rollouts"] if r["terminal"] == "promoted")
+    rolled_back = sum(1 for r in a["rollouts"]
+                      if r["terminal"] == "rolled_back")
+    rollbacks_linked = all(r["has_canary"] for r in a["rollouts"]
+                           if r["terminal"] == "rolled_back")
+
+    burn_events = sum(b["events"] for b in a["burn"])
+    burn_max = r3(max((b["max_fast_burn"] for b in a["burn"]), default=0.0))
+    linked_deltas = sum(len(c["cohorts"]) for c in a["chains"])
+
+    anomalous = sum(1 for e in events if is_anomalous(e))
+    head_retained, _ = simulate_sampling(
+        events, "head", SUMMARY_SAMPLE_RATE, SUMMARY_SAMPLE_SEED)
+    tail_retained, tail_anom = simulate_sampling(
+        events, "tail", SUMMARY_SAMPLE_RATE, SUMMARY_SAMPLE_SEED)
+    reduction = n / tail_retained if tail_retained else 0.0
+    anom_pct = (r3(100.0 * tail_anom / anomalous) if anomalous else 100.0)
+
+    return jobj([
+        ("events", jobj([
+            ("count", jnum(n)),
+            ("first_seq", jnum(first_seq)),
+            ("last_seq", jnum(last_seq)),
+            ("seq_gaps", jnum(a["seq_gaps"])),
+            ("t_first_us", jnum(t_first)),
+            ("t_last_us", jnum(t_last)),
+        ])),
+        ("adaptation", jobj([
+            ("spans", jnum(spans)),
+            ("switches", jnum(spans)),
+            ("one_span_per_switch", jbool(True)),
+            ("blocked_holds", jnum(blocked)),
+            ("abandoned_episodes", jnum(a["abandoned"])),
+            ("open_episodes", jnum(a["open_episodes"])),
+            ("mean_detection_ms", jnum(mean_det_ms)),
+            ("max_detection_ms", jnum(r3(det_max / 1000.0))),
+            ("mean_duration_ms", jnum(mean_dur_ms)),
+        ])),
+        ("serving", jobj([
+            ("requests", jnum(reqs)),
+            ("batches", jnum(len(a["batches"]))),
+            ("sheds", jnum(a["sheds"])),
+            ("unclosed_requests", jnum(a["unclosed_requests"])),
+            ("unclosed_batches", jnum(a["unclosed_batches"])),
+            ("stray_completes", jnum(a["stray_completes"])),
+            ("mean_queue_wait_us", jnum(mean_wait)),
+            ("mean_service_us", jnum(mean_service)),
+        ])),
+        ("rollouts", jobj([
+            ("spans", jnum(len(a["rollouts"]))),
+            ("promoted", jnum(promoted)),
+            ("rolled_back", jnum(rolled_back)),
+            ("holds", jnum(a["rollout_holds"])),
+            ("all_rollbacks_linked", jbool(rollbacks_linked)),
+        ])),
+        ("slo_burn", jobj([
+            ("events", jnum(burn_events)),
+            ("episodes", jnum(len(a["burn"]))),
+            ("max_fast_burn", jnum(burn_max)),
+        ])),
+        ("causality", jobj([
+            ("chains", jnum(len(a["chains"]))),
+            ("linked_deltas", jnum(linked_deltas)),
+            ("orphan_deltas", jnum(a["orphan_deltas"])),
+            ("downstream_switches", jnum(a["downstream"])),
+        ])),
+        ("sampling", jobj([
+            ("rate", jnum(SUMMARY_SAMPLE_RATE)),
+            ("seed", jnum(SUMMARY_SAMPLE_SEED)),
+            ("events", jnum(n)),
+            ("head_retained", jnum(head_retained)),
+            ("tail_retained", jnum(tail_retained)),
+            ("tail_reduction_x", jnum(r3(reduction))),
+            ("anomalous_events", jnum(anomalous)),
+            ("anomalous_retained", jnum(tail_anom)),
+            ("anomalous_retained_pct", jnum(anom_pct)),
+            ("tail_reduction_ge_4x",
+             jbool(tail_retained > 0 and reduction >= 4.0)),
+        ])),
+    ]) + "\n"
+
+
 def run_fleetbench_smoke():
     # Anchors: every archetype, full zero-noise sweep.
     anchors = []
@@ -922,7 +1280,15 @@ def run_fleetbench_smoke():
         m.ci = ci
         managers.append(m)
 
-    # The storm.
+    # The storm.  The burn-rate monitor watches every cohort's
+    # `regret_pct` rollup at each regret tick (fast window = one regret
+    # round, slow window = the storm so far); alerts land in the trace
+    # as `slo_burn` events and never touch the report.
+    thr_bucket = bucket_index(BURN_SLO_REGRET_PCT)
+    burn_prev = {}  # cohort index -> (count, above, t_us)
+    for c in cohorts:
+        c["burn_count"] = 0
+        c["burn_above"] = 0
     holds = dict(not_due=0, cooldown=0, no_trigger=0, no_alternative=0,
                  current_still_best=0, below_hysteresis=0)
     switches = switch_load = switch_degradation = 0
@@ -965,9 +1331,38 @@ def run_fleetbench_smoke():
                 # signal) so the enforced mean is never flattered.
                 if not admissible:
                     deploy_faults += 1
-                    regrets.append(max(r, 0.0))
+                    rv = max(r, 0.0)
                 else:
-                    regrets.append(r)
+                    rv = r
+                regrets.append(rv)
+                # Telemetry::record("regret_pct") into the cohort rollup:
+                # only the bucketed above-threshold count matters here.
+                cb = cohorts[ci]
+                cb["burn_count"] += 1
+                if bucket_index(100.0 * rv) > thr_bucket:
+                    cb["burn_above"] += 1
+        if regret_tick:
+            # Fleet::check_burn after the device loop: cohorts in
+            # canonical order, SloBurnMonitor::check_counts each.
+            for ci2, c in enumerate(cohorts):
+                count, above = c["burn_count"], c["burn_above"]
+                pc, pa, pt = burn_prev.get(ci2, (0, 0, tr.t_us))
+                burn_prev[ci2] = (count, above, tr.t_us)
+                dc, da = count - pc, above - pa
+                if count == 0 or dc < max(BURN_MIN_SAMPLES, 1):
+                    continue
+                fast = (da / dc) / BURN_BUDGET
+                slow = (above / count) / BURN_BUDGET
+                if fast > 1.0 and slow > 1.0:
+                    tr.emit("slo_burn", [
+                        ("scope", f'"{c["id"]}"'),
+                        ("metric", '"regret_pct"'),
+                        ("window_us", jnum(tr.t_us - pt)),
+                        ("fast_burn", jnum(r3(fast))),
+                        ("slow_burn", jnum(r3(slow))),
+                        ("misses", jnum(da)),
+                        ("samples", jnum(dc)),
+                    ])
 
     regret_sum = 0.0
     for r in regrets:
@@ -1757,10 +2152,24 @@ def main():
         os.path.dirname(__file__), "..", "rust", "tests", "golden"))
     golden = os.path.join(gdir, "fleetbench_smoke.json")
     golden_trace = os.path.join(gdir, "fleetbench_smoke_trace.jsonl")
+    golden_summary = os.path.join(gdir, "trace_summary.json")
     content, trace = run_fleetbench_smoke()
+    summary = trace_summary(trace)
+    # Span-layer acceptance invariants, asserted on the oracle's own
+    # reconstruction (the Rust property suite re-asserts them).
+    s = json.loads(summary)
+    n_switch = sum(1 for ln in trace.splitlines() if '"ev":"switch"' in ln)
+    assert s["adaptation"]["spans"] == n_switch, (
+        s["adaptation"]["spans"], n_switch)
+    assert s["serving"]["unclosed_requests"] == 0
+    assert s["serving"]["unclosed_batches"] == 0
+    assert s["rollouts"]["all_rollbacks_linked"] is True
+    assert s["sampling"]["tail_reduction_ge_4x"] is True, s["sampling"]
+    assert s["sampling"]["anomalous_retained_pct"] == 100.0, s["sampling"]
     if "--check" in sys.argv:
         ok = True
-        for path, want_content in [(golden, content), (golden_trace, trace)]:
+        for path, want_content in [(golden, content), (golden_trace, trace),
+                                   (golden_summary, summary)]:
             have = open(path).read()
             if have != want_content:
                 print(f"DRIFT: {path} does not match oracle",
@@ -1775,6 +2184,9 @@ def main():
     with open(golden_trace, "w") as f:
         f.write(trace)
     print(f"wrote {golden_trace} ({len(trace)} bytes)", file=sys.stderr)
+    with open(golden_summary, "w") as f:
+        f.write(summary)
+    print(f"wrote {golden_summary} ({len(summary)} bytes)", file=sys.stderr)
     return 0
 
 

@@ -291,6 +291,10 @@ def run_events(pending, spawner, cfg):
             done = now + svc
             rep.makespan_us = max(rep.makespan_us, done)
             for cls, arr, dl in chunk:
+                # Serving-span invariant (telemetry::spans): enqueue ≤
+                # launch < complete, so queue-wait and service time are
+                # both well-defined and non-negative.
+                assert arr <= now < done, (arr, now, done)
                 rep.completions.append((cls, arr, done, dl, bsz, use_deg))
                 if spawner is not None and done < spawner[0]:
                     heapq.heappush(pending,
@@ -312,6 +316,12 @@ def run_events(pending, spawner, cfg):
         now = nxt
     rep.max_depth = queue.max_depth
     rep.shed = queue.sheds
+    # Span accounting closes: no request is left enqueued or in flight
+    # (zero unclosed spans) and every offered request either completed
+    # or was shed at admission.
+    assert not queue.entries, "unclosed requests at end of run"
+    assert rep.offered == len(rep.completions) + rep.shed, (
+        rep.offered, len(rep.completions), rep.shed)
     return rep
 
 

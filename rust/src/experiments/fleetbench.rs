@@ -54,6 +54,7 @@ use crate::model::Registry;
 use crate::optimizer::{Objective, SearchSpace};
 use crate::perf;
 use crate::telemetry::trace::FlightRecorder;
+use crate::telemetry::{BurnConfig, SloBurnMonitor};
 use crate::util::json::{self, Value};
 use crate::util::stats::{LatencyStats, Percentile};
 
@@ -83,6 +84,16 @@ pub const ROLLOUT_GOOD_FACTOR: f64 = 0.8;
 pub const ROLLOUT_SLO_MS: f64 = 1000.0 / 30.0;
 /// Residual-feedback rounds the control plane drives after promotion.
 pub const FEEDBACK_ROUNDS: usize = 3;
+
+/// Per-decision regret (%) SLO the storm's burn-rate monitor watches on
+/// the per-cohort `regret_pct` rollups — the storm's acceptance bound.
+pub const BURN_SLO_REGRET_PCT: f64 = 5.0;
+/// Error budget of that SLO: a quarter of a cohort's decisions may
+/// exceed the regret bound before the budget burns at 1×.
+pub const BURN_BUDGET: f64 = 0.25;
+/// Minimum new samples per cohort per check before the monitor issues a
+/// verdict (small cohorts abstain rather than alert on noise).
+pub const BURN_MIN_SAMPLES: u64 = 4;
 
 /// Experiment dimensions and depth.
 #[derive(Debug, Clone)]
@@ -817,7 +828,15 @@ pub fn run_traced(registry: &Registry, cfg: &FleetBenchConfig,
         managers.push(m);
     }
 
-    // The storm.
+    // The storm.  The burn-rate monitor watches every cohort's
+    // `regret_pct` rollup at each regret tick: its fast window is one
+    // regret round, its slow window the storm so far.  Alerts land in
+    // the trace as `slo_burn` events; they never touch the report.
+    let mut burn_monitor = SloBurnMonitor::new(BurnConfig {
+        threshold: BURN_SLO_REGRET_PCT,
+        budget: BURN_BUDGET,
+        min_samples: BURN_MIN_SAMPLES,
+    });
     let mut holds = HoldCounts::default();
     let mut switches = 0u64;
     let mut switch_load = 0u64;
@@ -910,6 +929,10 @@ pub fn run_traced(registry: &Registry, cfg: &FleetBenchConfig,
                 regrets.push(rv);
                 sink.record("regret_pct", 100.0 * rv);
             }
+        }
+        if regret_tick {
+            fleet.check_burn(&mut burn_monitor, "regret_pct",
+                             (now_ms * 1000.0) as u64);
         }
     }
 

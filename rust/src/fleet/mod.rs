@@ -293,6 +293,41 @@ impl Fleet {
         total
     }
 
+    /// Run one SLO burn-rate check of `metric` over every cohort's
+    /// telemetry rollup, in canonical cohort order.  Burning cohorts
+    /// emit an [`TraceEvent::SloBurn`] through the attached recorder
+    /// (burn rates rounded to the trace's 3-decimal precision) and are
+    /// returned so callers can feed rollout gates
+    /// ([`rollout::Rollout::observe_burn`]).  Abstentions and healthy
+    /// cohorts stay silent — alerts, not heartbeats.
+    pub fn check_burn(&self, monitor: &mut crate::telemetry::SloBurnMonitor,
+                      metric: &str, now_us: u64)
+                      -> Vec<(String, crate::telemetry::BurnSample)> {
+        let mut burning = Vec::new();
+        for c in &self.cohorts {
+            let Some(s) = monitor.check(&c.id, &c.telemetry, metric, now_us)
+            else {
+                continue;
+            };
+            if !s.burning {
+                continue;
+            }
+            if let Some(rec) = &self.recorder {
+                rec.emit_at(now_us, TraceEvent::SloBurn {
+                    scope: c.id.clone(),
+                    metric: metric.to_string(),
+                    window_us: s.window_us,
+                    fast_burn: round3(s.fast_burn),
+                    slow_burn: round3(s.slow_burn),
+                    misses: s.misses,
+                    samples: s.samples,
+                });
+            }
+            burning.push((c.id.clone(), s));
+        }
+        burning
+    }
+
     /// Number of devices.
     pub fn len(&self) -> usize {
         self.devices.len()

@@ -179,6 +179,15 @@ pub struct RolloutConfig {
     pub max_p99_ratio: Option<f64>,
     /// Telemetry metric the p99 gate reads.
     pub p99_metric: String,
+    /// Optional burn-rate gate: max tolerated fast-window SLO burn rate
+    /// ([`crate::telemetry::SloBurnMonitor`]) observed on a treated
+    /// cohort since the last stage transition, fed via
+    /// [`Rollout::observe_burn`] from the fleet's `slo_burn` alerts.
+    /// The scalar gates compare means per evaluation round; this gate
+    /// reacts to the alerting pipeline itself, so a cohort burning its
+    /// error budget rolls the revision back even when round means stay
+    /// inside the deltas.  `None` (the default) disables the gate.
+    pub max_fast_burn: Option<f64>,
 }
 
 impl Default for RolloutConfig {
@@ -192,6 +201,7 @@ impl Default for RolloutConfig {
             min_samples: 2,
             max_p99_ratio: None,
             p99_metric: "regret_pct".to_string(),
+            max_fast_burn: None,
         }
     }
 }
@@ -307,6 +317,9 @@ pub struct Rollout {
     p99_baseline: BTreeMap<usize, f64>,
     treated_stats: BTreeMap<usize, GateStats>,
     control_stats: GateStats,
+    /// Worst observed fast-window burn per cohort id since the last
+    /// stage transition ([`Rollout::observe_burn`]).
+    burn: BTreeMap<String, f64>,
     seen: BTreeSet<(usize, u64)>,
     duplicates: u64,
     stale: u64,
@@ -325,6 +338,7 @@ impl Rollout {
             p99_baseline: BTreeMap::new(),
             treated_stats: BTreeMap::new(),
             control_stats: GateStats::default(),
+            burn: BTreeMap::new(),
             seen: BTreeSet::new(),
             duplicates: 0,
             stale: 0,
@@ -490,6 +504,8 @@ impl Rollout {
                          treated.fault_rate() - base.fault_rate()))
         } else if let Some(reason) = self.p99_breach(fleet) {
             Some(reason)
+        } else if let Some(reason) = self.burn_breach(fleet) {
+            Some(reason)
         } else {
             None
         };
@@ -532,6 +548,7 @@ impl Rollout {
         // Each stage requires fresh evidence at the new exposure.
         self.treated_stats.clear();
         self.control_stats = GateStats::default();
+        self.burn.clear();
         self.emit_stage(fleet, self.treated.len() as u64, "");
         RolloutOutcome::Advanced {
             stage: self.stage,
@@ -564,6 +581,34 @@ impl Rollout {
         }
         let w = worst?;
         (w > limit).then(|| format!("p99_ratio:{w:.3}"))
+    }
+
+    /// Record one fast-window burn observation for a cohort (from the
+    /// fleet's [`crate::fleet::Fleet::check_burn`] alerts); the gate
+    /// keeps the worst value per cohort per stage.
+    pub fn observe_burn(&mut self, cohort_id: &str, fast_burn: f64) {
+        let e = self.burn.entry(cohort_id.to_string()).or_insert(0.0);
+        if fast_burn > *e {
+            *e = fast_burn;
+        }
+    }
+
+    /// The burn gate: the worst fast-window burn observed on a treated
+    /// cohort this stage.  `None` when disabled or when no treated
+    /// cohort reported a burn alert.
+    fn burn_breach(&self, fleet: &Fleet) -> Option<String> {
+        let limit = self.cfg.max_fast_burn?;
+        let mut worst: Option<f64> = None;
+        for &ci in &self.treated {
+            let Some(&b) = self.burn.get(&fleet.cohorts[ci].id) else {
+                continue;
+            };
+            if worst.map_or(true, |w| b > w) {
+                worst = Some(b);
+            }
+        }
+        let w = worst?;
+        (w > limit).then(|| format!("burn_rate:{w:.3}"))
     }
 
     fn extend_to(&mut self, fleet: &mut Fleet, reg: &mut RevisionRegistry,

@@ -13,6 +13,7 @@
 //! oodin multi   [--smoke] [--device d] [--apps n] [--windows w] [--json f]
 //! oodin opt-bench [--smoke|--coexec] [--device d] [--apps n] [--json f] [--trace f]
 //! oodin fleet-bench [--smoke] [--devices n] [--seed s] [--family f] [--json f] [--trace f]
+//! oodin trace   <file.jsonl> [--summary] [--chrome <out>]   Span analytics over a trace
 //! ```
 //!
 //! `--trace <path>` (the three benches above) writes the decision flight
@@ -32,6 +33,8 @@ use oodin::model::Precision;
 use oodin::optimizer::Optimizer;
 use oodin::runtime::{default_backend, Backend};
 use oodin::serving::{Server, ServerConfig};
+use oodin::telemetry::spans::Analysis;
+use oodin::util::json;
 use oodin::{load_registry_or_synthetic, mdcl};
 
 fn main() {
@@ -98,6 +101,7 @@ fn run() -> Result<()> {
         "multi" => cmd_multi(&args),
         "opt-bench" => cmd_opt_bench(&args),
         "fleet-bench" => cmd_fleet_bench(&args),
+        "trace" => cmd_trace(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -124,6 +128,7 @@ fn print_usage() {
          \x20 opt-bench [--smoke] [--device d] [--apps n] [--json f] [--trace f]  full-search vs frontier-walk adaptation cost\n\
          \x20 opt-bench --coexec [--json f] [--trace f]  pipelined multi-engine partitioning vs best monolithic\n\
          \x20 fleet-bench [--smoke] [--devices n] [--seed s] [--family f] [--json f] [--trace f]  population-scale LUT transfer + cohort caches + staged-rollout control plane\n\
+         \x20 trace    <file.jsonl> [--summary] [--chrome f]  span/causality analytics over a recorded trace\n\
          \n\
          --trace <path> (benches) writes a decision flight-recorder trace as\n\
          JSON-lines plus a Perfetto-loadable <path>.chrome.json\n\
@@ -273,6 +278,68 @@ fn cmd_fleet_bench(args: &Args) -> Result<()> {
         cfg.enforce_regret_pct = None;
     }
     fleetbench::print(&registry, &cfg, args.flag("json"), args.flag("trace"))
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .context("usage: oodin trace <file.jsonl> [--summary] [--chrome <out>]")?;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {path}"))?;
+    let analysis = Analysis::from_jsonl(&text)
+        .with_context(|| format!("parsing trace {path}"))?;
+    if let Some(out) = args.flag("chrome") {
+        let chrome = json::to_string(&json::obj(vec![(
+            "traceEvents",
+            json::Value::Arr(analysis.chrome_spans()),
+        )]));
+        std::fs::write(out, chrome)
+            .with_context(|| format!("writing chrome trace {out}"))?;
+        // Stderr so `--summary --chrome f` keeps stdout byte-pinnable.
+        eprintln!("wrote reconstructed-span chrome trace to {out}");
+    }
+    if args.has("summary") {
+        // One machine-readable line; CI diffs this against the golden.
+        println!("{}", analysis.summary_json());
+        return Ok(());
+    }
+    let (t0, t1) = analysis
+        .events
+        .iter()
+        .fold((u64::MAX, 0u64), |(a, b), e| (a.min(e.t_us), b.max(e.t_us)));
+    println!("trace: {} events, {} seq gaps, span {}..{} us",
+             analysis.events.len(),
+             analysis.seq_gaps,
+             if t0 == u64::MAX { 0 } else { t0 },
+             t1);
+    println!("adaptation: {} spans / {} switches ({} abandoned, {} open)",
+             analysis.adaptation.len(),
+             analysis.switches(),
+             analysis.abandoned_episodes,
+             analysis.open_episodes);
+    println!("serving: {} requests in {} batches, {} sheds, {} unclosed requests, {} unclosed batches",
+             analysis.requests.len(),
+             analysis.batches.len(),
+             analysis.sheds,
+             analysis.unclosed_requests,
+             analysis.unclosed_batches);
+    let promoted = analysis.rollouts.iter()
+        .filter(|r| r.terminal == "promoted").count();
+    let rolled_back = analysis.rollouts.iter()
+        .filter(|r| r.terminal == "rolled_back").count();
+    println!("rollouts: {} spans ({promoted} promoted, {rolled_back} rolled back, {} holds)",
+             analysis.rollouts.len(),
+             analysis.rollout_holds);
+    let burn_events: u64 = analysis.burn.iter().map(|b| b.events).sum();
+    println!("slo_burn: {} events in {} episodes",
+             burn_events,
+             analysis.burn.len());
+    println!("causality: {} chains ({} orphan deltas, {} downstream switches)",
+             analysis.chains.len(),
+             analysis.orphan_deltas,
+             analysis.downstream_switches);
+    Ok(())
 }
 
 fn cmd_serve_bench(args: &Args) -> Result<()> {

@@ -160,6 +160,19 @@ impl LogHistogram {
         Some(self.max)
     }
 
+    /// Samples recorded in buckets strictly above the bucket holding
+    /// `threshold` — the deterministic SLO-miss counter behind
+    /// [`super::SloBurnMonitor`].  Resolution is the bucket grid:
+    /// samples sharing `threshold`'s sub-bucket (within the documented
+    /// ≤ 4.5 % grid width) are *not* counted, so the count depends only
+    /// on bucket contents and survives [`LogHistogram::merge`]
+    /// bucket-wise — the N-version oracles mirror it from the same grid
+    /// arithmetic.
+    pub fn count_above(&self, threshold: f64) -> u64 {
+        let b = bucket_index(threshold);
+        self.counts[b + 1..].iter().sum()
+    }
+
     /// Summarise as [`LatencyStats`]: `min`/`max`/`avg`/`n` exact,
     /// `median`/`p90`/`p99` within the documented bucket error.  `None`
     /// when empty.
@@ -256,6 +269,25 @@ mod tests {
         assert_eq!(h.count(), 3);
         // The underflow bucket reports `min` for every quantile.
         assert_eq!(h.quantile(0.5).unwrap(), h.stats().unwrap().min);
+    }
+
+    #[test]
+    fn count_above_is_bucket_exact_and_merges() {
+        let mut h = LogHistogram::new();
+        for v in [1.0, 2.0, 4.0, 20.0, 40.0] {
+            h.record(v);
+        }
+        // Well-separated values: everything above 5.0's bucket is the
+        // {20, 40} pair; the threshold's own bucket never counts.
+        assert_eq!(h.count_above(5.0), 2);
+        assert_eq!(h.count_above(0.5), 5);
+        assert_eq!(h.count_above(100.0), 0);
+        let mut other = LogHistogram::new();
+        other.record(30.0);
+        h.merge(&other);
+        assert_eq!(h.count_above(5.0), 3);
+        // Overflow threshold: nothing can sit strictly above it.
+        assert_eq!(h.count_above(f64::exp2(MAX_EXP as f64 + 1.0)), 0);
     }
 
     #[test]

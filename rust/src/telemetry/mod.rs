@@ -10,8 +10,16 @@
 //!   timestamped [`trace::TraceEvent`]s explaining every adaptation
 //!   decision, frontier-cache transition, serving action and fleet
 //!   correction after the fact.
+//! * [`sampling`] — head/tail sampling policies that keep the ring
+//!   honest at production event rates with bounded memory.
+//! * [`spans`] — deterministic trace analytics: typed causal spans,
+//!   cross-device causality chains and the `oodin trace` summary.
+//! * [`SloBurnMonitor`] — fast/slow-window error-budget burn rates over
+//!   the histogram rollups, emitting `slo_burn` trace events.
 
 pub mod histogram;
+pub mod sampling;
+pub mod spans;
 pub mod trace;
 
 use std::collections::BTreeMap;
@@ -71,6 +79,19 @@ impl Telemetry {
         g.samples.get(name).and_then(|h| h.stats())
     }
 
+    /// `(total samples, samples above threshold)` for metric `name` —
+    /// the cumulative counters a [`SloBurnMonitor`] differences into
+    /// fast-window burn rates.  `None` when the metric was never
+    /// recorded.  Miss counting is bucket-exact
+    /// ([`histogram::LogHistogram::count_above`]), so it survives
+    /// cohort merges and is mirrored by the Python oracles.
+    pub fn burn_counts(&self, name: &str, threshold: f64) -> Option<(u64, u64)> {
+        let g = self.inner.lock().unwrap();
+        g.samples
+            .get(name)
+            .map(|h| (h.count(), h.count_above(threshold)))
+    }
+
     /// Bytes resident in the latency histograms — proportional to the
     /// number of *metrics*, never to the number of samples.
     pub fn resident_bytes(&self) -> usize {
@@ -108,6 +129,110 @@ impl Telemetry {
             ("counters".to_string(), Value::Obj(counters)),
             ("latency".to_string(), Value::Obj(stats)),
         ])
+    }
+}
+
+/// Configuration of an [`SloBurnMonitor`].
+#[derive(Debug, Clone)]
+pub struct BurnConfig {
+    /// SLO threshold on the watched metric: a sample is a *miss* when
+    /// it lands strictly above the threshold's histogram bucket.
+    pub threshold: f64,
+    /// Error budget: the tolerated miss *fraction* (e.g. `0.25` = one
+    /// in four samples may miss).  Burn rate = miss-rate ÷ budget.
+    pub budget: f64,
+    /// Minimum new samples in the fast window for a verdict — fewer
+    /// and the check abstains (no alert from noise).
+    pub min_samples: u64,
+}
+
+/// One burn-rate verdict from [`SloBurnMonitor::check_counts`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BurnSample {
+    /// Fast-window length in virtual µs (time since the previous
+    /// check of this scope).
+    pub window_us: u64,
+    /// Fast-window burn rate: new-miss-rate ÷ budget (> 1 = burning).
+    pub fast_burn: f64,
+    /// Slow-window burn rate: cumulative miss-rate ÷ budget.
+    pub slow_burn: f64,
+    /// Misses inside the fast window.
+    pub misses: u64,
+    /// Samples inside the fast window.
+    pub samples: u64,
+    /// True when *both* windows burn above 1× — the multi-window
+    /// alert condition (fast alone is noisy, slow alone is stale).
+    pub burning: bool,
+}
+
+/// Multi-window SLO burn-rate monitor over cumulative histogram
+/// counters.
+///
+/// Classic burn-rate alerting compares the error-budget consumption
+/// rate over a *fast* window (recent behaviour, quick detection) and a
+/// *slow* window (sustained behaviour, de-noising); an alert needs
+/// both above 1×.  Here both windows live in virtual time: the fast
+/// window is everything since the scope's previous check (the caller's
+/// own cadence — fleet-bench checks once per regret tick), the slow
+/// window is the metric's full history.  State per scope is three
+/// integers — bounded regardless of sample rate — and every verdict is
+/// a pure function of bucket counts, so the Python oracles reproduce
+/// alerts bit-for-bit.
+#[derive(Debug)]
+pub struct SloBurnMonitor {
+    cfg: BurnConfig,
+    /// Per-scope `(count, above, t_us)` at the previous check.
+    prev: BTreeMap<String, (u64, u64, u64)>,
+}
+
+impl SloBurnMonitor {
+    /// A monitor with the given thresholds.
+    pub fn new(cfg: BurnConfig) -> Self {
+        SloBurnMonitor { cfg, prev: BTreeMap::new() }
+    }
+
+    /// The configured thresholds.
+    pub fn config(&self) -> &BurnConfig {
+        &self.cfg
+    }
+
+    /// Advance `scope`'s window against cumulative `(count, above)`
+    /// counters at virtual time `now_us`.  The window *always*
+    /// advances; the verdict is `None` when fewer than `min_samples`
+    /// new samples arrived (abstain, not "healthy").
+    pub fn check_counts(&mut self, scope: &str, now_us: u64, count: u64,
+                        above: u64) -> Option<BurnSample> {
+        let cfg = self.cfg.clone();
+        let (pc, pa, pt) = self
+            .prev
+            .insert(scope.to_string(), (count, above, now_us))
+            .unwrap_or((0, 0, now_us));
+        let dc = count.saturating_sub(pc);
+        let da = above.saturating_sub(pa);
+        if count == 0 || dc < cfg.min_samples.max(1) {
+            return None;
+        }
+        let fast_burn = (da as f64 / dc as f64) / cfg.budget;
+        let slow_burn = (above as f64 / count as f64) / cfg.budget;
+        Some(BurnSample {
+            window_us: now_us.saturating_sub(pt),
+            fast_burn,
+            slow_burn,
+            misses: da,
+            samples: dc,
+            burning: fast_burn > 1.0 && slow_burn > 1.0,
+        })
+    }
+
+    /// [`SloBurnMonitor::check_counts`] against a live sink's metric
+    /// (`None` also when the metric was never recorded — the window
+    /// still advances to `now_us`).
+    pub fn check(&mut self, scope: &str, sink: &Telemetry, metric: &str,
+                 now_us: u64) -> Option<BurnSample> {
+        let (count, above) = sink
+            .burn_counts(metric, self.config().threshold)
+            .unwrap_or((0, 0));
+        self.check_counts(scope, now_us, count, above)
     }
 }
 
@@ -165,6 +290,56 @@ mod tests {
         let v = t.snapshot();
         assert!(v.get("counters").unwrap().get("a").is_some());
         assert!(v.get("latency").unwrap().get("l").is_some());
+    }
+
+    #[test]
+    fn burn_monitor_needs_both_windows_hot() {
+        let mut m = SloBurnMonitor::new(BurnConfig {
+            threshold: 5.0,
+            budget: 0.25,
+            min_samples: 4,
+        });
+        let t = Telemetry::new();
+        // Healthy history: 8 samples, 0 misses.
+        for _ in 0..8 {
+            t.record("lat", 1.0);
+        }
+        let s = m.check("d0", &t, "lat", 1000).unwrap();
+        assert!(!s.burning);
+        assert_eq!(s.samples, 8);
+        // A hot fast window: 8 new samples, all misses.  Fast burn is
+        // 4×; slow is (8/16)/0.25 = 2× — both above 1 → alert.
+        for _ in 0..8 {
+            t.record("lat", 50.0);
+        }
+        let s = m.check("d0", &t, "lat", 2000).unwrap();
+        assert!(s.burning);
+        assert_eq!(s.window_us, 1000);
+        assert_eq!(s.misses, 8);
+        assert_eq!(s.fast_burn, 4.0);
+        assert_eq!(s.slow_burn, 2.0);
+    }
+
+    #[test]
+    fn burn_monitor_abstains_below_min_samples_but_advances() {
+        let mut m = SloBurnMonitor::new(BurnConfig {
+            threshold: 5.0,
+            budget: 0.25,
+            min_samples: 4,
+        });
+        let t = Telemetry::new();
+        for _ in 0..3 {
+            t.record("lat", 50.0);
+        }
+        // 3 < min_samples → abstain; the window still advances, so the
+        // same 3 samples never accumulate into a later fast window.
+        assert!(m.check("d0", &t, "lat", 100).is_none());
+        for _ in 0..3 {
+            t.record("lat", 50.0);
+        }
+        assert!(m.check("d0", &t, "lat", 200).is_none());
+        // Unknown metric: abstains, never panics.
+        assert!(m.check("d0", &t, "nope", 300).is_none());
     }
 
     #[test]

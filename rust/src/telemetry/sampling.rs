@@ -1,0 +1,333 @@
+//! Pluggable trace-sampling policies for production-rate flight
+//! recording.
+//!
+//! A fleet emitting every [`super::trace::TraceEvent`] at production
+//! rate overruns any bounded ring; "Smart at what cost?" (arXiv
+//! 2109.13963)-style heavy-tailed populations make *uniform* downsampling
+//! dishonest — the anomalies carry the signal.  This module provides the
+//! two standard remedies, both deterministic in virtual time:
+//!
+//! * **Head sampling** ([`SamplingPolicy::Head`]) decides at emission
+//!   from a seeded FNV-1a hash of the event's *stream key* (device
+//!   scope, cohort id, revision id — [`super::trace::TraceEvent::sample_key`]),
+//!   so a retained key keeps its **entire** event stream and span
+//!   reconstruction ([`super::spans`]) over the sample is exact for the
+//!   keys it kept.
+//! * **Tail sampling** ([`SamplingPolicy::Tail`]) buffers non-retained
+//!   keys' recent events in bounded pending buffers and, the moment an
+//!   *anomalous* event arrives (shed, SLO-burn, rollout rollback,
+//!   deadline-missing batch — [`super::trace::TraceEvent::is_anomalous`]),
+//!   flushes that key's buffered history ahead of the anomalous event —
+//!   anomalous spans survive at full fidelity while steady-state streams
+//!   are cut by the head rate.  Every anomaly class terminates its span,
+//!   so flushed history + the anomalous event is the complete span.
+//!
+//! The [`Sampler`] is generic over the buffered payload so the
+//! [`super::trace::FlightRecorder`] (payload: stamped events) and the
+//! offline analyzer in [`super::spans`] (payload: event indices) share
+//! one decision procedure — the byte-pinned `oodin trace --summary`
+//! sampling block is the same code path the live ring runs.
+//!
+//! Accounting is exact: every observed event is retained, rejected, or
+//! pending, and buffer evictions fold into the rejected count, so
+//! `observed == retained + rejected + pending` always holds
+//! (`FlightRecorder` pins the same identity as
+//! `emitted == seq + sampled_out + pending`).
+
+use std::collections::{BTreeMap, VecDeque};
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Max buffered events per pending key under tail sampling; the oldest
+/// event of the key is evicted (and counted rejected) past this.
+pub const PENDING_PER_KEY: usize = 64;
+
+/// Max distinct pending keys under tail sampling; the oldest key's whole
+/// buffer is evicted (and counted rejected) past this.
+pub const PENDING_KEYS: usize = 512;
+
+/// Seeded FNV-1a over `seed` (little-endian bytes) then the key bytes —
+/// the deterministic, platform-independent hash behind head sampling
+/// (mirrored bit-exactly by the Python oracles).
+pub fn key_hash(seed: u64, key: &str) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in seed.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    for b in key.as_bytes() {
+        h = (h ^ *b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// True when head sampling at `1/rate` keeps `key` (rates ≤ 1 keep
+/// everything).  Key-level, not event-level: a kept key keeps its whole
+/// stream.
+pub fn head_keeps(rate: u64, seed: u64, key: &str) -> bool {
+    rate <= 1 || key_hash(seed, key) % rate == 0
+}
+
+/// A trace-sampling policy, applied per event stream key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplingPolicy {
+    /// Retain everything (the default recorder behaviour).
+    KeepAll,
+    /// Keep the streams of keys whose seeded hash lands on `0 mod rate`;
+    /// reject every other event at emission.
+    Head {
+        /// Inverse sampling rate (`16` = keep ~1/16 of keys).
+        rate: u64,
+        /// Hash seed; different seeds retain different key subsets.
+        seed: u64,
+    },
+    /// Head sampling plus bounded per-key pending buffers: an anomalous
+    /// event flushes its key's buffered history and is always retained.
+    Tail {
+        /// Inverse head rate for non-anomalous streams.
+        rate: u64,
+        /// Hash seed shared with the head decision.
+        seed: u64,
+    },
+}
+
+impl SamplingPolicy {
+    /// Stable snake_case policy name (for export metadata).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplingPolicy::KeepAll => "keep_all",
+            SamplingPolicy::Head { .. } => "head",
+            SamplingPolicy::Tail { .. } => "tail",
+        }
+    }
+}
+
+/// What [`Sampler::observe`] decided for one event.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SampleOutcome<T> {
+    /// Retain these payloads now, in order (the observed event alone, or
+    /// a flushed pending history ending with the observed event).
+    Retain(Vec<T>),
+    /// Rejected by the policy (already counted in
+    /// [`Sampler::rejected`]).
+    Dropped,
+    /// Parked in the key's bounded pending buffer (tail sampling only).
+    Buffered,
+}
+
+/// Stateful sampling decision engine: one per recorder or offline
+/// analysis pass.  Generic over the payload carried per event.
+#[derive(Debug)]
+pub struct Sampler<T> {
+    policy: SamplingPolicy,
+    pending: BTreeMap<String, VecDeque<T>>,
+    key_order: VecDeque<String>,
+    pending_total: usize,
+    rejected: u64,
+}
+
+impl<T> Sampler<T> {
+    /// A sampler applying `policy` from a clean state.
+    pub fn new(policy: SamplingPolicy) -> Self {
+        Sampler {
+            policy,
+            pending: BTreeMap::new(),
+            key_order: VecDeque::new(),
+            pending_total: 0,
+            rejected: 0,
+        }
+    }
+
+    /// The policy in force.
+    pub fn policy(&self) -> SamplingPolicy {
+        self.policy
+    }
+
+    /// Events rejected so far (explicit drops plus buffer evictions).
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// Events currently parked in pending buffers.
+    pub fn pending(&self) -> usize {
+        self.pending_total
+    }
+
+    /// Decide one event: `key` is its stream key, `anomalous` marks the
+    /// span-terminating anomaly classes.  The caller computes both from
+    /// the event so this engine stays payload-agnostic.
+    pub fn observe(&mut self, key: &str, anomalous: bool, payload: T)
+                   -> SampleOutcome<T> {
+        match self.policy {
+            SamplingPolicy::KeepAll => SampleOutcome::Retain(vec![payload]),
+            SamplingPolicy::Head { rate, seed } => {
+                if head_keeps(rate, seed, key) {
+                    SampleOutcome::Retain(vec![payload])
+                } else {
+                    self.rejected += 1;
+                    SampleOutcome::Dropped
+                }
+            }
+            SamplingPolicy::Tail { rate, seed } => {
+                if anomalous {
+                    let mut flushed = self.take_pending(key);
+                    flushed.push(payload);
+                    SampleOutcome::Retain(flushed)
+                } else if head_keeps(rate, seed, key) {
+                    SampleOutcome::Retain(vec![payload])
+                } else {
+                    self.buffer(key, payload);
+                    SampleOutcome::Buffered
+                }
+            }
+        }
+    }
+
+    /// Discard every pending buffer, folding the parked events into the
+    /// rejected count; returns how many were discarded.  Call at end of
+    /// stream so the accounting identity closes with `pending == 0`.
+    pub fn drain(&mut self) -> u64 {
+        let n = self.pending_total as u64;
+        self.rejected += n;
+        self.pending.clear();
+        self.key_order.clear();
+        self.pending_total = 0;
+        n
+    }
+
+    fn take_pending(&mut self, key: &str) -> Vec<T> {
+        match self.pending.remove(key) {
+            Some(q) => {
+                self.pending_total -= q.len();
+                self.key_order.retain(|k| k != key);
+                q.into()
+            }
+            None => Vec::new(),
+        }
+    }
+
+    fn buffer(&mut self, key: &str, payload: T) {
+        if !self.pending.contains_key(key) {
+            if self.key_order.len() == PENDING_KEYS {
+                // Evict the longest-pending key wholesale.
+                let victim = self.key_order.pop_front().unwrap();
+                let q = self.pending.remove(&victim).unwrap();
+                self.pending_total -= q.len();
+                self.rejected += q.len() as u64;
+            }
+            self.key_order.push_back(key.to_string());
+            self.pending.insert(key.to_string(), VecDeque::new());
+        }
+        let q = self.pending.get_mut(key).unwrap();
+        if q.len() == PENDING_PER_KEY {
+            q.pop_front();
+            self.pending_total -= 1;
+            self.rejected += 1;
+        }
+        q.push_back(payload);
+        self.pending_total += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_is_key_level_and_seeded() {
+        // Rates ≤ 1 keep everything.
+        assert!(head_keeps(0, 7, "x"));
+        assert!(head_keeps(1, 7, "x"));
+        // Same (rate, seed, key) always agrees; some seed must differ in
+        // verdict across a key set (hash actually depends on the seed).
+        let keys: Vec<String> = (0..64).map(|i| format!("d{i:04}")).collect();
+        let a: Vec<bool> =
+            keys.iter().map(|k| head_keeps(4, 7, k)).collect();
+        let b: Vec<bool> =
+            keys.iter().map(|k| head_keeps(4, 7, k)).collect();
+        assert_eq!(a, b);
+        let c: Vec<bool> =
+            keys.iter().map(|k| head_keeps(4, 8, k)).collect();
+        assert_ne!(a, c, "seed must perturb the retained key set");
+        // Roughly 1/rate of keys survive (loose sanity bound).
+        let kept = a.iter().filter(|&&x| x).count();
+        assert!(kept > 0 && kept < keys.len());
+    }
+
+    #[test]
+    fn accounting_identity_holds() {
+        let mut s: Sampler<u64> =
+            Sampler::new(SamplingPolicy::Tail { rate: 1 << 30, seed: 1 });
+        let mut observed = 0u64;
+        let mut retained = 0u64;
+        for i in 0..200 {
+            let key = format!("k{}", i % 3);
+            observed += 1;
+            match s.observe(&key, false, i) {
+                SampleOutcome::Retain(v) => retained += v.len() as u64,
+                SampleOutcome::Dropped | SampleOutcome::Buffered => {}
+            }
+        }
+        assert_eq!(observed, retained + s.rejected() + s.pending() as u64);
+        // Per-key buffers are bounded.
+        assert!(s.pending() <= 3 * PENDING_PER_KEY);
+        s.drain();
+        assert_eq!(s.pending(), 0);
+        assert_eq!(observed, retained + s.rejected());
+    }
+
+    #[test]
+    fn anomaly_flushes_the_pending_history_in_order() {
+        // Astronomically high rate: nothing head-passes.
+        let mut s: Sampler<u64> =
+            Sampler::new(SamplingPolicy::Tail { rate: 1 << 30, seed: 9 });
+        for i in 0..5u64 {
+            assert_eq!(s.observe("k", false, i), SampleOutcome::Buffered);
+        }
+        match s.observe("k", true, 99) {
+            SampleOutcome::Retain(v) => {
+                assert_eq!(v, vec![0, 1, 2, 3, 4, 99]);
+            }
+            other => panic!("expected flush, got {other:?}"),
+        }
+        assert_eq!(s.pending(), 0);
+        assert_eq!(s.rejected(), 0);
+        // The key is not permanently retained: new steady-state events
+        // buffer again.
+        assert_eq!(s.observe("k", false, 100), SampleOutcome::Buffered);
+    }
+
+    #[test]
+    fn tail_buffers_are_bounded_per_key() {
+        let mut s: Sampler<u64> =
+            Sampler::new(SamplingPolicy::Tail { rate: 1 << 30, seed: 9 });
+        for i in 0..(PENDING_PER_KEY as u64 + 10) {
+            s.observe("k", false, i);
+        }
+        assert_eq!(s.pending(), PENDING_PER_KEY);
+        assert_eq!(s.rejected(), 10);
+        // The flush returns the most recent window.
+        match s.observe("k", true, 1000) {
+            SampleOutcome::Retain(v) => {
+                assert_eq!(v.len(), PENDING_PER_KEY + 1);
+                assert_eq!(v[0], 10);
+                assert_eq!(*v.last().unwrap(), 1000);
+            }
+            other => panic!("expected flush, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn key_table_is_bounded() {
+        let mut s: Sampler<u64> =
+            Sampler::new(SamplingPolicy::Tail { rate: 1 << 30, seed: 9 });
+        for i in 0..(PENDING_KEYS as u64 + 8) {
+            s.observe(&format!("key{i:05}"), false, i);
+        }
+        assert_eq!(s.pending(), PENDING_KEYS);
+        assert_eq!(s.rejected(), 8, "evicted whole oldest-key buffers");
+    }
+}

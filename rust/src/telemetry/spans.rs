@@ -1,0 +1,1158 @@
+//! Trace analytics: reconstruct typed causal **spans** from the flat
+//! [`super::trace::TraceEvent`] stream.
+//!
+//! The flight recorder answers "what happened"; this module answers
+//! "how long did the episode take end-to-end, and what caused it".  A
+//! single deterministic pass over a trace (a live ring snapshot or a
+//! `--trace` JSONL file — both normalise to the same pinned JSON-lines
+//! schema first, so the online and offline paths cannot diverge)
+//! rebuilds four span families:
+//!
+//! * **Adaptation episodes** — degradation/load onset (first blocked
+//!   `hold` whose trigger fired) through the closing `switch`, with the
+//!   switch's own detection latency widening the span start when the
+//!   violation predates the first recorded hold.  Every `switch` closes
+//!   exactly one span; a clean `no_trigger` hold abandons a pending
+//!   episode (the condition resolved itself).
+//! * **Serving request/batch spans** — `enqueue → batch_launch →
+//!   batch_complete` joined per pipeline scope by FIFO order (the
+//!   pipeline's own dispatch order), splitting each request's latency
+//!   into queue-wait vs service time; leftovers at end-of-trace are
+//!   *unclosed* and pinned to zero in the goldens.
+//! * **Rollout lifecycles** — the `Proposed → Canary → Widening* →
+//!   Promoted | RolledBack` stage machine per revision id; a rollback is
+//!   *linked* when its span contains the canary claim that caused it.
+//! * **SLO-burn episodes** — `slo_burn` alerts grouped per scope.
+//!
+//! Cross-device **causality chains** link fleet-level causes
+//! (`correction`, `rollout` stage applications, `residual`,
+//! `re_anchor`) to the per-cohort `frontier_delta` events they fan out
+//! at the same virtual timestamp; deltas no cause claims are *orphans*,
+//! and storm `switch`es whose frontier came from a cohort touched by a
+//! chain at the same instant count as *downstream switches*.
+//!
+//! [`Analysis::summary`] distils everything into one pinned-key-order
+//! JSON object — the `oodin trace --summary` output, byte-pinned over
+//! the golden fleet trace in `rust/tests/golden/trace_summary.json` and
+//! regenerated independently by `python/golden_fleetbench.py`.  The
+//! summary's `sampling` block replays the trace through
+//! [`super::sampling`] head and tail policies at a pinned rate/seed,
+//! asserting the tail policy's contract: anomalous spans survive at
+//! 100 % while total retention shrinks by the pinned factor.
+
+use anyhow::{anyhow, Result};
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+use crate::util::json::{self, Value};
+
+use super::sampling::{SampleOutcome, Sampler, SamplingPolicy};
+use super::trace::{round3, TraceRecord};
+
+/// Inverse sampling rate the summary's sampling block replays at.
+pub const SUMMARY_SAMPLE_RATE: u64 = 16;
+
+/// Hash seed the summary's sampling block replays with.
+pub const SUMMARY_SAMPLE_SEED: u64 = 7;
+
+/// One trace event in its normalised JSON-lines form: the pinned `seq` /
+/// `t_us` / `ev` header plus the payload object.
+#[derive(Debug, Clone)]
+pub struct RawEvent {
+    /// Sequence number (contiguous per retention class).
+    pub seq: u64,
+    /// Virtual timestamp (µs).
+    pub t_us: u64,
+    /// Event name (the `ev` field).
+    pub ev: String,
+    /// The full parsed line (header fields included).
+    pub body: Value,
+}
+
+impl RawEvent {
+    /// Parse one JSON line of the pinned trace schema.
+    pub fn parse_line(line: &str) -> Result<RawEvent> {
+        let body = json::parse(line)?;
+        let seq = body.req("seq")?.as_u64()?;
+        let t_us = body.req("t_us")?.as_u64()?;
+        let ev = body.req("ev")?.as_str()?.to_string();
+        Ok(RawEvent { seq, t_us, ev, body })
+    }
+
+    /// Normalise a live [`TraceRecord`] through the same pinned schema
+    /// the JSONL export uses, so ring and file analyses are one path.
+    pub fn from_record(r: &TraceRecord) -> RawEvent {
+        RawEvent::parse_line(&r.to_json_line())
+            .expect("a serialised record always re-parses")
+    }
+
+    fn s(&self, key: &str) -> &str {
+        self.body.get(key).and_then(|v| v.as_str().ok()).unwrap_or("")
+    }
+
+    fn f(&self, key: &str) -> f64 {
+        self.body.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+    }
+
+    fn u(&self, key: &str) -> u64 {
+        let f = self.f(key);
+        if f > 0.0 { f as u64 } else { 0 }
+    }
+
+    fn i(&self, key: &str) -> i64 {
+        self.f(key) as i64
+    }
+
+    /// The sampling stream key — mirrors
+    /// [`super::trace::TraceEvent::sample_key`] on the parsed form.
+    pub fn sample_key(&self) -> String {
+        match self.ev.as_str() {
+            "cohort_transfer" | "probe_fallback" | "residual"
+            | "re_anchor" => self.s("cohort").to_string(),
+            "rollout" => format!("rev:{}", self.u("revision")),
+            "correction" => "fleet".to_string(),
+            _ => self.s("scope").to_string(),
+        }
+    }
+
+    /// The anomaly classes — mirrors
+    /// [`super::trace::TraceEvent::is_anomalous`] on the parsed form.
+    pub fn is_anomalous(&self) -> bool {
+        match self.ev.as_str() {
+            "shed" | "slo_burn" => true,
+            "rollout" => self.s("stage") == "rolled_back",
+            "batch_complete" => self.i("slack_us") < 0,
+            _ => false,
+        }
+    }
+}
+
+/// One reconstructed adaptation episode, closed by its `switch`.
+#[derive(Debug, Clone)]
+pub struct AdaptationSpan {
+    /// Device or app scope.
+    pub scope: String,
+    /// Episode start: the earlier of the first blocked hold and the
+    /// switch time minus its detection latency.
+    pub start_us: u64,
+    /// The closing switch's timestamp.
+    pub end_us: u64,
+    /// The switch's detection latency in µs (0 for pure load triggers).
+    pub detection_us: u64,
+    /// Holds with a fired trigger inside the episode (reaction latency
+    /// in decide-rounds).
+    pub blocked_holds: u64,
+    /// Design switched away from.
+    pub from: String,
+    /// Design switched to.
+    pub to: String,
+    /// The closing trigger (`load`, `degradation`).
+    pub trigger: String,
+}
+
+/// One served request's queue-wait / service breakdown.
+#[derive(Debug, Clone)]
+pub struct RequestSpan {
+    /// Pipeline scope.
+    pub scope: String,
+    /// Admission time.
+    pub enqueue_us: u64,
+    /// Batch launch time (queue wait ends).
+    pub launch_us: u64,
+    /// Batch completion time (service ends).
+    pub complete_us: u64,
+}
+
+/// One launched batch from launch to completion.
+#[derive(Debug, Clone)]
+pub struct BatchSpan {
+    /// Pipeline scope.
+    pub scope: String,
+    /// Launch time.
+    pub launch_us: u64,
+    /// Completion time.
+    pub complete_us: u64,
+    /// Requests in the batch (at completion).
+    pub size: u64,
+    /// Tightest deadline slack at completion (negative = miss).
+    pub slack_us: i64,
+}
+
+/// One revision's rollout lifecycle.
+#[derive(Debug, Clone)]
+pub struct RolloutSpan {
+    /// Revision id.
+    pub revision: u64,
+    /// First stage event's timestamp.
+    pub start_us: u64,
+    /// Last stage event's timestamp.
+    pub end_us: u64,
+    /// Stage names in order (including `held`).
+    pub stages: Vec<String>,
+    /// Terminal stage (`promoted` / `rolled_back`), empty while live.
+    pub terminal: String,
+    /// True when the span contains the canary claim — a terminal
+    /// rollback is causally *linked* to its origin iff this holds.
+    pub has_canary: bool,
+}
+
+/// `slo_burn` alerts grouped per emitting scope.
+#[derive(Debug, Clone)]
+pub struct BurnEpisode {
+    /// Burning scope.
+    pub scope: String,
+    /// First alert time.
+    pub start_us: u64,
+    /// Last alert time.
+    pub end_us: u64,
+    /// Alerts in the episode.
+    pub events: u64,
+    /// Worst fast-window burn rate seen.
+    pub max_fast_burn: f64,
+}
+
+/// One fleet cause and the per-cohort deltas it fanned out.
+#[derive(Debug, Clone)]
+pub struct CausalChain {
+    /// Cause event name (`correction`, `rollout`, `residual`,
+    /// `re_anchor`).
+    pub cause: String,
+    /// Cause event's sequence number.
+    pub cause_seq: u64,
+    /// Shared virtual timestamp of cause and deltas.
+    pub t_us: u64,
+    /// Cohort scopes of the attached `frontier_delta` events.
+    pub cohorts: Vec<String>,
+}
+
+/// The full deterministic reconstruction over one trace.
+#[derive(Debug, Default)]
+pub struct Analysis {
+    /// The normalised events, in input order.
+    pub events: Vec<RawEvent>,
+    /// Closed adaptation episodes, in switch order.
+    pub adaptation: Vec<AdaptationSpan>,
+    /// Pending episodes abandoned by a clean `no_trigger` hold.
+    pub abandoned_episodes: u64,
+    /// Episodes still pending at end of trace.
+    pub open_episodes: u64,
+    /// Completed request spans.
+    pub requests: Vec<RequestSpan>,
+    /// Completed batch spans.
+    pub batches: Vec<BatchSpan>,
+    /// Requests shed at admission.
+    pub sheds: u64,
+    /// Requests enqueued or launched but never completed.
+    pub unclosed_requests: u64,
+    /// Batches launched but never completed.
+    pub unclosed_batches: u64,
+    /// `batch_complete` events with no open batch to close.
+    pub stray_completes: u64,
+    /// Rollout lifecycles, in first-appearance order.
+    pub rollouts: Vec<RolloutSpan>,
+    /// Rollout `held` events across all revisions.
+    pub rollout_holds: u64,
+    /// Burn episodes, in first-appearance order.
+    pub burn: Vec<BurnEpisode>,
+    /// Causality chains with at least one attached delta.
+    pub chains: Vec<CausalChain>,
+    /// `frontier_delta` events no cause claimed.
+    pub orphan_deltas: u64,
+    /// Switches whose frontier came from a cohort a chain touched at
+    /// the same instant.
+    pub downstream_switches: u64,
+    /// Sequence gaps observed (adjacent events whose seqs differ by
+    /// more than one — ring truncation or mixed retention classes).
+    pub seq_gaps: u64,
+}
+
+#[derive(Default)]
+struct PendingEpisode {
+    first_t_us: u64,
+    blocked_holds: u64,
+}
+
+impl Analysis {
+    /// Analyse a pinned-schema JSON-lines trace (blank lines ignored).
+    pub fn from_jsonl(text: &str) -> Result<Analysis> {
+        let mut events = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            events.push(RawEvent::parse_line(line).map_err(|e| {
+                anyhow!("trace line {}: {e}", i + 1)
+            })?);
+        }
+        Ok(Analysis::build(events))
+    }
+
+    /// Analyse a live ring snapshot (normalised through the JSONL
+    /// schema, so this is exactly [`Analysis::from_jsonl`] semantics).
+    pub fn from_records(records: &[TraceRecord]) -> Analysis {
+        Analysis::build(records.iter().map(RawEvent::from_record).collect())
+    }
+
+    fn build(events: Vec<RawEvent>) -> Analysis {
+        let mut a = Analysis { events, ..Analysis::default() };
+
+        let mut episodes: BTreeMap<String, PendingEpisode> = BTreeMap::new();
+        let mut queues: BTreeMap<String, VecDeque<u64>> = BTreeMap::new();
+        let mut open_batches: BTreeMap<String, VecDeque<(u64, Vec<u64>)>> =
+            BTreeMap::new();
+        let mut rollout_order: Vec<u64> = Vec::new();
+        let mut rollouts: BTreeMap<u64, RolloutSpan> = BTreeMap::new();
+        let mut burn_order: Vec<String> = Vec::new();
+        let mut burns: BTreeMap<String, BurnEpisode> = BTreeMap::new();
+        // (seq, t_us, cohort) of frontier_delta events awaiting a cause.
+        let mut pending_deltas: Vec<(u64, u64, String)> = Vec::new();
+        // (t_us, cohort) instants touched by a chain.
+        let mut chain_touch: Vec<(u64, String)> = Vec::new();
+
+        for idx in 0..a.events.len() {
+            let e = a.events[idx].clone();
+            if idx > 0 && e.seq != a.events[idx - 1].seq + 1 {
+                a.seq_gaps += 1;
+            }
+            // Deltas from an earlier instant can no longer be claimed:
+            // causes attach same-timestamp deltas only.
+            let before = pending_deltas.len();
+            pending_deltas.retain(|(_, t, _)| *t >= e.t_us);
+            a.orphan_deltas += (before - pending_deltas.len()) as u64;
+
+            match e.ev.as_str() {
+                "hold" => {
+                    let scope = e.s("scope").to_string();
+                    if e.s("trigger") != "none" {
+                        let ep =
+                            episodes.entry(scope).or_insert_with(|| {
+                                PendingEpisode {
+                                    first_t_us: e.t_us,
+                                    blocked_holds: 0,
+                                }
+                            });
+                        ep.blocked_holds += 1;
+                    } else if e.s("reason") == "no_trigger"
+                        && episodes.remove(&scope).is_some()
+                    {
+                        a.abandoned_episodes += 1;
+                    }
+                }
+                "switch" => {
+                    let scope = e.s("scope").to_string();
+                    let detection_us =
+                        (e.f("detection_ms") * 1000.0 + 0.5).floor() as u64;
+                    let onset = e.t_us.saturating_sub(detection_us);
+                    let (start_us, blocked_holds) =
+                        match episodes.remove(&scope) {
+                            Some(ep) => {
+                                (ep.first_t_us.min(onset), ep.blocked_holds)
+                            }
+                            None => (onset, 0),
+                        };
+                    if chain_touch.iter().any(|(t, c)| {
+                        *t == e.t_us
+                            && idx > 0
+                            && matches!(a.events[idx - 1].ev.as_str(),
+                                        "frontier_hit" | "frontier_build")
+                            && a.events[idx - 1].t_us == e.t_us
+                            && a.events[idx - 1].s("scope") == c
+                    }) {
+                        a.downstream_switches += 1;
+                    }
+                    a.adaptation.push(AdaptationSpan {
+                        scope,
+                        start_us,
+                        end_us: e.t_us,
+                        detection_us,
+                        blocked_holds,
+                        from: e.s("from").to_string(),
+                        to: e.s("to").to_string(),
+                        trigger: e.s("reason").to_string(),
+                    });
+                }
+                "enqueue" => {
+                    queues
+                        .entry(e.s("scope").to_string())
+                        .or_default()
+                        .push_back(e.t_us);
+                }
+                "shed" => {
+                    a.sheds += 1;
+                }
+                "batch_launch" => {
+                    let scope = e.s("scope").to_string();
+                    let q = queues.entry(scope.clone()).or_default();
+                    let n = (e.u("size") as usize).min(q.len());
+                    let members: Vec<u64> = q.drain(..n).collect();
+                    open_batches
+                        .entry(scope)
+                        .or_default()
+                        .push_back((e.t_us, members));
+                }
+                "batch_complete" => {
+                    let scope = e.s("scope").to_string();
+                    match open_batches
+                        .entry(scope.clone())
+                        .or_default()
+                        .pop_front()
+                    {
+                        Some((launch_us, members)) => {
+                            for m in members {
+                                a.requests.push(RequestSpan {
+                                    scope: scope.clone(),
+                                    enqueue_us: m,
+                                    launch_us,
+                                    complete_us: e.t_us,
+                                });
+                            }
+                            a.batches.push(BatchSpan {
+                                scope,
+                                launch_us,
+                                complete_us: e.t_us,
+                                size: e.u("size"),
+                                slack_us: e.i("slack_us"),
+                            });
+                        }
+                        None => a.stray_completes += 1,
+                    }
+                }
+                "rollout" => {
+                    let rev = e.u("revision");
+                    let stage = e.s("stage").to_string();
+                    if stage == "held" {
+                        a.rollout_holds += 1;
+                    }
+                    let span =
+                        rollouts.entry(rev).or_insert_with(|| {
+                            rollout_order.push(rev);
+                            RolloutSpan {
+                                revision: rev,
+                                start_us: e.t_us,
+                                end_us: e.t_us,
+                                stages: Vec::new(),
+                                terminal: String::new(),
+                                has_canary: false,
+                            }
+                        });
+                    span.end_us = e.t_us;
+                    if stage == "canary" {
+                        span.has_canary = true;
+                    }
+                    if stage == "promoted" || stage == "rolled_back" {
+                        span.terminal = stage.clone();
+                    }
+                    span.stages.push(stage.clone());
+                    if stage != "held" {
+                        Analysis::claim_deltas(
+                            &mut pending_deltas,
+                            &mut chain_touch,
+                            &mut a.chains,
+                            "rollout",
+                            &e,
+                        );
+                    }
+                }
+                "slo_burn" => {
+                    let scope = e.s("scope").to_string();
+                    let fast = e.f("fast_burn");
+                    let ep = burns.entry(scope.clone()).or_insert_with(|| {
+                        burn_order.push(scope.clone());
+                        BurnEpisode {
+                            scope,
+                            start_us: e.t_us,
+                            end_us: e.t_us,
+                            events: 0,
+                            max_fast_burn: 0.0,
+                        }
+                    });
+                    ep.end_us = e.t_us;
+                    ep.events += 1;
+                    if fast > ep.max_fast_burn {
+                        ep.max_fast_burn = fast;
+                    }
+                }
+                "frontier_delta" => {
+                    pending_deltas.push((
+                        e.seq,
+                        e.t_us,
+                        e.s("scope").to_string(),
+                    ));
+                }
+                "correction" | "residual" | "re_anchor" => {
+                    Analysis::claim_deltas(
+                        &mut pending_deltas,
+                        &mut chain_touch,
+                        &mut a.chains,
+                        &e.ev,
+                        &e,
+                    );
+                }
+                _ => {}
+            }
+        }
+
+        a.open_episodes = episodes.len() as u64;
+        a.unclosed_requests = queues.values().map(|q| q.len() as u64).sum::<u64>()
+            + open_batches
+                .values()
+                .flat_map(|b| b.iter())
+                .map(|(_, m)| m.len() as u64)
+                .sum::<u64>();
+        a.unclosed_batches =
+            open_batches.values().map(|b| b.len() as u64).sum();
+        a.orphan_deltas += pending_deltas.len() as u64;
+        a.rollouts = rollout_order
+            .into_iter()
+            .map(|r| rollouts.remove(&r).unwrap())
+            .collect();
+        a.burn = burn_order
+            .into_iter()
+            .map(|s| burns.remove(&s).unwrap())
+            .collect();
+        a
+    }
+
+    fn claim_deltas(pending: &mut Vec<(u64, u64, String)>,
+                    touch: &mut Vec<(u64, String)>,
+                    chains: &mut Vec<CausalChain>, cause: &str,
+                    e: &RawEvent) {
+        let mut cohorts = Vec::new();
+        pending.retain(|(_, t, scope)| {
+            if *t == e.t_us {
+                cohorts.push(scope.clone());
+                false
+            } else {
+                true
+            }
+        });
+        if !cohorts.is_empty() {
+            for c in &cohorts {
+                touch.push((e.t_us, c.clone()));
+            }
+            chains.push(CausalChain {
+                cause: cause.to_string(),
+                cause_seq: e.seq,
+                t_us: e.t_us,
+                cohorts,
+            });
+        }
+    }
+
+    /// Count of `switch` events (each closes exactly one span).
+    pub fn switches(&self) -> u64 {
+        self.adaptation.len() as u64
+    }
+
+    /// Replay the events through a sampling policy; returns
+    /// `(retained, retained_anomalous)` after the end-of-stream drain.
+    pub fn simulate_sampling(&self, policy: SamplingPolicy) -> (u64, u64) {
+        let mut s: Sampler<bool> = Sampler::new(policy);
+        let mut retained = 0u64;
+        let mut retained_anom = 0u64;
+        for e in &self.events {
+            let anom = e.is_anomalous();
+            if let SampleOutcome::Retain(v) =
+                s.observe(&e.sample_key(), anom, anom)
+            {
+                retained += v.len() as u64;
+                retained_anom += v.iter().filter(|a| **a).count() as u64;
+            }
+        }
+        s.drain();
+        (retained, retained_anom)
+    }
+
+    /// The pinned-key-order summary object (`oodin trace --summary`).
+    pub fn summary(&self) -> Value {
+        let n = self.events.len() as u64;
+        let first_seq = self.events.first().map_or(0, |e| e.seq);
+        let last_seq = self.events.last().map_or(0, |e| e.seq);
+        let t_first = self.events.first().map_or(0, |e| e.t_us);
+        let t_last = self.events.iter().map(|e| e.t_us).max().unwrap_or(0);
+
+        let spans = self.adaptation.len() as u64;
+        let blocked: u64 =
+            self.adaptation.iter().map(|s| s.blocked_holds).sum();
+        let det_sum: u64 =
+            self.adaptation.iter().map(|s| s.detection_us).sum();
+        let det_max: u64 =
+            self.adaptation.iter().map(|s| s.detection_us).max().unwrap_or(0);
+        let dur_sum: u64 = self
+            .adaptation
+            .iter()
+            .map(|s| s.end_us - s.start_us)
+            .sum();
+        let mean_det_ms = if spans == 0 {
+            0.0
+        } else {
+            round3(det_sum as f64 / spans as f64 / 1000.0)
+        };
+        let mean_dur_ms = if spans == 0 {
+            0.0
+        } else {
+            round3(dur_sum as f64 / spans as f64 / 1000.0)
+        };
+
+        let reqs = self.requests.len() as u64;
+        let wait_sum: u64 = self
+            .requests
+            .iter()
+            .map(|r| r.launch_us - r.enqueue_us)
+            .sum();
+        let service_sum: u64 = self
+            .requests
+            .iter()
+            .map(|r| r.complete_us - r.launch_us)
+            .sum();
+        let mean_wait = if reqs == 0 {
+            0.0
+        } else {
+            round3(wait_sum as f64 / reqs as f64)
+        };
+        let mean_service = if reqs == 0 {
+            0.0
+        } else {
+            round3(service_sum as f64 / reqs as f64)
+        };
+
+        let promoted = self
+            .rollouts
+            .iter()
+            .filter(|r| r.terminal == "promoted")
+            .count() as u64;
+        let rolled_back = self
+            .rollouts
+            .iter()
+            .filter(|r| r.terminal == "rolled_back")
+            .count() as u64;
+        let rollbacks_linked = self
+            .rollouts
+            .iter()
+            .filter(|r| r.terminal == "rolled_back")
+            .all(|r| r.has_canary);
+
+        let burn_events: u64 = self.burn.iter().map(|b| b.events).sum();
+        let burn_max = round3(
+            self.burn
+                .iter()
+                .map(|b| b.max_fast_burn)
+                .fold(0.0, f64::max),
+        );
+
+        let linked_deltas: u64 =
+            self.chains.iter().map(|c| c.cohorts.len() as u64).sum();
+
+        let anomalous: u64 =
+            self.events.iter().filter(|e| e.is_anomalous()).count() as u64;
+        let (head_retained, _) = self.simulate_sampling(SamplingPolicy::Head {
+            rate: SUMMARY_SAMPLE_RATE,
+            seed: SUMMARY_SAMPLE_SEED,
+        });
+        let (tail_retained, tail_anom) =
+            self.simulate_sampling(SamplingPolicy::Tail {
+                rate: SUMMARY_SAMPLE_RATE,
+                seed: SUMMARY_SAMPLE_SEED,
+            });
+        let reduction = if tail_retained == 0 {
+            0.0
+        } else {
+            n as f64 / tail_retained as f64
+        };
+        let anom_pct = if anomalous == 0 {
+            100.0
+        } else {
+            round3(100.0 * tail_anom as f64 / anomalous as f64)
+        };
+
+        json::obj(vec![
+            (
+                "events",
+                json::obj(vec![
+                    ("count", json::num(n as f64)),
+                    ("first_seq", json::num(first_seq as f64)),
+                    ("last_seq", json::num(last_seq as f64)),
+                    ("seq_gaps", json::num(self.seq_gaps as f64)),
+                    ("t_first_us", json::num(t_first as f64)),
+                    ("t_last_us", json::num(t_last as f64)),
+                ]),
+            ),
+            (
+                "adaptation",
+                json::obj(vec![
+                    ("spans", json::num(spans as f64)),
+                    ("switches", json::num(self.switches() as f64)),
+                    (
+                        "one_span_per_switch",
+                        Value::Bool(spans == self.switches()),
+                    ),
+                    ("blocked_holds", json::num(blocked as f64)),
+                    (
+                        "abandoned_episodes",
+                        json::num(self.abandoned_episodes as f64),
+                    ),
+                    ("open_episodes", json::num(self.open_episodes as f64)),
+                    ("mean_detection_ms", json::num(mean_det_ms)),
+                    (
+                        "max_detection_ms",
+                        json::num(round3(det_max as f64 / 1000.0)),
+                    ),
+                    ("mean_duration_ms", json::num(mean_dur_ms)),
+                ]),
+            ),
+            (
+                "serving",
+                json::obj(vec![
+                    ("requests", json::num(reqs as f64)),
+                    ("batches", json::num(self.batches.len() as f64)),
+                    ("sheds", json::num(self.sheds as f64)),
+                    (
+                        "unclosed_requests",
+                        json::num(self.unclosed_requests as f64),
+                    ),
+                    (
+                        "unclosed_batches",
+                        json::num(self.unclosed_batches as f64),
+                    ),
+                    (
+                        "stray_completes",
+                        json::num(self.stray_completes as f64),
+                    ),
+                    ("mean_queue_wait_us", json::num(mean_wait)),
+                    ("mean_service_us", json::num(mean_service)),
+                ]),
+            ),
+            (
+                "rollouts",
+                json::obj(vec![
+                    ("spans", json::num(self.rollouts.len() as f64)),
+                    ("promoted", json::num(promoted as f64)),
+                    ("rolled_back", json::num(rolled_back as f64)),
+                    ("holds", json::num(self.rollout_holds as f64)),
+                    ("all_rollbacks_linked", Value::Bool(rollbacks_linked)),
+                ]),
+            ),
+            (
+                "slo_burn",
+                json::obj(vec![
+                    ("events", json::num(burn_events as f64)),
+                    ("episodes", json::num(self.burn.len() as f64)),
+                    ("max_fast_burn", json::num(burn_max)),
+                ]),
+            ),
+            (
+                "causality",
+                json::obj(vec![
+                    ("chains", json::num(self.chains.len() as f64)),
+                    ("linked_deltas", json::num(linked_deltas as f64)),
+                    ("orphan_deltas", json::num(self.orphan_deltas as f64)),
+                    (
+                        "downstream_switches",
+                        json::num(self.downstream_switches as f64),
+                    ),
+                ]),
+            ),
+            (
+                "sampling",
+                json::obj(vec![
+                    ("rate", json::num(SUMMARY_SAMPLE_RATE as f64)),
+                    ("seed", json::num(SUMMARY_SAMPLE_SEED as f64)),
+                    ("events", json::num(n as f64)),
+                    ("head_retained", json::num(head_retained as f64)),
+                    ("tail_retained", json::num(tail_retained as f64)),
+                    ("tail_reduction_x", json::num(round3(reduction))),
+                    ("anomalous_events", json::num(anomalous as f64)),
+                    ("anomalous_retained", json::num(tail_anom as f64)),
+                    ("anomalous_retained_pct", json::num(anom_pct)),
+                    (
+                        "tail_reduction_ge_4x",
+                        Value::Bool(tail_retained > 0 && reduction >= 4.0),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    /// The summary as its pinned byte form (no trailing newline).
+    pub fn summary_json(&self) -> String {
+        json::to_string(&self.summary())
+    }
+
+    /// The reconstructed spans as Chrome trace async `b`/`e` event
+    /// pairs (ids are assigned in span order within each family).
+    pub fn chrome_spans(&self) -> Vec<Value> {
+        fn pair(name: String, cat: &str, id: u64, start: u64, end: u64,
+                args: Vec<(&str, Value)>) -> [Value; 2] {
+            let base = |ph: &str, ts: u64, args: Vec<(&str, Value)>| {
+                json::obj(vec![
+                    ("name", json::s(&name)),
+                    ("cat", json::s(cat)),
+                    ("ph", json::s(ph)),
+                    ("id", json::num(id as f64)),
+                    ("ts", json::num(ts as f64)),
+                    ("pid", json::num(1.0)),
+                    ("tid", json::num(1.0)),
+                    ("args", json::obj(args)),
+                ])
+            };
+            [base("b", start, args), base("e", end, vec![])]
+        }
+        let mut out = Vec::new();
+        let mut id = 0u64;
+        for s in &self.adaptation {
+            out.extend(pair(
+                format!("adapt:{}", s.scope),
+                "span",
+                id,
+                s.start_us,
+                s.end_us,
+                vec![
+                    ("from", json::s(&s.from)),
+                    ("to", json::s(&s.to)),
+                    ("trigger", json::s(&s.trigger)),
+                    ("blocked_holds", json::num(s.blocked_holds as f64)),
+                ],
+            ));
+            id += 1;
+        }
+        for b in &self.batches {
+            out.extend(pair(
+                format!("batch:{}", b.scope),
+                "span",
+                id,
+                b.launch_us,
+                b.complete_us,
+                vec![
+                    ("size", json::num(b.size as f64)),
+                    ("slack_us", json::num(b.slack_us as f64)),
+                ],
+            ));
+            id += 1;
+        }
+        for r in &self.rollouts {
+            out.extend(pair(
+                format!("rollout:rev{}", r.revision),
+                "span",
+                id,
+                r.start_us,
+                r.end_us,
+                vec![
+                    ("stages", json::num(r.stages.len() as f64)),
+                    ("terminal", json::s(&r.terminal)),
+                ],
+            ));
+            id += 1;
+        }
+        for b in &self.burn {
+            out.extend(pair(
+                format!("burn:{}", b.scope),
+                "span",
+                id,
+                b.start_us,
+                b.end_us,
+                vec![
+                    ("events", json::num(b.events as f64)),
+                    ("max_fast_burn", json::num(round3(b.max_fast_burn))),
+                ],
+            ));
+            id += 1;
+        }
+        out
+    }
+}
+
+/// Chrome span events for a live ring snapshot — the hook
+/// [`super::trace::FlightRecorder::to_chrome_trace`] appends.
+pub fn chrome_span_events(records: &[TraceRecord]) -> Vec<Value> {
+    Analysis::from_records(records).chrome_spans()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::trace::{FlightRecorder, TraceEvent};
+
+    fn jsonl(rec: &FlightRecorder) -> String {
+        rec.to_jsonl()
+    }
+
+    #[test]
+    fn switch_closes_exactly_one_span_with_onset_widening() {
+        let rec = FlightRecorder::new();
+        rec.set_now_us(1000);
+        rec.emit(TraceEvent::Hold {
+            scope: "d0".to_string(),
+            trigger: "degradation".to_string(),
+            reason: "cooldown".to_string(),
+        });
+        rec.set_now_us(3000);
+        rec.emit(TraceEvent::Switch {
+            scope: "d0".to_string(),
+            from: "a".to_string(),
+            to: "b".to_string(),
+            reason: "degradation".to_string(),
+            detection_ms: 5.0,
+        });
+        let a = Analysis::from_jsonl(&jsonl(&rec)).unwrap();
+        assert_eq!(a.adaptation.len(), 1);
+        let s = &a.adaptation[0];
+        // Detection latency (5 ms = 5000 µs) predates the first hold.
+        assert_eq!(s.start_us, 0, "3000 - 5000 saturates at 0");
+        assert_eq!(s.end_us, 3000);
+        assert_eq!(s.blocked_holds, 1);
+        assert_eq!(a.open_episodes, 0);
+    }
+
+    #[test]
+    fn clean_hold_abandons_a_pending_episode() {
+        let rec = FlightRecorder::new();
+        rec.emit(TraceEvent::Hold {
+            scope: "d0".to_string(),
+            trigger: "load".to_string(),
+            reason: "below_hysteresis".to_string(),
+        });
+        rec.set_now_us(500);
+        rec.emit(TraceEvent::Hold {
+            scope: "d0".to_string(),
+            trigger: "none".to_string(),
+            reason: "no_trigger".to_string(),
+        });
+        let a = Analysis::from_jsonl(&jsonl(&rec)).unwrap();
+        assert_eq!(a.adaptation.len(), 0);
+        assert_eq!(a.abandoned_episodes, 1);
+        assert_eq!(a.open_episodes, 0);
+    }
+
+    #[test]
+    fn serving_spans_split_queue_wait_and_service() {
+        let rec = FlightRecorder::new();
+        let scope = "pipe".to_string();
+        rec.emit_at(100, TraceEvent::Enqueue {
+            scope: scope.clone(),
+            class: "cam".to_string(),
+            depth: 1,
+        });
+        rec.emit_at(200, TraceEvent::Enqueue {
+            scope: scope.clone(),
+            class: "cam".to_string(),
+            depth: 2,
+        });
+        rec.emit_at(300, TraceEvent::BatchLaunch {
+            scope: scope.clone(),
+            reason: "full".to_string(),
+            size: 2,
+            padded: 0,
+        });
+        rec.emit_at(900, TraceEvent::BatchComplete {
+            scope: scope.clone(),
+            size: 2,
+            slack_us: 50,
+        });
+        let a = Analysis::from_jsonl(&jsonl(&rec)).unwrap();
+        assert_eq!(a.requests.len(), 2);
+        assert_eq!(a.batches.len(), 1);
+        assert_eq!(a.unclosed_requests, 0);
+        assert_eq!(a.unclosed_batches, 0);
+        assert_eq!(a.requests[0].launch_us - a.requests[0].enqueue_us, 200);
+        assert_eq!(a.requests[0].complete_us - a.requests[0].launch_us, 600);
+        // Summary means: waits (200, 100) → 150; service 600.
+        let v = a.summary();
+        let serving = v.get("serving").unwrap();
+        assert_eq!(
+            serving.get("mean_queue_wait_us").unwrap().as_f64().unwrap(),
+            150.0
+        );
+        assert_eq!(
+            serving.get("mean_service_us").unwrap().as_f64().unwrap(),
+            600.0
+        );
+    }
+
+    #[test]
+    fn unclosed_serving_work_is_counted() {
+        let rec = FlightRecorder::new();
+        rec.emit_at(1, TraceEvent::Enqueue {
+            scope: "p".to_string(),
+            class: "c".to_string(),
+            depth: 1,
+        });
+        rec.emit_at(2, TraceEvent::Enqueue {
+            scope: "p".to_string(),
+            class: "c".to_string(),
+            depth: 2,
+        });
+        rec.emit_at(3, TraceEvent::BatchLaunch {
+            scope: "p".to_string(),
+            reason: "max_wait".to_string(),
+            size: 1,
+            padded: 0,
+        });
+        let a = Analysis::from_jsonl(&jsonl(&rec)).unwrap();
+        assert_eq!(a.requests.len(), 0);
+        assert_eq!(a.unclosed_requests, 2, "1 queued + 1 in-flight");
+        assert_eq!(a.unclosed_batches, 1);
+    }
+
+    #[test]
+    fn rollback_links_to_its_canary_claim() {
+        let rec = FlightRecorder::new();
+        let stage = |stage: &str, t: u64| {
+            rec.emit_at(t, TraceEvent::Rollout {
+                revision: 3,
+                stage: stage.to_string(),
+                cohorts: 4,
+                detail: String::new(),
+            });
+        };
+        stage("canary", 100);
+        stage("held", 200);
+        stage("rolled_back", 300);
+        let a = Analysis::from_jsonl(&jsonl(&rec)).unwrap();
+        assert_eq!(a.rollouts.len(), 1);
+        assert!(a.rollouts[0].has_canary);
+        assert_eq!(a.rollouts[0].terminal, "rolled_back");
+        assert_eq!(a.rollout_holds, 1);
+        let v = a.summary();
+        assert!(v
+            .get("rollouts")
+            .unwrap()
+            .get("all_rollbacks_linked")
+            .unwrap()
+            .as_bool()
+            .unwrap());
+    }
+
+    #[test]
+    fn causality_chains_claim_same_instant_deltas() {
+        let rec = FlightRecorder::new();
+        rec.set_now_us(5000);
+        for c in ["c-a", "c-b"] {
+            rec.emit(TraceEvent::FrontierDelta {
+                scope: c.to_string(),
+                updated: 1,
+                points_touched: 10,
+                rebuild_points: 40,
+            });
+        }
+        rec.emit(TraceEvent::Correction {
+            engine: "gpu".to_string(),
+            factor: 1.1,
+            updated: 2,
+            points_touched: 20,
+        });
+        // A later orphan delta no cause ever claims.
+        rec.set_now_us(6000);
+        rec.emit(TraceEvent::FrontierDelta {
+            scope: "c-z".to_string(),
+            updated: 1,
+            points_touched: 1,
+            rebuild_points: 2,
+        });
+        let a = Analysis::from_jsonl(&jsonl(&rec)).unwrap();
+        assert_eq!(a.chains.len(), 1);
+        assert_eq!(a.chains[0].cohorts, vec!["c-a", "c-b"]);
+        assert_eq!(a.orphan_deltas, 1);
+    }
+
+    #[test]
+    fn tail_sampling_never_drops_anomalies_in_summary() {
+        let rec = FlightRecorder::new();
+        // A steady stream on many keys plus a few anomalies.
+        for i in 0..200u64 {
+            rec.set_now_us(i * 10);
+            rec.emit(TraceEvent::FrontierHit {
+                scope: format!("c{:03}", i % 40),
+                bucket: "b".to_string(),
+                points: 5,
+            });
+        }
+        rec.set_now_us(3000);
+        rec.emit(TraceEvent::Shed {
+            scope: "p".to_string(),
+            class: "cam".to_string(),
+            depth: 7,
+        });
+        let a = Analysis::from_jsonl(&jsonl(&rec)).unwrap();
+        let (_, tail_anom) =
+            a.simulate_sampling(SamplingPolicy::Tail {
+                rate: SUMMARY_SAMPLE_RATE,
+                seed: SUMMARY_SAMPLE_SEED,
+            });
+        assert_eq!(tail_anom, 1, "the shed always survives");
+        let v = a.summary();
+        let smp = v.get("sampling").unwrap();
+        assert_eq!(
+            smp.get("anomalous_retained_pct").unwrap().as_f64().unwrap(),
+            100.0
+        );
+    }
+
+    #[test]
+    fn head_sampled_subset_reconstructs_identical_spans_for_kept_keys() {
+        use crate::telemetry::sampling::head_keeps;
+        let rec = FlightRecorder::new();
+        for d in 0..32u64 {
+            let scope = format!("d{d:04}");
+            rec.set_now_us(d * 100);
+            rec.emit(TraceEvent::Hold {
+                scope: scope.clone(),
+                trigger: "load".to_string(),
+                reason: "cooldown".to_string(),
+            });
+            rec.set_now_us(d * 100 + 50);
+            rec.emit(TraceEvent::Switch {
+                scope,
+                from: "a".to_string(),
+                to: "b".to_string(),
+                reason: "load".to_string(),
+                detection_ms: 0.0,
+            });
+        }
+        let full = Analysis::from_jsonl(&jsonl(&rec)).unwrap();
+        for seed in [1u64, 7, 23] {
+            let filtered: String = jsonl(&rec)
+                .lines()
+                .filter(|l| {
+                    let e = RawEvent::parse_line(l).unwrap();
+                    head_keeps(4, seed, &e.sample_key())
+                })
+                .map(|l| format!("{l}\n"))
+                .collect();
+            let sampled = Analysis::from_jsonl(&filtered).unwrap();
+            for s in &sampled.adaptation {
+                let orig = full
+                    .adaptation
+                    .iter()
+                    .find(|o| o.scope == s.scope)
+                    .expect("kept scope exists in full analysis");
+                assert_eq!(s.start_us, orig.start_us);
+                assert_eq!(s.end_us, orig.end_us);
+                assert_eq!(s.blocked_holds, orig.blocked_holds);
+            }
+            // Every kept key's span is present.
+            let kept = full
+                .adaptation
+                .iter()
+                .filter(|s| head_keeps(4, seed, &s.scope))
+                .count();
+            assert_eq!(sampled.adaptation.len(), kept);
+        }
+    }
+
+    #[test]
+    fn chrome_spans_pair_b_and_e() {
+        let rec = FlightRecorder::new();
+        rec.emit(TraceEvent::Switch {
+            scope: "d0".to_string(),
+            from: "a".to_string(),
+            to: "b".to_string(),
+            reason: "load".to_string(),
+            detection_ms: 0.0,
+        });
+        let chrome = rec.to_chrome_trace();
+        assert!(chrome.contains("\"ph\":\"b\""));
+        assert!(chrome.contains("\"ph\":\"e\""));
+        assert!(chrome.contains("\"name\":\"adapt:d0\""));
+    }
+}

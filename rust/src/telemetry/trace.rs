@@ -37,6 +37,8 @@ use std::sync::Mutex;
 
 use crate::util::json::{self, Value};
 
+use super::sampling::{SampleOutcome, Sampler, SamplingPolicy};
+
 /// Default ring capacity — comfortably above the ~5 k events a smoke
 /// bench emits, small enough (a few MB) to embed per device.
 pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
@@ -281,6 +283,26 @@ pub enum TraceEvent {
         /// Slice grants issued in the window.
         grants: u64,
     },
+    /// SLO burn-rate alert: a scope's fast *and* slow error-budget burn
+    /// both exceeded 1× over its histogram rollups
+    /// ([`crate::telemetry::SloBurnMonitor`]).
+    SloBurn {
+        /// Burning entity (cohort id, device id, or pipeline scope).
+        scope: String,
+        /// Telemetry metric the monitor watched.
+        metric: String,
+        /// Fast (since-last-check) window length in virtual µs.
+        window_us: u64,
+        /// Fast-window burn rate: miss-rate ÷ error budget (rounded to
+        /// 3 decimals; > 1 = burning).
+        fast_burn: f64,
+        /// Slow (cumulative) window burn rate (rounded to 3 decimals).
+        slow_burn: f64,
+        /// SLO misses inside the fast window.
+        misses: u64,
+        /// Samples inside the fast window.
+        samples: u64,
+    },
 }
 
 impl TraceEvent {
@@ -307,6 +329,7 @@ impl TraceEvent {
             TraceEvent::Partition { .. } => "partition",
             TraceEvent::Admission { .. } => "admission",
             TraceEvent::Arbitration { .. } => "arbitration",
+            TraceEvent::SloBurn { .. } => "slo_burn",
         }
     }
 
@@ -330,7 +353,8 @@ impl TraceEvent {
             | TraceEvent::Correction { .. }
             | TraceEvent::Rollout { .. }
             | TraceEvent::Residual { .. }
-            | TraceEvent::ReAnchor { .. } => "fleet",
+            | TraceEvent::ReAnchor { .. }
+            | TraceEvent::SloBurn { .. } => "fleet",
             TraceEvent::Admission { .. } | TraceEvent::Arbitration { .. } => {
                 "scheduler"
             }
@@ -492,6 +516,70 @@ impl TraceEvent {
                 ("window_ms", json::num(*window_ms)),
                 ("grants", json::num(*grants as f64)),
             ],
+            TraceEvent::SloBurn {
+                scope,
+                metric,
+                window_us,
+                fast_burn,
+                slow_burn,
+                misses,
+                samples,
+            } => vec![
+                ("scope", json::s(scope)),
+                ("metric", json::s(metric)),
+                ("window_us", json::num(*window_us as f64)),
+                ("fast_burn", json::num(*fast_burn)),
+                ("slow_burn", json::num(*slow_burn)),
+                ("misses", json::num(*misses as f64)),
+                ("samples", json::num(*samples as f64)),
+            ],
+        }
+    }
+
+    /// The event's *stream key* for sampling decisions
+    /// ([`crate::telemetry::sampling`]): the finest-grained entity whose
+    /// events form one causal stream — device/app scope for adaptation
+    /// and serving, cohort id for cohort-level fleet events,
+    /// `rev:<id>` for rollout lifecycles, `fleet` for fleet-wide
+    /// aggregates.  Keeping or dropping a whole key keeps or drops whole
+    /// spans, never fragments of one.
+    pub fn sample_key(&self) -> String {
+        match self {
+            TraceEvent::Hold { scope, .. }
+            | TraceEvent::Switch { scope, .. }
+            | TraceEvent::Explain { scope, .. }
+            | TraceEvent::FrontierBuild { scope, .. }
+            | TraceEvent::FrontierHit { scope, .. }
+            | TraceEvent::FrontierEvict { scope, .. }
+            | TraceEvent::FrontierDelta { scope, .. }
+            | TraceEvent::Enqueue { scope, .. }
+            | TraceEvent::Shed { scope, .. }
+            | TraceEvent::BatchLaunch { scope, .. }
+            | TraceEvent::BatchComplete { scope, .. }
+            | TraceEvent::Partition { scope, .. }
+            | TraceEvent::Admission { scope, .. }
+            | TraceEvent::Arbitration { scope, .. }
+            | TraceEvent::SloBurn { scope, .. } => scope.clone(),
+            TraceEvent::CohortTransfer { cohort, .. }
+            | TraceEvent::ProbeFallback { cohort, .. }
+            | TraceEvent::Residual { cohort, .. }
+            | TraceEvent::ReAnchor { cohort, .. } => cohort.clone(),
+            TraceEvent::Rollout { revision, .. } => format!("rev:{revision}"),
+            TraceEvent::Correction { .. } => "fleet".to_string(),
+        }
+    }
+
+    /// True for the anomaly classes tail sampling must always retain: a
+    /// shed request, an SLO burn alert, a rollout rollback, and a batch
+    /// that missed its deadline (negative slack).  Every class terminates
+    /// the span it belongs to, so flushing the key's buffered history at
+    /// the anomaly reconstructs the whole anomalous span.
+    pub fn is_anomalous(&self) -> bool {
+        match self {
+            TraceEvent::Shed { .. } | TraceEvent::SloBurn { .. } => true,
+            TraceEvent::Rollout { stage, .. } => stage == "rolled_back",
+            TraceEvent::BatchComplete { slack_us, .. } => *slack_us < 0,
+            _ => false,
         }
     }
 }
@@ -528,6 +616,8 @@ struct Ring {
     capacity: usize,
     seq: u64,
     dropped: u64,
+    emitted: u64,
+    sampler: Option<Sampler<(u64, TraceEvent)>>,
 }
 
 /// Bounded, thread-safe ring buffer of [`TraceRecord`]s with a
@@ -558,6 +648,8 @@ impl FlightRecorder {
                 capacity: capacity.max(1),
                 seq: 0,
                 dropped: 0,
+                emitted: 0,
+                sampler: None,
             }),
             now_us: AtomicU64::new(0),
         }
@@ -581,15 +673,85 @@ impl FlightRecorder {
 
     /// Record an event at an explicit virtual time (used by layers that
     /// carry their own clock, e.g. the serving pipeline's event loop).
+    ///
+    /// With a sampling policy installed ([`Self::set_sampling`]) the
+    /// event is first routed through the policy: sequence numbers are
+    /// assigned **only to retained events**, so `seq` stays contiguous
+    /// per retention class (0, 1, 2, … over the retained stream) while
+    /// [`Self::sampled_out`] / [`Self::pending`] account for the rest —
+    /// `emitted == seq_assigned + sampled_out + pending` always holds,
+    /// and ring-overflow drops ([`Self::dropped`]) stay a separate
+    /// counter.  A tail-sampling flush re-stamps the flushed history
+    /// with its original timestamps under freshly assigned sequence
+    /// numbers, so `t_us` may step backwards across a flush boundary
+    /// (`seq` never does).
     pub fn emit_at(&self, t_us: u64, event: TraceEvent) {
         let mut g = self.ring.lock().unwrap();
-        let seq = g.seq;
-        g.seq += 1;
-        if g.events.len() == g.capacity {
-            g.events.pop_front();
-            g.dropped += 1;
+        g.emitted += 1;
+        let retained = match g.sampler.as_mut() {
+            None => vec![(t_us, event)],
+            Some(s) => {
+                let key = event.sample_key();
+                let anomalous = event.is_anomalous();
+                match s.observe(&key, anomalous, (t_us, event)) {
+                    SampleOutcome::Retain(v) => v,
+                    SampleOutcome::Dropped | SampleOutcome::Buffered => {
+                        Vec::new()
+                    }
+                }
+            }
+        };
+        for (at, ev) in retained {
+            let seq = g.seq;
+            g.seq += 1;
+            if g.events.len() == g.capacity {
+                g.events.pop_front();
+                g.dropped += 1;
+            }
+            g.events.push_back(TraceRecord { seq, t_us: at, event: ev });
         }
-        g.events.push_back(TraceRecord { seq, t_us, event });
+    }
+
+    /// Install a sampling policy from a clean sampler state (replacing
+    /// any previous policy; previously pending events are discarded
+    /// without accounting — install before emitting).  Retention starts
+    /// with the next emit; already-retained records stay.
+    pub fn set_sampling(&self, policy: SamplingPolicy) {
+        self.ring.lock().unwrap().sampler = Some(Sampler::new(policy));
+    }
+
+    /// Events rejected by the sampling policy (never 'dropped': ring
+    /// overflow is counted separately by [`Self::dropped`]).  0 without
+    /// a policy.
+    pub fn sampled_out(&self) -> u64 {
+        self.ring
+            .lock()
+            .unwrap()
+            .sampler
+            .as_ref()
+            .map_or(0, |s| s.rejected())
+    }
+
+    /// Events parked in the tail sampler's bounded pending buffers.
+    pub fn pending(&self) -> usize {
+        self.ring
+            .lock()
+            .unwrap()
+            .sampler
+            .as_ref()
+            .map_or(0, |s| s.pending())
+    }
+
+    /// Discard the tail sampler's pending buffers, folding them into
+    /// [`Self::sampled_out`]; returns how many events were discarded.
+    /// Call at end of stream to close the accounting identity.
+    pub fn drain_pending(&self) -> u64 {
+        self.ring
+            .lock()
+            .unwrap()
+            .sampler
+            .as_mut()
+            .map_or(0, |s| s.drain())
     }
 
     /// Events currently held (≤ capacity).
@@ -612,8 +774,16 @@ impl FlightRecorder {
         self.ring.lock().unwrap().dropped
     }
 
-    /// Total events ever emitted (retained + dropped).
+    /// Total events ever emitted, before any sampling decision
+    /// (`emitted == seq_assigned + sampled_out + pending`; without a
+    /// policy this equals the sequence counter).
     pub fn emitted(&self) -> u64 {
+        self.ring.lock().unwrap().emitted
+    }
+
+    /// Sequence numbers assigned so far (== retained events; the next
+    /// retained event gets this value).
+    pub fn seq_assigned(&self) -> u64 {
         self.ring.lock().unwrap().seq
     }
 
@@ -639,10 +809,16 @@ impl FlightRecorder {
     }
 
     /// Chrome trace-event export (Perfetto-loadable): every record as an
-    /// instant event with its payload under `args`.
+    /// instant event with its payload under `args`, followed by the
+    /// reconstructed spans ([`crate::telemetry::spans`]) as async
+    /// `b`/`e` pairs — Perfetto shows adaptation episodes, serving
+    /// batches, rollout lifecycles and burn episodes as bars, not just
+    /// ticks — and, when a sampling policy is installed, one
+    /// `sampling_policy` metadata instant carrying the retention
+    /// counters.
     pub fn to_chrome_trace(&self) -> String {
-        let events: Vec<Value> = self
-            .records()
+        let records = self.records();
+        let mut events: Vec<Value> = records
             .iter()
             .map(|r| {
                 let args: Vec<(String, Value)> = r
@@ -667,6 +843,31 @@ impl FlightRecorder {
                 ])
             })
             .collect();
+        events.extend(super::spans::chrome_span_events(&records));
+        {
+            let g = self.ring.lock().unwrap();
+            if let Some(s) = &g.sampler {
+                let ts = records.last().map_or(0, |r| r.t_us);
+                events.push(json::obj(vec![
+                    ("name", json::s("sampling_policy")),
+                    ("cat", json::s("sampling")),
+                    ("ph", json::s("i")),
+                    ("ts", json::num(ts as f64)),
+                    ("pid", json::num(1.0)),
+                    ("tid", json::num(1.0)),
+                    ("s", json::s("g")),
+                    (
+                        "args",
+                        json::obj(vec![
+                            ("policy", json::s(s.policy().name())),
+                            ("retained", json::num(g.seq as f64)),
+                            ("sampled_out", json::num(s.rejected() as f64)),
+                            ("pending", json::num(s.pending() as f64)),
+                        ]),
+                    ),
+                ]));
+            }
+        }
         json::to_string(&json::obj(vec![(
             "traceEvents",
             Value::Arr(events),
@@ -732,6 +933,73 @@ mod tests {
         assert!(chrome.starts_with("{\"traceEvents\":["));
         assert!(chrome.contains("\"ph\":\"i\""));
         assert!(chrome.contains("\"cat\":\"adaptation\""));
+    }
+
+    #[test]
+    fn sampling_keeps_seq_contiguous_per_retention_class() {
+        let rec = FlightRecorder::new();
+        rec.set_sampling(SamplingPolicy::Head { rate: 4, seed: 7 });
+        for i in 0..64u64 {
+            rec.set_now_us(i * 10);
+            rec.emit(hold(&format!("d{i:04}")));
+        }
+        let rs = rec.records();
+        assert!(!rs.is_empty());
+        for (i, r) in rs.iter().enumerate() {
+            assert_eq!(r.seq, i as u64, "retained seqs are 0,1,2,…");
+        }
+        assert!(rec.sampled_out() > 0);
+        assert_eq!(rec.dropped(), 0, "policy rejections are not ring drops");
+        assert_eq!(rec.emitted(), 64);
+        assert_eq!(
+            rec.emitted(),
+            rec.seq_assigned() + rec.sampled_out() + rec.pending() as u64
+        );
+    }
+
+    #[test]
+    fn overflow_drops_and_sampled_out_are_distinct_counters() {
+        let rec = FlightRecorder::with_capacity(4);
+        rec.set_sampling(SamplingPolicy::KeepAll);
+        for _ in 0..10 {
+            rec.emit(hold("d"));
+        }
+        assert_eq!(rec.dropped(), 6, "ring overflow");
+        assert_eq!(rec.sampled_out(), 0, "no policy rejections");
+        assert_eq!(rec.emitted(), 10);
+        assert_eq!(rec.records()[0].seq, 6);
+    }
+
+    #[test]
+    fn tail_sampling_flushes_anomalous_history() {
+        let rec = FlightRecorder::new();
+        // Rate high enough that nothing head-passes.
+        rec.set_sampling(SamplingPolicy::Tail { rate: 1 << 30, seed: 1 });
+        for i in 0..3u64 {
+            rec.set_now_us(i * 100);
+            rec.emit(TraceEvent::Enqueue {
+                scope: "p".to_string(),
+                class: "cam".to_string(),
+                depth: i,
+            });
+        }
+        assert_eq!(rec.len(), 0);
+        assert_eq!(rec.pending(), 3);
+        rec.set_now_us(400);
+        rec.emit(TraceEvent::Shed {
+            scope: "p".to_string(),
+            class: "cam".to_string(),
+            depth: 9,
+        });
+        let rs = rec.records();
+        assert_eq!(rs.len(), 4, "flushed history + the anomaly");
+        assert_eq!(rs[0].t_us, 0, "history keeps original timestamps");
+        assert_eq!(rs[3].t_us, 400);
+        for (i, r) in rs.iter().enumerate() {
+            assert_eq!(r.seq, i as u64);
+        }
+        assert_eq!(rec.drain_pending(), 0);
+        assert_eq!(rec.emitted(), rec.seq_assigned() + rec.sampled_out());
     }
 
     #[test]

@@ -453,3 +453,105 @@ fn rollout_lifecycle_is_bit_deterministic_per_seed() {
     };
     assert_eq!(run(), run());
 }
+
+// ---------------------------------------------------------------------------
+// Property 8: the opt-in burn-rate gate rolls back on a treated cohort's
+// SLO burn alert, fed from the fleet's multi-window monitor — and stays
+// inert when disabled or when only control cohorts burn.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn burn_gate_rolls_back_on_treated_cohort_alerts() {
+    use oodin::telemetry::{BurnConfig, SloBurnMonitor};
+
+    for (burn_gate, expect_rollback) in [(Some(1.0), true), (None, false)] {
+        let mut fleet = build_fleet();
+        let n = fleet.cohorts.len();
+        let mut reg = RevisionRegistry::new(n);
+        let rev = reg.register(EngineKind::Cpu, 0.9);
+        let cfg = RolloutConfig {
+            max_fast_burn: burn_gate,
+            ..RolloutConfig::default()
+        };
+        let mut ro = Rollout::new(rev, cfg);
+        ro.begin_canary(&mut fleet, &mut reg).unwrap();
+
+        // The treated cohort blows its error budget: every post-canary
+        // sample misses the 5% SLO.  A control cohort burns too — it
+        // must never trip the gate.
+        let mut monitor = SloBurnMonitor::new(BurnConfig {
+            threshold: 5.0,
+            budget: 0.25,
+            min_samples: 4,
+        });
+        let treated = ro.treated().to_vec();
+        let control = (0..n).find(|ci| !treated.contains(ci)).unwrap();
+        for &ci in &treated {
+            for _ in 0..8 {
+                fleet.cohorts[ci].telemetry.record("regret_pct", 40.0);
+            }
+        }
+        for _ in 0..8 {
+            fleet.cohorts[control].telemetry.record("regret_pct", 40.0);
+        }
+        let alerts = fleet.check_burn(&mut monitor, "regret_pct", 1_000);
+        assert!(alerts.len() >= 2, "treated and control cohorts burn");
+        for (cohort_id, sample) in &alerts {
+            assert!(sample.burning);
+            ro.observe_burn(cohort_id, sample.fast_burn);
+        }
+
+        // Scalar reports are clean on both sides: only the burn gate
+        // can object.
+        ingest_round(&mut ro, &reg, n, 0, 1.0, 1.0);
+        match ro.evaluate(&mut fleet, &mut reg) {
+            RolloutOutcome::RolledBack { reason } => {
+                assert!(expect_rollback,
+                        "burn gate off yet rolled back: {reason}");
+                assert!(reason.starts_with("burn_rate:"), "{reason}");
+            }
+            RolloutOutcome::Advanced { .. } => {
+                assert!(!expect_rollback,
+                        "a burning treated cohort must trip the gate");
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn control_only_burns_never_trip_the_gate() {
+    use oodin::telemetry::{BurnConfig, SloBurnMonitor};
+
+    let mut fleet = build_fleet();
+    let n = fleet.cohorts.len();
+    let mut reg = RevisionRegistry::new(n);
+    let rev = reg.register(EngineKind::Cpu, 0.9);
+    let cfg = RolloutConfig {
+        max_fast_burn: Some(1.0),
+        ..RolloutConfig::default()
+    };
+    let mut ro = Rollout::new(rev, cfg);
+    ro.begin_canary(&mut fleet, &mut reg).unwrap();
+
+    let mut monitor = SloBurnMonitor::new(BurnConfig {
+        threshold: 5.0,
+        budget: 0.25,
+        min_samples: 4,
+    });
+    let treated = ro.treated().to_vec();
+    let control = (0..n).find(|ci| !treated.contains(ci)).unwrap();
+    for _ in 0..8 {
+        fleet.cohorts[control].telemetry.record("regret_pct", 40.0);
+    }
+    for (cohort_id, sample) in
+        &fleet.check_burn(&mut monitor, "regret_pct", 1_000)
+    {
+        ro.observe_burn(cohort_id, sample.fast_burn);
+    }
+    ingest_round(&mut ro, &reg, n, 0, 1.0, 1.0);
+    match ro.evaluate(&mut fleet, &mut reg) {
+        RolloutOutcome::Advanced { .. } => {}
+        other => panic!("control-only burn must not gate, got {other:?}"),
+    }
+}

@@ -1,0 +1,276 @@
+//! Property + golden tests for the trace-analytics layer
+//! (`telemetry::spans` + `telemetry::sampling`).
+//!
+//! - every `switch` event closes exactly one adaptation span, with the
+//!   episode's blocked holds and detection onset folded in;
+//! - head sampling at the recorder never changes the spans of the keys
+//!   it retains — the reconstruction is per-stream deterministic;
+//! - tail sampling never drops an SLO-miss or rollback event, at any
+//!   seed, while still rejecting the bulk of the healthy stream;
+//! - the summary over the pinned fleet-bench smoke trace matches the
+//!   byte-pinned `tests/golden/trace_summary.json`, generated
+//!   INDEPENDENTLY by `python/golden_fleetbench.py` (regenerate both
+//!   with UPDATE_GOLDEN=1 here, or by running the oracle).
+
+use std::sync::Arc;
+
+use oodin::telemetry::sampling::{head_keeps, SamplingPolicy};
+use oodin::telemetry::spans::{
+    Analysis, SUMMARY_SAMPLE_RATE, SUMMARY_SAMPLE_SEED,
+};
+use oodin::telemetry::trace::{FlightRecorder, TraceEvent};
+
+/// Field-by-field projection of an adaptation span, for equality checks.
+type SpanKey = (String, u64, u64, u64, u64, String, String, String);
+
+fn span_key(s: &oodin::telemetry::spans::AdaptationSpan) -> SpanKey {
+    (s.scope.clone(), s.start_us, s.end_us, s.detection_us,
+     s.blocked_holds, s.from.clone(), s.to.clone(), s.trigger.clone())
+}
+
+fn hold(scope: &str, trigger: &str, reason: &str) -> TraceEvent {
+    TraceEvent::Hold {
+        scope: scope.to_string(),
+        trigger: trigger.to_string(),
+        reason: reason.to_string(),
+    }
+}
+
+fn switch(scope: &str, detection_ms: f64) -> TraceEvent {
+    TraceEvent::Switch {
+        scope: scope.to_string(),
+        from: "a".to_string(),
+        to: "b".to_string(),
+        reason: "degradation".to_string(),
+        detection_ms,
+    }
+}
+
+#[test]
+fn every_switch_closes_exactly_one_span() {
+    let rec = FlightRecorder::new();
+    // dev-a: two blocked holds, then the switch closes the episode.
+    rec.emit_at(1_000, hold("dev-a", "load", "below_hysteresis"));
+    rec.emit_at(2_000, hold("dev-a", "load", "cooldown"));
+    rec.emit_at(3_000, switch("dev-a", 2.0));
+    // dev-b: a switch with no preceding episode — onset is the switch
+    // time minus its detection latency.
+    rec.emit_at(5_000, switch("dev-b", 0.5));
+    // dev-c: an episode abandoned by a clean no-trigger hold.
+    rec.emit_at(6_000, hold("dev-c", "degradation", "below_hysteresis"));
+    rec.emit_at(7_000, hold("dev-c", "none", "no_trigger"));
+    // dev-a again: an episode still pending at end of trace.
+    rec.emit_at(8_000, hold("dev-a", "load", "not_due"));
+
+    let a = Analysis::from_records(&rec.records());
+    // One span per switch, independently counted from the raw events.
+    let switch_events =
+        a.events.iter().filter(|e| e.ev == "switch").count() as u64;
+    assert_eq!(a.adaptation.len() as u64, switch_events);
+    assert_eq!(a.switches(), 2);
+    for scope in ["dev-a", "dev-b", "dev-c"] {
+        let ev = a.events.iter()
+            .filter(|e| {
+                e.ev == "switch"
+                    && e.body.get("scope")
+                        .and_then(|v| v.as_str().ok())
+                        == Some(scope)
+            })
+            .count();
+        let spans =
+            a.adaptation.iter().filter(|s| s.scope == scope).count();
+        assert_eq!(spans, ev, "scope {scope}");
+    }
+
+    // dev-a's span folds in both blocked holds and starts at the first.
+    let s0 = &a.adaptation[0];
+    assert_eq!(s0.scope, "dev-a");
+    assert_eq!((s0.start_us, s0.end_us), (1_000, 3_000));
+    assert_eq!(s0.detection_us, 2_000);
+    assert_eq!(s0.blocked_holds, 2);
+    // dev-b's span starts at the detection onset (500 µs before).
+    let s1 = &a.adaptation[1];
+    assert_eq!(s1.scope, "dev-b");
+    assert_eq!((s1.start_us, s1.end_us), (4_500, 5_000));
+    assert_eq!(s1.blocked_holds, 0);
+
+    assert_eq!(a.abandoned_episodes, 1);
+    assert_eq!(a.open_episodes, 1);
+}
+
+#[test]
+fn head_sampling_preserves_spans_of_retained_keys() {
+    let rec = FlightRecorder::new();
+    for i in 0..8u64 {
+        let scope = format!("s{i}");
+        rec.emit_at(i * 10_000 + 1_000,
+                    hold(&scope, "load", "below_hysteresis"));
+        rec.emit_at(i * 10_000 + 2_000, hold(&scope, "load", "cooldown"));
+        rec.emit_at(i * 10_000 + 3_000, switch(&scope, 1.5));
+    }
+    let full_text = rec.to_jsonl();
+    let full = Analysis::from_jsonl(&full_text).unwrap();
+    assert_eq!(full.adaptation.len(), 8);
+
+    let rate = 4u64;
+    let (mut any_kept, mut any_dropped) = (false, false);
+    for seed in 0..10u64 {
+        // Head sampling at the recorder drops whole key streams; replay
+        // that filter over the exported lines.
+        let sampled: String = full_text
+            .lines()
+            .filter(|line| {
+                let e = oodin::telemetry::spans::RawEvent::parse_line(line)
+                    .unwrap();
+                head_keeps(rate, seed, &e.sample_key())
+            })
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let sub = Analysis::from_jsonl(&sampled).unwrap();
+
+        let kept: Vec<SpanKey> = full
+            .adaptation
+            .iter()
+            .filter(|s| head_keeps(rate, seed, &s.scope))
+            .map(span_key)
+            .collect();
+        let got: Vec<SpanKey> = sub.adaptation.iter().map(span_key).collect();
+        assert_eq!(got, kept, "seed {seed}");
+        any_kept |= !kept.is_empty();
+        any_dropped |= kept.len() < full.adaptation.len();
+    }
+    // The property must have been exercised from both sides.
+    assert!(any_kept && any_dropped);
+}
+
+#[test]
+fn tail_sampling_never_drops_anomalies() {
+    let rec = FlightRecorder::new();
+    // Bulk healthy traffic across many scopes...
+    for i in 0..64u64 {
+        for j in 0..8u64 {
+            rec.emit_at(i * 1_000 + j, TraceEvent::Enqueue {
+                scope: format!("dev-{j}"),
+                class: "interactive".to_string(),
+                depth: i % 4,
+            });
+        }
+    }
+    // ...with every anomaly class sprinkled in: sheds, SLO burns, a
+    // rollback, and a deadline-missing batch completion.
+    rec.emit_at(5_500, TraceEvent::Shed {
+        scope: "dev-1".to_string(),
+        class: "interactive".to_string(),
+        depth: 9,
+    });
+    rec.emit_at(20_500, TraceEvent::SloBurn {
+        scope: "dev-3".to_string(),
+        metric: "deadline_miss".to_string(),
+        window_us: 10_000,
+        fast_burn: 2.5,
+        slow_burn: 1.25,
+        misses: 5,
+        samples: 10,
+    });
+    rec.emit_at(30_500, TraceEvent::Rollout {
+        revision: 7,
+        stage: "rolled_back".to_string(),
+        cohorts: 0,
+        detail: "regret_delta:9.000".to_string(),
+    });
+    rec.emit_at(40_500, TraceEvent::BatchComplete {
+        scope: "dev-5".to_string(),
+        size: 4,
+        slack_us: -250,
+    });
+
+    let a = Analysis::from_records(&rec.records());
+    let anom = a.events.iter().filter(|e| e.is_anomalous()).count() as u64;
+    assert_eq!(anom, 4);
+    let total = a.events.len() as u64;
+
+    for seed in 0..8u64 {
+        let (retained, retained_anom) =
+            a.simulate_sampling(SamplingPolicy::Tail { rate: 16, seed });
+        assert_eq!(retained_anom, anom,
+                   "tail sampling dropped an anomaly at seed {seed}");
+        assert!(retained < total,
+                "tail sampling must reject bulk traffic (seed {seed})");
+    }
+    // Head sampling alone has no such guarantee — the flush behaviour
+    // is what tail adds on top.
+    let (keep_all, keep_all_anom) =
+        a.simulate_sampling(SamplingPolicy::KeepAll);
+    assert_eq!((keep_all, keep_all_anom), (total, anom));
+}
+
+#[test]
+fn golden_trace_summary_json() {
+    let reg = oodin::model::test_fixtures::fake_registry();
+    let cfg = oodin::experiments::fleetbench::FleetBenchConfig::smoke();
+    let rec = Arc::new(FlightRecorder::new());
+    oodin::experiments::fleetbench::run_traced(&reg, &cfg, Some(&rec))
+        .unwrap();
+    let a = Analysis::from_records(&rec.records());
+    let got = a.summary_json() + "\n";
+    let path = concat!(env!("CARGO_MANIFEST_DIR"),
+                       "/tests/golden/trace_summary.json");
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(path, &got).unwrap();
+    }
+    let want = std::fs::read_to_string(path)
+        .expect("golden summary missing — run with UPDATE_GOLDEN=1 or \
+                 python3 python/golden_fleetbench.py");
+    assert_eq!(got, want,
+               "trace summary drifted from the golden snapshot \
+                (UPDATE_GOLDEN=1 to accept, then re-run the Python oracle \
+                to confirm both implementations still agree)");
+}
+
+#[test]
+fn golden_trace_meets_acceptance_criteria() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"),
+                       "/tests/golden/fleetbench_smoke_trace.jsonl");
+    let text = std::fs::read_to_string(path).unwrap();
+    let a = Analysis::from_jsonl(&text).unwrap();
+
+    // Adaptation-span count equals the switch count, counted
+    // independently from the raw event stream.
+    let switch_events =
+        a.events.iter().filter(|e| e.ev == "switch").count() as u64;
+    assert!(switch_events > 0);
+    assert_eq!(a.adaptation.len() as u64, switch_events);
+
+    // Zero unclosed serving spans and a gap-free sequence.
+    assert_eq!(a.unclosed_requests, 0);
+    assert_eq!(a.unclosed_batches, 0);
+    assert_eq!(a.stray_completes, 0);
+    assert_eq!(a.seq_gaps, 0);
+
+    // Every rollback is causally reachable from its canary claim.
+    let rollbacks: Vec<_> = a.rollouts.iter()
+        .filter(|r| r.terminal == "rolled_back")
+        .collect();
+    assert!(!rollbacks.is_empty());
+    assert!(rollbacks.iter().all(|r| r.has_canary));
+    // The smoke storm's fleet causes all fan out cleanly.
+    assert!(!a.chains.is_empty());
+    assert_eq!(a.orphan_deltas, 0);
+
+    // The storm burns: the monitor fired and grouped into episodes.
+    assert!(!a.burn.is_empty());
+
+    // Tail sampling at the summary's pinned 1/16 head rate keeps every
+    // anomaly while cutting retained events at least 4× on the storm.
+    let anom = a.events.iter().filter(|e| e.is_anomalous()).count() as u64;
+    assert!(anom > 0);
+    let (retained, retained_anom) =
+        a.simulate_sampling(SamplingPolicy::Tail {
+            rate: SUMMARY_SAMPLE_RATE,
+            seed: SUMMARY_SAMPLE_SEED,
+        });
+    assert_eq!(retained_anom, anom);
+    assert!(retained > 0);
+    let reduction = a.events.len() as f64 / retained as f64;
+    assert!(reduction >= 4.0, "tail reduction {reduction:.3}x < 4x");
+}
